@@ -1,0 +1,46 @@
+//! Quickstart: load artifacts, generate with EAGLE, compare to vanilla.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use eagle_serve::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let man = Manifest::load(&artifacts_dir())?;
+    let bpe = Bpe::load(man.path(&man.tokenizer).to_str().unwrap())?;
+    let bundle = ModelBundle::load(&rt, &man, "toy-s", &["eagle"], false, false)?;
+
+    let prompt = "tom has 12 apples. tom buys 5 more and gives away 3. how many apples remain?";
+    let ids = bpe.encode_prompt(prompt);
+    let cfg = GenConfig { max_new: 48, temperature: 0.0, seed: 7, eos: Some(bpe.eos()) };
+
+    // vanilla auto-regressive decoding: one target pass per token
+    let vanilla = VanillaEngine::new(&bundle.target).generate(&ids, &cfg)?;
+
+    // EAGLE: feature-level tree drafting + one verification pass per ~4 tokens
+    let draft = &bundle.drafts["eagle"];
+    let eagle = EagleEngine::new_tree(&bundle.target, draft, &man.constants).generate(&ids, &cfg)?;
+
+    println!("prompt  : {prompt}");
+    println!("output  : {}", bpe.decode(&eagle.tokens).trim());
+    println!();
+    println!(
+        "vanilla : {:6.1} ms  {:5.1} tok/s  {} target passes",
+        vanilla.wall_ns as f64 / 1e6,
+        vanilla.tokens_per_sec(),
+        vanilla.target_passes
+    );
+    println!(
+        "eagle   : {:6.1} ms  {:5.1} tok/s  {} target passes  tau {:.2}",
+        eagle.wall_ns as f64 / 1e6,
+        eagle.tokens_per_sec(),
+        eagle.target_passes,
+        eagle.tau()
+    );
+    println!(
+        "speedup : {:.2}x   lossless: {}",
+        eagle.tokens_per_sec() / vanilla.tokens_per_sec(),
+        if vanilla.tokens == eagle.tokens { "yes (greedy outputs identical)" } else { "NO — BUG" }
+    );
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! End-to-end serving driver (the EXPERIMENTS.md validation run): starts
+//! the HTTP server on a background thread, fires a batch of concurrent
+//! client requests over real sockets, and reports latency percentiles +
+//! throughput per method. Proves all layers compose: HTTP -> queue ->
+//! scheduler -> EAGLE engine -> PJRT executables (L2 graphs + L1 kernel).
+//!
+//!   cargo run --release --example serving_demo
+
+use eagle_serve::server::http::{get, post_json};
+use eagle_serve::util::json::Json;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let addr = "127.0.0.1:8191";
+    std::thread::spawn(move || {
+        eagle_serve::server::serve(addr, "toy-s", &eagle_serve::models::artifacts_dir(), 64)
+            .expect("server failed");
+    });
+    // wait for readiness
+    for _ in 0..600 {
+        if get(addr, "/healthz").map(|(c, _)| c == 200).unwrap_or(false) {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    println!("server ready at {addr}");
+    // warmup: the inference worker compiles executables lazily at startup;
+    // don't charge that to the first timed batch
+    let _ = post_json(
+        addr,
+        "/v1/generate",
+        r#"{"prompt":"warmup","max_tokens":4,"method":"vanilla"}"#,
+    )?;
+
+    let prompts = [
+        "write two sentences about the quiet river.",
+        "tom has 9 apples. tom buys 3 more and gives away 2. how many apples remain?",
+        "write a function f3 that maps x to x + 2 and apply it to range 4.",
+        "state the density of iron.",
+        "record: name anna; age 31; city harbor. extract the age of anna.",
+        "what did the poet write in 1850?",
+    ];
+
+    for method in ["vanilla", "eagle"] {
+        let t0 = Instant::now();
+        let mut lat = Vec::new();
+        let mut toks = 0usize;
+        let handles: Vec<_> = prompts
+            .iter()
+            .map(|p| {
+                let body = Json::obj(vec![
+                    ("prompt", Json::Str(p.to_string())),
+                    ("max_tokens", Json::Num(32.0)),
+                    ("method", Json::Str(method.to_string())),
+                ])
+                .to_string();
+                std::thread::spawn(move || post_json(addr, "/v1/generate", &body))
+            })
+            .collect();
+        for h in handles {
+            let (code, body) = h.join().unwrap()?;
+            anyhow::ensure!(code == 200, "request failed: {code} {body}");
+            let v = Json::parse(&body)?;
+            lat.push(v.req("latency_ms")?.as_f64().unwrap_or(0.0));
+            toks += v.req("tokens")?.as_usize().unwrap_or(0);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        println!(
+            "{method:8} {} reqs  {toks:4} tokens  wall {wall:5.2}s  throughput {:6.1} tok/s  p50 {:6.1} ms  p99 {:6.1} ms",
+            prompts.len(),
+            toks as f64 / wall,
+            lat[lat.len() / 2],
+            lat[lat.len() - 1],
+        );
+    }
+    let (_, metrics) = get(addr, "/metrics")?;
+    println!("\n/metrics:\n{metrics}");
+    Ok(())
+}

@@ -1,0 +1,513 @@
+"""AOT pipeline (S8): train (cached) → lower → artifacts/.
+
+Produces, under `artifacts/`:
+    vocab.json                    tokenizer merge table
+    workloads/{mtbench,gsm8k}.json  held-out eval prompts
+    weights/<model|head>.stensor  parameter containers (device-uploaded once)
+    hlo/<name>.hlo.txt            HLO text per executable (see DESIGN.md §3)
+    manifest.json                 configs + executable catalog (the L3 ABI)
+    train_log.json                losses / draft accuracies for EXPERIMENTS.md
+    ckpt/                         training checkpoints (cache; delete to retrain)
+
+HLO **text** is the interchange format — jax ≥ 0.5 serialized protos use
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Calling convention (positional, mirrored by rust/src/models/):
+    target exe:  [param leaves (flatten_params order)] + call inputs
+    draft  exe:  [draft leaves] + [tok_emb, lm_head] + call inputs
+Verify/draft-step attention *bias* is an input — the rust coordinator owns
+tree topology (S11) and builds the additive mask host-side.
+
+Python runs ONCE; the rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from dataclasses import asdict, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data
+from . import draft as D
+from . import model as M
+from . import quant as Q
+from . import tokenizer as T
+from . import train
+from .tensorfile import flatten_params, read_stensor, unflatten_like, write_stensor
+
+SEED = 1234
+N_DIALOGUES = 1600
+N_MERGES = 500
+PREFILL_P = 64
+TREE_T = 32  # tree-verify width
+CHAIN_T = 8  # chain-verify width (classic spec / alpha measurements)
+ACCEPT_A = 8  # max tokens committed per verification
+DRAFT_W = 8  # tree draft level width
+FAST = os.environ.get("EAGLE_FAST", "") == "1"
+
+STEPS_TARGET = {"toy-s": 40, "toy-m": 30, "toy-moe": 30} if FAST else {
+    "toy-s": 300,
+    "toy-m": 160,
+    "toy-moe": 160,
+}
+STEPS_DRAFT = 30 if FAST else 260
+STEPS_MEDUSA = 30 if FAST else 200
+STEPS_TDLM = 40 if FAST else 200
+
+
+def to_hlo_text(lowered) -> str:
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(lowered.compiler_ir("stablehlo")), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path: str) -> None:
+    # keep_unused: single-input draft variants (feat/tok) ignore some args;
+    # the rust caller feeds the full positional convention regardless.
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+
+# --------------------------------------------------------------------------
+# executable builders — each returns (fn, example_args); all shapes static
+# --------------------------------------------------------------------------
+
+
+def _param_specs(params):
+    return [jax.ShapeDtypeStruct(a.shape, a.dtype) for _, a in flatten_params(params)]
+
+
+class TargetLowering:
+    """Lowers the target-model executable family for one config."""
+
+    def __init__(self, cfg: M.ModelConfig, params):
+        self.cfg = cfg
+        self.params = params
+        self.flat = flatten_params(params)
+        self.names = [n for n, _ in self.flat]
+        self.specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for _, a in self.flat]
+
+    def _unflatten(self, leaves):
+        return unflatten_like(self.params, list(zip(self.names, leaves)))
+
+    def prefill(self, p: int, b: int = 1):
+        cfg = self.cfg
+        np_ = len(self.specs)
+
+        def fn(*args):
+            params = self._unflatten(args[:np_])
+            tokens, length = args[np_], args[np_ + 1]
+            cache = M.init_cache(cfg, b)
+            pos = jnp.broadcast_to(jnp.arange(p)[None, :], (b, p)).astype(jnp.int32)
+            bias = M.prefill_bias(cfg, p, length, b)
+            logits, feats, cache, _, _ = M.forward(params, cfg, tokens, pos, pos, bias, cache)
+            return logits, feats, cache
+
+        ex = self.specs + [
+            jax.ShapeDtypeStruct((b, p), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ]
+        return fn, ex
+
+    def prefill_slot(self, p: int, b: int):
+        """Prefill one sequence into slot `slot` of a batched cache."""
+        cfg = self.cfg
+        np_ = len(self.specs)
+
+        def fn(*args):
+            params = self._unflatten(args[:np_])
+            cache_b, slot, tokens, length = args[np_ : np_ + 4]
+            cache1 = M.init_cache(cfg, 1)
+            pos = jnp.arange(p)[None, :].astype(jnp.int32)
+            bias = M.prefill_bias(cfg, p, length, 1)
+            logits, feats, cache1, _, _ = M.forward(params, cfg, tokens, pos, pos, bias, cache1)
+            cache_b = jax.lax.dynamic_update_slice(
+                cache_b, cache1, (0, 0, slot, 0, 0, 0)
+            )
+            return logits, feats, cache_b
+
+        ex = self.specs + [
+            jax.ShapeDtypeStruct((2, cfg.n_layers, b, cfg.max_len, cfg.n_heads, cfg.head_dim), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((1, p), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ]
+        return fn, ex
+
+    def decode(self, b: int = 1):
+        cfg = self.cfg
+        np_ = len(self.specs)
+
+        def fn(*args):
+            params = self._unflatten(args[:np_])
+            cache, cache_len, token = args[np_ : np_ + 3]
+            pos = cache_len[:, None]
+            cols = jnp.arange(cfg.max_len)[None, None, :]
+            bias = jnp.where(cols <= cache_len[:, None, None], 0.0, M.NEG).astype(jnp.float32)
+            bias = jnp.broadcast_to(bias, (b, 1, cfg.max_len))
+            logits, feats, cache, _, _ = M.forward(params, cfg, token, pos, pos, bias, cache)
+            return logits, feats, cache
+
+        ex = self.specs + [
+            jax.ShapeDtypeStruct((2, cfg.n_layers, b, cfg.max_len, cfg.n_heads, cfg.head_dim), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ]
+        return fn, ex
+
+    def verify(self, t: int, a: int, b: int = 1):
+        """Fused commit+verify (§Perf iteration 1): first compact the
+        PREVIOUS round's accepted tree rows inside the cache
+        (`commit_from_cache` — no tree K/V roundtrip, no extra dispatch),
+        then run the new tree forward at the advanced boundary."""
+        cfg = self.cfg
+        np_ = len(self.specs)
+
+        def fn(*args):
+            params = self._unflatten(args[:np_])
+            cache, old_len, prev_idx, prev_n, tokens, pos, bias = args[np_ : np_ + 7]
+            cache = M.commit_from_cache(cfg, cache, old_len, prev_idx, prev_n)
+            new_len = old_len + prev_n
+            write_pos = new_len[:, None] + jnp.arange(t)[None, :]
+            logits, feats, cache, _, _ = M.forward(
+                params, cfg, tokens, pos, write_pos, bias, cache
+            )
+            return logits, feats, cache
+
+        ex = self.specs + [
+            jax.ShapeDtypeStruct((2, cfg.n_layers, b, cfg.max_len, cfg.n_heads, cfg.head_dim), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b, a), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b, t), jnp.int32),
+            jax.ShapeDtypeStruct((b, t), jnp.int32),
+            jax.ShapeDtypeStruct((b, t, cfg.max_len), jnp.float32),
+        ]
+        return fn, ex
+
+
+class DraftLowering:
+    """Lowers the EAGLE-head executable family for one (variant, target)."""
+
+    def __init__(self, dcfg: D.DraftConfig, cfg: M.ModelConfig, dparams):
+        self.dcfg = dcfg
+        self.cfg = cfg
+        self.dparams = dparams
+        self.flat = flatten_params(dparams)
+        self.names = [n for n, _ in self.flat]
+        self.specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for _, a in self.flat]
+        self.emb_spec = jax.ShapeDtypeStruct((cfg.vocab, cfg.d), jnp.float32)
+        self.head_spec = jax.ShapeDtypeStruct((cfg.d, cfg.vocab), jnp.float32)
+
+    def _unflatten(self, leaves):
+        return unflatten_like(self.dparams, list(zip(self.names, leaves)))
+
+    def prefill(self, p: int, b: int = 1):
+        """Run the head over the committed prefix (teacher features), build
+        its KV cache, and emit the first draft (f̂, logits) at the last
+        valid position."""
+        dcfg, cfg = self.dcfg, self.cfg
+        nd = len(self.specs)
+
+        def fn(*args):
+            dparams = self._unflatten(args[:nd])
+            tok_emb, lm_head, feats, tokens, length = args[nd : nd + 5]
+            cache = D.init_draft_cache(cfg, b)
+            pos = jnp.broadcast_to(jnp.arange(p)[None, :], (b, p)).astype(jnp.int32)
+            bias = M.prefill_bias(cfg, p, length, b)
+            f_hat, logits, cache = D.draft_forward(
+                dparams, dcfg, cfg, tok_emb, lm_head, feats, tokens, pos, pos, bias, cache
+            )
+            last = length - 1  # [b]
+            bidx = jnp.arange(b)
+            return f_hat[bidx, last], logits[bidx, last], cache
+
+        ex = self.specs + [
+            self.emb_spec,
+            self.head_spec,
+            jax.ShapeDtypeStruct((b, p, cfg.d), jnp.float32),
+            jax.ShapeDtypeStruct((b, p), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ]
+        return fn, ex
+
+    def step(self, w: int, b: int = 1):
+        """One draft-tree level: W frontier nodes with explicit bias/pos;
+        K/V rows land at slots [write_base, write_base + W)."""
+        dcfg, cfg = self.dcfg, self.cfg
+        nd = len(self.specs)
+
+        def fn(*args):
+            dparams = self._unflatten(args[:nd])
+            tok_emb, lm_head, cache, write_base, feats, tokens, pos, bias = args[nd : nd + 8]
+            write_pos = write_base[:, None] + jnp.arange(w)[None, :]
+            f_hat, logits, cache = D.draft_forward(
+                dparams, dcfg, cfg, tok_emb, lm_head, feats, tokens, pos, write_pos, bias, cache
+            )
+            return f_hat, logits, cache
+
+        ex = self.specs + [
+            self.emb_spec,
+            self.head_spec,
+            jax.ShapeDtypeStruct((2, b, cfg.max_len, cfg.n_heads, cfg.head_dim), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b, w, cfg.d), jnp.float32),
+            jax.ShapeDtypeStruct((b, w), jnp.int32),
+            jax.ShapeDtypeStruct((b, w), jnp.int32),
+            jax.ShapeDtypeStruct((b, w, cfg.max_len), jnp.float32),
+        ]
+        return fn, ex
+
+
+# --------------------------------------------------------------------------
+# checkpoint cache
+# --------------------------------------------------------------------------
+
+
+def _ckpt(path, trainer, template=None):
+    if os.path.exists(path):
+        flat = read_stensor(path)
+        if template is None:
+            return flat
+        return unflatten_like(template, flat)
+    res = trainer()
+    write_stensor(path, flatten_params(res))
+    return res
+
+
+# --------------------------------------------------------------------------
+# main build
+# --------------------------------------------------------------------------
+
+
+def build(out: str) -> None:
+    t_start = time.time()
+    os.makedirs(out, exist_ok=True)
+    for sub in ("hlo", "weights", "workloads", "ckpt"):
+        os.makedirs(os.path.join(out, sub), exist_ok=True)
+    log_entries = {}
+
+    # ---- corpus + tokenizer ------------------------------------------------
+    dialogues = data.gen_dialogues(N_DIALOGUES, SEED)
+    corpus = data.corpus_text(dialogues)
+    bpe = T.train_bpe(corpus, N_MERGES)
+    with open(os.path.join(out, "vocab.json"), "w") as f:
+        f.write(bpe.to_json())
+    data.write_workloads(os.path.join(out, "workloads"))
+    streams = [bpe.encode_dialogue(d["user"], d["asst"]) for d in dialogues]
+    chunks = train.pack_chunks(streams, train.SEQ_LEN)
+    print(f"[aot] corpus: {len(dialogues)} dialogues, {chunks.shape[0]} chunks, vocab {bpe.vocab_size}")
+
+    configs = {
+        "toy-s": replace(M.toy_s(), vocab=bpe.vocab_size),
+        "toy-m": replace(M.toy_m(), vocab=bpe.vocab_size),
+        "toy-moe": replace(M.toy_moe(), vocab=bpe.vocab_size),
+    }
+
+    manifest: dict = {
+        "version": 1,
+        "seed": SEED,
+        "tokenizer": "vocab.json",
+        "constants": {
+            "prefill_p": PREFILL_P,
+            "tree_t": TREE_T,
+            "chain_t": CHAIN_T,
+            "accept_a": ACCEPT_A,
+            "draft_w": DRAFT_W,
+        },
+        "workloads": {
+            "mtbench": "workloads/mtbench.json",
+            "gsm8k": "workloads/gsm8k.json",
+        },
+        "models": {},
+    }
+
+    for name, cfg in configs.items():
+        mdir = f"ckpt/{name}.s{STEPS_TARGET[name]}.stensor"
+        tpl = M.init_params(cfg, jax.random.PRNGKey(0))
+        params = _ckpt(
+            os.path.join(out, mdir),
+            lambda: train.train_target(cfg, chunks, STEPS_TARGET[name])[0],
+            tpl,
+        )
+        write_stensor(os.path.join(out, f"weights/{name}.stensor"), flatten_params(params))
+
+        tl = TargetLowering(cfg, params)
+        exes = {}
+        bs_list = [1] if name != "toy-s" else [1, 2, 3, 4]
+        for b in bs_list:
+            sfx = "" if b == 1 else f"_bs{b}"
+            jobs = {
+                f"decode{sfx}": tl.decode(b),
+                f"verify_t{TREE_T}{sfx}": tl.verify(TREE_T, ACCEPT_A, b),
+            }
+            if b == 1:
+                jobs["prefill"] = tl.prefill(PREFILL_P, 1)
+                jobs[f"verify_t{CHAIN_T}"] = tl.verify(CHAIN_T, ACCEPT_A, 1)
+            else:
+                jobs[f"prefill_slot{sfx}"] = tl.prefill_slot(PREFILL_P, b)
+            for ename, (fn, ex) in jobs.items():
+                path = f"hlo/{name}.{ename}.hlo.txt"
+                lower_to_file(fn, ex, os.path.join(out, path))
+                exes[ename] = {"hlo": path, "bs": b}
+                print(f"[aot] lowered {name}.{ename}")
+
+        entry = {
+            "config": {k: v for k, v in asdict(cfg).items()},
+            "weights": f"weights/{name}.stensor",
+            "param_names": tl.names,
+            "executables": exes,
+            "drafts": {},
+        }
+
+        # ---- draft heads ---------------------------------------------------
+        feats = None
+        variants = D.VARIANTS if name == "toy-s" else ("eagle",)
+        for variant in variants:
+            if feats is None:
+                print(f"[aot] extracting features for {name} ...")
+                feats = train.extract_features(params, cfg, chunks)
+            dkey = f"{name}.{variant}"
+            dcfg = D.DraftConfig(variant=variant, ffn=cfg.ffn)
+            dtpl = D.init_draft_params(dcfg, cfg, jax.random.PRNGKey(1))
+            dparams = _ckpt(
+                os.path.join(out, f"ckpt/{dkey}.s{STEPS_DRAFT}.stensor"),
+                lambda: train.train_draft_head(variant, params, cfg, chunks, feats, STEPS_DRAFT),
+                dtpl,
+            )
+            write_stensor(os.path.join(out, f"weights/{dkey}.stensor"), flatten_params(dparams))
+            acc = train.draft_top1_accuracy(dparams, variant, params, cfg, chunks, feats)
+            log_entries[f"draft_acc.{dkey}"] = acc
+            print(f"[aot] draft {dkey} top1-acc {acc:.3f}")
+
+            dl = DraftLowering(dcfg, cfg, dparams)
+            dexes = {}
+            dbs = [1] if not (name == "toy-s" and variant == "eagle") else [1, 2, 3, 4]
+            for b in dbs:
+                sfx = "" if b == 1 else f"_bs{b}"
+                djobs = {f"step_w{DRAFT_W}{sfx}": dl.step(DRAFT_W, b)}
+                if b == 1:
+                    djobs["prefill"] = dl.prefill(PREFILL_P, 1)
+                    djobs["step_w1"] = dl.step(1, 1)
+                    djobs["step_w4"] = dl.step(4, 1)
+                for ename, (fn, ex) in djobs.items():
+                    path = f"hlo/{dkey}.{ename}.hlo.txt"
+                    lower_to_file(fn, ex, os.path.join(out, path))
+                    dexes[ename] = {"hlo": path, "bs": b}
+                    print(f"[aot] lowered {dkey}.{ename}")
+            entry["drafts"][variant] = {
+                "weights": f"weights/{dkey}.stensor",
+                "param_names": dl.names,
+                "executables": dexes,
+                "accuracy": acc,
+            }
+
+        # ---- Table-6 ablation: head trained on target-generated data --------
+        if name == "toy-s":
+            gen_path = os.path.join(out, f"ckpt/toy-s.eagle_gen.s{STEPS_DRAFT}.stensor")
+            dcfg = D.DraftConfig(variant="eagle", ffn=cfg.ffn)
+            dtpl = D.init_draft_params(dcfg, cfg, jax.random.PRNGKey(1))
+
+            def train_gen():
+                print("[aot] generating training data with the target LLM (Table 6) ...")
+                prefixes = chunks[:160, :32]
+                gen = train.generate_greedy(params, cfg, prefixes, train.SEQ_LEN - 32)
+                gfeats = train.extract_features(params, cfg, gen)
+                return train.train_draft_head("eagle", params, cfg, gen, gfeats, STEPS_DRAFT, seed=77)
+
+            dparams_gen = _ckpt(gen_path, train_gen, dtpl)
+            write_stensor(
+                os.path.join(out, "weights/toy-s.eagle_gen.stensor"),
+                flatten_params(dparams_gen),
+            )
+            # same architecture -> reuses the eagle executables, weights differ
+            entry["drafts"]["eagle_gen"] = {
+                "weights": "weights/toy-s.eagle_gen.stensor",
+                "param_names": entry["drafts"]["eagle"]["param_names"],
+                "executables": entry["drafts"]["eagle"]["executables"],
+                "accuracy": train.draft_top1_accuracy(dparams_gen, "eagle", params, cfg, chunks, feats),
+            }
+
+        # ---- Medusa + token-draft-LM baselines (toy-s) -----------------------
+        if name == "toy-s":
+            mtpl = D.init_medusa_params(cfg, jax.random.PRNGKey(2))
+            mparams = _ckpt(
+                os.path.join(out, f"ckpt/toy-s.medusa.s{STEPS_MEDUSA}.stensor"),
+                lambda: train.train_medusa(params, cfg, chunks, feats, STEPS_MEDUSA),
+                mtpl,
+            )
+            write_stensor(os.path.join(out, "weights/toy-s.medusa.stensor"), flatten_params(mparams))
+            mflat = flatten_params(mparams)
+
+            def medusa_fn(*args):
+                mp = unflatten_like(mparams, list(zip([n for n, _ in mflat], args[:-1])))
+                return D.medusa_forward(mp, args[-1])
+
+            mex = [jax.ShapeDtypeStruct(a.shape, a.dtype) for _, a in mflat] + [
+                jax.ShapeDtypeStruct((1, cfg.d), jnp.float32)
+            ]
+            lower_to_file(medusa_fn, mex, os.path.join(out, "hlo/toy-s.medusa.hlo.txt"))
+            print("[aot] lowered toy-s.medusa")
+            entry["medusa"] = {
+                "weights": "weights/toy-s.medusa.stensor",
+                "param_names": [n for n, _ in mflat],
+                "executables": {"heads": {"hlo": "hlo/toy-s.medusa.hlo.txt", "bs": 1}},
+                "k": D.MEDUSA_K,
+            }
+
+            tcfg_tdlm = D.tdlm_config(cfg)
+            ttpl = M.init_params(tcfg_tdlm, jax.random.PRNGKey(3))
+            tdlm_params = _ckpt(
+                os.path.join(out, f"ckpt/toy-s.tdlm.s{STEPS_TDLM}.stensor"),
+                lambda: train.train_tdlm(cfg, chunks, STEPS_TDLM)[1],
+                ttpl,
+            )
+            write_stensor(os.path.join(out, "weights/toy-s.tdlm.stensor"), flatten_params(tdlm_params))
+            ttl = TargetLowering(tcfg_tdlm, tdlm_params)
+            texes = {}
+            for ename, (fn, ex) in {
+                "prefill": ttl.prefill(PREFILL_P, 1),
+                "decode": ttl.decode(1),
+            }.items():
+                path = f"hlo/toy-s.tdlm.{ename}.hlo.txt"
+                lower_to_file(fn, ex, os.path.join(out, path))
+                texes[ename] = {"hlo": path, "bs": 1}
+                print(f"[aot] lowered toy-s.tdlm.{ename}")
+            entry["tdlm"] = {
+                "config": asdict(tcfg_tdlm),
+                "weights": "weights/toy-s.tdlm.stensor",
+                "param_names": ttl.names,
+                "executables": texes,
+            }
+
+        manifest["models"][name] = entry
+
+    # ---- int8 quantized target (Table 4 analog) ------------------------------
+    Q.build_quant(out, manifest, configs["toy-s"])
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(out, "train_log.json"), "w") as f:
+        json.dump(log_entries, f, indent=1)
+    print(f"[aot] done in {time.time() - t_start:.1f}s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

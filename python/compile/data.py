@@ -1,0 +1,172 @@
+"""Synthetic multi-task dialogue corpus + evaluation workloads (S2).
+
+Stands in for ShareGPT (training) and MT-bench / GSM8K (evaluation) — see
+DESIGN.md §Substitutions. Eight MT-bench-like categories with *deliberately
+different regularity*: `coding` is highly templated (highest draft
+acceptance, mirroring Fig. 8), `writing`/`roleplay` are the most entropic.
+
+Everything is seeded and deterministic.
+"""
+
+from __future__ import annotations
+
+import json
+import random
+
+CATEGORIES = [
+    "writing",
+    "roleplay",
+    "reasoning",
+    "math",
+    "coding",
+    "extraction",
+    "stem",
+    "humanities",
+]
+
+_NAMES = ["tom", "anna", "ravi", "mei", "lucas", "sara", "ivan", "noor"]
+_ITEMS = ["apples", "books", "coins", "stones", "cards", "shells"]
+_ADJ = ["quiet", "bright", "ancient", "gentle", "rapid", "hollow", "vivid"]
+_NOUN = ["river", "garden", "engine", "castle", "signal", "forest", "harbor"]
+_VERB = ["follows", "guards", "crosses", "repairs", "observes", "carries"]
+_ELEMENTS = ["iron", "copper", "helium", "carbon", "silicon", "sodium"]
+_PROPS = ["density", "melting point", "atomic mass", "boiling point"]
+_PEOPLE = ["the poet", "the historian", "the painter", "the composer"]
+_WORKS = ["a long letter", "a short treatise", "a quiet elegy", "a field diary"]
+_OPS = [("plus", lambda a, b: a + b), ("minus", lambda a, b: a - b), ("times", lambda a, b: a * b)]
+
+
+def _gen_writing(r: random.Random) -> tuple[str, str]:
+    topic = f"the {r.choice(_ADJ)} {r.choice(_NOUN)}"
+    q = f"write two sentences about {topic}."
+    s = []
+    for _ in range(2):
+        s.append(
+            f"the {r.choice(_ADJ)} {r.choice(_NOUN)} {r.choice(_VERB)} "
+            f"the {r.choice(_ADJ)} {r.choice(_NOUN)}."
+        )
+    return q, " ".join(s)
+
+
+def _gen_roleplay(r: random.Random) -> tuple[str, str]:
+    who = r.choice(_NAMES)
+    q = f"you are {who} the keeper of the {r.choice(_NOUN)}. greet a visitor."
+    a = (
+        f"welcome traveler. i am {who}, keeper of this {r.choice(_NOUN)}. "
+        f"the {r.choice(_ADJ)} {r.choice(_NOUN)} {r.choice(_VERB)} the path ahead."
+    )
+    return q, a
+
+
+def _gen_reasoning(r: random.Random) -> tuple[str, str]:
+    x, y = r.sample(_NOUN, 2)
+    z = r.choice(_NAMES)
+    q = f"if all {x}s are {r.choice(_ADJ)} and {z} owns a {x}, what follows?"
+    a = f"since all {x}s are {r.choice(_ADJ)}, the {x} that {z} owns is also like that. so {z} owns one such {x}."
+    return q, a
+
+
+def _gen_math(r: random.Random) -> tuple[str, str]:
+    name = r.choice(_NAMES)
+    item = r.choice(_ITEMS)
+    a0 = r.randint(2, 30)
+    b0 = r.randint(2, 20)
+    c0 = r.randint(1, min(9, a0))
+    s1 = a0 + b0
+    s2 = s1 - c0
+    q = (
+        f"{name} has {a0} {item}. {name} buys {b0} more and gives away {c0}. "
+        f"how many {item} remain?"
+    )
+    a = (
+        f"start with {a0}. after buying {b0} there are {a0} plus {b0} which is {s1}. "
+        f"after giving away {c0} there are {s1} minus {c0} which is {s2}. "
+        f"the answer is {s2}."
+    )
+    return q, a
+
+
+def _gen_coding(r: random.Random) -> tuple[str, str]:
+    fn = f"f{r.randint(1, 40)}"
+    op = r.choice(["+", "-", "*"])
+    k = r.randint(1, 9)
+    n = r.randint(2, 6)
+    q = f"write a function {fn} that maps x to x {op} {k} and apply it to range {n}."
+    body = f"def {fn}(x):\n    return x {op} {k}\n\nresult = []\nfor i in range({n}):\n    result.append({fn}(i))\nprint(result)"
+    return q, body
+
+
+def _gen_extraction(r: random.Random) -> tuple[str, str]:
+    name = r.choice(_NAMES)
+    age = r.randint(18, 80)
+    city = r.choice(_NOUN)
+    q = f"record: name {name}; age {age}; city {city}. extract the age of {name}."
+    a = f"the age of {name} is {age}."
+    return q, a
+
+
+def _gen_stem(r: random.Random) -> tuple[str, str]:
+    el = r.choice(_ELEMENTS)
+    pr = r.choice(_PROPS)
+    v = r.randint(10, 999)
+    q = f"state the {pr} of {el}."
+    a = f"the {pr} of {el} is {v} units. this value places {el} among the common elements."
+    return q, a
+
+
+def _gen_humanities(r: random.Random) -> tuple[str, str]:
+    y = r.randint(1400, 1990)
+    p = r.choice(_PEOPLE)
+    w = r.choice(_WORKS)
+    q = f"what did {p} write in {y}?"
+    a = f"in {y} {p} wrote {w}. the work describes the {r.choice(_ADJ)} {r.choice(_NOUN)} of that era."
+    return q, a
+
+
+_GENS = {
+    "writing": _gen_writing,
+    "roleplay": _gen_roleplay,
+    "reasoning": _gen_reasoning,
+    "math": _gen_math,
+    "coding": _gen_coding,
+    "extraction": _gen_extraction,
+    "stem": _gen_stem,
+    "humanities": _gen_humanities,
+}
+
+
+def gen_dialogues(n: int, seed: int, categories: list[str] | None = None) -> list[dict]:
+    """n (category, question, answer) dialogues, round-robin over categories."""
+    cats = categories or CATEGORIES
+    r = random.Random(seed)
+    out = []
+    for i in range(n):
+        c = cats[i % len(cats)]
+        q, a = _GENS[c](r)
+        out.append({"category": c, "user": q, "asst": a})
+    return out
+
+
+def corpus_text(dialogues: list[dict]) -> str:
+    """Raw text for BPE training."""
+    return "\n".join(d["user"] + "\n" + d["asst"] for d in dialogues)
+
+
+def eval_workload(name: str, n: int, seed: int) -> dict:
+    """Held-out evaluation prompts. `mtbench` = all 8 categories;
+    `gsm8k` = math-only multi-step arithmetic."""
+    cats = CATEGORIES if name == "mtbench" else ["math"]
+    ds = gen_dialogues(n, seed, cats)
+    return {
+        "name": name,
+        "prompts": [{"category": d["category"], "user": d["user"]} for d in ds],
+    }
+
+
+def write_workloads(out_dir: str, seed: int = 7331) -> None:
+    import os
+
+    os.makedirs(out_dir, exist_ok=True)
+    for name, n, off in [("mtbench", 64, 101), ("gsm8k", 32, 202)]:
+        with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+            json.dump(eval_workload(name, n, seed + off), f, indent=1)

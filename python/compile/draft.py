@@ -1,0 +1,177 @@
+"""L2 — draft models (S5, S6).
+
+The EAGLE Auto-regression Head and its ablation variants (paper §5.3.2),
+the Medusa baseline heads, and a token-level draft LM for the classic
+two-model speculative-sampling baseline.
+
+EAGLE head = FC(concat(emb(token), feature)) + one decoder layer, with the
+target's Embedding and LM Head reused frozen (paper Fig. 7). The four
+input variants (Fig. 10):
+
+    eagle    input_i = concat(emb(t_{i+1}), f_i)   — shifted token: the
+             sampling outcome is in the input, resolving uncertainty
+    unshift  input_i = concat(emb(t_i),     f_i)
+    feat     input_i = f_i
+    tok      input_i = emb(t_i)
+
+All predict f̂_{i+1} (the next feature); tokens come from the frozen LM
+head on f̂. The draft model runs its own KV cache with the same unified
+cache-forward contract as the target (prefill / tree-step / commit).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .model import ModelConfig, rmsnorm, rope, swiglu, NEG
+from .kernels.ref import tree_attention_ref
+from .kernels.tree_attention import tree_attention
+
+VARIANTS = ("eagle", "unshift", "feat", "tok")
+
+
+@dataclass(frozen=True)
+class DraftConfig:
+    variant: str = "eagle"
+    ffn: int = 688
+
+    def uses_feature(self) -> bool:
+        return self.variant in ("eagle", "unshift", "feat")
+
+    def uses_token(self) -> bool:
+        return self.variant in ("eagle", "unshift", "tok")
+
+    def fused(self) -> bool:
+        return self.variant in ("eagle", "unshift")
+
+
+def init_draft_params(dcfg: DraftConfig, cfg: ModelConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 9)
+
+    def dense(k, i, o):
+        return jax.random.normal(k, (i, o), jnp.float32) * (2.0 / (i + o)) ** 0.5
+
+    d = cfg.d
+    hd = cfg.n_heads * cfg.head_dim
+    in_dim = 2 * d if dcfg.fused() else d
+    return {
+        "fc": dense(ks[0], in_dim, d),
+        "ln1": jnp.ones((d,), jnp.float32),
+        "wq": dense(ks[1], d, hd),
+        "wk": dense(ks[2], d, hd),
+        "wv": dense(ks[3], d, hd),
+        "wo": dense(ks[4], hd, d),
+        "ln2": jnp.ones((d,), jnp.float32),
+        "w1": dense(ks[5], d, dcfg.ffn),
+        "w2": dense(ks[6], dcfg.ffn, d),
+        "w3": dense(ks[7], d, dcfg.ffn),
+    }
+
+
+def init_draft_cache(cfg: ModelConfig, batch: int = 1) -> jnp.ndarray:
+    return jnp.zeros((2, batch, cfg.max_len, cfg.n_heads, cfg.head_dim), jnp.float32)
+
+
+def draft_inputs(
+    dcfg: DraftConfig, tok_emb: jnp.ndarray, feats: jnp.ndarray, tokens: jnp.ndarray
+) -> jnp.ndarray:
+    """Assemble the variant-specific input sequence. `tokens` must already
+    be shifted by the caller for the `eagle` variant."""
+    e = tok_emb[tokens]
+    if dcfg.variant in ("eagle", "unshift"):
+        return jnp.concatenate([e, feats], axis=-1)
+    if dcfg.variant == "feat":
+        return feats
+    return e  # tok
+
+
+def draft_forward(
+    dparams: dict,
+    dcfg: DraftConfig,
+    cfg: ModelConfig,
+    tok_emb: jnp.ndarray,  # frozen target embedding [V, D]
+    lm_head: jnp.ndarray,  # frozen target LM head [D, V]
+    feats: jnp.ndarray,  # [B, T, D] (ignored by `tok`)
+    tokens: jnp.ndarray,  # [B, T] (ignored by `feat`)
+    pos: jnp.ndarray,  # [B, T]
+    write_pos: jnp.ndarray,  # [B, T]
+    bias: jnp.ndarray,  # [B, T, S]
+    cache: jnp.ndarray,  # [2, B, S, H, dh]
+):
+    """One decoder-layer pass. Returns (f̂ [B,T,D], logits [B,T,V], cache')."""
+    b, t = tokens.shape
+    x = draft_inputs(dcfg, tok_emb, feats, tokens) @ dparams["fc"]
+    h = rmsnorm(x, dparams["ln1"])
+    q = (h @ dparams["wq"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = (h @ dparams["wk"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    v = (h @ dparams["wv"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    attn = tree_attention if cfg.attn_impl == "pallas" else tree_attention_ref
+    if cache is None:  # training path
+        o = attn(q, k, v, bias)
+    else:
+        batch_idx = jnp.arange(b)[:, None]
+        cache = cache.at[0, batch_idx, write_pos].set(k)
+        cache = cache.at[1, batch_idx, write_pos].set(v)
+        o = attn(q, cache[0], cache[1], bias)
+    x = x + o.reshape(b, t, -1) @ dparams["wo"]
+    x = x + swiglu(dparams, rmsnorm(x, dparams["ln2"]))
+    f_hat = rmsnorm(x, jnp.ones((cfg.d,), jnp.float32))  # predict normalized feature
+    logits = f_hat @ lm_head
+    return f_hat, logits, cache
+
+
+# --------------------------------------------------------------------------
+# Medusa baseline (S6): K residual-MLP heads predicting offsets 2..K+1
+# --------------------------------------------------------------------------
+
+MEDUSA_K = 4
+
+
+def init_medusa_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, MEDUSA_K)
+    heads = []
+    for k in ks:
+        k1, k2 = jax.random.split(k)
+        heads.append(
+            {
+                "w": jax.random.normal(k1, (cfg.d, cfg.d), jnp.float32) * 0.02,
+                "b": jnp.zeros((cfg.d,), jnp.float32),
+                "head": jax.random.normal(k2, (cfg.d, cfg.vocab), jnp.float32) * 0.02,
+            }
+        )
+    return {"heads": heads}
+
+
+def medusa_forward(mparams: dict, feat: jnp.ndarray) -> jnp.ndarray:
+    """feat [B, D] -> logits [B, K, V] for token offsets +2..+K+1
+    (offset +1 comes from the target's own LM head)."""
+    outs = []
+    for h in mparams["heads"]:
+        x = feat + jax.nn.silu(feat @ h["w"] + h["b"])  # ResBlock
+        outs.append(x @ h["head"])
+    return jnp.stack(outs, axis=1)
+
+
+# --------------------------------------------------------------------------
+# Token-level draft LM (classic speculative baseline): tiny 2-layer LM
+# --------------------------------------------------------------------------
+
+
+def tdlm_config(cfg: ModelConfig) -> ModelConfig:
+    from dataclasses import replace
+
+    return replace(
+        cfg,
+        name=f"tdlm-{cfg.name}",
+        d=128,
+        n_layers=2,
+        n_heads=2,
+        head_dim=64,
+        ffn=344,
+        n_experts=0,
+    )

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the tree-attention kernel (S4).
+
+This is the ground truth the Pallas kernel is validated against
+(`python/tests/test_kernel.py`, hypothesis sweeps) and the fallback
+attention implementation selectable via `ModelConfig.attn_impl`.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tree_attention_ref(
+    q: jnp.ndarray,  # [B, T, H, dh]
+    k: jnp.ndarray,  # [B, S, H, dh]
+    v: jnp.ndarray,  # [B, S, H, dh]
+    bias: jnp.ndarray,  # [B, T, S] additive (0 or -inf-ish)
+) -> jnp.ndarray:  # [B, T, H, dh]
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    # [B, H, T, S]
+    scores = jnp.einsum("bthd,bshd->bhts", q, k) * scale
+    scores = scores + bias[:, None, :, :].astype(scores.dtype)
+    w = jnp.nan_to_num(jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True)))
+    w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-30)
+    return jnp.einsum("bhts,bshd->bthd", w, v).astype(q.dtype)

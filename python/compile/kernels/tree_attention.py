@@ -1,0 +1,91 @@
+"""L1 — Pallas tree-attention kernel (S4).
+
+Flash-style attention over (committed KV cache + draft-tree region) with an
+arbitrary additive mask: the compute hot-spot of both EAGLE drafting and
+tree verification.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): grid over (batch, head); the
+query block (draft tree, T ≤ 128 rows) is pinned in VMEM; K/V stream
+through VMEM in `BLOCK_S`-row tiles via a `fori_loop`, with the online-
+softmax running statistics (m, l, acc) held in VMEM scratch across tiles —
+the role shared memory / registers play in the CUDA FlashAttention the
+paper's GPU implementations splice their tree mask into. Both GEMMs
+(Q·Kᵀ and P·V) are `jnp.dot`s shaped for the 128×128 MXU; masking is an
+additive-bias `select` on the VPU (no divergent control flow).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the rust runtime
+loads (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_S = 96  # KV-tile rows per VMEM stage (S_tot must be a multiple)
+
+
+def _kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, block_s: int):
+    # q_ref: [T, dh]; k_ref/v_ref: [S, dh]; bias_ref: [T, S]; o_ref: [T, dh]
+    t, dh = q_ref.shape
+    s_tot = k_ref.shape[0]
+    n_tiles = s_tot // block_s
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        ks = k_ref[pl.ds(i * block_s, block_s), :].astype(jnp.float32)
+        vs = v_ref[pl.ds(i * block_s, block_s), :].astype(jnp.float32)
+        bs = bias_ref[:, pl.ds(i * block_s, block_s)].astype(jnp.float32)
+        s = jnp.dot(q, ks.T) + bs  # [T, block_s] — MXU
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # guard fully-masked tiles: exp(-inf - -inf) -> use finite floor
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)  # VPU select = tree mask
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc_prev * alpha[:, None] + jnp.dot(p, vs)  # MXU
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((t,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((t,), jnp.float32)
+    acc0 = jnp.zeros((t, dh), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_tiles, body, (m0, l0, acc0))
+    o_ref[...] = (acc / (l[:, None] + 1e-30)).astype(o_ref.dtype)
+
+
+def tree_attention(
+    q: jnp.ndarray,  # [B, T, H, dh]
+    k: jnp.ndarray,  # [B, S, H, dh]
+    v: jnp.ndarray,  # [B, S, H, dh]
+    bias: jnp.ndarray,  # [B, T, S]
+    *,
+    block_s: int = BLOCK_S,
+) -> jnp.ndarray:
+    b, t, h, dh = q.shape
+    s_tot = k.shape[1]
+    if s_tot % block_s != 0:
+        # fall back to one tile spanning S (still flash-structured)
+        block_s = s_tot
+    kern = functools.partial(_kernel, block_s=block_s)
+    out = pl.pallas_call(
+        kern,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((None, t, None, dh), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((None, s_tot, None, dh), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((None, s_tot, None, dh), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((None, t, s_tot), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, t, None, dh), lambda i, j: (i, 0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, h, dh), q.dtype),
+        interpret=True,
+    )(q, k, v, bias)
+    return out

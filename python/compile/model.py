@@ -1,0 +1,309 @@
+"""L2 — target-model compute graphs (S3).
+
+LLaMA-style decoder-only transformer (RMSNorm, SwiGLU, RoPE) written as
+pure functions over parameter pytrees, with:
+
+* a **feature tap**: every forward returns both logits and the
+  second-top-layer feature (here: the post-final-RMSNorm hidden state,
+  i.e. the LM-head input) — the raw material of EAGLE;
+* a **unified cache-forward**: prefill / single-token decode / tree verify
+  are all the same function with different (positions, write slots,
+  attention bias), so one code path is tested once and lowered many times;
+* pluggable attention: the Pallas tree-attention kernel (L1) or the jnp
+  oracle (`attn_impl`), numerically interchangeable (tested);
+* an MoE variant (Mixtral analog) — dense top-2 mixture, fixed shapes.
+
+KV caches are functional: forward returns the updated cache and the rust
+coordinator (L3) swaps device buffers. Rejected draft-tree slots are simply
+overwritten by later writes and are never attended (bias is built from
+`cache_len`), so no scratch bookkeeping is needed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import tree_attention_ref
+from .kernels.tree_attention import tree_attention
+
+NEG = -1e30  # additive-mask "minus infinity" that survives fp32 arithmetic
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "toy-s"
+    vocab: int = 1024
+    d: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 64
+    ffn: int = 688
+    max_len: int = 192  # committed + tree scratch slots (S_tot)
+    rope_theta: float = 10000.0
+    # MoE (Mixtral analog): n_experts=0 -> dense SwiGLU
+    n_experts: int = 0
+    top_k: int = 2
+    attn_impl: str = "pallas"  # "pallas" | "ref"
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+
+def toy_s() -> ModelConfig:
+    return ModelConfig()
+
+
+def toy_m() -> ModelConfig:
+    return ModelConfig(name="toy-m", d=320, n_layers=5, n_heads=5, head_dim=64, ffn=864)
+
+
+def toy_moe() -> ModelConfig:
+    return ModelConfig(name="toy-moe", n_experts=4, top_k=2, ffn=344)
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    """He-ish init; LM head untied from the embedding (LLaMA convention)."""
+    ks = jax.random.split(key, 2 + cfg.n_layers)
+
+    def dense(k, i, o):
+        return jax.random.normal(k, (i, o), jnp.float32) * (2.0 / (i + o)) ** 0.5
+
+    layers = []
+    for li in range(cfg.n_layers):
+        lk = jax.random.split(ks[2 + li], 8)
+        hd = cfg.n_heads * cfg.head_dim
+        layer = {
+            "ln1": jnp.ones((cfg.d,), jnp.float32),
+            "wq": dense(lk[0], cfg.d, hd),
+            "wk": dense(lk[1], cfg.d, hd),
+            "wv": dense(lk[2], cfg.d, hd),
+            "wo": dense(lk[3], hd, cfg.d),
+            "ln2": jnp.ones((cfg.d,), jnp.float32),
+        }
+        if cfg.is_moe:
+            ek = jax.random.split(lk[4], cfg.n_experts * 3 + 1)
+            layer["gate"] = dense(ek[0], cfg.d, cfg.n_experts)
+            layer["w1"] = jnp.stack(
+                [dense(ek[1 + 3 * e], cfg.d, cfg.ffn) for e in range(cfg.n_experts)]
+            )
+            layer["w2"] = jnp.stack(
+                [dense(ek[2 + 3 * e], cfg.ffn, cfg.d) for e in range(cfg.n_experts)]
+            )
+            layer["w3"] = jnp.stack(
+                [dense(ek[3 + 3 * e], cfg.d, cfg.ffn) for e in range(cfg.n_experts)]
+            )
+        else:
+            layer["w1"] = dense(lk[5], cfg.d, cfg.ffn)
+            layer["w2"] = dense(lk[6], cfg.ffn, cfg.d)
+            layer["w3"] = dense(lk[7], cfg.d, cfg.ffn)
+        layers.append(layer)
+    return {
+        "tok_emb": jax.random.normal(ks[0], (cfg.vocab, cfg.d), jnp.float32) * 0.02,
+        "ln_f": jnp.ones((cfg.d,), jnp.float32),
+        "lm_head": dense(ks[1], cfg.d, cfg.vocab),
+        "layers": layers,
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int = 1) -> jnp.ndarray:
+    """[2, L, B, S_tot, H, dh] stacked K/V cache."""
+    return jnp.zeros(
+        (2, cfg.n_layers, batch, cfg.max_len, cfg.n_heads, cfg.head_dim), jnp.float32
+    )
+
+
+# --------------------------------------------------------------------------
+# building blocks
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * w
+
+
+def rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, T, H, dh], pos: [B, T] absolute positions."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[:, :, None].astype(jnp.float32) * freqs[None, None, :]  # [B,T,half]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(layer: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return (jax.nn.silu(x @ layer["w1"]) * (x @ layer["w3"])) @ layer["w2"]
+
+
+def moe_mlp(layer: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Dense top-k mixture: all experts computed, non-selected zero-weighted
+    (fixed shapes for AOT; see DESIGN.md — the Tab.3 effect here comes from
+    acceptance, not expert-paging bandwidth)."""
+    gate = x @ layer["gate"]  # [B,T,E]
+    # top-2 without lax.top_k: the `topk` HLO op is unknown to the
+    # xla_extension 0.5.1 text parser the rust runtime uses (top_k=2 only)
+    m1 = jnp.max(gate, axis=-1, keepdims=True)
+    m2 = jnp.max(jnp.where(gate >= m1, NEG, gate), axis=-1, keepdims=True)
+    masked = jnp.where(gate >= m2, gate, NEG)
+    w = jax.nn.softmax(masked, axis=-1)  # [B,T,E]
+    # [E,B,T,d] expert outputs
+    outs = jnp.einsum(
+        "ebtf,efd->ebtd",
+        jax.nn.silu(jnp.einsum("btd,edf->ebtf", x, layer["w1"]))
+        * jnp.einsum("btd,edf->ebtf", x, layer["w3"]),
+        layer["w2"],
+    )
+    return jnp.einsum("bte,ebtd->btd", w, outs)
+
+
+def _attention(cfg: ModelConfig, q, k_all, v_all, bias):
+    if cfg.attn_impl == "pallas":
+        return tree_attention(q, k_all, v_all, bias)
+    return tree_attention_ref(q, k_all, v_all, bias)
+
+
+# --------------------------------------------------------------------------
+# unified cache-forward
+# --------------------------------------------------------------------------
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # [B, T] int32
+    pos: jnp.ndarray,  # [B, T] int32 absolute (RoPE) positions
+    write_pos: jnp.ndarray,  # [B, T] int32 cache slots to write K/V into
+    bias: jnp.ndarray,  # [B, T, S_tot] additive attention bias
+    cache: jnp.ndarray,  # [2, L, B, S, H, dh]
+):
+    """Process T new tokens against the cache. Returns
+    (logits [B,T,V], features [B,T,D], new_cache, tree_k, tree_v) where
+    tree_k/v are this call's per-layer K/V rows [L,B,T,H,dh] (the verify
+    path hands them to `commit`)."""
+    b, t = tokens.shape
+    x = params["tok_emb"][tokens]  # [B,T,D]
+    tree_ks, tree_vs = [], []
+    batch_idx = jnp.arange(b)[:, None]  # [B,1]
+    for li, layer in enumerate(params["layers"]):
+        h = rmsnorm(x, layer["ln1"])
+        q = (h @ layer["wq"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        k = (h @ layer["wk"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        v = (h @ layer["wv"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+        if cache is None:
+            # training path: attend over this call's K/V only (bias [B,T,T])
+            o = _attention(cfg, q, k, v, bias)
+        else:
+            # scatter new K/V into this layer's cache rows
+            cache = cache.at[0, li, batch_idx, write_pos].set(k)
+            cache = cache.at[1, li, batch_idx, write_pos].set(v)
+            tree_ks.append(k)
+            tree_vs.append(v)
+            o = _attention(cfg, q, cache[0, li], cache[1, li], bias)
+        x = x + o.reshape(b, t, -1) @ layer["wo"]
+        h2 = rmsnorm(x, layer["ln2"])
+        x = x + (moe_mlp(layer, h2, cfg) if cfg.is_moe else swiglu(layer, h2))
+    feats = rmsnorm(x, params["ln_f"])  # the EAGLE "feature"
+    logits = feats @ params["lm_head"]
+    if cache is None:
+        return logits, feats, None, None, None
+    return logits, feats, cache, jnp.stack(tree_ks), jnp.stack(tree_vs)
+
+
+# --------------------------------------------------------------------------
+# bias builders (in-graph; all shapes static)
+# --------------------------------------------------------------------------
+
+
+def prefill_bias(cfg: ModelConfig, p: int, length: jnp.ndarray, batch: int = 1):
+    """Causal over the first p slots; columns beyond the written region are
+    masked. `length` [B] masks padded prompt columns."""
+    rows = jnp.arange(p)[None, :, None]  # [1,P,1]
+    cols = jnp.arange(cfg.max_len)[None, None, :]  # [1,1,S]
+    ok = (cols <= rows) & (cols < length[:, None, None])
+    # self-attention always allowed so no row is fully masked
+    ok = ok | (cols == rows)
+    ok = jnp.broadcast_to(ok, (batch, p, cfg.max_len))
+    return jnp.where(ok, 0.0, NEG).astype(jnp.float32)
+
+
+def tree_bias(
+    cfg: ModelConfig,
+    t: int,
+    cache_len: jnp.ndarray,  # [B] committed prefix length
+    tree_mask: jnp.ndarray,  # [B, T, T] bool: node i attends tree node j
+):
+    """Tree nodes attend the committed prefix [0, cache_len) plus their
+    ancestors inside the tree region [cache_len, cache_len+T)."""
+    cols = jnp.arange(cfg.max_len)[None, None, :]  # [1,1,S]
+    cl = cache_len[:, None, None]  # [B,1,1]
+    prefix_ok = cols < cl
+    rel = cols - cl  # position within tree region
+    in_tree = (rel >= 0) & (rel < t)
+    rel_c = jnp.clip(rel, 0, t - 1)
+    tree_ok = jnp.take_along_axis(
+        tree_mask, jnp.broadcast_to(rel_c, (tree_mask.shape[0], t, cfg.max_len)), axis=2
+    )
+    ok = prefix_ok | (in_tree & tree_ok)
+    return jnp.where(ok, 0.0, NEG).astype(jnp.float32)
+
+
+def commit(
+    cfg: ModelConfig,
+    cache: jnp.ndarray,  # [2, L, B, S, H, dh]
+    cache_len: jnp.ndarray,  # [B]
+    tree_k: jnp.ndarray,  # [L, B, T, H, dh] from verify
+    tree_v: jnp.ndarray,
+    accept_idx: jnp.ndarray,  # [B, A] tree-node indices (padded; see n_accept)
+    n_accept: jnp.ndarray,  # [B]
+):
+    """Compact accepted tree rows to [cache_len, cache_len+n_accept).
+    Padded entries scatter to the last slot (never attended: bias is built
+    from the *new* cache_len which the coordinator tracks)."""
+    b, a = accept_idx.shape
+    batch_idx = jnp.arange(b)[:, None]
+    j = jnp.arange(a)[None, :]
+    dest = jnp.where(j < n_accept[:, None], cache_len[:, None] + j, cfg.max_len - 1)
+    for li in range(cfg.n_layers):  # L is small & static
+        rows_k = tree_k[li][batch_idx, accept_idx]  # [B,A,H,dh]
+        rows_v = tree_v[li][batch_idx, accept_idx]
+        cache = cache.at[0, li, batch_idx, dest].set(rows_k)
+        cache = cache.at[1, li, batch_idx, dest].set(rows_v)
+    return cache
+
+
+def commit_from_cache(
+    cfg: ModelConfig,
+    cache: jnp.ndarray,  # [2, L, B, S, H, dh]
+    cache_len: jnp.ndarray,  # [B] committed boundary of the PREVIOUS round
+    accept_idx: jnp.ndarray,  # [B, A] accepted tree-node indices (ascending)
+    n_accept: jnp.ndarray,  # [B]; 0 = no-op
+):
+    """§Perf variant of [`commit`]: the tree K/V rows already live in the
+    cache at [cache_len, cache_len+T) (verify wrote them), so compaction is
+    a gather/scatter *within* the cache — no tree_k/v host roundtrip and no
+    separate executable dispatch (fused into the next verify call).
+    Source index >= dest index for every row, so the functional
+    gather-then-scatter is exact."""
+    b, a = accept_idx.shape
+    batch_idx = jnp.arange(b)[:, None]
+    j = jnp.arange(a)[None, :]
+    src = cache_len[:, None] + accept_idx  # [B, A]
+    dest = jnp.where(j < n_accept[:, None], cache_len[:, None] + j, cfg.max_len - 1)
+    for li in range(cfg.n_layers):
+        rows_k = cache[0, li][batch_idx, src]  # [B,A,H,dh]
+        rows_v = cache[1, li][batch_idx, src]
+        cache = cache.at[0, li, batch_idx, dest].set(rows_k)
+        cache = cache.at[1, li, batch_idx, dest].set(rows_v)
+    return cache

@@ -1,0 +1,112 @@
+"""int8 weight-only quantization (S20) — the gpt-fast composition analog.
+
+Per-output-channel symmetric int8 for every 2-D matmul weight; embeddings,
+norms and biases stay fp32. The executables dequantize in-graph, so the
+weight *container* shrinks ~4x while the compute graph stays identical —
+on this CPU-f32 substrate that demonstrates the composition claim
+(Table 4: EAGLE stacks with quantization) through memory, not wallclock;
+see EXPERIMENTS.md tab4 notes.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .tensorfile import flatten_params, read_stensor, write_stensor
+
+
+KEEP_FP32 = ("tok_emb", "lm_head")  # shared with the fp32 draft head (and
+# gpt-fast likewise keeps embeddings unquantized)
+
+
+def quantize_leaf(name: str, arr: np.ndarray):
+    """-> list of (name, array) replacing the leaf."""
+    if name in KEEP_FP32:
+        return [(name, arr)]
+    if arr.ndim == 2 and arr.dtype == np.float32 and min(arr.shape) >= 64:
+        scale = np.abs(arr).max(axis=0, keepdims=True) / 127.0 + 1e-12
+        q = np.clip(np.round(arr / scale), -127, 127).astype(np.int32)
+        return [(f"{name}.q", q), (f"{name}.scale", scale.astype(np.float32))]
+    return [(name, arr)]
+
+
+def quantize_params(flat: list[tuple[str, np.ndarray]]):
+    out = []
+    for name, arr in flat:
+        out.extend(quantize_leaf(name, np.asarray(arr)))
+    return out
+
+
+def dequant_tree(qflat: list[tuple[str, jnp.ndarray]]):
+    """Inverse of quantize_params at the flat-name level (in-graph)."""
+    out = []
+    i = 0
+    while i < len(qflat):
+        name, arr = qflat[i]
+        if name.endswith(".q"):
+            scale = qflat[i + 1][1]
+            out.append((name[:-2], arr.astype(jnp.float32) * scale))
+            i += 2
+        else:
+            out.append((name, arr))
+            i += 1
+    return out
+
+
+def build_quant(out: str, manifest: dict, cfg: M.ModelConfig) -> None:
+    """Lower int8 variants of the toy-s serving executables + eagle head."""
+    from . import aot  # late import to avoid cycle
+    from .tensorfile import unflatten_like
+
+    src = manifest["models"]["toy-s"]
+    params_flat = read_stensor(os.path.join(out, src["weights"]))
+    qflat = quantize_params(params_flat)
+    write_stensor(os.path.join(out, "weights/toy-s-int8.stensor"), qflat)
+
+    # template for unflatten
+    import jax.numpy as jnp
+
+    template = unflatten_like(
+        M.init_params(cfg, jax.random.PRNGKey(0)), params_flat
+    )
+
+    qnames = [n for n, _ in qflat]
+    qspecs = [jax.ShapeDtypeStruct(a.shape, jnp.int32 if a.dtype == np.int32 else jnp.float32) for _, a in qflat]
+
+    class QuantTargetLowering(aot.TargetLowering):
+        def __init__(self):
+            self.cfg = cfg
+            self.params = template
+            self.names = qnames
+            self.specs = qspecs
+
+        def _unflatten(self, leaves):
+            deq = dequant_tree(list(zip(qnames, leaves)))
+            return unflatten_like(self.params, deq)
+
+    tl = QuantTargetLowering()
+    exes = {}
+    for ename, (fn, ex) in {
+        "prefill": tl.prefill(aot.PREFILL_P, 1),
+        "decode": tl.decode(1),
+        f"verify_t{aot.TREE_T}": tl.verify(aot.TREE_T, aot.ACCEPT_A, 1),
+    }.items():
+        path = f"hlo/toy-s-int8.{ename}.hlo.txt"
+        aot.lower_to_file(fn, ex, os.path.join(out, path))
+        exes[ename] = {"hlo": path, "bs": 1}
+        print(f"[aot] lowered toy-s-int8.{ename}")
+
+    manifest["models"]["toy-s-int8"] = {
+        "config": src["config"],
+        "weights": "weights/toy-s-int8.stensor",
+        "param_names": qnames,
+        "executables": exes,
+        # reuse the fp32 eagle head against the int8 target
+        "drafts": {"eagle": src["drafts"]["eagle"]},
+        "quantized": True,
+    }

@@ -1,0 +1,102 @@
+"""`.stensor` — minimal binary tensor container (S8).
+
+Weights are *not* baked into the HLO (keeps artifacts small and lets one
+compiled graph serve many checkpoints, e.g. the Table-6 ablation heads).
+Python writes this container; rust (`rust/src/runtime/tensorfile.rs`)
+reads it and uploads each entry once as a device-resident PJRT buffer.
+
+Layout (little-endian, fully sequential):
+    magic   8 bytes  b"STNSR1\\0\\0"
+    count   u32
+    entry × count:
+        name_len u32, name utf-8,
+        dtype    u8 (0 = f32, 1 = i32),
+        ndim     u32, dims u64 × ndim,
+        payload  raw bytes (row-major)
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"STNSR1\x00\x00"
+DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+DTYPES_INV = {0: np.float32, 1: np.int32}
+
+
+def write_stensor(path: str, tensors: list[tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            shape = np.asarray(arr).shape
+            arr = np.ascontiguousarray(arr).reshape(shape)  # keep 0-d 0-d
+            if arr.dtype not in DTYPES:
+                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", DTYPES[arr.dtype]))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def read_stensor(path: str) -> list[tuple[str, np.ndarray]]:
+    out = []
+    with open(path, "rb") as f:
+        assert f.read(8) == MAGIC, "bad magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            (dt,) = struct.unpack("<B", f.read(1))
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim)) if ndim else ()
+            dtype = np.dtype(DTYPES_INV[dt])
+            n = int(np.prod(dims)) if dims else 1
+            arr = np.frombuffer(f.read(n * dtype.itemsize), dtype=dtype).reshape(dims)
+            out.append((name, arr))
+    return out
+
+
+# -- canonical flattening of parameter pytrees ------------------------------
+# The order here is the ABI between aot.py (writes weights + manifest input
+# lists) and the rust runtime (feeds buffers positionally).
+
+
+def flatten_params(params) -> list[tuple[str, np.ndarray]]:
+    """Deterministic (path, leaf) list for a nested dict/list pytree."""
+    out: list[tuple[str, np.ndarray]] = []
+
+    def rec(prefix: str, node):
+        if isinstance(node, dict):
+            for k in sorted(node.keys()):
+                rec(f"{prefix}.{k}" if prefix else k, node[k])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(f"{prefix}.{i}", v)
+        else:
+            out.append((prefix, np.asarray(node)))
+
+    rec("", params)
+    return out
+
+
+def unflatten_like(template, flat: list[tuple[str, np.ndarray]]):
+    """Rebuild a pytree shaped like `template` from flatten_params output."""
+    lookup = dict(flat)
+
+    def rec(prefix: str, node):
+        if isinstance(node, dict):
+            return {k: rec(f"{prefix}.{k}" if prefix else k, v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return [rec(f"{prefix}.{i}", v) for i, v in enumerate(node)]
+        import jax.numpy as jnp
+
+        return jnp.asarray(lookup[prefix])
+
+    return rec("", template)

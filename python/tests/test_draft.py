@@ -1,0 +1,124 @@
+"""Draft-head semantics: variant input assembly, shifted-token contract,
+medusa shapes, draft-prefill/step equivalence."""
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import draft as D
+from compile import model as M
+
+CFG = replace(M.toy_s(), vocab=97, d=64, n_layers=2, n_heads=2, head_dim=32, ffn=96, max_len=48, attn_impl="ref")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    heads = {
+        v: D.init_draft_params(D.DraftConfig(variant=v, ffn=CFG.ffn), CFG, jax.random.PRNGKey(1))
+        for v in D.VARIANTS
+    }
+    return params, heads
+
+
+def _causal_bias(t, s):
+    rows = jnp.arange(t)[None, :, None]
+    cols = jnp.arange(s)[None, None, :]
+    return jnp.where(cols <= rows, 0.0, M.NEG).astype(jnp.float32)
+
+
+def test_variant_input_dims(setup):
+    _, heads = setup
+    assert heads["eagle"]["fc"].shape == (2 * CFG.d, CFG.d)
+    assert heads["unshift"]["fc"].shape == (2 * CFG.d, CFG.d)
+    assert heads["feat"]["fc"].shape == (CFG.d, CFG.d)
+    assert heads["tok"]["fc"].shape == (CFG.d, CFG.d)
+
+
+def test_feat_variant_ignores_tokens(setup):
+    params, heads = setup
+    t = 6
+    feats = jax.random.normal(jax.random.PRNGKey(2), (1, t, CFG.d))
+    t1 = jax.random.randint(jax.random.PRNGKey(3), (1, t), 0, CFG.vocab)
+    t2 = (t1 + 3) % CFG.vocab
+    pos = jnp.arange(t)[None, :]
+    bias = _causal_bias(t, t)
+    args = (heads["feat"], D.DraftConfig(variant="feat", ffn=CFG.ffn), CFG, params["tok_emb"], params["lm_head"])
+    f1, _, _ = D.draft_forward(*args, feats, t1, pos, None, bias, None)
+    f2, _, _ = D.draft_forward(*args, feats, t2, pos, None, bias, None)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2))
+
+
+def test_tok_variant_ignores_features(setup):
+    params, heads = setup
+    t = 6
+    toks = jax.random.randint(jax.random.PRNGKey(4), (1, t), 0, CFG.vocab)
+    f1 = jax.random.normal(jax.random.PRNGKey(5), (1, t, CFG.d))
+    f2 = f1 + 1.0
+    pos = jnp.arange(t)[None, :]
+    bias = _causal_bias(t, t)
+    args = (heads["tok"], D.DraftConfig(variant="tok", ffn=CFG.ffn), CFG, params["tok_emb"], params["lm_head"])
+    o1, _, _ = D.draft_forward(*args, f1, toks, pos, None, bias, None)
+    o2, _, _ = D.draft_forward(*args, f2, toks, pos, None, bias, None)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2))
+
+
+def test_eagle_depends_on_both(setup):
+    params, heads = setup
+    t = 6
+    toks = jax.random.randint(jax.random.PRNGKey(6), (1, t), 0, CFG.vocab)
+    feats = jax.random.normal(jax.random.PRNGKey(7), (1, t, CFG.d))
+    pos = jnp.arange(t)[None, :]
+    bias = _causal_bias(t, t)
+    args = (heads["eagle"], D.DraftConfig(variant="eagle", ffn=CFG.ffn), CFG, params["tok_emb"], params["lm_head"])
+    o, _, _ = D.draft_forward(*args, feats, toks, pos, None, bias, None)
+    o_t, _, _ = D.draft_forward(*args, feats, (toks + 1) % CFG.vocab, pos, None, bias, None)
+    o_f, _, _ = D.draft_forward(*args, feats + 1.0, toks, pos, None, bias, None)
+    assert float(jnp.max(jnp.abs(o - o_t))) > 1e-6
+    assert float(jnp.max(jnp.abs(o - o_f))) > 1e-6
+
+
+def test_draft_cache_step_matches_full_forward(setup):
+    """Chain-stepping the head against its KV cache must equal one full
+    causal pass over the same inputs (the serving-path contract)."""
+    params, heads = setup
+    dcfg = D.DraftConfig(variant="eagle", ffn=CFG.ffn)
+    t = 8
+    feats = jax.random.normal(jax.random.PRNGKey(8), (1, t, CFG.d))
+    toks = jax.random.randint(jax.random.PRNGKey(9), (1, t), 0, CFG.vocab)
+    pos = jnp.arange(t)[None, :]
+    full_out, _, _ = D.draft_forward(
+        heads["eagle"], dcfg, CFG, params["tok_emb"], params["lm_head"],
+        feats, toks, pos, None, _causal_bias(t, t), None,
+    )
+    cache = D.init_draft_cache(CFG, 1)
+    cols = jnp.arange(CFG.max_len)[None, None, :]
+    for i in range(t):
+        cl = jnp.array([i], jnp.int32)
+        bias = jnp.where(cols <= cl[:, None, None], 0.0, M.NEG).astype(jnp.float32)
+        out_i, _, cache = D.draft_forward(
+            heads["eagle"], dcfg, CFG, params["tok_emb"], params["lm_head"],
+            feats[:, i : i + 1], toks[:, i : i + 1],
+            cl[:, None], cl[:, None], bias, cache,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out_i[0, 0]), np.asarray(full_out[0, i]), atol=1e-4,
+            err_msg=f"step {i}",
+        )
+
+
+def test_medusa_shapes(setup):
+    _, _ = setup
+    mp = D.init_medusa_params(CFG, jax.random.PRNGKey(10))
+    feat = jax.random.normal(jax.random.PRNGKey(11), (3, CFG.d))
+    out = D.medusa_forward(mp, feat)
+    assert out.shape == (3, D.MEDUSA_K, CFG.vocab)
+
+
+def test_tdlm_config_is_small():
+    tc = D.tdlm_config(CFG)
+    assert tc.d < CFG.d or tc.n_layers <= 2
+    assert not tc.is_moe

@@ -1,0 +1,96 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes/dtypes/mask patterns; assert_allclose against
+ref.py as mandated.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import tree_attention_ref
+from compile.kernels.tree_attention import tree_attention
+
+NEG = -1e30
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _run(b, t, h, dh, s, mask_p, dtype, seed, block_s=96):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = _rand(ks[0], (b, t, h, dh), dtype)
+    k = _rand(ks[1], (b, s, h, dh), dtype)
+    v = _rand(ks[2], (b, s, h, dh), dtype)
+    keep = jax.random.bernoulli(ks[3], mask_p, (b, t, s))
+    # guarantee at least one visible column per row (self-attention invariant)
+    keep = keep.at[:, :, 0].set(True)
+    bias = jnp.where(keep, 0.0, NEG).astype(jnp.float32)
+    out = tree_attention(q, k, v, bias, block_s=block_s)
+    ref = tree_attention_ref(q, k, v, bias)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=tol, rtol=tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    t=st.integers(1, 16),
+    h=st.integers(1, 3),
+    dh=st.sampled_from([16, 32, 64]),
+    s_tiles=st.integers(1, 3),
+    mask_p=st.floats(0.2, 1.0),
+    seed=st.integers(0, 10_000),
+)
+def test_kernel_matches_ref_f32(b, t, h, dh, s_tiles, mask_p, seed):
+    _run(b, t, h, dh, s_tiles * 96, mask_p, jnp.float32, seed)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    t=st.integers(1, 8),
+    dh=st.sampled_from([16, 32]),
+    seed=st.integers(0, 10_000),
+)
+def test_kernel_matches_ref_bf16(t, dh, seed):
+    _run(1, t, 2, dh, 96, 0.7, jnp.bfloat16, seed)
+
+
+def test_non_multiple_s_falls_back_to_single_tile():
+    # S not a multiple of block_s: kernel must still be exact
+    _run(1, 4, 2, 32, 100, 0.8, jnp.float32, 0)
+
+
+def test_fully_masked_rows_do_not_nan():
+    q = jnp.ones((1, 2, 1, 16))
+    k = jnp.ones((1, 96, 1, 16))
+    v = jnp.ones((1, 96, 1, 16))
+    bias = jnp.full((1, 2, 96), NEG)
+    out = tree_attention(q, k, v, bias)
+    assert not bool(jnp.any(jnp.isnan(out)))
+
+
+def test_tree_mask_semantics_chain_equals_causal():
+    """A chain tree (each node attends its ancestors) must equal plain
+    causal attention over the same tokens."""
+    key = jax.random.PRNGKey(7)
+    t, s = 8, 96
+    q = jax.random.normal(key, (1, t, 2, 32))
+    k = jnp.zeros((1, s, 2, 32)).at[:, :t].set(jax.random.normal(jax.random.PRNGKey(8), (1, t, 2, 32)))
+    v = jnp.zeros((1, s, 2, 32)).at[:, :t].set(jax.random.normal(jax.random.PRNGKey(9), (1, t, 2, 32)))
+    rows = jnp.arange(t)[:, None]
+    cols = jnp.arange(s)[None, :]
+    bias = jnp.where((cols <= rows) & (cols < t), 0.0, NEG)[None].astype(jnp.float32)
+    out = tree_attention(q, k, v, bias)
+    ref = tree_attention_ref(q, k, v, bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("block_s", [32, 48, 96, 192])
+def test_block_size_invariance(block_s):
+    """Flash tiling must be numerically independent of the tile size."""
+    _run(1, 6, 2, 32, 192, 0.6, jnp.float32, 3, block_s=block_s)

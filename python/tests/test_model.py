@@ -1,0 +1,172 @@
+"""L2 model invariants: cache-forward vs train-forward equivalence, prefix
+invariance, tree == chain equivalence, MoE shapes."""
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = replace(M.toy_s(), vocab=101, d=64, n_layers=2, n_heads=2, head_dim=32, ffn=96, max_len=48, attn_impl="ref")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _causal_bias(t, s=None):
+    s = s or t
+    rows = jnp.arange(t)[None, :, None]
+    cols = jnp.arange(s)[None, None, :]
+    return jnp.where((cols <= rows), 0.0, M.NEG).astype(jnp.float32)
+
+
+def _prefill(params, toks, length):
+    b, p = toks.shape
+    cache = M.init_cache(CFG, b)
+    pos = jnp.broadcast_to(jnp.arange(p)[None, :], (b, p)).astype(jnp.int32)
+    bias = M.prefill_bias(CFG, p, jnp.full((b,), length, jnp.int32), b)
+    return M.forward(params, CFG, toks, pos, pos, bias, cache)
+
+
+def test_train_forward_matches_cache_forward(params):
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, CFG.vocab)
+    lg_t, ft_t, _, _, _ = M.forward(
+        params, CFG, toks,
+        jnp.broadcast_to(jnp.arange(12)[None], (2, 12)), None, _causal_bias(12), None,
+    )
+    lg_c, ft_c, _, _, _ = _prefill(params, toks, 12)
+    np.testing.assert_allclose(np.asarray(lg_t), np.asarray(lg_c), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ft_t), np.asarray(ft_c), atol=1e-5)
+
+
+def test_prefix_invariance(params):
+    """Logits at position i must not depend on tokens after i (causality)."""
+    t1 = jax.random.randint(jax.random.PRNGKey(2), (1, 10), 0, CFG.vocab)
+    t2 = t1.at[0, 7:].set((t1[0, 7:] + 1) % CFG.vocab)
+    lg1, _, _, _, _ = _prefill(params, t1, 10)
+    lg2, _, _, _, _ = _prefill(params, t2, 10)
+    np.testing.assert_allclose(np.asarray(lg1[0, :7]), np.asarray(lg2[0, :7]), atol=1e-4)
+
+
+def test_decode_steps_match_prefill(params):
+    """Prefill(k+n) == prefill(k) + n single-token decode steps."""
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, 12), 0, CFG.vocab)
+    lg_full, ft_full, _, _, _ = _prefill(params, toks, 12)
+
+    lg_p, ft_p, cache, _, _ = _prefill(params, toks[:, :8].at[:, 8:].get() if False else toks.at[:, 8:].set(0), 8)
+    # note: padded prompt columns are masked by length=8, values don't matter
+    for i in range(8, 12):
+        cl = jnp.array([i], jnp.int32)
+        pos = cl[:, None]
+        cols = jnp.arange(CFG.max_len)[None, None, :]
+        bias = jnp.where(cols <= cl[:, None, None], 0.0, M.NEG).astype(jnp.float32)
+        lg_d, ft_d, cache, _, _ = M.forward(
+            params, CFG, toks[:, i : i + 1], pos, pos, bias, cache
+        )
+        np.testing.assert_allclose(
+            np.asarray(lg_d[0, 0]), np.asarray(lg_full[0, i]), atol=1e-4,
+            err_msg=f"decode step {i}",
+        )
+
+
+def test_tree_verify_chain_path_matches_decode(params):
+    """A chain-shaped tree (path) verified in one call must reproduce the
+    same logits as sequential decode: the tree-attention correctness core."""
+    toks = jax.random.randint(jax.random.PRNGKey(4), (1, 8), 0, CFG.vocab)
+    tree_toks = jax.random.randint(jax.random.PRNGKey(5), (1, 4), 0, CFG.vocab)
+
+    _, _, cache, _, _ = _prefill(params, toks, 8)
+    # chain tree: node i attends nodes 0..i
+    t = 4
+    cl = jnp.array([8], jnp.int32)
+    write_pos = cl[:, None] + jnp.arange(t)[None, :]
+    pos = write_pos
+    cols = jnp.arange(CFG.max_len)[None, None, :]
+    rel = cols - cl[:, None, None]
+    rows = jnp.arange(t)[None, :, None]
+    ok = (cols < cl[:, None, None]) | ((rel >= 0) & (rel <= rows))
+    bias = jnp.where(ok, 0.0, M.NEG).astype(jnp.float32)
+    lg_tree, ft_tree, _, tk, tv = M.forward(params, CFG, tree_toks, pos, write_pos, bias, cache)
+
+    # sequential decodes of the same tokens
+    _, _, cache2, _, _ = _prefill(params, toks, 8)
+    for i in range(t):
+        cl2 = jnp.array([8 + i], jnp.int32)
+        pos2 = cl2[:, None]
+        bias2 = jnp.where(cols <= cl2[:, None, None], 0.0, M.NEG).astype(jnp.float32)
+        lg_d, _, cache2, _, _ = M.forward(
+            params, CFG, tree_toks[:, i : i + 1], pos2, pos2, bias2, cache2
+        )
+        np.testing.assert_allclose(
+            np.asarray(lg_d[0, 0]), np.asarray(lg_tree[0, i]), atol=1e-4,
+            err_msg=f"tree node {i}",
+        )
+    assert tk.shape == (CFG.n_layers, 1, t, CFG.n_heads, CFG.head_dim)
+
+
+def test_commit_then_decode_matches_plain_decode(params):
+    """Verify+commit of an accepted path must leave the cache identical (in
+    effect) to having decoded those tokens directly."""
+    toks = jax.random.randint(jax.random.PRNGKey(6), (1, 8), 0, CFG.vocab)
+    tree_toks = jax.random.randint(jax.random.PRNGKey(7), (1, 4), 0, CFG.vocab)
+    t = 4
+
+    _, _, cache, _, _ = _prefill(params, toks, 8)
+    cl = jnp.array([8], jnp.int32)
+    write_pos = cl[:, None] + jnp.arange(t)[None, :]
+    cols = jnp.arange(CFG.max_len)[None, None, :]
+    rel = cols - cl[:, None, None]
+    rows = jnp.arange(t)[None, :, None]
+    ok = (cols < cl[:, None, None]) | ((rel >= 0) & (rel <= rows))
+    bias = jnp.where(ok, 0.0, M.NEG).astype(jnp.float32)
+    _, _, cache_v, tk, tv = M.forward(params, CFG, tree_toks, write_pos, write_pos, bias, cache)
+    # accept first 2 nodes (chain prefix)
+    cache_c = M.commit(
+        CFG, cache_v, cl, tk, tv,
+        jnp.array([[0, 1, 0, 0]], jnp.int32), jnp.array([2], jnp.int32),
+    )
+    # now decode one more token on top; compare against the plain path
+    nxt = jnp.array([[5]], jnp.int32)
+    cl2 = jnp.array([10], jnp.int32)
+    bias2 = jnp.where(cols <= cl2[:, None, None], 0.0, M.NEG).astype(jnp.float32)
+    lg_a, _, _, _, _ = M.forward(params, CFG, nxt, cl2[:, None], cl2[:, None], bias2, cache_c)
+
+    _, _, cache_p, _, _ = _prefill(params, toks, 8)
+    for i in range(2):
+        cli = jnp.array([8 + i], jnp.int32)
+        biasi = jnp.where(cols <= cli[:, None, None], 0.0, M.NEG).astype(jnp.float32)
+        _, _, cache_p, _, _ = M.forward(
+            params, CFG, tree_toks[:, i : i + 1], cli[:, None], cli[:, None], biasi, cache_p
+        )
+    lg_b, _, _, _, _ = M.forward(params, CFG, nxt, cl2[:, None], cl2[:, None], bias2, cache_p)
+    np.testing.assert_allclose(np.asarray(lg_a), np.asarray(lg_b), atol=1e-4)
+
+
+def test_moe_forward_shapes_and_finite():
+    cfg = replace(CFG, n_experts=4, top_k=2, ffn=32)
+    params = M.init_params(cfg, jax.random.PRNGKey(8))
+    toks = jax.random.randint(jax.random.PRNGKey(9), (2, 6), 0, cfg.vocab)
+    lg, ft, _, _, _ = M.forward(
+        params, cfg, toks,
+        jnp.broadcast_to(jnp.arange(6)[None], (2, 6)), None, _causal_bias(6), None,
+    )
+    assert lg.shape == (2, 6, cfg.vocab) and ft.shape == (2, 6, cfg.d)
+    assert bool(jnp.all(jnp.isfinite(lg)))
+
+
+def test_pallas_and_ref_model_agree(params):
+    """Whole-model equivalence of the two attention implementations."""
+    toks = jax.random.randint(jax.random.PRNGKey(10), (1, 8), 0, CFG.vocab)
+    lg_ref, _, _, _, _ = _prefill(params, toks, 8)
+    cfg_p = replace(CFG, attn_impl="pallas")
+    b, p = toks.shape
+    cache = M.init_cache(cfg_p, b)
+    pos = jnp.broadcast_to(jnp.arange(p)[None, :], (b, p)).astype(jnp.int32)
+    bias = M.prefill_bias(cfg_p, p, jnp.full((b,), 8, jnp.int32), b)
+    lg_pal, _, _, _, _ = M.forward(params, cfg_p, toks, pos, pos, bias, cache)
+    np.testing.assert_allclose(np.asarray(lg_ref), np.asarray(lg_pal), atol=1e-4)

@@ -1,0 +1,34 @@
+"""int8 weight-only quantization: error bounds and name scheme."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.quant import dequant_tree, quantize_leaf, quantize_params
+
+
+def test_quantize_leaf_roundtrip_error():
+    w = np.random.default_rng(0).normal(size=(128, 96)).astype(np.float32)
+    out = quantize_leaf("w", w)
+    assert [n for n, _ in out] == ["w.q", "w.scale"]
+    q, scale = out[0][1], out[1][1]
+    deq = q.astype(np.float32) * scale
+    # per-channel int8: max error <= scale/2 per column
+    assert np.max(np.abs(deq - w) / scale) <= 0.5 + 1e-5
+
+
+def test_small_and_1d_leaves_passthrough():
+    v = np.zeros((16,), np.float32)
+    assert quantize_leaf("ln", v) == [("ln", v)]
+    small = np.zeros((8, 8), np.float32)
+    out = quantize_leaf("tiny", small)
+    assert out[0][0] == "tiny"
+
+
+def test_dequant_tree_inverse_names():
+    flat = [("a.w", np.random.rand(128, 128).astype(np.float32)), ("a.ln", np.ones(4, np.float32))]
+    qflat = quantize_params(flat)
+    deq = dequant_tree([(n, jnp.asarray(a)) for n, a in qflat])
+    assert [n for n, _ in deq] == ["a.w", "a.ln"]
+    np.testing.assert_allclose(
+        np.asarray(deq[0][1]), flat[0][1], atol=float(np.abs(flat[0][1]).max() / 100)
+    )

@@ -1,0 +1,40 @@
+"""stensor container + canonical pytree flattening (the L3 weights ABI)."""
+
+import numpy as np
+import pytest
+
+from compile.tensorfile import flatten_params, read_stensor, unflatten_like, write_stensor
+
+
+def test_roundtrip(tmp_path):
+    tensors = [
+        ("a.w", np.arange(12, dtype=np.float32).reshape(3, 4)),
+        ("b", np.array([1, 2, 3], np.int32)),
+        ("scalar", np.float32(7.0).reshape(())),
+    ]
+    p = str(tmp_path / "t.stensor")
+    write_stensor(p, tensors)
+    out = read_stensor(p)
+    assert [n for n, _ in out] == ["a.w", "b", "scalar"]
+    for (n1, a1), (n2, a2) in zip(tensors, out):
+        assert a1.dtype == a2.dtype and a1.shape == a2.shape
+        np.testing.assert_array_equal(a1, a2)
+
+
+def test_flatten_deterministic_order():
+    tree = {"z": np.zeros(2, np.float32), "a": [np.ones(1, np.float32), {"k": np.zeros(3, np.float32)}]}
+    names = [n for n, _ in flatten_params(tree)]
+    assert names == ["a.0", "a.1.k", "z"]  # dict keys sorted, lists positional
+
+
+def test_unflatten_inverse():
+    tree = {"layers": [{"w": np.random.rand(2, 2).astype(np.float32)} for _ in range(3)], "emb": np.random.rand(4).astype(np.float32)}
+    flat = flatten_params(tree)
+    rebuilt = unflatten_like(tree, flat)
+    np.testing.assert_array_equal(np.asarray(rebuilt["layers"][1]["w"]), tree["layers"][1]["w"])
+    np.testing.assert_array_equal(np.asarray(rebuilt["emb"]), tree["emb"])
+
+
+def test_bad_dtype_rejected(tmp_path):
+    with pytest.raises(ValueError):
+        write_stensor(str(tmp_path / "x.stensor"), [("f64", np.zeros(2, np.float64))])

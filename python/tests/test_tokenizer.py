@@ -1,0 +1,80 @@
+"""Tokenizer: roundtrip, determinism, json persistence, and the fixture
+dump the rust test suite replays (bit-exact cross-language contract)."""
+
+import json
+import os
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data
+from compile.tokenizer import Bpe, split_words, train_bpe
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "fixtures", "tokenizer_cases.json")
+
+
+@pytest.fixture(scope="module")
+def bpe():
+    ds = data.gen_dialogues(300, 1)
+    return train_bpe(data.corpus_text(ds), 300)
+
+
+def test_split_words_examples():
+    assert split_words("a b") == ["a", " b"]
+    assert split_words(" a") == [" a"]
+    assert split_words("a  b") == ["a", " ", " b"]
+    assert split_words("") == []
+    assert split_words("  ") == [" ", " "]
+    assert split_words("ab\ncd") == ["ab\ncd"]
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.text(alphabet=st.characters(codec="ascii"), max_size=80))
+def test_split_words_partition(s):
+    assert "".join(split_words(s)) == s
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.text(max_size=60))
+def test_roundtrip(bpe, s):
+    assert bpe.decode(bpe.encode(s)) == s
+
+
+def test_determinism():
+    ds = data.gen_dialogues(100, 5)
+    t1 = train_bpe(data.corpus_text(ds), 100)
+    t2 = train_bpe(data.corpus_text(ds), 100)
+    assert t1.merges == t2.merges
+
+
+def test_json_roundtrip(bpe):
+    b2 = Bpe.from_json(bpe.to_json())
+    s = "tom has 12 apples. def f3(x):\n    return x * 2"
+    assert b2.encode(s) == bpe.encode(s)
+
+
+def test_specials(bpe):
+    ids = bpe.encode_dialogue("hello", "world")
+    assert ids[0] == bpe.special_ids["<bos>"]
+    assert ids[1] == bpe.special_ids["<user>"]
+    assert ids[-1] == bpe.special_ids["<eos>"]
+    assert all(0 <= t < bpe.vocab_size for t in ids)
+
+
+def test_dump_rust_fixtures(bpe):
+    """Write (text, ids) cases + the vocab used, for rust's bpe tests."""
+    cases = [
+        "tom has 12 apples.",
+        "def f7(x):\n    return x + 3",
+        "the quiet river follows the ancient harbor.",
+        "  leading spaces",
+        "unicode: café → ok",
+        "",
+    ]
+    os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
+    with open(FIXTURE, "w") as f:
+        json.dump(
+            {"vocab": json.loads(bpe.to_json()), "cases": [{"text": c, "ids": bpe.encode(c)} for c in cases]},
+            f,
+        )
+    assert os.path.exists(FIXTURE)

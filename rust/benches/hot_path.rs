@@ -1,0 +1,99 @@
+//! Hot-path micro-bench (harness=false): per-executable latency of the
+//! serving-critical calls (prefill / decode / fused verify / draft step)
+//! plus the pure-host components (bias building, softmax, acceptance) —
+//! the numbers behind EXPERIMENTS.md §Perf.
+
+use eagle_serve::eval::runner::Runner;
+use eagle_serve::models::{artifacts_dir, ModelBundle};
+use eagle_serve::spec::sampling::{argmax, softmax};
+use eagle_serve::spec::tree::{DraftTree, TreeSpec};
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // warmup
+    for _ in 0..iters.min(3) {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "{name:28} median {:8.3} ms   p10 {:8.3}   p90 {:8.3}   ({} iters)",
+        times[times.len() / 2],
+        times[times.len() / 10],
+        times[times.len() * 9 / 10],
+        iters
+    );
+}
+
+fn main() {
+    // -- host-only components (always run) ---------------------------------
+    let logits: Vec<f32> = (0..761).map(|i| ((i * 2654435761u64 as usize) % 997) as f32 / 997.0).collect();
+    bench("host/softmax(761)", 1000, || {
+        std::hint::black_box(softmax(&logits, 1.0));
+    });
+    bench("host/argmax(761)", 1000, || {
+        std::hint::black_box(argmax(&logits));
+    });
+    let mut tree = DraftTree::with_root(1);
+    let spec = TreeSpec::tree_default();
+    let mut parent = 0;
+    for (d, &w) in spec.level_widths.iter().enumerate() {
+        for i in 0..w {
+            let p = if d == 0 { 0 } else { parent };
+            tree.add(p, (d * 10 + i) as u32, 0.0, None);
+        }
+        parent = tree.len() - 1;
+    }
+    bench("host/verify_inputs(32x192)", 500, || {
+        std::hint::black_box(tree.verify_inputs(32, 40, 192));
+    });
+
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("executable benches skipped: run `make artifacts` first");
+        return;
+    }
+    let runner = Runner::new(&artifacts_dir()).expect("runner");
+    let bundle = ModelBundle::load(&runner.rt, &runner.man, "toy-s", &["eagle"], false, false)
+        .expect("bundle");
+    let tgt = &bundle.target;
+    let draft = &bundle.drafts["eagle"];
+    let c = &runner.man.constants;
+    let prompt: Vec<u32> = (1..30).collect();
+
+    let mut cache = tgt.new_cache(1);
+    bench("exe/prefill(p64)", 20, || {
+        let mut c2 = tgt.new_cache(1);
+        tgt.prefill(&prompt, &mut c2).unwrap();
+        std::mem::swap(&mut cache, &mut c2);
+    });
+    let m = prompt.len();
+    bench("exe/decode(1)", 30, || {
+        tgt.decode(&mut cache, &[m as i32], &[5]).unwrap();
+    });
+    let (tokens, pos, bias) = tree.verify_inputs(c.tree_t, m, tgt.max_len);
+    let zero_idx = vec![0i32; c.accept_a];
+    bench("exe/verify_t32 (fused commit)", 30, || {
+        tgt.verify(c.tree_t, &mut cache, &[m as i32], &zero_idx, &[0], &tokens, &pos, &bias, c.accept_a)
+            .unwrap();
+    });
+    let mut dcache = draft.new_cache(1);
+    let feats = vec![0.1f32; 8 * tgt.d];
+    let toks = vec![3i32; 8];
+    let dpos: Vec<i32> = (0..8).map(|i| (m + i) as i32).collect();
+    let dbias = eagle_serve::spec::tree::chain_extend_bias(8, tgt.max_len, m, 8);
+    bench("exe/draft.step_w8", 30, || {
+        draft.step(8, &mut dcache, &[m as i32], &feats, &toks, &dpos, &dbias).unwrap();
+    });
+    let feats4 = vec![0.1f32; 4 * tgt.d];
+    let toks4 = vec![3i32; 4];
+    let dpos4: Vec<i32> = (0..4).map(|i| (m + i) as i32).collect();
+    let dbias4 = eagle_serve::spec::tree::chain_extend_bias(4, tgt.max_len, m, 4);
+    bench("exe/draft.step_w4", 30, || {
+        draft.step(4, &mut dcache, &[m as i32], &feats4, &toks4, &dpos4, &dbias4).unwrap();
+    });
+}

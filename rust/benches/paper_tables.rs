@@ -1,0 +1,41 @@
+//! Bench harness — one target per paper table/figure (criterion is not in
+//! the offline crate set; this is a hand-rolled harness=false bench that
+//! reuses the exact eval code path at reduced scale and prints
+//! median-of-repeats timings plus the table itself).
+//!
+//!   cargo bench                 # all tables, reduced n
+//!   cargo bench -- fig1 tab7    # a subset
+//!
+//! Full-scale tables: `repro eval --all` (see Makefile `eval`).
+
+use eagle_serve::eval::tables::EvalCtx;
+use eagle_serve::models::artifacts_dir;
+
+fn main() {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("paper_tables bench skipped: run `make artifacts` first");
+        return;
+    }
+    let filter: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let ctx = EvalCtx::new(&artifacts_dir(), 4, 24).expect("eval ctx");
+    let mut failures = 0;
+    for id in EvalCtx::ALL {
+        if !filter.is_empty() && !filter.iter().any(|f| f == id) {
+            continue;
+        }
+        let t0 = std::time::Instant::now();
+        match ctx.run(id) {
+            Ok(table) => {
+                let dt = t0.elapsed().as_secs_f64();
+                println!("== bench {id}: {dt:.2}s ==\n{table}");
+            }
+            Err(e) => {
+                failures += 1;
+                eprintln!("== bench {id} FAILED: {e:#}");
+            }
+        }
+    }
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,15 @@
+//! Baseline decoders (S14): vanilla auto-regression, classic two-model
+//! speculative sampling (token-level draft LM), Medusa-style independent
+//! heads, and a Lookahead-style n-gram drafter. All share the target
+//! wrapper and the verification machinery, so comparisons isolate the
+//! *drafting* strategy — the paper's Figure 1/2 axis.
+
+pub mod chain_spec;
+pub mod lookahead;
+pub mod medusa_engine;
+pub mod vanilla;
+
+pub use chain_spec::ClassicSpecEngine;
+pub use lookahead::LookaheadEngine;
+pub use medusa_engine::MedusaEngine;
+pub use vanilla::VanillaEngine;

@@ -1,0 +1,59 @@
+//! Vanilla auto-regressive decoding: one target forward per token. The
+//! reference everything else's speedup ratio is measured against, and the
+//! oracle for the T=0 losslessness integration test.
+
+use anyhow::Result;
+use std::time::Instant;
+
+use crate::metrics::GenRecord;
+use crate::models::TargetModel;
+use crate::spec::engine::GenConfig;
+use crate::spec::sampling::{argmax, sample, softmax};
+use crate::util::rng::Rng;
+
+pub struct VanillaEngine<'a> {
+    pub target: &'a TargetModel,
+}
+
+impl<'a> VanillaEngine<'a> {
+    pub fn new(target: &'a TargetModel) -> Self {
+        VanillaEngine { target }
+    }
+
+    pub fn generate(&self, prompt: &[u32], cfg: &GenConfig) -> Result<GenRecord> {
+        let t_all = Instant::now();
+        let mut rec = GenRecord::new(prompt.len());
+        let mut rng = Rng::new(cfg.seed);
+        let tgt = self.target;
+        let vocab = tgt.vocab;
+
+        let mut cache = tgt.new_cache(1);
+        let t0 = Instant::now();
+        let (out, plen) = tgt.prefill(prompt, &mut cache)?;
+        rec.timeline.prefill_ns += t0.elapsed().as_nanos() as u64;
+        rec.target_passes += 1;
+        let mut logits = tgt.row(&out.logits, tgt.prefill_p, 0, plen - 1, vocab).to_vec();
+        let mut pos = plen;
+
+        while rec.tokens.len() < cfg.max_new && pos + 1 < tgt.max_len {
+            let tok = if cfg.temperature <= 0.0 {
+                argmax(&logits) as u32
+            } else {
+                sample(&softmax(&logits, cfg.temperature), &mut rng) as u32
+            };
+            rec.tokens.push(tok);
+            if cfg.eos == Some(tok) || rec.tokens.len() >= cfg.max_new {
+                break;
+            }
+            let t0 = Instant::now();
+            let out = tgt.decode(&mut cache, &[pos as i32], &[tok as i32])?;
+            rec.timeline.verify_ns += t0.elapsed().as_nanos() as u64;
+            rec.target_passes += 1;
+            rec.round_accepts.push(1);
+            logits = out.logits;
+            pos += 1;
+        }
+        rec.wall_ns = t_all.elapsed().as_nanos() as u64;
+        Ok(rec)
+    }
+}

@@ -1,0 +1,408 @@
+//! Batched EAGLE engine (S15, Table 7): B sequences draft and verify in
+//! lock-step on bs>1 executables. Lanes advance at their own acceptance
+//! rate; finished lanes stay in the batch with `n_accept = 0` (their
+//! cache stops changing) until every lane completes — the paper's
+//! synchronous-batch setting. Also provides batched *vanilla* decoding as
+//! the throughput baseline.
+//!
+//! Per-lane prefill reuses the bs=1 draft prefill and splices the lane's
+//! rows into the batched draft cache host-side (caches are host vectors
+//! between calls, so the splice is a memcpy — no extra executable).
+
+use anyhow::Result;
+use std::time::Instant;
+
+use crate::metrics::GenRecord;
+use crate::models::target::KvCache;
+use crate::models::{EagleDraft, TargetModel};
+use crate::spec::engine::GenConfig;
+use crate::spec::sampling::{argmax, sample, softmax, top_k};
+use crate::spec::tree::{chain_extend_bias, draft_step_bias, DraftTree, TreeSpec};
+use crate::util::rng::Rng;
+
+pub struct BatchEagleEngine<'a> {
+    pub target: &'a TargetModel,
+    pub draft: &'a EagleDraft,
+    pub tree_spec: TreeSpec,
+    pub verify_t: usize,
+    pub accept_a: usize,
+    pub draft_w: usize,
+}
+
+struct Lane {
+    committed: Vec<u32>,
+    m: usize,
+    root_feat: Vec<f32>,
+    root_logits: Vec<f32>,
+    done: bool,
+    rec: GenRecord,
+}
+
+impl<'a> BatchEagleEngine<'a> {
+    pub fn new(target: &'a TargetModel, draft: &'a EagleDraft, c: &crate::runtime::manifest::Constants) -> Self {
+        BatchEagleEngine {
+            target,
+            draft,
+            tree_spec: TreeSpec::tree_default(),
+            verify_t: c.tree_t,
+            accept_a: c.accept_a,
+            draft_w: c.draft_w,
+        }
+    }
+
+    /// Generate for B prompts in lock-step (greedy, T=0 — the Table-7
+    /// setting). Returns one record per lane.
+    pub fn generate(&self, prompts: &[Vec<u32>], cfg: &GenConfig) -> Result<Vec<GenRecord>> {
+        assert!(cfg.temperature <= 0.0, "batched engine is greedy (Table 7 setting)");
+        let b = prompts.len();
+        assert!(b >= 2, "use EagleEngine for bs=1");
+        let t_all = Instant::now();
+        let tgt = self.target;
+        let d = tgt.d;
+        let vocab = tgt.vocab;
+        let s_tot = tgt.max_len;
+        let p_win = tgt.prefill_p;
+        let w = self.draft_w;
+
+        // ---- per-lane prefill into the batched caches -----------------------
+        let mut cache = tgt.new_cache(b);
+        let mut dcache_b = self.draft.new_cache(b);
+        let mut lanes: Vec<Lane> = Vec::with_capacity(b);
+        for (li, prompt) in prompts.iter().enumerate() {
+            let mut rec = GenRecord::new(prompt.len());
+            let t0 = Instant::now();
+            let (out, plen) = tgt.prefill_slot(b, &mut cache, li, prompt)?;
+            rec.timeline.prefill_ns += t0.elapsed().as_nanos() as u64;
+            rec.target_passes += 1;
+            let root_tok = argmax(tgt.row(&out.logits, p_win, 0, plen - 1, vocab)) as u32;
+            let mut committed = prompt.clone();
+            committed.push(root_tok);
+            rec.tokens.push(root_tok);
+
+            // draft prefill (bs=1) then splice into the batched draft cache
+            let mut dcache1 = self.draft.new_cache(1);
+            let mut dtoks = vec![0i32; p_win];
+            for i in 0..plen {
+                dtoks[i] = committed[i + 1] as i32;
+            }
+            let mut dfeats = vec![0f32; p_win * d];
+            dfeats[..plen * d].copy_from_slice(&out.feats[..plen * d]);
+            let t0 = Instant::now();
+            let dout = self.draft.prefill(&dfeats, &dtoks, plen, &mut dcache1)?;
+            rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64;
+            rec.draft_passes += 1;
+            // splice lane rows: draft cache layout [2, B, S, H, dh]
+            let lane_sz = s_tot * self.draft.n_heads * self.draft.head_dim;
+            for kv in 0..2 {
+                let src = &dcache1.data[kv * lane_sz..(kv + 1) * lane_sz];
+                let dst_off = (kv * b + li) * lane_sz;
+                dcache_b.data[dst_off..dst_off + lane_sz].copy_from_slice(src);
+            }
+            lanes.push(Lane {
+                committed,
+                m: plen,
+                root_feat: dout.feats,
+                root_logits: dout.logits,
+                done: false,
+                rec,
+            });
+        }
+
+        // ---- lock-step rounds ------------------------------------------------
+        let spec = &self.tree_spec;
+        let mut pending_old = vec![0i32; b];
+        for (li, l) in lanes.iter().enumerate() {
+            pending_old[li] = l.m as i32;
+        }
+        let mut pending_idx = vec![0i32; b * self.accept_a];
+        let mut pending_n = vec![0i32; b];
+        while lanes.iter().any(|l| !l.done) {
+            // 1. grow per-lane trees with batched draft steps
+            let mut trees: Vec<DraftTree> = lanes
+                .iter()
+                .map(|l| DraftTree::with_root(l.committed[l.m]))
+                .collect();
+            let mut node_feat: Vec<Vec<Vec<f32>>> = lanes.iter().map(|l| vec![l.root_feat.clone()]).collect();
+            let mut node_logits: Vec<Vec<Vec<f32>>> = lanes.iter().map(|l| vec![l.root_logits.clone()]).collect();
+            let mut node_slot: Vec<Vec<Option<usize>>> = vec![vec![None]; b];
+            let mut scratch_used = vec![0usize; b];
+            let mut frontier: Vec<Vec<usize>> = vec![vec![0]; b];
+
+            for (lvl, &width) in spec.level_widths.iter().enumerate() {
+                // select per-lane candidates (greedy top-k by cum score)
+                let mut new_nodes: Vec<Vec<usize>> = vec![Vec::new(); b];
+                for li in 0..b {
+                    if lanes[li].done {
+                        continue;
+                    }
+                    let mut cands: Vec<(usize, u32, f32)> = Vec::new();
+                    for &p in &frontier[li] {
+                        let probs = softmax(&node_logits[li][p], 1.0);
+                        for (tok, pr) in top_k(&probs, spec.branch) {
+                            cands.push((p, tok as u32, trees[li].nodes[p].score + pr.max(1e-20).ln()));
+                        }
+                    }
+                    cands.sort_by(|a, c| c.2.partial_cmp(&a.2).unwrap());
+                    cands.truncate(width);
+                    for (p, tok, score) in cands {
+                        let ni = trees[li].add(p, tok, score, None);
+                        node_feat[li].push(Vec::new());
+                        node_logits[li].push(Vec::new());
+                        node_slot[li].push(None);
+                        new_nodes[li].push(ni);
+                        lanes[li].rec.drafted += 1;
+                    }
+                }
+                if lvl + 1 == spec.level_widths.len() {
+                    break;
+                }
+                // batched draft step (level width <= W by construction)
+                let mut sf = vec![0f32; b * w * d];
+                let mut st = vec![0i32; b * w];
+                let mut sp = vec![0i32; b * w];
+                let mut bias = vec![0f32; b * w * s_tot];
+                let mut wb = vec![0i32; b];
+                for li in 0..b {
+                    let base = lanes[li].m + scratch_used[li];
+                    wb[li] = base as i32;
+                    let mut anc: Vec<Vec<usize>> = Vec::new();
+                    for (r, &ni) in new_nodes[li].iter().enumerate() {
+                        let parent = trees[li].nodes[ni].parent.unwrap();
+                        sf[(li * w + r) * d..(li * w + r + 1) * d].copy_from_slice(&node_feat[li][parent]);
+                        st[li * w + r] = trees[li].nodes[ni].token as i32;
+                        sp[li * w + r] = (lanes[li].m + trees[li].nodes[ni].depth - 1) as i32;
+                        node_slot[li][ni] = Some(base + r);
+                        let mut a = Vec::new();
+                        let mut cur = Some(parent);
+                        while let Some(c) = cur {
+                            if let Some(s) = node_slot[li][c] {
+                                a.push(s);
+                            }
+                            cur = trees[li].nodes[c].parent;
+                        }
+                        anc.push(a);
+                    }
+                    for r in new_nodes[li].len()..w {
+                        sp[li * w + r] = lanes[li].m as i32;
+                    }
+                    let lane_bias = draft_step_bias(w, s_tot, lanes[li].m, base, &anc);
+                    bias[li * w * s_tot..(li + 1) * w * s_tot].copy_from_slice(&lane_bias);
+                }
+                let t0 = Instant::now();
+                let sout = self.draft.step(w, &mut dcache_b, &wb, &sf, &st, &sp, &bias)?;
+                for l in lanes.iter_mut().filter(|l| !l.done) {
+                    l.rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64 / b as u64;
+                    l.rec.draft_passes += 1;
+                }
+                for li in 0..b {
+                    scratch_used[li] += w;
+                    for (r, &ni) in new_nodes[li].iter().enumerate() {
+                        node_feat[li][ni] = sout.feats[(li * w + r) * d..(li * w + r + 1) * d].to_vec();
+                        node_logits[li][ni] = sout.logits[(li * w + r) * vocab..(li * w + r + 1) * vocab].to_vec();
+                    }
+                    frontier[li] = new_nodes[li].clone();
+                }
+            }
+
+            // 2. batched verify
+            let t = self.verify_t;
+            let mut tokens = vec![0i32; b * t];
+            let mut pos = vec![0i32; b * t];
+            let mut bias = vec![0f32; b * t * s_tot];
+            let mut lens = vec![0i32; b];
+            for li in 0..b {
+                lens[li] = lanes[li].m as i32;
+                let (tk, ps, bs) = trees[li].verify_inputs(t, lanes[li].m, s_tot);
+                tokens[li * t..(li + 1) * t].copy_from_slice(&tk);
+                pos[li * t..(li + 1) * t].copy_from_slice(&ps);
+                bias[li * t * s_tot..(li + 1) * t * s_tot].copy_from_slice(&bs);
+            }
+            let t0 = Instant::now();
+            let vout = tgt.verify(
+                t, &mut cache, &pending_old, &pending_idx, &pending_n,
+                &tokens, &pos, &bias, self.accept_a,
+            )?;
+            let ver_ns = t0.elapsed().as_nanos() as u64;
+            for l in lanes.iter_mut().filter(|l| !l.done) {
+                l.rec.timeline.verify_ns += ver_ns / b as u64;
+                l.rec.target_passes += 1;
+            }
+
+            // 3. per-lane acceptance (committed inside the NEXT verify)
+            pending_idx = vec![0i32; b * self.accept_a];
+            pending_n = vec![0i32; b];
+            for li in 0..b {
+                pending_old[li] = lanes[li].m as i32;
+            }
+            let accept_idx = &mut pending_idx;
+            let n_accept = &mut pending_n;
+            let mut paths: Vec<Vec<usize>> = Vec::with_capacity(b);
+            let mut bonuses = vec![0u32; b];
+            for li in 0..b {
+                if lanes[li].done {
+                    paths.push(vec![]);
+                    continue;
+                }
+                let path = trees[li].greedy_walk(|i| {
+                    argmax(tgt.row(&vout.logits, t, li, i, vocab))
+                });
+                let deepest = *path.last().unwrap();
+                bonuses[li] = argmax(tgt.row(&vout.logits, t, li, deepest, vocab)) as u32;
+                for (j, &ni) in path.iter().enumerate() {
+                    accept_idx[li * self.accept_a + j] = ni as i32;
+                }
+                n_accept[li] = path.len() as i32;
+                paths.push(path);
+            }
+            let com_ns = 0u64;
+
+            // 4. bookkeeping + batched draft extend
+            let mut ef = vec![0f32; b * w * d];
+            let mut et = vec![0i32; b * w];
+            let mut ep = vec![0i32; b * w];
+            let mut ebias = vec![0f32; b * w * s_tot];
+            let mut wb = vec![0i32; b];
+            for li in 0..b {
+                wb[li] = lanes[li].m as i32;
+                if lanes[li].done {
+                    // harmless self-attending rows
+                    let lb = chain_extend_bias(w, s_tot, lanes[li].m, 1);
+                    ebias[li * w * s_tot..(li + 1) * w * s_tot].copy_from_slice(&lb);
+                    for r in 0..w {
+                        ep[li * w + r] = (lanes[li].m + r) as i32;
+                    }
+                    continue;
+                }
+                lanes[li].rec.timeline.commit_ns += com_ns / b as u64;
+                let path = &paths[li];
+                let n_commit = path.len();
+                let round: Vec<u32> = path[1..]
+                    .iter()
+                    .map(|&ni| trees[li].nodes[ni].token)
+                    .chain(std::iter::once(bonuses[li]))
+                    .collect();
+                lanes[li].rec.round_accepts.push(round.len());
+                for &tok in &round {
+                    lanes[li].committed.push(tok);
+                    lanes[li].rec.tokens.push(tok);
+                    if cfg.eos == Some(tok) || lanes[li].rec.tokens.len() >= cfg.max_new {
+                        lanes[li].done = true;
+                        break;
+                    }
+                }
+                let m_new = lanes[li].m + n_commit;
+                if m_new + self.verify_t + 1 >= s_tot {
+                    lanes[li].done = true;
+                }
+                if lanes[li].done {
+                    // lane just finished: fill harmless extend rows (eos may
+                    // have cut `committed` short of slot_pos+1 pairs). `m` is
+                    // deliberately frozen at its last valid value so later
+                    // rounds keep building in-bounds (root-only) inputs.
+                    let lb = chain_extend_bias(w, s_tot, lanes[li].m, 1);
+                    ebias[li * w * s_tot..(li + 1) * w * s_tot].copy_from_slice(&lb);
+                    for r in 0..w {
+                        ep[li * w + r] = (lanes[li].m + r) as i32;
+                    }
+                    continue;
+                }
+                for (r, &ni) in path.iter().enumerate() {
+                    let f = tgt.row(&vout.feats, t, li, ni, d);
+                    ef[(li * w + r) * d..(li * w + r + 1) * d].copy_from_slice(f);
+                    let slot_pos = lanes[li].m + r;
+                    et[li * w + r] = lanes[li].committed[slot_pos + 1] as i32;
+                    ep[li * w + r] = slot_pos as i32;
+                }
+                for r in n_commit..w {
+                    ep[li * w + r] = (lanes[li].m + r) as i32;
+                }
+                let lb = chain_extend_bias(w, s_tot, lanes[li].m, n_commit);
+                ebias[li * w * s_tot..(li + 1) * w * s_tot].copy_from_slice(&lb);
+                lanes[li].m = m_new;
+            }
+            if lanes.iter().all(|l| l.done) {
+                break;
+            }
+            let t0 = Instant::now();
+            let eout = self.draft.step(w, &mut dcache_b, &wb, &ef, &et, &ep, &ebias)?;
+            let ext_ns = t0.elapsed().as_nanos() as u64;
+            for li in 0..b {
+                if lanes[li].done {
+                    continue;
+                }
+                lanes[li].rec.timeline.draft_ns += ext_ns / b as u64;
+                lanes[li].rec.draft_passes += 1;
+                let last = paths[li].len() - 1;
+                lanes[li].root_feat = eout.feats[(li * w + last) * d..(li * w + last + 1) * d].to_vec();
+                lanes[li].root_logits =
+                    eout.logits[(li * w + last) * vocab..(li * w + last + 1) * vocab].to_vec();
+            }
+        }
+
+        let wall = t_all.elapsed().as_nanos() as u64;
+        Ok(lanes
+            .into_iter()
+            .map(|mut l| {
+                l.rec.wall_ns = wall;
+                l.rec
+            })
+            .collect())
+    }
+
+    /// Batched vanilla decoding — the Table-7 throughput baseline.
+    pub fn vanilla_batch(&self, prompts: &[Vec<u32>], cfg: &GenConfig) -> Result<Vec<GenRecord>> {
+        let b = prompts.len();
+        let tgt = self.target;
+        let vocab = tgt.vocab;
+        let t_all = Instant::now();
+        let mut cache: KvCache = tgt.new_cache(b);
+        let mut recs: Vec<GenRecord> = prompts.iter().map(|p| GenRecord::new(p.len())).collect();
+        let mut lens = vec![0i32; b];
+        let mut toks = vec![0i32; b];
+        let mut done = vec![false; b];
+        let mut rng = Rng::new(cfg.seed);
+        for (li, p) in prompts.iter().enumerate() {
+            let (out, plen) = tgt.prefill_slot(b, &mut cache, li, p)?;
+            recs[li].target_passes += 1;
+            let logits = tgt.row(&out.logits, tgt.prefill_p, 0, plen - 1, vocab);
+            let tok = if cfg.temperature <= 0.0 {
+                argmax(logits) as u32
+            } else {
+                sample(&softmax(logits, cfg.temperature), &mut rng) as u32
+            };
+            recs[li].tokens.push(tok);
+            toks[li] = tok as i32;
+            lens[li] = plen as i32;
+        }
+        while !done.iter().all(|&d| d) {
+            let out = tgt.decode(&mut cache, &lens, &toks)?;
+            for li in 0..b {
+                if done[li] {
+                    continue;
+                }
+                recs[li].target_passes += 1;
+                recs[li].round_accepts.push(1);
+                lens[li] += 1;
+                let logits = &out.logits[li * vocab..(li + 1) * vocab];
+                let tok = if cfg.temperature <= 0.0 {
+                    argmax(logits) as u32
+                } else {
+                    sample(&softmax(logits, cfg.temperature), &mut rng) as u32
+                };
+                recs[li].tokens.push(tok);
+                toks[li] = tok as i32;
+                if cfg.eos == Some(tok)
+                    || recs[li].tokens.len() >= cfg.max_new
+                    || (lens[li] as usize) + 2 >= tgt.max_len
+                {
+                    done[li] = true;
+                }
+            }
+        }
+        let wall = t_all.elapsed().as_nanos() as u64;
+        for r in &mut recs {
+            r.wall_ns = wall;
+        }
+        Ok(recs)
+    }
+}

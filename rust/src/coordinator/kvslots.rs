@@ -1,0 +1,68 @@
+//! KV-slot allocator (S15): fixed-capacity sequence slots over the batched
+//! cache, with allocation/free invariants property-tested in
+//! `rust/tests/prop_coordinator.rs` (the vLLM "block manager" scaled to
+//! this testbed's whole-sequence slots).
+
+#[derive(Debug)]
+pub struct SlotAllocator {
+    free: Vec<usize>,
+    in_use: Vec<bool>,
+}
+
+impl SlotAllocator {
+    pub fn new(capacity: usize) -> SlotAllocator {
+        SlotAllocator { free: (0..capacity).rev().collect(), in_use: vec![false; capacity] }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.in_use.len()
+    }
+
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn alloc(&mut self) -> Option<usize> {
+        let s = self.free.pop()?;
+        debug_assert!(!self.in_use[s]);
+        self.in_use[s] = true;
+        Some(s)
+    }
+
+    pub fn release(&mut self, slot: usize) {
+        assert!(slot < self.in_use.len(), "slot {slot} out of range");
+        assert!(self.in_use[slot], "double free of slot {slot}");
+        self.in_use[slot] = false;
+        self.free.push(slot);
+    }
+
+    pub fn is_allocated(&self, slot: usize) -> bool {
+        self.in_use.get(slot).copied().unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_until_exhausted() {
+        let mut a = SlotAllocator::new(3);
+        let s: Vec<_> = (0..3).map(|_| a.alloc().unwrap()).collect();
+        assert_eq!(a.alloc(), None);
+        let mut sorted = s.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2]);
+        a.release(s[1]);
+        assert_eq!(a.alloc(), Some(s[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut a = SlotAllocator::new(2);
+        let s = a.alloc().unwrap();
+        a.release(s);
+        a.release(s);
+    }
+}

@@ -1,0 +1,19 @@
+//! Serving coordinator (S15): request types, thread-safe queue, KV-slot
+//! allocator, scheduler, and the batched EAGLE engine (Table 7).
+//!
+//! The HTTP server (S16) feeds [`RequestQueue`]; a worker drains it via
+//! the [`Scheduler`] admission policy. Latency-path requests run on the
+//! bs=1 engines (the paper's primary setting); the batched engine
+//! demonstrates the throughput regime offline and in `examples/`.
+
+pub mod batch_engine;
+pub mod kvslots;
+pub mod queue;
+pub mod request;
+pub mod scheduler;
+
+pub use batch_engine::BatchEagleEngine;
+pub use kvslots::SlotAllocator;
+pub use queue::RequestQueue;
+pub use request::{Method, Request, Response};
+pub use scheduler::Scheduler;

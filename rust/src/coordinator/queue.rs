@@ -1,0 +1,138 @@
+//! Thread-safe bounded request queue with condvar wakeups and
+//! backpressure (reject-on-full), feeding the scheduler.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use super::request::Request;
+
+pub struct RequestQueue {
+    inner: Mutex<Inner>,
+    notify: Condvar,
+    pub capacity: usize,
+}
+
+struct Inner {
+    q: VecDeque<Request>,
+    closed: bool,
+}
+
+#[derive(Debug, PartialEq)]
+pub enum PushError {
+    Full,
+    Closed,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize) -> RequestQueue {
+        RequestQueue {
+            inner: Mutex::new(Inner { q: VecDeque::new(), closed: false }),
+            notify: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Non-blocking push; `Full` signals backpressure to the server (429).
+    pub fn push(&self, r: Request) -> Result<(), PushError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed);
+        }
+        if g.q.len() >= self.capacity {
+            return Err(PushError::Full);
+        }
+        g.q.push_back(r);
+        self.notify.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; returns None once closed and drained.
+    pub fn pop(&self) -> Option<Request> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(r) = g.q.pop_front() {
+                return Some(r);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.notify.wait(g).unwrap();
+        }
+    }
+
+    /// Pop up to `n` requests without blocking (batch formation).
+    pub fn pop_up_to(&self, n: usize) -> Vec<Request> {
+        let mut g = self.inner.lock().unwrap();
+        let take = n.min(g.q.len());
+        g.q.drain(..take).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.notify.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Method;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            prompt: String::new(),
+            max_tokens: 1,
+            temperature: 0.0,
+            method: Method::Vanilla,
+            seed: 0,
+            arrival: std::time::Instant::now(),
+        }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let q = RequestQueue::new(10);
+        q.push(req(1)).unwrap();
+        q.push(req(2)).unwrap();
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.pop().unwrap().id, 2);
+    }
+
+    #[test]
+    fn backpressure_full() {
+        let q = RequestQueue::new(1);
+        q.push(req(1)).unwrap();
+        assert_eq!(q.push(req(2)), Err(PushError::Full));
+    }
+
+    #[test]
+    fn close_unblocks_pop() {
+        let q = Arc::new(RequestQueue::new(4));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_none());
+        assert_eq!(q.push(req(3)), Err(PushError::Closed));
+    }
+
+    #[test]
+    fn pop_up_to_batches() {
+        let q = RequestQueue::new(10);
+        for i in 0..5 {
+            q.push(req(i)).unwrap();
+        }
+        let b = q.pop_up_to(3);
+        assert_eq!(b.len(), 3);
+        assert_eq!(q.len(), 2);
+    }
+}

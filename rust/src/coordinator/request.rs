@@ -1,0 +1,127 @@
+//! Request/response types for the serving API.
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Eagle,
+    EagleChain,
+    Vanilla,
+    Medusa,
+    Lookahead,
+    ClassicSpec,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s {
+            "eagle" | "eagle-tree" => Method::Eagle,
+            "eagle-chain" => Method::EagleChain,
+            "vanilla" => Method::Vanilla,
+            "medusa" => Method::Medusa,
+            "lookahead" => Method::Lookahead,
+            "classic" | "spec" | "classic-spec" => Method::ClassicSpec,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Eagle => "eagle",
+            Method::EagleChain => "eagle-chain",
+            Method::Vanilla => "vanilla",
+            Method::Medusa => "medusa",
+            Method::Lookahead => "lookahead",
+            Method::ClassicSpec => "classic-spec",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    pub max_tokens: usize,
+    pub temperature: f32,
+    pub method: Method,
+    pub seed: u64,
+    pub arrival: std::time::Instant,
+}
+
+impl Request {
+    pub fn from_json(id: u64, v: &Json) -> anyhow::Result<Request> {
+        let prompt = v
+            .req("prompt")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("prompt must be a string"))?
+            .to_string();
+        Ok(Request {
+            id,
+            prompt,
+            max_tokens: v.get("max_tokens").and_then(|x| x.as_usize()).unwrap_or(64),
+            temperature: v.get("temperature").and_then(|x| x.as_f64()).unwrap_or(0.0) as f32,
+            method: v
+                .get("method")
+                .and_then(|m| m.as_str())
+                .and_then(Method::parse)
+                .unwrap_or(Method::Eagle),
+            seed: v.get("seed").and_then(|x| x.as_f64()).map(|f| f as u64).unwrap_or(7),
+            arrival: std::time::Instant::now(),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub text: String,
+    pub tokens: usize,
+    pub target_passes: usize,
+    pub tau: f64,
+    pub latency_ms: f64,
+    pub queue_ms: f64,
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("text", Json::Str(self.text.clone())),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("target_passes", Json::Num(self.target_passes as f64)),
+            ("tau", Json::Num(self.tau)),
+            ("latency_ms", Json::Num(self.latency_ms)),
+            ("queue_ms", Json::Num(self.queue_ms)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_defaults() {
+        let v = Json::parse(r#"{"prompt":"hi"}"#).unwrap();
+        let r = Request::from_json(1, &v).unwrap();
+        assert_eq!(r.max_tokens, 64);
+        assert_eq!(r.method, Method::Eagle);
+        assert_eq!(r.temperature, 0.0);
+    }
+
+    #[test]
+    fn parse_request_full() {
+        let v = Json::parse(r#"{"prompt":"x","max_tokens":8,"temperature":1.0,"method":"vanilla"}"#).unwrap();
+        let r = Request::from_json(2, &v).unwrap();
+        assert_eq!(r.max_tokens, 8);
+        assert_eq!(r.method, Method::Vanilla);
+    }
+
+    #[test]
+    fn method_roundtrip() {
+        for m in ["eagle", "vanilla", "medusa", "lookahead", "classic-spec", "eagle-chain"] {
+            assert_eq!(Method::parse(m).unwrap().name(), m);
+        }
+        assert!(Method::parse("nope").is_none());
+    }
+}

@@ -1,0 +1,106 @@
+//! Admission scheduler: forms work batches from the queue with a simple
+//! deadline policy (take what's there, wait up to `linger` for more when
+//! batching is enabled), and tracks serving statistics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use super::queue::RequestQueue;
+use super::request::Request;
+
+pub struct Scheduler {
+    pub max_batch: usize,
+    pub linger: Duration,
+    pub served: AtomicU64,
+    pub queued_ns: AtomicU64,
+}
+
+impl Scheduler {
+    pub fn new(max_batch: usize, linger_ms: u64) -> Scheduler {
+        Scheduler {
+            max_batch,
+            linger: Duration::from_millis(linger_ms),
+            served: AtomicU64::new(0),
+            queued_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Block for the next batch (FCFS). Returns empty Vec when the queue
+    /// is closed.
+    pub fn next_batch(&self, q: &RequestQueue) -> Vec<Request> {
+        let first = match q.pop() {
+            Some(r) => r,
+            None => return Vec::new(),
+        };
+        let mut batch = vec![first];
+        if self.max_batch > 1 {
+            let deadline = Instant::now() + self.linger;
+            while batch.len() < self.max_batch {
+                let more = q.pop_up_to(self.max_batch - batch.len());
+                if !more.is_empty() {
+                    batch.extend(more);
+                    continue;
+                }
+                if Instant::now() >= deadline {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        for r in &batch {
+            self.queued_ns
+                .fetch_add(r.arrival.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        self.served.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        batch
+    }
+
+    pub fn mean_queue_ms(&self) -> f64 {
+        let n = self.served.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.queued_ns.load(Ordering::Relaxed) as f64 / n as f64 / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Method;
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            prompt: String::new(),
+            max_tokens: 1,
+            temperature: 0.0,
+            method: Method::Vanilla,
+            seed: 0,
+            arrival: std::time::Instant::now(),
+        }
+    }
+
+    #[test]
+    fn batches_up_to_max() {
+        let q = RequestQueue::new(16);
+        for i in 0..5 {
+            q.push(req(i)).unwrap();
+        }
+        let s = Scheduler::new(4, 0);
+        let b = s.next_batch(&q);
+        assert_eq!(b.len(), 4);
+        assert_eq!(b[0].id, 0);
+        let b2 = s.next_batch(&q);
+        assert_eq!(b2.len(), 1);
+        assert_eq!(s.served.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn closed_queue_yields_empty() {
+        let q = RequestQueue::new(4);
+        q.close();
+        let s = Scheduler::new(2, 0);
+        assert!(s.next_batch(&q).is_empty());
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation harness (S18): workloads, the experiment runner, and the
+//! paper-table generators (DESIGN.md §4 experiment index).
+
+pub mod runner;
+pub mod tables;
+pub mod workload;
+
+pub use runner::{speedup, RunSpec, Runner};
+pub use tables::EvalCtx;
+pub use workload::{Prompt, Workload};

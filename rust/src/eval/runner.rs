@@ -1,0 +1,132 @@
+//! Experiment runner (S18): dispatches (model, method, temperature) over a
+//! prompt set and aggregates metrics. The single entry point behind both
+//! the `repro eval` CLI and the bench harness, so paper tables and
+//! criterion-style benches measure exactly the same code path.
+
+use anyhow::Result;
+use std::rc::Rc;
+
+use super::workload::Prompt;
+use crate::baselines::{ClassicSpecEngine, LookaheadEngine, MedusaEngine, VanillaEngine};
+use crate::coordinator::request::Method;
+use crate::metrics::{Aggregate, GenRecord};
+use crate::models::ModelBundle;
+use crate::runtime::{Manifest, Runtime};
+use crate::spec::engine::{EagleEngine, GenConfig, PairShift};
+
+pub struct Runner {
+    pub rt: Rc<Runtime>,
+    pub man: Manifest,
+}
+
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub method: Method,
+    pub temperature: f32,
+    pub max_new: usize,
+    /// draft head variant for eagle-family methods
+    pub variant: String,
+    pub gamma: usize,
+    pub seed: u64,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        RunSpec {
+            method: Method::Eagle,
+            temperature: 0.0,
+            max_new: 48,
+            variant: "eagle".into(),
+            gamma: 5,
+            seed: 7,
+        }
+    }
+}
+
+impl Runner {
+    pub fn new(artifacts: &std::path::Path) -> Result<Runner> {
+        let rt = Runtime::cpu()?;
+        let man = Manifest::load(artifacts)?;
+        Ok(Runner { rt, man })
+    }
+
+    /// Run `spec` over `prompts` with a pre-loaded bundle.
+    pub fn run_with(
+        &self,
+        bundle: &ModelBundle,
+        prompts: &[&Prompt],
+        spec: &RunSpec,
+    ) -> Result<Aggregate> {
+        let mut agg = Aggregate::new();
+        let cfg = GenConfig {
+            max_new: spec.max_new,
+            temperature: spec.temperature,
+            seed: spec.seed,
+            eos: None,
+        };
+        for (i, p) in prompts.iter().enumerate() {
+            let cfg = GenConfig { seed: spec.seed + i as u64, ..cfg.clone() };
+            let rec = self.run_one(bundle, &p.ids, spec, &cfg)?;
+            agg.add(&rec);
+        }
+        Ok(agg)
+    }
+
+    pub fn run_one(
+        &self,
+        bundle: &ModelBundle,
+        prompt: &[u32],
+        spec: &RunSpec,
+        cfg: &GenConfig,
+    ) -> Result<GenRecord> {
+        let c = &self.man.constants;
+        match spec.method {
+            Method::Vanilla => VanillaEngine::new(&bundle.target).generate(prompt, cfg),
+            Method::Eagle => {
+                let draft = bundle
+                    .drafts
+                    .get(&spec.variant)
+                    .ok_or_else(|| anyhow::anyhow!("draft variant '{}' not loaded", spec.variant))?;
+                EagleEngine::new_tree(&bundle.target, draft, c).generate(prompt, cfg)
+            }
+            Method::EagleChain => {
+                let draft = bundle
+                    .drafts
+                    .get(&spec.variant)
+                    .ok_or_else(|| anyhow::anyhow!("draft variant '{}' not loaded", spec.variant))?;
+                let shift = if spec.variant == "eagle" || spec.variant == "eagle_gen" {
+                    PairShift::Shifted
+                } else {
+                    PairShift::Unshifted
+                };
+                EagleEngine::new_chain(&bundle.target, draft, c, spec.gamma, shift).generate(prompt, cfg)
+            }
+            Method::Medusa => {
+                let heads = bundle
+                    .medusa
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("medusa heads not loaded for {}", bundle.name))?;
+                MedusaEngine::new(&bundle.target, heads, c).generate(prompt, cfg)
+            }
+            Method::Lookahead => LookaheadEngine::new(&bundle.target, c).generate(prompt, cfg),
+            Method::ClassicSpec => {
+                let tdlm = bundle
+                    .tdlm
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("token draft LM not loaded for {}", bundle.name))?;
+                ClassicSpecEngine::new(&bundle.target, tdlm, c, spec.gamma).generate(prompt, cfg)
+            }
+        }
+    }
+}
+
+/// Speedup of `a` vs baseline `b` on identical prompt sets (walltime per
+/// generated token, the paper's metric).
+pub fn speedup(a: &Aggregate, baseline: &Aggregate) -> f64 {
+    let a_tps = a.tokens_per_sec();
+    let b_tps = baseline.tokens_per_sec();
+    if b_tps <= 0.0 {
+        return 0.0;
+    }
+    a_tps / b_tps
+}

@@ -1,0 +1,361 @@
+//! Paper-table regeneration (S18): one function per experiment id in
+//! DESIGN.md §4 (fig1, fig2, fig3, fig5, fig8, fig9+tab5, fig10, tab1,
+//! tab2, tab3, tab4, tab6, tab7). Each writes a markdown table to
+//! `results/<id>.md` and returns it.
+
+use anyhow::Result;
+use std::fmt::Write as _;
+
+use super::runner::{speedup, RunSpec, Runner};
+use super::workload::Workload;
+use crate::coordinator::request::Method;
+use crate::coordinator::BatchEagleEngine;
+use crate::metrics::Aggregate;
+use crate::models::ModelBundle;
+use crate::spec::engine::GenConfig;
+use crate::text::bpe::Bpe;
+
+pub struct EvalCtx {
+    pub runner: Runner,
+    pub bpe: Bpe,
+    pub n_prompts: usize,
+    pub max_new: usize,
+}
+
+impl EvalCtx {
+    pub fn new(artifacts: &std::path::Path, n_prompts: usize, max_new: usize) -> Result<EvalCtx> {
+        let runner = Runner::new(artifacts)?;
+        let bpe = Bpe::load(
+            runner.man.path(&runner.man.tokenizer).to_str().unwrap(),
+        )?;
+        Ok(EvalCtx { runner, bpe, n_prompts, max_new })
+    }
+
+    fn workload(&self, name: &str) -> Result<Workload> {
+        Workload::load(&self.runner.man, &self.bpe, name, self.runner.man.constants.prefill_p)
+    }
+
+    fn spec(&self, method: Method, t: f32) -> RunSpec {
+        RunSpec { method, temperature: t, max_new: self.max_new, ..Default::default() }
+    }
+
+    fn fmt_alpha(a: &Aggregate) -> String {
+        a.alphas()
+            .iter()
+            .map(|x| x.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
+
+    // ---------------------------------------------------------------------
+    // fig1: greedy speedups, EAGLE vs Medusa vs Lookahead vs vanilla
+    // ---------------------------------------------------------------------
+    pub fn fig1(&self) -> Result<String> {
+        let wl = self.workload("mtbench")?;
+        let prompts = wl.take(self.n_prompts);
+        let mut out = String::from(
+            "# fig1 — Speedup on MT-bench analog, greedy (T=0)\n\n| model | method | speedup | tau | tokens/s |\n|---|---|---|---|---|\n",
+        );
+        for model in ["toy-s", "toy-m"] {
+            let bundle = ModelBundle::load(
+                &self.runner.rt, &self.runner.man, model, &["eagle"], model == "toy-s", model == "toy-s",
+            )?;
+            let base = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Vanilla, 0.0))?;
+            let mut methods: Vec<(&str, Method)> = vec![("eagle", Method::Eagle)];
+            if model == "toy-s" {
+                methods.push(("medusa", Method::Medusa));
+                methods.push(("lookahead", Method::Lookahead));
+            }
+            writeln!(out, "| {model} | vanilla | 1.00x | {:.2} | {:.1} |", base.tau(), base.tokens_per_sec())?;
+            for (name, m) in methods {
+                let agg = self.runner.run_with(&bundle, &prompts, &self.spec(m, 0.0))?;
+                writeln!(
+                    out,
+                    "| {model} | {name} | {:.2}x | {:.2} | {:.1} |",
+                    speedup(&agg, &base),
+                    agg.tau(),
+                    agg.tokens_per_sec()
+                )?;
+            }
+        }
+        Ok(out)
+    }
+
+    // ---------------------------------------------------------------------
+    // fig2: non-greedy (T=1) speedups, EAGLE vs classic spec vs vanilla
+    // ---------------------------------------------------------------------
+    pub fn fig2(&self) -> Result<String> {
+        let wl = self.workload("mtbench")?;
+        let prompts = wl.take(self.n_prompts);
+        let mut out = String::from(
+            "# fig2 — Speedup on MT-bench analog, sampling (T=1)\n\n| model | method | speedup | tau |\n|---|---|---|---|\n",
+        );
+        for model in ["toy-s", "toy-m"] {
+            let bundle = ModelBundle::load(
+                &self.runner.rt, &self.runner.man, model, &["eagle"], false, model == "toy-s",
+            )?;
+            let base = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Vanilla, 1.0))?;
+            writeln!(out, "| {model} | vanilla | 1.00x | {:.2} |", base.tau())?;
+            let eagle = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Eagle, 1.0))?;
+            writeln!(out, "| {model} | eagle | {:.2}x | {:.2} |", speedup(&eagle, &base), eagle.tau())?;
+            if model == "toy-s" {
+                let cs = self.runner.run_with(&bundle, &prompts, &self.spec(Method::ClassicSpec, 1.0))?;
+                writeln!(out, "| {model} | classic-spec | {:.2}x | {:.2} |", speedup(&cs, &base), cs.tau())?;
+            }
+        }
+        Ok(out)
+    }
+
+    // ---------------------------------------------------------------------
+    // fig3/fig5/fig10: draft-input ablations (chain mode, toy-s)
+    // ---------------------------------------------------------------------
+    pub fn fig10(&self) -> Result<String> {
+        let wl = self.workload("mtbench")?;
+        let prompts = wl.take(self.n_prompts);
+        let bundle = ModelBundle::load(
+            &self.runner.rt,
+            &self.runner.man,
+            "toy-s",
+            &["eagle", "unshift", "feat", "tok"],
+            false,
+            false,
+        )?;
+        let mut out = String::from(
+            "# fig10 (also fig3, fig5) — draft-input ablation, chain drafting, toy-s\n\n| input | T | speedup | tau | 0-a | 1-a |\n|---|---|---|---|---|---|\n",
+        );
+        for t in [0.0f32, 1.0] {
+            let base = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Vanilla, t))?;
+            for variant in ["eagle", "unshift", "feat", "tok"] {
+                let mut spec = self.spec(Method::EagleChain, t);
+                spec.variant = variant.into();
+                let agg = self.runner.run_with(&bundle, &prompts, &spec)?;
+                let al = agg.alphas();
+                writeln!(
+                    out,
+                    "| {} | {t} | {:.2}x | {:.2} | {} | {} |",
+                    match variant {
+                        "eagle" => "feature&shifted-token (EAGLE)",
+                        "unshift" => "feature&unshifted-token",
+                        "feat" => "feature",
+                        _ => "token",
+                    },
+                    speedup(&agg, &base),
+                    agg.tau(),
+                    al[0].map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+                    al[1].map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+                )?;
+            }
+        }
+        out.push_str("\nfig3 = token vs feature rows; fig5 = feature vs feature&shifted rows.\n");
+        Ok(out)
+    }
+
+    // ---------------------------------------------------------------------
+    // fig8: speedup per task category
+    // ---------------------------------------------------------------------
+    pub fn fig8(&self) -> Result<String> {
+        let wl = self.workload("mtbench")?;
+        let bundle = ModelBundle::load(&self.runner.rt, &self.runner.man, "toy-s", &["eagle"], false, false)?;
+        let mut out = String::from(
+            "# fig8 — EAGLE speedup by task category (toy-s, T=0)\n\n| category | speedup | tau |\n|---|---|---|\n",
+        );
+        let per_cat = (self.n_prompts / 4).max(2);
+        for cat in wl.categories() {
+            let prompts: Vec<_> = wl.by_category(&cat).into_iter().take(per_cat).collect();
+            if prompts.is_empty() {
+                continue;
+            }
+            let base = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Vanilla, 0.0))?;
+            let agg = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Eagle, 0.0))?;
+            writeln!(out, "| {cat} | {:.2}x | {:.2} |", speedup(&agg, &base), agg.tau())?;
+        }
+        Ok(out)
+    }
+
+    // ---------------------------------------------------------------------
+    // fig9 + tab5: tree vs chain
+    // ---------------------------------------------------------------------
+    pub fn fig9(&self) -> Result<String> {
+        let wl = self.workload("mtbench")?;
+        let prompts = wl.take(self.n_prompts);
+        let mut out = String::from(
+            "# fig9 + tab5 — tree vs chain draft (T=0)\n\n| model | mode | speedup | tau |\n|---|---|---|---|\n",
+        );
+        for model in ["toy-s", "toy-m"] {
+            let bundle = ModelBundle::load(&self.runner.rt, &self.runner.man, model, &["eagle"], false, false)?;
+            let base = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Vanilla, 0.0))?;
+            for (mode, m) in [("chain", Method::EagleChain), ("tree", Method::Eagle)] {
+                let agg = self.runner.run_with(&bundle, &prompts, &self.spec(m, 0.0))?;
+                writeln!(out, "| {model} | {mode} | {:.2}x | {:.2} |", speedup(&agg, &base), agg.tau())?;
+            }
+        }
+        Ok(out)
+    }
+
+    // ---------------------------------------------------------------------
+    // tab1/tab2: tau + n-alpha per model (chain stats for alpha)
+    // ---------------------------------------------------------------------
+    pub fn tab12(&self, workload: &str) -> Result<String> {
+        let wl = self.workload(workload)?;
+        let prompts = wl.take(self.n_prompts);
+        let mut out = format!(
+            "# {} — tau (tree) and n-alpha (chain) per model\n\n| model | T | speedup | tau | 0-a | 1-a | 2-a | 3-a | 4-a |\n|---|---|---|---|---|---|---|---|---|\n",
+            if workload == "gsm8k" { "tab2" } else { "tab1" }
+        );
+        for model in ["toy-s", "toy-m"] {
+            let bundle = ModelBundle::load(&self.runner.rt, &self.runner.man, model, &["eagle"], false, false)?;
+            for t in [0.0f32, 1.0] {
+                let base = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Vanilla, t))?;
+                let tree = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Eagle, t))?;
+                let chain = self.runner.run_with(&bundle, &prompts, &self.spec(Method::EagleChain, t))?;
+                writeln!(
+                    out,
+                    "| {model} | {t} | {:.2}x | {:.2} | {} |",
+                    speedup(&tree, &base),
+                    tree.tau(),
+                    Self::fmt_alpha(&chain)
+                )?;
+            }
+        }
+        Ok(out)
+    }
+
+    // ---------------------------------------------------------------------
+    // tab3: MoE target
+    // ---------------------------------------------------------------------
+    pub fn tab3(&self) -> Result<String> {
+        let wl = self.workload("mtbench")?;
+        let prompts = wl.take(self.n_prompts);
+        let bundle = ModelBundle::load(&self.runner.rt, &self.runner.man, "toy-moe", &["eagle"], false, false)?;
+        let base = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Vanilla, 0.0))?;
+        let tree = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Eagle, 0.0))?;
+        let chain = self.runner.run_with(&bundle, &prompts, &self.spec(Method::EagleChain, 0.0))?;
+        let mut out = String::from(
+            "# tab3 — MoE target (Mixtral analog), MT-bench analog, T=0\n\n| speedup | tau | 0-a | 1-a | 2-a | 3-a | 4-a |\n|---|---|---|---|---|---|---|\n",
+        );
+        writeln!(out, "| {:.2}x | {:.2} | {} |", speedup(&tree, &base), tree.tau(), Self::fmt_alpha(&chain))?;
+        Ok(out)
+    }
+
+    // ---------------------------------------------------------------------
+    // tab4: quantization composition (gpt-fast analog)
+    // ---------------------------------------------------------------------
+    pub fn tab4(&self) -> Result<String> {
+        let wl = self.workload("mtbench")?;
+        let prompts = wl.take(self.n_prompts.min(8));
+        let mut out = String::from(
+            "# tab4 — EAGLE composes with weight quantization (gpt-fast analog)\n\n| precision | method | tokens/s | weights MB |\n|---|---|---|---|\n",
+        );
+        for model in ["toy-s", "toy-s-int8"] {
+            let bundle = ModelBundle::load(&self.runner.rt, &self.runner.man, model, &["eagle"], false, false)?;
+            let mb = bundle.target.exes.params.total_bytes as f64 / 1e6;
+            let base = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Vanilla, 0.0))?;
+            let eagle = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Eagle, 0.0))?;
+            let prec = if model.ends_with("int8") { "int8" } else { "fp32" };
+            writeln!(out, "| {prec} | vanilla | {:.1} | {mb:.1} |", base.tokens_per_sec())?;
+            writeln!(out, "| {prec} | eagle | {:.1} | {mb:.1} |", eagle.tokens_per_sec())?;
+        }
+        out.push_str("\nNote: on this CPU-f32 substrate int8 shows the composition + memory\nreduction, not a wallclock win (dequant-in-graph); see DESIGN.md.\n");
+        Ok(out)
+    }
+
+    // ---------------------------------------------------------------------
+    // tab6: training-data ablation (fixed vs target-generated)
+    // ---------------------------------------------------------------------
+    pub fn tab6(&self) -> Result<String> {
+        let wl = self.workload("mtbench")?;
+        let prompts = wl.take(self.n_prompts);
+        let bundle = ModelBundle::load(
+            &self.runner.rt, &self.runner.man, "toy-s", &["eagle", "eagle_gen"], false, false,
+        )?;
+        let base = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Vanilla, 0.0))?;
+        let mut out = String::from(
+            "# tab6 — training data ablation (toy-s, T=0)\n\n| training data | speedup | tau |\n|---|---|---|\n",
+        );
+        for (label, variant) in [("fixed dataset", "eagle"), ("generated by target LLM", "eagle_gen")] {
+            let mut spec = self.spec(Method::Eagle, 0.0);
+            spec.variant = variant.into();
+            let agg = self.runner.run_with(&bundle, &prompts, &spec)?;
+            writeln!(out, "| {label} | {:.2}x | {:.2} |", speedup(&agg, &base), agg.tau())?;
+        }
+        Ok(out)
+    }
+
+    // ---------------------------------------------------------------------
+    // tab7: batch-size sweep + throughput
+    // ---------------------------------------------------------------------
+    pub fn tab7(&self) -> Result<String> {
+        let wl = self.workload("mtbench")?;
+        let bundle = ModelBundle::load(&self.runner.rt, &self.runner.man, "toy-s", &["eagle"], false, false)?;
+        let c = &self.runner.man.constants;
+        let cfg = GenConfig { max_new: self.max_new, temperature: 0.0, seed: 7, eos: None };
+        let mut out = String::from(
+            "# tab7 — speedup vs batch size + throughput (toy-s, T=0)\n\n| bs | vanilla tok/s | eagle tok/s | speedup |\n|---|---|---|---|\n",
+        );
+        let mut best_v = 0.0f64;
+        let mut best_e = 0.0f64;
+        // bs=1 via the latency engines
+        let prompts1 = wl.take(self.n_prompts.min(6));
+        let base1 = self.runner.run_with(&bundle, &prompts1, &self.spec(Method::Vanilla, 0.0))?;
+        let eagle1 = self.runner.run_with(&bundle, &prompts1, &self.spec(Method::Eagle, 0.0))?;
+        writeln!(
+            out,
+            "| 1 | {:.1} | {:.1} | {:.2}x |",
+            base1.tokens_per_sec(),
+            eagle1.tokens_per_sec(),
+            speedup(&eagle1, &base1)
+        )?;
+        best_v = best_v.max(base1.tokens_per_sec());
+        best_e = best_e.max(eagle1.tokens_per_sec());
+        for bs in [2usize, 3, 4] {
+            let groups = 2usize;
+            let be = BatchEagleEngine::new(&bundle.target, &bundle.drafts["eagle"], c);
+            let (mut vtok, mut vns, mut etok, mut ens) = (0usize, 0u64, 0usize, 0u64);
+            for g in 0..groups {
+                let prompts: Vec<Vec<u32>> = wl
+                    .prompts
+                    .iter()
+                    .cycle()
+                    .skip(g * bs)
+                    .take(bs)
+                    .map(|p| p.ids.clone())
+                    .collect();
+                let vrecs = be.vanilla_batch(&prompts, &cfg)?;
+                vtok += vrecs.iter().map(|r| r.tokens.len()).sum::<usize>();
+                vns += vrecs[0].wall_ns;
+                let erecs = be.generate(&prompts, &cfg)?;
+                etok += erecs.iter().map(|r| r.tokens.len()).sum::<usize>();
+                ens += erecs[0].wall_ns;
+            }
+            let vtps = vtok as f64 / (vns as f64 / 1e9);
+            let etps = etok as f64 / (ens as f64 / 1e9);
+            writeln!(out, "| {bs} | {vtps:.1} | {etps:.1} | {:.2}x |", etps / vtps)?;
+            best_v = best_v.max(vtps);
+            best_e = best_e.max(etps);
+        }
+        writeln!(out, "\nMax throughput: vanilla {best_v:.1} tok/s, eagle {best_e:.1} tok/s -> {:.2}x", best_e / best_v)?;
+        Ok(out)
+    }
+
+    /// Run one experiment by id.
+    pub fn run(&self, id: &str) -> Result<String> {
+        match id {
+            "fig1" => self.fig1(),
+            "fig2" => self.fig2(),
+            "fig3" | "fig5" | "fig10" => self.fig10(),
+            "fig8" => self.fig8(),
+            "fig9" | "tab5" => self.fig9(),
+            "tab1" => self.tab12("mtbench"),
+            "tab2" => self.tab12("gsm8k"),
+            "tab3" => self.tab3(),
+            "tab4" => self.tab4(),
+            "tab6" => self.tab6(),
+            "tab7" => self.tab7(),
+            _ => Err(anyhow::anyhow!("unknown experiment id '{id}'")),
+        }
+    }
+
+    pub const ALL: [&'static str; 11] = [
+        "fig1", "fig2", "fig8", "fig9", "fig10", "tab1", "tab2", "tab3", "tab4", "tab6", "tab7",
+    ];
+}

@@ -1,0 +1,68 @@
+//! Workload loading (S2-rust): eval prompt sets written by the AOT
+//! pipeline (`artifacts/workloads/*.json`), grouped by task category.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Manifest;
+use crate::text::bpe::Bpe;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Prompt {
+    pub category: String,
+    pub text: String,
+    pub ids: Vec<u32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub prompts: Vec<Prompt>,
+}
+
+impl Workload {
+    pub fn load(man: &Manifest, bpe: &Bpe, name: &str, max_prompt: usize) -> Result<Workload> {
+        let rel = man
+            .workloads
+            .get(name)
+            .ok_or_else(|| anyhow!("workload '{name}' not in manifest"))?;
+        let text = std::fs::read_to_string(man.path(rel))?;
+        let v = Json::parse(&text)?;
+        let mut prompts = Vec::new();
+        for p in v.req("prompts")?.as_arr().ok_or_else(|| anyhow!("prompts"))? {
+            let user = p.req("user")?.as_str().unwrap_or_default().to_string();
+            let ids = bpe.encode_prompt(&user);
+            if ids.len() > max_prompt {
+                continue; // keep within the prefill window
+            }
+            prompts.push(Prompt {
+                category: p
+                    .get("category")
+                    .and_then(|c| c.as_str())
+                    .unwrap_or("unknown")
+                    .to_string(),
+                text: user,
+                ids,
+            });
+        }
+        if prompts.is_empty() {
+            return Err(anyhow!("workload {name}: no prompts fit the prefill window"));
+        }
+        Ok(Workload { name: name.to_string(), prompts })
+    }
+
+    pub fn categories(&self) -> Vec<String> {
+        let mut cats: Vec<String> = self.prompts.iter().map(|p| p.category.clone()).collect();
+        cats.sort();
+        cats.dedup();
+        cats
+    }
+
+    pub fn by_category(&self, cat: &str) -> Vec<&Prompt> {
+        self.prompts.iter().filter(|p| p.category == cat).collect()
+    }
+
+    pub fn take(&self, n: usize) -> Vec<&Prompt> {
+        self.prompts.iter().take(n).collect()
+    }
+}

@@ -1,0 +1,46 @@
+//! # eagle-serve
+//!
+//! A serving framework reproducing **EAGLE: Speculative Sampling Requires
+//! Rethinking Feature Uncertainty** (ICML 2024) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — request router, continuous batcher, KV-slot
+//!   manager, the EAGLE draft-tree engine, SpecInfer-style verification,
+//!   baselines, metrics, HTTP server, CLI and the paper-table harness.
+//! * **L2** — JAX model graphs AOT-lowered to HLO text
+//!   (`python/compile/`), executed via the `xla` crate / PJRT.
+//! * **L1** — the Pallas tree-attention kernel inside those graphs.
+//!
+//! Quickstart (after `make artifacts && cargo build --release`):
+//!
+//! ```no_run
+//! use eagle_serve::prelude::*;
+//! let rt = Runtime::cpu().unwrap();
+//! let man = Manifest::load(&artifacts_dir()).unwrap();
+//! let bundle = ModelBundle::load(&rt, &man, "toy-s", &["eagle"], false, false).unwrap();
+//! let draft = &bundle.drafts["eagle"];
+//! let engine = EagleEngine::new_tree(&bundle.target, draft, &man.constants);
+//! let rec = engine.generate(&[1, 2, 3], &GenConfig::default()).unwrap();
+//! println!("{} tokens in {:.1} ms", rec.tokens.len(), rec.wall_ns as f64 / 1e6);
+//! ```
+
+pub mod baselines;
+pub mod coordinator;
+pub mod eval;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod server;
+pub mod spec;
+pub mod text;
+pub mod util;
+
+pub mod prelude {
+    pub use crate::baselines::{ClassicSpecEngine, LookaheadEngine, MedusaEngine, VanillaEngine};
+    pub use crate::metrics::{Aggregate, GenRecord};
+    pub use crate::models::{artifacts_dir, EagleDraft, MedusaHeads, ModelBundle, TargetModel};
+    pub use crate::runtime::{Manifest, Runtime};
+    pub use crate::spec::engine::{EagleEngine, GenConfig, PairShift};
+    pub use crate::spec::tree::TreeSpec;
+    pub use crate::text::bpe::Bpe;
+}

@@ -1,0 +1,174 @@
+//! `repro` — the eagle-serve CLI.
+//!
+//!   repro serve   [--addr 127.0.0.1:8085] [--model toy-s] [--queue 64]
+//!   repro generate --prompt "..." [--model toy-s] [--method eagle]
+//!                  [--max-tokens 64] [--temperature 0] [--seed 7]
+//!   repro eval    (--all | --exp fig1) [--n 16] [--max-new 48] [--out results]
+//!   repro profile [--model toy-s] [--n 4]   step-phase breakdown (§Perf)
+//!   repro selftest                            losslessness smoke check
+
+use anyhow::Result;
+use eagle_serve::coordinator::request::Method;
+use eagle_serve::eval::tables::EvalCtx;
+use eagle_serve::eval::runner::{Runner, RunSpec};
+use eagle_serve::models::{artifacts_dir, ModelBundle};
+use eagle_serve::spec::engine::GenConfig;
+use eagle_serve::text::bpe::Bpe;
+use eagle_serve::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1), &["all", "verbose"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "serve" => serve(&args),
+        "generate" => generate(&args),
+        "eval" => eval(&args),
+        "profile" => profile(&args),
+        "selftest" => selftest(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "repro — EAGLE speculative-decoding serving framework\n\n\
+         USAGE: repro <serve|generate|eval|profile|selftest> [options]\n\n\
+         serve     --addr HOST:PORT --model NAME --queue N\n\
+         generate  --prompt TEXT --model NAME --method eagle|eagle-chain|vanilla|medusa|lookahead|classic-spec\n\
+         \u{20}          --max-tokens N --temperature F --seed N\n\
+         eval      --all | --exp ID   (--n PROMPTS --max-new N --out DIR)\n\
+         profile   --model NAME --n N\n\
+         selftest  quick losslessness check (eagle == vanilla at T=0)\n\n\
+         Artifacts are read from $EAGLE_ARTIFACTS or ./artifacts (make artifacts)."
+    );
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:8085");
+    let model = args.get_or("model", "toy-s");
+    let queue = args.usize_or("queue", 64);
+    eagle_serve::server::serve(addr, model, &artifacts_dir(), queue)
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let runner = Runner::new(&artifacts_dir())?;
+    let bpe = Bpe::load(runner.man.path(&runner.man.tokenizer).to_str().unwrap())?;
+    let model = args.get_or("model", "toy-s");
+    let method = Method::parse(args.get_or("method", "eagle"))
+        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+    let bundle = ModelBundle::load(&runner.rt, &runner.man, model, &["eagle"], true, true)?;
+    let prompt = args.get_or("prompt", "tom has 12 apples. tom buys 5 more and gives away 3. how many apples remain?");
+    let ids = bpe.encode_prompt(prompt);
+    let spec = RunSpec {
+        method,
+        temperature: args.f32_or("temperature", 0.0),
+        max_new: args.usize_or("max-tokens", 64),
+        seed: args.u64_or("seed", 7),
+        ..Default::default()
+    };
+    let cfg = GenConfig {
+        max_new: spec.max_new,
+        temperature: spec.temperature,
+        seed: spec.seed,
+        eos: Some(bpe.eos()),
+    };
+    let rec = runner.run_one(&bundle, &ids, &spec, &cfg)?;
+    println!("prompt : {prompt}");
+    println!("output : {}", bpe.decode(&rec.tokens));
+    println!(
+        "stats  : {} tokens, {} target passes, tau {:.2}, {:.1} tok/s ({:.1} ms)",
+        rec.tokens.len(),
+        rec.target_passes,
+        rec.tau(),
+        rec.tokens_per_sec(),
+        rec.wall_ns as f64 / 1e6
+    );
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 16);
+    let max_new = args.usize_or("max-new", 48);
+    let out_dir = std::path::PathBuf::from(args.get_or("out", "results"));
+    std::fs::create_dir_all(&out_dir)?;
+    let ctx = EvalCtx::new(&artifacts_dir(), n, max_new)?;
+    let ids: Vec<&str> = if args.has("all") {
+        EvalCtx::ALL.to_vec()
+    } else {
+        vec![args.get("exp").ok_or_else(|| anyhow::anyhow!("--exp ID or --all"))?]
+    };
+    for id in ids {
+        eprintln!("[eval] running {id} ...");
+        let t0 = std::time::Instant::now();
+        let table = ctx.run(id)?;
+        let path = out_dir.join(format!("{id}.md"));
+        std::fs::write(&path, &table)?;
+        println!("{table}");
+        eprintln!("[eval] {id} done in {:.1}s -> {}", t0.elapsed().as_secs_f64(), path.display());
+    }
+    Ok(())
+}
+
+fn profile(args: &Args) -> Result<()> {
+    let runner = Runner::new(&artifacts_dir())?;
+    let bpe = Bpe::load(runner.man.path(&runner.man.tokenizer).to_str().unwrap())?;
+    let model = args.get_or("model", "toy-s");
+    let n = args.usize_or("n", 4);
+    let bundle = ModelBundle::load(&runner.rt, &runner.man, model, &["eagle"], false, false)?;
+    let wl = eagle_serve::eval::Workload::load(&runner.man, &bpe, "mtbench", runner.man.constants.prefill_p)?;
+    let spec = RunSpec::default();
+    let agg = runner.run_with(&bundle, &wl.take(n), &spec)?;
+    let tl = &agg.timeline;
+    let tot = tl.total_ns() as f64;
+    println!("phase breakdown over {n} eagle generations ({} tokens):", agg.tokens);
+    for (name, ns) in [
+        ("prefill", tl.prefill_ns),
+        ("draft", tl.draft_ns),
+        ("verify", tl.verify_ns),
+        ("commit", tl.commit_ns),
+        ("host", tl.host_ns),
+    ] {
+        println!("  {name:8} {:8.1} ms  ({:4.1}%)", ns as f64 / 1e6, ns as f64 / tot * 100.0);
+    }
+    println!("per-executable:");
+    for (name, calls, ms) in bundle.target.exes.profile() {
+        if calls > 0 {
+            println!("  target.{name:14} {calls:5} calls  {ms:8.1} ms  ({:.2} ms/call)", ms / calls as f64);
+        }
+    }
+    for (name, calls, ms) in bundle.drafts["eagle"].exes.profile() {
+        if calls > 0 {
+            println!("  draft.{name:15} {calls:5} calls  {ms:8.1} ms  ({:.2} ms/call)", ms / calls as f64);
+        }
+    }
+    Ok(())
+}
+
+fn selftest(_args: &Args) -> Result<()> {
+    let runner = Runner::new(&artifacts_dir())?;
+    let bpe = Bpe::load(runner.man.path(&runner.man.tokenizer).to_str().unwrap())?;
+    let bundle = ModelBundle::load(&runner.rt, &runner.man, "toy-s", &["eagle"], false, false)?;
+    let wl = eagle_serve::eval::Workload::load(&runner.man, &bpe, "mtbench", runner.man.constants.prefill_p)?;
+    let cfg = GenConfig { max_new: 32, temperature: 0.0, seed: 7, eos: None };
+    let mut ok = 0;
+    for p in wl.take(4) {
+        let van = runner.run_one(&bundle, &p.ids, &RunSpec { method: Method::Vanilla, ..Default::default() }, &cfg)?;
+        let eag = runner.run_one(&bundle, &p.ids, &RunSpec::default(), &cfg)?;
+        if van.tokens == eag.tokens {
+            ok += 1;
+            println!("OK  lossless: {} tokens identical (tau {:.2})", eag.tokens.len(), eag.tau());
+        } else {
+            println!("FAIL mismatch:\n  vanilla {:?}\n  eagle   {:?}", van.tokens, eag.tokens);
+        }
+    }
+    anyhow::ensure!(ok == 4, "losslessness selftest failed");
+    println!("selftest passed");
+    Ok(())
+}

@@ -1,0 +1,180 @@
+//! Metrics (S17): per-generation records, aggregate statistics (walltime
+//! speedup, τ, n-α), latency percentiles, and the step-phase profiler used
+//! by the §Perf pass.
+
+/// Phase timing breakdown for one generation (nanoseconds).
+#[derive(Debug, Default, Clone)]
+pub struct Timeline {
+    pub prefill_ns: u64,
+    pub draft_ns: u64,
+    pub verify_ns: u64,
+    pub commit_ns: u64,
+    pub host_ns: u64, // sampling/mask building/bookkeeping
+}
+
+impl Timeline {
+    pub fn total_ns(&self) -> u64 {
+        self.prefill_ns + self.draft_ns + self.verify_ns + self.commit_ns + self.host_ns
+    }
+}
+
+/// Result of generating one sequence.
+#[derive(Debug, Clone)]
+pub struct GenRecord {
+    pub prompt_len: usize,
+    /// Generated tokens (after the prompt).
+    pub tokens: Vec<u32>,
+    /// Target-model forward passes (prefill counts as one).
+    pub target_passes: usize,
+    /// Draft-model forward passes.
+    pub draft_passes: usize,
+    /// Per-round accepted counts (drafted accepted + bonus), i.e. tokens
+    /// committed per target pass after prefill.
+    pub round_accepts: Vec<usize>,
+    /// n-alpha: [n] -> (accepted, tried) at chain-draft position n+1.
+    pub alpha: Vec<(u64, u64)>,
+    /// Draft tokens proposed in total (chain mode: gamma per round).
+    pub drafted: usize,
+    pub wall_ns: u64,
+    pub timeline: Timeline,
+}
+
+impl GenRecord {
+    pub fn new(prompt_len: usize) -> GenRecord {
+        GenRecord {
+            prompt_len,
+            tokens: Vec::new(),
+            target_passes: 0,
+            draft_passes: 0,
+            round_accepts: Vec::new(),
+            alpha: vec![(0, 0); 5],
+            drafted: 0,
+            wall_ns: 0,
+            timeline: Timeline::default(),
+        }
+    }
+
+    /// Average acceptance length τ: tokens per target forward pass
+    /// (excluding the prefill pass, matching the paper's decode-phase metric).
+    pub fn tau(&self) -> f64 {
+        if self.round_accepts.is_empty() {
+            return 1.0;
+        }
+        self.round_accepts.iter().sum::<usize>() as f64 / self.round_accepts.len() as f64
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens.len() as f64 / (self.wall_ns as f64 / 1e9)
+    }
+}
+
+/// Aggregate over many generations.
+#[derive(Debug, Default, Clone)]
+pub struct Aggregate {
+    pub n: usize,
+    pub tokens: usize,
+    pub wall_ns: u64,
+    pub target_passes: usize,
+    pub draft_passes: usize,
+    pub round_accepts_sum: usize,
+    pub rounds: usize,
+    pub alpha: Vec<(u64, u64)>,
+    pub wall_each: Vec<u64>,
+    pub timeline: Timeline,
+}
+
+impl Aggregate {
+    pub fn new() -> Aggregate {
+        Aggregate { alpha: vec![(0, 0); 5], ..Default::default() }
+    }
+
+    pub fn add(&mut self, r: &GenRecord) {
+        self.n += 1;
+        self.tokens += r.tokens.len();
+        self.wall_ns += r.wall_ns;
+        self.target_passes += r.target_passes;
+        self.draft_passes += r.draft_passes;
+        self.round_accepts_sum += r.round_accepts.iter().sum::<usize>();
+        self.rounds += r.round_accepts.len();
+        for (i, &(a, t)) in r.alpha.iter().enumerate() {
+            self.alpha[i].0 += a;
+            self.alpha[i].1 += t;
+        }
+        self.wall_each.push(r.wall_ns);
+        let tl = &r.timeline;
+        self.timeline.prefill_ns += tl.prefill_ns;
+        self.timeline.draft_ns += tl.draft_ns;
+        self.timeline.verify_ns += tl.verify_ns;
+        self.timeline.commit_ns += tl.commit_ns;
+        self.timeline.host_ns += tl.host_ns;
+    }
+
+    pub fn tau(&self) -> f64 {
+        if self.rounds == 0 {
+            return 1.0;
+        }
+        self.round_accepts_sum as f64 / self.rounds as f64
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 / (self.wall_ns as f64 / 1e9)
+    }
+
+    /// n-alpha acceptance rates, None when that depth was never tried.
+    pub fn alphas(&self) -> Vec<Option<f64>> {
+        self.alpha
+            .iter()
+            .map(|&(a, t)| if t == 0 { None } else { Some(a as f64 / t as f64) })
+            .collect()
+    }
+
+    pub fn latency_percentile(&self, pct: f64) -> f64 {
+        if self.wall_each.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.wall_each.clone();
+        v.sort_unstable();
+        let idx = ((v.len() - 1) as f64 * pct / 100.0).round() as usize;
+        v[idx] as f64 / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tau_counts_tokens_per_pass() {
+        let mut r = GenRecord::new(4);
+        r.round_accepts = vec![3, 4, 2];
+        assert!((r.tau() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aggregate_accumulates() {
+        let mut a = Aggregate::new();
+        let mut r = GenRecord::new(4);
+        r.tokens = vec![1, 2, 3];
+        r.wall_ns = 3_000_000_000;
+        r.round_accepts = vec![3];
+        r.alpha[0] = (2, 3);
+        a.add(&r);
+        a.add(&r);
+        assert_eq!(a.tokens, 6);
+        assert!((a.tokens_per_sec() - 1.0).abs() < 1e-9);
+        assert_eq!(a.alphas()[0], Some(2.0 / 3.0));
+        assert_eq!(a.alphas()[4], None);
+    }
+
+    #[test]
+    fn percentiles_sorted() {
+        let mut a = Aggregate::new();
+        for ns in [1_000_000u64, 2_000_000, 10_000_000] {
+            let mut r = GenRecord::new(1);
+            r.wall_ns = ns;
+            a.add(&r);
+        }
+        assert!((a.latency_percentile(0.0) - 1.0).abs() < 1e-6);
+        assert!((a.latency_percentile(100.0) - 10.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,150 @@
+//! EAGLE Auto-regression-Head wrapper: draft prefill over the committed
+//! prefix + per-tree-level `step` calls. The head reuses the *target's*
+//! `tok_emb`/`lm_head` device buffers (paper Fig. 7: frozen Embedding and
+//! LM Head) — they are appended positionally after the head's own leaves.
+
+use anyhow::Result;
+use std::rc::Rc;
+
+use super::target::KvCache;
+use super::ExeSet;
+use crate::runtime::{lit_f32, manifest::{DraftEntry, ModelEntry}, Manifest, Runtime};
+
+pub struct EagleDraft {
+    pub name: String,
+    pub exes: ExeSet,
+    /// Index of tok_emb / lm_head in the *target* param set.
+    tok_emb_idx: usize,
+    lm_head_idx: usize,
+    target_weights: crate::runtime::ParamSet,
+    pub d: usize,
+    pub vocab: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_len: usize,
+    pub prefill_p: usize,
+    pub accuracy: f64,
+}
+
+pub struct DraftOut {
+    /// Predicted features [B, W, D]
+    pub feats: Vec<f32>,
+    /// Children logits [B, W, V]
+    pub logits: Vec<f32>,
+}
+
+impl EagleDraft {
+    pub fn load(
+        rt: &Rc<Runtime>,
+        man: &Manifest,
+        target_entry: &ModelEntry,
+        entry: &DraftEntry,
+        name: &str,
+    ) -> Result<EagleDraft> {
+        let exes = ExeSet::load(rt, man, &entry.weights, &entry.param_names, &entry.executables, name)?;
+        // the head borrows the target's embedding + LM head buffers; load a
+        // private copy of the target params (cheap: uploaded once)
+        let target_weights = crate::runtime::ParamSet::load(
+            rt,
+            &man.path(&target_entry.weights),
+            &target_entry.param_names,
+        )?;
+        let tok_emb_idx = target_weights.names.iter().position(|n| n == "tok_emb")
+            .ok_or_else(|| anyhow::anyhow!("target has no tok_emb leaf"))?;
+        let lm_head_idx = target_weights.names.iter().position(|n| n == "lm_head")
+            .ok_or_else(|| anyhow::anyhow!("target has no lm_head leaf"))?;
+        let c = &target_entry.config;
+        Ok(EagleDraft {
+            name: name.to_string(),
+            exes,
+            tok_emb_idx,
+            lm_head_idx,
+            target_weights,
+            d: c.d,
+            vocab: c.vocab,
+            n_heads: c.n_heads,
+            head_dim: c.head_dim,
+            max_len: c.max_len,
+            prefill_p: man.constants.prefill_p,
+            accuracy: entry.accuracy,
+        })
+    }
+
+    pub fn new_cache(&self, batch: usize) -> KvCache {
+        // draft cache layout [2, B, S, H, dh] — reuse KvCache with L folded
+        let dims = [2, 1, batch, self.max_len, self.n_heads, self.head_dim];
+        KvCache { data: vec![0.0; dims.iter().product()], dims }
+    }
+
+    fn cache_dims(&self, batch: usize) -> Vec<usize> {
+        vec![2, batch, self.max_len, self.n_heads, self.head_dim]
+    }
+
+    /// Draft prefill over the prompt: teacher features [1,P,D] + tokens
+    /// (already shifted for the eagle variant by the caller). Returns the
+    /// first draft (f̂ at the last valid position, children logits).
+    pub fn prefill(
+        &self,
+        feats: &[f32],
+        tokens: &[i32],
+        len: usize,
+        cache: &mut KvCache,
+    ) -> Result<DraftOut> {
+        let p = self.prefill_p;
+        assert_eq!(tokens.len(), p);
+        assert_eq!(feats.len(), p * self.d);
+        let rt = &self.exes.rt;
+        let f_buf = rt.upload_f32(feats, &[1, p, self.d])?;
+        let t_buf = rt.upload_i32(tokens, &[1, p])?;
+        let l_buf = rt.upload_i32(&[len as i32], &[1])?;
+        let mut args = self.exes.params.refs();
+        args.push(&self.target_weights.bufs[self.tok_emb_idx]);
+        args.push(&self.target_weights.bufs[self.lm_head_idx]);
+        args.push(&f_buf);
+        args.push(&t_buf);
+        args.push(&l_buf);
+        let out = self.exes.exe("prefill")?.run(&args)?;
+        let f_hat = lit_f32(&out[0])?; // [1, D]
+        let logits = lit_f32(&out[1])?; // [1, V]
+        cache.data = lit_f32(&out[2])?;
+        Ok(DraftOut { feats: f_hat, logits })
+    }
+
+    /// One draft level over `w` nodes. K/V rows land at
+    /// [write_base, write_base + w); the caller owns slot bookkeeping.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &self,
+        w: usize,
+        cache: &mut KvCache,
+        write_base: &[i32],
+        feats: &[f32],
+        tokens: &[i32],
+        pos: &[i32],
+        bias: &[f32],
+    ) -> Result<DraftOut> {
+        let b = write_base.len();
+        let exe_name = if b == 1 { format!("step_w{w}") } else { format!("step_w{w}_bs{b}") };
+        let rt = &self.exes.rt;
+        let cache_buf = rt.upload_f32(&cache.data, &self.cache_dims(b))?;
+        let wb_buf = rt.upload_i32(write_base, &[b])?;
+        let f_buf = rt.upload_f32(feats, &[b, w, self.d])?;
+        let t_buf = rt.upload_i32(tokens, &[b, w])?;
+        let p_buf = rt.upload_i32(pos, &[b, w])?;
+        let m_buf = rt.upload_f32(bias, &[b, w, self.max_len])?;
+        let mut args = self.exes.params.refs();
+        args.push(&self.target_weights.bufs[self.tok_emb_idx]);
+        args.push(&self.target_weights.bufs[self.lm_head_idx]);
+        args.push(&cache_buf);
+        args.push(&wb_buf);
+        args.push(&f_buf);
+        args.push(&t_buf);
+        args.push(&p_buf);
+        args.push(&m_buf);
+        let out = self.exes.exe(&exe_name)?.run(&args)?;
+        let f_hat = lit_f32(&out[0])?;
+        let logits = lit_f32(&out[1])?;
+        cache.data = lit_f32(&out[2])?;
+        Ok(DraftOut { feats: f_hat, logits })
+    }
+}

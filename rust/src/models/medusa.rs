@@ -1,0 +1,32 @@
+//! Medusa-heads wrapper (baseline S6/S14): K residual-MLP heads that map
+//! one feature vector to K token distributions at offsets +2..+K+1.
+
+use anyhow::Result;
+use std::rc::Rc;
+
+use super::ExeSet;
+use crate::runtime::{lit_f32, manifest::DraftEntry, Manifest, Runtime};
+
+pub struct MedusaHeads {
+    pub exes: ExeSet,
+    pub k: usize,
+    pub d: usize,
+    pub vocab: usize,
+}
+
+impl MedusaHeads {
+    pub fn load(rt: &Rc<Runtime>, man: &Manifest, entry: &DraftEntry, name: &str) -> Result<MedusaHeads> {
+        let exes = ExeSet::load(rt, man, &entry.weights, &entry.param_names, &entry.executables, name)?;
+        Ok(MedusaHeads { exes, k: 4, d: 0, vocab: 0 })
+    }
+
+    /// feat [D] -> logits [K, V].
+    pub fn heads(&self, feat: &[f32]) -> Result<Vec<f32>> {
+        let rt = &self.exes.rt;
+        let f_buf = rt.upload_f32(feat, &[1, feat.len()])?;
+        let mut args = self.exes.params.refs();
+        args.push(&f_buf);
+        let out = self.exes.exe("heads")?.run(&args)?;
+        lit_f32(&out[0])
+    }
+}

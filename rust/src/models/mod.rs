@@ -1,0 +1,130 @@
+//! Typed model wrappers (S10) over AOT executables.
+//!
+//! Calling convention (see `python/compile/aot.py`):
+//!   target exe: [param leaves] + call inputs
+//!   draft  exe: [draft leaves] + [tok_emb, lm_head] + call inputs
+//!
+//! KV caches live as host `Vec<f32>` between calls (executables return the
+//! updated cache; outputs arrive as host literals anyway — see
+//! `runtime/mod.rs`) and are re-uploaded per call. All methods pay the
+//! same cost, so paper speedup *ratios* are preserved; absolute overhead
+//! is tracked by the step profiler and discussed in EXPERIMENTS.md §Perf.
+
+pub mod eagle;
+pub mod medusa;
+pub mod target;
+
+pub use eagle::EagleDraft;
+pub use medusa::MedusaHeads;
+pub use target::TargetModel;
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use crate::runtime::{manifest::ModelEntry, Exe, Manifest, ParamSet, Runtime};
+
+/// Additive-mask "minus infinity" (matches python model.NEG).
+pub const NEG: f32 = -1e30;
+
+/// Loads + caches compiled executables for one weights/manifest entry.
+pub struct ExeSet {
+    pub rt: Rc<Runtime>,
+    pub params: ParamSet,
+    exes: BTreeMap<String, Exe>,
+}
+
+impl ExeSet {
+    pub fn load(
+        rt: &Rc<Runtime>,
+        man: &Manifest,
+        weights_rel: &str,
+        param_names: &[String],
+        exes: &BTreeMap<String, crate::runtime::manifest::ExeEntry>,
+        prefix: &str,
+    ) -> Result<ExeSet> {
+        let params = ParamSet::load(rt, &man.path(weights_rel), param_names)?;
+        let mut out = BTreeMap::new();
+        for (name, entry) in exes {
+            let exe = Exe::load(rt, &format!("{prefix}.{name}"), &man.path(&entry.hlo))?;
+            out.insert(name.clone(), exe);
+        }
+        Ok(ExeSet { rt: rt.clone(), params, exes: out })
+    }
+
+    pub fn exe(&self, name: &str) -> Result<&Exe> {
+        self.exes
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("executable '{name}' not loaded (have {:?})", self.exes.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// (calls, total_ms) per executable — profiler hook.
+    pub fn profile(&self) -> Vec<(String, u64, f64)> {
+        self.exes
+            .iter()
+            .map(|(n, e)| (n.clone(), e.calls.get(), e.nanos.get() as f64 / 1e6))
+            .collect()
+    }
+}
+
+/// Convenience: load an entire model family (target + drafts + medusa +
+/// tdlm) from the manifest.
+pub struct ModelBundle {
+    pub name: String,
+    pub target: TargetModel,
+    pub drafts: BTreeMap<String, EagleDraft>,
+    pub medusa: Option<MedusaHeads>,
+    pub tdlm: Option<TargetModel>,
+}
+
+impl ModelBundle {
+    pub fn load(
+        rt: &Rc<Runtime>,
+        man: &Manifest,
+        model_name: &str,
+        draft_names: &[&str],
+        with_medusa: bool,
+        with_tdlm: bool,
+    ) -> Result<ModelBundle> {
+        let entry: &ModelEntry = man.model(model_name)?;
+        let target = TargetModel::load(rt, man, model_name, entry)?;
+        let mut drafts = BTreeMap::new();
+        for dn in draft_names {
+            if let Some(de) = entry.drafts.get(*dn) {
+                drafts.insert(
+                    dn.to_string(),
+                    EagleDraft::load(rt, man, entry, de, &format!("{model_name}.{dn}"))?,
+                );
+            }
+        }
+        let medusa = if with_medusa {
+            match &entry.medusa {
+                Some(me) => Some(MedusaHeads::load(rt, man, me, &format!("{model_name}.medusa"))?),
+                None => None,
+            }
+        } else {
+            None
+        };
+        let tdlm = if with_tdlm {
+            match &entry.tdlm {
+                Some(te) => Some(TargetModel::load(rt, man, &format!("{model_name}.tdlm"), te)?),
+                None => None,
+            }
+        } else {
+            None
+        };
+        Ok(ModelBundle { name: model_name.to_string(), target, drafts, medusa, tdlm })
+    }
+}
+
+/// Locate the artifacts directory: $EAGLE_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("EAGLE_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| Path::new("artifacts").to_path_buf())
+}

@@ -1,0 +1,206 @@
+//! Target-model wrapper: prefill / decode / tree-verify / commit, plus
+//! batched (bs>1) variants. Owns nothing mutable — KV caches are passed
+//! by the caller (`KvCache`), keeping the wrapper shareable across
+//! sequences (vLLM-style separation of model and sequence state).
+
+use anyhow::{bail, Result};
+use std::rc::Rc;
+
+use super::{ExeSet, NEG};
+use crate::runtime::{lit_f32, manifest::ModelEntry, Manifest, Runtime};
+
+/// Host-side KV cache for one (batched) sequence group.
+/// Layout mirrors the artifact: [2, L, B, S, H, dh].
+pub struct KvCache {
+    pub data: Vec<f32>,
+    pub dims: [usize; 6],
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, batch: usize, max_len: usize, n_heads: usize, head_dim: usize) -> KvCache {
+        let dims = [2, n_layers, batch, max_len, n_heads, head_dim];
+        KvCache { data: vec![0.0; dims.iter().product()], dims }
+    }
+    pub fn dims_usize(&self) -> Vec<usize> {
+        self.dims.to_vec()
+    }
+}
+
+/// Result of a forward over T positions.
+pub struct ForwardOut {
+    /// [B, T, V]
+    pub logits: Vec<f32>,
+    /// [B, T, D]
+    pub feats: Vec<f32>,
+}
+
+pub struct TargetModel {
+    pub name: String,
+    pub exes: ExeSet,
+    pub vocab: usize,
+    pub d: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_len: usize,
+    pub prefill_p: usize,
+    pub is_moe: bool,
+}
+
+impl TargetModel {
+    pub fn load(rt: &Rc<Runtime>, man: &Manifest, name: &str, entry: &ModelEntry) -> Result<TargetModel> {
+        let exes = ExeSet::load(rt, man, &entry.weights, &entry.param_names, &entry.executables, name)?;
+        let c = &entry.config;
+        Ok(TargetModel {
+            name: name.to_string(),
+            exes,
+            vocab: c.vocab,
+            d: c.d,
+            n_layers: c.n_layers,
+            n_heads: c.n_heads,
+            head_dim: c.head_dim,
+            max_len: c.max_len,
+            prefill_p: man.constants.prefill_p,
+            is_moe: c.n_experts > 0,
+        })
+    }
+
+    pub fn new_cache(&self, batch: usize) -> KvCache {
+        KvCache::new(self.n_layers, batch, self.max_len, self.n_heads, self.head_dim)
+    }
+
+    /// Prefill (bs=1): pad/truncate `prompt` to P; returns logits/feats for
+    /// all P positions and fills `cache`. Returns the used prompt length.
+    pub fn prefill(&self, prompt: &[u32], cache: &mut KvCache) -> Result<(ForwardOut, usize)> {
+        let p = self.prefill_p;
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if prompt.len() > p {
+            bail!("prompt length {} exceeds prefill window {p}", prompt.len());
+        }
+        let len = prompt.len();
+        let mut toks = vec![0i32; p];
+        for (i, &t) in prompt.iter().enumerate() {
+            toks[i] = t as i32;
+        }
+        let rt = &self.exes.rt;
+        let tok_buf = rt.upload_i32(&toks, &[1, p])?;
+        let len_buf = rt.upload_i32(&[len as i32], &[1])?;
+        let mut args = self.exes.params.refs();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        let out = self.exes.exe("prefill")?.run(&args)?;
+        let logits = lit_f32(&out[0])?;
+        let feats = lit_f32(&out[1])?;
+        cache.data = lit_f32(&out[2])?;
+        Ok((ForwardOut { logits, feats }, len))
+    }
+
+    /// Single-token decode (bs=1 or batched): `tokens` is one id per lane.
+    pub fn decode(&self, cache: &mut KvCache, cache_lens: &[i32], tokens: &[i32]) -> Result<ForwardOut> {
+        let b = cache_lens.len();
+        let exe_name = if b == 1 { "decode".to_string() } else { format!("decode_bs{b}") };
+        let rt = &self.exes.rt;
+        let cache_buf = rt.upload_f32(&cache.data, &cache.dims_usize())?;
+        let len_buf = rt.upload_i32(cache_lens, &[b])?;
+        let tok_buf = rt.upload_i32(tokens, &[b, 1])?;
+        let mut args = self.exes.params.refs();
+        args.push(&cache_buf);
+        args.push(&len_buf);
+        args.push(&tok_buf);
+        let out = self.exes.exe(&exe_name)?.run(&args)?;
+        let logits = lit_f32(&out[0])?;
+        let feats = lit_f32(&out[1])?;
+        cache.data = lit_f32(&out[2])?;
+        Ok(ForwardOut { logits, feats })
+    }
+
+    /// Fused commit+verify over `t` tree nodes (§Perf iteration 1): the
+    /// PREVIOUS round's acceptance (`prev_idx`/`prev_n`, vs boundary
+    /// `old_lens`) is compacted in-graph, then the new tree (built against
+    /// `old_lens + prev_n`) is processed. `bias` is the additive mask
+    /// [B, t, S] built by the tree module.
+    #[allow(clippy::too_many_arguments)]
+    pub fn verify(
+        &self,
+        t: usize,
+        cache: &mut KvCache,
+        old_lens: &[i32],
+        prev_idx: &[i32],
+        prev_n: &[i32],
+        tokens: &[i32],
+        pos: &[i32],
+        bias: &[f32],
+        accept_a: usize,
+    ) -> Result<ForwardOut> {
+        let b = old_lens.len();
+        let exe_name = if b == 1 { format!("verify_t{t}") } else { format!("verify_t{t}_bs{b}") };
+        let rt = &self.exes.rt;
+        let cache_buf = rt.upload_f32(&cache.data, &cache.dims_usize())?;
+        let len_buf = rt.upload_i32(old_lens, &[b])?;
+        let pidx_buf = rt.upload_i32(prev_idx, &[b, accept_a])?;
+        let pn_buf = rt.upload_i32(prev_n, &[b])?;
+        let tok_buf = rt.upload_i32(tokens, &[b, t])?;
+        let pos_buf = rt.upload_i32(pos, &[b, t])?;
+        let bias_buf = rt.upload_f32(bias, &[b, t, self.max_len])?;
+        let mut args = self.exes.params.refs();
+        args.push(&cache_buf);
+        args.push(&len_buf);
+        args.push(&pidx_buf);
+        args.push(&pn_buf);
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+        args.push(&bias_buf);
+        let out = self.exes.exe(&exe_name)?.run(&args)?;
+        let logits = lit_f32(&out[0])?;
+        let feats = lit_f32(&out[1])?;
+        cache.data = lit_f32(&out[2])?;
+        Ok(ForwardOut { logits, feats })
+    }
+
+    /// Batched prefill into one slot of a batch cache (bs>1 engines).
+    pub fn prefill_slot(
+        &self,
+        batch: usize,
+        cache: &mut KvCache,
+        slot: usize,
+        prompt: &[u32],
+    ) -> Result<(ForwardOut, usize)> {
+        let p = self.prefill_p;
+        if prompt.len() > p {
+            bail!("prompt too long");
+        }
+        let len = prompt.len();
+        let mut toks = vec![0i32; p];
+        for (i, &t) in prompt.iter().enumerate() {
+            toks[i] = t as i32;
+        }
+        let rt = &self.exes.rt;
+        let cache_buf = rt.upload_f32(&cache.data, &cache.dims_usize())?;
+        let slot_buf = rt.upload_i32(&[slot as i32], &[])?;
+        let tok_buf = rt.upload_i32(&toks, &[1, p])?;
+        let len_buf = rt.upload_i32(&[len as i32], &[1])?;
+        let mut args = self.exes.params.refs();
+        args.push(&cache_buf);
+        args.push(&slot_buf);
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        let out = self.exes.exe(&format!("prefill_slot_bs{batch}"))?.run(&args)?;
+        let logits = lit_f32(&out[0])?;
+        let feats = lit_f32(&out[1])?;
+        cache.data = lit_f32(&out[2])?;
+        Ok((ForwardOut { logits, feats }, len))
+    }
+
+    /// Slice [b, t, :] out of a [B, T, V]-flattened vector.
+    pub fn row<'a>(&self, flat: &'a [f32], nt: usize, b: usize, t: usize, width: usize) -> &'a [f32] {
+        let off = (b * nt + t) * width;
+        &flat[off..off + width]
+    }
+}
+
+/// Build a single-row causal decode bias (testing/diagnostics helper).
+pub fn causal_bias_row(cache_len: usize, s: usize) -> Vec<f32> {
+    (0..s).map(|j| if j <= cache_len { 0.0 } else { NEG }).collect()
+}

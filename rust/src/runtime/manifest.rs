@@ -1,0 +1,216 @@
+//! `manifest.json` model — the catalog the AOT pipeline writes and the
+//! coordinator loads (the L2/L3 ABI).
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_len: usize,
+    pub n_experts: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExeEntry {
+    pub hlo: String,
+    pub bs: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct DraftEntry {
+    pub weights: String,
+    pub param_names: Vec<String>,
+    pub executables: BTreeMap<String, ExeEntry>,
+    pub accuracy: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub config: ModelConfig,
+    pub weights: String,
+    pub param_names: Vec<String>,
+    pub executables: BTreeMap<String, ExeEntry>,
+    pub drafts: BTreeMap<String, DraftEntry>,
+    pub medusa: Option<DraftEntry>,
+    pub tdlm: Option<Box<ModelEntry>>,
+    pub quantized: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct Constants {
+    pub prefill_p: usize,
+    pub tree_t: usize,
+    pub chain_t: usize,
+    pub accept_a: usize,
+    pub draft_w: usize,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub constants: Constants,
+    pub tokenizer: String,
+    pub workloads: BTreeMap<String, String>,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+fn parse_names(v: &Json) -> Result<Vec<String>> {
+    Ok(v.as_arr()
+        .ok_or_else(|| anyhow!("param_names not array"))?
+        .iter()
+        .map(|s| s.as_str().unwrap_or_default().to_string())
+        .collect())
+}
+
+fn parse_exes(v: &Json) -> Result<BTreeMap<String, ExeEntry>> {
+    let mut out = BTreeMap::new();
+    for (k, e) in v.as_obj().ok_or_else(|| anyhow!("executables not object"))? {
+        out.insert(
+            k.clone(),
+            ExeEntry {
+                hlo: e.req("hlo")?.as_str().unwrap_or_default().to_string(),
+                bs: e.get("bs").and_then(|b| b.as_usize()).unwrap_or(1),
+            },
+        );
+    }
+    Ok(out)
+}
+
+fn parse_config(name: &str, v: &Json) -> Result<ModelConfig> {
+    let g = |k: &str| -> Result<usize> {
+        v.req(k)?.as_usize().ok_or_else(|| anyhow!("config.{k} not a number"))
+    };
+    Ok(ModelConfig {
+        name: name.to_string(),
+        vocab: g("vocab")?,
+        d: g("d")?,
+        n_layers: g("n_layers")?,
+        n_heads: g("n_heads")?,
+        head_dim: g("head_dim")?,
+        max_len: g("max_len")?,
+        n_experts: v.get("n_experts").and_then(|x| x.as_usize()).unwrap_or(0),
+    })
+}
+
+fn parse_draft(v: &Json) -> Result<DraftEntry> {
+    Ok(DraftEntry {
+        weights: v.req("weights")?.as_str().unwrap_or_default().to_string(),
+        param_names: parse_names(v.req("param_names")?)?,
+        executables: parse_exes(v.req("executables")?)?,
+        accuracy: v.get("accuracy").and_then(|a| a.as_f64()).unwrap_or(0.0),
+    })
+}
+
+fn parse_model(name: &str, v: &Json) -> Result<ModelEntry> {
+    let mut drafts = BTreeMap::new();
+    if let Some(ds) = v.get("drafts").and_then(|d| d.as_obj()) {
+        for (k, d) in ds {
+            drafts.insert(k.clone(), parse_draft(d)?);
+        }
+    }
+    let medusa = match v.get("medusa") {
+        Some(m) => Some(parse_draft(m)?),
+        None => None,
+    };
+    let tdlm = match v.get("tdlm") {
+        Some(t) => {
+            let mut entry = parse_model(&format!("{name}-tdlm"), t)?;
+            entry.config = parse_config(&format!("{name}-tdlm"), t.req("config")?)?;
+            Some(Box::new(entry))
+        }
+        None => None,
+    };
+    Ok(ModelEntry {
+        config: parse_config(name, v.req("config")?)?,
+        weights: v.req("weights")?.as_str().unwrap_or_default().to_string(),
+        param_names: parse_names(v.req("param_names")?)?,
+        executables: parse_exes(v.req("executables")?)?,
+        drafts,
+        medusa,
+        tdlm,
+        quantized: v.get("quantized").and_then(|q| q.as_bool()).unwrap_or(false),
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow!("reading manifest in {}: {e} (run `make artifacts`)", dir.display()))?;
+        let v = Json::parse(&text)?;
+        let c = v.req("constants")?;
+        let gc = |k: &str| -> Result<usize> {
+            c.req(k)?.as_usize().ok_or_else(|| anyhow!("constants.{k}"))
+        };
+        let mut models = BTreeMap::new();
+        for (name, m) in v.req("models")?.as_obj().ok_or_else(|| anyhow!("models"))? {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        let mut workloads = BTreeMap::new();
+        if let Some(ws) = v.get("workloads").and_then(|w| w.as_obj()) {
+            for (k, p) in ws {
+                workloads.insert(k.clone(), p.as_str().unwrap_or_default().to_string());
+            }
+        }
+        Ok(Manifest {
+            root: dir.to_path_buf(),
+            constants: Constants {
+                prefill_p: gc("prefill_p")?,
+                tree_t: gc("tree_t")?,
+                chain_t: gc("chain_t")?,
+                accept_a: gc("accept_a")?,
+                draft_w: gc("draft_w")?,
+            },
+            tokenizer: v.req("tokenizer")?.as_str().unwrap_or_default().to_string(),
+            workloads,
+            models,
+        })
+    }
+
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest (have: {:?})", self.models.keys().collect::<Vec<_>>()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("eagle_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"tokenizer":"vocab.json",
+                "constants":{"prefill_p":64,"tree_t":32,"chain_t":8,"accept_a":8,"draft_w":8},
+                "workloads":{"mtbench":"workloads/mtbench.json"},
+                "models":{"m":{"config":{"vocab":10,"d":4,"n_layers":1,"n_heads":1,"head_dim":4,"max_len":16,"ffn":8},
+                  "weights":"w.stensor","param_names":["a"],
+                  "executables":{"decode":{"hlo":"d.hlo.txt","bs":1}},
+                  "drafts":{"eagle":{"weights":"e.stensor","param_names":["fc"],
+                    "executables":{"step_w8":{"hlo":"s.hlo.txt"}},"accuracy":0.5}}}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.constants.tree_t, 32);
+        let me = m.model("m").unwrap();
+        assert_eq!(me.config.d, 4);
+        assert_eq!(me.drafts["eagle"].param_names, vec!["fc"]);
+        assert!(m.model("nope").is_err());
+    }
+}

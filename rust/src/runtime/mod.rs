@@ -1,0 +1,138 @@
+//! L3 runtime (S9): PJRT client wrapper, HLO-text executable loading,
+//! device-resident weights, and host<->device literal plumbing.
+//!
+//! Empirically (see DESIGN.md §Perf): the `xla` crate returns every
+//! executable result as ONE tuple `PjRtBuffer` with no device-side
+//! untuple, so outputs roundtrip through `to_literal_sync` +
+//! `decompose_tuple`. Inputs, however, can stay device-side — parameter
+//! leaves are uploaded once per model at load ([`ParamSet`]) and reused by
+//! every call through `execute_b`, which keeps the per-step host traffic
+//! down to the KV cache + small state tensors.
+
+pub mod manifest;
+pub mod tensorfile;
+
+use anyhow::{anyhow, Context, Result};
+use std::rc::Rc;
+
+pub use manifest::Manifest;
+pub use tensorfile::{Tensor, TensorData};
+
+/// Shared PJRT CPU client.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Rc<Runtime>> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Rc::new(Runtime { client }))
+    }
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn upload_tensor(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        match &t.data {
+            TensorData::F32(v) => self.upload_f32(v, &t.dims),
+            TensorData::I32(v) => self.upload_i32(v, &t.dims),
+        }
+    }
+}
+
+/// A compiled executable loaded from HLO text.
+pub struct Exe {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Wall-clock accounting for the profiler (S17).
+    pub calls: std::cell::Cell<u64>,
+    pub nanos: std::cell::Cell<u64>,
+}
+
+impl Exe {
+    pub fn load(rt: &Runtime, name: &str, hlo_path: &std::path::Path) -> Result<Exe> {
+        let proto = xla::HloModuleProto::from_text_file(hlo_path)
+            .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = rt
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", name))?;
+        Ok(Exe {
+            name: name.to_string(),
+            exe,
+            calls: std::cell::Cell::new(0),
+            nanos: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Execute with device-resident inputs; decompose the tuple output
+    /// into host literals.
+    pub fn run(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let t0 = std::time::Instant::now();
+        let out = self.exe.execute_b(args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        self.calls.set(self.calls.get() + 1);
+        self.nanos
+            .set(self.nanos.get() + t0.elapsed().as_nanos() as u64);
+        Ok(parts)
+    }
+}
+
+/// Read a literal into an f32 vec (converting if needed).
+pub fn lit_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+pub fn lit_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+/// Device-resident parameter leaves in manifest order.
+pub struct ParamSet {
+    pub names: Vec<String>,
+    pub bufs: Vec<xla::PjRtBuffer>,
+    pub total_bytes: usize,
+}
+
+impl ParamSet {
+    pub fn load(rt: &Runtime, path: &std::path::Path, expect_names: &[String]) -> Result<ParamSet> {
+        let tensors = tensorfile::read_stensor(path)?;
+        let names: Vec<String> = tensors.iter().map(|t| t.name.clone()).collect();
+        if names != expect_names {
+            return Err(anyhow!(
+                "weights {} param order mismatch: got {} leaves, expected {}",
+                path.display(),
+                names.len(),
+                expect_names.len()
+            ));
+        }
+        let mut total = 0usize;
+        let mut bufs = Vec::with_capacity(tensors.len());
+        for t in &tensors {
+            total += t.byte_len();
+            bufs.push(rt.upload_tensor(t)?);
+        }
+        Ok(ParamSet { names, bufs, total_bytes: total })
+    }
+
+    pub fn refs(&self) -> Vec<&xla::PjRtBuffer> {
+        self.bufs.iter().collect()
+    }
+
+    /// Find a leaf buffer by name (e.g. `tok_emb`, `lm_head`).
+    pub fn get(&self, name: &str) -> Result<&xla::PjRtBuffer> {
+        let i = self
+            .names
+            .iter()
+            .position(|n| n == name)
+            .ok_or_else(|| anyhow!("param leaf '{name}' not found"))?;
+        Ok(&self.bufs[i])
+    }
+}

@@ -1,0 +1,156 @@
+//! `.stensor` reader — rust side of the weights ABI
+//! (see `python/compile/tensorfile.py` for the format spec).
+
+use anyhow::{anyhow, bail, Result};
+use std::io::Read;
+
+#[derive(Debug, Clone)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn byte_len(&self) -> usize {
+        self.len() * 4
+    }
+    pub fn f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor {} is not f32", self.name)),
+        }
+    }
+}
+
+const MAGIC: &[u8; 8] = b"STNSR1\x00\x00";
+
+pub fn read_stensor(path: &std::path::Path) -> Result<Vec<Tensor>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).map_err(|e| anyhow!("open {}: {e}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: bad stensor magic", path.display());
+    }
+    let count = read_u32(&mut f)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let nlen = read_u32(&mut f)? as usize;
+        let mut name = vec![0u8; nlen];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        let mut dt = [0u8; 1];
+        f.read_exact(&mut dt)?;
+        let ndim = read_u32(&mut f)? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u64(&mut f)? as usize);
+        }
+        let n: usize = dims.iter().product::<usize>().max(1);
+        let mut raw = vec![0u8; n * 4];
+        f.read_exact(&mut raw)?;
+        let data = match dt[0] {
+            0 => TensorData::F32(
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            1 => TensorData::I32(
+                raw.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            d => bail!("{name}: unsupported dtype tag {d}"),
+        };
+        out.push(Tensor { name, dims, data });
+    }
+    Ok(out)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_fixture(path: &std::path::Path) {
+        // one f32 [2,2] + one i32 [3] + one 0-d f32
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&3u32.to_le_bytes()).unwrap();
+        // "w" f32 [2,2]
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(b"w").unwrap();
+        f.write_all(&[0u8]).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&2u64.to_le_bytes()).unwrap();
+        f.write_all(&2u64.to_le_bytes()).unwrap();
+        for x in [1.0f32, 2.0, 3.0, 4.0] {
+            f.write_all(&x.to_le_bytes()).unwrap();
+        }
+        // "i" i32 [3]
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(b"i").unwrap();
+        f.write_all(&[1u8]).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&3u64.to_le_bytes()).unwrap();
+        for x in [7i32, 8, 9] {
+            f.write_all(&x.to_le_bytes()).unwrap();
+        }
+        // "s" scalar f32
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(b"s").unwrap();
+        f.write_all(&[0u8]).unwrap();
+        f.write_all(&0u32.to_le_bytes()).unwrap();
+        f.write_all(&5.5f32.to_le_bytes()).unwrap();
+    }
+
+    #[test]
+    fn reads_fixture() {
+        let p = std::env::temp_dir().join("eagle_test.stensor");
+        write_fixture(&p);
+        let ts = read_stensor(&p).unwrap();
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts[0].name, "w");
+        assert_eq!(ts[0].dims, vec![2, 2]);
+        assert_eq!(ts[0].f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        match &ts[1].data {
+            TensorData::I32(v) => assert_eq!(v, &[7, 8, 9]),
+            _ => panic!("wrong dtype"),
+        }
+        assert_eq!(ts[2].dims.len(), 0);
+        assert_eq!(ts[2].f32().unwrap(), &[5.5]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = std::env::temp_dir().join("eagle_bad.stensor");
+        std::fs::write(&p, b"NOTMAGIC").unwrap();
+        assert!(read_stensor(&p).is_err());
+    }
+}

@@ -1,0 +1,147 @@
+//! Minimal HTTP/1.1 request/response framing over a TcpStream.
+
+use anyhow::{anyhow, bail, Result};
+use std::io::{BufRead, BufReader, Read};
+use std::net::TcpStream;
+
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    pub fn read_from(stream: &mut TcpStream) -> Result<HttpRequest> {
+        stream.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let mut parts = line.split_whitespace();
+        let method = parts.next().ok_or_else(|| anyhow!("empty request line"))?.to_string();
+        let path = parts.next().ok_or_else(|| anyhow!("missing path"))?.to_string();
+        let mut headers = Vec::new();
+        let mut content_len = 0usize;
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h)?;
+            let h = h.trim_end().to_string();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                let k = k.trim().to_ascii_lowercase();
+                let v = v.trim().to_string();
+                if k == "content-length" {
+                    content_len = v.parse().unwrap_or(0);
+                }
+                headers.push((k, v));
+            }
+        }
+        if content_len > 16 * 1024 * 1024 {
+            bail!("body too large");
+        }
+        let mut body = vec![0u8; content_len];
+        reader.read_exact(&mut body)?;
+        Ok(HttpRequest { method, path, headers, body })
+    }
+}
+
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub code: u16,
+    pub reason: &'static str,
+    pub content_type: String,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn ok(content_type: &str, body: Vec<u8>) -> HttpResponse {
+        HttpResponse { code: 200, reason: "OK", content_type: content_type.into(), body }
+    }
+
+    pub fn status(code: u16, msg: &str) -> HttpResponse {
+        let reason = match code {
+            400 => "Bad Request",
+            404 => "Not Found",
+            429 => "Too Many Requests",
+            503 => "Service Unavailable",
+            504 => "Gateway Timeout",
+            _ => "Error",
+        };
+        HttpResponse {
+            code,
+            reason,
+            content_type: "application/json".into(),
+            body: format!("{{\"error\":{}}}", crate::util::json::Json::Str(msg.into())).into_bytes(),
+        }
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = format!(
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+            self.code,
+            self.reason,
+            self.content_type,
+            self.body.len()
+        )
+        .into_bytes();
+        out.extend_from_slice(&self.body);
+        out
+    }
+}
+
+/// Minimal blocking HTTP client for examples/tests (talks to our server).
+pub fn post_json(addr: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    use std::io::Write;
+    let mut s = TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(std::time::Duration::from_secs(300)))?;
+    write!(
+        s,
+        "POST {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    read_response(&mut s)
+}
+
+pub fn get(addr: &str, path: &str) -> Result<(u16, String)> {
+    use std::io::Write;
+    let mut s = TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(std::time::Duration::from_secs(60)))?;
+    write!(s, "GET {path} HTTP/1.1\r\nhost: {addr}\r\nconnection: close\r\n\r\n")?;
+    read_response(&mut s)
+}
+
+fn read_response(s: &mut TcpStream) -> Result<(u16, String)> {
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf)?;
+    let text = String::from_utf8_lossy(&buf);
+    let code: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| anyhow!("bad response"))?;
+    let body = text.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    Ok((code, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_framing() {
+        let r = HttpResponse::ok("text/plain", b"hello".to_vec());
+        let s = String::from_utf8(r.to_bytes()).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("content-length: 5"));
+        assert!(s.ends_with("hello"));
+    }
+
+    #[test]
+    fn error_codes() {
+        assert_eq!(HttpResponse::status(429, "x").reason, "Too Many Requests");
+        assert_eq!(HttpResponse::status(400, "x").code, 400);
+    }
+}

@@ -1,0 +1,225 @@
+//! HTTP serving layer (S16): a hand-rolled HTTP/1.1 server over
+//! `std::net` (tokio/hyper are not in the offline crate set) with a
+//! single inference worker draining the request queue — Python never
+//! touches the request path.
+//!
+//! Endpoints:
+//!   POST /v1/generate   {"prompt", "max_tokens"?, "temperature"?, "method"?}
+//!   GET  /healthz
+//!   GET  /metrics       prometheus-style text
+
+pub mod http;
+
+use anyhow::Result;
+use std::io::Write as _;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::request::{Method, Request, Response};
+use crate::coordinator::{queue::PushError, RequestQueue, Scheduler};
+use crate::eval::runner::{Runner, RunSpec};
+use crate::models::ModelBundle;
+use crate::spec::engine::GenConfig;
+use crate::text::bpe::Bpe;
+use crate::util::json::Json;
+use http::{HttpRequest, HttpResponse};
+
+pub struct ServerStats {
+    pub requests: AtomicU64,
+    pub tokens: AtomicU64,
+    pub errors: AtomicU64,
+    pub rejected: AtomicU64,
+    pub gen_ns: AtomicU64,
+}
+
+/// Run the server (blocking). The inference worker owns the PJRT client
+/// (single accelerator, single worker — CPU testbed); HTTP I/O threads
+/// hand requests over through the bounded queue (backpressure -> 429).
+pub fn serve(addr: &str, model: &str, artifacts: &std::path::Path, queue_cap: usize) -> Result<()> {
+    let queue = Arc::new(RequestQueue::new(queue_cap));
+    let stats = Arc::new(ServerStats {
+        requests: AtomicU64::new(0),
+        tokens: AtomicU64::new(0),
+        errors: AtomicU64::new(0),
+        rejected: AtomicU64::new(0),
+        gen_ns: AtomicU64::new(0),
+    });
+    // response slots keyed by request id
+    type Slot = Arc<(Mutex<Option<Response>>, std::sync::Condvar)>;
+    let pending: Arc<Mutex<std::collections::HashMap<u64, Slot>>> =
+        Arc::new(Mutex::new(std::collections::HashMap::new()));
+
+    // ---- inference worker --------------------------------------------------
+    {
+        let queue = queue.clone();
+        let pending = pending.clone();
+        let stats = stats.clone();
+        let artifacts = artifacts.to_path_buf();
+        let model = model.to_string();
+        std::thread::Builder::new().name("inference".into()).spawn(move || {
+            let runner = Runner::new(&artifacts).expect("loading artifacts");
+            let bpe = Bpe::load(runner.man.path(&runner.man.tokenizer).to_str().unwrap())
+                .expect("loading vocab");
+            let bundle = ModelBundle::load(
+                &runner.rt, &runner.man, &model, &["eagle"], true, true,
+            )
+            .expect("loading model bundle");
+            eprintln!("[server] model '{model}' loaded; serving");
+            let sched = Scheduler::new(1, 0);
+            loop {
+                let batch = sched.next_batch(&queue);
+                if batch.is_empty() {
+                    break; // queue closed
+                }
+                for req in batch {
+                    let t0 = std::time::Instant::now();
+                    let ids = bpe.encode_prompt(&req.prompt);
+                    let spec = RunSpec {
+                        method: req.method,
+                        temperature: req.temperature,
+                        max_new: req.max_tokens,
+                        seed: req.seed,
+                        ..Default::default()
+                    };
+                    let cfg = GenConfig {
+                        max_new: req.max_tokens,
+                        temperature: req.temperature,
+                        seed: req.seed,
+                        eos: Some(bpe.eos()),
+                    };
+                    let resp = match runner.run_one(&bundle, &ids, &spec, &cfg) {
+                        Ok(rec) => {
+                            stats.tokens.fetch_add(rec.tokens.len() as u64, Ordering::Relaxed);
+                            stats.gen_ns.fetch_add(rec.wall_ns, Ordering::Relaxed);
+                            Response {
+                                id: req.id,
+                                text: bpe.decode(&rec.tokens),
+                                tokens: rec.tokens.len(),
+                                target_passes: rec.target_passes,
+                                tau: rec.tau(),
+                                latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                                queue_ms: req.arrival.elapsed().as_secs_f64() * 1e3
+                                    - t0.elapsed().as_secs_f64() * 1e3,
+                            }
+                        }
+                        Err(e) => {
+                            stats.errors.fetch_add(1, Ordering::Relaxed);
+                            Response {
+                                id: req.id,
+                                text: format!("error: {e}"),
+                                tokens: 0,
+                                target_passes: 0,
+                                tau: 0.0,
+                                latency_ms: 0.0,
+                                queue_ms: 0.0,
+                            }
+                        }
+                    };
+                    if let Some(slot) = pending.lock().unwrap().get(&req.id).cloned() {
+                        *slot.0.lock().unwrap() = Some(resp);
+                        slot.1.notify_all();
+                    }
+                }
+            }
+        })?;
+    }
+
+    // ---- accept loop ---------------------------------------------------------
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("[server] listening on http://{addr}");
+    let next_id = Arc::new(AtomicU64::new(1));
+    for stream in listener.incoming() {
+        let mut stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let queue = queue.clone();
+        let pending = pending.clone();
+        let stats = stats.clone();
+        let next_id = next_id.clone();
+        std::thread::spawn(move || {
+            let req = match HttpRequest::read_from(&mut stream) {
+                Ok(r) => r,
+                Err(_) => return,
+            };
+            let resp = route(&req, &queue, &pending, &stats, &next_id);
+            let _ = stream.write_all(resp.to_bytes().as_slice());
+        });
+    }
+    Ok(())
+}
+
+type PendingMap =
+    Mutex<std::collections::HashMap<u64, Arc<(Mutex<Option<Response>>, std::sync::Condvar)>>>;
+
+fn route(
+    req: &HttpRequest,
+    queue: &RequestQueue,
+    pending: &PendingMap,
+    stats: &ServerStats,
+    next_id: &AtomicU64,
+) -> HttpResponse {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => HttpResponse::ok("application/json", b"{\"ok\":true}".to_vec()),
+        ("GET", "/metrics") => {
+            let body = format!(
+                "eagle_requests_total {}\neagle_tokens_total {}\neagle_errors_total {}\neagle_rejected_total {}\neagle_queue_depth {}\neagle_gen_seconds_total {:.3}\n",
+                stats.requests.load(Ordering::Relaxed),
+                stats.tokens.load(Ordering::Relaxed),
+                stats.errors.load(Ordering::Relaxed),
+                stats.rejected.load(Ordering::Relaxed),
+                queue.len(),
+                stats.gen_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            );
+            HttpResponse::ok("text/plain", body.into_bytes())
+        }
+        ("POST", "/v1/generate") => {
+            stats.requests.fetch_add(1, Ordering::Relaxed);
+            let body = match std::str::from_utf8(&req.body).ok().and_then(|s| Json::parse(s).ok())
+            {
+                Some(v) => v,
+                None => return HttpResponse::status(400, "bad json"),
+            };
+            let id = next_id.fetch_add(1, Ordering::Relaxed);
+            let r = match Request::from_json(id, &body) {
+                Ok(r) => r,
+                Err(e) => return HttpResponse::status(400, &format!("{e}")),
+            };
+            if r.method == Method::Medusa && r.temperature > 0.0 {
+                return HttpResponse::status(400, "medusa is greedy-only");
+            }
+            let slot = Arc::new((Mutex::new(None), std::sync::Condvar::new()));
+            pending.lock().unwrap().insert(id, slot.clone());
+            match queue.push(r) {
+                Ok(()) => {}
+                Err(PushError::Full) => {
+                    pending.lock().unwrap().remove(&id);
+                    stats.rejected.fetch_add(1, Ordering::Relaxed);
+                    return HttpResponse::status(429, "queue full");
+                }
+                Err(PushError::Closed) => {
+                    pending.lock().unwrap().remove(&id);
+                    return HttpResponse::status(503, "shutting down");
+                }
+            }
+            // wait for the worker
+            let (lock, cv) = &*slot;
+            let mut g = lock.lock().unwrap();
+            while g.is_none() {
+                let (ng, _t) = cv
+                    .wait_timeout(g, std::time::Duration::from_secs(120))
+                    .unwrap();
+                g = ng;
+                if g.is_none() {
+                    pending.lock().unwrap().remove(&id);
+                    return HttpResponse::status(504, "generation timeout");
+                }
+            }
+            let resp = g.take().unwrap();
+            pending.lock().unwrap().remove(&id);
+            HttpResponse::ok("application/json", resp.to_json().to_string().into_bytes())
+        }
+        _ => HttpResponse::status(404, "not found"),
+    }
+}

@@ -1,0 +1,482 @@
+//! EAGLE decode engine (S13): feature-level auto-regressive drafting with
+//! shifted-token inputs, tree (or chain) drafting, SpecInfer-style
+//! verification, KV commit, and feature recycling.
+//!
+//! Position/slot bookkeeping (see DESIGN.md §3): with committed boundary
+//! `M` (root token at position M, its KV not yet in the target cache),
+//! the draft head processes "pair slots": slot `i` holds
+//! (feature φ_i, token τ_i) and its step output is (f̂_{i+1},
+//! LM_head(f̂_{i+1}) = dist of t_{i+2}). The pairing per input variant:
+//!
+//!   eagle    τ_i = t_{i+1}  (shifted — the sampling outcome is visible)
+//!   unshift  τ_i = t_i
+//!   feat     (feature only)     tok (token only)
+//!
+//! All four run the same chain engine; the tree engine is used for the
+//! `eagle` variant (the paper's method). Losslessness at T=0 is asserted
+//! against vanilla greedy in `rust/tests/integration.rs`; at T>0 the
+//! acceptance rules are distribution-preserving (prop tests).
+
+use anyhow::{bail, Result};
+use std::rc::Rc;
+use std::time::Instant;
+
+use super::sampling::{argmax, sample, softmax, top_k, tree_accept, TreeVerdict};
+use super::tree::{chain_extend_bias, draft_step_bias, DraftTree, TreeSpec};
+use crate::metrics::GenRecord;
+use crate::models::{EagleDraft, TargetModel};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct GenConfig {
+    pub max_new: usize,
+    pub temperature: f32,
+    pub seed: u64,
+    pub eos: Option<u32>,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig { max_new: 64, temperature: 0.0, seed: 7, eos: None }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PairShift {
+    /// EAGLE: token advanced one step (resolves sampling uncertainty).
+    Shifted,
+    /// Ablations: same-position token (or single-input variants).
+    Unshifted,
+}
+
+pub struct EagleEngine<'a> {
+    pub target: &'a TargetModel,
+    pub draft: &'a EagleDraft,
+    pub tree_spec: TreeSpec,
+    pub shift: PairShift,
+    /// verify width (t) — must match a lowered verify_t{t} executable.
+    pub verify_t: usize,
+    pub accept_a: usize,
+    pub draft_w: usize,
+}
+
+impl<'a> EagleEngine<'a> {
+    pub fn new_tree(target: &'a TargetModel, draft: &'a EagleDraft, c: &crate::runtime::manifest::Constants) -> Self {
+        EagleEngine {
+            target,
+            draft,
+            tree_spec: TreeSpec::tree_default(),
+            shift: PairShift::Shifted,
+            verify_t: c.tree_t,
+            accept_a: c.accept_a,
+            draft_w: c.draft_w,
+        }
+    }
+
+    pub fn new_chain(
+        target: &'a TargetModel,
+        draft: &'a EagleDraft,
+        c: &crate::runtime::manifest::Constants,
+        gamma: usize,
+        shift: PairShift,
+    ) -> Self {
+        assert!(gamma + 1 <= c.chain_t);
+        EagleEngine {
+            target,
+            draft,
+            tree_spec: TreeSpec::chain(gamma),
+            shift,
+            verify_t: c.chain_t,
+            accept_a: c.accept_a,
+            draft_w: c.draft_w,
+        }
+    }
+
+    /// Sample/argmax from target logits row.
+    fn pick(&self, logits: &[f32], temperature: f32, rng: &mut Rng) -> u32 {
+        if temperature <= 0.0 {
+            argmax(logits) as u32
+        } else {
+            let p = softmax(logits, temperature);
+            sample(&p, rng) as u32
+        }
+    }
+
+    pub fn generate(&self, prompt: &[u32], cfg: &GenConfig) -> Result<GenRecord> {
+        let t_all = Instant::now();
+        let mut rec = GenRecord::new(prompt.len());
+        let mut rng = Rng::new(cfg.seed);
+        let tgt = self.target;
+        let d = tgt.d;
+        let vocab = tgt.vocab;
+        let s_tot = tgt.max_len;
+        let p_win = tgt.prefill_p;
+
+        // ---- target prefill ------------------------------------------------
+        let mut cache = tgt.new_cache(1);
+        let t0 = Instant::now();
+        let (out, plen) = tgt.prefill(prompt, &mut cache)?;
+        rec.timeline.prefill_ns += t0.elapsed().as_nanos() as u64;
+        rec.target_passes += 1;
+        let last_logits = tgt.row(&out.logits, p_win, 0, plen - 1, vocab);
+        let root_tok = self.pick(last_logits, cfg.temperature, &mut rng);
+        rec.tokens.push(root_tok);
+        let mut committed: Vec<u32> = prompt.to_vec();
+        committed.push(root_tok);
+        let mut m = plen; // committed boundary: root at position m
+
+        // ---- draft prefill (pair slots 0..m-1) -----------------------------
+        let mut dcache = self.draft.new_cache(1);
+        let mut dtoks = vec![0i32; p_win];
+        for i in 0..m {
+            let tok = match self.shift {
+                PairShift::Shifted => committed[i + 1],
+                PairShift::Unshifted => committed[i],
+            };
+            dtoks[i] = tok as i32;
+        }
+        // features f_0..f_{m-1} from the target prefill
+        let mut dfeats = vec![0f32; p_win * d];
+        dfeats[..m * d].copy_from_slice(&out.feats[..m * d]);
+        let t0 = Instant::now();
+        let dout = self.draft.prefill(&dfeats, &dtoks, m, &mut dcache)?;
+        rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64;
+        rec.draft_passes += 1;
+        let mut root_feat: Vec<f32> = dout.feats; // f̂ at root position m
+        let mut root_logits: Vec<f32> = dout.logits; // dist of t_{m+1}
+        let mut draft_len = m;
+
+        if cfg.eos == Some(root_tok) {
+            rec.wall_ns = t_all.elapsed().as_nanos() as u64;
+            return Ok(rec);
+        }
+
+        // pending acceptance from the previous round, committed inside the
+        // NEXT verify call (fused commit — §Perf iteration 1)
+        let mut pending_old_m = m;
+        let mut pending_idx = vec![0i32; self.accept_a];
+        let mut pending_n = 0i32;
+
+        // ---- decode rounds --------------------------------------------------
+        while rec.tokens.len() < cfg.max_new {
+            if m + self.verify_t + 1 >= s_tot {
+                break; // cache budget exhausted
+            }
+            // 1. build the draft tree
+            let th = Instant::now();
+            let mut tree = DraftTree::with_root(committed[m]);
+            rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
+            self.grow_tree(&mut tree, &root_feat, &root_logits, m, draft_len, &mut dcache, cfg, &mut rng, &mut rec)?;
+
+            // 2. verify
+            let th = Instant::now();
+            let (tokens, pos, bias) = tree.verify_inputs(self.verify_t, m, s_tot);
+            rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
+            let t0 = Instant::now();
+            let vout = tgt.verify(
+                self.verify_t,
+                &mut cache,
+                &[pending_old_m as i32],
+                &pending_idx,
+                &[pending_n],
+                &tokens,
+                &pos,
+                &bias,
+                self.accept_a,
+            )?;
+            rec.timeline.verify_ns += t0.elapsed().as_nanos() as u64;
+            rec.target_passes += 1;
+
+            // 3. acceptance walk
+            let th = Instant::now();
+            let (path, bonus) = self.accept(&tree, &vout.logits, cfg, &mut rng, &mut rec);
+            rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
+
+            // 4. record acceptance; the compaction happens inside the NEXT
+            //    verify call (fused commit)
+            let n_commit = path.len();
+            pending_old_m = m;
+            pending_idx = vec![0i32; self.accept_a];
+            for (j, &ni) in path.iter().enumerate() {
+                pending_idx[j] = ni as i32;
+            }
+            pending_n = n_commit as i32;
+
+            // 5. bookkeeping: emit accepted tokens + bonus
+            let round_tokens: Vec<u32> = path[1..]
+                .iter()
+                .map(|&ni| tree.nodes[ni].token)
+                .chain(std::iter::once(bonus))
+                .collect();
+            rec.round_accepts.push(round_tokens.len());
+            let mut hit_eos = false;
+            for &t in &round_tokens {
+                committed.push(t);
+                rec.tokens.push(t);
+                if cfg.eos == Some(t) || rec.tokens.len() >= cfg.max_new {
+                    hit_eos = true;
+                    break;
+                }
+            }
+            let m_new = m + n_commit;
+            if hit_eos || m_new + 2 >= s_tot {
+                break;
+            }
+
+            // 6. draft chain-extend over the newly committed pair slots
+            //    [m, m_new-1] with TRUE features from the verify pass.
+            let n_pending = m_new - m; // == n_commit
+            if n_pending > self.draft_w {
+                bail!("pending pairs {n_pending} exceed draft width {}", self.draft_w);
+            }
+            let w = self.draft_w;
+            let mut ef = vec![0f32; w * d];
+            let mut et = vec![0i32; w];
+            let mut ep = vec![0i32; w];
+            for (r, &ni) in path.iter().enumerate() {
+                // slot m + r holds (f_{m+r}, τ); feature = target feature at
+                // tree node `ni` (exact — computed during verification)
+                let f = tgt.row(&vout.feats, self.verify_t, 0, ni, d);
+                ef[r * d..(r + 1) * d].copy_from_slice(f);
+                let slot_pos = m + r;
+                et[r] = match self.shift {
+                    PairShift::Shifted => committed[slot_pos + 1] as i32,
+                    PairShift::Unshifted => committed[slot_pos] as i32,
+                };
+                ep[r] = slot_pos as i32;
+            }
+            for r in n_pending..w {
+                ep[r] = (m + r) as i32; // padded rows (ignored)
+            }
+            let bias = chain_extend_bias(w, s_tot, m, n_pending);
+            let t0 = Instant::now();
+            let eout = self.draft.step(w, &mut dcache, &[m as i32], &ef, &et, &ep, &bias)?;
+            rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64;
+            rec.draft_passes += 1;
+            let last = n_pending - 1;
+            root_feat = eout.feats[last * d..(last + 1) * d].to_vec();
+            root_logits = eout.logits[last * vocab..(last + 1) * vocab].to_vec();
+            m = m_new;
+            draft_len = m;
+        }
+
+        rec.drafted += 0; // accounted in grow_tree
+        rec.wall_ns = t_all.elapsed().as_nanos() as u64;
+        Ok(rec)
+    }
+
+    /// Expand the draft tree level by level. `root_feat`/`root_logits` are
+    /// the extend outputs: f̂ at the root position and dist of t_{m+1}.
+    #[allow(clippy::too_many_arguments)]
+    fn grow_tree(
+        &self,
+        tree: &mut DraftTree,
+        root_feat: &[f32],
+        root_logits: &[f32],
+        m: usize,
+        draft_len: usize,
+        dcache: &mut crate::models::target::KvCache,
+        cfg: &GenConfig,
+        rng: &mut Rng,
+        rec: &mut GenRecord,
+    ) -> Result<()> {
+        let d = self.target.d;
+        let vocab = self.target.vocab;
+        let s_tot = self.target.max_len;
+        let spec = &self.tree_spec;
+        let w = self.draft_w;
+
+        // per-node: predicted feature at the node's position - 1 pairing is
+        // handled via "the feature produced by the parent's step output".
+        // feats_at[node] = f̂ used when stepping that node.
+        let mut node_feat: Vec<Vec<f32>> = vec![root_feat.to_vec()]; // index by tree node
+        let mut node_logits: Vec<Option<Rc<Vec<f32>>>> =
+            vec![Some(Rc::new(root_logits.to_vec()))];
+        // scratch slot assigned to each stepped node (for ancestor masks)
+        let mut node_slot: Vec<Option<usize>> = vec![None]; // root pair lives in committed region
+        let mut scratch_used = 0usize;
+
+        let mut frontier: Vec<usize> = vec![0]; // node indices to expand from
+        for (li, &width) in spec.level_widths.iter().enumerate() {
+            // --- select candidates for this level --------------------------
+            let th = Instant::now();
+            let mut cands: Vec<(usize, u32, f32, Option<Rc<Vec<f32>>>)> = Vec::new(); // (parent, token, score, q)
+            if cfg.temperature <= 0.0 {
+                for &p in &frontier {
+                    let q = node_logits[p].as_ref().unwrap();
+                    let probs = softmax(q, 1.0);
+                    for (tok, pr) in top_k(&probs, spec.branch) {
+                        cands.push((p, tok as u32, self.target_score(&tree.nodes[p], pr), None));
+                    }
+                }
+                cands.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+                cands.truncate(width);
+            } else {
+                // T>0: sample children i.i.d. from q (SpecInfer rule); the
+                // tree shape is fixed by distributing `width` over frontier.
+                let per = (width / frontier.len().max(1)).max(1);
+                for &p in &frontier {
+                    let q = Rc::new(softmax(node_logits[p].as_ref().unwrap(), cfg.temperature));
+                    for _ in 0..per {
+                        if cands.len() >= width {
+                            break;
+                        }
+                        let tok = sample(&q, rng) as u32;
+                        cands.push((p, tok, 0.0, Some(q.clone())));
+                    }
+                }
+            }
+            rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
+            if cands.is_empty() {
+                break;
+            }
+            // --- create nodes ----------------------------------------------
+            let mut new_nodes = Vec::with_capacity(cands.len());
+            for (p, tok, score, q) in cands {
+                let ni = tree.add(p, tok, score, q);
+                node_feat.push(Vec::new());
+                node_logits.push(None);
+                node_slot.push(None);
+                new_nodes.push(ni);
+            }
+            rec.drafted += new_nodes.len();
+
+            // last level: leaves need no draft step
+            if li + 1 == spec.level_widths.len() {
+                break;
+            }
+
+            // --- draft-step the new nodes, padded to the smallest lowered
+            //     width that fits the chunk (§Perf iteration 2) --------------
+            for chunk in new_nodes.chunks(w) {
+                let w = *[1usize, 4, 8]
+                    .iter()
+                    .find(|&&c| c >= chunk.len() && self.draft.exes.has(&format!("step_w{c}")))
+                    .unwrap_or(&w);
+                let th = Instant::now();
+                let mut sf = vec![0f32; w * d];
+                let mut st = vec![0i32; w];
+                let mut sp = vec![0i32; w];
+                let mut anc: Vec<Vec<usize>> = Vec::with_capacity(chunk.len());
+                let write_base = draft_len + scratch_used;
+                if write_base + w >= s_tot {
+                    return Ok(()); // scratch exhausted; verify what we have
+                }
+                for (r, &ni) in chunk.iter().enumerate() {
+                    let parent = tree.nodes[ni].parent.unwrap();
+                    // feature pairing: parent's step output (see module doc)
+                    sf[r * d..(r + 1) * d].copy_from_slice(&node_feat[parent]);
+                    st[r] = match self.shift {
+                        PairShift::Shifted => tree.nodes[ni].token as i32,
+                        PairShift::Unshifted => tree.nodes[parent].token as i32,
+                    };
+                    // pair slot position: node position - 1 = m + depth - 1
+                    sp[r] = (m + tree.nodes[ni].depth - 1) as i32;
+                    node_slot[ni] = Some(write_base + r);
+                    // ancestors' scratch slots (root pair is in committed region)
+                    let mut a = Vec::new();
+                    let mut cur = Some(parent);
+                    while let Some(c) = cur {
+                        if let Some(s) = node_slot[c] {
+                            a.push(s);
+                        }
+                        cur = tree.nodes[c].parent;
+                    }
+                    anc.push(a);
+                }
+                for r in chunk.len()..w {
+                    sp[r] = m as i32;
+                }
+                let bias = draft_step_bias(w, s_tot, draft_len, write_base, &anc);
+                rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
+                let t0 = Instant::now();
+                let sout = self.draft.step(
+                    w,
+                    dcache,
+                    &[write_base as i32],
+                    &sf,
+                    &st,
+                    &sp,
+                    &bias,
+                )?;
+                rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64;
+                rec.draft_passes += 1;
+                scratch_used += w;
+                for (r, &ni) in chunk.iter().enumerate() {
+                    node_feat[ni] = sout.feats[r * d..(r + 1) * d].to_vec();
+                    node_logits[ni] = Some(Rc::new(sout.logits[r * vocab..(r + 1) * vocab].to_vec()));
+                }
+            }
+            frontier = new_nodes;
+        }
+        Ok(())
+    }
+
+    fn target_score(&self, parent: &super::tree::TreeNode, prob: f32) -> f32 {
+        parent.score + prob.max(1e-20).ln()
+    }
+
+    /// Acceptance walk over verified logits. Returns (accepted path node
+    /// indices incl. root, bonus token). Chain-position stats feed n-α.
+    fn accept(
+        &self,
+        tree: &DraftTree,
+        vlogits: &[f32],
+        cfg: &GenConfig,
+        rng: &mut Rng,
+        rec: &mut GenRecord,
+    ) -> (Vec<usize>, u32) {
+        let vocab = self.target.vocab;
+        let row = |i: usize| &vlogits[i * vocab..(i + 1) * vocab];
+        let mut path = vec![0usize];
+        let mut cur = 0usize;
+        loop {
+            let depth = tree.nodes[cur].depth; // n-α bucket = depth of child - 1
+            let children = tree.children(cur);
+            if cfg.temperature <= 0.0 {
+                let want = argmax(row(cur));
+                let next = children.iter().copied().find(|&c| tree.nodes[c].token as usize == want);
+                let nbuckets = rec.alpha.len();
+                if depth < nbuckets && !children.is_empty() {
+                    let b = depth.min(nbuckets - 1);
+                    rec.alpha[b].1 += 1;
+                    if next.is_some() {
+                        rec.alpha[b].0 += 1;
+                    }
+                }
+                match next {
+                    Some(c) => {
+                        path.push(c);
+                        cur = c;
+                    }
+                    None => return (path, want as u32),
+                }
+            } else {
+                let p = softmax(row(cur), cfg.temperature);
+                if children.is_empty() {
+                    return (path, sample(&p, rng) as u32);
+                }
+                let toks: Vec<usize> = children.iter().map(|&c| tree.nodes[c].token as usize).collect();
+                let qs: Vec<Rc<Vec<f32>>> = children
+                    .iter()
+                    .map(|&c| tree.nodes[c].q.clone().expect("sampled node missing q"))
+                    .collect();
+                let qrefs: Vec<&[f32]> = qs.iter().map(|q| q.as_slice()).collect();
+                let nbuckets = rec.alpha.len();
+                if depth < nbuckets {
+                    rec.alpha[depth.min(nbuckets - 1)].1 += 1;
+                }
+                match tree_accept(&p, &qrefs, &toks, rng) {
+                    TreeVerdict::AcceptChild(ci) => {
+                        if depth < nbuckets {
+                            rec.alpha[depth.min(nbuckets - 1)].0 += 1;
+                        }
+                        path.push(children[ci]);
+                        cur = children[ci];
+                    }
+                    TreeVerdict::Residual(t) => return (path, t as u32),
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! The paper's contribution, coordinated: draft trees, lossless sampling
+//! rules, and the EAGLE engine.
+
+pub mod engine;
+pub mod sampling;
+pub mod tree;

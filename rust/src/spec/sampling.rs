@@ -1,0 +1,216 @@
+//! Speculative-sampling core (S12): stable softmax, temperature sampling,
+//! and the lossless accept/resample rules of Leviathan et al. (chain) and
+//! SpecInfer/SpecTr (multi-child tree) that EAGLE's verification applies
+//! recursively. Property-tested for distribution preservation in
+//! `rust/tests/prop_sampling.rs` — the paper's central guarantee.
+
+use crate::util::rng::Rng;
+
+/// Numerically stable softmax with temperature. `t == 0` is handled by
+/// callers via [`argmax`]; this function requires `t > 0`.
+pub fn softmax(logits: &[f32], t: f32) -> Vec<f32> {
+    debug_assert!(t > 0.0);
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut out: Vec<f32> = logits.iter().map(|&l| ((l - m) / t).exp()).collect();
+    let s: f32 = out.iter().sum();
+    if s > 0.0 {
+        for x in &mut out {
+            *x /= s;
+        }
+    }
+    out
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Sample a token id from a probability vector.
+pub fn sample(probs: &[f32], rng: &mut Rng) -> usize {
+    rng.weighted(probs)
+}
+
+/// Top-k (index, prob) pairs, descending.
+pub fn top_k(probs: &[f32], k: usize) -> Vec<(usize, f32)> {
+    let mut idx: Vec<usize> = (0..probs.len()).collect();
+    idx.sort_unstable_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+    idx.truncate(k);
+    idx.into_iter().map(|i| (i, probs[i])).collect()
+}
+
+/// Outcome of verifying one draft position.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Verdict {
+    /// The draft token was accepted.
+    Accept,
+    /// Rejected; the token to emit instead was resampled from the residual.
+    Resample(usize),
+}
+
+/// Chain speculative sampling rule (Leviathan et al., Appendix A.1):
+/// accept draft token `tok` w.p. min(1, p/q); on rejection resample from
+/// norm(max(0, p - q)). Lossless for any draft distribution q.
+pub fn chain_accept(p: &[f32], q: &[f32], tok: usize, rng: &mut Rng) -> Verdict {
+    let pi = p[tok];
+    let qi = q[tok].max(1e-20);
+    if rng.f32() < (pi / qi).min(1.0) {
+        return Verdict::Accept;
+    }
+    let residual: Vec<f32> = p.iter().zip(q).map(|(&a, &b)| (a - b).max(0.0)).collect();
+    let s: f32 = residual.iter().sum();
+    if s <= 0.0 {
+        // p <= q everywhere can only happen with float slop; fall back to p
+        return Verdict::Resample(sample(p, rng));
+    }
+    Verdict::Resample(rng.weighted(&residual))
+}
+
+/// Multi-child (tree) speculative sampling — SpecInfer-style recursive
+/// rejection across the candidate set at one node. Children are tried in
+/// order; each rejection subtracts the child's mass and renormalizes, so
+/// the final output is distributed exactly as `p`.
+///
+/// Returns (accepted_child_index, token) or the residual-sampled token.
+pub enum TreeVerdict {
+    AcceptChild(usize),
+    Residual(usize),
+}
+
+pub fn tree_accept(
+    p: &[f32],
+    q_per_child: &[&[f32]],
+    child_tokens: &[usize],
+    rng: &mut Rng,
+) -> TreeVerdict {
+    let mut p_cur: Vec<f32> = p.to_vec();
+    for (ci, (&tok, q)) in child_tokens.iter().zip(q_per_child).enumerate() {
+        let pi = p_cur[tok];
+        let qi = q[tok].max(1e-20);
+        if rng.f32() < (pi / qi).min(1.0) {
+            return TreeVerdict::AcceptChild(ci);
+        }
+        // reject: p <- norm(max(0, p - q))
+        let mut s = 0.0f32;
+        for (a, &b) in p_cur.iter_mut().zip(q.iter()) {
+            *a = (*a - b).max(0.0);
+            s += *a;
+        }
+        if s <= 0.0 {
+            return TreeVerdict::Residual(sample(p, rng));
+        }
+        for a in &mut p_cur {
+            *a /= s;
+        }
+    }
+    TreeVerdict::Residual(sample(&p_cur, rng))
+}
+
+/// Greedy variants: a draft child is accepted iff it IS the argmax.
+pub fn greedy_accept(p_logits_argmax: usize, tok: usize) -> bool {
+    p_logits_argmax == tok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let p = softmax(&[1.0, 2.0, 3.0], 1.0);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn softmax_temperature_sharpens() {
+        let hot = softmax(&[1.0, 2.0], 2.0);
+        let cold = softmax(&[1.0, 2.0], 0.5);
+        assert!(cold[1] > hot[1]);
+    }
+
+    #[test]
+    fn softmax_handles_extremes() {
+        let p = softmax(&[-1e30, 0.0, -1e30], 1.0);
+        assert!((p[1] - 1.0).abs() < 1e-6);
+        assert!(!p.iter().any(|x| x.is_nan()));
+    }
+
+    #[test]
+    fn top_k_descending() {
+        let t = top_k(&[0.1, 0.5, 0.2, 0.2], 3);
+        assert_eq!(t[0].0, 1);
+        assert_eq!(t.len(), 3);
+        assert!(t[0].1 >= t[1].1 && t[1].1 >= t[2].1);
+    }
+
+    /// The heart of losslessness: empirical law of chain_accept == p.
+    #[test]
+    fn chain_accept_preserves_distribution() {
+        prop::check("chain lossless", 12, |rng, _| {
+            let n = 2 + rng.below(6);
+            let p = prop::random_dist(rng, n);
+            let q = prop::random_dist(rng, n);
+            let trials = 30_000;
+            let mut counts = vec![0usize; n];
+            for _ in 0..trials {
+                let tok = rng.weighted(&q);
+                match chain_accept(&p, &q, tok, rng) {
+                    Verdict::Accept => counts[tok] += 1,
+                    Verdict::Resample(t) => counts[t] += 1,
+                }
+            }
+            for i in 0..n {
+                let emp = counts[i] as f32 / trials as f32;
+                assert!(
+                    (emp - p[i]).abs() < 0.02,
+                    "token {i}: emp {emp} vs p {}",
+                    p[i]
+                );
+            }
+        });
+    }
+
+    /// Tree acceptance with K children sampled from q must also emit ~ p.
+    #[test]
+    fn tree_accept_preserves_distribution() {
+        prop::check("tree lossless", 8, |rng, _| {
+            let n = 2 + rng.below(5);
+            let k = 1 + rng.below(3);
+            let p = prop::random_dist(rng, n);
+            let q = prop::random_dist(rng, n);
+            let trials = 30_000;
+            let mut counts = vec![0usize; n];
+            for _ in 0..trials {
+                // draw k distinct-ish children from q (with replacement is
+                // fine for the rule as long as q matches what was sampled)
+                let child_tokens: Vec<usize> = (0..k).map(|_| rng.weighted(&q)).collect();
+                let qs: Vec<&[f32]> = (0..k).map(|_| q.as_slice()).collect();
+                match tree_accept(&p, &qs, &child_tokens, rng) {
+                    TreeVerdict::AcceptChild(ci) => counts[child_tokens[ci]] += 1,
+                    TreeVerdict::Residual(t) => counts[t] += 1,
+                }
+            }
+            for i in 0..n {
+                let emp = counts[i] as f32 / trials as f32;
+                assert!(
+                    (emp - p[i]).abs() < 0.025,
+                    "token {i}: emp {emp} vs p {} (k={k})",
+                    p[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn greedy_rule() {
+        assert!(greedy_accept(3, 3));
+        assert!(!greedy_accept(3, 4));
+    }
+}

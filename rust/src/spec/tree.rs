@@ -1,0 +1,312 @@
+//! Draft-tree data structure + mask/bias construction (S11).
+//!
+//! The rust coordinator owns tree topology: node bookkeeping, ancestor
+//! closures, the additive attention biases fed to the verify and
+//! draft-step executables, and the accepted-path extraction. All
+//! invariants here are property-tested (`rust/tests/prop_tree.rs`).
+
+use crate::models::NEG;
+
+/// Static tree shape: how many nodes are kept per level and how many
+/// children are considered per expanded node. EAGLE's default draft tree
+/// (depth-m via m draft passes, >m tokens) maps to `level_widths`.
+#[derive(Debug, Clone)]
+pub struct TreeSpec {
+    pub level_widths: Vec<usize>,
+    pub branch: usize,
+}
+
+impl TreeSpec {
+    /// Default EAGLE-style tree: 25 draft nodes over 4 levels (+ root = 26).
+    pub fn tree_default() -> TreeSpec {
+        TreeSpec { level_widths: vec![4, 8, 8, 5], branch: 4 }
+    }
+
+    /// Chain drafting with `gamma` tokens (classic-spec shape).
+    pub fn chain(gamma: usize) -> TreeSpec {
+        TreeSpec { level_widths: vec![1; gamma], branch: 1 }
+    }
+
+    pub fn is_chain(&self) -> bool {
+        self.level_widths.iter().all(|&w| w == 1)
+    }
+
+    pub fn total_nodes(&self) -> usize {
+        1 + self.level_widths.iter().sum::<usize>()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.level_widths.len()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TreeNode {
+    pub token: u32,
+    /// Parent node index (root has none).
+    pub parent: Option<usize>,
+    /// Root = depth 0.
+    pub depth: usize,
+    /// Cumulative draft log-prob (selection score).
+    pub score: f32,
+    /// Draft distribution this token was proposed from (kept at T>0 for
+    /// the SpecInfer acceptance rule; None in greedy mode).
+    pub q: Option<std::rc::Rc<Vec<f32>>>,
+}
+
+/// The draft tree under construction / verification. Node 0 is the root:
+/// the last committed token, whose KV is not yet in the target cache.
+#[derive(Debug, Clone, Default)]
+pub struct DraftTree {
+    pub nodes: Vec<TreeNode>,
+}
+
+impl DraftTree {
+    pub fn with_root(token: u32) -> DraftTree {
+        DraftTree {
+            nodes: vec![TreeNode { token, parent: None, depth: 0, score: 0.0, q: None }],
+        }
+    }
+
+    pub fn add(&mut self, parent: usize, token: u32, score: f32, q: Option<std::rc::Rc<Vec<f32>>>) -> usize {
+        assert!(parent < self.nodes.len(), "parent out of range");
+        let depth = self.nodes[parent].depth + 1;
+        self.nodes.push(TreeNode { token, parent: Some(parent), depth, score, q });
+        self.nodes.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn children(&self, i: usize) -> Vec<usize> {
+        (0..self.nodes.len())
+            .filter(|&j| self.nodes[j].parent == Some(i))
+            .collect()
+    }
+
+    /// Ancestor-or-self closure as a bitmask over node indices.
+    pub fn ancestor_mask(&self, i: usize) -> Vec<bool> {
+        let mut mask = vec![false; self.nodes.len()];
+        let mut cur = Some(i);
+        while let Some(c) = cur {
+            mask[c] = true;
+            cur = self.nodes[c].parent;
+        }
+        mask
+    }
+
+    /// Root-to-node path (inclusive).
+    pub fn path(&self, i: usize) -> Vec<usize> {
+        let mut p = Vec::new();
+        let mut cur = Some(i);
+        while let Some(c) = cur {
+            p.push(c);
+            cur = self.nodes[c].parent;
+        }
+        p.reverse();
+        p
+    }
+
+    /// Verify-call inputs: (tokens[t_pad], pos[t_pad], bias[t_pad * s]).
+    /// Tree node i sits at cache slot `cache_len + i` and RoPE position
+    /// `cache_len + depth(i)`; it attends the committed prefix plus its
+    /// ancestor closure. Padding rows self-attend only (outputs ignored).
+    pub fn verify_inputs(&self, t_pad: usize, cache_len: usize, s: usize) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+        let n = self.nodes.len();
+        assert!(n <= t_pad, "tree of {n} nodes exceeds verify width {t_pad}");
+        assert!(cache_len + t_pad < s, "tree region overflows cache");
+        let mut tokens = vec![0i32; t_pad];
+        let mut pos = vec![0i32; t_pad];
+        let mut bias = vec![NEG; t_pad * s];
+        for i in 0..t_pad {
+            if i < n {
+                tokens[i] = self.nodes[i].token as i32;
+                pos[i] = (cache_len + self.nodes[i].depth) as i32;
+                let row = &mut bias[i * s..(i + 1) * s];
+                for cell in row.iter_mut().take(cache_len) {
+                    *cell = 0.0;
+                }
+                let anc = self.ancestor_mask(i);
+                for (j, &a) in anc.iter().enumerate() {
+                    if a {
+                        row[cache_len + j] = 0.0;
+                    }
+                }
+            } else {
+                pos[i] = (cache_len + 1) as i32;
+                bias[i * s + cache_len + i] = 0.0; // self only, avoids NaN rows
+            }
+        }
+        (tokens, pos, bias)
+    }
+
+    /// Greedy acceptance walk: at each node take the child whose token is
+    /// the target argmax; stop when none matches. Returns (path node
+    /// indices incl. root, per-depth (hit, tried) chain stats).
+    pub fn greedy_walk(&self, argmax_at: impl Fn(usize) -> usize) -> Vec<usize> {
+        let mut path = vec![0usize];
+        let mut cur = 0usize;
+        loop {
+            let want = argmax_at(cur);
+            let next = self
+                .children(cur)
+                .into_iter()
+                .find(|&c| self.nodes[c].token as usize == want);
+            match next {
+                Some(c) => {
+                    path.push(c);
+                    cur = c;
+                }
+                None => return path,
+            }
+        }
+    }
+}
+
+/// Bias rows for a draft `step` call over `w` frontier slots.
+///
+/// Frontier entry r describes a node written to draft-cache slot
+/// `write_base + r`; it attends the committed draft prefix
+/// `[0, chain_len)` plus the scratch slots of its draft-tree ancestors
+/// (`anc_slots[r]`) plus itself. Unused rows self-attend only.
+pub fn draft_step_bias(
+    w: usize,
+    s: usize,
+    chain_len: usize,
+    write_base: usize,
+    anc_slots: &[Vec<usize>],
+) -> Vec<f32> {
+    let mut bias = vec![NEG; w * s];
+    for r in 0..w {
+        let row = &mut bias[r * s..(r + 1) * s];
+        if r < anc_slots.len() {
+            for cell in row.iter_mut().take(chain_len) {
+                *cell = 0.0;
+            }
+            for &slot in &anc_slots[r] {
+                row[slot] = 0.0;
+            }
+        }
+        row[write_base + r] = 0.0; // self
+    }
+    bias
+}
+
+/// Chain-extension bias: rows r=0..n over pairs written at
+/// [write_base, write_base+n); row r attends [0, write_base + r].
+pub fn chain_extend_bias(w: usize, s: usize, write_base: usize, n: usize) -> Vec<f32> {
+    let mut bias = vec![NEG; w * s];
+    for r in 0..w {
+        let row = &mut bias[r * s..(r + 1) * s];
+        let upto = if r < n { write_base + r } else { write_base + r.min(n.saturating_sub(1)) };
+        for cell in row.iter_mut().take(upto + 1) {
+            *cell = 0.0;
+        }
+    }
+    bias
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_tree() -> DraftTree {
+        // root(10) -> a(1), b(2); a -> c(3); b -> d(4), e(5)
+        let mut t = DraftTree::with_root(10);
+        let a = t.add(0, 1, -0.1, None);
+        let b = t.add(0, 2, -0.5, None);
+        t.add(a, 3, -0.3, None);
+        t.add(b, 4, -0.9, None);
+        t.add(b, 5, -1.0, None);
+        t
+    }
+
+    #[test]
+    fn depths_and_paths() {
+        let t = sample_tree();
+        assert_eq!(t.nodes[3].depth, 2);
+        assert_eq!(t.path(3), vec![0, 1, 3]);
+        assert_eq!(t.path(0), vec![0]);
+        assert_eq!(t.children(2), vec![4, 5]);
+    }
+
+    #[test]
+    fn ancestor_closure() {
+        let t = sample_tree();
+        let m = t.ancestor_mask(4);
+        assert_eq!(m, vec![true, false, true, false, true, false]);
+    }
+
+    #[test]
+    fn verify_inputs_bias_semantics() {
+        let t = sample_tree();
+        let (tokens, pos, bias) = t.verify_inputs(8, 5, 20);
+        assert_eq!(tokens[0], 10);
+        assert_eq!(pos[0], 5);
+        assert_eq!(pos[3], 7); // depth 2
+        let s = 20;
+        // node 3 (c) attends prefix 0..5, root slot 5, a slot 6, self 8
+        let row = &bias[3 * s..4 * s];
+        for j in 0..5 {
+            assert_eq!(row[j], 0.0);
+        }
+        assert_eq!(row[5], 0.0);
+        assert_eq!(row[5 + 1], 0.0);
+        assert_eq!(row[5 + 3], 0.0);
+        assert_eq!(row[5 + 2], NEG); // b is not an ancestor
+        // padding row 7 self-attends only
+        let prow = &bias[7 * s..8 * s];
+        assert_eq!(prow[5 + 7], 0.0);
+        assert_eq!(prow.iter().filter(|&&x| x == 0.0).count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows")]
+    fn verify_inputs_bounds_checked() {
+        let t = sample_tree();
+        t.verify_inputs(8, 14, 20);
+    }
+
+    #[test]
+    fn greedy_walk_follows_argmax() {
+        let t = sample_tree();
+        // argmax at root = 2 (-> b), at b = 5 (-> e), at e = 99 (stop)
+        let path = t.greedy_walk(|i| match i {
+            0 => 2,
+            2 => 5,
+            _ => 99,
+        });
+        assert_eq!(path, vec![0, 2, 5]);
+    }
+
+    #[test]
+    fn chain_spec_shape() {
+        let c = TreeSpec::chain(5);
+        assert!(c.is_chain());
+        assert_eq!(c.total_nodes(), 6);
+        let t = TreeSpec::tree_default();
+        assert_eq!(t.total_nodes(), 26);
+        assert!(!t.is_chain());
+    }
+
+    #[test]
+    fn draft_step_bias_rows() {
+        let anc = vec![vec![10usize], vec![]];
+        let bias = draft_step_bias(4, 16, 8, 11, &anc);
+        let row0 = &bias[0..16];
+        for j in 0..8 {
+            assert_eq!(row0[j], 0.0);
+        }
+        assert_eq!(row0[10], 0.0);
+        assert_eq!(row0[11], 0.0); // self
+        assert_eq!(row0[9], NEG);
+        // unused row 3: self only
+        let row3 = &bias[3 * 16..4 * 16];
+        assert_eq!(row3.iter().filter(|&&x| x == 0.0).count(), 1);
+        assert_eq!(row3[14], 0.0);
+    }
+}

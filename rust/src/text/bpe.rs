@@ -1,0 +1,186 @@
+//! Byte-level BPE encoder/decoder (S1) — bit-exact mirror of
+//! `python/compile/tokenizer.py`. The vocab artifact carries merges in
+//! rank order; fixtures dumped by the python tests are replayed in
+//! `rust/tests/` to pin the cross-language contract.
+
+use std::collections::HashMap;
+
+use crate::util::json::Json;
+
+pub const SPECIALS: [&str; 5] = ["<pad>", "<bos>", "<eos>", "<user>", "<asst>"];
+
+pub struct Bpe {
+    merges: Vec<(u32, u32)>,
+    ranks: HashMap<(u32, u32), u32>,
+    pub vocab_size: usize,
+    special_base: u32,
+}
+
+impl Bpe {
+    pub fn from_json(s: &str) -> anyhow::Result<Bpe> {
+        let v = Json::parse(s)?;
+        let merges: Vec<(u32, u32)> = v
+            .req("merges")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("merges not array"))?
+            .iter()
+            .map(|p| {
+                let a = p.as_arr().unwrap();
+                (a[0].as_usize().unwrap() as u32, a[1].as_usize().unwrap() as u32)
+            })
+            .collect();
+        let ranks = merges
+            .iter()
+            .enumerate()
+            .map(|(r, &pair)| (pair, 256 + r as u32))
+            .collect();
+        let special_base = 256 + merges.len() as u32;
+        Ok(Bpe {
+            vocab_size: 256 + merges.len() + SPECIALS.len(),
+            merges,
+            ranks,
+            special_base,
+        })
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Bpe> {
+        Bpe::from_json(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn special(&self, name: &str) -> u32 {
+        let idx = SPECIALS.iter().position(|s| *s == name).expect("unknown special");
+        self.special_base + idx as u32
+    }
+
+    /// Mirror of python `split_words`: pieces of (optional single leading
+    /// space + non-space run); lone extra spaces become " " pieces.
+    pub fn split_words(text: &str) -> Vec<&str> {
+        let b = text.as_bytes();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < b.len() {
+            let j = if b[i] == b' ' { i + 1 } else { i };
+            let mut k = j;
+            while k < b.len() && b[k] != b' ' {
+                k += 1;
+            }
+            if k == j {
+                out.push(&text[i..j]); // lone space
+                i = j;
+            } else {
+                out.push(&text[i..k]);
+                i = k;
+            }
+        }
+        out
+    }
+
+    fn encode_word(&self, word: &str) -> Vec<u32> {
+        let mut ids: Vec<u32> = word.bytes().map(|b| b as u32).collect();
+        while ids.len() >= 2 {
+            let mut best: Option<(u32, usize)> = None;
+            for i in 0..ids.len() - 1 {
+                if let Some(&r) = self.ranks.get(&(ids[i], ids[i + 1])) {
+                    if best.map(|(br, _)| r < br).unwrap_or(true) {
+                        best = Some((r, i));
+                    }
+                }
+            }
+            match best {
+                Some((r, i)) => {
+                    ids[i] = r;
+                    ids.remove(i + 1);
+                }
+                None => break,
+            }
+        }
+        ids
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() / 2);
+        for w in Self::split_words(text) {
+            out.extend(self.encode_word(w));
+        }
+        out
+    }
+
+    /// `<bos> <user> prompt <asst>` — the generation-side dialogue prefix.
+    pub fn encode_prompt(&self, user: &str) -> Vec<u32> {
+        let mut ids = vec![self.special("<bos>"), self.special("<user>")];
+        ids.extend(self.encode(user));
+        ids.push(self.special("<asst>"));
+        ids
+    }
+
+    fn expand(&self, tid: u32, out: &mut Vec<u8>) {
+        if tid < 256 {
+            out.push(tid as u8);
+        } else if (tid as usize) < 256 + self.merges.len() {
+            let (l, r) = self.merges[tid as usize - 256];
+            self.expand(l, out);
+            self.expand(r, out);
+        } else {
+            out.extend(SPECIALS[(tid - self.special_base) as usize].as_bytes());
+        }
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::with_capacity(ids.len() * 3);
+        for &t in ids {
+            self.expand(t, &mut bytes);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn eos(&self) -> u32 {
+        self.special("<eos>")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Bpe {
+        // merges: (104,105)="hi"->256, (256,33)="hi!"->257
+        Bpe::from_json(r#"{"merges":[[104,105],[256,33]],"specials":[],"vocab_size":263}"#)
+            .unwrap()
+    }
+
+    #[test]
+    fn split_words_matches_python_examples() {
+        assert_eq!(Bpe::split_words("a b"), vec!["a", " b"]);
+        assert_eq!(Bpe::split_words(" a"), vec![" a"]);
+        assert_eq!(Bpe::split_words("a  b"), vec!["a", " ", " b"]);
+        assert!(Bpe::split_words("").is_empty());
+        assert_eq!(Bpe::split_words("  "), vec![" ", " "]);
+        assert_eq!(Bpe::split_words("ab\ncd"), vec!["ab\ncd"]);
+    }
+
+    #[test]
+    fn greedy_merge_order() {
+        let b = tiny();
+        assert_eq!(b.encode("hi!"), vec![257]);
+        assert_eq!(b.encode("hih"), vec![256, 104]);
+        assert_eq!(b.decode(&[257]), "hi!");
+    }
+
+    #[test]
+    fn roundtrip_arbitrary_utf8() {
+        let b = tiny();
+        for s in ["héllo wörld", "a b  c", "", "日本語 text"] {
+            assert_eq!(b.decode(&b.encode(s)), s);
+        }
+    }
+
+    #[test]
+    fn specials_at_tail() {
+        let b = tiny();
+        assert_eq!(b.special("<pad>"), 258);
+        assert_eq!(b.special("<eos>"), 260);
+        let p = b.encode_prompt("hi");
+        assert_eq!(p[0], b.special("<bos>"));
+        assert_eq!(*p.last().unwrap(), b.special("<asst>"));
+    }
+}

@@ -1,0 +1,3 @@
+//! Text processing: the BPE tokenizer shared (bit-exactly) with python.
+
+pub mod bpe;

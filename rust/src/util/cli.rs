@@ -1,0 +1,84 @@
+//! Tiny CLI argument parser (clap is not in the offline crate set).
+//! Supports `--flag`, `--key value`, and positional arguments.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl Iterator<Item = String>, flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        out.flags.push(name.to_string());
+                    } else {
+                        out.options.insert(name.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], flags: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn mixed_args() {
+        let a = parse(&["eval", "--exp", "fig1", "--all", "--n", "8"], &["all"]);
+        assert_eq!(a.positional, vec!["eval"]);
+        assert_eq!(a.get("exp"), Some("fig1"));
+        assert!(a.has("all"));
+        assert_eq!(a.usize_or("n", 0), 8);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--verbose"], &[]);
+        assert!(a.has("verbose"));
+    }
+}

@@ -1,0 +1,6 @@
+//! Dependency-free substrates: JSON, RNG, property-test harness, CLI args.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

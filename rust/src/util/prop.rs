@@ -1,0 +1,83 @@
+//! Mini property-based testing harness (S19).
+//!
+//! proptest is not in the offline crate set; this provides the same core
+//! workflow — run a property over many seeded random cases, report the
+//! first failing seed so it can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Run `prop(rng, case_index)` for `cases` seeded cases; panic with the
+/// failing seed on the first failure (replay with `check_seeded`).
+pub fn check<F: FnMut(&mut Rng, usize)>(name: &str, cases: usize, mut prop: F) {
+    for i in 0..cases {
+        let seed = 0xEA61E_u64.wrapping_mul(i as u64 + 1);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, i)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property '{name}' failed on case {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single case by seed (debugging helper).
+pub fn check_seeded<F: FnOnce(&mut Rng)>(seed: u64, prop: F) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+/// Random probability vector of dimension `n` (sums to 1), possibly sparse.
+pub fn random_dist(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let sparsity = rng.f32();
+    let mut w: Vec<f32> = (0..n)
+        .map(|_| if rng.f32() < sparsity { 0.0 } else { rng.f32() + 1e-4 })
+        .collect();
+    let sum: f32 = w.iter().sum();
+    if sum <= 0.0 {
+        w[rng.below(n)] = 1.0;
+        return w;
+    }
+    for x in &mut w {
+        *x /= sum;
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0;
+        check("counter", 25, |_, _| {
+            count += 1;
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_reports_failure() {
+        check("fails", 10, |rng, _| {
+            assert!(rng.f64() < 0.5, "too big");
+        });
+    }
+
+    #[test]
+    fn random_dist_sums_to_one() {
+        check("dist", 50, |rng, _| {
+            let n = 1 + rng.below(40);
+            let d = random_dist(rng, n);
+            let s: f32 = d.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4);
+            assert!(d.iter().all(|&x| x >= 0.0));
+        });
+    }
+}

@@ -1,0 +1,94 @@
+//! Property tests on coordinator invariants (S15/S19): slot allocation,
+//! queue FIFO/backpressure under random op sequences, scheduler batching.
+
+use eagle_serve::coordinator::kvslots::SlotAllocator;
+use eagle_serve::coordinator::queue::{PushError, RequestQueue};
+use eagle_serve::coordinator::request::{Method, Request};
+use eagle_serve::util::prop::check;
+
+fn req(id: u64) -> Request {
+    Request {
+        id,
+        prompt: String::new(),
+        max_tokens: 1,
+        temperature: 0.0,
+        method: Method::Vanilla,
+        seed: 0,
+        arrival: std::time::Instant::now(),
+    }
+}
+
+#[test]
+fn prop_slot_allocator_never_double_allocates() {
+    check("slots", 100, |rng, _| {
+        let cap = 1 + rng.below(16);
+        let mut a = SlotAllocator::new(cap);
+        let mut held: Vec<usize> = Vec::new();
+        for _ in 0..200 {
+            if rng.f32() < 0.55 {
+                if let Some(s) = a.alloc() {
+                    assert!(!held.contains(&s), "slot {s} handed out twice");
+                    assert!(s < cap);
+                    held.push(s);
+                } else {
+                    assert_eq!(held.len(), cap, "alloc failed below capacity");
+                }
+            } else if !held.is_empty() {
+                let i = rng.below(held.len());
+                let s = held.swap_remove(i);
+                a.release(s);
+            }
+            assert_eq!(a.available(), cap - held.len());
+            for &s in &held {
+                assert!(a.is_allocated(s));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_queue_preserves_fifo_under_interleaving() {
+    check("queue fifo", 50, |rng, _| {
+        let cap = 4 + rng.below(12);
+        let q = RequestQueue::new(cap);
+        let mut next_push = 0u64;
+        let mut next_pop = 0u64;
+        for _ in 0..300 {
+            if rng.f32() < 0.6 {
+                match q.push(req(next_push)) {
+                    Ok(()) => next_push += 1,
+                    Err(PushError::Full) => assert_eq!(q.len(), cap),
+                    Err(PushError::Closed) => unreachable!(),
+                }
+            } else {
+                let got = q.pop_up_to(1);
+                if let Some(r) = got.first() {
+                    assert_eq!(r.id, next_pop, "FIFO violated");
+                    next_pop += 1;
+                } else {
+                    assert_eq!(q.len(), 0);
+                }
+            }
+            assert!(q.len() <= cap);
+        }
+    });
+}
+
+#[test]
+fn prop_pop_up_to_respects_bounds() {
+    check("batch pop", 50, |rng, _| {
+        let q = RequestQueue::new(64);
+        let n = rng.below(20);
+        for i in 0..n {
+            q.push(req(i as u64)).unwrap();
+        }
+        let k = rng.below(24);
+        let batch = q.pop_up_to(k);
+        assert_eq!(batch.len(), k.min(n));
+        // order within the batch is arrival order
+        for w in batch.windows(2) {
+            assert!(w[0].id < w[1].id);
+        }
+        assert_eq!(q.len(), n - batch.len());
+    });
+}

@@ -1,0 +1,120 @@
+//! Property tests on draft-tree invariants (S11/S19): random trees must
+//! have consistent topology, ancestor closures, verify masks, and greedy
+//! walks that always return valid root-paths.
+
+use eagle_serve::spec::tree::{DraftTree, TreeSpec};
+use eagle_serve::util::prop::{check, random_dist};
+use eagle_serve::util::rng::Rng;
+
+fn random_tree(rng: &mut Rng, max_nodes: usize) -> DraftTree {
+    let mut t = DraftTree::with_root(rng.below(100) as u32);
+    let n = 1 + rng.below(max_nodes.max(2) - 1);
+    for _ in 0..n {
+        let parent = rng.below(t.len());
+        t.add(parent, rng.below(100) as u32, -rng.f32(), None);
+    }
+    t
+}
+
+#[test]
+fn prop_depth_is_parent_depth_plus_one() {
+    check("depth", 200, |rng, _| {
+        let t = random_tree(rng, 24);
+        for (i, n) in t.nodes.iter().enumerate() {
+            match n.parent {
+                None => assert_eq!(n.depth, 0),
+                Some(p) => {
+                    assert!(p < i, "parent must precede child");
+                    assert_eq!(n.depth, t.nodes[p].depth + 1);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_ancestor_closure_contains_path_exactly() {
+    check("ancestors", 200, |rng, _| {
+        let t = random_tree(rng, 24);
+        let i = rng.below(t.len());
+        let mask = t.ancestor_mask(i);
+        let path = t.path(i);
+        let from_mask: Vec<usize> = (0..t.len()).filter(|&j| mask[j]).collect();
+        let mut sorted_path = path.clone();
+        sorted_path.sort_unstable();
+        assert_eq!(from_mask, sorted_path);
+        assert_eq!(path[0], 0, "path starts at root");
+        assert_eq!(*path.last().unwrap(), i);
+    });
+}
+
+#[test]
+fn prop_verify_bias_rows_allow_prefix_and_ancestors_only() {
+    check("verify bias", 100, |rng, _| {
+        let t = random_tree(rng, 16);
+        let t_pad = 24;
+        let cache_len = 8 + rng.below(16);
+        let s = cache_len + t_pad + 4 + rng.below(8);
+        let (_tokens, pos, bias) = t.verify_inputs(t_pad, cache_len, s);
+        for i in 0..t.len() {
+            let row = &bias[i * s..(i + 1) * s];
+            let anc = t.ancestor_mask(i);
+            for j in 0..s {
+                let visible = row[j] == 0.0;
+                let expect = j < cache_len
+                    || (j >= cache_len && j < cache_len + t.len() && anc[j - cache_len]);
+                assert_eq!(visible, expect, "node {i} col {j}");
+            }
+            assert_eq!(pos[i] as usize, cache_len + t.nodes[i].depth);
+            // self always visible => softmax never NaN
+            assert_eq!(row[cache_len + i], 0.0);
+        }
+        // padding rows have exactly one visible column
+        for i in t.len()..t_pad {
+            let row = &bias[i * s..(i + 1) * s];
+            assert_eq!(row.iter().filter(|&&x| x == 0.0).count(), 1);
+        }
+    });
+}
+
+#[test]
+fn prop_greedy_walk_is_valid_root_path() {
+    check("greedy walk", 200, |rng, _| {
+        let t = random_tree(rng, 20);
+        // random argmax oracle
+        let picks: Vec<usize> = (0..t.len()).map(|_| rng.below(100)).collect();
+        let path = t.greedy_walk(|i| picks[i]);
+        assert_eq!(path[0], 0);
+        for w in path.windows(2) {
+            assert_eq!(t.nodes[w[1]].parent, Some(w[0]), "path edge must be parent-child");
+            assert_eq!(t.nodes[w[1]].token as usize, picks[w[0]], "walk must follow argmax");
+        }
+        // maximality: the walk stops only when no child matches
+        let last = *path.last().unwrap();
+        assert!(!t
+            .children(last)
+            .iter()
+            .any(|&c| t.nodes[c].token as usize == picks[last]));
+    });
+}
+
+#[test]
+fn prop_tree_spec_node_budget() {
+    check("tree spec", 50, |rng, _| {
+        let depth = 1 + rng.below(5);
+        let widths: Vec<usize> = (0..depth).map(|_| 1 + rng.below(8)).collect();
+        let spec = TreeSpec { level_widths: widths.clone(), branch: 1 + rng.below(4) };
+        assert_eq!(spec.total_nodes(), 1 + widths.iter().sum::<usize>());
+        assert_eq!(spec.depth(), depth);
+        assert_eq!(spec.is_chain(), widths.iter().all(|&w| w == 1));
+    });
+}
+
+#[test]
+fn prop_random_dists_valid() {
+    check("dist helper", 100, |rng, _| {
+        let n = 1 + rng.below(50);
+        let d = random_dist(rng, n);
+        assert!((d.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+    });
+}
