@@ -5,8 +5,10 @@
 
 use eagle_serve::eval::runner::Runner;
 use eagle_serve::models::{artifacts_dir, ModelBundle};
+use eagle_serve::spec::dyntree::{expand_candidates, rerank, select_frontier};
 use eagle_serve::spec::sampling::{argmax, softmax};
 use eagle_serve::spec::tree::{DraftTree, TreeSpec};
+use eagle_serve::util::rng::Rng;
 use std::time::Instant;
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
@@ -52,6 +54,37 @@ fn main() {
     bench("host/verify_inputs(32x192)", 500, || {
         std::hint::black_box(tree.verify_inputs(32, 40, 192));
     });
+
+    // dynamic-planner host components: candidate expansion over a full
+    // vocab row, and the global rerank over a grown candidate tree — the
+    // planner overhead that sits next to bias-building each round
+    let probs = softmax(&logits, 1.0);
+    bench("host/dyntree_expand(8x761)", 1000, || {
+        for _ in 0..8 {
+            std::hint::black_box(expand_candidates(-1.0, &probs, 4));
+        }
+    });
+    let mut rng = Rng::new(7);
+    let mut dtree = DraftTree::with_root(1);
+    let mut expandable: Vec<usize> = vec![0];
+    for _ in 0..5 {
+        let frontier = select_frontier(&dtree, &expandable, 8);
+        let mut new_nodes = Vec::new();
+        for &p in &frontier {
+            for ci in 0..4u32 {
+                let score = dtree.nodes[p].score - rng.f32() - 0.05;
+                new_nodes.push(dtree.add(p, ci, score, None));
+            }
+        }
+        expandable = new_nodes;
+    }
+    bench(
+        &format!("host/dyntree_rerank({}->31)", dtree.len() - 1),
+        1000,
+        || {
+            std::hint::black_box(rerank(&dtree, 31));
+        },
+    );
 
     if !artifacts_dir().join("manifest.json").exists() {
         eprintln!("executable benches skipped: run `make artifacts` first");

@@ -5,6 +5,12 @@
 //! synchronous-batch setting. Also provides batched *vanilla* decoding as
 //! the throughput baseline.
 //!
+//! Tree shaping follows the engine's [`TreePolicy`]: static per-level
+//! widths, or the dynamic confidence-driven planner with one
+//! [`SpecController`] per lane — each lane's speculation depth/width
+//! adapts to its own request while the draft calls stay lock-step
+//! (lanes that stop early contribute harmless padding rows).
+//!
 //! Per-lane prefill reuses the bs=1 draft prefill and splices the lane's
 //! rows into the batched draft cache host-side (caches are host vectors
 //! between calls, so the splice is a memcpy — no extra executable).
@@ -15,6 +21,10 @@ use std::time::Instant;
 use crate::metrics::GenRecord;
 use crate::models::target::KvCache;
 use crate::models::{EagleDraft, TargetModel};
+use crate::spec::dyntree::{
+    expand_candidates, rerank, select_frontier, DynTreeConfig, DynTreeParams, SpecController,
+    TreePolicy,
+};
 use crate::spec::engine::GenConfig;
 use crate::spec::sampling::{argmax, sample, softmax, top_k};
 use crate::spec::tree::{chain_extend_bias, draft_step_bias, DraftTree, TreeSpec};
@@ -23,7 +33,9 @@ use crate::util::rng::Rng;
 pub struct BatchEagleEngine<'a> {
     pub target: &'a TargetModel,
     pub draft: &'a EagleDraft,
-    pub tree_spec: TreeSpec,
+    /// Per-lane draft-tree shaping (static widths or the dynamic planner
+    /// with one [`SpecController`] per lane).
+    pub policy: TreePolicy,
     pub verify_t: usize,
     pub accept_a: usize,
     pub draft_w: usize,
@@ -43,11 +55,17 @@ impl<'a> BatchEagleEngine<'a> {
         BatchEagleEngine {
             target,
             draft,
-            tree_spec: TreeSpec::tree_default(),
+            policy: TreePolicy::default_tree(),
             verify_t: c.tree_t,
             accept_a: c.accept_a,
             draft_w: c.draft_w,
         }
+    }
+
+    /// Swap the tree policy (builder-style).
+    pub fn with_policy(mut self, policy: TreePolicy) -> Self {
+        self.policy = policy;
+        self
     }
 
     /// Generate for B prompts in lock-step (greedy, T=0 — the Table-7
@@ -109,7 +127,17 @@ impl<'a> BatchEagleEngine<'a> {
         }
 
         // ---- lock-step rounds ------------------------------------------------
-        let spec = &self.tree_spec;
+        // dynamic policy: one acceptance controller per lane, so each lane's
+        // speculation depth/width tracks its own request
+        let mut controllers: Vec<Option<SpecController>> = (0..b)
+            .map(|_| match &self.policy {
+                TreePolicy::Dynamic(dc) if dc.adaptive => Some(SpecController::new(
+                    dc.clamped_controller(w, self.accept_a),
+                    dc.params(self.verify_t, w, self.accept_a),
+                )),
+                _ => None,
+            })
+            .collect();
         let mut pending_old = vec![0i32; b];
         for (li, l) in lanes.iter().enumerate() {
             pending_old[li] = l.m as i32;
@@ -122,85 +150,17 @@ impl<'a> BatchEagleEngine<'a> {
                 .iter()
                 .map(|l| DraftTree::with_root(l.committed[l.m]))
                 .collect();
-            let mut node_feat: Vec<Vec<Vec<f32>>> = lanes.iter().map(|l| vec![l.root_feat.clone()]).collect();
-            let mut node_logits: Vec<Vec<Vec<f32>>> = lanes.iter().map(|l| vec![l.root_logits.clone()]).collect();
-            let mut node_slot: Vec<Vec<Option<usize>>> = vec![vec![None]; b];
-            let mut scratch_used = vec![0usize; b];
-            let mut frontier: Vec<Vec<usize>> = vec![vec![0]; b];
-
-            for (lvl, &width) in spec.level_widths.iter().enumerate() {
-                // select per-lane candidates (greedy top-k by cum score)
-                let mut new_nodes: Vec<Vec<usize>> = vec![Vec::new(); b];
-                for li in 0..b {
-                    if lanes[li].done {
-                        continue;
-                    }
-                    let mut cands: Vec<(usize, u32, f32)> = Vec::new();
-                    for &p in &frontier[li] {
-                        let probs = softmax(&node_logits[li][p], 1.0);
-                        for (tok, pr) in top_k(&probs, spec.branch) {
-                            cands.push((p, tok as u32, trees[li].nodes[p].score + pr.max(1e-20).ln()));
-                        }
-                    }
-                    cands.sort_by(|a, c| c.2.partial_cmp(&a.2).unwrap());
-                    cands.truncate(width);
-                    for (p, tok, score) in cands {
-                        let ni = trees[li].add(p, tok, score, None);
-                        node_feat[li].push(Vec::new());
-                        node_logits[li].push(Vec::new());
-                        node_slot[li].push(None);
-                        new_nodes[li].push(ni);
-                        lanes[li].rec.drafted += 1;
-                    }
+            match &self.policy {
+                TreePolicy::Static(spec) => {
+                    self.grow_static_batch(spec, &mut lanes, &mut trees, &mut dcache_b)?;
                 }
-                if lvl + 1 == spec.level_widths.len() {
-                    break;
+                TreePolicy::Dynamic(dc) => {
+                    self.grow_dynamic_batch(dc, &controllers, &mut lanes, &mut trees, &mut dcache_b)?;
                 }
-                // batched draft step (level width <= W by construction)
-                let mut sf = vec![0f32; b * w * d];
-                let mut st = vec![0i32; b * w];
-                let mut sp = vec![0i32; b * w];
-                let mut bias = vec![0f32; b * w * s_tot];
-                let mut wb = vec![0i32; b];
-                for li in 0..b {
-                    let base = lanes[li].m + scratch_used[li];
-                    wb[li] = base as i32;
-                    let mut anc: Vec<Vec<usize>> = Vec::new();
-                    for (r, &ni) in new_nodes[li].iter().enumerate() {
-                        let parent = trees[li].nodes[ni].parent.unwrap();
-                        sf[(li * w + r) * d..(li * w + r + 1) * d].copy_from_slice(&node_feat[li][parent]);
-                        st[li * w + r] = trees[li].nodes[ni].token as i32;
-                        sp[li * w + r] = (lanes[li].m + trees[li].nodes[ni].depth - 1) as i32;
-                        node_slot[li][ni] = Some(base + r);
-                        let mut a = Vec::new();
-                        let mut cur = Some(parent);
-                        while let Some(c) = cur {
-                            if let Some(s) = node_slot[li][c] {
-                                a.push(s);
-                            }
-                            cur = trees[li].nodes[c].parent;
-                        }
-                        anc.push(a);
-                    }
-                    for r in new_nodes[li].len()..w {
-                        sp[li * w + r] = lanes[li].m as i32;
-                    }
-                    let lane_bias = draft_step_bias(w, s_tot, lanes[li].m, base, &anc);
-                    bias[li * w * s_tot..(li + 1) * w * s_tot].copy_from_slice(&lane_bias);
-                }
-                let t0 = Instant::now();
-                let sout = self.draft.step(w, &mut dcache_b, &wb, &sf, &st, &sp, &bias)?;
-                for l in lanes.iter_mut().filter(|l| !l.done) {
-                    l.rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64 / b as u64;
-                    l.rec.draft_passes += 1;
-                }
-                for li in 0..b {
-                    scratch_used[li] += w;
-                    for (r, &ni) in new_nodes[li].iter().enumerate() {
-                        node_feat[li][ni] = sout.feats[(li * w + r) * d..(li * w + r + 1) * d].to_vec();
-                        node_logits[li][ni] = sout.logits[(li * w + r) * vocab..(li * w + r + 1) * vocab].to_vec();
-                    }
-                    frontier[li] = new_nodes[li].clone();
+            }
+            for li in 0..b {
+                if !lanes[li].done {
+                    lanes[li].rec.round_tree_nodes.push(trees[li].len() - 1);
                 }
             }
 
@@ -253,6 +213,17 @@ impl<'a> BatchEagleEngine<'a> {
                 }
                 n_accept[li] = path.len() as i32;
                 paths.push(path);
+            }
+            // feed each lane's controller with its round outcome (dynamic
+            // adaptive policy); attempted = deepest drafted chain position
+            for li in 0..b {
+                if lanes[li].done || paths[li].is_empty() {
+                    continue;
+                }
+                if let Some(c) = controllers[li].as_mut() {
+                    let attempted = trees[li].nodes.iter().map(|n| n.depth).max().unwrap_or(0);
+                    c.observe_round(paths[li].len() - 1, attempted);
+                }
             }
             let com_ns = 0u64;
 
@@ -347,6 +318,245 @@ impl<'a> BatchEagleEngine<'a> {
                 l.rec
             })
             .collect())
+    }
+
+    /// STATIC lock-step growth: fixed per-level widths, greedy top-k by
+    /// cumulative score per lane (the seed behavior).
+    fn grow_static_batch(
+        &self,
+        spec: &TreeSpec,
+        lanes: &mut [Lane],
+        trees: &mut [DraftTree],
+        dcache_b: &mut KvCache,
+    ) -> Result<()> {
+        let b = lanes.len();
+        let d = self.target.d;
+        let vocab = self.target.vocab;
+        let s_tot = self.target.max_len;
+        let w = self.draft_w;
+
+        let mut node_feat: Vec<Vec<Vec<f32>>> = lanes.iter().map(|l| vec![l.root_feat.clone()]).collect();
+        let mut node_logits: Vec<Vec<Vec<f32>>> = lanes.iter().map(|l| vec![l.root_logits.clone()]).collect();
+        let mut node_slot: Vec<Vec<Option<usize>>> = vec![vec![None]; b];
+        let mut scratch_used = vec![0usize; b];
+        let mut frontier: Vec<Vec<usize>> = vec![vec![0]; b];
+
+        for (lvl, &width) in spec.level_widths.iter().enumerate() {
+            // select per-lane candidates (greedy top-k by cum score)
+            let mut new_nodes: Vec<Vec<usize>> = vec![Vec::new(); b];
+            for li in 0..b {
+                if lanes[li].done {
+                    continue;
+                }
+                let mut cands: Vec<(usize, u32, f32)> = Vec::new();
+                for &p in &frontier[li] {
+                    let probs = softmax(&node_logits[li][p], 1.0);
+                    for (tok, pr) in top_k(&probs, spec.branch) {
+                        cands.push((p, tok as u32, trees[li].nodes[p].score + pr.max(1e-20).ln()));
+                    }
+                }
+                cands.sort_by(|a, c| c.2.partial_cmp(&a.2).unwrap());
+                cands.truncate(width);
+                for (p, tok, score) in cands {
+                    let ni = trees[li].add(p, tok, score, None);
+                    node_feat[li].push(Vec::new());
+                    node_logits[li].push(Vec::new());
+                    node_slot[li].push(None);
+                    new_nodes[li].push(ni);
+                    lanes[li].rec.drafted += 1;
+                }
+            }
+            if lvl + 1 == spec.level_widths.len() {
+                break;
+            }
+            // batched draft step (level width <= W by construction)
+            let mut sf = vec![0f32; b * w * d];
+            let mut st = vec![0i32; b * w];
+            let mut sp = vec![0i32; b * w];
+            let mut bias = vec![0f32; b * w * s_tot];
+            let mut wb = vec![0i32; b];
+            for li in 0..b {
+                let base = lanes[li].m + scratch_used[li];
+                wb[li] = base as i32;
+                let mut anc: Vec<Vec<usize>> = Vec::new();
+                for (r, &ni) in new_nodes[li].iter().enumerate() {
+                    let parent = trees[li].nodes[ni].parent.unwrap();
+                    sf[(li * w + r) * d..(li * w + r + 1) * d].copy_from_slice(&node_feat[li][parent]);
+                    st[li * w + r] = trees[li].nodes[ni].token as i32;
+                    sp[li * w + r] = (lanes[li].m + trees[li].nodes[ni].depth - 1) as i32;
+                    node_slot[li][ni] = Some(base + r);
+                    let mut a = Vec::new();
+                    let mut cur = Some(parent);
+                    while let Some(c) = cur {
+                        if let Some(s) = node_slot[li][c] {
+                            a.push(s);
+                        }
+                        cur = trees[li].nodes[c].parent;
+                    }
+                    anc.push(a);
+                }
+                for r in new_nodes[li].len()..w {
+                    sp[li * w + r] = lanes[li].m as i32;
+                }
+                let lane_bias = draft_step_bias(w, s_tot, lanes[li].m, base, &anc);
+                bias[li * w * s_tot..(li + 1) * w * s_tot].copy_from_slice(&lane_bias);
+            }
+            let t0 = Instant::now();
+            let sout = self.draft.step(w, dcache_b, &wb, &sf, &st, &sp, &bias)?;
+            let dns = t0.elapsed().as_nanos() as u64;
+            for l in lanes.iter_mut().filter(|l| !l.done) {
+                l.rec.timeline.draft_ns += dns / b as u64;
+                l.rec.draft_passes += 1;
+            }
+            for li in 0..b {
+                scratch_used[li] += w;
+                for (r, &ni) in new_nodes[li].iter().enumerate() {
+                    node_feat[li][ni] = sout.feats[(li * w + r) * d..(li * w + r + 1) * d].to_vec();
+                    node_logits[li][ni] = sout.logits[(li * w + r) * vocab..(li * w + r + 1) * vocab].to_vec();
+                }
+                frontier[li] = new_nodes[li].clone();
+            }
+        }
+        Ok(())
+    }
+
+    /// DYNAMIC lock-step growth: per-lane confidence-driven expansion.
+    /// Each lane expands its top-K frontier by cumulative draft log-prob
+    /// and may run at a different (controller-adapted) depth; after
+    /// growth every lane's candidate tree is globally reranked down to
+    /// its verify budget. Drafted-token accounting happens post-rerank.
+    fn grow_dynamic_batch(
+        &self,
+        dc: &DynTreeConfig,
+        controllers: &[Option<SpecController>],
+        lanes: &mut [Lane],
+        trees: &mut [DraftTree],
+        dcache_b: &mut KvCache,
+    ) -> Result<()> {
+        let b = lanes.len();
+        let d = self.target.d;
+        let vocab = self.target.vocab;
+        let s_tot = self.target.max_len;
+        let w = self.draft_w;
+
+        let lane_params: Vec<DynTreeParams> = (0..b)
+            .map(|li| {
+                controllers[li]
+                    .as_ref()
+                    .map(|c| c.params())
+                    .unwrap_or_else(|| dc.params(self.verify_t, w, self.accept_a))
+            })
+            .collect();
+        let max_depth = lane_params.iter().map(|p| p.depth).max().unwrap_or(1);
+        let mut node_feat: Vec<Vec<Vec<f32>>> = lanes.iter().map(|l| vec![l.root_feat.clone()]).collect();
+        let mut node_logits: Vec<Vec<Vec<f32>>> = lanes.iter().map(|l| vec![l.root_logits.clone()]).collect();
+        let mut node_slot: Vec<Vec<Option<usize>>> = vec![vec![None]; b];
+        let mut scratch_used = vec![0usize; b];
+        let mut expandable: Vec<Vec<usize>> = vec![vec![0]; b];
+
+        for lvl in 0..max_depth {
+            // per-lane candidate generation + step-set selection
+            let mut step_sets: Vec<Vec<usize>> = vec![Vec::new(); b];
+            for li in 0..b {
+                if lanes[li].done || lvl >= lane_params[li].depth {
+                    continue;
+                }
+                let front = select_frontier(&trees[li], &expandable[li], lane_params[li].frontier_k);
+                let mut new_nodes = Vec::new();
+                for &p in &front {
+                    if node_logits[li][p].is_empty() {
+                        continue;
+                    }
+                    let probs = softmax(&node_logits[li][p], 1.0);
+                    for (tok, score) in
+                        expand_candidates(trees[li].nodes[p].score, &probs, lane_params[li].branch)
+                    {
+                        let ni = trees[li].add(p, tok, score, None);
+                        node_feat[li].push(Vec::new());
+                        node_logits[li].push(Vec::new());
+                        node_slot[li].push(None);
+                        new_nodes.push(ni);
+                    }
+                }
+                // step only while another level follows and scratch remains
+                if lvl + 1 < lane_params[li].depth && lanes[li].m + scratch_used[li] + w < s_tot {
+                    step_sets[li] = select_frontier(&trees[li], &new_nodes, lane_params[li].frontier_k);
+                }
+            }
+            if step_sets.iter().all(|s| s.is_empty()) {
+                break; // no lane can expand further
+            }
+            // batched draft step over the per-lane step sets
+            let mut sf = vec![0f32; b * w * d];
+            let mut st = vec![0i32; b * w];
+            let mut sp = vec![0i32; b * w];
+            let mut bias = vec![0f32; b * w * s_tot];
+            let mut wb = vec![0i32; b];
+            for li in 0..b {
+                // idle lanes rewrite fresh scratch at m: self-attending rows
+                // only, always in-bounds (m + w << s_tot while a lane lives)
+                let base = if step_sets[li].is_empty() {
+                    lanes[li].m
+                } else {
+                    lanes[li].m + scratch_used[li]
+                };
+                wb[li] = base as i32;
+                let mut anc: Vec<Vec<usize>> = Vec::new();
+                for (r, &ni) in step_sets[li].iter().enumerate() {
+                    let parent = trees[li].nodes[ni].parent.unwrap();
+                    sf[(li * w + r) * d..(li * w + r + 1) * d].copy_from_slice(&node_feat[li][parent]);
+                    st[li * w + r] = trees[li].nodes[ni].token as i32;
+                    sp[li * w + r] = (lanes[li].m + trees[li].nodes[ni].depth - 1) as i32;
+                    node_slot[li][ni] = Some(base + r);
+                    let mut a = Vec::new();
+                    let mut cur = Some(parent);
+                    while let Some(c) = cur {
+                        if let Some(s) = node_slot[li][c] {
+                            a.push(s);
+                        }
+                        cur = trees[li].nodes[c].parent;
+                    }
+                    anc.push(a);
+                }
+                for r in step_sets[li].len()..w {
+                    sp[li * w + r] = lanes[li].m as i32;
+                }
+                let lane_bias = draft_step_bias(w, s_tot, lanes[li].m, base, &anc);
+                bias[li * w * s_tot..(li + 1) * w * s_tot].copy_from_slice(&lane_bias);
+            }
+            let t0 = Instant::now();
+            let sout = self.draft.step(w, dcache_b, &wb, &sf, &st, &sp, &bias)?;
+            let dns = t0.elapsed().as_nanos() as u64;
+            for l in lanes.iter_mut().filter(|l| !l.done) {
+                l.rec.timeline.draft_ns += dns / b as u64;
+                l.rec.draft_passes += 1;
+            }
+            for li in 0..b {
+                if step_sets[li].is_empty() {
+                    expandable[li].clear();
+                    continue;
+                }
+                scratch_used[li] += w;
+                for (r, &ni) in step_sets[li].iter().enumerate() {
+                    node_feat[li][ni] = sout.feats[(li * w + r) * d..(li * w + r + 1) * d].to_vec();
+                    node_logits[li][ni] =
+                        sout.logits[(li * w + r) * vocab..(li * w + r + 1) * vocab].to_vec();
+                }
+                expandable[li] = step_sets[li].clone();
+            }
+        }
+        // global rerank per lane: keep the best `budget` nodes for verify
+        for li in 0..b {
+            if lanes[li].done {
+                continue;
+            }
+            if trees[li].len() - 1 > lane_params[li].budget {
+                let (pruned, _kept) = rerank(&trees[li], lane_params[li].budget);
+                trees[li] = pruned;
+            }
+            lanes[li].rec.drafted += trees[li].len() - 1;
+        }
+        Ok(())
     }
 
     /// Batched vanilla decoding — the Table-7 throughput baseline.

@@ -15,5 +15,5 @@ pub mod scheduler;
 pub use batch_engine::BatchEagleEngine;
 pub use kvslots::SlotAllocator;
 pub use queue::RequestQueue;
-pub use request::{Method, Request, Response};
+pub use request::{Method, Request, Response, TreeChoice};
 pub use scheduler::Scheduler;

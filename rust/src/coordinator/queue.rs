@@ -83,7 +83,7 @@ impl RequestQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::Method;
+    use crate::coordinator::request::{Method, TreeChoice};
     use std::sync::Arc;
 
     fn req(id: u64) -> Request {
@@ -93,6 +93,7 @@ mod tests {
             max_tokens: 1,
             temperature: 0.0,
             method: Method::Vanilla,
+            tree: TreeChoice::Default,
             seed: 0,
             arrival: std::time::Instant::now(),
         }

@@ -37,6 +37,34 @@ impl Method {
     }
 }
 
+/// Per-request draft-tree shaping choice ("tree" field of the generate
+/// API). `Default` defers to the server's configured policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TreeChoice {
+    Default,
+    Static,
+    Dynamic,
+}
+
+impl TreeChoice {
+    pub fn parse(s: &str) -> Option<TreeChoice> {
+        Some(match s {
+            "default" => TreeChoice::Default,
+            "static" => TreeChoice::Static,
+            "dynamic" | "dyntree" => TreeChoice::Dynamic,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TreeChoice::Default => "default",
+            TreeChoice::Static => "static",
+            TreeChoice::Dynamic => "dynamic",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
@@ -44,6 +72,7 @@ pub struct Request {
     pub max_tokens: usize,
     pub temperature: f32,
     pub method: Method,
+    pub tree: TreeChoice,
     pub seed: u64,
     pub arrival: std::time::Instant,
 }
@@ -65,6 +94,11 @@ impl Request {
                 .and_then(|m| m.as_str())
                 .and_then(Method::parse)
                 .unwrap_or(Method::Eagle),
+            tree: v
+                .get("tree")
+                .and_then(|t| t.as_str())
+                .and_then(TreeChoice::parse)
+                .unwrap_or(TreeChoice::Default),
             seed: v.get("seed").and_then(|x| x.as_f64()).map(|f| f as u64).unwrap_or(7),
             arrival: std::time::Instant::now(),
         })
@@ -107,14 +141,25 @@ mod tests {
         assert_eq!(r.max_tokens, 64);
         assert_eq!(r.method, Method::Eagle);
         assert_eq!(r.temperature, 0.0);
+        assert_eq!(r.tree, TreeChoice::Default);
     }
 
     #[test]
     fn parse_request_full() {
-        let v = Json::parse(r#"{"prompt":"x","max_tokens":8,"temperature":1.0,"method":"vanilla"}"#).unwrap();
+        let v = Json::parse(r#"{"prompt":"x","max_tokens":8,"temperature":1.0,"method":"vanilla","tree":"dynamic"}"#).unwrap();
         let r = Request::from_json(2, &v).unwrap();
         assert_eq!(r.max_tokens, 8);
         assert_eq!(r.method, Method::Vanilla);
+        assert_eq!(r.tree, TreeChoice::Dynamic);
+    }
+
+    #[test]
+    fn tree_choice_roundtrip() {
+        for t in ["default", "static", "dynamic"] {
+            assert_eq!(TreeChoice::parse(t).unwrap().name(), t);
+        }
+        assert_eq!(TreeChoice::parse("dyntree"), Some(TreeChoice::Dynamic));
+        assert!(TreeChoice::parse("nope").is_none());
     }
 
     #[test]

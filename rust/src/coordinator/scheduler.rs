@@ -67,7 +67,7 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::Method;
+    use crate::coordinator::request::{Method, TreeChoice};
 
     fn req(id: u64) -> Request {
         Request {
@@ -76,6 +76,7 @@ mod tests {
             max_tokens: 1,
             temperature: 0.0,
             method: Method::Vanilla,
+            tree: TreeChoice::Default,
             seed: 0,
             arrival: std::time::Instant::now(),
         }

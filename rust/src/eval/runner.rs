@@ -12,6 +12,7 @@ use crate::coordinator::request::Method;
 use crate::metrics::{Aggregate, GenRecord};
 use crate::models::ModelBundle;
 use crate::runtime::{Manifest, Runtime};
+use crate::spec::dyntree::TreePolicy;
 use crate::spec::engine::{EagleEngine, GenConfig, PairShift};
 
 pub struct Runner {
@@ -28,6 +29,9 @@ pub struct RunSpec {
     pub variant: String,
     pub gamma: usize,
     pub seed: u64,
+    /// draft-tree policy for `Method::Eagle` (chain methods fix their own
+    /// shape); defaults to the paper's static 4/8/8/5 tree
+    pub tree: TreePolicy,
 }
 
 impl Default for RunSpec {
@@ -39,6 +43,7 @@ impl Default for RunSpec {
             variant: "eagle".into(),
             gamma: 5,
             seed: 7,
+            tree: TreePolicy::default_tree(),
         }
     }
 }
@@ -87,7 +92,9 @@ impl Runner {
                     .drafts
                     .get(&spec.variant)
                     .ok_or_else(|| anyhow::anyhow!("draft variant '{}' not loaded", spec.variant))?;
-                EagleEngine::new_tree(&bundle.target, draft, c).generate(prompt, cfg)
+                EagleEngine::new_tree(&bundle.target, draft, c)
+                    .with_policy(spec.tree.clone())
+                    .generate(prompt, cfg)
             }
             Method::EagleChain => {
                 let draft = bundle

@@ -12,7 +12,9 @@ use crate::coordinator::request::Method;
 use crate::coordinator::BatchEagleEngine;
 use crate::metrics::Aggregate;
 use crate::models::ModelBundle;
+use crate::spec::dyntree::{DynTreeConfig, TreePolicy};
 use crate::spec::engine::GenConfig;
+use crate::spec::tree::TreeSpec;
 use crate::text::bpe::Bpe;
 
 pub struct EvalCtx {
@@ -337,6 +339,81 @@ impl EvalCtx {
         Ok(out)
     }
 
+    // ---------------------------------------------------------------------
+    // dyntree: static vs dynamic draft tree at equal verify budget
+    // ---------------------------------------------------------------------
+    pub fn dyntree(&self) -> Result<String> {
+        let wl = self.workload("mtbench")?;
+        let prompts = wl.take(self.n_prompts);
+        let bundle = ModelBundle::load(&self.runner.rt, &self.runner.man, "toy-s", &["eagle"], false, false)?;
+        let mut out = String::from(
+            "# dyntree — static vs dynamic draft tree (toy-s, T=0, equal verify budget)\n\n\
+             | policy | speedup | tau | tokens/s | mean tree nodes |\n|---|---|---|---|---|\n",
+        );
+        let base = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Vanilla, 0.0))?;
+        writeln!(out, "| vanilla | 1.00x | {:.2} | {:.1} | - |", base.tau(), base.tokens_per_sec())?;
+        let st = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Eagle, 0.0))?;
+        writeln!(
+            out,
+            "| static 4/8/8/5 | {:.2}x | {:.2} | {:.1} | {:.1} |",
+            speedup(&st, &base),
+            st.tau(),
+            st.tokens_per_sec(),
+            st.mean_tree_nodes()
+        )?;
+        // equal budget: pin the dynamic node budget to the static tree's
+        // 25 nodes (the default would otherwise resolve to verify_t - 1)
+        let eq_budget = Some(TreeSpec::tree_default().total_nodes() - 1);
+        for (label, adaptive) in [("dynamic (fixed shape)", false), ("dynamic (adaptive)", true)] {
+            let mut spec = self.spec(Method::Eagle, 0.0);
+            spec.tree = TreePolicy::Dynamic(DynTreeConfig { adaptive, budget: eq_budget, ..Default::default() });
+            let dy = self.runner.run_with(&bundle, &prompts, &spec)?;
+            writeln!(
+                out,
+                "| {label} | {:.2}x | {:.2} | {:.1} | {:.1} |",
+                speedup(&dy, &base),
+                dy.tau(),
+                dy.tokens_per_sec(),
+                dy.mean_tree_nodes()
+            )?;
+        }
+        // batched lanes: per-lane controllers adapt each lane independently
+        let bprompts: Vec<Vec<u32>> = wl.prompts.iter().take(2).map(|p| p.ids.clone()).collect();
+        if bprompts.len() == 2 {
+            let c = &self.runner.man.constants;
+            let cfg = GenConfig { max_new: self.max_new, temperature: 0.0, seed: 7, eos: None };
+            for (label, policy) in [
+                ("bs=2 static", TreePolicy::default_tree()),
+                (
+                    "bs=2 dynamic (per-lane)",
+                    TreePolicy::Dynamic(DynTreeConfig { budget: eq_budget, ..Default::default() }),
+                ),
+            ] {
+                let be = BatchEagleEngine::new(&bundle.target, &bundle.drafts["eagle"], c)
+                    .with_policy(policy);
+                let recs = be.generate(&bprompts, &cfg)?;
+                let mut agg = Aggregate::new();
+                for r in &recs {
+                    agg.add(r);
+                }
+                writeln!(
+                    out,
+                    "| {label} | - | {:.2} | {:.1} | {:.1} |",
+                    agg.tau(),
+                    agg.tokens_per_sec(),
+                    agg.mean_tree_nodes()
+                )?;
+            }
+        }
+        out.push_str(
+            "\nAll eagle rows share the static tree's 25-node verify budget; the\n\
+             dynamic planner reallocates that budget by draft confidence (global\n\
+             rerank) and the adaptive rows additionally tune depth/frontier per\n\
+             request online. Serving defaults give dynamic the full verify_t - 1.\n",
+        );
+        Ok(out)
+    }
+
     /// Run one experiment by id.
     pub fn run(&self, id: &str) -> Result<String> {
         match id {
@@ -351,11 +428,13 @@ impl EvalCtx {
             "tab4" => self.tab4(),
             "tab6" => self.tab6(),
             "tab7" => self.tab7(),
+            "dyntree" => self.dyntree(),
             _ => Err(anyhow::anyhow!("unknown experiment id '{id}'")),
         }
     }
 
-    pub const ALL: [&'static str; 11] = [
+    pub const ALL: [&'static str; 12] = [
         "fig1", "fig2", "fig8", "fig9", "fig10", "tab1", "tab2", "tab3", "tab4", "tab6", "tab7",
+        "dyntree",
     ];
 }

@@ -7,6 +7,11 @@
 //! * **L3 (this crate)** — request router, continuous batcher, KV-slot
 //!   manager, the EAGLE draft-tree engine, SpecInfer-style verification,
 //!   baselines, metrics, HTTP server, CLI and the paper-table harness.
+//!   Draft trees are shaped by a [`spec::dyntree::TreePolicy`]: the
+//!   paper's static 4/8/8/5 tree, or the dynamic planner
+//!   ([`spec::dyntree`]) that grows confidence-driven trees per round,
+//!   globally reranks them to the verify budget, and adapts speculation
+//!   depth/width per request from an online acceptance EWMA.
 //! * **L2** — JAX model graphs AOT-lowered to HLO text
 //!   (`python/compile/`), executed via the `xla` crate / PJRT.
 //! * **L1** — the Pallas tree-attention kernel inside those graphs.
@@ -40,6 +45,7 @@ pub mod prelude {
     pub use crate::metrics::{Aggregate, GenRecord};
     pub use crate::models::{artifacts_dir, EagleDraft, MedusaHeads, ModelBundle, TargetModel};
     pub use crate::runtime::{Manifest, Runtime};
+    pub use crate::spec::dyntree::{DynTreeConfig, SpecController, TreePolicy};
     pub use crate::spec::engine::{EagleEngine, GenConfig, PairShift};
     pub use crate::spec::tree::TreeSpec;
     pub use crate::text::bpe::Bpe;

@@ -1,8 +1,11 @@
 //! `repro` — the eagle-serve CLI.
 //!
 //!   repro serve   [--addr 127.0.0.1:8085] [--model toy-s] [--queue 64]
+//!                 [--tree static|dynamic]
 //!   repro generate --prompt "..." [--model toy-s] [--method eagle]
 //!                  [--max-tokens 64] [--temperature 0] [--seed 7]
+//!                  [--tree static|dynamic] [--draft-depth N] [--frontier K]
+//!                  [--branch B] [--no-adapt]
 //!   repro eval    (--all | --exp fig1) [--n 16] [--max-new 48] [--out results]
 //!   repro profile [--model toy-s] [--n 4]   step-phase breakdown (§Perf)
 //!   repro selftest                            losslessness smoke check
@@ -12,12 +15,13 @@ use eagle_serve::coordinator::request::Method;
 use eagle_serve::eval::tables::EvalCtx;
 use eagle_serve::eval::runner::{Runner, RunSpec};
 use eagle_serve::models::{artifacts_dir, ModelBundle};
+use eagle_serve::spec::dyntree::{DynTreeConfig, TreePolicy};
 use eagle_serve::spec::engine::GenConfig;
 use eagle_serve::text::bpe::Bpe;
 use eagle_serve::util::cli::Args;
 
 fn main() {
-    let args = Args::parse(std::env::args().skip(1), &["all", "verbose"]);
+    let args = Args::parse(std::env::args().skip(1), &["all", "verbose", "no-adapt"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "serve" => serve(&args),
@@ -40,9 +44,10 @@ fn print_help() {
     println!(
         "repro — EAGLE speculative-decoding serving framework\n\n\
          USAGE: repro <serve|generate|eval|profile|selftest> [options]\n\n\
-         serve     --addr HOST:PORT --model NAME --queue N\n\
+         serve     --addr HOST:PORT --model NAME --queue N --tree static|dynamic\n\
          generate  --prompt TEXT --model NAME --method eagle|eagle-chain|vanilla|medusa|lookahead|classic-spec\n\
          \u{20}          --max-tokens N --temperature F --seed N\n\
+         \u{20}          --tree static|dynamic [--draft-depth N --frontier K --branch B --no-adapt]\n\
          eval      --all | --exp ID   (--n PROMPTS --max-new N --out DIR)\n\
          profile   --model NAME --n N\n\
          selftest  quick losslessness check (eagle == vanilla at T=0)\n\n\
@@ -50,11 +55,31 @@ fn print_help() {
     );
 }
 
+/// Parse `--tree static|dynamic` (+ dynamic knobs) into a policy.
+fn tree_policy(args: &Args) -> Result<TreePolicy> {
+    match args.get_or("tree", "static") {
+        "static" => Ok(TreePolicy::default_tree()),
+        "dynamic" | "dyntree" => {
+            let base = DynTreeConfig::default();
+            let dc = DynTreeConfig {
+                depth: args.usize_or("draft-depth", base.depth),
+                frontier_k: args.usize_or("frontier", base.frontier_k),
+                branch: args.usize_or("branch", base.branch),
+                adaptive: !args.has("no-adapt"),
+                ..base
+            };
+            Ok(TreePolicy::Dynamic(dc))
+        }
+        other => Err(anyhow::anyhow!("unknown --tree '{other}' (static|dynamic)")),
+    }
+}
+
 fn serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:8085");
     let model = args.get_or("model", "toy-s");
     let queue = args.usize_or("queue", 64);
-    eagle_serve::server::serve(addr, model, &artifacts_dir(), queue)
+    let tree = tree_policy(args)?;
+    eagle_serve::server::serve(addr, model, &artifacts_dir(), queue, tree)
 }
 
 fn generate(args: &Args) -> Result<()> {
@@ -71,6 +96,7 @@ fn generate(args: &Args) -> Result<()> {
         temperature: args.f32_or("temperature", 0.0),
         max_new: args.usize_or("max-tokens", 64),
         seed: args.u64_or("seed", 7),
+        tree: tree_policy(args)?,
         ..Default::default()
     };
     let cfg = GenConfig {
@@ -90,6 +116,9 @@ fn generate(args: &Args) -> Result<()> {
         rec.tokens_per_sec(),
         rec.wall_ns as f64 / 1e6
     );
+    if rec.mean_tree_nodes() > 0.0 {
+        println!("tree   : {:.1} verified draft nodes/round (mean)", rec.mean_tree_nodes());
+    }
     Ok(())
 }
 

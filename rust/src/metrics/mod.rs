@@ -31,6 +31,10 @@ pub struct GenRecord {
     /// Per-round accepted counts (drafted accepted + bonus), i.e. tokens
     /// committed per target pass after prefill.
     pub round_accepts: Vec<usize>,
+    /// Per-round verified draft-tree size (nodes excluding the root) —
+    /// constant for static trees, workload-dependent under the dynamic
+    /// planner. Empty for non-tree engines.
+    pub round_tree_nodes: Vec<usize>,
     /// n-alpha: [n] -> (accepted, tried) at chain-draft position n+1.
     pub alpha: Vec<(u64, u64)>,
     /// Draft tokens proposed in total (chain mode: gamma per round).
@@ -47,6 +51,7 @@ impl GenRecord {
             target_passes: 0,
             draft_passes: 0,
             round_accepts: Vec::new(),
+            round_tree_nodes: Vec::new(),
             alpha: vec![(0, 0); 5],
             drafted: 0,
             wall_ns: 0,
@@ -66,6 +71,14 @@ impl GenRecord {
     pub fn tokens_per_sec(&self) -> f64 {
         self.tokens.len() as f64 / (self.wall_ns as f64 / 1e9)
     }
+
+    /// Mean verified tree size per round (0 when no tree rounds ran).
+    pub fn mean_tree_nodes(&self) -> f64 {
+        if self.round_tree_nodes.is_empty() {
+            return 0.0;
+        }
+        self.round_tree_nodes.iter().sum::<usize>() as f64 / self.round_tree_nodes.len() as f64
+    }
 }
 
 /// Aggregate over many generations.
@@ -78,6 +91,8 @@ pub struct Aggregate {
     pub draft_passes: usize,
     pub round_accepts_sum: usize,
     pub rounds: usize,
+    pub tree_nodes_sum: usize,
+    pub tree_rounds: usize,
     pub alpha: Vec<(u64, u64)>,
     pub wall_each: Vec<u64>,
     pub timeline: Timeline,
@@ -96,6 +111,8 @@ impl Aggregate {
         self.draft_passes += r.draft_passes;
         self.round_accepts_sum += r.round_accepts.iter().sum::<usize>();
         self.rounds += r.round_accepts.len();
+        self.tree_nodes_sum += r.round_tree_nodes.iter().sum::<usize>();
+        self.tree_rounds += r.round_tree_nodes.len();
         for (i, &(a, t)) in r.alpha.iter().enumerate() {
             self.alpha[i].0 += a;
             self.alpha[i].1 += t;
@@ -118,6 +135,14 @@ impl Aggregate {
 
     pub fn tokens_per_sec(&self) -> f64 {
         self.tokens as f64 / (self.wall_ns as f64 / 1e9)
+    }
+
+    /// Mean verified tree size per round across all generations.
+    pub fn mean_tree_nodes(&self) -> f64 {
+        if self.tree_rounds == 0 {
+            return 0.0;
+        }
+        self.tree_nodes_sum as f64 / self.tree_rounds as f64
     }
 
     /// n-alpha acceptance rates, None when that depth was never tried.
@@ -164,6 +189,19 @@ mod tests {
         assert!((a.tokens_per_sec() - 1.0).abs() < 1e-9);
         assert_eq!(a.alphas()[0], Some(2.0 / 3.0));
         assert_eq!(a.alphas()[4], None);
+    }
+
+    #[test]
+    fn tree_node_means() {
+        let mut r = GenRecord::new(1);
+        r.round_tree_nodes = vec![25, 15, 20];
+        assert!((r.mean_tree_nodes() - 20.0).abs() < 1e-9);
+        let mut a = Aggregate::new();
+        a.add(&r);
+        a.add(&r);
+        assert!((a.mean_tree_nodes() - 20.0).abs() < 1e-9);
+        assert_eq!(Aggregate::new().mean_tree_nodes(), 0.0);
+        assert_eq!(GenRecord::new(1).mean_tree_nodes(), 0.0);
     }
 
     #[test]

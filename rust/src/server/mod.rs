@@ -16,10 +16,11 @@ use std::net::TcpListener;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::coordinator::request::{Method, Request, Response};
+use crate::coordinator::request::{Method, Request, Response, TreeChoice};
 use crate::coordinator::{queue::PushError, RequestQueue, Scheduler};
 use crate::eval::runner::{Runner, RunSpec};
 use crate::models::ModelBundle;
+use crate::spec::dyntree::TreePolicy;
 use crate::spec::engine::GenConfig;
 use crate::text::bpe::Bpe;
 use crate::util::json::Json;
@@ -36,7 +37,15 @@ pub struct ServerStats {
 /// Run the server (blocking). The inference worker owns the PJRT client
 /// (single accelerator, single worker — CPU testbed); HTTP I/O threads
 /// hand requests over through the bounded queue (backpressure -> 429).
-pub fn serve(addr: &str, model: &str, artifacts: &std::path::Path, queue_cap: usize) -> Result<()> {
+/// `default_tree` is the draft-tree policy applied when a request does
+/// not pick one via its `"tree"` field.
+pub fn serve(
+    addr: &str,
+    model: &str,
+    artifacts: &std::path::Path,
+    queue_cap: usize,
+    default_tree: TreePolicy,
+) -> Result<()> {
     let queue = Arc::new(RequestQueue::new(queue_cap));
     let stats = Arc::new(ServerStats {
         requests: AtomicU64::new(0),
@@ -65,7 +74,7 @@ pub fn serve(addr: &str, model: &str, artifacts: &std::path::Path, queue_cap: us
                 &runner.rt, &runner.man, &model, &["eagle"], true, true,
             )
             .expect("loading model bundle");
-            eprintln!("[server] model '{model}' loaded; serving");
+            eprintln!("[server] model '{model}' loaded; serving (tree policy: {})", default_tree.name());
             let sched = Scheduler::new(1, 0);
             loop {
                 let batch = sched.next_batch(&queue);
@@ -80,6 +89,14 @@ pub fn serve(addr: &str, model: &str, artifacts: &std::path::Path, queue_cap: us
                         temperature: req.temperature,
                         max_new: req.max_tokens,
                         seed: req.seed,
+                        tree: match (req.tree, &default_tree) {
+                            (TreeChoice::Static, _) => TreePolicy::default_tree(),
+                            // explicit "dynamic" keeps the server's configured
+                            // dynamic knobs when it already runs dynamic
+                            (TreeChoice::Dynamic, TreePolicy::Dynamic(_)) => default_tree.clone(),
+                            (TreeChoice::Dynamic, _) => TreePolicy::dynamic_default(),
+                            (TreeChoice::Default, _) => default_tree.clone(),
+                        },
                         ..Default::default()
                     };
                     let cfg = GenConfig {

@@ -1,0 +1,207 @@
+//! Adaptive per-request speculation controller.
+//!
+//! Tracks acceptance online as an EWMA over the per-depth `alpha` stats
+//! the metrics layer already records (`GenRecord::alpha` increments), and
+//! adapts the dynamic planner's draft depth / frontier width round by
+//! round: speculation deepens while acceptance stays high and shrinks
+//! when it collapses, so a hard prompt stops paying for drafts that
+//! never survive verification. The total-nodes `budget` is never touched
+//! here — it is fixed by the lowered `verify_t` executable shape and
+//! enforced by the planner's rerank.
+//!
+//! This subsumes the classic-spec optimal-γ question (Chen et al.): with
+//! `frontier_k = branch = 1` the controller is exactly an online γ tuner
+//! for chain drafting.
+
+use super::planner::DynTreeParams;
+
+/// Tuning knobs for [`SpecController`].
+#[derive(Debug, Clone)]
+pub struct ControllerConfig {
+    /// EWMA weight on history, in `[0, 1)`; higher = smoother.
+    pub ewma_beta: f32,
+    /// Smoothed acceptance rate above which speculation deepens/widens.
+    pub high: f32,
+    /// Smoothed acceptance rate below which speculation shrinks.
+    pub low: f32,
+    pub min_depth: usize,
+    pub max_depth: usize,
+    pub min_frontier: usize,
+    pub max_frontier: usize,
+    /// Observe-only rounds before the first adaptation step.
+    pub warmup_rounds: u64,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            ewma_beta: 0.7,
+            high: 0.7,
+            low: 0.35,
+            min_depth: 1,
+            max_depth: 7,
+            min_frontier: 1,
+            max_frontier: 8,
+            warmup_rounds: 2,
+        }
+    }
+}
+
+/// Online acceptance tracker + shape adapter. One instance per request
+/// (bs=1 engine) or per lane (batched engine).
+#[derive(Debug, Clone)]
+pub struct SpecController {
+    pub cfg: ControllerConfig,
+    params: DynTreeParams,
+    /// Per-depth acceptance EWMA (index = draft chain position).
+    pub alpha_ewma: Vec<f32>,
+    alpha_seen: Vec<bool>,
+    /// Overall smoothed acceptance rate across depths.
+    pub rate_ewma: f32,
+    rate_seen: bool,
+    pub rounds: u64,
+}
+
+impl SpecController {
+    pub fn new(cfg: ControllerConfig, init: DynTreeParams) -> SpecController {
+        let depth = init.depth.clamp(cfg.min_depth.max(1), cfg.max_depth.max(1));
+        let frontier_k = init.frontier_k.clamp(cfg.min_frontier.max(1), cfg.max_frontier.max(1));
+        let n = cfg.max_depth.max(depth);
+        SpecController {
+            params: DynTreeParams { depth, frontier_k, ..init },
+            alpha_ewma: vec![0.0; n],
+            alpha_seen: vec![false; n],
+            rate_ewma: 0.0,
+            rate_seen: false,
+            rounds: 0,
+            cfg,
+        }
+    }
+
+    /// The shape to draft with this round.
+    pub fn params(&self) -> DynTreeParams {
+        self.params
+    }
+
+    /// Fold in one round's per-depth `(accepted, tried)` increments — the
+    /// delta of `GenRecord::alpha` across the round — then adapt.
+    pub fn observe(&mut self, alpha_delta: &[(u64, u64)]) {
+        let beta = self.cfg.ewma_beta;
+        let (mut hit, mut tried) = (0u64, 0u64);
+        for (d, &(h, t)) in alpha_delta.iter().enumerate() {
+            if t == 0 {
+                continue;
+            }
+            hit += h;
+            tried += t;
+            let r = h as f32 / t as f32;
+            if d < self.alpha_ewma.len() {
+                self.alpha_ewma[d] = if self.alpha_seen[d] {
+                    beta * self.alpha_ewma[d] + (1.0 - beta) * r
+                } else {
+                    r
+                };
+                self.alpha_seen[d] = true;
+            }
+        }
+        self.rounds += 1;
+        if tried == 0 {
+            return;
+        }
+        let r = hit as f32 / tried as f32;
+        self.rate_ewma = if self.rate_seen { beta * self.rate_ewma + (1.0 - beta) * r } else { r };
+        self.rate_seen = true;
+        if self.rounds > self.cfg.warmup_rounds {
+            self.adapt();
+        }
+    }
+
+    /// Convenience for engines that only know the accepted chain length
+    /// (the batched greedy engine): synthesizes per-depth increments —
+    /// position `d` was tried, and hit iff `d < accepted`.
+    pub fn observe_round(&mut self, accepted: usize, attempted: usize) {
+        let n = attempted.max(accepted).min(64);
+        if n == 0 {
+            self.rounds += 1;
+            return;
+        }
+        let delta: Vec<(u64, u64)> = (0..n).map(|d| (u64::from(d < accepted), 1u64)).collect();
+        self.observe(&delta);
+    }
+
+    fn adapt(&mut self) {
+        let c = &self.cfg;
+        if self.rate_ewma >= c.high {
+            self.params.depth = (self.params.depth + 1).min(c.max_depth);
+            self.params.frontier_k = (self.params.frontier_k + 1).min(c.max_frontier);
+        } else if self.rate_ewma <= c.low {
+            self.params.depth = self.params.depth.saturating_sub(1).max(c.min_depth);
+            self.params.frontier_k = self.params.frontier_k.saturating_sub(1).max(c.min_frontier);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn init() -> DynTreeParams {
+        DynTreeParams { depth: 3, frontier_k: 4, branch: 4, budget: 31 }
+    }
+
+    #[test]
+    fn high_acceptance_deepens_to_max() {
+        let cfg = ControllerConfig::default();
+        let mut c = SpecController::new(cfg.clone(), init());
+        for _ in 0..12 {
+            c.observe_round(5, 5);
+        }
+        assert_eq!(c.params().depth, cfg.max_depth);
+        assert_eq!(c.params().frontier_k, cfg.max_frontier);
+        assert!(c.rate_ewma > 0.9);
+        assert_eq!(c.params().budget, 31, "controller must not touch the node budget");
+    }
+
+    #[test]
+    fn collapsed_acceptance_shrinks_to_min() {
+        let cfg = ControllerConfig::default();
+        let mut c = SpecController::new(cfg.clone(), init());
+        for _ in 0..12 {
+            c.observe_round(0, 5);
+        }
+        assert_eq!(c.params().depth, cfg.min_depth);
+        assert_eq!(c.params().frontier_k, cfg.min_frontier);
+        assert!(c.rate_ewma < 0.1);
+    }
+
+    #[test]
+    fn warmup_rounds_do_not_adapt() {
+        let cfg = ControllerConfig { warmup_rounds: 3, ..Default::default() };
+        let mut c = SpecController::new(cfg, init());
+        c.observe_round(5, 5);
+        c.observe_round(5, 5);
+        c.observe_round(5, 5);
+        assert_eq!(c.params().depth, 3, "no adaptation during warmup");
+        c.observe_round(5, 5);
+        assert_eq!(c.params().depth, 4, "adapts after warmup");
+    }
+
+    #[test]
+    fn per_depth_ewma_tracks_shallow_vs_deep() {
+        let mut c = SpecController::new(ControllerConfig::default(), init());
+        // depth 0 always accepted, depth 1 never
+        for _ in 0..8 {
+            c.observe(&[(1, 1), (0, 1)]);
+        }
+        assert!(c.alpha_ewma[0] > 0.95);
+        assert!(c.alpha_ewma[1] < 0.05);
+    }
+
+    #[test]
+    fn init_clamps_to_config_bounds() {
+        let cfg = ControllerConfig { max_depth: 4, max_frontier: 3, ..Default::default() };
+        let c = SpecController::new(cfg, DynTreeParams { depth: 9, frontier_k: 9, branch: 4, budget: 10 });
+        assert_eq!(c.params().depth, 4);
+        assert_eq!(c.params().frontier_k, 3);
+    }
+}

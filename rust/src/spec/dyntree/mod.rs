@@ -1,0 +1,27 @@
+//! Dynamic draft-tree planning (S20) — the EAGLE-2 direction built on the
+//! paper's own insight that draft confidence tracks acceptance
+//! probability:
+//!
+//! * [`planner`] — confidence-driven expansion (top-K frontier by
+//!   cumulative draft log-prob) and the global rerank that keeps the best
+//!   `verify_t - 1` nodes, ancestor-closed, per round;
+//! * [`controller`] — an online EWMA acceptance tracker (over the
+//!   per-depth `alpha` stats the metrics layer records) that adapts draft
+//!   depth / frontier width per request, shrinking speculation when
+//!   acceptance collapses and deepening it when acceptance is high;
+//! * [`policy`] — [`TreePolicy`] (`Static(TreeSpec)` | `Dynamic(..)`),
+//!   threaded through `EagleEngine`, `BatchEagleEngine`, the server/CLI
+//!   config, and the eval harness (`repro eval --exp dyntree`).
+//!
+//! Topology invariants (ancestor closure, node budget, uniform-confidence
+//! degradation to the static tree) are property-tested in
+//! `rust/tests/prop_dyntree.rs`; planner overhead is benchmarked next to
+//! bias-building and softmax in `rust/benches/hot_path.rs`.
+
+pub mod controller;
+pub mod planner;
+pub mod policy;
+
+pub use controller::{ControllerConfig, SpecController};
+pub use planner::{expand_candidates, rerank, select_frontier, DynTreeParams};
+pub use policy::{DynTreeConfig, TreePolicy};

@@ -1,0 +1,173 @@
+//! Confidence-driven tree planning: frontier selection, candidate
+//! scoring, and the global rerank that turns an over-grown candidate tree
+//! into the node set actually sent to verification.
+//!
+//! The planner exploits the paper's observation that draft confidence
+//! tracks acceptance probability (the EAGLE-2 direction): instead of
+//! fixed per-level widths, each draft step expands the top-K frontier
+//! nodes by *cumulative* draft log-prob, and a final global rerank keeps
+//! the best `budget` nodes across all depths — ancestor-closed, so the
+//! result is always a valid [`DraftTree`] for `verify_inputs`.
+//! All invariants are property-tested in `rust/tests/prop_dyntree.rs`.
+
+use crate::spec::sampling::top_k;
+use crate::spec::tree::DraftTree;
+
+/// Concrete per-round shape limits for dynamic growth (the resolved form
+/// of `DynTreeConfig`, after executable-shape clamping).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DynTreeParams {
+    /// Maximum draft depth (number of draft-step levels).
+    pub depth: usize,
+    /// Frontier width: nodes expanded per level, by cumulative score.
+    pub frontier_k: usize,
+    /// Children considered per expanded node.
+    pub branch: usize,
+    /// Maximum non-root nodes kept for verification (`<= verify_t - 1`).
+    pub budget: usize,
+}
+
+/// Top-`k` of `candidates` by cumulative draft log-prob. Ties break by
+/// construction order; the result is returned in ascending node order so
+/// downstream slot assignment stays deterministic.
+pub fn select_frontier(tree: &DraftTree, candidates: &[usize], k: usize) -> Vec<usize> {
+    if candidates.len() <= k {
+        return candidates.to_vec();
+    }
+    let mut ranked: Vec<usize> = candidates.to_vec();
+    ranked.sort_by(|&a, &b| {
+        tree.nodes[b]
+            .score
+            .partial_cmp(&tree.nodes[a].score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    ranked.truncate(k);
+    ranked.sort_unstable();
+    ranked
+}
+
+/// Score the top-`branch` children of an expanded node from its draft
+/// probability row: `(token, cumulative log-prob)` pairs, best first.
+pub fn expand_candidates(parent_score: f32, probs: &[f32], branch: usize) -> Vec<(u32, f32)> {
+    top_k(probs, branch)
+        .into_iter()
+        .map(|(tok, pr)| (tok as u32, parent_score + pr.max(1e-20).ln()))
+        .collect()
+}
+
+/// Global rerank: keep the root plus the best `budget` nodes by
+/// cumulative score, ancestor-closed. Returns the pruned tree and the
+/// kept ORIGINAL node indices (ascending; `kept[i]` is the original
+/// index of pruned node `i`, so `kept[0] == 0`).
+///
+/// With real cumulative log-probs a child never outscores its parent, so
+/// the kept set is simply the top-`budget` scores; the explicit
+/// ancestor-closure walk below also keeps the function total for
+/// arbitrary score assignments (the property tests feed it those).
+pub fn rerank(tree: &DraftTree, budget: usize) -> (DraftTree, Vec<usize>) {
+    let n = tree.len();
+    if n == 0 || n - 1 <= budget {
+        return (tree.clone(), (0..n).collect());
+    }
+    let mut order: Vec<usize> = (1..n).collect();
+    order.sort_by(|&a, &b| {
+        tree.nodes[b]
+            .score
+            .partial_cmp(&tree.nodes[a].score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut keep = vec![false; n];
+    keep[0] = true;
+    let mut kept = 0usize;
+    for &i in &order {
+        if kept >= budget {
+            break;
+        }
+        if keep[i] {
+            continue;
+        }
+        // unkept ancestors (root excluded — always kept) plus the node itself
+        let mut need = Vec::new();
+        let mut cur = Some(i);
+        while let Some(c) = cur {
+            if !keep[c] {
+                need.push(c);
+            }
+            cur = tree.nodes[c].parent;
+        }
+        if kept + need.len() <= budget {
+            kept += need.len();
+            for &c in &need {
+                keep[c] = true;
+            }
+        }
+    }
+    // Rebuild in original index order (parents always precede children).
+    let mut remap = vec![usize::MAX; n];
+    let mut kept_idx = Vec::with_capacity(kept + 1);
+    let mut out = DraftTree::with_root(tree.nodes[0].token);
+    remap[0] = 0;
+    kept_idx.push(0);
+    for i in 1..n {
+        if !keep[i] {
+            continue;
+        }
+        let p = tree.nodes[i].parent.expect("non-root node must have a parent");
+        let ni = out.add(remap[p], tree.nodes[i].token, tree.nodes[i].score, tree.nodes[i].q.clone());
+        remap[i] = ni;
+        kept_idx.push(i);
+    }
+    (out, kept_idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scored_tree() -> DraftTree {
+        // root -> a(-0.1), b(-0.9); a -> c(-0.2), d(-1.5); b -> e(-1.0)
+        let mut t = DraftTree::with_root(0);
+        let a = t.add(0, 1, -0.1, None);
+        let b = t.add(0, 2, -0.9, None);
+        t.add(a, 3, -0.2, None);
+        t.add(a, 4, -1.5, None);
+        t.add(b, 5, -1.0, None);
+        t
+    }
+
+    #[test]
+    fn frontier_picks_top_scores_in_node_order() {
+        let t = scored_tree();
+        assert_eq!(select_frontier(&t, &[1, 2, 3, 4, 5], 2), vec![1, 3]);
+        assert_eq!(select_frontier(&t, &[2, 5], 4), vec![2, 5]);
+    }
+
+    #[test]
+    fn expand_orders_by_confidence() {
+        let c = expand_candidates(-1.0, &[0.1, 0.6, 0.3], 2);
+        assert_eq!(c[0].0, 1);
+        assert_eq!(c[1].0, 2);
+        assert!(c[0].1 > c[1].1);
+        assert!(c[0].1 < -1.0); // cumulative: parent score + ln(p) < parent score
+    }
+
+    #[test]
+    fn rerank_keeps_best_and_stays_closed() {
+        let t = scored_tree();
+        let (pruned, kept) = rerank(&t, 3);
+        // top-3 by score: a(-0.1), c(-0.2), b(-0.9) — all closure-complete
+        assert_eq!(kept, vec![0, 1, 2, 3]);
+        assert_eq!(pruned.len(), 4);
+        assert_eq!(pruned.nodes[3].parent, Some(1)); // c reparented onto pruned a
+    }
+
+    #[test]
+    fn rerank_identity_when_under_budget() {
+        let t = scored_tree();
+        let (pruned, kept) = rerank(&t, 16);
+        assert_eq!(pruned.len(), t.len());
+        assert_eq!(kept, vec![0, 1, 2, 3, 4, 5]);
+    }
+}

@@ -1,0 +1,151 @@
+//! Tree-policy configuration: the switch between the paper's static
+//! draft tree and the dynamic planner, threaded through the engines, the
+//! server/CLI config, and the eval harness.
+
+use super::controller::ControllerConfig;
+use super::planner::DynTreeParams;
+use crate::spec::tree::TreeSpec;
+
+/// User-facing dynamic-tree configuration. Executable-shape limits
+/// (`verify_t`, `draft_w`, `accept_a`) are not known here; they are
+/// applied by [`DynTreeConfig::params`] / [`DynTreeConfig::clamped_controller`]
+/// at engine-construction time, so lowered shapes are always respected.
+#[derive(Debug, Clone)]
+pub struct DynTreeConfig {
+    /// Initial draft depth (draft-step levels per round).
+    pub depth: usize,
+    /// Initial frontier width (nodes expanded per level).
+    pub frontier_k: usize,
+    /// Children considered per expanded node.
+    pub branch: usize,
+    /// Max nodes sent to verification excluding the root;
+    /// `None` resolves to `verify_t - 1` (the full verify budget).
+    pub budget: Option<usize>,
+    /// Enable the per-request acceptance controller.
+    pub adaptive: bool,
+    pub controller: ControllerConfig,
+}
+
+impl Default for DynTreeConfig {
+    fn default() -> Self {
+        // Starts at the static 4/8/8/5 tree's depth with a slightly wider
+        // frontier. The node budget defaults to the FULL verify width
+        // (verify_t - 1); pass `budget: Some(n)` for equal-budget
+        // comparisons against a static tree of n nodes.
+        DynTreeConfig {
+            depth: 4,
+            frontier_k: 6,
+            branch: 4,
+            budget: None,
+            adaptive: true,
+            controller: ControllerConfig::default(),
+        }
+    }
+}
+
+impl DynTreeConfig {
+    /// Resolve shape-dependent limits into concrete planner params:
+    /// * kept tree fits the verify call: `budget <= verify_t - 1`;
+    /// * the accepted chain replayed by the draft extend call fits:
+    ///   `depth + 1 <= draft_w` and `depth + 1 <= accept_a`;
+    /// * per-level step width fits: `frontier_k <= draft_w`.
+    pub fn params(&self, verify_t: usize, draft_w: usize, accept_a: usize) -> DynTreeParams {
+        let max_depth = draft_w.min(accept_a).saturating_sub(1).max(1);
+        let verify_budget = verify_t.saturating_sub(1).max(1);
+        let budget = self.budget.unwrap_or(verify_budget).clamp(1, verify_budget);
+        DynTreeParams {
+            depth: self.depth.clamp(1, max_depth),
+            frontier_k: self.frontier_k.clamp(1, draft_w.max(1)),
+            branch: self.branch.max(1),
+            budget,
+        }
+    }
+
+    /// Controller config with adaptation ceilings clamped to the same
+    /// executable-shape limits as [`DynTreeConfig::params`].
+    pub fn clamped_controller(&self, draft_w: usize, accept_a: usize) -> ControllerConfig {
+        let mut c = self.controller.clone();
+        let max_depth = draft_w.min(accept_a).saturating_sub(1).max(1);
+        c.max_depth = c.max_depth.clamp(1, max_depth);
+        c.min_depth = c.min_depth.clamp(1, c.max_depth);
+        c.max_frontier = c.max_frontier.clamp(1, draft_w.max(1));
+        c.min_frontier = c.min_frontier.clamp(1, c.max_frontier);
+        c
+    }
+}
+
+/// How an EAGLE engine shapes its draft tree each round.
+#[derive(Debug, Clone)]
+pub enum TreePolicy {
+    /// Fixed per-level widths — the paper's 4/8/8/5 default or a chain.
+    Static(TreeSpec),
+    /// Confidence-driven expansion + global rerank, optionally with the
+    /// adaptive per-request controller.
+    Dynamic(DynTreeConfig),
+}
+
+impl TreePolicy {
+    /// The paper's default static tree.
+    pub fn default_tree() -> TreePolicy {
+        TreePolicy::Static(TreeSpec::tree_default())
+    }
+
+    /// Classic-spec chain shape.
+    pub fn chain(gamma: usize) -> TreePolicy {
+        TreePolicy::Static(TreeSpec::chain(gamma))
+    }
+
+    /// Dynamic planning with default knobs (adaptive controller on).
+    pub fn dynamic_default() -> TreePolicy {
+        TreePolicy::Dynamic(DynTreeConfig::default())
+    }
+
+    pub fn is_dynamic(&self) -> bool {
+        matches!(self, TreePolicy::Dynamic(_))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TreePolicy::Static(_) => "static",
+            TreePolicy::Dynamic(_) => "dynamic",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_respect_lowered_shapes() {
+        let dc = DynTreeConfig { depth: 99, frontier_k: 99, budget: Some(999), ..Default::default() };
+        let p = dc.params(32, 8, 8);
+        assert_eq!(p.depth, 7, "depth + 1 must fit draft_w and accept_a");
+        assert_eq!(p.frontier_k, 8);
+        assert_eq!(p.budget, 31, "root + budget must fit verify_t");
+    }
+
+    #[test]
+    fn default_budget_matches_verify_width() {
+        let p = DynTreeConfig::default().params(26, 8, 8);
+        assert_eq!(p.budget, 25); // same class as the static 4/8/8/5 tree
+        assert_eq!(p.depth, 4);
+    }
+
+    #[test]
+    fn clamped_controller_bounds() {
+        let dc = DynTreeConfig::default();
+        let c = dc.clamped_controller(4, 8);
+        assert_eq!(c.max_depth, 3);
+        assert!(c.min_depth <= c.max_depth);
+        assert_eq!(c.max_frontier, 4);
+    }
+
+    #[test]
+    fn policy_names() {
+        assert_eq!(TreePolicy::default_tree().name(), "static");
+        assert_eq!(TreePolicy::dynamic_default().name(), "dynamic");
+        assert!(TreePolicy::dynamic_default().is_dynamic());
+        assert!(!TreePolicy::chain(5).is_dynamic());
+    }
+}

@@ -21,6 +21,7 @@ use anyhow::{bail, Result};
 use std::rc::Rc;
 use std::time::Instant;
 
+use super::dyntree::{expand_candidates, rerank, select_frontier, DynTreeParams, SpecController, TreePolicy};
 use super::sampling::{argmax, sample, softmax, top_k, tree_accept, TreeVerdict};
 use super::tree::{chain_extend_bias, draft_step_bias, DraftTree, TreeSpec};
 use crate::metrics::GenRecord;
@@ -52,7 +53,9 @@ pub enum PairShift {
 pub struct EagleEngine<'a> {
     pub target: &'a TargetModel,
     pub draft: &'a EagleDraft,
-    pub tree_spec: TreeSpec,
+    /// How the draft tree is shaped each round (static widths or the
+    /// dynamic confidence-driven planner).
+    pub policy: TreePolicy,
     pub shift: PairShift,
     /// verify width (t) — must match a lowered verify_t{t} executable.
     pub verify_t: usize,
@@ -65,7 +68,7 @@ impl<'a> EagleEngine<'a> {
         EagleEngine {
             target,
             draft,
-            tree_spec: TreeSpec::tree_default(),
+            policy: TreePolicy::default_tree(),
             shift: PairShift::Shifted,
             verify_t: c.tree_t,
             accept_a: c.accept_a,
@@ -84,12 +87,19 @@ impl<'a> EagleEngine<'a> {
         EagleEngine {
             target,
             draft,
-            tree_spec: TreeSpec::chain(gamma),
+            policy: TreePolicy::chain(gamma),
             shift,
             verify_t: c.chain_t,
             accept_a: c.accept_a,
             draft_w: c.draft_w,
         }
+    }
+
+    /// Swap the tree policy (builder-style; used by the runner/server to
+    /// select `TreePolicy::Dynamic` per request).
+    pub fn with_policy(mut self, policy: TreePolicy) -> Self {
+        self.policy = policy;
+        self
     }
 
     /// Sample/argmax from target logits row.
@@ -157,6 +167,20 @@ impl<'a> EagleEngine<'a> {
         let mut pending_idx = vec![0i32; self.accept_a];
         let mut pending_n = 0i32;
 
+        // dynamic policy: resolved shape limits + optional per-request
+        // controller (EWMA acceptance tracker adapting depth/frontier)
+        let base_params: Option<DynTreeParams> = match &self.policy {
+            TreePolicy::Dynamic(dc) => Some(dc.params(self.verify_t, self.draft_w, self.accept_a)),
+            TreePolicy::Static(_) => None,
+        };
+        let mut controller: Option<SpecController> = match &self.policy {
+            TreePolicy::Dynamic(dc) if dc.adaptive => Some(SpecController::new(
+                dc.clamped_controller(self.draft_w, self.accept_a),
+                base_params.expect("dynamic policy resolves params"),
+            )),
+            _ => None,
+        };
+
         // ---- decode rounds --------------------------------------------------
         while rec.tokens.len() < cfg.max_new {
             if m + self.verify_t + 1 >= s_tot {
@@ -166,7 +190,27 @@ impl<'a> EagleEngine<'a> {
             let th = Instant::now();
             let mut tree = DraftTree::with_root(committed[m]);
             rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
-            self.grow_tree(&mut tree, &root_feat, &root_logits, m, draft_len, &mut dcache, cfg, &mut rng, &mut rec)?;
+            match &self.policy {
+                TreePolicy::Static(spec) => {
+                    self.grow_tree(&mut tree, spec, &root_feat, &root_logits, m, draft_len, &mut dcache, cfg, &mut rng, &mut rec)?;
+                }
+                TreePolicy::Dynamic(_) => {
+                    let params = controller
+                        .as_ref()
+                        .map(|c| c.params())
+                        .or(base_params)
+                        .expect("dynamic policy resolves params");
+                    self.grow_tree_dynamic(&mut tree, &params, &root_feat, &root_logits, m, draft_len, &mut dcache, cfg, &mut rng, &mut rec)?;
+                    let th = Instant::now();
+                    if tree.len() - 1 > params.budget {
+                        let (pruned, _kept) = rerank(&tree, params.budget);
+                        tree = pruned;
+                    }
+                    rec.drafted += tree.len() - 1;
+                    rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
+                }
+            }
+            rec.round_tree_nodes.push(tree.len() - 1);
 
             // 2. verify
             let th = Instant::now();
@@ -187,9 +231,29 @@ impl<'a> EagleEngine<'a> {
             rec.timeline.verify_ns += t0.elapsed().as_nanos() as u64;
             rec.target_passes += 1;
 
-            // 3. acceptance walk
+            // 3. acceptance walk (snapshot alpha so the controller can
+            //    consume this round's per-depth increments)
             let th = Instant::now();
+            let alpha_before = rec.alpha.clone();
             let (path, bonus) = self.accept(&tree, &vout.logits, cfg, &mut rng, &mut rec);
+            if let Some(c) = controller.as_mut() {
+                let mut delta: Vec<(u64, u64)> = rec
+                    .alpha
+                    .iter()
+                    .zip(&alpha_before)
+                    .map(|(&(h, t), &(h0, t0))| (h - h0, t - t0))
+                    .collect();
+                // the metrics layer buckets alpha only up to delta.len()
+                // depths; deeper positions (dynamic trees can exceed them)
+                // are synthesized from the accepted path so the controller
+                // is never blind to deep levels that never commit
+                let attempted = tree.nodes.iter().map(|n| n.depth).max().unwrap_or(0);
+                let accepted = path.len() - 1;
+                for dpt in delta.len()..attempted {
+                    delta.push((u64::from(dpt < accepted), 1));
+                }
+                c.observe(&delta);
+            }
             rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
 
             // 4. record acceptance; the compaction happens inside the NEXT
@@ -260,17 +324,18 @@ impl<'a> EagleEngine<'a> {
             draft_len = m;
         }
 
-        rec.drafted += 0; // accounted in grow_tree
         rec.wall_ns = t_all.elapsed().as_nanos() as u64;
         Ok(rec)
     }
 
-    /// Expand the draft tree level by level. `root_feat`/`root_logits` are
-    /// the extend outputs: f̂ at the root position and dist of t_{m+1}.
+    /// Expand the draft tree level by level with STATIC per-level widths.
+    /// `root_feat`/`root_logits` are the extend outputs: f̂ at the root
+    /// position and dist of t_{m+1}.
     #[allow(clippy::too_many_arguments)]
     fn grow_tree(
         &self,
         tree: &mut DraftTree,
+        spec: &TreeSpec,
         root_feat: &[f32],
         root_logits: &[f32],
         m: usize,
@@ -283,7 +348,6 @@ impl<'a> EagleEngine<'a> {
         let d = self.target.d;
         let vocab = self.target.vocab;
         let s_tot = self.target.max_len;
-        let spec = &self.tree_spec;
         let w = self.draft_w;
 
         // per-node: predicted feature at the node's position - 1 pairing is
@@ -408,6 +472,152 @@ impl<'a> EagleEngine<'a> {
                 }
             }
             frontier = new_nodes;
+        }
+        Ok(())
+    }
+
+    /// Expand the draft tree with the DYNAMIC planner: at each level the
+    /// top-`frontier_k` nodes by cumulative draft log-prob are expanded
+    /// into `branch` scored candidates each; only the most confident
+    /// `frontier_k` of the new candidates are draft-stepped (those may
+    /// expand further). The caller reranks the finished candidate tree
+    /// down to the verify budget; drafted-token accounting happens there.
+    #[allow(clippy::too_many_arguments)]
+    fn grow_tree_dynamic(
+        &self,
+        tree: &mut DraftTree,
+        params: &DynTreeParams,
+        root_feat: &[f32],
+        root_logits: &[f32],
+        m: usize,
+        draft_len: usize,
+        dcache: &mut crate::models::target::KvCache,
+        cfg: &GenConfig,
+        rng: &mut Rng,
+        rec: &mut GenRecord,
+    ) -> Result<()> {
+        let d = self.target.d;
+        let vocab = self.target.vocab;
+        let s_tot = self.target.max_len;
+        let w_cap = self.draft_w;
+
+        let mut node_feat: Vec<Vec<f32>> = vec![root_feat.to_vec()];
+        let mut node_logits: Vec<Option<Rc<Vec<f32>>>> =
+            vec![Some(Rc::new(root_logits.to_vec()))];
+        let mut node_slot: Vec<Option<usize>> = vec![None];
+        let mut scratch_used = 0usize;
+
+        // Losslessness at T>0: the SpecInfer acceptance rule is exact only
+        // if every candidate sampled from q is actually presented for
+        // verification — dropping sampled siblings by score would bias the
+        // output toward high-q tokens. So at T>0 growth is capped at the
+        // verify budget up front (a value-independent count cap) and the
+        // caller's rerank becomes an identity; over-generate-then-rerank
+        // remains a greedy-only (T=0) optimization.
+        let cap = if cfg.temperature > 0.0 { params.budget } else { usize::MAX };
+
+        // nodes whose draft step has run (children logits available)
+        let mut expandable: Vec<usize> = vec![0];
+        for lvl in 0..params.depth {
+            // --- choose the frontier and score its children ----------------
+            let th = Instant::now();
+            let frontier = select_frontier(tree, &expandable, params.frontier_k);
+            let mut cands: Vec<(usize, u32, f32, Option<Rc<Vec<f32>>>)> = Vec::new();
+            if cfg.temperature <= 0.0 {
+                for &p in &frontier {
+                    let q = node_logits[p].as_ref().expect("frontier node has logits");
+                    let probs = softmax(q, 1.0);
+                    for (tok, score) in expand_candidates(tree.nodes[p].score, &probs, params.branch) {
+                        cands.push((p, tok, score, None));
+                    }
+                }
+            } else {
+                // T>0: children sampled i.i.d. from q (SpecInfer rule); the
+                // cumulative ln q(tok) stands in as the confidence score.
+                for &p in &frontier {
+                    let q = Rc::new(softmax(
+                        node_logits[p].as_ref().expect("frontier node has logits"),
+                        cfg.temperature,
+                    ));
+                    for _ in 0..params.branch {
+                        let tok = sample(&q, rng);
+                        let score = tree.nodes[p].score + q[tok].max(1e-20).ln();
+                        cands.push((p, tok as u32, score, Some(q.clone())));
+                    }
+                }
+            }
+            // budget cap (T>0): truncation by generation order, decided
+            // before looking at the dropped candidates' values
+            let room = cap.saturating_sub(tree.len() - 1);
+            cands.truncate(room);
+            rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
+            if cands.is_empty() {
+                break;
+            }
+            let mut new_nodes = Vec::with_capacity(cands.len());
+            for (p, tok, score, q) in cands {
+                let ni = tree.add(p, tok, score, q);
+                node_feat.push(Vec::new());
+                node_logits.push(None);
+                node_slot.push(None);
+                new_nodes.push(ni);
+            }
+            if lvl + 1 == params.depth {
+                break; // leaves need no draft step
+            }
+
+            // --- draft-step only the most confident new nodes --------------
+            let step_set = select_frontier(tree, &new_nodes, params.frontier_k);
+            for chunk in step_set.chunks(w_cap) {
+                let w = *[1usize, 4, 8]
+                    .iter()
+                    .find(|&&c| c >= chunk.len() && self.draft.exes.has(&format!("step_w{c}")))
+                    .unwrap_or(&w_cap);
+                let th = Instant::now();
+                let mut sf = vec![0f32; w * d];
+                let mut st = vec![0i32; w];
+                let mut sp = vec![0i32; w];
+                let mut anc: Vec<Vec<usize>> = Vec::with_capacity(chunk.len());
+                let write_base = draft_len + scratch_used;
+                if write_base + w >= s_tot {
+                    return Ok(()); // scratch exhausted; rerank what we have
+                }
+                for (r, &ni) in chunk.iter().enumerate() {
+                    let parent = tree.nodes[ni].parent.unwrap();
+                    // feature pairing: parent's step output (see module doc)
+                    sf[r * d..(r + 1) * d].copy_from_slice(&node_feat[parent]);
+                    st[r] = match self.shift {
+                        PairShift::Shifted => tree.nodes[ni].token as i32,
+                        PairShift::Unshifted => tree.nodes[parent].token as i32,
+                    };
+                    sp[r] = (m + tree.nodes[ni].depth - 1) as i32;
+                    node_slot[ni] = Some(write_base + r);
+                    let mut a = Vec::new();
+                    let mut cur = Some(parent);
+                    while let Some(c) = cur {
+                        if let Some(s) = node_slot[c] {
+                            a.push(s);
+                        }
+                        cur = tree.nodes[c].parent;
+                    }
+                    anc.push(a);
+                }
+                for r in chunk.len()..w {
+                    sp[r] = m as i32;
+                }
+                let bias = draft_step_bias(w, s_tot, draft_len, write_base, &anc);
+                rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
+                let t0 = Instant::now();
+                let sout = self.draft.step(w, dcache, &[write_base as i32], &sf, &st, &sp, &bias)?;
+                rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64;
+                rec.draft_passes += 1;
+                scratch_used += w;
+                for (r, &ni) in chunk.iter().enumerate() {
+                    node_feat[ni] = sout.feats[r * d..(r + 1) * d].to_vec();
+                    node_logits[ni] = Some(Rc::new(sout.logits[r * vocab..(r + 1) * vocab].to_vec()));
+                }
+            }
+            expandable = step_set;
         }
         Ok(())
     }

@@ -1,6 +1,7 @@
 //! The paper's contribution, coordinated: draft trees, lossless sampling
-//! rules, and the EAGLE engine.
+//! rules, the EAGLE engine, and the dynamic draft-tree planner.
 
+pub mod dyntree;
 pub mod engine;
 pub mod sampling;
 pub mod tree;

@@ -3,7 +3,7 @@
 
 use eagle_serve::coordinator::kvslots::SlotAllocator;
 use eagle_serve::coordinator::queue::{PushError, RequestQueue};
-use eagle_serve::coordinator::request::{Method, Request};
+use eagle_serve::coordinator::request::{Method, Request, TreeChoice};
 use eagle_serve::util::prop::check;
 
 fn req(id: u64) -> Request {
@@ -13,6 +13,7 @@ fn req(id: u64) -> Request {
         max_tokens: 1,
         temperature: 0.0,
         method: Method::Vanilla,
+        tree: TreeChoice::Default,
         seed: 0,
         arrival: std::time::Instant::now(),
     }

@@ -1,0 +1,206 @@
+//! Property tests on the dynamic draft-tree planner (S20/S19): the
+//! global rerank must preserve ancestor closure and the node budget for
+//! ARBITRARY trees and scores, and must degrade to the static tree shape
+//! when draft confidence is uniform. Controller adaptation invariants
+//! (bounds, budget immutability) are exercised under random workloads.
+
+use std::collections::HashSet;
+
+use eagle_serve::spec::dyntree::{
+    rerank, select_frontier, ControllerConfig, DynTreeParams, SpecController,
+};
+use eagle_serve::spec::tree::{DraftTree, TreeSpec};
+use eagle_serve::util::prop::check;
+use eagle_serve::util::rng::Rng;
+
+fn random_tree(rng: &mut Rng, max_nodes: usize) -> DraftTree {
+    let mut t = DraftTree::with_root(rng.below(100) as u32);
+    let n = 1 + rng.below(max_nodes.max(2) - 1);
+    for _ in 0..n {
+        let parent = rng.below(t.len());
+        t.add(parent, rng.below(100) as u32, -rng.f32() * 5.0, None);
+    }
+    t
+}
+
+/// Tree with cumulative (monotone non-increasing along paths) scores,
+/// like real draft log-probs.
+fn random_cumulative_tree(rng: &mut Rng, max_nodes: usize) -> DraftTree {
+    let mut t = DraftTree::with_root(rng.below(100) as u32);
+    let n = 1 + rng.below(max_nodes.max(2) - 1);
+    for _ in 0..n {
+        let parent = rng.below(t.len());
+        let score = t.nodes[parent].score - (rng.f32() + 1e-3);
+        t.add(parent, rng.below(100) as u32, score, None);
+    }
+    t
+}
+
+#[test]
+fn prop_rerank_preserves_ancestor_closure() {
+    check("rerank closure", 200, |rng, _| {
+        let t = random_tree(rng, 40);
+        let budget = 1 + rng.below(t.len() + 4);
+        let (pruned, kept) = rerank(&t, budget);
+        assert_eq!(pruned.len(), kept.len());
+        assert_eq!(kept[0], 0, "root is always kept");
+        // pruned is a well-formed tree: parents precede children, depths line up
+        for (i, n) in pruned.nodes.iter().enumerate() {
+            match n.parent {
+                None => assert_eq!(i, 0),
+                Some(p) => {
+                    assert!(p < i, "parent must precede child");
+                    assert_eq!(n.depth, pruned.nodes[p].depth + 1);
+                }
+            }
+        }
+        // kept maps back to the original: payloads match, closure holds
+        let kept_set: HashSet<usize> = kept.iter().copied().collect();
+        for (pi, &oi) in kept.iter().enumerate() {
+            assert_eq!(pruned.nodes[pi].token, t.nodes[oi].token);
+            assert_eq!(pruned.nodes[pi].depth, t.nodes[oi].depth, "depth preserved");
+            if let Some(op) = t.nodes[oi].parent {
+                assert!(kept_set.contains(&op), "ancestor closure violated at {oi}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_rerank_respects_budget() {
+    check("rerank budget", 200, |rng, _| {
+        let t = random_tree(rng, 40);
+        let budget = 1 + rng.below(t.len() + 4);
+        let (pruned, kept) = rerank(&t, budget);
+        assert!(pruned.len() - 1 <= budget, "budget exceeded: {} > {budget}", pruned.len() - 1);
+        if t.len() - 1 <= budget {
+            // under budget: identity
+            assert_eq!(pruned.len(), t.len());
+            assert_eq!(kept, (0..t.len()).collect::<Vec<_>>());
+        } else {
+            // over budget: fully used (cumulative or not, budget many nodes
+            // are always reachable greedily because every prefix of a
+            // root-path fits)
+            assert_eq!(pruned.len() - 1, budget, "budget under-used");
+        }
+    });
+}
+
+#[test]
+fn prop_rerank_cumulative_scores_keep_exact_top_k() {
+    check("rerank top-k", 150, |rng, _| {
+        let t = random_cumulative_tree(rng, 40);
+        if t.len() < 3 {
+            return;
+        }
+        let budget = 1 + rng.below(t.len() - 2);
+        let (_, kept) = rerank(&t, budget);
+        if t.len() - 1 <= budget {
+            return;
+        }
+        // with monotone cumulative scores, selection == plain top-budget
+        let mut order: Vec<usize> = (1..t.len()).collect();
+        order.sort_by(|&a, &b| {
+            t.nodes[b].score.partial_cmp(&t.nodes[a].score).unwrap().then(a.cmp(&b))
+        });
+        let mut expect: Vec<usize> = order[..budget].to_vec();
+        expect.push(0);
+        expect.sort_unstable();
+        assert_eq!(kept, expect, "cumulative-score rerank must be exact top-k");
+    });
+}
+
+#[test]
+fn prop_uniform_confidence_degrades_to_static_prefix() {
+    check("rerank uniform", 50, |rng, _| {
+        // Build a static-shaped tree (4/8/8/5 or random widths) in BFS
+        // order with UNIFORM per-edge confidence; reranking to any budget
+        // must keep exactly the first `budget` nodes in BFS order — i.e.
+        // the static tree truncated to the budget.
+        let widths: Vec<usize> = if rng.f32() < 0.3 {
+            TreeSpec::tree_default().level_widths
+        } else {
+            (0..1 + rng.below(4)).map(|_| 1 + rng.below(6)).collect()
+        };
+        let edge_logp = -(rng.f32() + 0.1);
+        let mut t = DraftTree::with_root(0);
+        let mut prev_level: Vec<usize> = vec![0];
+        for &w in &widths {
+            let mut level = Vec::new();
+            for i in 0..w {
+                let parent = prev_level[i % prev_level.len()];
+                let score = t.nodes[parent].score + edge_logp;
+                level.push(t.add(parent, i as u32, score, None));
+            }
+            prev_level = level;
+        }
+        let budget = 1 + rng.below(t.len() + 2);
+        let (pruned, kept) = rerank(&t, budget);
+        let expect_n = budget.min(t.len() - 1);
+        assert_eq!(
+            kept,
+            (0..=expect_n).collect::<Vec<_>>(),
+            "uniform confidence must keep the BFS prefix (static truncation)"
+        );
+        // and the pruned tree's per-level widths are the truncated static widths
+        for (i, &oi) in kept.iter().enumerate() {
+            assert_eq!(pruned.nodes[i].depth, t.nodes[oi].depth);
+        }
+    });
+}
+
+#[test]
+fn prop_select_frontier_is_top_k_and_sorted() {
+    check("frontier", 200, |rng, _| {
+        let t = random_tree(rng, 30);
+        let cands: Vec<usize> = (0..t.len()).filter(|_| rng.f32() < 0.6).collect();
+        let k = 1 + rng.below(8);
+        let picked = select_frontier(&t, &cands, k);
+        assert!(picked.len() <= k);
+        assert_eq!(picked.len(), cands.len().min(k));
+        // ascending order, all from the candidate set
+        for w in picked.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        let cand_set: HashSet<usize> = cands.iter().copied().collect();
+        let picked_set: HashSet<usize> = picked.iter().copied().collect();
+        assert!(picked_set.is_subset(&cand_set));
+        // every excluded candidate scores <= the worst picked one
+        if let Some(worst) = picked
+            .iter()
+            .map(|&i| t.nodes[i].score)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+        {
+            for &c in &cands {
+                if !picked_set.contains(&c) {
+                    assert!(t.nodes[c].score <= worst + 1e-6);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_controller_stays_within_bounds() {
+    check("controller bounds", 100, |rng, _| {
+        let cfg = ControllerConfig::default();
+        let init = DynTreeParams {
+            depth: 1 + rng.below(7),
+            frontier_k: 1 + rng.below(8),
+            branch: 4,
+            budget: 31,
+        };
+        let mut c = SpecController::new(cfg.clone(), init);
+        for _ in 0..50 {
+            let attempted = 1 + rng.below(8);
+            let accepted = rng.below(attempted + 1);
+            c.observe_round(accepted, attempted);
+            let p = c.params();
+            assert!(p.depth >= cfg.min_depth && p.depth <= cfg.max_depth);
+            assert!(p.frontier_k >= cfg.min_frontier && p.frontier_k <= cfg.max_frontier);
+            assert_eq!(p.budget, 31, "controller must never change the verify budget");
+            assert_eq!(p.branch, 4);
+            assert!((0.0..=1.0).contains(&c.rate_ewma));
+        }
+    });
+}
