@@ -25,12 +25,14 @@ fn main() -> anyhow::Result<()> {
         false,
     )?;
 
-    let base = runner.run_with(&bundle, &prompts, &RunSpec { method: Method::Vanilla, ..Default::default() })?;
+    let vanilla = RunSpec { method: Method::Vanilla, ..Default::default() };
+    let base = runner.run_with(&bundle, &prompts, &vanilla)?;
     println!("vanilla baseline: {:.1} tok/s\n", base.tokens_per_sec());
 
     println!("-- observation 1: features are easier to autoregress than tokens --");
     for (label, variant) in [("token-AR draft ", "tok"), ("feature-AR draft", "feat")] {
-        let spec = RunSpec { method: Method::EagleChain, variant: variant.into(), ..Default::default() };
+        let spec =
+            RunSpec { method: Method::EagleChain, variant: variant.into(), ..Default::default() };
         let agg = runner.run_with(&bundle, &prompts, &spec)?;
         println!(
             "  {label}: speedup {:.2}x  tau {:.2}  0-alpha {}",
@@ -46,7 +48,8 @@ fn main() -> anyhow::Result<()> {
         ("feature + unshifted token ", "unshift"),
         ("feature + shifted (EAGLE) ", "eagle"),
     ] {
-        let spec = RunSpec { method: Method::EagleChain, variant: variant.into(), ..Default::default() };
+        let spec =
+            RunSpec { method: Method::EagleChain, variant: variant.into(), ..Default::default() };
         let agg = runner.run_with(&bundle, &prompts, &spec)?;
         println!(
             "  {label}: speedup {:.2}x  tau {:.2}  1-alpha {}",

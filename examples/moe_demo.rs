@@ -17,7 +17,8 @@ fn main() -> anyhow::Result<()> {
 
     for model in ["toy-s", "toy-moe"] {
         let bundle = ModelBundle::load(&runner.rt, &runner.man, model, &["eagle"], false, false)?;
-        let base = runner.run_with(&bundle, &prompts, &RunSpec { method: Method::Vanilla, ..Default::default() })?;
+        let vanilla = RunSpec { method: Method::Vanilla, ..Default::default() };
+        let base = runner.run_with(&bundle, &prompts, &vanilla)?;
         let eagle = runner.run_with(&bundle, &prompts, &RunSpec::default())?;
         println!(
             "{model:8} ({}): vanilla {:6.1} tok/s  eagle {:6.1} tok/s  speedup {:.2}x  tau {:.2}",

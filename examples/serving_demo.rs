@@ -19,6 +19,7 @@ fn main() -> anyhow::Result<()> {
             &eagle_serve::models::artifacts_dir(),
             64,
             eagle_serve::spec::dyntree::TreePolicy::default_tree(),
+            eagle_serve::spec::dyntree::WidthSelect::Auto,
         )
         .expect("server failed");
     });

@@ -47,8 +47,14 @@ SEED = 1234
 N_DIALOGUES = 1600
 N_MERGES = 500
 PREFILL_P = 64
-TREE_T = 32  # tree-verify width
+TREE_T = 32  # max tree-verify width
 CHAIN_T = 8  # chain-verify width (classic spec / alpha measurements)
+# Verify-width family ("verify_widths" manifest constant): one
+# verify_t{t} executable per width (plus _bs{b} variants for batched
+# serving), so the rust engines can dispatch each round to the cheapest
+# width that holds its draft tree (spec/dyntree/widths.rs). Must contain
+# TREE_T; containing CHAIN_T keeps the chain engines on a shared lowering.
+VERIFY_WIDTHS = (8, 16, TREE_T)
 ACCEPT_A = 8  # max tokens committed per verification
 DRAFT_W = 8  # tree draft level width
 FAST = os.environ.get("EAGLE_FAST", "") == "1"
@@ -324,6 +330,7 @@ def build(out: str) -> None:
             "chain_t": CHAIN_T,
             "accept_a": ACCEPT_A,
             "draft_w": DRAFT_W,
+            "verify_widths": sorted(VERIFY_WIDTHS),
         },
         "workloads": {
             "mtbench": "workloads/mtbench.json",
@@ -347,13 +354,13 @@ def build(out: str) -> None:
         bs_list = [1] if name != "toy-s" else [1, 2, 3, 4]
         for b in bs_list:
             sfx = "" if b == 1 else f"_bs{b}"
-            jobs = {
-                f"decode{sfx}": tl.decode(b),
-                f"verify_t{TREE_T}{sfx}": tl.verify(TREE_T, ACCEPT_A, b),
-            }
+            jobs = {f"decode{sfx}": tl.decode(b)}
+            # the full verify-width family per batch size (CHAIN_T rides
+            # along in VERIFY_WIDTHS, so the chain engines share it)
+            for t in sorted(set(VERIFY_WIDTHS) | {CHAIN_T if b == 1 else TREE_T}):
+                jobs[f"verify_t{t}{sfx}"] = tl.verify(t, ACCEPT_A, b)
             if b == 1:
                 jobs["prefill"] = tl.prefill(PREFILL_P, 1)
-                jobs[f"verify_t{CHAIN_T}"] = tl.verify(CHAIN_T, ACCEPT_A, 1)
             else:
                 jobs[f"prefill_slot{sfx}"] = tl.prefill_slot(PREFILL_P, b)
             for ename, (fn, ex) in jobs.items():

@@ -91,11 +91,15 @@ def build_quant(out: str, manifest: dict, cfg: M.ModelConfig) -> None:
 
     tl = QuantTargetLowering()
     exes = {}
-    for ename, (fn, ex) in {
+    jobs = {
         "prefill": tl.prefill(aot.PREFILL_P, 1),
         "decode": tl.decode(1),
-        f"verify_t{aot.TREE_T}": tl.verify(aot.TREE_T, aot.ACCEPT_A, 1),
-    }.items():
+    }
+    # the same verify-width family as the fp32 targets, so width
+    # selection composes with quantization (Table 4 analog)
+    for t in sorted(aot.VERIFY_WIDTHS):
+        jobs[f"verify_t{t}"] = tl.verify(t, aot.ACCEPT_A, 1)
+    for ename, (fn, ex) in jobs.items():
         path = f"hlo/toy-s-int8.{ename}.hlo.txt"
         aot.lower_to_file(fn, ex, os.path.join(out, path))
         exes[ename] = {"hlo": path, "bs": 1}

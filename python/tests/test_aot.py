@@ -39,6 +39,10 @@ def test_manifest_constants_sane():
     c = man["constants"]
     assert c["accept_a"] <= c["tree_t"]
     assert c["draft_w"] <= c["tree_t"]
+    widths = c.get("verify_widths", [c["tree_t"]])
+    assert c["tree_t"] in widths, "width family must contain the max width"
+    assert all(2 <= t <= c["tree_t"] for t in widths)
+    assert widths == sorted(widths)
     for entry in man["models"].values():
         cfg = entry["config"]
         # tree region + scratch must fit the cache

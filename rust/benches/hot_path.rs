@@ -5,7 +5,9 @@
 
 use eagle_serve::eval::runner::Runner;
 use eagle_serve::models::{artifacts_dir, ModelBundle};
-use eagle_serve::spec::dyntree::{expand_candidates, rerank, select_frontier};
+use eagle_serve::spec::dyntree::{
+    expand_candidates, plan_round_width, rerank, select_frontier, DynTreeParams, WidthFamily,
+};
 use eagle_serve::spec::sampling::{argmax, softmax};
 use eagle_serve::spec::tree::{DraftTree, TreeSpec};
 use eagle_serve::util::rng::Rng;
@@ -34,7 +36,8 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
 
 fn main() {
     // -- host-only components (always run) ---------------------------------
-    let logits: Vec<f32> = (0..761).map(|i| ((i * 2654435761u64 as usize) % 997) as f32 / 997.0).collect();
+    let logits: Vec<f32> =
+        (0..761).map(|i| ((i * 2654435761u64 as usize) % 997) as f32 / 997.0).collect();
     bench("host/softmax(761)", 1000, || {
         std::hint::black_box(softmax(&logits, 1.0));
     });
@@ -86,6 +89,17 @@ fn main() {
         },
     );
 
+    // verify-width selection: the per-round plan (pre-growth budget cap)
+    // plus the post-growth fit — pure host overhead of the width family
+    let fam = WidthFamily::from_available(&[8, 16, 32], 32, |_| true);
+    let wparams = DynTreeParams { depth: 4, frontier_k: 6, branch: 4, budget: 31 };
+    bench("host/width_select", 1000, || {
+        for nodes in [3usize, 9, 17, 26, 32] {
+            std::hint::black_box(plan_round_width(&fam, &wparams, Some((0.5, 0.35))));
+            std::hint::black_box(fam.fit(nodes));
+        }
+    });
+
     if !artifacts_dir().join("manifest.json").exists() {
         eprintln!("executable benches skipped: run `make artifacts` first");
         return;
@@ -108,12 +122,28 @@ fn main() {
     bench("exe/decode(1)", 30, || {
         tgt.decode(&mut cache, &[m as i32], &[5]).unwrap();
     });
-    let (tokens, pos, bias) = tree.verify_inputs(c.tree_t, m, tgt.max_len);
+    // the lowered verify-width family: one bench per width with a tree
+    // filling that width, so the per-width cost spread is visible
     let zero_idx = vec![0i32; c.accept_a];
-    bench("exe/verify_t32 (fused commit)", 30, || {
-        tgt.verify(c.tree_t, &mut cache, &[m as i32], &zero_idx, &[0], &tokens, &pos, &bias, c.accept_a)
+    for &t in &c.verify_widths {
+        if !tgt.has_verify(t, 1) {
+            eprintln!("exe/verify_t{t} skipped: executable not lowered");
+            continue;
+        }
+        let mut wtree = DraftTree::with_root(1);
+        for i in 1..t {
+            // chain-ish fill capped at the commit depth, then siblings
+            let parent = if i <= c.accept_a - 1 { i - 1 } else { 1 + (i % (c.accept_a - 1)) };
+            wtree.add(parent, i as u32, -(i as f32), None);
+        }
+        let (tokens, pos, bias) = wtree.verify_inputs(t, m, tgt.max_len);
+        bench(&format!("exe/verify_t{t} (fused commit)"), 30, || {
+            tgt.verify(
+                t, &mut cache, &[m as i32], &zero_idx, &[0], &tokens, &pos, &bias, c.accept_a,
+            )
             .unwrap();
-    });
+        });
+    }
     let mut dcache = draft.new_cache(1);
     let feats = vec![0.1f32; 8 * tgt.d];
     let toks = vec![3i32; 8];

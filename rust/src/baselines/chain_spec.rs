@@ -24,7 +24,12 @@ pub struct ClassicSpecEngine<'a> {
 }
 
 impl<'a> ClassicSpecEngine<'a> {
-    pub fn new(target: &'a TargetModel, draft: &'a TargetModel, c: &crate::runtime::manifest::Constants, gamma: usize) -> Self {
+    pub fn new(
+        target: &'a TargetModel,
+        draft: &'a TargetModel,
+        c: &crate::runtime::manifest::Constants,
+        gamma: usize,
+    ) -> Self {
         assert!(gamma + 1 <= c.chain_t);
         ClassicSpecEngine { target, draft, gamma, verify_t: c.chain_t, accept_a: c.accept_a }
     }
@@ -87,7 +92,8 @@ impl<'a> ClassicSpecEngine<'a> {
             let mut qs: Vec<Vec<f32>> = Vec::with_capacity(self.gamma);
             let mut proposal: Vec<u32> = Vec::with_capacity(self.gamma);
             for g in 0..self.gamma {
-                let q = softmax(&dlogits, if cfg.temperature > 0.0 { cfg.temperature } else { 1.0 });
+                let temp = if cfg.temperature > 0.0 { cfg.temperature } else { 1.0 };
+                let q = softmax(&dlogits, temp);
                 let tok = if cfg.temperature <= 0.0 {
                     argmax(&dlogits) as u32
                 } else {
@@ -176,7 +182,8 @@ impl<'a> ClassicSpecEngine<'a> {
             }
             pending_n = n_commit as i32;
 
-            let round: Vec<u32> = proposal[..n_acc].iter().copied().chain(std::iter::once(bonus)).collect();
+            let round: Vec<u32> =
+                proposal[..n_acc].iter().copied().chain(std::iter::once(bonus)).collect();
             rec.round_accepts.push(round.len());
             let mut stop = false;
             for &t in &round {

@@ -101,7 +101,8 @@ impl<'a> LookaheadEngine<'a> {
             rec.timeline.verify_ns += t0.elapsed().as_nanos() as u64;
             rec.target_passes += 1;
 
-            let path = tree.greedy_walk(|i| argmax(tgt.row(&vout.logits, self.verify_t, 0, i, vocab)));
+            let path =
+                tree.greedy_walk(|i| argmax(tgt.row(&vout.logits, self.verify_t, 0, i, vocab)));
             let deepest = *path.last().unwrap();
             let bonus = argmax(tgt.row(&vout.logits, self.verify_t, 0, deepest, vocab)) as u32;
 
@@ -113,7 +114,11 @@ impl<'a> LookaheadEngine<'a> {
             }
             pending_n = n_commit as i32;
 
-            let round: Vec<u32> = path[1..].iter().map(|&ni| tree.nodes[ni].token).chain(std::iter::once(bonus)).collect();
+            let round: Vec<u32> = path[1..]
+                .iter()
+                .map(|&ni| tree.nodes[ni].token)
+                .chain(std::iter::once(bonus))
+                .collect();
             rec.round_accepts.push(round.len());
             let mut stop = false;
             for &t in &round {

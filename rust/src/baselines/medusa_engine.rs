@@ -22,7 +22,11 @@ pub struct MedusaEngine<'a> {
 }
 
 impl<'a> MedusaEngine<'a> {
-    pub fn new(target: &'a TargetModel, heads: &'a MedusaHeads, c: &crate::runtime::manifest::Constants) -> Self {
+    pub fn new(
+        target: &'a TargetModel,
+        heads: &'a MedusaHeads,
+        c: &crate::runtime::manifest::Constants,
+    ) -> Self {
         MedusaEngine { target, heads, verify_t: c.chain_t, accept_a: c.accept_a, k: 4 }
     }
 
@@ -84,7 +88,8 @@ impl<'a> MedusaEngine<'a> {
             rec.timeline.verify_ns += t0.elapsed().as_nanos() as u64;
             rec.target_passes += 1;
 
-            let path = tree.greedy_walk(|i| argmax(tgt.row(&vout.logits, self.verify_t, 0, i, vocab)));
+            let path =
+                tree.greedy_walk(|i| argmax(tgt.row(&vout.logits, self.verify_t, 0, i, vocab)));
             for (gidx, _) in path[1..].iter().enumerate() {
                 if gidx < rec.alpha.len() {
                     rec.alpha[gidx].0 += 1;
@@ -107,7 +112,11 @@ impl<'a> MedusaEngine<'a> {
             }
             pending_n = n_commit as i32;
 
-            let round: Vec<u32> = path[1..].iter().map(|&ni| tree.nodes[ni].token).chain(std::iter::once(bonus)).collect();
+            let round: Vec<u32> = path[1..]
+                .iter()
+                .map(|&ni| tree.nodes[ni].token)
+                .chain(std::iter::once(bonus))
+                .collect();
             rec.round_accepts.push(round.len());
             let mut stop = false;
             for &t in &round {

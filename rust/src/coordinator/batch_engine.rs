@@ -11,23 +11,28 @@
 //! adapts to its own request while the draft calls stay lock-step
 //! (lanes that stop early contribute harmless padding rows).
 //!
+//! Each verify round dispatches to the cheapest lowered
+//! `verify_t{t}_bs{b}` executable that holds every lane's tree (the max
+//! over per-lane width fits — see `spec/dyntree/widths.rs`), so a batch
+//! of low-acceptance lanes stops paying worst-case verify FLOPs.
+//!
 //! Per-lane prefill reuses the bs=1 draft prefill and splices the lane's
 //! rows into the batched draft cache host-side (caches are host vectors
 //! between calls, so the splice is a memcpy — no extra executable).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::time::Instant;
 
 use crate::metrics::GenRecord;
 use crate::models::target::KvCache;
 use crate::models::{EagleDraft, TargetModel};
 use crate::spec::dyntree::{
-    expand_candidates, rerank, select_frontier, DynTreeConfig, DynTreeParams, SpecController,
-    TreePolicy,
+    expand_candidates, plan_round_width, rerank, select_frontier, width_hint, DynTreeParams,
+    SpecController, TreePolicy, WidthFamily,
 };
 use crate::spec::engine::GenConfig;
 use crate::spec::sampling::{argmax, sample, softmax, top_k};
-use crate::spec::tree::{chain_extend_bias, draft_step_bias, DraftTree, TreeSpec};
+use crate::spec::tree::{chain_extend_bias, fill_step_rows, DraftTree, TreeSpec};
 use crate::util::rng::Rng;
 
 pub struct BatchEagleEngine<'a> {
@@ -36,7 +41,11 @@ pub struct BatchEagleEngine<'a> {
     /// Per-lane draft-tree shaping (static widths or the dynamic planner
     /// with one [`SpecController`] per lane).
     pub policy: TreePolicy,
+    /// Max verify width (budget anchor; the `_bs{b}` family fallback).
     pub verify_t: usize,
+    /// Declared verify-width family (filtered per batch size at
+    /// generate time against the lowered `verify_t{t}_bs{b}` set).
+    pub verify_widths: Vec<usize>,
     pub accept_a: usize,
     pub draft_w: usize,
 }
@@ -51,12 +60,17 @@ struct Lane {
 }
 
 impl<'a> BatchEagleEngine<'a> {
-    pub fn new(target: &'a TargetModel, draft: &'a EagleDraft, c: &crate::runtime::manifest::Constants) -> Self {
+    pub fn new(
+        target: &'a TargetModel,
+        draft: &'a EagleDraft,
+        c: &crate::runtime::manifest::Constants,
+    ) -> Self {
         BatchEagleEngine {
             target,
             draft,
             policy: TreePolicy::default_tree(),
             verify_t: c.tree_t,
+            verify_widths: c.verify_widths.clone(),
             accept_a: c.accept_a,
             draft_w: c.draft_w,
         }
@@ -127,6 +141,11 @@ impl<'a> BatchEagleEngine<'a> {
         }
 
         // ---- lock-step rounds ------------------------------------------------
+        // verify-width family lowered for THIS batch size; the per-round
+        // width is the max over lane fits, so no lane is ever truncated
+        let family = WidthFamily::from_available(&self.verify_widths, self.verify_t, |t| {
+            tgt.has_verify(t, b)
+        });
         // dynamic policy: one acceptance controller per lane, so each lane's
         // speculation depth/width tracks its own request
         let mut controllers: Vec<Option<SpecController>> = (0..b)
@@ -155,23 +174,49 @@ impl<'a> BatchEagleEngine<'a> {
                     self.grow_static_batch(spec, &mut lanes, &mut trees, &mut dcache_b)?;
                 }
                 TreePolicy::Dynamic(dc) => {
-                    self.grow_dynamic_batch(dc, &controllers, &mut lanes, &mut trees, &mut dcache_b)?;
-                }
-            }
-            for li in 0..b {
-                if !lanes[li].done {
-                    lanes[li].rec.round_tree_nodes.push(trees[li].len() - 1);
+                    // per-lane width plan BEFORE growth: each lane's node
+                    // budget is clamped to the width its controller's EWMA
+                    // justifies (see dyntree/widths.rs)
+                    let lane_params: Vec<DynTreeParams> = (0..b)
+                        .map(|li| {
+                            let p = controllers[li]
+                                .as_ref()
+                                .map(|c| c.params())
+                                .unwrap_or_else(|| dc.params(self.verify_t, w, self.accept_a));
+                            plan_round_width(&family, &p, width_hint(controllers[li].as_ref())).1
+                        })
+                        .collect();
+                    self.grow_dynamic_batch(&lane_params, &mut lanes, &mut trees, &mut dcache_b)?;
                 }
             }
 
-            // 2. batched verify
-            let t = self.verify_t;
+            // 2. batched verify at the max over lane width fits — the
+            //    cheapest family member holding EVERY lane's tree
+            let t = lanes
+                .iter()
+                .zip(&trees)
+                .filter(|(l, _)| !l.done)
+                .map(|(_, tr)| family.fit(tr.len()))
+                .max()
+                .unwrap_or_else(|| family.max());
+            for li in 0..b {
+                if lanes[li].done {
+                    continue;
+                }
+                if trees[li].len() > t {
+                    bail!(
+                        "lane {li} draft tree of {} nodes exceeds the verify width family (max {})",
+                        trees[li].len(),
+                        family.max()
+                    );
+                }
+                lanes[li].rec.round_tree_nodes.push(trees[li].len() - 1);
+                lanes[li].rec.round_verify_t.push(t);
+            }
             let mut tokens = vec![0i32; b * t];
             let mut pos = vec![0i32; b * t];
             let mut bias = vec![0f32; b * t * s_tot];
-            let mut lens = vec![0i32; b];
             for li in 0..b {
-                lens[li] = lanes[li].m as i32;
                 let (tk, ps, bs) = trees[li].verify_inputs(t, lanes[li].m, s_tot);
                 tokens[li * t..(li + 1) * t].copy_from_slice(&tk);
                 pos[li * t..(li + 1) * t].copy_from_slice(&ps);
@@ -304,7 +349,8 @@ impl<'a> BatchEagleEngine<'a> {
                 lanes[li].rec.timeline.draft_ns += ext_ns / b as u64;
                 lanes[li].rec.draft_passes += 1;
                 let last = paths[li].len() - 1;
-                lanes[li].root_feat = eout.feats[(li * w + last) * d..(li * w + last + 1) * d].to_vec();
+                lanes[li].root_feat =
+                    eout.feats[(li * w + last) * d..(li * w + last + 1) * d].to_vec();
                 lanes[li].root_logits =
                     eout.logits[(li * w + last) * vocab..(li * w + last + 1) * vocab].to_vec();
             }
@@ -335,8 +381,10 @@ impl<'a> BatchEagleEngine<'a> {
         let s_tot = self.target.max_len;
         let w = self.draft_w;
 
-        let mut node_feat: Vec<Vec<Vec<f32>>> = lanes.iter().map(|l| vec![l.root_feat.clone()]).collect();
-        let mut node_logits: Vec<Vec<Vec<f32>>> = lanes.iter().map(|l| vec![l.root_logits.clone()]).collect();
+        let mut node_feat: Vec<Vec<Vec<f32>>> =
+            lanes.iter().map(|l| vec![l.root_feat.clone()]).collect();
+        let mut node_logits: Vec<Vec<Vec<f32>>> =
+            lanes.iter().map(|l| vec![l.root_logits.clone()]).collect();
         let mut node_slot: Vec<Vec<Option<usize>>> = vec![vec![None]; b];
         let mut scratch_used = vec![0usize; b];
         let mut frontier: Vec<Vec<usize>> = vec![vec![0]; b];
@@ -378,27 +426,22 @@ impl<'a> BatchEagleEngine<'a> {
             for li in 0..b {
                 let base = lanes[li].m + scratch_used[li];
                 wb[li] = base as i32;
-                let mut anc: Vec<Vec<usize>> = Vec::new();
-                for (r, &ni) in new_nodes[li].iter().enumerate() {
-                    let parent = trees[li].nodes[ni].parent.unwrap();
-                    sf[(li * w + r) * d..(li * w + r + 1) * d].copy_from_slice(&node_feat[li][parent]);
-                    st[li * w + r] = trees[li].nodes[ni].token as i32;
-                    sp[li * w + r] = (lanes[li].m + trees[li].nodes[ni].depth - 1) as i32;
-                    node_slot[li][ni] = Some(base + r);
-                    let mut a = Vec::new();
-                    let mut cur = Some(parent);
-                    while let Some(c) = cur {
-                        if let Some(s) = node_slot[li][c] {
-                            a.push(s);
-                        }
-                        cur = trees[li].nodes[c].parent;
-                    }
-                    anc.push(a);
-                }
-                for r in new_nodes[li].len()..w {
-                    sp[li * w + r] = lanes[li].m as i32;
-                }
-                let lane_bias = draft_step_bias(w, s_tot, lanes[li].m, base, &anc);
+                let lane_bias = fill_step_rows(
+                    &trees[li],
+                    &new_nodes[li],
+                    &node_feat[li],
+                    &mut node_slot[li],
+                    true,
+                    d,
+                    s_tot,
+                    lanes[li].m,
+                    lanes[li].m,
+                    base,
+                    w,
+                    &mut sf[li * w * d..(li + 1) * w * d],
+                    &mut st[li * w..(li + 1) * w],
+                    &mut sp[li * w..(li + 1) * w],
+                );
                 bias[li * w * s_tot..(li + 1) * w * s_tot].copy_from_slice(&lane_bias);
             }
             let t0 = Instant::now();
@@ -412,7 +455,8 @@ impl<'a> BatchEagleEngine<'a> {
                 scratch_used[li] += w;
                 for (r, &ni) in new_nodes[li].iter().enumerate() {
                     node_feat[li][ni] = sout.feats[(li * w + r) * d..(li * w + r + 1) * d].to_vec();
-                    node_logits[li][ni] = sout.logits[(li * w + r) * vocab..(li * w + r + 1) * vocab].to_vec();
+                    node_logits[li][ni] =
+                        sout.logits[(li * w + r) * vocab..(li * w + r + 1) * vocab].to_vec();
                 }
                 frontier[li] = new_nodes[li].clone();
             }
@@ -424,11 +468,13 @@ impl<'a> BatchEagleEngine<'a> {
     /// Each lane expands its top-K frontier by cumulative draft log-prob
     /// and may run at a different (controller-adapted) depth; after
     /// growth every lane's candidate tree is globally reranked down to
-    /// its verify budget. Drafted-token accounting happens post-rerank.
+    /// its verify budget. `lane_params` arrive pre-planned by the caller
+    /// (controller shape + width-plan budget clamp, see
+    /// `dyntree/widths.rs`). Drafted-token accounting happens
+    /// post-rerank.
     fn grow_dynamic_batch(
         &self,
-        dc: &DynTreeConfig,
-        controllers: &[Option<SpecController>],
+        lane_params: &[DynTreeParams],
         lanes: &mut [Lane],
         trees: &mut [DraftTree],
         dcache_b: &mut KvCache,
@@ -439,17 +485,11 @@ impl<'a> BatchEagleEngine<'a> {
         let s_tot = self.target.max_len;
         let w = self.draft_w;
 
-        let lane_params: Vec<DynTreeParams> = (0..b)
-            .map(|li| {
-                controllers[li]
-                    .as_ref()
-                    .map(|c| c.params())
-                    .unwrap_or_else(|| dc.params(self.verify_t, w, self.accept_a))
-            })
-            .collect();
         let max_depth = lane_params.iter().map(|p| p.depth).max().unwrap_or(1);
-        let mut node_feat: Vec<Vec<Vec<f32>>> = lanes.iter().map(|l| vec![l.root_feat.clone()]).collect();
-        let mut node_logits: Vec<Vec<Vec<f32>>> = lanes.iter().map(|l| vec![l.root_logits.clone()]).collect();
+        let mut node_feat: Vec<Vec<Vec<f32>>> =
+            lanes.iter().map(|l| vec![l.root_feat.clone()]).collect();
+        let mut node_logits: Vec<Vec<Vec<f32>>> =
+            lanes.iter().map(|l| vec![l.root_logits.clone()]).collect();
         let mut node_slot: Vec<Vec<Option<usize>>> = vec![vec![None]; b];
         let mut scratch_used = vec![0usize; b];
         let mut expandable: Vec<Vec<usize>> = vec![vec![0]; b];
@@ -461,7 +501,8 @@ impl<'a> BatchEagleEngine<'a> {
                 if lanes[li].done || lvl >= lane_params[li].depth {
                     continue;
                 }
-                let front = select_frontier(&trees[li], &expandable[li], lane_params[li].frontier_k);
+                let front =
+                    select_frontier(&trees[li], &expandable[li], lane_params[li].frontier_k);
                 let mut new_nodes = Vec::new();
                 for &p in &front {
                     if node_logits[li][p].is_empty() {
@@ -480,7 +521,8 @@ impl<'a> BatchEagleEngine<'a> {
                 }
                 // step only while another level follows and scratch remains
                 if lvl + 1 < lane_params[li].depth && lanes[li].m + scratch_used[li] + w < s_tot {
-                    step_sets[li] = select_frontier(&trees[li], &new_nodes, lane_params[li].frontier_k);
+                    step_sets[li] =
+                        select_frontier(&trees[li], &new_nodes, lane_params[li].frontier_k);
                 }
             }
             if step_sets.iter().all(|s| s.is_empty()) {
@@ -501,27 +543,22 @@ impl<'a> BatchEagleEngine<'a> {
                     lanes[li].m + scratch_used[li]
                 };
                 wb[li] = base as i32;
-                let mut anc: Vec<Vec<usize>> = Vec::new();
-                for (r, &ni) in step_sets[li].iter().enumerate() {
-                    let parent = trees[li].nodes[ni].parent.unwrap();
-                    sf[(li * w + r) * d..(li * w + r + 1) * d].copy_from_slice(&node_feat[li][parent]);
-                    st[li * w + r] = trees[li].nodes[ni].token as i32;
-                    sp[li * w + r] = (lanes[li].m + trees[li].nodes[ni].depth - 1) as i32;
-                    node_slot[li][ni] = Some(base + r);
-                    let mut a = Vec::new();
-                    let mut cur = Some(parent);
-                    while let Some(c) = cur {
-                        if let Some(s) = node_slot[li][c] {
-                            a.push(s);
-                        }
-                        cur = trees[li].nodes[c].parent;
-                    }
-                    anc.push(a);
-                }
-                for r in step_sets[li].len()..w {
-                    sp[li * w + r] = lanes[li].m as i32;
-                }
-                let lane_bias = draft_step_bias(w, s_tot, lanes[li].m, base, &anc);
+                let lane_bias = fill_step_rows(
+                    &trees[li],
+                    &step_sets[li],
+                    &node_feat[li],
+                    &mut node_slot[li],
+                    true,
+                    d,
+                    s_tot,
+                    lanes[li].m,
+                    lanes[li].m,
+                    base,
+                    w,
+                    &mut sf[li * w * d..(li + 1) * w * d],
+                    &mut st[li * w..(li + 1) * w],
+                    &mut sp[li * w..(li + 1) * w],
+                );
                 bias[li * w * s_tot..(li + 1) * w * s_tot].copy_from_slice(&lane_bias);
             }
             let t0 = Instant::now();

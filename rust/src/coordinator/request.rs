@@ -73,6 +73,10 @@ pub struct Request {
     pub temperature: f32,
     pub method: Method,
     pub tree: TreeChoice,
+    /// Per-request verify-width pin (`"verify_width"` field): `Some(t)`
+    /// forces every round onto the `verify_t{t}` executable; `None`
+    /// defers to the server's configured width policy (auto by default).
+    pub verify_width: Option<usize>,
     pub seed: u64,
     pub arrival: std::time::Instant,
 }
@@ -99,6 +103,10 @@ impl Request {
                 .and_then(|t| t.as_str())
                 .and_then(TreeChoice::parse)
                 .unwrap_or(TreeChoice::Default),
+            verify_width: v
+                .get("verify_width")
+                .and_then(|x| x.as_usize())
+                .filter(|&t| t >= 2),
             seed: v.get("seed").and_then(|x| x.as_f64()).map(|f| f as u64).unwrap_or(7),
             arrival: std::time::Instant::now(),
         })
@@ -142,15 +150,23 @@ mod tests {
         assert_eq!(r.method, Method::Eagle);
         assert_eq!(r.temperature, 0.0);
         assert_eq!(r.tree, TreeChoice::Default);
+        assert_eq!(r.verify_width, None);
     }
 
     #[test]
     fn parse_request_full() {
-        let v = Json::parse(r#"{"prompt":"x","max_tokens":8,"temperature":1.0,"method":"vanilla","tree":"dynamic"}"#).unwrap();
+        let v = Json::parse(
+            r#"{"prompt":"x","max_tokens":8,"temperature":1.0,"method":"vanilla","tree":"dynamic","verify_width":16}"#,
+        )
+        .unwrap();
         let r = Request::from_json(2, &v).unwrap();
         assert_eq!(r.max_tokens, 8);
         assert_eq!(r.method, Method::Vanilla);
         assert_eq!(r.tree, TreeChoice::Dynamic);
+        assert_eq!(r.verify_width, Some(16));
+        let v = Json::parse(r#"{"prompt":"x","verify_width":1}"#).unwrap();
+        let r = Request::from_json(3, &v).unwrap();
+        assert_eq!(r.verify_width, None, "degenerate widths ignored");
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::coordinator::request::Method;
 use crate::metrics::{Aggregate, GenRecord};
 use crate::models::ModelBundle;
 use crate::runtime::{Manifest, Runtime};
-use crate::spec::dyntree::TreePolicy;
+use crate::spec::dyntree::{TreePolicy, WidthFamily, WidthSelect};
 use crate::spec::engine::{EagleEngine, GenConfig, PairShift};
 
 pub struct Runner {
@@ -32,6 +32,10 @@ pub struct RunSpec {
     /// draft-tree policy for `Method::Eagle` (chain methods fix their own
     /// shape); defaults to the paper's static 4/8/8/5 tree
     pub tree: TreePolicy,
+    /// verify-width policy for `Method::Eagle`: `Auto` dispatches each
+    /// round to the cheapest lowered `verify_t{t}` executable that holds
+    /// its tree; `Fixed(t)` pins every round to one width
+    pub verify_width: WidthSelect,
 }
 
 impl Default for RunSpec {
@@ -44,6 +48,7 @@ impl Default for RunSpec {
             gamma: 5,
             seed: 7,
             tree: TreePolicy::default_tree(),
+            verify_width: WidthSelect::Auto,
         }
     }
 }
@@ -92,9 +97,18 @@ impl Runner {
                     .drafts
                     .get(&spec.variant)
                     .ok_or_else(|| anyhow::anyhow!("draft variant '{}' not loaded", spec.variant))?;
-                EagleEngine::new_tree(&bundle.target, draft, c)
-                    .with_policy(spec.tree.clone())
-                    .generate(prompt, cfg)
+                let mut eng =
+                    EagleEngine::new_tree(&bundle.target, draft, c).with_policy(spec.tree.clone());
+                if let WidthSelect::Fixed(t) = spec.verify_width {
+                    anyhow::ensure!(
+                        bundle.target.has_verify(t, 1),
+                        "verify width {t} is not lowered for '{}' (declared family: {:?})",
+                        bundle.name,
+                        c.verify_widths
+                    );
+                    eng = eng.with_widths(WidthFamily::single(t));
+                }
+                eng.generate(prompt, cfg)
             }
             Method::EagleChain => {
                 let draft = bundle
@@ -106,7 +120,8 @@ impl Runner {
                 } else {
                     PairShift::Unshifted
                 };
-                EagleEngine::new_chain(&bundle.target, draft, c, spec.gamma, shift).generate(prompt, cfg)
+                EagleEngine::new_chain(&bundle.target, draft, c, spec.gamma, shift)
+                    .generate(prompt, cfg)
             }
             Method::Medusa => {
                 let heads = bundle
@@ -120,7 +135,9 @@ impl Runner {
                 let tdlm = bundle
                     .tdlm
                     .as_ref()
-                    .ok_or_else(|| anyhow::anyhow!("token draft LM not loaded for {}", bundle.name))?;
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("token draft LM not loaded for {}", bundle.name)
+                    })?;
                 ClassicSpecEngine::new(&bundle.target, tdlm, c, spec.gamma).generate(prompt, cfg)
             }
         }

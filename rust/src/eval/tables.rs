@@ -59,8 +59,9 @@ impl EvalCtx {
             "# fig1 — Speedup on MT-bench analog, greedy (T=0)\n\n| model | method | speedup | tau | tokens/s |\n|---|---|---|---|---|\n",
         );
         for model in ["toy-s", "toy-m"] {
+            let with_extras = model == "toy-s";
             let bundle = ModelBundle::load(
-                &self.runner.rt, &self.runner.man, model, &["eagle"], model == "toy-s", model == "toy-s",
+                &self.runner.rt, &self.runner.man, model, &["eagle"], with_extras, with_extras,
             )?;
             let base = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Vanilla, 0.0))?;
             let mut methods: Vec<(&str, Method)> = vec![("eagle", Method::Eagle)];
@@ -68,7 +69,12 @@ impl EvalCtx {
                 methods.push(("medusa", Method::Medusa));
                 methods.push(("lookahead", Method::Lookahead));
             }
-            writeln!(out, "| {model} | vanilla | 1.00x | {:.2} | {:.1} |", base.tau(), base.tokens_per_sec())?;
+            writeln!(
+                out,
+                "| {model} | vanilla | 1.00x | {:.2} | {:.1} |",
+                base.tau(),
+                base.tokens_per_sec()
+            )?;
             for (name, m) in methods {
                 let agg = self.runner.run_with(&bundle, &prompts, &self.spec(m, 0.0))?;
                 writeln!(
@@ -99,10 +105,21 @@ impl EvalCtx {
             let base = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Vanilla, 1.0))?;
             writeln!(out, "| {model} | vanilla | 1.00x | {:.2} |", base.tau())?;
             let eagle = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Eagle, 1.0))?;
-            writeln!(out, "| {model} | eagle | {:.2}x | {:.2} |", speedup(&eagle, &base), eagle.tau())?;
+            writeln!(
+                out,
+                "| {model} | eagle | {:.2}x | {:.2} |",
+                speedup(&eagle, &base),
+                eagle.tau()
+            )?;
             if model == "toy-s" {
-                let cs = self.runner.run_with(&bundle, &prompts, &self.spec(Method::ClassicSpec, 1.0))?;
-                writeln!(out, "| {model} | classic-spec | {:.2}x | {:.2} |", speedup(&cs, &base), cs.tau())?;
+                let cs =
+                    self.runner.run_with(&bundle, &prompts, &self.spec(Method::ClassicSpec, 1.0))?;
+                writeln!(
+                    out,
+                    "| {model} | classic-spec | {:.2}x | {:.2} |",
+                    speedup(&cs, &base),
+                    cs.tau()
+                )?;
             }
         }
         Ok(out)
@@ -157,7 +174,9 @@ impl EvalCtx {
     // ---------------------------------------------------------------------
     pub fn fig8(&self) -> Result<String> {
         let wl = self.workload("mtbench")?;
-        let bundle = ModelBundle::load(&self.runner.rt, &self.runner.man, "toy-s", &["eagle"], false, false)?;
+        let bundle = ModelBundle::load(
+            &self.runner.rt, &self.runner.man, "toy-s", &["eagle"], false, false,
+        )?;
         let mut out = String::from(
             "# fig8 — EAGLE speedup by task category (toy-s, T=0)\n\n| category | speedup | tau |\n|---|---|---|\n",
         );
@@ -184,11 +203,18 @@ impl EvalCtx {
             "# fig9 + tab5 — tree vs chain draft (T=0)\n\n| model | mode | speedup | tau |\n|---|---|---|---|\n",
         );
         for model in ["toy-s", "toy-m"] {
-            let bundle = ModelBundle::load(&self.runner.rt, &self.runner.man, model, &["eagle"], false, false)?;
+            let bundle = ModelBundle::load(
+                &self.runner.rt, &self.runner.man, model, &["eagle"], false, false,
+            )?;
             let base = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Vanilla, 0.0))?;
             for (mode, m) in [("chain", Method::EagleChain), ("tree", Method::Eagle)] {
                 let agg = self.runner.run_with(&bundle, &prompts, &self.spec(m, 0.0))?;
-                writeln!(out, "| {model} | {mode} | {:.2}x | {:.2} |", speedup(&agg, &base), agg.tau())?;
+                writeln!(
+                    out,
+                    "| {model} | {mode} | {:.2}x | {:.2} |",
+                    speedup(&agg, &base),
+                    agg.tau()
+                )?;
             }
         }
         Ok(out)
@@ -205,11 +231,14 @@ impl EvalCtx {
             if workload == "gsm8k" { "tab2" } else { "tab1" }
         );
         for model in ["toy-s", "toy-m"] {
-            let bundle = ModelBundle::load(&self.runner.rt, &self.runner.man, model, &["eagle"], false, false)?;
+            let bundle = ModelBundle::load(
+                &self.runner.rt, &self.runner.man, model, &["eagle"], false, false,
+            )?;
             for t in [0.0f32, 1.0] {
                 let base = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Vanilla, t))?;
                 let tree = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Eagle, t))?;
-                let chain = self.runner.run_with(&bundle, &prompts, &self.spec(Method::EagleChain, t))?;
+                let chain =
+                    self.runner.run_with(&bundle, &prompts, &self.spec(Method::EagleChain, t))?;
                 writeln!(
                     out,
                     "| {model} | {t} | {:.2}x | {:.2} | {} |",
@@ -228,14 +257,22 @@ impl EvalCtx {
     pub fn tab3(&self) -> Result<String> {
         let wl = self.workload("mtbench")?;
         let prompts = wl.take(self.n_prompts);
-        let bundle = ModelBundle::load(&self.runner.rt, &self.runner.man, "toy-moe", &["eagle"], false, false)?;
+        let bundle = ModelBundle::load(
+            &self.runner.rt, &self.runner.man, "toy-moe", &["eagle"], false, false,
+        )?;
         let base = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Vanilla, 0.0))?;
         let tree = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Eagle, 0.0))?;
         let chain = self.runner.run_with(&bundle, &prompts, &self.spec(Method::EagleChain, 0.0))?;
         let mut out = String::from(
             "# tab3 — MoE target (Mixtral analog), MT-bench analog, T=0\n\n| speedup | tau | 0-a | 1-a | 2-a | 3-a | 4-a |\n|---|---|---|---|---|---|---|\n",
         );
-        writeln!(out, "| {:.2}x | {:.2} | {} |", speedup(&tree, &base), tree.tau(), Self::fmt_alpha(&chain))?;
+        writeln!(
+            out,
+            "| {:.2}x | {:.2} | {} |",
+            speedup(&tree, &base),
+            tree.tau(),
+            Self::fmt_alpha(&chain)
+        )?;
         Ok(out)
     }
 
@@ -249,7 +286,9 @@ impl EvalCtx {
             "# tab4 — EAGLE composes with weight quantization (gpt-fast analog)\n\n| precision | method | tokens/s | weights MB |\n|---|---|---|---|\n",
         );
         for model in ["toy-s", "toy-s-int8"] {
-            let bundle = ModelBundle::load(&self.runner.rt, &self.runner.man, model, &["eagle"], false, false)?;
+            let bundle = ModelBundle::load(
+                &self.runner.rt, &self.runner.man, model, &["eagle"], false, false,
+            )?;
             let mb = bundle.target.exes.params.total_bytes as f64 / 1e6;
             let base = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Vanilla, 0.0))?;
             let eagle = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Eagle, 0.0))?;
@@ -257,7 +296,9 @@ impl EvalCtx {
             writeln!(out, "| {prec} | vanilla | {:.1} | {mb:.1} |", base.tokens_per_sec())?;
             writeln!(out, "| {prec} | eagle | {:.1} | {mb:.1} |", eagle.tokens_per_sec())?;
         }
-        out.push_str("\nNote: on this CPU-f32 substrate int8 shows the composition + memory\nreduction, not a wallclock win (dequant-in-graph); see DESIGN.md.\n");
+        out.push_str(
+            "\nNote: on this CPU-f32 substrate int8 shows the composition + memory\nreduction, not a wallclock win (dequant-in-graph); see DESIGN.md.\n",
+        );
         Ok(out)
     }
 
@@ -274,7 +315,8 @@ impl EvalCtx {
         let mut out = String::from(
             "# tab6 — training data ablation (toy-s, T=0)\n\n| training data | speedup | tau |\n|---|---|---|\n",
         );
-        for (label, variant) in [("fixed dataset", "eagle"), ("generated by target LLM", "eagle_gen")] {
+        let ablations = [("fixed dataset", "eagle"), ("generated by target LLM", "eagle_gen")];
+        for (label, variant) in ablations {
             let mut spec = self.spec(Method::Eagle, 0.0);
             spec.variant = variant.into();
             let agg = self.runner.run_with(&bundle, &prompts, &spec)?;
@@ -288,7 +330,9 @@ impl EvalCtx {
     // ---------------------------------------------------------------------
     pub fn tab7(&self) -> Result<String> {
         let wl = self.workload("mtbench")?;
-        let bundle = ModelBundle::load(&self.runner.rt, &self.runner.man, "toy-s", &["eagle"], false, false)?;
+        let bundle = ModelBundle::load(
+            &self.runner.rt, &self.runner.man, "toy-s", &["eagle"], false, false,
+        )?;
         let c = &self.runner.man.constants;
         let cfg = GenConfig { max_new: self.max_new, temperature: 0.0, seed: 7, eos: None };
         let mut out = String::from(
@@ -335,53 +379,98 @@ impl EvalCtx {
             best_v = best_v.max(vtps);
             best_e = best_e.max(etps);
         }
-        writeln!(out, "\nMax throughput: vanilla {best_v:.1} tok/s, eagle {best_e:.1} tok/s -> {:.2}x", best_e / best_v)?;
+        writeln!(
+            out,
+            "\nMax throughput: vanilla {best_v:.1} tok/s, eagle {best_e:.1} tok/s -> {:.2}x",
+            best_e / best_v
+        )?;
         Ok(out)
     }
 
     // ---------------------------------------------------------------------
-    // dyntree: static vs dynamic draft tree at equal verify budget
+    // dyntree: tau vs verify budget — static vs dynamic, plus the
+    // controller-driven verify-width selection (mean verify t column)
     // ---------------------------------------------------------------------
     pub fn dyntree(&self) -> Result<String> {
         let wl = self.workload("mtbench")?;
         let prompts = wl.take(self.n_prompts);
-        let bundle = ModelBundle::load(&self.runner.rt, &self.runner.man, "toy-s", &["eagle"], false, false)?;
+        let bundle = ModelBundle::load(
+            &self.runner.rt, &self.runner.man, "toy-s", &["eagle", "tok"], false, false,
+        )?;
         let mut out = String::from(
-            "# dyntree — static vs dynamic draft tree (toy-s, T=0, equal verify budget)\n\n\
-             | policy | speedup | tau | tokens/s | mean tree nodes |\n|---|---|---|---|---|\n",
+            "# dyntree — tau vs verify budget, static vs dynamic (toy-s, T=0)\n\n\
+             | policy | budget t | speedup | tau | tokens/s | mean tree nodes | mean verify t |\n\
+             |---|---|---|---|---|---|---|\n",
         );
         let base = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Vanilla, 0.0))?;
-        writeln!(out, "| vanilla | 1.00x | {:.2} | {:.1} | - |", base.tau(), base.tokens_per_sec())?;
-        let st = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Eagle, 0.0))?;
         writeln!(
             out,
-            "| static 4/8/8/5 | {:.2}x | {:.2} | {:.1} | {:.1} |",
-            speedup(&st, &base),
-            st.tau(),
-            st.tokens_per_sec(),
-            st.mean_tree_nodes()
+            "| vanilla | - | 1.00x | {:.2} | {:.1} | - | - |",
+            base.tau(),
+            base.tokens_per_sec()
         )?;
-        // equal budget: pin the dynamic node budget to the static tree's
-        // 25 nodes (the default would otherwise resolve to verify_t - 1)
-        let eq_budget = Some(TreeSpec::tree_default().total_nodes() - 1);
-        for (label, adaptive) in [("dynamic (fixed shape)", false), ("dynamic (adaptive)", true)] {
+        // tau-vs-budget sweep: equal-budget static/dynamic pairs per tree_t
+        // each level width must be reachable: <= prev level's count * branch
+        let static_shapes: [(usize, Vec<usize>); 4] = [
+            (8, vec![3, 2, 2]),
+            (16, vec![4, 6, 5]),
+            (26, TreeSpec::tree_default().level_widths),
+            (32, vec![4, 10, 10, 7]),
+        ];
+        for (t, widths) in static_shapes {
+            let label: Vec<String> = widths.iter().map(|w| w.to_string()).collect();
             let mut spec = self.spec(Method::Eagle, 0.0);
-            spec.tree = TreePolicy::Dynamic(DynTreeConfig { adaptive, budget: eq_budget, ..Default::default() });
+            spec.tree = TreePolicy::Static(TreeSpec { level_widths: widths, branch: 4 });
+            let st = self.runner.run_with(&bundle, &prompts, &spec)?;
+            writeln!(
+                out,
+                "| static {} | {t} | {:.2}x | {:.2} | {:.1} | {:.1} | {:.1} |",
+                label.join("/"),
+                speedup(&st, &base),
+                st.tau(),
+                st.tokens_per_sec(),
+                st.mean_tree_nodes(),
+                st.mean_verify_t()
+            )?;
+            let mut spec = self.spec(Method::Eagle, 0.0);
+            spec.tree =
+                TreePolicy::Dynamic(DynTreeConfig { budget: Some(t - 1), ..Default::default() });
             let dy = self.runner.run_with(&bundle, &prompts, &spec)?;
             writeln!(
                 out,
-                "| {label} | {:.2}x | {:.2} | {:.1} | {:.1} |",
+                "| dynamic (adaptive) | {t} | {:.2}x | {:.2} | {:.1} | {:.1} | {:.1} |",
                 speedup(&dy, &base),
                 dy.tau(),
                 dy.tokens_per_sec(),
-                dy.mean_tree_nodes()
+                dy.mean_tree_nodes(),
+                dy.mean_verify_t()
             )?;
         }
-        // batched lanes: per-lane controllers adapt each lane independently
+        // low-acceptance synthetic workload: the weak token-only draft head
+        // collapses acceptance, the per-request controller shrinks its
+        // speculation, and width selection drops below tree_t
+        let mut weak = self.spec(Method::Eagle, 0.0);
+        weak.variant = "tok".into();
+        weak.tree = TreePolicy::Dynamic(DynTreeConfig::default());
+        if bundle.drafts.contains_key("tok") {
+            let lo = self.runner.run_with(&bundle, &prompts, &weak)?;
+            writeln!(
+                out,
+                "| dynamic, weak tok draft (low alpha) | full | {:.2}x | {:.2} | {:.1} | {:.1} | {:.1} |",
+                speedup(&lo, &base),
+                lo.tau(),
+                lo.tokens_per_sec(),
+                lo.mean_tree_nodes(),
+                lo.mean_verify_t()
+            )?;
+        }
+        // batched lanes: per-lane controllers adapt each lane independently;
+        // the round width is the max over lane fits
         let bprompts: Vec<Vec<u32>> = wl.prompts.iter().take(2).map(|p| p.ids.clone()).collect();
         if bprompts.len() == 2 {
             let c = &self.runner.man.constants;
             let cfg = GenConfig { max_new: self.max_new, temperature: 0.0, seed: 7, eos: None };
+            let eq_budget = Some(TreeSpec::tree_default().total_nodes() - 1);
             for (label, policy) in [
                 ("bs=2 static", TreePolicy::default_tree()),
                 (
@@ -398,18 +487,22 @@ impl EvalCtx {
                 }
                 writeln!(
                     out,
-                    "| {label} | - | {:.2} | {:.1} | {:.1} |",
+                    "| {label} | 26 | - | {:.2} | {:.1} | {:.1} | {:.1} |",
                     agg.tau(),
                     agg.tokens_per_sec(),
-                    agg.mean_tree_nodes()
+                    agg.mean_tree_nodes(),
+                    agg.mean_verify_t()
                 )?;
             }
         }
         out.push_str(
-            "\nAll eagle rows share the static tree's 25-node verify budget; the\n\
-             dynamic planner reallocates that budget by draft confidence (global\n\
-             rerank) and the adaptive rows additionally tune depth/frontier per\n\
-             request online. Serving defaults give dynamic the full verify_t - 1.\n",
+            "\nEach budget row pairs a static tree of budget-1 nodes with the dynamic\n\
+             planner at the same node budget. 'mean verify t' is the mean lowered\n\
+             verify_t{t} width actually dispatched per round (the verify_widths\n\
+             family); it falls below tree_t whenever the controller's acceptance\n\
+             EWMA caps a request's budget to a cheaper executable. The weak-draft\n\
+             row is the low-acceptance regime: speculation shrinks and rounds run\n\
+             on the chain-like t8 width.\n",
         );
         Ok(out)
     }

@@ -1,11 +1,11 @@
 //! `repro` — the eagle-serve CLI.
 //!
 //!   repro serve   [--addr 127.0.0.1:8085] [--model toy-s] [--queue 64]
-//!                 [--tree static|dynamic]
+//!                 [--tree static|dynamic] [--verify-width auto|N]
 //!   repro generate --prompt "..." [--model toy-s] [--method eagle]
 //!                  [--max-tokens 64] [--temperature 0] [--seed 7]
 //!                  [--tree static|dynamic] [--draft-depth N] [--frontier K]
-//!                  [--branch B] [--no-adapt]
+//!                  [--branch B] [--no-adapt] [--verify-width auto|N]
 //!   repro eval    (--all | --exp fig1) [--n 16] [--max-new 48] [--out results]
 //!   repro profile [--model toy-s] [--n 4]   step-phase breakdown (§Perf)
 //!   repro selftest                            losslessness smoke check
@@ -15,7 +15,7 @@ use eagle_serve::coordinator::request::Method;
 use eagle_serve::eval::tables::EvalCtx;
 use eagle_serve::eval::runner::{Runner, RunSpec};
 use eagle_serve::models::{artifacts_dir, ModelBundle};
-use eagle_serve::spec::dyntree::{DynTreeConfig, TreePolicy};
+use eagle_serve::spec::dyntree::{DynTreeConfig, TreePolicy, WidthSelect};
 use eagle_serve::spec::engine::GenConfig;
 use eagle_serve::text::bpe::Bpe;
 use eagle_serve::util::cli::Args;
@@ -45,9 +45,11 @@ fn print_help() {
         "repro — EAGLE speculative-decoding serving framework\n\n\
          USAGE: repro <serve|generate|eval|profile|selftest> [options]\n\n\
          serve     --addr HOST:PORT --model NAME --queue N --tree static|dynamic\n\
+         \u{20}          --verify-width auto|N   (auto = cheapest lowered verify_t{{t}} per round)\n\
          generate  --prompt TEXT --model NAME --method eagle|eagle-chain|vanilla|medusa|lookahead|classic-spec\n\
          \u{20}          --max-tokens N --temperature F --seed N\n\
          \u{20}          --tree static|dynamic [--draft-depth N --frontier K --branch B --no-adapt]\n\
+         \u{20}          --verify-width auto|N\n\
          eval      --all | --exp ID   (--n PROMPTS --max-new N --out DIR)\n\
          profile   --model NAME --n N\n\
          selftest  quick losslessness check (eagle == vanilla at T=0)\n\n\
@@ -74,12 +76,20 @@ fn tree_policy(args: &Args) -> Result<TreePolicy> {
     }
 }
 
+/// Parse `--verify-width auto|N` into a width policy.
+fn verify_width(args: &Args) -> Result<WidthSelect> {
+    let s = args.get_or("verify-width", "auto");
+    WidthSelect::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("bad --verify-width '{s}' (auto or an integer >= 2)"))
+}
+
 fn serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:8085");
     let model = args.get_or("model", "toy-s");
     let queue = args.usize_or("queue", 64);
     let tree = tree_policy(args)?;
-    eagle_serve::server::serve(addr, model, &artifacts_dir(), queue, tree)
+    let width = verify_width(args)?;
+    eagle_serve::server::serve(addr, model, &artifacts_dir(), queue, tree, width)
 }
 
 fn generate(args: &Args) -> Result<()> {
@@ -89,7 +99,9 @@ fn generate(args: &Args) -> Result<()> {
     let method = Method::parse(args.get_or("method", "eagle"))
         .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
     let bundle = ModelBundle::load(&runner.rt, &runner.man, model, &["eagle"], true, true)?;
-    let prompt = args.get_or("prompt", "tom has 12 apples. tom buys 5 more and gives away 3. how many apples remain?");
+    let default_prompt =
+        "tom has 12 apples. tom buys 5 more and gives away 3. how many apples remain?";
+    let prompt = args.get_or("prompt", default_prompt);
     let ids = bpe.encode_prompt(prompt);
     let spec = RunSpec {
         method,
@@ -97,6 +109,7 @@ fn generate(args: &Args) -> Result<()> {
         max_new: args.usize_or("max-tokens", 64),
         seed: args.u64_or("seed", 7),
         tree: tree_policy(args)?,
+        verify_width: verify_width(args)?,
         ..Default::default()
     };
     let cfg = GenConfig {
@@ -118,6 +131,9 @@ fn generate(args: &Args) -> Result<()> {
     );
     if rec.mean_tree_nodes() > 0.0 {
         println!("tree   : {:.1} verified draft nodes/round (mean)", rec.mean_tree_nodes());
+    }
+    if rec.mean_verify_t() > 0.0 {
+        println!("verify : {:.1} mean selected width (verify_t family)", rec.mean_verify_t());
     }
     Ok(())
 }
@@ -151,7 +167,8 @@ fn profile(args: &Args) -> Result<()> {
     let model = args.get_or("model", "toy-s");
     let n = args.usize_or("n", 4);
     let bundle = ModelBundle::load(&runner.rt, &runner.man, model, &["eagle"], false, false)?;
-    let wl = eagle_serve::eval::Workload::load(&runner.man, &bpe, "mtbench", runner.man.constants.prefill_p)?;
+    let p_win = runner.man.constants.prefill_p;
+    let wl = eagle_serve::eval::Workload::load(&runner.man, &bpe, "mtbench", p_win)?;
     let spec = RunSpec::default();
     let agg = runner.run_with(&bundle, &wl.take(n), &spec)?;
     let tl = &agg.timeline;
@@ -169,12 +186,18 @@ fn profile(args: &Args) -> Result<()> {
     println!("per-executable:");
     for (name, calls, ms) in bundle.target.exes.profile() {
         if calls > 0 {
-            println!("  target.{name:14} {calls:5} calls  {ms:8.1} ms  ({:.2} ms/call)", ms / calls as f64);
+            println!(
+                "  target.{name:14} {calls:5} calls  {ms:8.1} ms  ({:.2} ms/call)",
+                ms / calls as f64
+            );
         }
     }
     for (name, calls, ms) in bundle.drafts["eagle"].exes.profile() {
         if calls > 0 {
-            println!("  draft.{name:15} {calls:5} calls  {ms:8.1} ms  ({:.2} ms/call)", ms / calls as f64);
+            println!(
+                "  draft.{name:15} {calls:5} calls  {ms:8.1} ms  ({:.2} ms/call)",
+                ms / calls as f64
+            );
         }
     }
     Ok(())
@@ -184,11 +207,13 @@ fn selftest(_args: &Args) -> Result<()> {
     let runner = Runner::new(&artifacts_dir())?;
     let bpe = Bpe::load(runner.man.path(&runner.man.tokenizer).to_str().unwrap())?;
     let bundle = ModelBundle::load(&runner.rt, &runner.man, "toy-s", &["eagle"], false, false)?;
-    let wl = eagle_serve::eval::Workload::load(&runner.man, &bpe, "mtbench", runner.man.constants.prefill_p)?;
+    let p_win = runner.man.constants.prefill_p;
+    let wl = eagle_serve::eval::Workload::load(&runner.man, &bpe, "mtbench", p_win)?;
     let cfg = GenConfig { max_new: 32, temperature: 0.0, seed: 7, eos: None };
     let mut ok = 0;
     for p in wl.take(4) {
-        let van = runner.run_one(&bundle, &p.ids, &RunSpec { method: Method::Vanilla, ..Default::default() }, &cfg)?;
+        let vspec = RunSpec { method: Method::Vanilla, ..Default::default() };
+        let van = runner.run_one(&bundle, &p.ids, &vspec, &cfg)?;
         let eag = runner.run_one(&bundle, &p.ids, &RunSpec::default(), &cfg)?;
         if van.tokens == eag.tokens {
             ok += 1;

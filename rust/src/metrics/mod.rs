@@ -35,6 +35,11 @@ pub struct GenRecord {
     /// constant for static trees, workload-dependent under the dynamic
     /// planner. Empty for non-tree engines.
     pub round_tree_nodes: Vec<usize>,
+    /// Per-round selected verify width `t` (the `verify_t{t}` executable
+    /// dispatched) — constant `tree_t` without a lowered width family,
+    /// request-dependent with one. Empty for engines that predate width
+    /// selection (baselines).
+    pub round_verify_t: Vec<usize>,
     /// n-alpha: [n] -> (accepted, tried) at chain-draft position n+1.
     pub alpha: Vec<(u64, u64)>,
     /// Draft tokens proposed in total (chain mode: gamma per round).
@@ -52,6 +57,7 @@ impl GenRecord {
             draft_passes: 0,
             round_accepts: Vec::new(),
             round_tree_nodes: Vec::new(),
+            round_verify_t: Vec::new(),
             alpha: vec![(0, 0); 5],
             drafted: 0,
             wall_ns: 0,
@@ -79,6 +85,14 @@ impl GenRecord {
         }
         self.round_tree_nodes.iter().sum::<usize>() as f64 / self.round_tree_nodes.len() as f64
     }
+
+    /// Mean selected verify width per round (0 when no widths recorded).
+    pub fn mean_verify_t(&self) -> f64 {
+        if self.round_verify_t.is_empty() {
+            return 0.0;
+        }
+        self.round_verify_t.iter().sum::<usize>() as f64 / self.round_verify_t.len() as f64
+    }
 }
 
 /// Aggregate over many generations.
@@ -93,6 +107,8 @@ pub struct Aggregate {
     pub rounds: usize,
     pub tree_nodes_sum: usize,
     pub tree_rounds: usize,
+    pub verify_t_sum: usize,
+    pub verify_t_rounds: usize,
     pub alpha: Vec<(u64, u64)>,
     pub wall_each: Vec<u64>,
     pub timeline: Timeline,
@@ -113,6 +129,8 @@ impl Aggregate {
         self.rounds += r.round_accepts.len();
         self.tree_nodes_sum += r.round_tree_nodes.iter().sum::<usize>();
         self.tree_rounds += r.round_tree_nodes.len();
+        self.verify_t_sum += r.round_verify_t.iter().sum::<usize>();
+        self.verify_t_rounds += r.round_verify_t.len();
         for (i, &(a, t)) in r.alpha.iter().enumerate() {
             self.alpha[i].0 += a;
             self.alpha[i].1 += t;
@@ -143,6 +161,14 @@ impl Aggregate {
             return 0.0;
         }
         self.tree_nodes_sum as f64 / self.tree_rounds as f64
+    }
+
+    /// Mean selected verify width per round across all generations.
+    pub fn mean_verify_t(&self) -> f64 {
+        if self.verify_t_rounds == 0 {
+            return 0.0;
+        }
+        self.verify_t_sum as f64 / self.verify_t_rounds as f64
     }
 
     /// n-alpha acceptance rates, None when that depth was never tried.
@@ -202,6 +228,19 @@ mod tests {
         assert!((a.mean_tree_nodes() - 20.0).abs() < 1e-9);
         assert_eq!(Aggregate::new().mean_tree_nodes(), 0.0);
         assert_eq!(GenRecord::new(1).mean_tree_nodes(), 0.0);
+    }
+
+    #[test]
+    fn verify_width_means() {
+        let mut r = GenRecord::new(1);
+        r.round_verify_t = vec![32, 8, 8];
+        assert!((r.mean_verify_t() - 16.0).abs() < 1e-9);
+        let mut a = Aggregate::new();
+        a.add(&r);
+        a.add(&r);
+        assert!((a.mean_verify_t() - 16.0).abs() < 1e-9);
+        assert_eq!(Aggregate::new().mean_verify_t(), 0.0);
+        assert_eq!(GenRecord::new(1).mean_verify_t(), 0.0);
     }
 
     #[test]

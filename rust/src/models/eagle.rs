@@ -41,7 +41,8 @@ impl EagleDraft {
         entry: &DraftEntry,
         name: &str,
     ) -> Result<EagleDraft> {
-        let exes = ExeSet::load(rt, man, &entry.weights, &entry.param_names, &entry.executables, name)?;
+        let exes =
+            ExeSet::load(rt, man, &entry.weights, &entry.param_names, &entry.executables, name)?;
         // the head borrows the target's embedding + LM head buffers; load a
         // private copy of the target params (cheap: uploaded once)
         let target_weights = crate::runtime::ParamSet::load(

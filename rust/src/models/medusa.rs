@@ -15,8 +15,14 @@ pub struct MedusaHeads {
 }
 
 impl MedusaHeads {
-    pub fn load(rt: &Rc<Runtime>, man: &Manifest, entry: &DraftEntry, name: &str) -> Result<MedusaHeads> {
-        let exes = ExeSet::load(rt, man, &entry.weights, &entry.param_names, &entry.executables, name)?;
+    pub fn load(
+        rt: &Rc<Runtime>,
+        man: &Manifest,
+        entry: &DraftEntry,
+        name: &str,
+    ) -> Result<MedusaHeads> {
+        let exes =
+            ExeSet::load(rt, man, &entry.weights, &entry.param_names, &entry.executables, name)?;
         Ok(MedusaHeads { exes, k: 4, d: 0, vocab: 0 })
     }
 

@@ -56,7 +56,10 @@ impl ExeSet {
     pub fn exe(&self, name: &str) -> Result<&Exe> {
         self.exes
             .get(name)
-            .ok_or_else(|| anyhow::anyhow!("executable '{name}' not loaded (have {:?})", self.exes.keys().collect::<Vec<_>>()))
+            .ok_or_else(|| {
+                let have: Vec<_> = self.exes.keys().collect();
+                anyhow::anyhow!("executable '{name}' not loaded (have {have:?})")
+            })
     }
 
     pub fn has(&self, name: &str) -> bool {

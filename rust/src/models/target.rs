@@ -17,7 +17,13 @@ pub struct KvCache {
 }
 
 impl KvCache {
-    pub fn new(n_layers: usize, batch: usize, max_len: usize, n_heads: usize, head_dim: usize) -> KvCache {
+    pub fn new(
+        n_layers: usize,
+        batch: usize,
+        max_len: usize,
+        n_heads: usize,
+        head_dim: usize,
+    ) -> KvCache {
         let dims = [2, n_layers, batch, max_len, n_heads, head_dim];
         KvCache { data: vec![0.0; dims.iter().product()], dims }
     }
@@ -48,8 +54,14 @@ pub struct TargetModel {
 }
 
 impl TargetModel {
-    pub fn load(rt: &Rc<Runtime>, man: &Manifest, name: &str, entry: &ModelEntry) -> Result<TargetModel> {
-        let exes = ExeSet::load(rt, man, &entry.weights, &entry.param_names, &entry.executables, name)?;
+    pub fn load(
+        rt: &Rc<Runtime>,
+        man: &Manifest,
+        name: &str,
+        entry: &ModelEntry,
+    ) -> Result<TargetModel> {
+        let exes =
+            ExeSet::load(rt, man, &entry.weights, &entry.param_names, &entry.executables, name)?;
         let c = &entry.config;
         Ok(TargetModel {
             name: name.to_string(),
@@ -98,7 +110,12 @@ impl TargetModel {
     }
 
     /// Single-token decode (bs=1 or batched): `tokens` is one id per lane.
-    pub fn decode(&self, cache: &mut KvCache, cache_lens: &[i32], tokens: &[i32]) -> Result<ForwardOut> {
+    pub fn decode(
+        &self,
+        cache: &mut KvCache,
+        cache_lens: &[i32],
+        tokens: &[i32],
+    ) -> Result<ForwardOut> {
         let b = cache_lens.len();
         let exe_name = if b == 1 { "decode".to_string() } else { format!("decode_bs{b}") };
         let rt = &self.exes.rt;
@@ -116,11 +133,20 @@ impl TargetModel {
         Ok(ForwardOut { logits, feats })
     }
 
+    /// Whether a `verify_t{t}` executable is lowered for batch size `b`
+    /// — the probe behind [`WidthFamily::from_available`]
+    /// (`crate::spec::dyntree::WidthFamily`).
+    pub fn has_verify(&self, t: usize, b: usize) -> bool {
+        self.exes.has(&verify_exe_name(t, b))
+    }
+
     /// Fused commit+verify over `t` tree nodes (§Perf iteration 1): the
     /// PREVIOUS round's acceptance (`prev_idx`/`prev_n`, vs boundary
     /// `old_lens`) is compacted in-graph, then the new tree (built against
     /// `old_lens + prev_n`) is processed. `bias` is the additive mask
-    /// [B, t, S] built by the tree module.
+    /// [B, t, S] built by the tree module. `t` may be any width of the
+    /// lowered `verify_t{t}` family — callers pick the cheapest one that
+    /// holds the round's tree (see `spec/dyntree/widths.rs`).
     #[allow(clippy::too_many_arguments)]
     pub fn verify(
         &self,
@@ -135,7 +161,7 @@ impl TargetModel {
         accept_a: usize,
     ) -> Result<ForwardOut> {
         let b = old_lens.len();
-        let exe_name = if b == 1 { format!("verify_t{t}") } else { format!("verify_t{t}_bs{b}") };
+        let exe_name = verify_exe_name(t, b);
         let rt = &self.exes.rt;
         let cache_buf = rt.upload_f32(&cache.data, &cache.dims_usize())?;
         let len_buf = rt.upload_i32(old_lens, &[b])?;
@@ -194,9 +220,25 @@ impl TargetModel {
     }
 
     /// Slice [b, t, :] out of a [B, T, V]-flattened vector.
-    pub fn row<'a>(&self, flat: &'a [f32], nt: usize, b: usize, t: usize, width: usize) -> &'a [f32] {
+    pub fn row<'a>(
+        &self,
+        flat: &'a [f32],
+        nt: usize,
+        b: usize,
+        t: usize,
+        width: usize,
+    ) -> &'a [f32] {
         let off = (b * nt + t) * width;
         &flat[off..off + width]
+    }
+}
+
+/// Manifest/executable name of the fused verify at width `t`, batch `b`.
+pub fn verify_exe_name(t: usize, b: usize) -> String {
+    if b == 1 {
+        format!("verify_t{t}")
+    } else {
+        format!("verify_t{t}_bs{b}")
     }
 }
 

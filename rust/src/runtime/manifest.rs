@@ -52,6 +52,14 @@ pub struct Constants {
     pub chain_t: usize,
     pub accept_a: usize,
     pub draft_w: usize,
+    /// Lowered verify-width family (`"verify_widths"` manifest field):
+    /// each `t` here has `verify_t{t}` (and, where batched serving is
+    /// lowered, `verify_t{t}_bs{b}`) executables, letting the engines
+    /// dispatch a round to the cheapest width that holds its draft tree.
+    /// Ascending, deduplicated, and always containing `tree_t`; older
+    /// manifests without the field degrade to `[tree_t]` (the legacy
+    /// single-width behavior).
+    pub verify_widths: Vec<usize>,
 }
 
 #[derive(Debug)]
@@ -143,8 +151,9 @@ fn parse_model(name: &str, v: &Json) -> Result<ModelEntry> {
 
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
-        let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .map_err(|e| anyhow!("reading manifest in {}: {e} (run `make artifacts`)", dir.display()))?;
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            anyhow!("reading manifest in {}: {e} (run `make artifacts`)", dir.display())
+        })?;
         let v = Json::parse(&text)?;
         let c = v.req("constants")?;
         let gc = |k: &str| -> Result<usize> {
@@ -160,14 +169,24 @@ impl Manifest {
                 workloads.insert(k.clone(), p.as_str().unwrap_or_default().to_string());
             }
         }
+        let tree_t = gc("tree_t")?;
+        let mut verify_widths: Vec<usize> = c
+            .get("verify_widths")
+            .and_then(|w| w.as_arr())
+            .map(|arr| arr.iter().filter_map(|x| x.as_usize()).filter(|&t| t >= 2).collect())
+            .unwrap_or_default();
+        verify_widths.push(tree_t);
+        verify_widths.sort_unstable();
+        verify_widths.dedup();
         Ok(Manifest {
             root: dir.to_path_buf(),
             constants: Constants {
                 prefill_p: gc("prefill_p")?,
-                tree_t: gc("tree_t")?,
+                tree_t,
                 chain_t: gc("chain_t")?,
                 accept_a: gc("accept_a")?,
                 draft_w: gc("draft_w")?,
+                verify_widths,
             },
             tokenizer: v.req("tokenizer")?.as_str().unwrap_or_default().to_string(),
             workloads,
@@ -182,7 +201,10 @@ impl Manifest {
     pub fn model(&self, name: &str) -> Result<&ModelEntry> {
         self.models
             .get(name)
-            .ok_or_else(|| anyhow!("model '{name}' not in manifest (have: {:?})", self.models.keys().collect::<Vec<_>>()))
+            .ok_or_else(|| {
+                let have: Vec<_> = self.models.keys().collect();
+                anyhow!("model '{name}' not in manifest (have: {have:?})")
+            })
     }
 }
 
@@ -208,9 +230,30 @@ mod tests {
         .unwrap();
         let m = Manifest::load(&dir).unwrap();
         assert_eq!(m.constants.tree_t, 32);
+        assert_eq!(m.constants.verify_widths, vec![32], "no field -> legacy single width");
         let me = m.model("m").unwrap();
         assert_eq!(me.config.d, 4);
         assert_eq!(me.drafts["eagle"].param_names, vec!["fc"]);
         assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn parses_verify_width_family() {
+        let dir = std::env::temp_dir().join("eagle_manifest_widths_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"tokenizer":"vocab.json",
+                "constants":{"prefill_p":64,"tree_t":32,"chain_t":8,"accept_a":8,"draft_w":8,
+                             "verify_widths":[16,8,32,8,1]},
+                "models":{}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(
+            m.constants.verify_widths,
+            vec![8, 16, 32],
+            "sorted, deduplicated, degenerate widths dropped, tree_t included"
+        );
     }
 }

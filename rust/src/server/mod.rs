@@ -20,7 +20,7 @@ use crate::coordinator::request::{Method, Request, Response, TreeChoice};
 use crate::coordinator::{queue::PushError, RequestQueue, Scheduler};
 use crate::eval::runner::{Runner, RunSpec};
 use crate::models::ModelBundle;
-use crate::spec::dyntree::TreePolicy;
+use crate::spec::dyntree::{TreePolicy, WidthSelect};
 use crate::spec::engine::GenConfig;
 use crate::text::bpe::Bpe;
 use crate::util::json::Json;
@@ -38,13 +38,16 @@ pub struct ServerStats {
 /// (single accelerator, single worker — CPU testbed); HTTP I/O threads
 /// hand requests over through the bounded queue (backpressure -> 429).
 /// `default_tree` is the draft-tree policy applied when a request does
-/// not pick one via its `"tree"` field.
+/// not pick one via its `"tree"` field; `default_width` is the
+/// verify-width policy (`--verify-width auto|N`) applied when a request
+/// does not pin one via its `"verify_width"` field.
 pub fn serve(
     addr: &str,
     model: &str,
     artifacts: &std::path::Path,
     queue_cap: usize,
     default_tree: TreePolicy,
+    default_width: WidthSelect,
 ) -> Result<()> {
     let queue = Arc::new(RequestQueue::new(queue_cap));
     let stats = Arc::new(ServerStats {
@@ -74,7 +77,11 @@ pub fn serve(
                 &runner.rt, &runner.man, &model, &["eagle"], true, true,
             )
             .expect("loading model bundle");
-            eprintln!("[server] model '{model}' loaded; serving (tree policy: {})", default_tree.name());
+            eprintln!(
+                "[server] model '{model}' loaded; serving (tree policy: {}, verify width: {})",
+                default_tree.name(),
+                default_width.describe()
+            );
             let sched = Scheduler::new(1, 0);
             loop {
                 let batch = sched.next_batch(&queue);
@@ -96,6 +103,10 @@ pub fn serve(
                             (TreeChoice::Dynamic, TreePolicy::Dynamic(_)) => default_tree.clone(),
                             (TreeChoice::Dynamic, _) => TreePolicy::dynamic_default(),
                             (TreeChoice::Default, _) => default_tree.clone(),
+                        },
+                        verify_width: match req.verify_width {
+                            Some(t) => WidthSelect::Fixed(t),
+                            None => default_width,
                         },
                         ..Default::default()
                     };

@@ -83,6 +83,12 @@ impl SpecController {
         self.params
     }
 
+    /// Whether the overall acceptance EWMA has observed any round yet
+    /// (width selection must not act on the 0.0 initial value).
+    pub fn has_rate(&self) -> bool {
+        self.rate_seen
+    }
+
     /// Fold in one round's per-depth `(accepted, tried)` increments — the
     /// delta of `GenRecord::alpha` across the round — then adapt.
     pub fn observe(&mut self, alpha_delta: &[(u64, u64)]) {
@@ -200,7 +206,8 @@ mod tests {
     #[test]
     fn init_clamps_to_config_bounds() {
         let cfg = ControllerConfig { max_depth: 4, max_frontier: 3, ..Default::default() };
-        let c = SpecController::new(cfg, DynTreeParams { depth: 9, frontier_k: 9, branch: 4, budget: 10 });
+        let init = DynTreeParams { depth: 9, frontier_k: 9, branch: 4, budget: 10 };
+        let c = SpecController::new(cfg, init);
         assert_eq!(c.params().depth, 4);
         assert_eq!(c.params().frontier_k, 3);
     }

@@ -11,7 +11,11 @@
 //!   acceptance collapses and deepening it when acceptance is high;
 //! * [`policy`] — [`TreePolicy`] (`Static(TreeSpec)` | `Dynamic(..)`),
 //!   threaded through `EagleEngine`, `BatchEagleEngine`, the server/CLI
-//!   config, and the eval harness (`repro eval --exp dyntree`).
+//!   config, and the eval harness (`repro eval --exp dyntree`);
+//! * [`widths`] — per-round verify-width selection over the lowered
+//!   `verify_t{t}` executable family (the `"verify_widths"` manifest
+//!   constant), driven by the controller's acceptance EWMA at bs=1 and
+//!   by the max over lane budgets in the batched engine.
 //!
 //! Topology invariants (ancestor closure, node budget, uniform-confidence
 //! degradation to the static tree) are property-tested in
@@ -21,7 +25,9 @@
 pub mod controller;
 pub mod planner;
 pub mod policy;
+pub mod widths;
 
 pub use controller::{ControllerConfig, SpecController};
 pub use planner::{expand_candidates, rerank, select_frontier, DynTreeParams};
 pub use policy::{DynTreeConfig, TreePolicy};
+pub use widths::{plan_round_width, width_hint, WidthFamily, WidthSelect};

@@ -115,7 +115,8 @@ pub fn rerank(tree: &DraftTree, budget: usize) -> (DraftTree, Vec<usize>) {
             continue;
         }
         let p = tree.nodes[i].parent.expect("non-root node must have a parent");
-        let ni = out.add(remap[p], tree.nodes[i].token, tree.nodes[i].score, tree.nodes[i].q.clone());
+        let ni =
+            out.add(remap[p], tree.nodes[i].token, tree.nodes[i].score, tree.nodes[i].q.clone());
         remap[i] = ni;
         kept_idx.push(i);
     }

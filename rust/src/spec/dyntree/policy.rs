@@ -118,7 +118,8 @@ mod tests {
 
     #[test]
     fn params_respect_lowered_shapes() {
-        let dc = DynTreeConfig { depth: 99, frontier_k: 99, budget: Some(999), ..Default::default() };
+        let dc =
+            DynTreeConfig { depth: 99, frontier_k: 99, budget: Some(999), ..Default::default() };
         let p = dc.params(32, 8, 8);
         assert_eq!(p.depth, 7, "depth + 1 must fit draft_w and accept_a");
         assert_eq!(p.frontier_k, 8);

@@ -1,0 +1,247 @@
+//! Verify-width selection (S21): pick the cheapest lowered `verify_t{t}`
+//! executable that still fits the round's draft tree.
+//!
+//! Verify-step FLOPs scale linearly with the lowered tree width `t`, yet
+//! a single `verify_t{tree_t}` executable pads every round to the worst
+//! case. The AOT pipeline now lowers a small *family* of verify widths
+//! (the `"verify_widths"` manifest constant, e.g. `[8, 16, 32]`, plus
+//! their `_bs{b}` variants), and this module owns the per-round choice:
+//!
+//! * [`WidthFamily`] — the widths actually lowered for one (model, batch
+//!   size), ascending; [`WidthFamily::fit`] returns the smallest member
+//!   that holds a given node count (falling back to the largest).
+//! * [`plan_round_width`] — the PRE-growth plan for the dynamic planner:
+//!   caps the round's node budget to the width the controller's
+//!   acceptance EWMA justifies (chronically low-acceptance requests drop
+//!   to the cheapest, chain-like executable). The cap is applied *before*
+//!   growth/sampling, so at T>0 no sampled sibling is ever dropped and
+//!   the SpecInfer acceptance rule stays unbiased (see
+//!   `rust/tests/prop_dyntree.rs`).
+//! * [`WidthSelect`] — the user-facing override (`auto` | fixed `t`)
+//!   threaded through the CLI (`--verify-width`), the server flag, and
+//!   the per-request `"verify_width"` field.
+//!
+//! After growth the engines re-fit the *actual* tree size
+//! (`family.fit(tree.len())`): shrinking padding never changes which
+//! nodes are verified, so greedy outputs are identical to the fixed
+//! `tree_t` path and T>0 sampling is untouched. The batched engine takes
+//! the max over its lanes' fits so no lane is truncated below its
+//! planned tree.
+
+use super::controller::SpecController;
+use super::planner::DynTreeParams;
+
+/// The verify widths lowered for one (model, batch size), ascending and
+/// deduplicated. Always non-empty.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WidthFamily {
+    widths: Vec<usize>,
+}
+
+impl WidthFamily {
+    /// Single-width family — the legacy fixed-`verify_t` behavior (also
+    /// used by the chain engines and the `--verify-width N` override).
+    pub fn single(t: usize) -> WidthFamily {
+        WidthFamily { widths: vec![t.max(1)] }
+    }
+
+    /// Family from the manifest's declared widths, keeping only widths
+    /// `<= max_t` for which `available` reports a lowered executable.
+    /// `max_t` (the engine's configured `verify_t`) is always a member,
+    /// so the family degrades to the legacy single width when the
+    /// manifest declares nothing or the executables are missing.
+    pub fn from_available(
+        declared: &[usize],
+        max_t: usize,
+        available: impl Fn(usize) -> bool,
+    ) -> WidthFamily {
+        let mut widths: Vec<usize> = declared
+            .iter()
+            .copied()
+            .filter(|&t| t >= 2 && t <= max_t && available(t))
+            .collect();
+        widths.push(max_t.max(1));
+        widths.sort_unstable();
+        widths.dedup();
+        WidthFamily { widths }
+    }
+
+    pub fn widths(&self) -> &[usize] {
+        &self.widths
+    }
+
+    pub fn min(&self) -> usize {
+        self.widths[0]
+    }
+
+    pub fn max(&self) -> usize {
+        *self.widths.last().unwrap()
+    }
+
+    pub fn is_single(&self) -> bool {
+        self.widths.len() == 1
+    }
+
+    /// Smallest family width that holds `nodes` tree nodes (root
+    /// included); the largest width when none fits — callers must still
+    /// check `fit(n) >= n` before building verify inputs.
+    pub fn fit(&self, nodes: usize) -> usize {
+        for &t in &self.widths {
+            if t >= nodes {
+                return t;
+            }
+        }
+        self.max()
+    }
+}
+
+/// Pre-growth width plan for one dynamic round: returns the planned
+/// width and the planner params with the node budget clamped to it.
+///
+/// The budget cap combines two value-independent signals:
+/// * the planner's own growth ceiling (`depth * frontier_k * branch`
+///   non-root nodes can ever be grown), and
+/// * the controller's smoothed acceptance rate — once it collapses below
+///   the controller's `low` threshold, the round is capped to the
+///   cheapest executable in the family (the chain-like width).
+///
+/// Both caps shrink the budget BEFORE any candidate is scored or
+/// sampled, which keeps T>0 growth lossless (no sampled sibling is
+/// dropped after the fact; see the module doc).
+pub fn plan_round_width(
+    family: &WidthFamily,
+    params: &DynTreeParams,
+    rate_hint: Option<(f32, f32)>,
+) -> (usize, DynTreeParams) {
+    let growth = params
+        .depth
+        .saturating_mul(params.frontier_k)
+        .saturating_mul(params.branch)
+        .max(1);
+    let mut budget = params.budget.min(growth).max(1);
+    if let Some((rate, low)) = rate_hint {
+        if rate <= low {
+            budget = budget.min(family.min().saturating_sub(1).max(1));
+        }
+    }
+    let t = family.fit(budget + 1);
+    let clamped = DynTreeParams { budget: budget.min(t.saturating_sub(1).max(1)), ..*params };
+    (t, clamped)
+}
+
+/// The controller's width hint: `(smoothed acceptance rate, low
+/// threshold)`, available only once the EWMA has matured past warmup so
+/// a cold request never gets prematurely downshifted.
+pub fn width_hint(controller: Option<&SpecController>) -> Option<(f32, f32)> {
+    let c = controller?;
+    if c.rounds > c.cfg.warmup_rounds && c.has_rate() {
+        Some((c.rate_ewma, c.cfg.low))
+    } else {
+        None
+    }
+}
+
+/// User-facing verify-width override, threaded through the CLI
+/// (`--verify-width auto|N`), the serve flag, and the per-request
+/// `"verify_width"` field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WidthSelect {
+    /// Controller-driven selection over the lowered family (default).
+    #[default]
+    Auto,
+    /// Pin every round to one width (must be lowered; a round whose tree
+    /// exceeds it fails with a clear error instead of truncating).
+    Fixed(usize),
+}
+
+impl WidthSelect {
+    pub fn parse(s: &str) -> Option<WidthSelect> {
+        match s {
+            "auto" | "0" => Some(WidthSelect::Auto),
+            _ => s.parse::<usize>().ok().filter(|&t| t >= 2).map(WidthSelect::Fixed),
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            WidthSelect::Auto => "auto".into(),
+            WidthSelect::Fixed(t) => t.to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fam() -> WidthFamily {
+        WidthFamily::from_available(&[8, 16, 32], 32, |_| true)
+    }
+
+    fn params(depth: usize, frontier_k: usize, branch: usize, budget: usize) -> DynTreeParams {
+        DynTreeParams { depth, frontier_k, branch, budget }
+    }
+
+    #[test]
+    fn family_filters_and_keeps_fallback() {
+        let f = WidthFamily::from_available(&[8, 16, 32, 64], 32, |t| t != 16);
+        assert_eq!(f.widths(), &[8, 32], "16 unavailable, 64 over max_t");
+        let legacy = WidthFamily::from_available(&[], 26, |_| false);
+        assert_eq!(legacy.widths(), &[26]);
+        assert!(legacy.is_single());
+    }
+
+    #[test]
+    fn fit_picks_smallest_holding_width() {
+        let f = fam();
+        assert_eq!(f.fit(1), 8);
+        assert_eq!(f.fit(8), 8);
+        assert_eq!(f.fit(9), 16);
+        assert_eq!(f.fit(26), 32);
+        assert_eq!(f.fit(40), 32, "falls back to max when nothing fits");
+    }
+
+    #[test]
+    fn plan_full_budget_uses_max_width() {
+        let (t, p) = plan_round_width(&fam(), &params(4, 6, 4, 31), None);
+        assert_eq!(t, 32);
+        assert_eq!(p.budget, 31);
+    }
+
+    #[test]
+    fn plan_small_growth_downshifts() {
+        // controller shrank to depth 1 / frontier 1: at most 4 nodes grow
+        let (t, p) = plan_round_width(&fam(), &params(1, 1, 4, 31), None);
+        assert_eq!(t, 8);
+        assert_eq!(p.budget, 4);
+        assert_eq!(p.depth, 1, "shape params pass through");
+    }
+
+    #[test]
+    fn plan_low_acceptance_drops_to_cheapest() {
+        let (t, p) = plan_round_width(&fam(), &params(4, 6, 4, 31), Some((0.1, 0.35)));
+        assert_eq!(t, 8);
+        assert_eq!(p.budget, 7, "capped to the cheapest width's budget");
+        let (t2, p2) = plan_round_width(&fam(), &params(4, 6, 4, 31), Some((0.9, 0.35)));
+        assert_eq!(t2, 32);
+        assert_eq!(p2.budget, 31);
+    }
+
+    #[test]
+    fn plan_never_grows_budget() {
+        let (t, p) = plan_round_width(&fam(), &params(7, 8, 4, 13), None);
+        assert_eq!(t, 16);
+        assert_eq!(p.budget, 13);
+    }
+
+    #[test]
+    fn width_select_parsing() {
+        assert_eq!(WidthSelect::parse("auto"), Some(WidthSelect::Auto));
+        assert_eq!(WidthSelect::parse("0"), Some(WidthSelect::Auto));
+        assert_eq!(WidthSelect::parse("16"), Some(WidthSelect::Fixed(16)));
+        assert_eq!(WidthSelect::parse("1"), None, "width 1 cannot hold a root+child");
+        assert_eq!(WidthSelect::parse("nope"), None);
+        assert_eq!(WidthSelect::Fixed(8).describe(), "8");
+        assert_eq!(WidthSelect::default(), WidthSelect::Auto);
+    }
+}

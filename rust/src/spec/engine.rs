@@ -21,9 +21,12 @@ use anyhow::{bail, Result};
 use std::rc::Rc;
 use std::time::Instant;
 
-use super::dyntree::{expand_candidates, rerank, select_frontier, DynTreeParams, SpecController, TreePolicy};
+use super::dyntree::{
+    expand_candidates, plan_round_width, rerank, select_frontier, width_hint, DynTreeParams,
+    SpecController, TreePolicy, WidthFamily,
+};
 use super::sampling::{argmax, sample, softmax, top_k, tree_accept, TreeVerdict};
-use super::tree::{chain_extend_bias, draft_step_bias, DraftTree, TreeSpec};
+use super::tree::{chain_extend_bias, fill_step_rows, DraftTree, TreeSpec};
 use crate::metrics::GenRecord;
 use crate::models::{EagleDraft, TargetModel};
 use crate::util::rng::Rng;
@@ -57,20 +60,31 @@ pub struct EagleEngine<'a> {
     /// dynamic confidence-driven planner).
     pub policy: TreePolicy,
     pub shift: PairShift,
-    /// verify width (t) — must match a lowered verify_t{t} executable.
+    /// Max verify width (t) — the budget anchor; must match a lowered
+    /// verify_t{t} executable.
     pub verify_t: usize,
+    /// Lowered verify-width family; each round dispatches to the
+    /// cheapest member that holds its tree (see `dyntree/widths.rs`).
+    pub widths: WidthFamily,
     pub accept_a: usize,
     pub draft_w: usize,
 }
 
 impl<'a> EagleEngine<'a> {
-    pub fn new_tree(target: &'a TargetModel, draft: &'a EagleDraft, c: &crate::runtime::manifest::Constants) -> Self {
+    pub fn new_tree(
+        target: &'a TargetModel,
+        draft: &'a EagleDraft,
+        c: &crate::runtime::manifest::Constants,
+    ) -> Self {
+        let widths =
+            WidthFamily::from_available(&c.verify_widths, c.tree_t, |t| target.has_verify(t, 1));
         EagleEngine {
             target,
             draft,
             policy: TreePolicy::default_tree(),
             shift: PairShift::Shifted,
             verify_t: c.tree_t,
+            widths,
             accept_a: c.accept_a,
             draft_w: c.draft_w,
         }
@@ -90,6 +104,7 @@ impl<'a> EagleEngine<'a> {
             policy: TreePolicy::chain(gamma),
             shift,
             verify_t: c.chain_t,
+            widths: WidthFamily::single(c.chain_t),
             accept_a: c.accept_a,
             draft_w: c.draft_w,
         }
@@ -99,6 +114,13 @@ impl<'a> EagleEngine<'a> {
     /// select `TreePolicy::Dynamic` per request).
     pub fn with_policy(mut self, policy: TreePolicy) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// Override the verify-width family (builder-style; used by the
+    /// `--verify-width N` pin, which passes `WidthFamily::single(t)`).
+    pub fn with_widths(mut self, widths: WidthFamily) -> Self {
+        self.widths = widths;
         self
     }
 
@@ -182,8 +204,9 @@ impl<'a> EagleEngine<'a> {
         };
 
         // ---- decode rounds --------------------------------------------------
+        let t_reserve = self.verify_t.max(self.widths.max());
         while rec.tokens.len() < cfg.max_new {
-            if m + self.verify_t + 1 >= s_tot {
+            if m + t_reserve + 1 >= s_tot {
                 break; // cache budget exhausted
             }
             // 1. build the draft tree
@@ -192,7 +215,10 @@ impl<'a> EagleEngine<'a> {
             rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
             match &self.policy {
                 TreePolicy::Static(spec) => {
-                    self.grow_tree(&mut tree, spec, &root_feat, &root_logits, m, draft_len, &mut dcache, cfg, &mut rng, &mut rec)?;
+                    self.grow_tree(
+                        &mut tree, spec, &root_feat, &root_logits, m, draft_len, &mut dcache,
+                        cfg, &mut rng, &mut rec,
+                    )?;
                 }
                 TreePolicy::Dynamic(_) => {
                     let params = controller
@@ -200,7 +226,15 @@ impl<'a> EagleEngine<'a> {
                         .map(|c| c.params())
                         .or(base_params)
                         .expect("dynamic policy resolves params");
-                    self.grow_tree_dynamic(&mut tree, &params, &root_feat, &root_logits, m, draft_len, &mut dcache, cfg, &mut rng, &mut rec)?;
+                    // width plan BEFORE growth: the controller's EWMA may
+                    // cap the node budget to a cheaper executable; a
+                    // value-independent cap, so T>0 sampling stays exact
+                    let (_plan_t, params) =
+                        plan_round_width(&self.widths, &params, width_hint(controller.as_ref()));
+                    self.grow_tree_dynamic(
+                        &mut tree, &params, &root_feat, &root_logits, m, draft_len, &mut dcache,
+                        cfg, &mut rng, &mut rec,
+                    )?;
                     let th = Instant::now();
                     if tree.len() - 1 > params.budget {
                         let (pruned, _kept) = rerank(&tree, params.budget);
@@ -212,13 +246,23 @@ impl<'a> EagleEngine<'a> {
             }
             rec.round_tree_nodes.push(tree.len() - 1);
 
-            // 2. verify
+            // 2. verify at the cheapest lowered width that holds the tree
+            //    (padding-only shrink: every grown node is still verified)
+            let sel_t = self.widths.fit(tree.len());
+            if sel_t < tree.len() {
+                bail!(
+                    "draft tree of {} nodes exceeds the verify width family (max {})",
+                    tree.len(),
+                    self.widths.max()
+                );
+            }
+            rec.round_verify_t.push(sel_t);
             let th = Instant::now();
-            let (tokens, pos, bias) = tree.verify_inputs(self.verify_t, m, s_tot);
+            let (tokens, pos, bias) = tree.verify_inputs(sel_t, m, s_tot);
             rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
             let t0 = Instant::now();
             let vout = tgt.verify(
-                self.verify_t,
+                sel_t,
                 &mut cache,
                 &[pending_old_m as i32],
                 &pending_idx,
@@ -300,7 +344,7 @@ impl<'a> EagleEngine<'a> {
             for (r, &ni) in path.iter().enumerate() {
                 // slot m + r holds (f_{m+r}, τ); feature = target feature at
                 // tree node `ni` (exact — computed during verification)
-                let f = tgt.row(&vout.feats, self.verify_t, 0, ni, d);
+                let f = tgt.row(&vout.feats, sel_t, 0, ni, d);
                 ef[r * d..(r + 1) * d].copy_from_slice(f);
                 let slot_pos = m + r;
                 et[r] = match self.shift {
@@ -364,7 +408,8 @@ impl<'a> EagleEngine<'a> {
         for (li, &width) in spec.level_widths.iter().enumerate() {
             // --- select candidates for this level --------------------------
             let th = Instant::now();
-            let mut cands: Vec<(usize, u32, f32, Option<Rc<Vec<f32>>>)> = Vec::new(); // (parent, token, score, q)
+            // (parent, token, score, q)
+            let mut cands: Vec<(usize, u32, f32, Option<Rc<Vec<f32>>>)> = Vec::new();
             if cfg.temperature <= 0.0 {
                 for &p in &frontier {
                     let q = node_logits[p].as_ref().unwrap();
@@ -418,40 +463,29 @@ impl<'a> EagleEngine<'a> {
                     .find(|&&c| c >= chunk.len() && self.draft.exes.has(&format!("step_w{c}")))
                     .unwrap_or(&w);
                 let th = Instant::now();
-                let mut sf = vec![0f32; w * d];
-                let mut st = vec![0i32; w];
-                let mut sp = vec![0i32; w];
-                let mut anc: Vec<Vec<usize>> = Vec::with_capacity(chunk.len());
                 let write_base = draft_len + scratch_used;
                 if write_base + w >= s_tot {
                     return Ok(()); // scratch exhausted; verify what we have
                 }
-                for (r, &ni) in chunk.iter().enumerate() {
-                    let parent = tree.nodes[ni].parent.unwrap();
-                    // feature pairing: parent's step output (see module doc)
-                    sf[r * d..(r + 1) * d].copy_from_slice(&node_feat[parent]);
-                    st[r] = match self.shift {
-                        PairShift::Shifted => tree.nodes[ni].token as i32,
-                        PairShift::Unshifted => tree.nodes[parent].token as i32,
-                    };
-                    // pair slot position: node position - 1 = m + depth - 1
-                    sp[r] = (m + tree.nodes[ni].depth - 1) as i32;
-                    node_slot[ni] = Some(write_base + r);
-                    // ancestors' scratch slots (root pair is in committed region)
-                    let mut a = Vec::new();
-                    let mut cur = Some(parent);
-                    while let Some(c) = cur {
-                        if let Some(s) = node_slot[c] {
-                            a.push(s);
-                        }
-                        cur = tree.nodes[c].parent;
-                    }
-                    anc.push(a);
-                }
-                for r in chunk.len()..w {
-                    sp[r] = m as i32;
-                }
-                let bias = draft_step_bias(w, s_tot, draft_len, write_base, &anc);
+                let mut sf = vec![0f32; w * d];
+                let mut st = vec![0i32; w];
+                let mut sp = vec![0i32; w];
+                let bias = fill_step_rows(
+                    tree,
+                    chunk,
+                    &node_feat,
+                    &mut node_slot,
+                    self.shift == PairShift::Shifted,
+                    d,
+                    s_tot,
+                    m,
+                    draft_len,
+                    write_base,
+                    w,
+                    &mut sf,
+                    &mut st,
+                    &mut sp,
+                );
                 rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
                 let t0 = Instant::now();
                 let sout = self.draft.step(
@@ -468,7 +502,8 @@ impl<'a> EagleEngine<'a> {
                 scratch_used += w;
                 for (r, &ni) in chunk.iter().enumerate() {
                     node_feat[ni] = sout.feats[r * d..(r + 1) * d].to_vec();
-                    node_logits[ni] = Some(Rc::new(sout.logits[r * vocab..(r + 1) * vocab].to_vec()));
+                    node_logits[ni] =
+                        Some(Rc::new(sout.logits[r * vocab..(r + 1) * vocab].to_vec()));
                 }
             }
             frontier = new_nodes;
@@ -527,7 +562,9 @@ impl<'a> EagleEngine<'a> {
                 for &p in &frontier {
                     let q = node_logits[p].as_ref().expect("frontier node has logits");
                     let probs = softmax(q, 1.0);
-                    for (tok, score) in expand_candidates(tree.nodes[p].score, &probs, params.branch) {
+                    for (tok, score) in
+                        expand_candidates(tree.nodes[p].score, &probs, params.branch)
+                    {
                         cands.push((p, tok, score, None));
                     }
                 }
@@ -574,38 +611,29 @@ impl<'a> EagleEngine<'a> {
                     .find(|&&c| c >= chunk.len() && self.draft.exes.has(&format!("step_w{c}")))
                     .unwrap_or(&w_cap);
                 let th = Instant::now();
-                let mut sf = vec![0f32; w * d];
-                let mut st = vec![0i32; w];
-                let mut sp = vec![0i32; w];
-                let mut anc: Vec<Vec<usize>> = Vec::with_capacity(chunk.len());
                 let write_base = draft_len + scratch_used;
                 if write_base + w >= s_tot {
                     return Ok(()); // scratch exhausted; rerank what we have
                 }
-                for (r, &ni) in chunk.iter().enumerate() {
-                    let parent = tree.nodes[ni].parent.unwrap();
-                    // feature pairing: parent's step output (see module doc)
-                    sf[r * d..(r + 1) * d].copy_from_slice(&node_feat[parent]);
-                    st[r] = match self.shift {
-                        PairShift::Shifted => tree.nodes[ni].token as i32,
-                        PairShift::Unshifted => tree.nodes[parent].token as i32,
-                    };
-                    sp[r] = (m + tree.nodes[ni].depth - 1) as i32;
-                    node_slot[ni] = Some(write_base + r);
-                    let mut a = Vec::new();
-                    let mut cur = Some(parent);
-                    while let Some(c) = cur {
-                        if let Some(s) = node_slot[c] {
-                            a.push(s);
-                        }
-                        cur = tree.nodes[c].parent;
-                    }
-                    anc.push(a);
-                }
-                for r in chunk.len()..w {
-                    sp[r] = m as i32;
-                }
-                let bias = draft_step_bias(w, s_tot, draft_len, write_base, &anc);
+                let mut sf = vec![0f32; w * d];
+                let mut st = vec![0i32; w];
+                let mut sp = vec![0i32; w];
+                let bias = fill_step_rows(
+                    tree,
+                    chunk,
+                    &node_feat,
+                    &mut node_slot,
+                    self.shift == PairShift::Shifted,
+                    d,
+                    s_tot,
+                    m,
+                    draft_len,
+                    write_base,
+                    w,
+                    &mut sf,
+                    &mut st,
+                    &mut sp,
+                );
                 rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
                 let t0 = Instant::now();
                 let sout = self.draft.step(w, dcache, &[write_base as i32], &sf, &st, &sp, &bias)?;
@@ -614,7 +642,8 @@ impl<'a> EagleEngine<'a> {
                 scratch_used += w;
                 for (r, &ni) in chunk.iter().enumerate() {
                     node_feat[ni] = sout.feats[r * d..(r + 1) * d].to_vec();
-                    node_logits[ni] = Some(Rc::new(sout.logits[r * vocab..(r + 1) * vocab].to_vec()));
+                    node_logits[ni] =
+                        Some(Rc::new(sout.logits[r * vocab..(r + 1) * vocab].to_vec()));
                 }
             }
             expandable = step_set;
@@ -666,7 +695,8 @@ impl<'a> EagleEngine<'a> {
                 if children.is_empty() {
                     return (path, sample(&p, rng) as u32);
                 }
-                let toks: Vec<usize> = children.iter().map(|&c| tree.nodes[c].token as usize).collect();
+                let toks: Vec<usize> =
+                    children.iter().map(|&c| tree.nodes[c].token as usize).collect();
                 let qs: Vec<Rc<Vec<f32>>> = children
                     .iter()
                     .map(|&c| tree.nodes[c].q.clone().expect("sampled node missing q"))

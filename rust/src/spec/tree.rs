@@ -68,7 +68,13 @@ impl DraftTree {
         }
     }
 
-    pub fn add(&mut self, parent: usize, token: u32, score: f32, q: Option<std::rc::Rc<Vec<f32>>>) -> usize {
+    pub fn add(
+        &mut self,
+        parent: usize,
+        token: u32,
+        score: f32,
+        q: Option<std::rc::Rc<Vec<f32>>>,
+    ) -> usize {
         assert!(parent < self.nodes.len(), "parent out of range");
         let depth = self.nodes[parent].depth + 1;
         self.nodes.push(TreeNode { token, parent: Some(parent), depth, score, q });
@@ -115,7 +121,12 @@ impl DraftTree {
     /// Tree node i sits at cache slot `cache_len + i` and RoPE position
     /// `cache_len + depth(i)`; it attends the committed prefix plus its
     /// ancestor closure. Padding rows self-attend only (outputs ignored).
-    pub fn verify_inputs(&self, t_pad: usize, cache_len: usize, s: usize) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+    pub fn verify_inputs(
+        &self,
+        t_pad: usize,
+        cache_len: usize,
+        s: usize,
+    ) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
         let n = self.nodes.len();
         assert!(n <= t_pad, "tree of {n} nodes exceeds verify width {t_pad}");
         assert!(cache_len + t_pad < s, "tree region overflows cache");
@@ -165,6 +176,64 @@ impl DraftTree {
             }
         }
     }
+}
+
+/// Fill one lane's draft-step rows for a chunk of freshly added tree
+/// nodes: feature pairing (parent's step output), token pairing
+/// (shifted: the node's own token; unshifted: the parent's), pair-slot
+/// positions, scratch-slot assignment into `node_slot`, and the
+/// ancestor-closure attention bias. Returns the lane's `w * s` bias
+/// block. Rows beyond the chunk are padded in place (position `m`,
+/// self-attending bias).
+///
+/// This is the single row-marshalling path shared by
+/// `EagleEngine::grow_tree{,_dynamic}` and
+/// `BatchEagleEngine::grow_{static,dynamic}_batch` — the batched callers
+/// pass per-lane sub-slices of their `[B, w, ..]` buffers.
+#[allow(clippy::too_many_arguments)]
+pub fn fill_step_rows(
+    tree: &DraftTree,
+    chunk: &[usize],
+    node_feat: &[Vec<f32>],
+    node_slot: &mut [Option<usize>],
+    shifted: bool,
+    d: usize,
+    s: usize,
+    m: usize,
+    chain_len: usize,
+    write_base: usize,
+    w: usize,
+    feats: &mut [f32],
+    toks: &mut [i32],
+    pos: &mut [i32],
+) -> Vec<f32> {
+    debug_assert!(chunk.len() <= w);
+    debug_assert!(feats.len() >= w * d && toks.len() >= w && pos.len() >= w);
+    let mut anc: Vec<Vec<usize>> = Vec::with_capacity(chunk.len());
+    for (r, &ni) in chunk.iter().enumerate() {
+        let parent = tree.nodes[ni].parent.expect("stepped node must have a parent");
+        // feature pairing: the parent's step output (see engine module doc)
+        feats[r * d..(r + 1) * d].copy_from_slice(&node_feat[parent]);
+        toks[r] =
+            if shifted { tree.nodes[ni].token as i32 } else { tree.nodes[parent].token as i32 };
+        // pair slot position: node position - 1 = m + depth - 1
+        pos[r] = (m + tree.nodes[ni].depth - 1) as i32;
+        node_slot[ni] = Some(write_base + r);
+        // ancestors' scratch slots (the root pair is in the committed region)
+        let mut a = Vec::new();
+        let mut cur = Some(parent);
+        while let Some(c) = cur {
+            if let Some(slot) = node_slot[c] {
+                a.push(slot);
+            }
+            cur = tree.nodes[c].parent;
+        }
+        anc.push(a);
+    }
+    for r in chunk.len()..w {
+        pos[r] = m as i32;
+    }
+    draft_step_bias(w, s, chain_len, write_base, &anc)
 }
 
 /// Bias rows for a draft `step` call over `w` frontier slots.
@@ -291,6 +360,53 @@ mod tests {
         let t = TreeSpec::tree_default();
         assert_eq!(t.total_nodes(), 26);
         assert!(!t.is_chain());
+    }
+
+    #[test]
+    fn fill_step_rows_marshals_one_lane() {
+        let t = sample_tree();
+        let d = 2;
+        let (s, m, w) = (32usize, 6usize, 4usize);
+        // parent features: root + both depth-1 nodes have step outputs
+        let node_feat: Vec<Vec<f32>> = (0..t.len()).map(|i| vec![i as f32; d]).collect();
+        let mut node_slot: Vec<Option<usize>> = vec![None; t.len()];
+        node_slot[1] = Some(8); // node a already stepped at scratch slot 8
+        let chunk = [3usize, 4]; // c (child of a), d (child of b)
+        let mut feats = vec![0f32; w * d];
+        let mut toks = vec![0i32; w];
+        let mut pos = vec![0i32; w];
+        let bias = fill_step_rows(
+            &t, &chunk, &node_feat, &mut node_slot, true, d, s, m, m, 10, w,
+            &mut feats, &mut toks, &mut pos,
+        );
+        // row 0 = node c: parent a's feature, own token (shifted), pos m+1
+        assert_eq!(&feats[0..d], &[1.0, 1.0]);
+        assert_eq!(toks[0], 3);
+        assert_eq!(pos[0], (m + 1) as i32);
+        assert_eq!(node_slot[3], Some(10));
+        assert_eq!(node_slot[4], Some(11));
+        // padded rows sit at m
+        assert_eq!(pos[2], m as i32);
+        assert_eq!(pos[3], m as i32);
+        // row 0 bias: prefix [0, m), ancestor a's slot 8, self slot 10
+        let row0 = &bias[0..s];
+        for cell in row0.iter().take(m) {
+            assert_eq!(*cell, 0.0);
+        }
+        assert_eq!(row0[8], 0.0);
+        assert_eq!(row0[10], 0.0);
+        assert_eq!(row0[9], NEG);
+        // row 1 = node d: parent b never stepped -> no scratch ancestors
+        let row1 = &bias[s..2 * s];
+        assert_eq!(row1[11], 0.0);
+        assert_eq!(row1[8], NEG);
+        // unshifted pairing takes the parent's token
+        let mut node_slot2: Vec<Option<usize>> = vec![None; t.len()];
+        fill_step_rows(
+            &t, &chunk, &node_feat, &mut node_slot2, false, d, s, m, m, 10, w,
+            &mut feats, &mut toks, &mut pos,
+        );
+        assert_eq!(toks[0], 1, "unshifted: parent a's token");
     }
 
     #[test]

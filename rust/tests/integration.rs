@@ -8,6 +8,7 @@ use eagle_serve::coordinator::request::Method;
 use eagle_serve::eval::runner::{Runner, RunSpec};
 use eagle_serve::eval::Workload;
 use eagle_serve::models::{artifacts_dir, ModelBundle};
+use eagle_serve::spec::dyntree::{DynTreeConfig, TreePolicy, WidthSelect};
 use eagle_serve::spec::engine::GenConfig;
 use eagle_serve::text::bpe::Bpe;
 
@@ -40,7 +41,12 @@ fn eagle_tree_is_lossless_at_t0() {
     let cfg = GenConfig { max_new: 40, temperature: 0.0, seed: 3, eos: None };
     for p in wl.take(5) {
         let van = runner
-            .run_one(&bundle, &p.ids, &RunSpec { method: Method::Vanilla, ..Default::default() }, &cfg)
+            .run_one(
+                &bundle,
+                &p.ids,
+                &RunSpec { method: Method::Vanilla, ..Default::default() },
+                &cfg,
+            )
             .unwrap();
         let eag = runner.run_one(&bundle, &p.ids, &RunSpec::default(), &cfg).unwrap();
         assert_eq!(van.tokens, eag.tokens, "greedy mismatch on '{}'", p.text);
@@ -59,7 +65,12 @@ fn eagle_chain_and_baselines_lossless_at_t0() {
     let cfg = GenConfig { max_new: 32, temperature: 0.0, seed: 5, eos: None };
     for p in wl.take(3) {
         let van = runner
-            .run_one(&bundle, &p.ids, &RunSpec { method: Method::Vanilla, ..Default::default() }, &cfg)
+            .run_one(
+                &bundle,
+                &p.ids,
+                &RunSpec { method: Method::Vanilla, ..Default::default() },
+                &cfg,
+            )
             .unwrap();
         for m in [Method::EagleChain, Method::Medusa, Method::Lookahead, Method::ClassicSpec] {
             let rec = runner
@@ -83,7 +94,12 @@ fn draft_variants_all_lossless_at_t0() {
     let cfg = GenConfig { max_new: 24, temperature: 0.0, seed: 11, eos: None };
     let p = &wl.prompts[1];
     let van = runner
-        .run_one(&bundle, &p.ids, &RunSpec { method: Method::Vanilla, ..Default::default() }, &cfg)
+        .run_one(
+            &bundle,
+            &p.ids,
+            &RunSpec { method: Method::Vanilla, ..Default::default() },
+            &cfg,
+        )
         .unwrap();
     for v in ["eagle", "unshift", "feat", "tok", "eagle_gen"] {
         let spec = RunSpec { method: Method::EagleChain, variant: v.into(), ..Default::default() };
@@ -101,10 +117,36 @@ fn t1_sampling_runs_and_matches_seed_determinism() {
     let wl = Workload::load(&runner.man, &bpe, "mtbench", runner.man.constants.prefill_p).unwrap();
     let cfg = GenConfig { max_new: 24, temperature: 1.0, seed: 9, eos: None };
     let p = &wl.prompts[0];
-    let a = runner.run_one(&bundle, &p.ids, &RunSpec { temperature: 1.0, ..Default::default() }, &cfg).unwrap();
-    let b = runner.run_one(&bundle, &p.ids, &RunSpec { temperature: 1.0, ..Default::default() }, &cfg).unwrap();
+    let spec = RunSpec { temperature: 1.0, ..Default::default() };
+    let a = runner.run_one(&bundle, &p.ids, &spec, &cfg).unwrap();
+    let b = runner.run_one(&bundle, &p.ids, &spec, &cfg).unwrap();
     assert_eq!(a.tokens, b.tokens, "same seed must reproduce");
     assert!(!a.tokens.is_empty());
+}
+
+#[test]
+fn width_selection_is_lossless_and_bounded() {
+    require_artifacts!();
+    let (runner, bpe) = setup();
+    let bundle =
+        ModelBundle::load(&runner.rt, &runner.man, "toy-s", &["eagle"], false, false).unwrap();
+    let wl = Workload::load(&runner.man, &bpe, "mtbench", runner.man.constants.prefill_p).unwrap();
+    let c = &runner.man.constants;
+    let cfg = GenConfig { max_new: 32, temperature: 0.0, seed: 3, eos: None };
+    let p = &wl.prompts[0];
+    // auto width selection (static + dynamic trees) vs the legacy path
+    // pinned to the full tree_t executable: token-identical greedy output
+    let pinned = RunSpec { verify_width: WidthSelect::Fixed(c.tree_t), ..Default::default() };
+    let fixed = runner.run_one(&bundle, &p.ids, &pinned, &cfg).unwrap();
+    let auto = runner.run_one(&bundle, &p.ids, &RunSpec::default(), &cfg).unwrap();
+    assert_eq!(auto.tokens, fixed.tokens, "width auto-selection changed greedy output");
+    assert!(fixed.round_verify_t.iter().all(|&t| t == c.tree_t), "pin must hold");
+    assert!(auto.round_verify_t.iter().all(|&t| t <= c.tree_t), "auto never exceeds tree_t");
+    let dspec =
+        RunSpec { tree: TreePolicy::Dynamic(DynTreeConfig::default()), ..Default::default() };
+    let dyn_rec = runner.run_one(&bundle, &p.ids, &dspec, &cfg).unwrap();
+    assert_eq!(dyn_rec.tokens, fixed.tokens, "dynamic + width selection must stay lossless");
+    assert!(dyn_rec.mean_verify_t() > 0.0);
 }
 
 #[test]
@@ -125,7 +167,12 @@ fn batched_engine_matches_single_lane_results() {
     // lock-step batched EAGLE must equal vanilla greedy per lane
     for (i, rec) in recs.iter().enumerate() {
         let van = runner
-            .run_one(&bundle, &prompts[i], &RunSpec { method: Method::Vanilla, max_new: 20, ..Default::default() }, &cfg)
+            .run_one(
+                &bundle,
+                &prompts[i],
+                &RunSpec { method: Method::Vanilla, max_new: 20, ..Default::default() },
+                &cfg,
+            )
             .unwrap();
         assert_eq!(van.tokens, rec.tokens, "batched lane {i} diverged from greedy");
     }
@@ -147,7 +194,12 @@ fn moe_and_quant_targets_generate() {
         let bundle =
             ModelBundle::load(&runner.rt, &runner.man, model, &["eagle"], false, false).unwrap();
         let van = runner
-            .run_one(&bundle, &p.ids, &RunSpec { method: Method::Vanilla, ..Default::default() }, &cfg)
+            .run_one(
+                &bundle,
+                &p.ids,
+                &RunSpec { method: Method::Vanilla, ..Default::default() },
+                &cfg,
+            )
             .unwrap();
         let eag = runner.run_one(&bundle, &p.ids, &RunSpec::default(), &cfg).unwrap();
         assert_eq!(van.tokens, eag.tokens, "{model} not lossless");
@@ -157,7 +209,8 @@ fn moe_and_quant_targets_generate() {
 #[test]
 fn tokenizer_fixtures_match_python() {
     // cross-language BPE contract (fixtures dumped by python tests)
-    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/tokenizer_cases.json");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/tokenizer_cases.json");
     if !path.exists() {
         eprintln!("skipping: fixtures not dumped yet (run pytest)");
         return;

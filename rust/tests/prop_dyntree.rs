@@ -3,14 +3,25 @@
 //! ARBITRARY trees and scores, and must degrade to the static tree shape
 //! when draft confidence is uniform. Controller adaptation invariants
 //! (bounds, budget immutability) are exercised under random workloads.
+//!
+//! Verify-width selection (S21) is covered by three laws: the planned
+//! width always holds the planned budget (never truncates), verify
+//! inputs for the same tree are prefix-identical across widths (so
+//! greedy outputs match the fixed-`tree_t` path), and — the empirical
+//! law — budget-capped dynamic growth at T>0 commits first tokens
+//! distributed exactly as the target distribution, including under a
+//! width-downshifted budget (the cap lands BEFORE sampling).
 
 use std::collections::HashSet;
+use std::rc::Rc;
 
 use eagle_serve::spec::dyntree::{
-    rerank, select_frontier, ControllerConfig, DynTreeParams, SpecController,
+    plan_round_width, rerank, select_frontier, ControllerConfig, DynTreeParams, SpecController,
+    WidthFamily,
 };
+use eagle_serve::spec::sampling::{sample, tree_accept, TreeVerdict};
 use eagle_serve::spec::tree::{DraftTree, TreeSpec};
-use eagle_serve::util::prop::check;
+use eagle_serve::util::prop::{check, random_dist};
 use eagle_serve::util::rng::Rng;
 
 fn random_tree(rng: &mut Rng, max_nodes: usize) -> DraftTree {
@@ -176,6 +187,139 @@ fn prop_select_frontier_is_top_k_and_sorted() {
                     assert!(t.nodes[c].score <= worst + 1e-6);
                 }
             }
+        }
+    });
+}
+
+#[test]
+fn prop_width_plan_never_truncates() {
+    check("width plan", 200, |rng, _| {
+        let fam = WidthFamily::from_available(&[8, 16, 32], 32, |_| true);
+        let params = DynTreeParams {
+            depth: 1 + rng.below(7),
+            frontier_k: 1 + rng.below(8),
+            branch: 1 + rng.below(4),
+            budget: 1 + rng.below(31),
+        };
+        let rate = if rng.f32() < 0.5 { None } else { Some((rng.f32(), 0.35)) };
+        let (t, clamped) = plan_round_width(&fam, &params, rate);
+        assert!(fam.widths().contains(&t), "planned width must be a family member");
+        assert!(clamped.budget <= params.budget, "the plan only ever shrinks the budget");
+        assert!(clamped.budget + 1 <= t, "planned tree (budget + root) always fits the width");
+        assert_eq!(
+            (clamped.depth, clamped.frontier_k, clamped.branch),
+            (params.depth, params.frontier_k, params.branch),
+            "shape params pass through unchanged"
+        );
+        if let Some((r, low)) = rate {
+            if r <= low {
+                assert!(
+                    clamped.budget <= fam.min() - 1,
+                    "collapsed acceptance caps the round at the cheapest width"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_verify_inputs_prefix_invariant_across_widths() {
+    // Shrinking verify padding must not change what the target sees for
+    // the REAL tree rows: tokens, positions, and bias rows of the first
+    // n slots are identical at any width >= n. The verified logits for
+    // every tree node are therefore width-independent, which makes the
+    // width-selected greedy path identical to the fixed-tree_t path.
+    check("width invariance", 150, |rng, _| {
+        let t = random_tree(rng, 20);
+        let n = t.len();
+        let s = 64usize;
+        let cache_len = 1 + rng.below(8);
+        let t1 = n + rng.below(4);
+        let t2 = t1 + 1 + rng.below(8);
+        let (tok1, pos1, bias1) = t.verify_inputs(t1, cache_len, s);
+        let (tok2, pos2, bias2) = t.verify_inputs(t2, cache_len, s);
+        assert_eq!(&tok1[..n], &tok2[..n]);
+        assert_eq!(&pos1[..n], &pos2[..n]);
+        assert_eq!(&bias1[..n * s], &bias2[..n * s], "real rows see identical attention");
+    });
+}
+
+/// Budget-capped dynamic growth at T>0, mirroring
+/// `EagleEngine::grow_tree_dynamic`: children sampled i.i.d. from `q`,
+/// candidates truncated to the remaining budget by GENERATION order
+/// (value-independent), only the top-scoring frontier stepped further.
+fn grow_dynamic_sim(rng: &mut Rng, q: &Rc<Vec<f32>>, params: &DynTreeParams) -> DraftTree {
+    let mut tree = DraftTree::with_root(0);
+    let mut expandable: Vec<usize> = vec![0];
+    for lvl in 0..params.depth {
+        let frontier = select_frontier(&tree, &expandable, params.frontier_k);
+        let mut cands: Vec<(usize, u32, f32)> = Vec::new();
+        for &p in &frontier {
+            for _ in 0..params.branch {
+                let tok = sample(q, rng);
+                let score = tree.nodes[p].score + q[tok].max(1e-20).ln();
+                cands.push((p, tok as u32, score));
+            }
+        }
+        let room = params.budget.saturating_sub(tree.len() - 1);
+        cands.truncate(room);
+        if cands.is_empty() {
+            break;
+        }
+        let mut new_nodes = Vec::new();
+        for (p, tok, score) in cands {
+            new_nodes.push(tree.add(p, tok, score, Some(q.clone())));
+        }
+        if lvl + 1 == params.depth {
+            break;
+        }
+        expandable = select_frontier(&tree, &new_nodes, params.frontier_k);
+    }
+    tree
+}
+
+#[test]
+fn prop_dyntree_sampling_preserves_target_distribution() {
+    // Empirical law for the T>0 growth path: whatever tree the planner
+    // grows (full budget or a width-downshifted one), the FIRST token
+    // committed each round is distributed exactly as the target `p` —
+    // the SpecInfer rule stays unbiased because the budget cap lands
+    // before any candidate value is inspected.
+    check("dyntree T>0 law", 6, |rng, case| {
+        let n = 2 + rng.below(5);
+        let p = random_dist(rng, n);
+        let q = Rc::new(random_dist(rng, n));
+        // alternate full-budget and width-downshifted (t8-like) rounds
+        let params = DynTreeParams {
+            depth: 1 + rng.below(4),
+            frontier_k: 1 + rng.below(4),
+            branch: 1 + rng.below(4),
+            budget: if case % 2 == 0 { 31 } else { 7 },
+        };
+        let trials = 30_000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..trials {
+            let tree = grow_dynamic_sim(rng, &q, &params);
+            let children = tree.children(0);
+            if children.is_empty() {
+                counts[sample(&p, rng)] += 1;
+                continue;
+            }
+            let toks: Vec<usize> = children.iter().map(|&c| tree.nodes[c].token as usize).collect();
+            let qs: Vec<&[f32]> = children.iter().map(|_| q.as_slice()).collect();
+            match tree_accept(&p, &qs, &toks, rng) {
+                TreeVerdict::AcceptChild(ci) => counts[toks[ci]] += 1,
+                TreeVerdict::Residual(t) => counts[t] += 1,
+            }
+        }
+        for i in 0..n {
+            let emp = counts[i] as f32 / trials as f32;
+            assert!(
+                (emp - p[i]).abs() < 0.025,
+                "token {i}: emp {emp} vs p {} (budget {})",
+                p[i],
+                params.budget
+            );
         }
     });
 }
