@@ -13,15 +13,12 @@ use std::time::Instant;
 fn main() -> anyhow::Result<()> {
     let addr = "127.0.0.1:8191";
     std::thread::spawn(move || {
-        eagle_serve::server::serve(
+        let cfg = eagle_serve::server::ServeConfig::new(
             addr,
             "toy-s",
             &eagle_serve::models::artifacts_dir(),
-            64,
-            eagle_serve::spec::dyntree::TreePolicy::default_tree(),
-            eagle_serve::spec::dyntree::WidthSelect::Auto,
-        )
-        .expect("server failed");
+        );
+        eagle_serve::server::serve(cfg).expect("server failed");
     });
     // wait for readiness
     for _ in 0..600 {

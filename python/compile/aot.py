@@ -57,6 +57,13 @@ CHAIN_T = 8  # chain-verify width (classic spec / alpha measurements)
 VERIFY_WIDTHS = (8, 16, TREE_T)
 ACCEPT_A = 8  # max tokens committed per verification
 DRAFT_W = 8  # tree draft level width
+# Draft-step width family ("draft_widths" manifest constant): one
+# step_w{w} executable per width, plus step_w{w}_bs{b} variants wherever
+# batched serving is lowered. The engines run each draft level at the
+# narrowest width holding its frontier, and the width-grouped scheduler
+# relies on the batched variants so a low-acceptance lane GROUP drafts
+# chain-like (w1/w4) instead of riding a hot lane's full-width step.
+DRAFT_WIDTHS = (1, 4, DRAFT_W)
 FAST = os.environ.get("EAGLE_FAST", "") == "1"
 
 STEPS_TARGET = {"toy-s": 40, "toy-m": 30, "toy-moe": 30} if FAST else {
@@ -331,6 +338,7 @@ def build(out: str) -> None:
             "accept_a": ACCEPT_A,
             "draft_w": DRAFT_W,
             "verify_widths": sorted(VERIFY_WIDTHS),
+            "draft_widths": sorted(DRAFT_WIDTHS),
         },
         "workloads": {
             "mtbench": "workloads/mtbench.json",
@@ -402,11 +410,11 @@ def build(out: str) -> None:
             dbs = [1] if not (name == "toy-s" and variant == "eagle") else [1, 2, 3, 4]
             for b in dbs:
                 sfx = "" if b == 1 else f"_bs{b}"
-                djobs = {f"step_w{DRAFT_W}{sfx}": dl.step(DRAFT_W, b)}
+                # the full draft-step width family per batch size, so the
+                # batch engine's per-level fits stay group-local at bs>1
+                djobs = {f"step_w{w}{sfx}": dl.step(w, b) for w in sorted(DRAFT_WIDTHS)}
                 if b == 1:
                     djobs["prefill"] = dl.prefill(PREFILL_P, 1)
-                    djobs["step_w1"] = dl.step(1, 1)
-                    djobs["step_w4"] = dl.step(4, 1)
                 for ename, (fn, ex) in djobs.items():
                     path = f"hlo/{dkey}.{ename}.hlo.txt"
                     lower_to_file(fn, ex, os.path.join(out, path))

@@ -110,7 +110,10 @@ def build_quant(out: str, manifest: dict, cfg: M.ModelConfig) -> None:
         "weights": "weights/toy-s-int8.stensor",
         "param_names": qnames,
         "executables": exes,
-        # reuse the fp32 eagle head against the int8 target
+        # reuse the fp32 eagle head against the int8 target; the full
+        # step_w{w} draft-width family (and its _bs{b} variants) rides
+        # along, so per-level draft-width fits compose with quantization
+        # exactly like verify-width selection does
         "drafts": {"eagle": src["drafts"]["eagle"]},
         "quantized": True,
     }

@@ -43,6 +43,10 @@ def test_manifest_constants_sane():
     assert c["tree_t"] in widths, "width family must contain the max width"
     assert all(2 <= t <= c["tree_t"] for t in widths)
     assert widths == sorted(widths)
+    dwidths = c.get("draft_widths", [c["draft_w"]])
+    assert c["draft_w"] in dwidths, "draft family must contain the max step width"
+    assert all(1 <= w <= c["draft_w"] for w in dwidths)
+    assert dwidths == sorted(dwidths)
     for entry in man["models"].values():
         cfg = entry["config"]
         # tree region + scratch must fit the cache

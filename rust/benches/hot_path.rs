@@ -3,6 +3,7 @@
 //! plus the pure-host components (bias building, softmax, acceptance) —
 //! the numbers behind EXPERIMENTS.md §Perf.
 
+use eagle_serve::coordinator::plan_width_groups;
 use eagle_serve::eval::runner::Runner;
 use eagle_serve::models::{artifacts_dir, ModelBundle};
 use eagle_serve::spec::dyntree::{
@@ -100,6 +101,14 @@ fn main() {
         }
     });
 
+    // scheduler grouping decision: partition a 32-lane admission by
+    // predicted width under the cost model — the per-admission host
+    // overhead of `--width-grouping`
+    let ghints: Vec<usize> = (0..32).map(|i| [4usize, 7, 12, 20, 31, 40][i % 6]).collect();
+    bench("host/width_group(32)", 1000, || {
+        std::hint::black_box(plan_width_groups(&ghints, &fam, 4));
+    });
+
     if !artifacts_dir().join("manifest.json").exists() {
         eprintln!("executable benches skipped: run `make artifacts` first");
         return;
@@ -159,4 +168,28 @@ fn main() {
     bench("exe/draft.step_w4", 30, || {
         draft.step(4, &mut dcache, &[m as i32], &feats4, &toks4, &dpos4, &dbias4).unwrap();
     });
+
+    // the batched draft-step family (step_w{w}_bs{b}): the per-width cost
+    // spread the width-grouped scheduler trades against DISPATCH_OVERHEAD
+    for &bsz in &[2usize, 4] {
+        for &wd in &c.draft_widths {
+            if !draft.has_step(wd, bsz) {
+                eprintln!("exe/step_w{wd}_bs{bsz} skipped: executable not lowered");
+                continue;
+            }
+            let mut dc = draft.new_cache(bsz);
+            let bf = vec![0.1f32; bsz * wd * tgt.d];
+            let bt = vec![3i32; bsz * wd];
+            let bp: Vec<i32> = (0..bsz * wd).map(|i| (m + i % wd) as i32).collect();
+            let lane_bias = eagle_serve::spec::tree::chain_extend_bias(wd, tgt.max_len, m, wd);
+            let mut bb = Vec::with_capacity(bsz * lane_bias.len());
+            for _ in 0..bsz {
+                bb.extend_from_slice(&lane_bias);
+            }
+            let wb = vec![m as i32; bsz];
+            bench(&format!("exe/step_w{wd}_bs{bsz}"), 20, || {
+                draft.step(wd, &mut dc, &wb, &bf, &bt, &bp, &bb).unwrap();
+            });
+        }
+    }
 }

@@ -14,7 +14,15 @@
 //! Each verify round dispatches to the cheapest lowered
 //! `verify_t{t}_bs{b}` executable that holds every lane's tree (the max
 //! over per-lane width fits — see `spec/dyntree/widths.rs`), so a batch
-//! of low-acceptance lanes stops paying worst-case verify FLOPs.
+//! of low-acceptance lanes stops paying worst-case verify FLOPs. Draft
+//! levels likewise dispatch the narrowest lowered `step_w{w}_bs{b}`
+//! holding the round's widest per-lane step set (the `"draft_widths"`
+//! family). One engine call executes ONE scheduler group: under
+//! width-grouped admission the caller caps the verify family at the
+//! group's planned width ([`BatchEagleEngine::with_verify_cap`]), so
+//! both fits are group-local — a low-acceptance group never runs at a
+//! hot lane's width, and any lane that still executes wider than its
+//! own tree's fit is counted in `GenRecord::dragged_rounds`.
 //!
 //! Per-lane prefill reuses the bs=1 draft prefill and splices the lane's
 //! rows into the batched draft cache host-side (caches are host vectors
@@ -46,6 +54,9 @@ pub struct BatchEagleEngine<'a> {
     /// Declared verify-width family (filtered per batch size at
     /// generate time against the lowered `verify_t{t}_bs{b}` set).
     pub verify_widths: Vec<usize>,
+    /// Declared draft-step width family (filtered per batch size at
+    /// generate time against the lowered `step_w{w}_bs{b}` set).
+    pub draft_widths: Vec<usize>,
     pub accept_a: usize,
     pub draft_w: usize,
 }
@@ -71,6 +82,7 @@ impl<'a> BatchEagleEngine<'a> {
             policy: TreePolicy::default_tree(),
             verify_t: c.tree_t,
             verify_widths: c.verify_widths.clone(),
+            draft_widths: c.draft_widths.clone(),
             accept_a: c.accept_a,
             draft_w: c.draft_w,
         }
@@ -79,6 +91,15 @@ impl<'a> BatchEagleEngine<'a> {
     /// Swap the tree policy (builder-style).
     pub fn with_policy(mut self, policy: TreePolicy) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// Cap the verify-width family at a scheduler group's planned width
+    /// (builder-style). Per-lane node budgets are planned against the
+    /// capped family, so no lane's tree can outgrow the cap — the group
+    /// executes at its own width, not a hotter group's.
+    pub fn with_verify_cap(mut self, t: usize) -> Self {
+        self.verify_t = t.clamp(2, self.verify_t);
         self
     }
 
@@ -142,9 +163,17 @@ impl<'a> BatchEagleEngine<'a> {
 
         // ---- lock-step rounds ------------------------------------------------
         // verify-width family lowered for THIS batch size; the per-round
-        // width is the max over lane fits, so no lane is ever truncated
+        // width is the max over lane fits, so no lane is ever truncated.
+        // Under width-grouped admission `verify_t` is the group's planned
+        // cap, making both fits below group-local.
         let family = WidthFamily::from_available(&self.verify_widths, self.verify_t, |t| {
             tgt.has_verify(t, b)
+        });
+        // draft-step width family lowered for THIS batch size: each draft
+        // level runs at the narrowest step_w{w}_bs{b} holding the round's
+        // widest per-lane step set
+        let dfam = WidthFamily::filtered(&self.draft_widths, self.draft_w, 1, |wd| {
+            self.draft.has_step(wd, b)
         });
         // dynamic policy: one acceptance controller per lane, so each lane's
         // speculation depth/width tracks its own request
@@ -171,7 +200,7 @@ impl<'a> BatchEagleEngine<'a> {
                 .collect();
             match &self.policy {
                 TreePolicy::Static(spec) => {
-                    self.grow_static_batch(spec, &mut lanes, &mut trees, &mut dcache_b)?;
+                    self.grow_static_batch(spec, &dfam, &mut lanes, &mut trees, &mut dcache_b)?;
                 }
                 TreePolicy::Dynamic(dc) => {
                     // per-lane width plan BEFORE growth: each lane's node
@@ -186,7 +215,9 @@ impl<'a> BatchEagleEngine<'a> {
                             plan_round_width(&family, &p, width_hint(controllers[li].as_ref())).1
                         })
                         .collect();
-                    self.grow_dynamic_batch(&lane_params, &mut lanes, &mut trees, &mut dcache_b)?;
+                    self.grow_dynamic_batch(
+                        &lane_params, &dfam, &mut lanes, &mut trees, &mut dcache_b,
+                    )?;
                 }
             }
 
@@ -212,6 +243,11 @@ impl<'a> BatchEagleEngine<'a> {
                 }
                 lanes[li].rec.round_tree_nodes.push(trees[li].len() - 1);
                 lanes[li].rec.round_verify_t.push(t);
+                // a lane executing wider than its OWN tree's fit was
+                // dragged up by a hotter lane sharing this batch
+                if t > family.fit(trees[li].len()) {
+                    lanes[li].rec.dragged_rounds += 1;
+                }
             }
             let mut tokens = vec![0i32; b * t];
             let mut pos = vec![0i32; b * t];
@@ -272,7 +308,13 @@ impl<'a> BatchEagleEngine<'a> {
             }
             let com_ns = 0u64;
 
-            // 4. bookkeeping + batched draft extend
+            // 4. bookkeeping + batched draft extend at the narrowest
+            //    lowered step width holding the widest accepted path
+            let max_commit = paths.iter().map(|p| p.len()).max().unwrap_or(0).max(1);
+            if max_commit > dfam.max() {
+                bail!("accepted path of {max_commit} pairs exceeds draft width {}", dfam.max());
+            }
+            let w = dfam.fit(max_commit);
             let mut ef = vec![0f32; b * w * d];
             let mut et = vec![0i32; b * w];
             let mut ep = vec![0i32; b * w];
@@ -348,6 +390,7 @@ impl<'a> BatchEagleEngine<'a> {
                 }
                 lanes[li].rec.timeline.draft_ns += ext_ns / b as u64;
                 lanes[li].rec.draft_passes += 1;
+                lanes[li].rec.round_draft_w.push(w);
                 let last = paths[li].len() - 1;
                 lanes[li].root_feat =
                     eout.feats[(li * w + last) * d..(li * w + last + 1) * d].to_vec();
@@ -367,10 +410,13 @@ impl<'a> BatchEagleEngine<'a> {
     }
 
     /// STATIC lock-step growth: fixed per-level widths, greedy top-k by
-    /// cumulative score per lane (the seed behavior).
+    /// cumulative score per lane (the seed behavior). Each level's step
+    /// runs at the narrowest lowered `step_w{w}_bs{b}` holding the
+    /// round's widest per-lane node set.
     fn grow_static_batch(
         &self,
         spec: &TreeSpec,
+        dfam: &WidthFamily,
         lanes: &mut [Lane],
         trees: &mut [DraftTree],
         dcache_b: &mut KvCache,
@@ -379,7 +425,6 @@ impl<'a> BatchEagleEngine<'a> {
         let d = self.target.d;
         let vocab = self.target.vocab;
         let s_tot = self.target.max_len;
-        let w = self.draft_w;
 
         let mut node_feat: Vec<Vec<Vec<f32>>> =
             lanes.iter().map(|l| vec![l.root_feat.clone()]).collect();
@@ -417,7 +462,13 @@ impl<'a> BatchEagleEngine<'a> {
             if lvl + 1 == spec.level_widths.len() {
                 break;
             }
-            // batched draft step (level width <= W by construction)
+            // batched draft step at the narrowest width holding every
+            // lane's node set for this level
+            let maxset = new_nodes.iter().map(|s| s.len()).max().unwrap_or(0).max(1);
+            if maxset > dfam.max() {
+                bail!("level of {maxset} nodes exceeds draft width {}", dfam.max());
+            }
+            let w = dfam.fit(maxset);
             let mut sf = vec![0f32; b * w * d];
             let mut st = vec![0i32; b * w];
             let mut sp = vec![0i32; b * w];
@@ -450,6 +501,7 @@ impl<'a> BatchEagleEngine<'a> {
             for l in lanes.iter_mut().filter(|l| !l.done) {
                 l.rec.timeline.draft_ns += dns / b as u64;
                 l.rec.draft_passes += 1;
+                l.rec.round_draft_w.push(w);
             }
             for li in 0..b {
                 scratch_used[li] += w;
@@ -475,6 +527,7 @@ impl<'a> BatchEagleEngine<'a> {
     fn grow_dynamic_batch(
         &self,
         lane_params: &[DynTreeParams],
+        dfam: &WidthFamily,
         lanes: &mut [Lane],
         trees: &mut [DraftTree],
         dcache_b: &mut KvCache,
@@ -483,7 +536,7 @@ impl<'a> BatchEagleEngine<'a> {
         let d = self.target.d;
         let vocab = self.target.vocab;
         let s_tot = self.target.max_len;
-        let w = self.draft_w;
+        let w_cap = dfam.max();
 
         let max_depth = lane_params.iter().map(|p| p.depth).max().unwrap_or(1);
         let mut node_feat: Vec<Vec<Vec<f32>>> =
@@ -520,7 +573,10 @@ impl<'a> BatchEagleEngine<'a> {
                     }
                 }
                 // step only while another level follows and scratch remains
-                if lvl + 1 < lane_params[li].depth && lanes[li].m + scratch_used[li] + w < s_tot {
+                // (conservatively reserved at the family's widest step)
+                if lvl + 1 < lane_params[li].depth
+                    && lanes[li].m + scratch_used[li] + w_cap < s_tot
+                {
                     step_sets[li] =
                         select_frontier(&trees[li], &new_nodes, lane_params[li].frontier_k);
                 }
@@ -528,7 +584,13 @@ impl<'a> BatchEagleEngine<'a> {
             if step_sets.iter().all(|s| s.is_empty()) {
                 break; // no lane can expand further
             }
-            // batched draft step over the per-lane step sets
+            // batched draft step over the per-lane step sets, at the
+            // narrowest lowered width holding the widest of them
+            let maxset = step_sets.iter().map(|s| s.len()).max().unwrap_or(0).max(1);
+            if maxset > dfam.max() {
+                bail!("step set of {maxset} nodes exceeds draft width {}", dfam.max());
+            }
+            let w = dfam.fit(maxset);
             let mut sf = vec![0f32; b * w * d];
             let mut st = vec![0i32; b * w];
             let mut sp = vec![0i32; b * w];
@@ -567,6 +629,7 @@ impl<'a> BatchEagleEngine<'a> {
             for l in lanes.iter_mut().filter(|l| !l.done) {
                 l.rec.timeline.draft_ns += dns / b as u64;
                 l.rec.draft_passes += 1;
+                l.rec.round_draft_w.push(w);
             }
             for li in 0..b {
                 if step_sets[li].is_empty() {

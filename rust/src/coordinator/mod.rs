@@ -2,9 +2,11 @@
 //! allocator, scheduler, and the batched EAGLE engine (Table 7).
 //!
 //! The HTTP server (S16) feeds [`RequestQueue`]; a worker drains it via
-//! the [`Scheduler`] admission policy. Latency-path requests run on the
-//! bs=1 engines (the paper's primary setting); the batched engine
-//! demonstrates the throughput regime offline and in `examples/`.
+//! the [`Scheduler`] admission policy — per-request FCFS, or (with
+//! `--width-grouping`) width-aware sub-batches where lanes are grouped
+//! by their predicted verify width so a low-acceptance request never
+//! executes at a hot lane's width (see `scheduler::plan_width_groups`
+//! and the per-group fits in [`BatchEagleEngine`]).
 
 pub mod batch_engine;
 pub mod kvslots;
@@ -16,4 +18,6 @@ pub use batch_engine::BatchEagleEngine;
 pub use kvslots::SlotAllocator;
 pub use queue::RequestQueue;
 pub use request::{Method, Request, Response, TreeChoice};
-pub use scheduler::Scheduler;
+pub use scheduler::{
+    group_cost, plan_width_groups, AdmissionPolicy, AdmittedGroup, Scheduler, WidthGroup,
+};

@@ -67,6 +67,27 @@ impl RequestQueue {
         g.q.drain(..take).collect()
     }
 
+    /// Block until the queue is non-empty, `deadline` passes, or the
+    /// queue closes. Returns `true` when requests are available — the
+    /// scheduler's linger wait, woken by the push-side condvar instead
+    /// of a sleep-poll tick, so admission latency is not quantized.
+    pub fn wait_nonempty_until(&self, deadline: std::time::Instant) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.q.is_empty() {
+                return true;
+            }
+            if g.closed {
+                return false;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            g = self.notify.wait_timeout(g, deadline - now).unwrap().0;
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().q.len()
     }
@@ -83,20 +104,10 @@ impl RequestQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::{Method, TreeChoice};
     use std::sync::Arc;
 
     fn req(id: u64) -> Request {
-        Request {
-            id,
-            prompt: String::new(),
-            max_tokens: 1,
-            temperature: 0.0,
-            method: Method::Vanilla,
-            tree: TreeChoice::Default,
-            seed: 0,
-            arrival: std::time::Instant::now(),
-        }
+        Request::synthetic(id)
     }
 
     #[test]
@@ -124,6 +135,31 @@ mod tests {
         q.close();
         assert!(h.join().unwrap().is_none());
         assert_eq!(q.push(req(3)), Err(PushError::Closed));
+    }
+
+    #[test]
+    fn wait_nonempty_basic_transitions() {
+        use std::time::{Duration, Instant};
+        let q = RequestQueue::new(4);
+        // non-empty: returns immediately regardless of deadline
+        q.push(req(1)).unwrap();
+        assert!(q.wait_nonempty_until(Instant::now()));
+        q.pop_up_to(1);
+        // empty + past deadline: false without blocking
+        assert!(!q.wait_nonempty_until(Instant::now()));
+        // a push from another thread wakes the waiter before the deadline
+        let q = Arc::new(RequestQueue::new(4));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            q2.push(req(2)).unwrap();
+        });
+        assert!(q.wait_nonempty_until(Instant::now() + Duration::from_secs(5)));
+        h.join().unwrap();
+        // closed: false even with a far deadline
+        q.close();
+        q.pop_up_to(1);
+        assert!(!q.wait_nonempty_until(Instant::now() + Duration::from_secs(5)));
     }
 
     #[test]

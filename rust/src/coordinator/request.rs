@@ -77,6 +77,13 @@ pub struct Request {
     /// forces every round onto the `verify_t{t}` executable; `None`
     /// defers to the server's configured width policy (auto by default).
     pub verify_width: Option<usize>,
+    /// Predicted verify width (`"width_hint"` field) used by the
+    /// width-grouping admission policy: clients (or a requeue path
+    /// carrying a live controller EWMA) declare the width this request
+    /// is expected to run at, and the scheduler groups compatible lanes
+    /// so a low-acceptance request is not dragged to a hot lane's width.
+    /// `None` means "assume the widest lowered width" — never truncating.
+    pub width_hint: Option<usize>,
     pub seed: u64,
     pub arrival: std::time::Instant,
 }
@@ -107,9 +114,47 @@ impl Request {
                 .get("verify_width")
                 .and_then(|x| x.as_usize())
                 .filter(|&t| t >= 2),
+            width_hint: v
+                .get("width_hint")
+                .and_then(|x| x.as_usize())
+                .filter(|&t| t >= 2),
             seed: v.get("seed").and_then(|x| x.as_f64()).map(|f| f as u64).unwrap_or(7),
             arrival: std::time::Instant::now(),
         })
+    }
+
+    /// The width the admission scheduler should assume for this request:
+    /// the explicit hint, else the verify pin, else `max` (widest — a
+    /// request that declared nothing must never be narrowed).
+    pub fn admission_width(&self, max: usize) -> usize {
+        self.width_hint.or(self.verify_width).unwrap_or(max)
+    }
+
+    /// Whether the batched (lock-step, greedy) engine can run this
+    /// request alongside others — the single eligibility predicate
+    /// shared by the scheduler's width grouping and the server's group
+    /// executor. Requests pinning an exact verify width are excluded:
+    /// the pin is a per-request contract the bs=1 path honors, and one
+    /// pinned lane would otherwise force its whole group back to serial
+    /// execution.
+    pub fn width_batchable(&self) -> bool {
+        self.method == Method::Eagle && self.temperature <= 0.0 && self.verify_width.is_none()
+    }
+
+    /// Minimal request for tests, benches, and synthetic eval workloads.
+    pub fn synthetic(id: u64) -> Request {
+        Request {
+            id,
+            prompt: String::new(),
+            max_tokens: 1,
+            temperature: 0.0,
+            method: Method::Vanilla,
+            tree: TreeChoice::Default,
+            verify_width: None,
+            width_hint: None,
+            seed: 0,
+            arrival: std::time::Instant::now(),
+        }
     }
 }
 
@@ -151,12 +196,14 @@ mod tests {
         assert_eq!(r.temperature, 0.0);
         assert_eq!(r.tree, TreeChoice::Default);
         assert_eq!(r.verify_width, None);
+        assert_eq!(r.width_hint, None);
+        assert_eq!(r.admission_width(32), 32, "no hint -> widest");
     }
 
     #[test]
     fn parse_request_full() {
         let v = Json::parse(
-            r#"{"prompt":"x","max_tokens":8,"temperature":1.0,"method":"vanilla","tree":"dynamic","verify_width":16}"#,
+            r#"{"prompt":"x","max_tokens":8,"temperature":1.0,"method":"vanilla","tree":"dynamic","verify_width":16,"width_hint":8}"#,
         )
         .unwrap();
         let r = Request::from_json(2, &v).unwrap();
@@ -164,9 +211,15 @@ mod tests {
         assert_eq!(r.method, Method::Vanilla);
         assert_eq!(r.tree, TreeChoice::Dynamic);
         assert_eq!(r.verify_width, Some(16));
-        let v = Json::parse(r#"{"prompt":"x","verify_width":1}"#).unwrap();
+        assert_eq!(r.width_hint, Some(8));
+        assert_eq!(r.admission_width(32), 8, "hint wins over the pin");
+        let v = Json::parse(r#"{"prompt":"x","verify_width":1,"width_hint":1}"#).unwrap();
         let r = Request::from_json(3, &v).unwrap();
         assert_eq!(r.verify_width, None, "degenerate widths ignored");
+        assert_eq!(r.width_hint, None);
+        let v = Json::parse(r#"{"prompt":"x","verify_width":16}"#).unwrap();
+        let r = Request::from_json(4, &v).unwrap();
+        assert_eq!(r.admission_width(32), 16, "pin stands in for a missing hint");
     }
 
     #[test]

@@ -1,18 +1,135 @@
 //! Admission scheduler: forms work batches from the queue with a simple
-//! deadline policy (take what's there, wait up to `linger` for more when
-//! batching is enabled), and tracks serving statistics.
+//! deadline policy (take what's there, wait on the queue condvar up to
+//! `linger` for more when batching is enabled), and tracks serving
+//! statistics.
+//!
+//! With [`AdmissionPolicy::WidthGrouped`] the scheduler is width-aware:
+//! each request carries a predicted verify width
+//! ([`Request::admission_width`] — its controller/client `width_hint`,
+//! falling back to the widest lowered width), and an admitted batch is
+//! split into sub-batches of compatible lanes via [`plan_width_groups`]
+//! so a narrow (low-acceptance) lane is never executed at a hot lane's
+//! width. Grouping decisions follow the [`group_cost`] model: a group of
+//! `b` lanes at verify width `t` costs one dispatch overhead plus `t*b`
+//! width-proportional work, so two lone lanes at adjacent widths merge
+//! (the overhead dominates) while bulk narrow traffic keeps its own
+//! cheap sub-batch. [`AdmissionPolicy::Fcfs`] is the legacy fallback:
+//! one arrival-ordered batch whose execution width is the max over lane
+//! fits.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use super::queue::RequestQueue;
 use super::request::Request;
+use crate::spec::dyntree::WidthFamily;
+
+/// Fixed per-group dispatch cost in verify-node units: host marshalling,
+/// buffer upload, and executable launch amortized over the round. One
+/// extra sub-batch is worth it only when it saves more than this many
+/// node-widths of verify work (calibrate against `exe/verify_t{t}` vs
+/// `host/width_group` in `rust/benches/hot_path.rs`).
+pub const DISPATCH_OVERHEAD: usize = 8;
+
+/// Cost of one verify round for a group of `b` lanes at width `t`.
+pub fn group_cost(t: usize, b: usize) -> usize {
+    DISPATCH_OVERHEAD + t * b
+}
+
+/// [`group_cost`] of `n` lanes at width `t` once split into sub-batches
+/// of at most `max_group` — what a bucket actually dispatches as.
+fn chunked_cost(t: usize, n: usize, max_group: usize) -> usize {
+    let chunks = n.div_ceil(max_group.max(1));
+    chunks * DISPATCH_OVERHEAD + t * n
+}
+
+/// One planned sub-batch: the verify width it will execute at and the
+/// member indices into the planner's input slice (ascending = FCFS
+/// order within the group).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WidthGroup {
+    pub width: usize,
+    pub members: Vec<usize>,
+}
+
+/// Partition lanes by predicted verify width. Each hint is fitted to the
+/// lowered family, buckets merge upward while the [`group_cost`] model
+/// (evaluated after `max_group` chunking) says the saved dispatch
+/// overhead outweighs the widened members, and the result is chunked to
+/// `max_group` lanes per sub-batch. Guarantees:
+/// every input index appears in exactly one group, and no member's
+/// fitted width exceeds its group's width (lanes are never truncated).
+pub fn plan_width_groups(
+    hints: &[usize],
+    family: &WidthFamily,
+    max_group: usize,
+) -> Vec<WidthGroup> {
+    let widths = family.widths();
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); widths.len()];
+    for (i, &h) in hints.iter().enumerate() {
+        let w = family.fit(h.min(family.max()));
+        let wi = widths.iter().position(|&x| x == w).expect("fit returns a family member");
+        buckets[wi].push(i);
+    }
+    // greedy upward merge: absorb a narrow bucket into the next wider
+    // one when merging is no more expensive — costed AFTER `max_group`
+    // chunking, so a merge that would spill into an extra sub-batch
+    // (paying the dispatch overhead anyway, plus the widened lanes)
+    // is rejected
+    let max_group = max_group.max(1);
+    for i in 0..widths.len().saturating_sub(1) {
+        if buckets[i].is_empty() {
+            continue;
+        }
+        let Some(j) = (i + 1..widths.len()).find(|&j| !buckets[j].is_empty()) else {
+            break;
+        };
+        let (ni, nj) = (buckets[i].len(), buckets[j].len());
+        let merged = chunked_cost(widths[j], ni + nj, max_group);
+        let split =
+            chunked_cost(widths[i], ni, max_group) + chunked_cost(widths[j], nj, max_group);
+        if merged <= split {
+            let moved = std::mem::take(&mut buckets[i]);
+            buckets[j].extend(moved);
+            buckets[j].sort_unstable(); // FCFS order within the merged group
+        }
+    }
+    let mut out = Vec::new();
+    for (wi, bucket) in buckets.iter().enumerate() {
+        for chunk in bucket.chunks(max_group) {
+            out.push(WidthGroup { width: widths[wi], members: chunk.to_vec() });
+        }
+    }
+    out
+}
+
+/// How `next_groups` splits an admitted batch.
+#[derive(Debug, Clone)]
+pub enum AdmissionPolicy {
+    /// One FCFS batch; the engine takes the max over lane width fits.
+    Fcfs,
+    /// Group batchable lanes by predicted width over the declared
+    /// verify-width family (the `"verify_widths"` manifest constant).
+    WidthGrouped { verify_widths: Vec<usize>, max_t: usize },
+}
+
+/// One admitted sub-batch. `verify_cap` is the group's planned width
+/// (the executor caps its width family there); `None` means FCFS — the
+/// engine picks per round with no scheduler-imposed cap.
+#[derive(Debug)]
+pub struct AdmittedGroup {
+    pub verify_cap: Option<usize>,
+    pub requests: Vec<Request>,
+}
 
 pub struct Scheduler {
     pub max_batch: usize,
     pub linger: Duration,
+    pub policy: AdmissionPolicy,
     pub served: AtomicU64,
     pub queued_ns: AtomicU64,
+    /// Sub-batches formed (equals admissions under FCFS).
+    pub groups_formed: AtomicU64,
 }
 
 impl Scheduler {
@@ -20,14 +137,83 @@ impl Scheduler {
         Scheduler {
             max_batch,
             linger: Duration::from_millis(linger_ms),
+            policy: AdmissionPolicy::Fcfs,
             served: AtomicU64::new(0),
             queued_ns: AtomicU64::new(0),
+            groups_formed: AtomicU64::new(0),
         }
     }
 
-    /// Block for the next batch (FCFS). Returns empty Vec when the queue
+    /// Set the admission policy (builder-style).
+    pub fn with_policy(mut self, policy: AdmissionPolicy) -> Scheduler {
+        self.policy = policy;
+        self
+    }
+
+    /// Block for the next FCFS batch (waiting on the queue condvar up to
+    /// `linger` for the batch to fill). Returns empty Vec when the queue
     /// is closed.
     pub fn next_batch(&self, q: &RequestQueue) -> Vec<Request> {
+        let batch = self.collect(q);
+        if !batch.is_empty() {
+            self.groups_formed.fetch_add(1, Ordering::Relaxed);
+        }
+        batch
+    }
+
+    /// Block for the next admission and split it into execution groups
+    /// per the configured policy. Empty Vec when the queue is closed.
+    ///
+    /// Only lanes the batched engine can co-execute are width-grouped:
+    /// greedy EAGLE tree requests sharing (max_tokens, tree choice).
+    /// Everything else becomes an FCFS singleton group, preserving
+    /// arrival order within each group.
+    pub fn next_groups(&self, q: &RequestQueue) -> Vec<AdmittedGroup> {
+        let batch = self.collect(q);
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        let groups = match &self.policy {
+            AdmissionPolicy::Fcfs => {
+                vec![AdmittedGroup { verify_cap: None, requests: batch }]
+            }
+            AdmissionPolicy::WidthGrouped { verify_widths, max_t } => {
+                let family = WidthFamily::from_available(verify_widths, *max_t, |_| true);
+                let mut out: Vec<AdmittedGroup> = Vec::new();
+                // partition into batchable compatibility classes + the rest
+                let mut classes: Vec<((usize, &'static str), Vec<Request>)> = Vec::new();
+                for r in batch {
+                    if r.width_batchable() {
+                        let key = (r.max_tokens, r.tree.name());
+                        match classes.iter_mut().find(|(k, _)| *k == key) {
+                            Some((_, v)) => v.push(r),
+                            None => classes.push((key, vec![r])),
+                        }
+                    } else {
+                        out.push(AdmittedGroup { verify_cap: None, requests: vec![r] });
+                    }
+                }
+                for (_, class) in classes {
+                    let hints: Vec<usize> =
+                        class.iter().map(|r| r.admission_width(family.max())).collect();
+                    let mut class: Vec<Option<Request>> = class.into_iter().map(Some).collect();
+                    for g in plan_width_groups(&hints, &family, self.max_batch) {
+                        let requests: Vec<Request> = g
+                            .members
+                            .iter()
+                            .map(|&i| class[i].take().expect("planner emits each index once"))
+                            .collect();
+                        out.push(AdmittedGroup { verify_cap: Some(g.width), requests });
+                    }
+                }
+                out
+            }
+        };
+        self.groups_formed.fetch_add(groups.len() as u64, Ordering::Relaxed);
+        groups
+    }
+
+    fn collect(&self, q: &RequestQueue) -> Vec<Request> {
         let first = match q.pop() {
             Some(r) => r,
             None => return Vec::new(),
@@ -41,10 +227,11 @@ impl Scheduler {
                     batch.extend(more);
                     continue;
                 }
-                if Instant::now() >= deadline {
+                // condvar wait (not a sleep-poll tick): woken the moment
+                // a request arrives or the queue closes
+                if !q.wait_nonempty_until(deadline) {
                     break;
                 }
-                std::thread::sleep(Duration::from_millis(1));
             }
         }
         for r in &batch {
@@ -70,16 +257,11 @@ mod tests {
     use crate::coordinator::request::{Method, TreeChoice};
 
     fn req(id: u64) -> Request {
-        Request {
-            id,
-            prompt: String::new(),
-            max_tokens: 1,
-            temperature: 0.0,
-            method: Method::Vanilla,
-            tree: TreeChoice::Default,
-            seed: 0,
-            arrival: std::time::Instant::now(),
-        }
+        Request::synthetic(id)
+    }
+
+    fn fam() -> WidthFamily {
+        WidthFamily::from_available(&[8, 16, 32], 32, |_| true)
     }
 
     #[test]
@@ -95,6 +277,7 @@ mod tests {
         let b2 = s.next_batch(&q);
         assert_eq!(b2.len(), 1);
         assert_eq!(s.served.load(Ordering::Relaxed), 5);
+        assert_eq!(s.groups_formed.load(Ordering::Relaxed), 2);
     }
 
     #[test]
@@ -103,5 +286,106 @@ mod tests {
         q.close();
         let s = Scheduler::new(2, 0);
         assert!(s.next_batch(&q).is_empty());
+        assert!(s.next_groups(&q).is_empty());
+    }
+
+    #[test]
+    fn plan_splits_bulk_traffic_by_width() {
+        // 2 narrow + 2 wide lanes: splitting saves 2*(32-8) = 48 node
+        // widths vs one merged bs4 round, far above the dispatch overhead
+        let g = plan_width_groups(&[8, 32, 8, 32], &fam(), 4);
+        assert_eq!(
+            g,
+            vec![
+                WidthGroup { width: 8, members: vec![0, 2] },
+                WidthGroup { width: 32, members: vec![1, 3] },
+            ]
+        );
+    }
+
+    #[test]
+    fn plan_merges_lone_adjacent_lanes() {
+        // one t8 + one t16 lane: a second dispatch costs more than
+        // widening the narrow lane (1 * (16-8) <= DISPATCH_OVERHEAD)
+        let g = plan_width_groups(&[8, 16], &fam(), 4);
+        assert_eq!(g, vec![WidthGroup { width: 16, members: vec![0, 1] }]);
+    }
+
+    #[test]
+    fn plan_merge_accounts_for_chunk_spill() {
+        // 1x t8 + 4x t16 with max_group 4: absorbing the lone t8 lane
+        // would spill the merged bucket into a fifth lane -> a second
+        // dispatch is paid anyway, so the unchunked cost model would
+        // merge (88 <= 88) while the chunk-aware one must keep it split
+        let g = plan_width_groups(&[8, 16, 16, 16, 16], &fam(), 4);
+        assert_eq!(
+            g,
+            vec![
+                WidthGroup { width: 8, members: vec![0] },
+                WidthGroup { width: 16, members: vec![1, 2, 3, 4] },
+            ]
+        );
+    }
+
+    #[test]
+    fn plan_fits_hints_and_chunks_to_max_group() {
+        let g = plan_width_groups(&[3, 5, 7, 6, 40], &fam(), 2);
+        // hints 3..7 fit t8; 40 exceeds the family -> widest
+        assert_eq!(
+            g,
+            vec![
+                WidthGroup { width: 8, members: vec![0, 1] },
+                WidthGroup { width: 8, members: vec![2, 3] },
+                WidthGroup { width: 32, members: vec![4] },
+            ]
+        );
+        for grp in &g {
+            assert!(grp.members.len() <= 2);
+        }
+    }
+
+    #[test]
+    fn next_groups_respects_policy_and_compat() {
+        let q = RequestQueue::new(16);
+        // two batchable eagle lanes with different hints + one vanilla
+        for (id, hint, method) in [
+            (0u64, Some(8), Method::Eagle),
+            (1, None, Method::Eagle),
+            (2, None, Method::Vanilla),
+            (3, Some(8), Method::Eagle),
+        ] {
+            let mut r = req(id);
+            r.method = method;
+            r.width_hint = hint;
+            r.tree = TreeChoice::Default;
+            q.push(r).unwrap();
+        }
+        let s = Scheduler::new(4, 0).with_policy(AdmissionPolicy::WidthGrouped {
+            verify_widths: vec![8, 16, 32],
+            max_t: 32,
+        });
+        let groups = s.next_groups(&q);
+        // vanilla -> FCFS singleton; eagle lanes split {0,3}@8 and {1}@32
+        assert_eq!(groups.len(), 3);
+        let singleton = groups.iter().find(|g| g.verify_cap.is_none()).unwrap();
+        assert_eq!(singleton.requests.len(), 1);
+        assert_eq!(singleton.requests[0].id, 2);
+        let narrow = groups.iter().find(|g| g.verify_cap == Some(8)).unwrap();
+        assert_eq!(narrow.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 3]);
+        let wide = groups.iter().find(|g| g.verify_cap == Some(32)).unwrap();
+        assert_eq!(wide.requests[0].id, 1);
+    }
+
+    #[test]
+    fn fcfs_policy_is_one_group() {
+        let q = RequestQueue::new(16);
+        for i in 0..3 {
+            q.push(req(i)).unwrap();
+        }
+        let s = Scheduler::new(4, 0);
+        let groups = s.next_groups(&q);
+        assert_eq!(groups.len(), 1);
+        assert!(groups[0].verify_cap.is_none());
+        assert_eq!(groups[0].requests.len(), 3);
     }
 }

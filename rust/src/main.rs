@@ -2,6 +2,7 @@
 //!
 //!   repro serve   [--addr 127.0.0.1:8085] [--model toy-s] [--queue 64]
 //!                 [--tree static|dynamic] [--verify-width auto|N]
+//!                 [--batch N] [--linger MS] [--width-grouping]
 //!   repro generate --prompt "..." [--model toy-s] [--method eagle]
 //!                  [--max-tokens 64] [--temperature 0] [--seed 7]
 //!                  [--tree static|dynamic] [--draft-depth N] [--frontier K]
@@ -21,7 +22,8 @@ use eagle_serve::text::bpe::Bpe;
 use eagle_serve::util::cli::Args;
 
 fn main() {
-    let args = Args::parse(std::env::args().skip(1), &["all", "verbose", "no-adapt"]);
+    let args =
+        Args::parse(std::env::args().skip(1), &["all", "verbose", "no-adapt", "width-grouping"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "serve" => serve(&args),
@@ -46,6 +48,11 @@ fn print_help() {
          USAGE: repro <serve|generate|eval|profile|selftest> [options]\n\n\
          serve     --addr HOST:PORT --model NAME --queue N --tree static|dynamic\n\
          \u{20}          --verify-width auto|N   (auto = cheapest lowered verify_t{{t}} per round)\n\
+         \u{20}          --batch N --linger MS   (admission batch size + fill deadline)\n\
+         \u{20}          --width-grouping        (group lanes by predicted verify width:\n\
+         \u{20}           requests carry a \"width_hint\" field; compatible greedy eagle lanes\n\
+         \u{20}           run as per-width sub-batches so low-acceptance lanes are never\n\
+         \u{20}           executed at a hot lane's width. Default: FCFS)\n\
          generate  --prompt TEXT --model NAME --method eagle|eagle-chain|vanilla|medusa|lookahead|classic-spec\n\
          \u{20}          --max-tokens N --temperature F --seed N\n\
          \u{20}          --tree static|dynamic [--draft-depth N --frontier K --branch B --no-adapt]\n\
@@ -86,10 +93,16 @@ fn verify_width(args: &Args) -> Result<WidthSelect> {
 fn serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:8085");
     let model = args.get_or("model", "toy-s");
-    let queue = args.usize_or("queue", 64);
-    let tree = tree_policy(args)?;
-    let width = verify_width(args)?;
-    eagle_serve::server::serve(addr, model, &artifacts_dir(), queue, tree, width)
+    let cfg = eagle_serve::server::ServeConfig {
+        queue_cap: args.usize_or("queue", 64),
+        default_tree: tree_policy(args)?,
+        default_width: verify_width(args)?,
+        max_batch: args.usize_or("batch", 1),
+        linger_ms: args.u64_or("linger", 2),
+        width_grouping: args.has("width-grouping"),
+        ..eagle_serve::server::ServeConfig::new(addr, model, &artifacts_dir())
+    };
+    eagle_serve::server::serve(cfg)
 }
 
 fn generate(args: &Args) -> Result<()> {
@@ -134,6 +147,10 @@ fn generate(args: &Args) -> Result<()> {
     }
     if rec.mean_verify_t() > 0.0 {
         println!("verify : {:.1} mean selected width (verify_t family)", rec.mean_verify_t());
+    }
+    if rec.mean_draft_w() > 0.0 {
+        let dw = rec.mean_draft_w();
+        println!("draft  : {dw:.1} mean selected step width (draft_widths family)");
     }
     Ok(())
 }

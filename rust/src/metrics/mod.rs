@@ -40,6 +40,15 @@ pub struct GenRecord {
     /// request-dependent with one. Empty for engines that predate width
     /// selection (baselines).
     pub round_verify_t: Vec<usize>,
+    /// Per-call selected draft-step width `w` (the `step_w{w}`
+    /// executable dispatched), one entry per draft step/extend call this
+    /// sequence participated in. Empty for non-draft engines.
+    pub round_draft_w: Vec<usize>,
+    /// Rounds where this sequence's verify executed WIDER than its own
+    /// tree's family fit — i.e. the lane was dragged up by a hotter lane
+    /// sharing its batch. Always 0 at bs=1 and in width-grouped batches
+    /// whose members fit the group width.
+    pub dragged_rounds: usize,
     /// n-alpha: [n] -> (accepted, tried) at chain-draft position n+1.
     pub alpha: Vec<(u64, u64)>,
     /// Draft tokens proposed in total (chain mode: gamma per round).
@@ -58,6 +67,8 @@ impl GenRecord {
             round_accepts: Vec::new(),
             round_tree_nodes: Vec::new(),
             round_verify_t: Vec::new(),
+            round_draft_w: Vec::new(),
+            dragged_rounds: 0,
             alpha: vec![(0, 0); 5],
             drafted: 0,
             wall_ns: 0,
@@ -93,6 +104,14 @@ impl GenRecord {
         }
         self.round_verify_t.iter().sum::<usize>() as f64 / self.round_verify_t.len() as f64
     }
+
+    /// Mean selected draft-step width per call (0 when none recorded).
+    pub fn mean_draft_w(&self) -> f64 {
+        if self.round_draft_w.is_empty() {
+            return 0.0;
+        }
+        self.round_draft_w.iter().sum::<usize>() as f64 / self.round_draft_w.len() as f64
+    }
 }
 
 /// Aggregate over many generations.
@@ -109,6 +128,9 @@ pub struct Aggregate {
     pub tree_rounds: usize,
     pub verify_t_sum: usize,
     pub verify_t_rounds: usize,
+    pub draft_w_sum: usize,
+    pub draft_w_calls: usize,
+    pub dragged_rounds: usize,
     pub alpha: Vec<(u64, u64)>,
     pub wall_each: Vec<u64>,
     pub timeline: Timeline,
@@ -131,6 +153,9 @@ impl Aggregate {
         self.tree_rounds += r.round_tree_nodes.len();
         self.verify_t_sum += r.round_verify_t.iter().sum::<usize>();
         self.verify_t_rounds += r.round_verify_t.len();
+        self.draft_w_sum += r.round_draft_w.iter().sum::<usize>();
+        self.draft_w_calls += r.round_draft_w.len();
+        self.dragged_rounds += r.dragged_rounds;
         for (i, &(a, t)) in r.alpha.iter().enumerate() {
             self.alpha[i].0 += a;
             self.alpha[i].1 += t;
@@ -169,6 +194,14 @@ impl Aggregate {
             return 0.0;
         }
         self.verify_t_sum as f64 / self.verify_t_rounds as f64
+    }
+
+    /// Mean selected draft-step width per call across all generations.
+    pub fn mean_draft_w(&self) -> f64 {
+        if self.draft_w_calls == 0 {
+            return 0.0;
+        }
+        self.draft_w_sum as f64 / self.draft_w_calls as f64
     }
 
     /// n-alpha acceptance rates, None when that depth was never tried.
@@ -241,6 +274,21 @@ mod tests {
         assert!((a.mean_verify_t() - 16.0).abs() < 1e-9);
         assert_eq!(Aggregate::new().mean_verify_t(), 0.0);
         assert_eq!(GenRecord::new(1).mean_verify_t(), 0.0);
+    }
+
+    #[test]
+    fn draft_width_means_and_drag_counts() {
+        let mut r = GenRecord::new(1);
+        r.round_draft_w = vec![8, 4, 4, 8];
+        r.dragged_rounds = 3;
+        assert!((r.mean_draft_w() - 6.0).abs() < 1e-9);
+        let mut a = Aggregate::new();
+        a.add(&r);
+        a.add(&r);
+        assert!((a.mean_draft_w() - 6.0).abs() < 1e-9);
+        assert_eq!(a.dragged_rounds, 6);
+        assert_eq!(Aggregate::new().mean_draft_w(), 0.0);
+        assert_eq!(GenRecord::new(1).mean_draft_w(), 0.0);
     }
 
     #[test]

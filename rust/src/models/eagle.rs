@@ -111,8 +111,18 @@ impl EagleDraft {
         Ok(DraftOut { feats: f_hat, logits })
     }
 
+    /// Whether a `step_w{w}` executable is lowered for batch size `b` —
+    /// the probe behind the draft-step [`WidthFamily`]
+    /// (`crate::spec::dyntree::WidthFamily::filtered` over the
+    /// `"draft_widths"` manifest constant).
+    pub fn has_step(&self, w: usize, b: usize) -> bool {
+        self.exes.has(&step_exe_name(w, b))
+    }
+
     /// One draft level over `w` nodes. K/V rows land at
     /// [write_base, write_base + w); the caller owns slot bookkeeping.
+    /// `w` may be any width of the lowered `step_w{w}` family — callers
+    /// pick the narrowest one holding the level's frontier.
     #[allow(clippy::too_many_arguments)]
     pub fn step(
         &self,
@@ -125,7 +135,7 @@ impl EagleDraft {
         bias: &[f32],
     ) -> Result<DraftOut> {
         let b = write_base.len();
-        let exe_name = if b == 1 { format!("step_w{w}") } else { format!("step_w{w}_bs{b}") };
+        let exe_name = step_exe_name(w, b);
         let rt = &self.exes.rt;
         let cache_buf = rt.upload_f32(&cache.data, &self.cache_dims(b))?;
         let wb_buf = rt.upload_i32(write_base, &[b])?;
@@ -147,5 +157,14 @@ impl EagleDraft {
         let logits = lit_f32(&out[1])?;
         cache.data = lit_f32(&out[2])?;
         Ok(DraftOut { feats: f_hat, logits })
+    }
+}
+
+/// Manifest/executable name of the draft step at width `w`, batch `b`.
+pub fn step_exe_name(w: usize, b: usize) -> String {
+    if b == 1 {
+        format!("step_w{w}")
+    } else {
+        format!("step_w{w}_bs{b}")
     }
 }

@@ -60,6 +60,13 @@ pub struct Constants {
     /// manifests without the field degrade to `[tree_t]` (the legacy
     /// single-width behavior).
     pub verify_widths: Vec<usize>,
+    /// Lowered draft-step width family (`"draft_widths"` manifest
+    /// field): each `w` here has `step_w{w}` (and, where batched serving
+    /// is lowered, `step_w{w}_bs{b}`) executables, so draft levels run
+    /// at the narrowest width holding their frontier — per lane group,
+    /// not per batch. Ascending, deduplicated, always containing
+    /// `draft_w`; older manifests degrade to `[draft_w]`.
+    pub draft_widths: Vec<usize>,
 }
 
 #[derive(Debug)]
@@ -170,14 +177,22 @@ impl Manifest {
             }
         }
         let tree_t = gc("tree_t")?;
-        let mut verify_widths: Vec<usize> = c
-            .get("verify_widths")
-            .and_then(|w| w.as_arr())
-            .map(|arr| arr.iter().filter_map(|x| x.as_usize()).filter(|&t| t >= 2).collect())
-            .unwrap_or_default();
-        verify_widths.push(tree_t);
-        verify_widths.sort_unstable();
-        verify_widths.dedup();
+        let draft_w = gc("draft_w")?;
+        let parse_widths = |key: &str, min_w: usize, anchor: usize| -> Vec<usize> {
+            let mut widths: Vec<usize> = c
+                .get(key)
+                .and_then(|w| w.as_arr())
+                .map(|arr| {
+                    arr.iter().filter_map(|x| x.as_usize()).filter(|&t| t >= min_w).collect()
+                })
+                .unwrap_or_default();
+            widths.push(anchor);
+            widths.sort_unstable();
+            widths.dedup();
+            widths
+        };
+        let verify_widths = parse_widths("verify_widths", 2, tree_t);
+        let draft_widths = parse_widths("draft_widths", 1, draft_w);
         Ok(Manifest {
             root: dir.to_path_buf(),
             constants: Constants {
@@ -185,8 +200,9 @@ impl Manifest {
                 tree_t,
                 chain_t: gc("chain_t")?,
                 accept_a: gc("accept_a")?,
-                draft_w: gc("draft_w")?,
+                draft_w,
                 verify_widths,
+                draft_widths,
             },
             tokenizer: v.req("tokenizer")?.as_str().unwrap_or_default().to_string(),
             workloads,
@@ -231,6 +247,7 @@ mod tests {
         let m = Manifest::load(&dir).unwrap();
         assert_eq!(m.constants.tree_t, 32);
         assert_eq!(m.constants.verify_widths, vec![32], "no field -> legacy single width");
+        assert_eq!(m.constants.draft_widths, vec![8], "no field -> legacy single draft width");
         let me = m.model("m").unwrap();
         assert_eq!(me.config.d, 4);
         assert_eq!(me.drafts["eagle"].param_names, vec!["fc"]);
@@ -245,7 +262,7 @@ mod tests {
             dir.join("manifest.json"),
             r#"{"version":1,"tokenizer":"vocab.json",
                 "constants":{"prefill_p":64,"tree_t":32,"chain_t":8,"accept_a":8,"draft_w":8,
-                             "verify_widths":[16,8,32,8,1]},
+                             "verify_widths":[16,8,32,8,1],"draft_widths":[4,1,8,4,0]},
                 "models":{}}"#,
         )
         .unwrap();
@@ -254,6 +271,11 @@ mod tests {
             m.constants.verify_widths,
             vec![8, 16, 32],
             "sorted, deduplicated, degenerate widths dropped, tree_t included"
+        );
+        assert_eq!(
+            m.constants.draft_widths,
+            vec![1, 4, 8],
+            "draft widths allow w=1 but drop w=0; draft_w included"
         );
     }
 }

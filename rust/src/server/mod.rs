@@ -7,6 +7,15 @@
 //!   POST /v1/generate   {"prompt", "max_tokens"?, "temperature"?, "method"?}
 //!   GET  /healthz
 //!   GET  /metrics       prometheus-style text
+//!
+//! The worker admits requests through the [`Scheduler`]: per-request
+//! FCFS by default, or — with `--batch N --width-grouping` — width-aware
+//! sub-batches where greedy EAGLE lanes are grouped by their predicted
+//! verify width (`"width_hint"` request field, falling back to the
+//! `"verify_width"` pin) and executed on the batched engine with the
+//! group's width cap, so a low-acceptance group never runs at a hot
+//! lane's width. Groups the batched engine cannot take (sampling, other
+//! methods, missing `_bs{b}` executables) fall back to the bs=1 path.
 
 pub mod http;
 
@@ -17,7 +26,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::request::{Method, Request, Response, TreeChoice};
-use crate::coordinator::{queue::PushError, RequestQueue, Scheduler};
+use crate::coordinator::{
+    queue::PushError, AdmissionPolicy, AdmittedGroup, BatchEagleEngine, RequestQueue, Scheduler,
+};
 use crate::eval::runner::{Runner, RunSpec};
 use crate::models::ModelBundle;
 use crate::spec::dyntree::{TreePolicy, WidthSelect};
@@ -32,43 +43,105 @@ pub struct ServerStats {
     pub errors: AtomicU64,
     pub rejected: AtomicU64,
     pub gen_ns: AtomicU64,
+    pub batched: AtomicU64,
+}
+
+/// Server configuration (see `repro serve --help`).
+pub struct ServeConfig {
+    pub addr: String,
+    pub model: String,
+    pub artifacts: std::path::PathBuf,
+    pub queue_cap: usize,
+    /// Draft-tree policy applied when a request does not pick one via
+    /// its `"tree"` field.
+    pub default_tree: TreePolicy,
+    /// Verify-width policy (`--verify-width auto|N`) applied when a
+    /// request does not pin one via its `"verify_width"` field.
+    pub default_width: WidthSelect,
+    /// Admission batch size (`--batch`); 1 = per-request serving.
+    pub max_batch: usize,
+    /// Linger for batch fill (`--linger`), in milliseconds.
+    pub linger_ms: u64,
+    /// Width-aware group admission (`--width-grouping`); FCFS otherwise.
+    pub width_grouping: bool,
+}
+
+impl ServeConfig {
+    pub fn new(addr: &str, model: &str, artifacts: &std::path::Path) -> ServeConfig {
+        ServeConfig {
+            addr: addr.to_string(),
+            model: model.to_string(),
+            artifacts: artifacts.to_path_buf(),
+            queue_cap: 64,
+            default_tree: TreePolicy::default_tree(),
+            default_width: WidthSelect::Auto,
+            max_batch: 1,
+            linger_ms: 2,
+            width_grouping: false,
+        }
+    }
+}
+
+type Slot = Arc<(Mutex<Option<Response>>, std::sync::Condvar)>;
+type PendingMap = Mutex<std::collections::HashMap<u64, Slot>>;
+
+fn deliver(pending: &PendingMap, id: u64, resp: Response) {
+    if let Some(slot) = pending.lock().unwrap().get(&id).cloned() {
+        *slot.0.lock().unwrap() = Some(resp);
+        slot.1.notify_all();
+    }
+}
+
+fn error_response(id: u64, e: &anyhow::Error) -> Response {
+    Response {
+        id,
+        text: format!("error: {e}"),
+        tokens: 0,
+        target_passes: 0,
+        tau: 0.0,
+        latency_ms: 0.0,
+        queue_ms: 0.0,
+    }
+}
+
+/// Resolve a request's tree choice against the server default.
+fn resolve_tree(choice: TreeChoice, default_tree: &TreePolicy) -> TreePolicy {
+    match (choice, default_tree) {
+        (TreeChoice::Static, _) => TreePolicy::default_tree(),
+        // explicit "dynamic" keeps the server's configured dynamic knobs
+        // when it already runs dynamic
+        (TreeChoice::Dynamic, TreePolicy::Dynamic(_)) => default_tree.clone(),
+        (TreeChoice::Dynamic, _) => TreePolicy::dynamic_default(),
+        (TreeChoice::Default, _) => default_tree.clone(),
+    }
 }
 
 /// Run the server (blocking). The inference worker owns the PJRT client
 /// (single accelerator, single worker — CPU testbed); HTTP I/O threads
 /// hand requests over through the bounded queue (backpressure -> 429).
-/// `default_tree` is the draft-tree policy applied when a request does
-/// not pick one via its `"tree"` field; `default_width` is the
-/// verify-width policy (`--verify-width auto|N`) applied when a request
-/// does not pin one via its `"verify_width"` field.
-pub fn serve(
-    addr: &str,
-    model: &str,
-    artifacts: &std::path::Path,
-    queue_cap: usize,
-    default_tree: TreePolicy,
-    default_width: WidthSelect,
-) -> Result<()> {
-    let queue = Arc::new(RequestQueue::new(queue_cap));
+pub fn serve(cfg: ServeConfig) -> Result<()> {
+    let queue = Arc::new(RequestQueue::new(cfg.queue_cap));
     let stats = Arc::new(ServerStats {
         requests: AtomicU64::new(0),
         tokens: AtomicU64::new(0),
         errors: AtomicU64::new(0),
         rejected: AtomicU64::new(0),
         gen_ns: AtomicU64::new(0),
+        batched: AtomicU64::new(0),
     });
-    // response slots keyed by request id
-    type Slot = Arc<(Mutex<Option<Response>>, std::sync::Condvar)>;
-    let pending: Arc<Mutex<std::collections::HashMap<u64, Slot>>> =
-        Arc::new(Mutex::new(std::collections::HashMap::new()));
+    let pending: Arc<PendingMap> = Arc::new(Mutex::new(std::collections::HashMap::new()));
 
     // ---- inference worker --------------------------------------------------
     {
         let queue = queue.clone();
         let pending = pending.clone();
         let stats = stats.clone();
-        let artifacts = artifacts.to_path_buf();
-        let model = model.to_string();
+        let artifacts = cfg.artifacts.clone();
+        let model = cfg.model.clone();
+        let default_tree = cfg.default_tree.clone();
+        let default_width = cfg.default_width;
+        let (max_batch, linger_ms) = (cfg.max_batch, cfg.linger_ms);
+        let grouping = cfg.width_grouping;
         std::thread::Builder::new().name("inference".into()).spawn(move || {
             let runner = Runner::new(&artifacts).expect("loading artifacts");
             let bpe = Bpe::load(runner.man.path(&runner.man.tokenizer).to_str().unwrap())
@@ -77,85 +150,41 @@ pub fn serve(
                 &runner.rt, &runner.man, &model, &["eagle"], true, true,
             )
             .expect("loading model bundle");
+            let c = runner.man.constants.clone();
             eprintln!(
-                "[server] model '{model}' loaded; serving (tree policy: {}, verify width: {})",
+                "[server] model '{model}' loaded; serving (tree: {}, verify width: {}, \
+                 batch: {max_batch}, admission: {})",
                 default_tree.name(),
-                default_width.describe()
+                default_width.describe(),
+                if grouping { "width-grouped" } else { "fcfs" }
             );
-            let sched = Scheduler::new(1, 0);
+            let policy = if grouping {
+                AdmissionPolicy::WidthGrouped {
+                    verify_widths: c.verify_widths.clone(),
+                    max_t: c.tree_t,
+                }
+            } else {
+                AdmissionPolicy::Fcfs
+            };
+            let sched = Scheduler::new(max_batch, linger_ms).with_policy(policy);
             loop {
-                let batch = sched.next_batch(&queue);
-                if batch.is_empty() {
+                let groups = sched.next_groups(&queue);
+                if groups.is_empty() {
                     break; // queue closed
                 }
-                for req in batch {
-                    let t0 = std::time::Instant::now();
-                    let ids = bpe.encode_prompt(&req.prompt);
-                    let spec = RunSpec {
-                        method: req.method,
-                        temperature: req.temperature,
-                        max_new: req.max_tokens,
-                        seed: req.seed,
-                        tree: match (req.tree, &default_tree) {
-                            (TreeChoice::Static, _) => TreePolicy::default_tree(),
-                            // explicit "dynamic" keeps the server's configured
-                            // dynamic knobs when it already runs dynamic
-                            (TreeChoice::Dynamic, TreePolicy::Dynamic(_)) => default_tree.clone(),
-                            (TreeChoice::Dynamic, _) => TreePolicy::dynamic_default(),
-                            (TreeChoice::Default, _) => default_tree.clone(),
-                        },
-                        verify_width: match req.verify_width {
-                            Some(t) => WidthSelect::Fixed(t),
-                            None => default_width,
-                        },
-                        ..Default::default()
-                    };
-                    let cfg = GenConfig {
-                        max_new: req.max_tokens,
-                        temperature: req.temperature,
-                        seed: req.seed,
-                        eos: Some(bpe.eos()),
-                    };
-                    let resp = match runner.run_one(&bundle, &ids, &spec, &cfg) {
-                        Ok(rec) => {
-                            stats.tokens.fetch_add(rec.tokens.len() as u64, Ordering::Relaxed);
-                            stats.gen_ns.fetch_add(rec.wall_ns, Ordering::Relaxed);
-                            Response {
-                                id: req.id,
-                                text: bpe.decode(&rec.tokens),
-                                tokens: rec.tokens.len(),
-                                target_passes: rec.target_passes,
-                                tau: rec.tau(),
-                                latency_ms: t0.elapsed().as_secs_f64() * 1e3,
-                                queue_ms: req.arrival.elapsed().as_secs_f64() * 1e3
-                                    - t0.elapsed().as_secs_f64() * 1e3,
-                            }
-                        }
-                        Err(e) => {
-                            stats.errors.fetch_add(1, Ordering::Relaxed);
-                            Response {
-                                id: req.id,
-                                text: format!("error: {e}"),
-                                tokens: 0,
-                                target_passes: 0,
-                                tau: 0.0,
-                                latency_ms: 0.0,
-                                queue_ms: 0.0,
-                            }
-                        }
-                    };
-                    if let Some(slot) = pending.lock().unwrap().get(&req.id).cloned() {
-                        *slot.0.lock().unwrap() = Some(resp);
-                        slot.1.notify_all();
-                    }
+                for group in groups {
+                    run_group(
+                        group, &runner, &bundle, &bpe, &c, &default_tree, default_width,
+                        &pending, &stats,
+                    );
                 }
             }
         })?;
     }
 
     // ---- accept loop ---------------------------------------------------------
-    let listener = TcpListener::bind(addr)?;
-    eprintln!("[server] listening on http://{addr}");
+    let listener = TcpListener::bind(&cfg.addr)?;
+    eprintln!("[server] listening on http://{}", cfg.addr);
     let next_id = Arc::new(AtomicU64::new(1));
     for stream in listener.incoming() {
         let mut stream = match stream {
@@ -178,8 +207,129 @@ pub fn serve(
     Ok(())
 }
 
-type PendingMap =
-    Mutex<std::collections::HashMap<u64, Arc<(Mutex<Option<Response>>, std::sync::Condvar)>>>;
+/// Execute one admitted group: the batched engine with the group's
+/// width cap when it qualifies, the bs=1 path per request otherwise.
+#[allow(clippy::too_many_arguments)]
+fn run_group(
+    group: AdmittedGroup,
+    runner: &Runner,
+    bundle: &ModelBundle,
+    bpe: &Bpe,
+    c: &crate::runtime::manifest::Constants,
+    default_tree: &TreePolicy,
+    default_width: WidthSelect,
+    pending: &PendingMap,
+    stats: &ServerStats,
+) {
+    let reqs = &group.requests;
+    let b = reqs.len();
+    // the batched engine can take the group iff it is a width-planned
+    // multi-lane group of batchable requests (`Request::width_batchable`,
+    // the same predicate the scheduler groups by), the server is not
+    // pinned to a fixed verify width (only the bs=1 path honors
+    // `--verify-width N`), and the bs{b} executables are lowered
+    let batchable = group.verify_cap.is_some()
+        && b >= 2
+        && default_width == WidthSelect::Auto
+        && reqs.iter().all(Request::width_batchable)
+        && bundle.target.exes.has(&format!("prefill_slot_bs{b}"))
+        && bundle.drafts.contains_key("eagle");
+    if batchable {
+        let t0 = std::time::Instant::now();
+        let prompts: Vec<Vec<u32>> = reqs.iter().map(|r| bpe.encode_prompt(&r.prompt)).collect();
+        let policy = resolve_tree(reqs[0].tree, default_tree);
+        let mut engine = BatchEagleEngine::new(&bundle.target, &bundle.drafts["eagle"], c)
+            .with_policy(policy.clone());
+        // the group's width cap only applies under the dynamic planner,
+        // which shrinks each lane's node budget to fit it; a static tree
+        // is a fixed shape that no narrow cap can hold, so a static
+        // group runs batched but uncapped (max over lane fits)
+        if policy.is_dynamic() {
+            engine = engine.with_verify_cap(group.verify_cap.expect("checked above"));
+        }
+        let gen = GenConfig {
+            max_new: reqs[0].max_tokens,
+            temperature: 0.0,
+            seed: reqs[0].seed,
+            eos: Some(bpe.eos()),
+        };
+        match engine.generate(&prompts, &gen) {
+            Ok(recs) => {
+                stats.batched.fetch_add(b as u64, Ordering::Relaxed);
+                let lat_ms = t0.elapsed().as_secs_f64() * 1e3;
+                for (req, rec) in reqs.iter().zip(recs) {
+                    stats.tokens.fetch_add(rec.tokens.len() as u64, Ordering::Relaxed);
+                    stats.gen_ns.fetch_add(rec.wall_ns / b as u64, Ordering::Relaxed);
+                    deliver(
+                        pending,
+                        req.id,
+                        Response {
+                            id: req.id,
+                            text: bpe.decode(&rec.tokens),
+                            tokens: rec.tokens.len(),
+                            target_passes: rec.target_passes,
+                            tau: rec.tau(),
+                            latency_ms: lat_ms,
+                            queue_ms: req.arrival.elapsed().as_secs_f64() * 1e3 - lat_ms,
+                        },
+                    );
+                }
+            }
+            Err(e) => {
+                stats.errors.fetch_add(b as u64, Ordering::Relaxed);
+                let e = anyhow::anyhow!("{e}");
+                for req in reqs {
+                    deliver(pending, req.id, error_response(req.id, &e));
+                }
+            }
+        }
+        return;
+    }
+    // bs=1 fallback: the latency path, one request at a time
+    for req in reqs {
+        let t0 = std::time::Instant::now();
+        let ids = bpe.encode_prompt(&req.prompt);
+        let spec = RunSpec {
+            method: req.method,
+            temperature: req.temperature,
+            max_new: req.max_tokens,
+            seed: req.seed,
+            tree: resolve_tree(req.tree, default_tree),
+            verify_width: match req.verify_width {
+                Some(t) => WidthSelect::Fixed(t),
+                None => default_width,
+            },
+            ..Default::default()
+        };
+        let gen = GenConfig {
+            max_new: req.max_tokens,
+            temperature: req.temperature,
+            seed: req.seed,
+            eos: Some(bpe.eos()),
+        };
+        let resp = match runner.run_one(bundle, &ids, &spec, &gen) {
+            Ok(rec) => {
+                stats.tokens.fetch_add(rec.tokens.len() as u64, Ordering::Relaxed);
+                stats.gen_ns.fetch_add(rec.wall_ns, Ordering::Relaxed);
+                Response {
+                    id: req.id,
+                    text: bpe.decode(&rec.tokens),
+                    tokens: rec.tokens.len(),
+                    target_passes: rec.target_passes,
+                    tau: rec.tau(),
+                    latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    queue_ms: req.arrival.elapsed().as_secs_f64() * 1e3
+                        - t0.elapsed().as_secs_f64() * 1e3,
+                }
+            }
+            Err(e) => {
+                stats.errors.fetch_add(1, Ordering::Relaxed);
+                error_response(req.id, &e)
+            }
+        };
+        deliver(pending, req.id, resp);
+    }
+}
 
 fn route(
     req: &HttpRequest,
@@ -192,11 +342,12 @@ fn route(
         ("GET", "/healthz") => HttpResponse::ok("application/json", b"{\"ok\":true}".to_vec()),
         ("GET", "/metrics") => {
             let body = format!(
-                "eagle_requests_total {}\neagle_tokens_total {}\neagle_errors_total {}\neagle_rejected_total {}\neagle_queue_depth {}\neagle_gen_seconds_total {:.3}\n",
+                "eagle_requests_total {}\neagle_tokens_total {}\neagle_errors_total {}\neagle_rejected_total {}\neagle_batched_total {}\neagle_queue_depth {}\neagle_gen_seconds_total {:.3}\n",
                 stats.requests.load(Ordering::Relaxed),
                 stats.tokens.load(Ordering::Relaxed),
                 stats.errors.load(Ordering::Relaxed),
                 stats.rejected.load(Ordering::Relaxed),
+                stats.batched.load(Ordering::Relaxed),
                 queue.len(),
                 stats.gen_ns.load(Ordering::Relaxed) as f64 / 1e9,
             );
@@ -217,7 +368,7 @@ fn route(
             if r.method == Method::Medusa && r.temperature > 0.0 {
                 return HttpResponse::status(400, "medusa is greedy-only");
             }
-            let slot = Arc::new((Mutex::new(None), std::sync::Condvar::new()));
+            let slot: Slot = Arc::new((Mutex::new(None), std::sync::Condvar::new()));
             pending.lock().unwrap().insert(id, slot.clone());
             match queue.push(r) {
                 Ok(()) => {}

@@ -30,6 +30,13 @@ pub struct ControllerConfig {
     pub max_frontier: usize,
     /// Observe-only rounds before the first adaptation step.
     pub warmup_rounds: u64,
+    /// Width-hysteresis dwell band: once the EWMA has crossed `low` and
+    /// the request downshifted to the cheapest verify width, it only
+    /// upshifts again after the EWMA recovers above `low + width_dwell`.
+    /// Without the band, a rate oscillating around `low` flaps between
+    /// differently-shaped `verify_t{t}` executables every round (on a
+    /// real backend that thrashes compilation/autotuning caches).
+    pub width_dwell: f32,
 }
 
 impl Default for ControllerConfig {
@@ -43,6 +50,7 @@ impl Default for ControllerConfig {
             min_frontier: 1,
             max_frontier: 8,
             warmup_rounds: 2,
+            width_dwell: 0.1,
         }
     }
 }
@@ -59,6 +67,10 @@ pub struct SpecController {
     /// Overall smoothed acceptance rate across depths.
     pub rate_ewma: f32,
     rate_seen: bool,
+    /// Sticky width-downshift state (hysteresis): set when the EWMA
+    /// crosses `low`, cleared only once it recovers past
+    /// `low + width_dwell`.
+    width_down: bool,
     pub rounds: u64,
 }
 
@@ -73,6 +85,7 @@ impl SpecController {
             alpha_seen: vec![false; n],
             rate_ewma: 0.0,
             rate_seen: false,
+            width_down: false,
             rounds: 0,
             cfg,
         }
@@ -87,6 +100,24 @@ impl SpecController {
     /// (width selection must not act on the 0.0 initial value).
     pub fn has_rate(&self) -> bool {
         self.rate_seen
+    }
+
+    /// The width-downshift threshold with hysteresis applied: `low`
+    /// while the request runs at full width, `low + width_dwell` once it
+    /// has downshifted — so leaving the cheap executable requires the
+    /// EWMA to clear the whole dwell band, not just tick above `low`.
+    pub fn effective_low(&self) -> f32 {
+        if self.width_down {
+            self.cfg.low + self.cfg.width_dwell
+        } else {
+            self.cfg.low
+        }
+    }
+
+    /// Whether the request is currently held at the cheapest verify
+    /// width by the hysteresis state.
+    pub fn is_width_down(&self) -> bool {
+        self.width_down
     }
 
     /// Fold in one round's per-depth `(accepted, tried)` increments — the
@@ -117,6 +148,9 @@ impl SpecController {
         let r = hit as f32 / tried as f32;
         self.rate_ewma = if self.rate_seen { beta * self.rate_ewma + (1.0 - beta) * r } else { r };
         self.rate_seen = true;
+        // width hysteresis: the state only flips when the EWMA clears the
+        // threshold on the far side of the dwell band
+        self.width_down = self.rate_ewma <= self.effective_low();
         if self.rounds > self.cfg.warmup_rounds {
             self.adapt();
         }
@@ -201,6 +235,53 @@ mod tests {
         }
         assert!(c.alpha_ewma[0] > 0.95);
         assert!(c.alpha_ewma[1] < 0.05);
+    }
+
+    #[test]
+    fn width_dwell_prevents_flapping_around_low() {
+        // cfg: low = 0.35, dwell = 0.1 -> effective band [0.35, 0.45]
+        let cfg = ControllerConfig::default();
+        let mut c = SpecController::new(cfg.clone(), init());
+        assert!(!c.is_width_down());
+        assert!((c.effective_low() - cfg.low).abs() < 1e-6);
+        // collapse acceptance: EWMA falls through `low`, state goes down
+        for _ in 0..8 {
+            c.observe_round(0, 5);
+        }
+        assert!(c.is_width_down());
+        assert!((c.effective_low() - (cfg.low + cfg.width_dwell)).abs() < 1e-6);
+        // steady 0.4 sits INSIDE the band: a dwell-free controller would
+        // upshift (0.4 > low) — hysteresis must hold the downshift
+        for _ in 0..40 {
+            c.observe_round(2, 5);
+            assert!(c.is_width_down(), "EWMA {} flapped up inside the band", c.rate_ewma);
+        }
+        assert!(c.rate_ewma > cfg.low, "steady rate converged above low");
+        // recovery clears the whole band -> upshift
+        for _ in 0..12 {
+            c.observe_round(5, 5);
+        }
+        assert!(!c.is_width_down());
+        // and steady 0.4 from the UP side stays up (0.4 > low)
+        for _ in 0..40 {
+            c.observe_round(2, 5);
+            if (c.rate_ewma - 0.4).abs() < 0.02 {
+                assert!(!c.is_width_down(), "EWMA {} flapped down inside the band", c.rate_ewma);
+            }
+        }
+    }
+
+    #[test]
+    fn width_dwell_still_downshifts_on_a_real_collapse() {
+        let mut c = SpecController::new(ControllerConfig::default(), init());
+        for _ in 0..6 {
+            c.observe_round(5, 5);
+        }
+        assert!(!c.is_width_down());
+        for _ in 0..10 {
+            c.observe_round(0, 5);
+        }
+        assert!(c.is_width_down(), "a genuine collapse must still cross `low`");
     }
 
     #[test]

@@ -12,10 +12,14 @@
 //! * [`policy`] — [`TreePolicy`] (`Static(TreeSpec)` | `Dynamic(..)`),
 //!   threaded through `EagleEngine`, `BatchEagleEngine`, the server/CLI
 //!   config, and the eval harness (`repro eval --exp dyntree`);
-//! * [`widths`] — per-round verify-width selection over the lowered
-//!   `verify_t{t}` executable family (the `"verify_widths"` manifest
-//!   constant), driven by the controller's acceptance EWMA at bs=1 and
-//!   by the max over lane budgets in the batched engine.
+//! * [`widths`] — per-round width selection over the lowered executable
+//!   families: `verify_t{t}` (the `"verify_widths"` manifest constant)
+//!   and `step_w{w}` (`"draft_widths"`), driven by the controller's
+//!   acceptance EWMA (with a dwell band so a rate oscillating around
+//!   `low` doesn't flap executables) at bs=1, and by group-local fits in
+//!   the batched engine — the scheduler's width-grouped admission
+//!   (`coordinator::scheduler`) caps each group's family at its planned
+//!   width so low-acceptance lanes never ride a hot lane's widths.
 //!
 //! Topology invariants (ancestor closure, node budget, uniform-confidence
 //! degradation to the static tree) are property-tested in

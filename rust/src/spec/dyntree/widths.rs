@@ -55,10 +55,23 @@ impl WidthFamily {
         max_t: usize,
         available: impl Fn(usize) -> bool,
     ) -> WidthFamily {
+        Self::filtered(declared, max_t, 2, available)
+    }
+
+    /// Same as [`WidthFamily::from_available`] but with an explicit
+    /// minimum width. Verify families require `t >= 2` (root + one
+    /// child); draft-step families (`"draft_widths"`, the lowered
+    /// `step_w{w}` set) legitimately include `w = 1`.
+    pub fn filtered(
+        declared: &[usize],
+        max_t: usize,
+        min_t: usize,
+        available: impl Fn(usize) -> bool,
+    ) -> WidthFamily {
         let mut widths: Vec<usize> = declared
             .iter()
             .copied()
-            .filter(|&t| t >= 2 && t <= max_t && available(t))
+            .filter(|&t| t >= min_t.max(1) && t <= max_t && available(t))
             .collect();
         widths.push(max_t.max(1));
         widths.sort_unstable();
@@ -131,11 +144,15 @@ pub fn plan_round_width(
 
 /// The controller's width hint: `(smoothed acceptance rate, low
 /// threshold)`, available only once the EWMA has matured past warmup so
-/// a cold request never gets prematurely downshifted.
+/// a cold request never gets prematurely downshifted. The threshold is
+/// the controller's *effective* low — raised by the dwell band while the
+/// request is already downshifted — so an EWMA oscillating around `low`
+/// does not flap between `verify_t8` and `verify_t32` shapes (see
+/// [`SpecController::effective_low`]).
 pub fn width_hint(controller: Option<&SpecController>) -> Option<(f32, f32)> {
     let c = controller?;
     if c.rounds > c.cfg.warmup_rounds && c.has_rate() {
-        Some((c.rate_ewma, c.cfg.low))
+        Some((c.rate_ewma, c.effective_low()))
     } else {
         None
     }
@@ -189,6 +206,16 @@ mod tests {
         let legacy = WidthFamily::from_available(&[], 26, |_| false);
         assert_eq!(legacy.widths(), &[26]);
         assert!(legacy.is_single());
+    }
+
+    #[test]
+    fn filtered_allows_width_one_for_draft_families() {
+        let f = WidthFamily::filtered(&[1, 4, 8], 8, 1, |_| true);
+        assert_eq!(f.widths(), &[1, 4, 8]);
+        assert_eq!(f.fit(1), 1);
+        assert_eq!(f.fit(3), 4);
+        let legacy = WidthFamily::filtered(&[], 8, 1, |_| false);
+        assert_eq!(legacy.widths(), &[8], "degrades to the single max width");
     }
 
     #[test]

@@ -66,6 +66,9 @@ pub struct EagleEngine<'a> {
     /// Lowered verify-width family; each round dispatches to the
     /// cheapest member that holds its tree (see `dyntree/widths.rs`).
     pub widths: WidthFamily,
+    /// Lowered draft-step width family (`"draft_widths"`); each level
+    /// runs at the narrowest `step_w{w}` holding its frontier chunk.
+    pub draft_widths: WidthFamily,
     pub accept_a: usize,
     pub draft_w: usize,
 }
@@ -78,6 +81,8 @@ impl<'a> EagleEngine<'a> {
     ) -> Self {
         let widths =
             WidthFamily::from_available(&c.verify_widths, c.tree_t, |t| target.has_verify(t, 1));
+        let draft_widths =
+            WidthFamily::filtered(&c.draft_widths, c.draft_w, 1, |w| draft.has_step(w, 1));
         EagleEngine {
             target,
             draft,
@@ -85,6 +90,7 @@ impl<'a> EagleEngine<'a> {
             shift: PairShift::Shifted,
             verify_t: c.tree_t,
             widths,
+            draft_widths,
             accept_a: c.accept_a,
             draft_w: c.draft_w,
         }
@@ -105,6 +111,9 @@ impl<'a> EagleEngine<'a> {
             shift,
             verify_t: c.chain_t,
             widths: WidthFamily::single(c.chain_t),
+            draft_widths: WidthFamily::filtered(&c.draft_widths, c.draft_w, 1, |w| {
+                draft.has_step(w, 1)
+            }),
             accept_a: c.accept_a,
             draft_w: c.draft_w,
         }
@@ -337,7 +346,10 @@ impl<'a> EagleEngine<'a> {
             if n_pending > self.draft_w {
                 bail!("pending pairs {n_pending} exceed draft width {}", self.draft_w);
             }
-            let w = self.draft_w;
+            // the extend replays n_pending pair slots: run it on the
+            // narrowest lowered step width that holds them
+            let w = self.draft_widths.fit(n_pending);
+            rec.round_draft_w.push(w);
             let mut ef = vec![0f32; w * d];
             let mut et = vec![0i32; w];
             let mut ep = vec![0i32; w];
@@ -458,10 +470,7 @@ impl<'a> EagleEngine<'a> {
             // --- draft-step the new nodes, padded to the smallest lowered
             //     width that fits the chunk (§Perf iteration 2) --------------
             for chunk in new_nodes.chunks(w) {
-                let w = *[1usize, 4, 8]
-                    .iter()
-                    .find(|&&c| c >= chunk.len() && self.draft.exes.has(&format!("step_w{c}")))
-                    .unwrap_or(&w);
+                let w = self.draft_widths.fit(chunk.len());
                 let th = Instant::now();
                 let write_base = draft_len + scratch_used;
                 if write_base + w >= s_tot {
@@ -499,6 +508,7 @@ impl<'a> EagleEngine<'a> {
                 )?;
                 rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64;
                 rec.draft_passes += 1;
+                rec.round_draft_w.push(w);
                 scratch_used += w;
                 for (r, &ni) in chunk.iter().enumerate() {
                     node_feat[ni] = sout.feats[r * d..(r + 1) * d].to_vec();
@@ -606,10 +616,7 @@ impl<'a> EagleEngine<'a> {
             // --- draft-step only the most confident new nodes --------------
             let step_set = select_frontier(tree, &new_nodes, params.frontier_k);
             for chunk in step_set.chunks(w_cap) {
-                let w = *[1usize, 4, 8]
-                    .iter()
-                    .find(|&&c| c >= chunk.len() && self.draft.exes.has(&format!("step_w{c}")))
-                    .unwrap_or(&w_cap);
+                let w = self.draft_widths.fit(chunk.len());
                 let th = Instant::now();
                 let write_base = draft_len + scratch_used;
                 if write_base + w >= s_tot {
@@ -639,6 +646,7 @@ impl<'a> EagleEngine<'a> {
                 let sout = self.draft.step(w, dcache, &[write_base as i32], &sf, &st, &sp, &bias)?;
                 rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64;
                 rec.draft_passes += 1;
+                rec.round_draft_w.push(w);
                 scratch_used += w;
                 for (r, &ni) in chunk.iter().enumerate() {
                     node_feat[ni] = sout.feats[r * d..(r + 1) * d].to_vec();

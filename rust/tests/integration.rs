@@ -184,6 +184,45 @@ fn batched_engine_matches_single_lane_results() {
 }
 
 #[test]
+fn width_grouped_execution_is_lossless() {
+    require_artifacts!();
+    let (runner, bpe) = setup();
+    let bundle =
+        ModelBundle::load(&runner.rt, &runner.man, "toy-s", &["eagle"], false, false).unwrap();
+    let wl = Workload::load(&runner.man, &bpe, "mtbench", runner.man.constants.prefill_p).unwrap();
+    let c = &runner.man.constants;
+    let cfg = GenConfig { max_new: 20, temperature: 0.0, seed: 7, eos: None };
+    let prompts: Vec<Vec<u32>> = wl.prompts.iter().take(4).map(|p| p.ids.clone()).collect();
+    let policy = || TreePolicy::Dynamic(DynTreeConfig::default());
+    // FCFS baseline: one bs4 batch at the max over lane fits
+    let fcfs = eagle_serve::coordinator::BatchEagleEngine::new(
+        &bundle.target, &bundle.drafts["eagle"], c,
+    )
+    .with_policy(policy())
+    .generate(&prompts, &cfg)
+    .unwrap();
+    // grouped: the same lanes split into capped sub-batches — per-lane
+    // greedy outputs must be identical and each group must respect its cap
+    let narrow = *c.verify_widths.first().unwrap();
+    for (cap, idx) in [(narrow, [1usize, 3]), (c.tree_t, [0, 2])] {
+        let gp: Vec<Vec<u32>> = idx.iter().map(|&i| prompts[i].clone()).collect();
+        let be = eagle_serve::coordinator::BatchEagleEngine::new(
+            &bundle.target, &bundle.drafts["eagle"], c,
+        )
+        .with_policy(policy())
+        .with_verify_cap(cap);
+        let recs = be.generate(&gp, &cfg).unwrap();
+        for (j, &i) in idx.iter().enumerate() {
+            assert_eq!(recs[j].tokens, fcfs[i].tokens, "lane {i} diverged under width grouping");
+            assert!(
+                recs[j].round_verify_t.iter().all(|&t| t <= cap),
+                "lane {i} exceeded its group's width cap {cap}"
+            );
+        }
+    }
+}
+
+#[test]
 fn moe_and_quant_targets_generate() {
     require_artifacts!();
     let (runner, bpe) = setup();

@@ -3,20 +3,11 @@
 
 use eagle_serve::coordinator::kvslots::SlotAllocator;
 use eagle_serve::coordinator::queue::{PushError, RequestQueue};
-use eagle_serve::coordinator::request::{Method, Request, TreeChoice};
+use eagle_serve::coordinator::request::Request;
 use eagle_serve::util::prop::check;
 
 fn req(id: u64) -> Request {
-    Request {
-        id,
-        prompt: String::new(),
-        max_tokens: 1,
-        temperature: 0.0,
-        method: Method::Vanilla,
-        tree: TreeChoice::Default,
-        seed: 0,
-        arrival: std::time::Instant::now(),
-    }
+    Request::synthetic(id)
 }
 
 #[test]

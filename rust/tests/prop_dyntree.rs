@@ -15,6 +15,7 @@
 use std::collections::HashSet;
 use std::rc::Rc;
 
+use eagle_serve::coordinator::{group_cost, plan_width_groups};
 use eagle_serve::spec::dyntree::{
     plan_round_width, rerank, select_frontier, ControllerConfig, DynTreeParams, SpecController,
     WidthFamily,
@@ -320,6 +321,81 @@ fn prop_dyntree_sampling_preserves_target_distribution() {
                 p[i],
                 params.budget
             );
+        }
+    });
+}
+
+#[test]
+fn prop_width_groups_partition_fit_and_cost() {
+    // The scheduler's grouping plan must (a) emit every lane exactly
+    // once, (b) never place a lane in a group narrower than its own
+    // fitted width (no truncation), (c) respect the max group size, and
+    // (d) never cost more under the dispatch model than the FCFS
+    // max-width batch it replaces.
+    check("width groups", 200, |rng, _| {
+        let fam = WidthFamily::from_available(&[8, 16, 32], 32, |_| true);
+        let n = 1 + rng.below(24);
+        let hints: Vec<usize> = (0..n).map(|_| 2 + rng.below(40)).collect();
+        let max_group = 1 + rng.below(8);
+        let groups = plan_width_groups(&hints, &fam, max_group);
+        let mut seen = vec![false; n];
+        for g in &groups {
+            assert!(!g.members.is_empty() && g.members.len() <= max_group);
+            assert!(fam.widths().contains(&g.width), "group width must be lowered");
+            for w in g.members.windows(2) {
+                assert!(w[0] < w[1], "FCFS order within a group");
+            }
+            for &m in &g.members {
+                assert!(!seen[m], "lane {m} planned twice");
+                seen[m] = true;
+                assert!(
+                    fam.fit(hints[m].min(fam.max())) <= g.width,
+                    "lane {m} (hint {}) truncated by group width {}",
+                    hints[m],
+                    g.width
+                );
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "plan dropped a lane");
+        // cost law (unchunked): the planned schedule never exceeds the
+        // single FCFS batch at the max fitted width
+        let unchunked = plan_width_groups(&hints, &fam, n);
+        let planned: usize = unchunked.iter().map(|g| group_cost(g.width, g.members.len())).sum();
+        let wmax = hints.iter().map(|&h| fam.fit(h.min(fam.max()))).max().unwrap();
+        assert!(
+            planned <= group_cost(wmax, n),
+            "grouping ({planned}) costlier than FCFS ({})",
+            group_cost(wmax, n)
+        );
+    });
+}
+
+#[test]
+fn prop_width_grouping_is_lossless_for_greedy_outputs() {
+    // A lane's round differs between FCFS max-width batching and its
+    // width group ONLY in the verify width its (identical) tree is
+    // padded to. Padding rows never change the real rows' tokens,
+    // positions, or attention bias, so the verified logits — and hence
+    // the greedy acceptance walk — are identical per request.
+    check("width grouping lossless", 150, |rng, _| {
+        let fam = WidthFamily::from_available(&[8, 16, 32], 32, |_| true);
+        let n_lanes = 2 + rng.below(6);
+        let trees: Vec<DraftTree> = (0..n_lanes).map(|_| random_tree(rng, 20)).collect();
+        let hints: Vec<usize> = trees.iter().map(|t| t.len()).collect();
+        let fcfs_t = hints.iter().map(|&h| fam.fit(h)).max().unwrap();
+        let s = 96usize;
+        let cache_len = 1 + rng.below(8);
+        for g in plan_width_groups(&hints, &fam, n_lanes) {
+            for &li in &g.members {
+                let tree = &trees[li];
+                let n = tree.len();
+                assert!(n <= g.width, "group width must hold every member tree");
+                let (tok_g, pos_g, bias_g) = tree.verify_inputs(g.width, cache_len, s);
+                let (tok_f, pos_f, bias_f) = tree.verify_inputs(fcfs_t, cache_len, s);
+                assert_eq!(&tok_g[..n], &tok_f[..n]);
+                assert_eq!(&pos_g[..n], &pos_f[..n]);
+                assert_eq!(&bias_g[..n * s], &bias_f[..n * s], "real rows see the same mask");
+            }
         }
     });
 }
