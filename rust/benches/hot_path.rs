@@ -4,6 +4,7 @@
 //! the numbers behind EXPERIMENTS.md §Perf.
 
 use eagle_serve::coordinator::plan_width_groups;
+use eagle_serve::eval::bench::{sim_round_ref, sim_round_scratch, sim_scratch, SIM_M, SIM_S};
 use eagle_serve::eval::runner::Runner;
 use eagle_serve::models::{artifacts_dir, ModelBundle};
 use eagle_serve::spec::dyntree::{
@@ -57,6 +58,31 @@ fn main() {
     }
     bench("host/verify_inputs(32x192)", 500, || {
         std::hint::black_box(tree.verify_inputs(32, 40, 192));
+    });
+
+    // the zero-allocation round state (S22): the verify-input build on
+    // reused buffers, and the full host-round pair — allocating
+    // reference vs arena/scratch path (same work, property-tested
+    // equal outputs; the arena path must win)
+    let mut rs = sim_scratch();
+    let (mut vt, mut vp, mut vb, mut anc) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    bench("host/verify_inputs_into(32x192)", 500, || {
+        vt.clear();
+        vt.resize(32, 0);
+        vp.clear();
+        vp.resize(32, 0);
+        vb.clear();
+        vb.resize(32 * SIM_S, 0.0);
+        tree.verify_inputs_to(32, SIM_M, SIM_S, &mut vt, &mut vp, &mut vb, &mut anc);
+        std::hint::black_box(vt.len());
+    });
+    let sim_tree = eagle_serve::eval::bench::default_bench_tree();
+    bench("host/round_ref", 500, || {
+        std::hint::black_box(sim_round_ref(&sim_tree));
+    });
+    bench("host/round_scratch", 500, || {
+        std::hint::black_box(sim_round_scratch(&sim_tree, &mut rs));
     });
 
     // dynamic-planner host components: candidate expansion over a full

@@ -7,14 +7,13 @@
 //!
 //! Tree shaping follows the engine's [`TreePolicy`]: static per-level
 //! widths, or the dynamic confidence-driven planner with one
-//! [`SpecController`] per lane — each lane's speculation depth/width
+//! [`SpecController`] per lane — each lane's speculation depth/frontier
 //! adapts to its own request while the draft calls stay lock-step
 //! (lanes that stop early contribute harmless padding rows).
 //!
 //! Each verify round dispatches to the cheapest lowered
 //! `verify_t{t}_bs{b}` executable that holds every lane's tree (the max
-//! over per-lane width fits — see `spec/dyntree/widths.rs`), so a batch
-//! of low-acceptance lanes stops paying worst-case verify FLOPs. Draft
+//! over per-lane width fits — see `spec/dyntree/widths.rs`). Draft
 //! levels likewise dispatch the narrowest lowered `step_w{w}_bs{b}`
 //! holding the round's widest per-lane step set (the `"draft_widths"`
 //! family). One engine call executes ONE scheduler group: under
@@ -23,6 +22,16 @@
 //! both fits are group-local — a low-acceptance group never runs at a
 //! hot lane's width, and any lane that still executes wider than its
 //! own tree's fit is counted in `GenRecord::dragged_rounds`.
+//!
+//! Host round state is zero-allocation in steady state (S22): per-lane
+//! arenas/slabs and the `[B, ..]` staging buffers live in a
+//! [`ScratchPool`] **keyed by KV slot** — pass one to
+//! [`BatchEagleEngine::generate_pooled`] to reuse warm buffers across
+//! admissions (the server worker owns one pool for its whole lifetime);
+//! [`BatchEagleEngine::generate`] allocates a throwaway pool for
+//! one-shot callers. Per-round scratch growth is recorded per lane as
+//! `GenRecord::round_host_alloc_bytes` (the pool-wide delta; 0 once
+//! warm).
 //!
 //! Per-lane prefill reuses the bs=1 draft prefill and splices the lane's
 //! rows into the batched draft cache host-side (caches are host vectors
@@ -35,12 +44,13 @@ use crate::metrics::GenRecord;
 use crate::models::target::KvCache;
 use crate::models::{EagleDraft, TargetModel};
 use crate::spec::dyntree::{
-    expand_candidates, plan_round_width, rerank, select_frontier, width_hint, DynTreeParams,
+    expand_candidates_into, plan_round_width, rerank_into, select_frontier_into, width_hint,
     SpecController, TreePolicy, WidthFamily,
 };
 use crate::spec::engine::GenConfig;
-use crate::spec::sampling::{argmax, sample, softmax, top_k};
-use crate::spec::tree::{chain_extend_bias, fill_step_rows, DraftTree, TreeSpec};
+use crate::spec::sampling::{argmax, sample, softmax, softmax_into, top_k_into};
+use crate::spec::scratch::ScratchPool;
+use crate::spec::tree::{chain_extend_bias_to, fill_step_rows_into, DraftTree, TreeSpec};
 use crate::util::rng::Rng;
 
 pub struct BatchEagleEngine<'a> {
@@ -103,9 +113,38 @@ impl<'a> BatchEagleEngine<'a> {
         self
     }
 
+    /// The largest draft tree any lane's round can grow (the per-lane
+    /// scratch reservation ceiling).
+    fn max_tree_nodes(&self) -> usize {
+        match &self.policy {
+            TreePolicy::Static(spec) => spec.total_nodes(),
+            TreePolicy::Dynamic(dc) => {
+                let base = dc.params(self.verify_t, self.draft_w, self.accept_a);
+                let cc = dc.clamped_controller(self.draft_w, self.accept_a);
+                let depth = base.depth.max(cc.max_depth);
+                let fk = base.frontier_k.max(cc.max_frontier);
+                depth * fk * base.branch + 1
+            }
+        }
+    }
+
     /// Generate for B prompts in lock-step (greedy, T=0 — the Table-7
-    /// setting). Returns one record per lane.
+    /// setting) with a throwaway scratch pool. One-shot convenience over
+    /// [`BatchEagleEngine::generate_pooled`].
     pub fn generate(&self, prompts: &[Vec<u32>], cfg: &GenConfig) -> Result<Vec<GenRecord>> {
+        self.generate_pooled(prompts, cfg, &mut ScratchPool::new())
+    }
+
+    /// Generate for B prompts in lock-step, drawing per-lane round state
+    /// from `pool` (keyed by KV slot = lane index). Callers that serve
+    /// many admissions keep one pool so lane buffers stay warm across
+    /// groups. Returns one record per lane.
+    pub fn generate_pooled(
+        &self,
+        prompts: &[Vec<u32>],
+        cfg: &GenConfig,
+        pool: &mut ScratchPool,
+    ) -> Result<Vec<GenRecord>> {
         assert!(cfg.temperature <= 0.0, "batched engine is greedy (Table 7 setting)");
         let b = prompts.len();
         assert!(b >= 2, "use EagleEngine for bs=1");
@@ -186,6 +225,25 @@ impl<'a> BatchEagleEngine<'a> {
                 _ => None,
             })
             .collect();
+
+        // ---- round state (S22): lane scratch keyed by KV slot ---------------
+        let max_nodes = self.max_tree_nodes();
+        let t_reserve = family.max().max(self.verify_t);
+        let w_reserve = dfam.max().max(self.draft_w);
+        pool.ensure_lanes(b, d, vocab);
+        for lane in &mut pool.lanes[..b] {
+            lane.reserve(d, vocab, s_tot, max_nodes, t_reserve, w_reserve);
+        }
+        pool.batch.reserve(b, d, s_tot, t_reserve, w_reserve);
+        let mut trees: Vec<DraftTree> = (0..b)
+            .map(|_| {
+                let mut t = DraftTree::default();
+                t.nodes.reserve(max_nodes);
+                t
+            })
+            .collect();
+        let mut bonuses = vec![0u32; b];
+
         let mut pending_old = vec![0i32; b];
         for (li, l) in lanes.iter().enumerate() {
             pending_old[li] = l.m as i32;
@@ -193,31 +251,41 @@ impl<'a> BatchEagleEngine<'a> {
         let mut pending_idx = vec![0i32; b * self.accept_a];
         let mut pending_n = vec![0i32; b];
         while lanes.iter().any(|l| !l.done) {
+            let fp0 =
+                pool.footprint() + trees.iter().map(DraftTree::capacity_bytes).sum::<usize>();
+            {
+                let bs = &mut pool.batch;
+                bs.live.clear();
+                bs.live.extend(lanes.iter().map(|l| !l.done));
+            }
             // 1. grow per-lane trees with batched draft steps
-            let mut trees: Vec<DraftTree> = lanes
-                .iter()
-                .map(|l| DraftTree::with_root(l.committed[l.m]))
-                .collect();
+            for li in 0..b {
+                trees[li].reset(lanes[li].committed[lanes[li].m]);
+                pool.lanes[li].begin_round(&lanes[li].root_feat, &lanes[li].root_logits);
+            }
             match &self.policy {
                 TreePolicy::Static(spec) => {
-                    self.grow_static_batch(spec, &dfam, &mut lanes, &mut trees, &mut dcache_b)?;
+                    self.grow_static_batch(
+                        spec, &dfam, &mut lanes, &mut trees, &mut dcache_b, pool,
+                    )?;
                 }
                 TreePolicy::Dynamic(dc) => {
                     // per-lane width plan BEFORE growth: each lane's node
                     // budget is clamped to the width its controller's EWMA
                     // justifies (see dyntree/widths.rs)
-                    let lane_params: Vec<DynTreeParams> = (0..b)
-                        .map(|li| {
-                            let p = controllers[li]
+                    {
+                        let bs = &mut pool.batch;
+                        bs.lane_params.clear();
+                        for ctl in controllers.iter().take(b) {
+                            let p = ctl
                                 .as_ref()
                                 .map(|c| c.params())
                                 .unwrap_or_else(|| dc.params(self.verify_t, w, self.accept_a));
-                            plan_round_width(&family, &p, width_hint(controllers[li].as_ref())).1
-                        })
-                        .collect();
-                    self.grow_dynamic_batch(
-                        &lane_params, &dfam, &mut lanes, &mut trees, &mut dcache_b,
-                    )?;
+                            bs.lane_params
+                                .push(plan_round_width(&family, &p, width_hint(ctl.as_ref())).1);
+                        }
+                    }
+                    self.grow_dynamic_batch(&dfam, &mut lanes, &mut trees, &mut dcache_b, pool)?;
                 }
             }
 
@@ -249,19 +317,37 @@ impl<'a> BatchEagleEngine<'a> {
                     lanes[li].rec.dragged_rounds += 1;
                 }
             }
-            let mut tokens = vec![0i32; b * t];
-            let mut pos = vec![0i32; b * t];
-            let mut bias = vec![0f32; b * t * s_tot];
-            for li in 0..b {
-                let (tk, ps, bs) = trees[li].verify_inputs(t, lanes[li].m, s_tot);
-                tokens[li * t..(li + 1) * t].copy_from_slice(&tk);
-                pos[li * t..(li + 1) * t].copy_from_slice(&ps);
-                bias[li * t * s_tot..(li + 1) * t * s_tot].copy_from_slice(&bs);
+            {
+                let bs = &mut pool.batch;
+                bs.vtokens.clear();
+                bs.vtokens.resize(b * t, 0);
+                bs.vpos.clear();
+                bs.vpos.resize(b * t, 0);
+                bs.vbias.clear();
+                bs.vbias.resize(b * t * s_tot, 0.0);
+                for li in 0..b {
+                    trees[li].verify_inputs_to(
+                        t,
+                        lanes[li].m,
+                        s_tot,
+                        &mut bs.vtokens[li * t..(li + 1) * t],
+                        &mut bs.vpos[li * t..(li + 1) * t],
+                        &mut bs.vbias[li * t * s_tot..(li + 1) * t * s_tot],
+                        &mut bs.anc,
+                    );
+                }
             }
             let t0 = Instant::now();
             let vout = tgt.verify(
-                t, &mut cache, &pending_old, &pending_idx, &pending_n,
-                &tokens, &pos, &bias, self.accept_a,
+                t,
+                &mut cache,
+                &pending_old,
+                &pending_idx,
+                &pending_n,
+                &pool.batch.vtokens,
+                &pool.batch.vpos,
+                &pool.batch.vbias,
+                self.accept_a,
             )?;
             let ver_ns = t0.elapsed().as_nanos() as u64;
             for l in lanes.iter_mut().filter(|l| !l.done) {
@@ -269,78 +355,82 @@ impl<'a> BatchEagleEngine<'a> {
                 l.rec.target_passes += 1;
             }
 
-            // 3. per-lane acceptance (committed inside the NEXT verify)
-            pending_idx = vec![0i32; b * self.accept_a];
-            pending_n = vec![0i32; b];
+            // 3. per-lane acceptance (committed inside the NEXT verify);
+            //    per-lane path buffers come from the pool
+            pending_idx.iter_mut().for_each(|x| *x = 0);
+            pending_n.iter_mut().for_each(|x| *x = 0);
             for li in 0..b {
                 pending_old[li] = lanes[li].m as i32;
             }
-            let accept_idx = &mut pending_idx;
-            let n_accept = &mut pending_n;
-            let mut paths: Vec<Vec<usize>> = Vec::with_capacity(b);
-            let mut bonuses = vec![0u32; b];
             for li in 0..b {
                 if lanes[li].done {
-                    paths.push(vec![]);
+                    pool.lanes[li].path.clear();
                     continue;
                 }
-                let path = trees[li].greedy_walk(|i| {
-                    argmax(tgt.row(&vout.logits, t, li, i, vocab))
-                });
+                let path = &mut pool.lanes[li].path;
+                let walk = |i: usize| argmax(tgt.row(&vout.logits, t, li, i, vocab));
+                trees[li].greedy_walk_into(walk, path);
                 let deepest = *path.last().unwrap();
                 bonuses[li] = argmax(tgt.row(&vout.logits, t, li, deepest, vocab)) as u32;
                 for (j, &ni) in path.iter().enumerate() {
-                    accept_idx[li * self.accept_a + j] = ni as i32;
+                    pending_idx[li * self.accept_a + j] = ni as i32;
                 }
-                n_accept[li] = path.len() as i32;
-                paths.push(path);
+                pending_n[li] = path.len() as i32;
             }
             // feed each lane's controller with its round outcome (dynamic
             // adaptive policy); attempted = deepest drafted chain position
             for li in 0..b {
-                if lanes[li].done || paths[li].is_empty() {
+                if lanes[li].done || pool.lanes[li].path.is_empty() {
                     continue;
                 }
                 if let Some(c) = controllers[li].as_mut() {
                     let attempted = trees[li].nodes.iter().map(|n| n.depth).max().unwrap_or(0);
-                    c.observe_round(paths[li].len() - 1, attempted);
+                    c.observe_round(pool.lanes[li].path.len() - 1, attempted);
                 }
             }
             let com_ns = 0u64;
 
             // 4. bookkeeping + batched draft extend at the narrowest
             //    lowered step width holding the widest accepted path
-            let max_commit = paths.iter().map(|p| p.len()).max().unwrap_or(0).max(1);
+            let max_commit =
+                pool.lanes[..b].iter().map(|l| l.path.len()).max().unwrap_or(0).max(1);
             if max_commit > dfam.max() {
                 bail!("accepted path of {max_commit} pairs exceeds draft width {}", dfam.max());
             }
             let w = dfam.fit(max_commit);
-            let mut ef = vec![0f32; b * w * d];
-            let mut et = vec![0i32; b * w];
-            let mut ep = vec![0i32; b * w];
-            let mut ebias = vec![0f32; b * w * s_tot];
-            let mut wb = vec![0i32; b];
+            {
+                let bs = &mut pool.batch;
+                bs.sf.clear();
+                bs.sf.resize(b * w * d, 0.0);
+                bs.st.clear();
+                bs.st.resize(b * w, 0);
+                bs.sp.clear();
+                bs.sp.resize(b * w, 0);
+                bs.sbias.clear();
+                bs.sbias.resize(b * w * s_tot, 0.0);
+                bs.wb.clear();
+                bs.wb.resize(b, 0);
+            }
             for li in 0..b {
-                wb[li] = lanes[li].m as i32;
+                pool.batch.wb[li] = lanes[li].m as i32;
                 if lanes[li].done {
                     // harmless self-attending rows
-                    let lb = chain_extend_bias(w, s_tot, lanes[li].m, 1);
-                    ebias[li * w * s_tot..(li + 1) * w * s_tot].copy_from_slice(&lb);
+                    let brange = li * w * s_tot..(li + 1) * w * s_tot;
+                    chain_extend_bias_to(w, s_tot, lanes[li].m, 1, &mut pool.batch.sbias[brange]);
                     for r in 0..w {
-                        ep[li * w + r] = (lanes[li].m + r) as i32;
+                        pool.batch.sp[li * w + r] = (lanes[li].m + r) as i32;
                     }
                     continue;
                 }
                 lanes[li].rec.timeline.commit_ns += com_ns / b as u64;
-                let path = &paths[li];
-                let n_commit = path.len();
-                let round: Vec<u32> = path[1..]
-                    .iter()
-                    .map(|&ni| trees[li].nodes[ni].token)
-                    .chain(std::iter::once(bonuses[li]))
-                    .collect();
-                lanes[li].rec.round_accepts.push(round.len());
-                for &tok in &round {
+                let n_commit = pool.lanes[li].path.len();
+                lanes[li].rec.round_accepts.push(n_commit);
+                for k in 0..n_commit {
+                    let tok = if k + 1 < n_commit {
+                        trees[li].nodes[pool.lanes[li].path[k + 1]].token
+                    } else {
+                        bonuses[li]
+                    };
                     lanes[li].committed.push(tok);
                     lanes[li].rec.tokens.push(tok);
                     if cfg.eos == Some(tok) || lanes[li].rec.tokens.len() >= cfg.max_new {
@@ -357,32 +447,52 @@ impl<'a> BatchEagleEngine<'a> {
                     // have cut `committed` short of slot_pos+1 pairs). `m` is
                     // deliberately frozen at its last valid value so later
                     // rounds keep building in-bounds (root-only) inputs.
-                    let lb = chain_extend_bias(w, s_tot, lanes[li].m, 1);
-                    ebias[li * w * s_tot..(li + 1) * w * s_tot].copy_from_slice(&lb);
+                    let brange = li * w * s_tot..(li + 1) * w * s_tot;
+                    chain_extend_bias_to(w, s_tot, lanes[li].m, 1, &mut pool.batch.sbias[brange]);
                     for r in 0..w {
-                        ep[li * w + r] = (lanes[li].m + r) as i32;
+                        pool.batch.sp[li * w + r] = (lanes[li].m + r) as i32;
                     }
                     continue;
                 }
-                for (r, &ni) in path.iter().enumerate() {
+                for (r, &ni) in pool.lanes[li].path.iter().enumerate() {
                     let f = tgt.row(&vout.feats, t, li, ni, d);
-                    ef[(li * w + r) * d..(li * w + r + 1) * d].copy_from_slice(f);
+                    pool.batch.sf[(li * w + r) * d..(li * w + r + 1) * d].copy_from_slice(f);
                     let slot_pos = lanes[li].m + r;
-                    et[li * w + r] = lanes[li].committed[slot_pos + 1] as i32;
-                    ep[li * w + r] = slot_pos as i32;
+                    pool.batch.st[li * w + r] = lanes[li].committed[slot_pos + 1] as i32;
+                    pool.batch.sp[li * w + r] = slot_pos as i32;
                 }
                 for r in n_commit..w {
-                    ep[li * w + r] = (lanes[li].m + r) as i32;
+                    pool.batch.sp[li * w + r] = (lanes[li].m + r) as i32;
                 }
-                let lb = chain_extend_bias(w, s_tot, lanes[li].m, n_commit);
-                ebias[li * w * s_tot..(li + 1) * w * s_tot].copy_from_slice(&lb);
+                let brange = li * w * s_tot..(li + 1) * w * s_tot;
+                let lb = &mut pool.batch.sbias[brange];
+                chain_extend_bias_to(w, s_tot, lanes[li].m, n_commit, lb);
                 lanes[li].m = m_new;
             }
             if lanes.iter().all(|l| l.done) {
+                let fp = pool.footprint()
+                    + trees.iter().map(DraftTree::capacity_bytes).sum::<usize>();
+                let grew = fp.saturating_sub(fp0) as u64;
+                for li in 0..b {
+                    if pool.batch.live[li] {
+                        lanes[li].rec.round_host_alloc_bytes.push(grew);
+                        if grew == 0 {
+                            lanes[li].rec.scratch_reuse_total += 1;
+                        }
+                    }
+                }
                 break;
             }
             let t0 = Instant::now();
-            let eout = self.draft.step(w, &mut dcache_b, &wb, &ef, &et, &ep, &ebias)?;
+            let eout = self.draft.step(
+                w,
+                &mut dcache_b,
+                &pool.batch.wb,
+                &pool.batch.sf,
+                &pool.batch.st,
+                &pool.batch.sp,
+                &pool.batch.sbias,
+            )?;
             let ext_ns = t0.elapsed().as_nanos() as u64;
             for li in 0..b {
                 if lanes[li].done {
@@ -391,11 +501,24 @@ impl<'a> BatchEagleEngine<'a> {
                 lanes[li].rec.timeline.draft_ns += ext_ns / b as u64;
                 lanes[li].rec.draft_passes += 1;
                 lanes[li].rec.round_draft_w.push(w);
-                let last = paths[li].len() - 1;
-                lanes[li].root_feat =
-                    eout.feats[(li * w + last) * d..(li * w + last + 1) * d].to_vec();
-                lanes[li].root_logits =
-                    eout.logits[(li * w + last) * vocab..(li * w + last + 1) * vocab].to_vec();
+                let last = pool.lanes[li].path.len() - 1;
+                let frange = (li * w + last) * d..(li * w + last + 1) * d;
+                lanes[li].root_feat.clear();
+                lanes[li].root_feat.extend_from_slice(&eout.feats[frange]);
+                let lrange = (li * w + last) * vocab..(li * w + last + 1) * vocab;
+                lanes[li].root_logits.clear();
+                lanes[li].root_logits.extend_from_slice(&eout.logits[lrange]);
+            }
+            let fp =
+                pool.footprint() + trees.iter().map(DraftTree::capacity_bytes).sum::<usize>();
+            let grew = fp.saturating_sub(fp0) as u64;
+            for li in 0..b {
+                if pool.batch.live[li] {
+                    lanes[li].rec.round_host_alloc_bytes.push(grew);
+                    if grew == 0 {
+                        lanes[li].rec.scratch_reuse_total += 1;
+                    }
+                }
             }
         }
 
@@ -412,7 +535,8 @@ impl<'a> BatchEagleEngine<'a> {
     /// STATIC lock-step growth: fixed per-level widths, greedy top-k by
     /// cumulative score per lane (the seed behavior). Each level's step
     /// runs at the narrowest lowered `step_w{w}_bs{b}` holding the
-    /// round's widest per-lane node set.
+    /// round's widest per-lane node set. Per-lane node state lives in
+    /// the pool's lane scratch (seeded by the caller's `begin_round`).
     fn grow_static_batch(
         &self,
         spec: &TreeSpec,
@@ -420,42 +544,53 @@ impl<'a> BatchEagleEngine<'a> {
         lanes: &mut [Lane],
         trees: &mut [DraftTree],
         dcache_b: &mut KvCache,
+        pool: &mut ScratchPool,
     ) -> Result<()> {
         let b = lanes.len();
         let d = self.target.d;
         let vocab = self.target.vocab;
         let s_tot = self.target.max_len;
 
-        let mut node_feat: Vec<Vec<Vec<f32>>> =
-            lanes.iter().map(|l| vec![l.root_feat.clone()]).collect();
-        let mut node_logits: Vec<Vec<Vec<f32>>> =
-            lanes.iter().map(|l| vec![l.root_logits.clone()]).collect();
-        let mut node_slot: Vec<Vec<Option<usize>>> = vec![vec![None]; b];
-        let mut scratch_used = vec![0usize; b];
-        let mut frontier: Vec<Vec<usize>> = vec![vec![0]; b];
+        {
+            let bs = &mut pool.batch;
+            bs.used.clear();
+            bs.used.resize(b, 0);
+        }
+        for lane in &mut pool.lanes[..b] {
+            lane.frontier.clear();
+            lane.frontier.push(0);
+        }
 
         for (lvl, &width) in spec.level_widths.iter().enumerate() {
             // select per-lane candidates (greedy top-k by cum score)
-            let mut new_nodes: Vec<Vec<usize>> = vec![Vec::new(); b];
             for li in 0..b {
+                let lane = &mut pool.lanes[li];
+                lane.new_nodes.clear();
                 if lanes[li].done {
                     continue;
                 }
-                let mut cands: Vec<(usize, u32, f32)> = Vec::new();
-                for &p in &frontier[li] {
-                    let probs = softmax(&node_logits[li][p], 1.0);
-                    for (tok, pr) in top_k(&probs, spec.branch) {
-                        cands.push((p, tok as u32, trees[li].nodes[p].score + pr.max(1e-20).ln()));
+                lane.cands.clear();
+                for &p in &lane.frontier {
+                    let q = lane.logits.get(p).expect("frontier node has logits");
+                    softmax_into(q, 1.0, &mut lane.probs);
+                    top_k_into(&lane.probs, spec.branch, &mut lane.idx);
+                    for &ti in &lane.idx {
+                        let score = trees[li].nodes[p].score + lane.probs[ti].max(1e-20).ln();
+                        lane.cands.push((p, ti as u32, score, None));
                     }
                 }
-                cands.sort_by(|a, c| c.2.partial_cmp(&a.2).unwrap());
-                cands.truncate(width);
-                for (p, tok, score) in cands {
+                // allocation-free unstable sort with a total (parent,
+                // token) tiebreak — see EagleEngine::grow_tree
+                lane.cands.sort_unstable_by(|a, c| {
+                    c.2.partial_cmp(&a.2).unwrap().then(a.0.cmp(&c.0)).then(a.1.cmp(&c.1))
+                });
+                lane.cands.truncate(width);
+                for (p, tok, score, _q) in lane.cands.drain(..) {
                     let ni = trees[li].add(p, tok, score, None);
-                    node_feat[li].push(Vec::new());
-                    node_logits[li].push(Vec::new());
-                    node_slot[li].push(None);
-                    new_nodes[li].push(ni);
+                    lane.feat.push_empty();
+                    lane.logits.push_empty();
+                    lane.node_slot.push(None);
+                    lane.new_nodes.push(ni);
                     lanes[li].rec.drafted += 1;
                 }
             }
@@ -464,24 +599,35 @@ impl<'a> BatchEagleEngine<'a> {
             }
             // batched draft step at the narrowest width holding every
             // lane's node set for this level
-            let maxset = new_nodes.iter().map(|s| s.len()).max().unwrap_or(0).max(1);
+            let maxset = pool.lanes[..b].iter().map(|l| l.new_nodes.len()).max().unwrap_or(0);
+            let maxset = maxset.max(1);
             if maxset > dfam.max() {
                 bail!("level of {maxset} nodes exceeds draft width {}", dfam.max());
             }
             let w = dfam.fit(maxset);
-            let mut sf = vec![0f32; b * w * d];
-            let mut st = vec![0i32; b * w];
-            let mut sp = vec![0i32; b * w];
-            let mut bias = vec![0f32; b * w * s_tot];
-            let mut wb = vec![0i32; b];
+            {
+                let bs = &mut pool.batch;
+                bs.sf.clear();
+                bs.sf.resize(b * w * d, 0.0);
+                bs.st.clear();
+                bs.st.resize(b * w, 0);
+                bs.sp.clear();
+                bs.sp.resize(b * w, 0);
+                bs.sbias.clear();
+                bs.sbias.resize(b * w * s_tot, 0.0);
+                bs.wb.clear();
+                bs.wb.resize(b, 0);
+            }
             for li in 0..b {
-                let base = lanes[li].m + scratch_used[li];
-                wb[li] = base as i32;
-                let lane_bias = fill_step_rows(
+                let base = lanes[li].m + pool.batch.used[li];
+                pool.batch.wb[li] = base as i32;
+                let lane = &mut pool.lanes[li];
+                let bs = &mut pool.batch;
+                fill_step_rows_into(
                     &trees[li],
-                    &new_nodes[li],
-                    &node_feat[li],
-                    &mut node_slot[li],
+                    &lane.new_nodes,
+                    &lane.feat,
+                    &mut lane.node_slot,
                     true,
                     d,
                     s_tot,
@@ -489,14 +635,22 @@ impl<'a> BatchEagleEngine<'a> {
                     lanes[li].m,
                     base,
                     w,
-                    &mut sf[li * w * d..(li + 1) * w * d],
-                    &mut st[li * w..(li + 1) * w],
-                    &mut sp[li * w..(li + 1) * w],
+                    &mut bs.sf[li * w * d..(li + 1) * w * d],
+                    &mut bs.st[li * w..(li + 1) * w],
+                    &mut bs.sp[li * w..(li + 1) * w],
+                    &mut bs.sbias[li * w * s_tot..(li + 1) * w * s_tot],
                 );
-                bias[li * w * s_tot..(li + 1) * w * s_tot].copy_from_slice(&lane_bias);
             }
             let t0 = Instant::now();
-            let sout = self.draft.step(w, dcache_b, &wb, &sf, &st, &sp, &bias)?;
+            let sout = self.draft.step(
+                w,
+                dcache_b,
+                &pool.batch.wb,
+                &pool.batch.sf,
+                &pool.batch.st,
+                &pool.batch.sp,
+                &pool.batch.sbias,
+            )?;
             let dns = t0.elapsed().as_nanos() as u64;
             for l in lanes.iter_mut().filter(|l| !l.done) {
                 l.rec.timeline.draft_ns += dns / b as u64;
@@ -504,13 +658,14 @@ impl<'a> BatchEagleEngine<'a> {
                 l.rec.round_draft_w.push(w);
             }
             for li in 0..b {
-                scratch_used[li] += w;
-                for (r, &ni) in new_nodes[li].iter().enumerate() {
-                    node_feat[li][ni] = sout.feats[(li * w + r) * d..(li * w + r + 1) * d].to_vec();
-                    node_logits[li][ni] =
-                        sout.logits[(li * w + r) * vocab..(li * w + r + 1) * vocab].to_vec();
+                pool.batch.used[li] += w;
+                let lane = &mut pool.lanes[li];
+                for (r, &ni) in lane.new_nodes.iter().enumerate() {
+                    lane.feat.set(ni, &sout.feats[(li * w + r) * d..(li * w + r + 1) * d]);
+                    let lrange = (li * w + r) * vocab..(li * w + r + 1) * vocab;
+                    lane.logits.set(ni, &sout.logits[lrange]);
                 }
-                frontier[li] = new_nodes[li].clone();
+                std::mem::swap(&mut lane.frontier, &mut lane.new_nodes);
             }
         }
         Ok(())
@@ -520,17 +675,18 @@ impl<'a> BatchEagleEngine<'a> {
     /// Each lane expands its top-K frontier by cumulative draft log-prob
     /// and may run at a different (controller-adapted) depth; after
     /// growth every lane's candidate tree is globally reranked down to
-    /// its verify budget. `lane_params` arrive pre-planned by the caller
-    /// (controller shape + width-plan budget clamp, see
-    /// `dyntree/widths.rs`). Drafted-token accounting happens
-    /// post-rerank.
+    /// its verify budget. Per-lane params arrive pre-planned by the
+    /// caller in `pool.batch.lane_params` (controller shape + width-plan
+    /// budget clamp, see `dyntree/widths.rs`). Drafted-token accounting
+    /// happens post-rerank. Each lane's step set lives in its scratch
+    /// `expandable` buffer (doubling as next level's expansion set).
     fn grow_dynamic_batch(
         &self,
-        lane_params: &[DynTreeParams],
         dfam: &WidthFamily,
         lanes: &mut [Lane],
         trees: &mut [DraftTree],
         dcache_b: &mut KvCache,
+        pool: &mut ScratchPool,
     ) -> Result<()> {
         let b = lanes.len();
         let d = self.target.d;
@@ -538,78 +694,106 @@ impl<'a> BatchEagleEngine<'a> {
         let s_tot = self.target.max_len;
         let w_cap = dfam.max();
 
-        let max_depth = lane_params.iter().map(|p| p.depth).max().unwrap_or(1);
-        let mut node_feat: Vec<Vec<Vec<f32>>> =
-            lanes.iter().map(|l| vec![l.root_feat.clone()]).collect();
-        let mut node_logits: Vec<Vec<Vec<f32>>> =
-            lanes.iter().map(|l| vec![l.root_logits.clone()]).collect();
-        let mut node_slot: Vec<Vec<Option<usize>>> = vec![vec![None]; b];
-        let mut scratch_used = vec![0usize; b];
-        let mut expandable: Vec<Vec<usize>> = vec![vec![0]; b];
+        let max_depth = pool.batch.lane_params.iter().map(|p| p.depth).max().unwrap_or(1);
+        {
+            let bs = &mut pool.batch;
+            bs.used.clear();
+            bs.used.resize(b, 0);
+        }
+        for lane in &mut pool.lanes[..b] {
+            lane.expandable.clear();
+            lane.expandable.push(0);
+        }
 
         for lvl in 0..max_depth {
-            // per-lane candidate generation + step-set selection
-            let mut step_sets: Vec<Vec<usize>> = vec![Vec::new(); b];
+            // per-lane candidate generation + step-set selection (the
+            // step set overwrites `expandable` — it IS the next level's
+            // expansion set)
             for li in 0..b {
-                if lanes[li].done || lvl >= lane_params[li].depth {
+                let lp = pool.batch.lane_params[li];
+                let lane = &mut pool.lanes[li];
+                if lanes[li].done || lvl >= lp.depth {
+                    lane.expandable.clear();
                     continue;
                 }
-                let front =
-                    select_frontier(&trees[li], &expandable[li], lane_params[li].frontier_k);
-                let mut new_nodes = Vec::new();
-                for &p in &front {
-                    if node_logits[li][p].is_empty() {
-                        continue;
-                    }
-                    let probs = softmax(&node_logits[li][p], 1.0);
-                    for (tok, score) in
-                        expand_candidates(trees[li].nodes[p].score, &probs, lane_params[li].branch)
-                    {
+                select_frontier_into(
+                    &trees[li],
+                    &lane.expandable,
+                    lp.frontier_k,
+                    &mut lane.frontier,
+                );
+                lane.new_nodes.clear();
+                for &p in &lane.frontier {
+                    let Some(logits) = lane.logits.get(p) else { continue };
+                    softmax_into(logits, 1.0, &mut lane.probs);
+                    expand_candidates_into(
+                        trees[li].nodes[p].score,
+                        &lane.probs,
+                        lp.branch,
+                        &mut lane.idx,
+                        &mut lane.pairs,
+                    );
+                    for &(tok, score) in &lane.pairs {
                         let ni = trees[li].add(p, tok, score, None);
-                        node_feat[li].push(Vec::new());
-                        node_logits[li].push(Vec::new());
-                        node_slot[li].push(None);
-                        new_nodes.push(ni);
+                        lane.feat.push_empty();
+                        lane.logits.push_empty();
+                        lane.node_slot.push(None);
+                        lane.new_nodes.push(ni);
                     }
                 }
                 // step only while another level follows and scratch remains
                 // (conservatively reserved at the family's widest step)
-                if lvl + 1 < lane_params[li].depth
-                    && lanes[li].m + scratch_used[li] + w_cap < s_tot
-                {
-                    step_sets[li] =
-                        select_frontier(&trees[li], &new_nodes, lane_params[li].frontier_k);
+                if lvl + 1 < lp.depth && lanes[li].m + pool.batch.used[li] + w_cap < s_tot {
+                    select_frontier_into(
+                        &trees[li],
+                        &lane.new_nodes,
+                        lp.frontier_k,
+                        &mut lane.expandable,
+                    );
+                } else {
+                    lane.expandable.clear();
                 }
             }
-            if step_sets.iter().all(|s| s.is_empty()) {
+            if pool.lanes[..b].iter().all(|l| l.expandable.is_empty()) {
                 break; // no lane can expand further
             }
             // batched draft step over the per-lane step sets, at the
             // narrowest lowered width holding the widest of them
-            let maxset = step_sets.iter().map(|s| s.len()).max().unwrap_or(0).max(1);
+            let maxset = pool.lanes[..b].iter().map(|l| l.expandable.len()).max().unwrap_or(0);
+            let maxset = maxset.max(1);
             if maxset > dfam.max() {
                 bail!("step set of {maxset} nodes exceeds draft width {}", dfam.max());
             }
             let w = dfam.fit(maxset);
-            let mut sf = vec![0f32; b * w * d];
-            let mut st = vec![0i32; b * w];
-            let mut sp = vec![0i32; b * w];
-            let mut bias = vec![0f32; b * w * s_tot];
-            let mut wb = vec![0i32; b];
+            {
+                let bs = &mut pool.batch;
+                bs.sf.clear();
+                bs.sf.resize(b * w * d, 0.0);
+                bs.st.clear();
+                bs.st.resize(b * w, 0);
+                bs.sp.clear();
+                bs.sp.resize(b * w, 0);
+                bs.sbias.clear();
+                bs.sbias.resize(b * w * s_tot, 0.0);
+                bs.wb.clear();
+                bs.wb.resize(b, 0);
+            }
             for li in 0..b {
                 // idle lanes rewrite fresh scratch at m: self-attending rows
                 // only, always in-bounds (m + w << s_tot while a lane lives)
-                let base = if step_sets[li].is_empty() {
+                let base = if pool.lanes[li].expandable.is_empty() {
                     lanes[li].m
                 } else {
-                    lanes[li].m + scratch_used[li]
+                    lanes[li].m + pool.batch.used[li]
                 };
-                wb[li] = base as i32;
-                let lane_bias = fill_step_rows(
+                pool.batch.wb[li] = base as i32;
+                let lane = &mut pool.lanes[li];
+                let bs = &mut pool.batch;
+                fill_step_rows_into(
                     &trees[li],
-                    &step_sets[li],
-                    &node_feat[li],
-                    &mut node_slot[li],
+                    &lane.expandable,
+                    &lane.feat,
+                    &mut lane.node_slot,
                     true,
                     d,
                     s_tot,
@@ -617,14 +801,22 @@ impl<'a> BatchEagleEngine<'a> {
                     lanes[li].m,
                     base,
                     w,
-                    &mut sf[li * w * d..(li + 1) * w * d],
-                    &mut st[li * w..(li + 1) * w],
-                    &mut sp[li * w..(li + 1) * w],
+                    &mut bs.sf[li * w * d..(li + 1) * w * d],
+                    &mut bs.st[li * w..(li + 1) * w],
+                    &mut bs.sp[li * w..(li + 1) * w],
+                    &mut bs.sbias[li * w * s_tot..(li + 1) * w * s_tot],
                 );
-                bias[li * w * s_tot..(li + 1) * w * s_tot].copy_from_slice(&lane_bias);
             }
             let t0 = Instant::now();
-            let sout = self.draft.step(w, dcache_b, &wb, &sf, &st, &sp, &bias)?;
+            let sout = self.draft.step(
+                w,
+                dcache_b,
+                &pool.batch.wb,
+                &pool.batch.sf,
+                &pool.batch.st,
+                &pool.batch.sp,
+                &pool.batch.sbias,
+            )?;
             let dns = t0.elapsed().as_nanos() as u64;
             for l in lanes.iter_mut().filter(|l| !l.done) {
                 l.rec.timeline.draft_ns += dns / b as u64;
@@ -632,17 +824,16 @@ impl<'a> BatchEagleEngine<'a> {
                 l.rec.round_draft_w.push(w);
             }
             for li in 0..b {
-                if step_sets[li].is_empty() {
-                    expandable[li].clear();
+                if pool.lanes[li].expandable.is_empty() {
                     continue;
                 }
-                scratch_used[li] += w;
-                for (r, &ni) in step_sets[li].iter().enumerate() {
-                    node_feat[li][ni] = sout.feats[(li * w + r) * d..(li * w + r + 1) * d].to_vec();
-                    node_logits[li][ni] =
-                        sout.logits[(li * w + r) * vocab..(li * w + r + 1) * vocab].to_vec();
+                pool.batch.used[li] += w;
+                let lane = &mut pool.lanes[li];
+                for (r, &ni) in lane.expandable.iter().enumerate() {
+                    lane.feat.set(ni, &sout.feats[(li * w + r) * d..(li * w + r + 1) * d]);
+                    let lrange = (li * w + r) * vocab..(li * w + r + 1) * vocab;
+                    lane.logits.set(ni, &sout.logits[lrange]);
                 }
-                expandable[li] = step_sets[li].clone();
             }
         }
         // global rerank per lane: keep the best `budget` nodes for verify
@@ -650,9 +841,11 @@ impl<'a> BatchEagleEngine<'a> {
             if lanes[li].done {
                 continue;
             }
-            if trees[li].len() - 1 > lane_params[li].budget {
-                let (pruned, _kept) = rerank(&trees[li], lane_params[li].budget);
-                trees[li] = pruned;
+            let budget = pool.batch.lane_params[li].budget;
+            if trees[li].len() - 1 > budget {
+                let lane = &mut pool.lanes[li];
+                rerank_into(&trees[li], budget, &mut lane.spare_tree, &mut lane.rr);
+                std::mem::swap(&mut trees[li], &mut lane.spare_tree);
             }
             lanes[li].rec.drafted += trees[li].len() - 1;
         }

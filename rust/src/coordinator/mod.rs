@@ -19,5 +19,6 @@ pub use kvslots::SlotAllocator;
 pub use queue::RequestQueue;
 pub use request::{Method, Request, Response, TreeChoice};
 pub use scheduler::{
-    group_cost, plan_width_groups, AdmissionPolicy, AdmittedGroup, Scheduler, WidthGroup,
+    group_cost, plan_width_groups, plan_width_groups_with, AdmissionPolicy, AdmittedGroup,
+    CostModel, Scheduler, WidthGroup,
 };

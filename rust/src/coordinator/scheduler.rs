@@ -23,24 +23,129 @@ use std::time::{Duration, Instant};
 use super::queue::RequestQueue;
 use super::request::Request;
 use crate::spec::dyntree::WidthFamily;
+use crate::util::json::Json;
 
 /// Fixed per-group dispatch cost in verify-node units: host marshalling,
 /// buffer upload, and executable launch amortized over the round. One
 /// extra sub-batch is worth it only when it saves more than this many
-/// node-widths of verify work (calibrate against `exe/verify_t{t}` vs
-/// `host/width_group` in `rust/benches/hot_path.rs`).
+/// node-widths of verify work. The default is an assumed ratio;
+/// calibrate per backend with `repro bench --json BENCH_host.json` and
+/// `--cost-model BENCH_host.json` (see [`CostModel`]).
 pub const DISPATCH_OVERHEAD: usize = 8;
 
-/// Cost of one verify round for a group of `b` lanes at width `t`.
+/// Cost of one verify round for a group of `b` lanes at width `t`,
+/// under the default (uncalibrated) cost model.
 pub fn group_cost(t: usize, b: usize) -> usize {
-    DISPATCH_OVERHEAD + t * b
+    CostModel::default().group_cost(t, b)
 }
 
-/// [`group_cost`] of `n` lanes at width `t` once split into sub-batches
-/// of at most `max_group` — what a bucket actually dispatches as.
-fn chunked_cost(t: usize, n: usize, max_group: usize) -> usize {
-    let chunks = n.div_ceil(max_group.max(1));
-    chunks * DISPATCH_OVERHEAD + t * n
+/// The scheduler's dispatch-cost model: `cost(t, b) = overhead + t*b` in
+/// verify-node units. The default overhead is [`DISPATCH_OVERHEAD`]; a
+/// calibrated value can be loaded from a small JSON file (`--cost-model
+/// path`) that either states it directly or carries the measured
+/// `exe/verify_t{t}` bench curve to fit it from — the file
+/// `repro bench --json` emits works for both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CostModel {
+    /// Per-group dispatch overhead in verify-node units.
+    pub dispatch_overhead: usize,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { dispatch_overhead: DISPATCH_OVERHEAD }
+    }
+}
+
+impl CostModel {
+    /// Cost of one verify round for a group of `b` lanes at width `t`.
+    pub fn group_cost(&self, t: usize, b: usize) -> usize {
+        self.dispatch_overhead + t * b
+    }
+
+    /// [`CostModel::group_cost`] of `n` lanes at width `t` once split
+    /// into sub-batches of at most `max_group` — what a bucket actually
+    /// dispatches as.
+    fn chunked_cost(&self, t: usize, n: usize, max_group: usize) -> usize {
+        let chunks = n.div_ceil(max_group.max(1));
+        chunks * self.dispatch_overhead + t * n
+    }
+
+    /// Fit the dispatch overhead from a measured verify-latency curve:
+    /// least-squares `ms(t) = a + b*t` over `(t, median_ms)` points, and
+    /// the overhead in node units is `a / b` (the fixed cost expressed
+    /// in per-node-width time). `None` when the curve is degenerate
+    /// (fewer than 2 distinct widths, or a non-positive slope).
+    pub fn fit_dispatch_overhead(points: &[(usize, f64)]) -> Option<usize> {
+        if points.len() < 2 {
+            return None;
+        }
+        let n = points.len() as f64;
+        let mean_t = points.iter().map(|p| p.0 as f64).sum::<f64>() / n;
+        let mean_ms = points.iter().map(|p| p.1).sum::<f64>() / n;
+        let mut cov = 0.0;
+        let mut var = 0.0;
+        for &(t, ms) in points {
+            cov += (t as f64 - mean_t) * (ms - mean_ms);
+            var += (t as f64 - mean_t) * (t as f64 - mean_t);
+        }
+        if var <= 0.0 {
+            return None;
+        }
+        let slope = cov / var;
+        if slope <= 0.0 {
+            return None;
+        }
+        let intercept = mean_ms - slope * mean_t;
+        let overhead = (intercept / slope).round();
+        Some(overhead.clamp(1.0, 10_000.0) as usize)
+    }
+
+    /// Parse a calibration JSON value. Accepted shapes:
+    /// * `{"dispatch_overhead": N}` — direct override;
+    /// * `{"cost_model": {"dispatch_overhead": N}}` — as emitted by
+    ///   `repro bench --json`;
+    /// * `{"benches": [{"name": "exe/verify_t8", "median_ms": ..}, ..]}`
+    ///   — a bench dump; the overhead is fit from the `exe/verify_t{t}`
+    ///   curve (bs=1 entries, name parsed for `t`).
+    pub fn from_json(v: &Json) -> anyhow::Result<CostModel> {
+        if let Some(n) = v.get("dispatch_overhead").and_then(Json::as_usize) {
+            anyhow::ensure!(n >= 1, "dispatch_overhead must be >= 1");
+            return Ok(CostModel { dispatch_overhead: n });
+        }
+        if let Some(cm) = v.get("cost_model") {
+            return CostModel::from_json(cm);
+        }
+        if let Some(benches) = v.get("benches").and_then(Json::as_arr) {
+            let mut points: Vec<(usize, f64)> = Vec::new();
+            for b in benches {
+                let Some(name) = b.get("name").and_then(Json::as_str) else { continue };
+                let Some(ms) = b.get("median_ms").and_then(Json::as_f64) else { continue };
+                // "exe/verify_t{t}" (optionally with a trailing " (..)" label)
+                let Some(rest) = name.strip_prefix("exe/verify_t") else { continue };
+                let digits: String = rest.chars().take_while(char::is_ascii_digit).collect();
+                if let Ok(t) = digits.parse::<usize>() {
+                    points.push((t, ms));
+                }
+            }
+            if let Some(overhead) = CostModel::fit_dispatch_overhead(&points) {
+                return Ok(CostModel { dispatch_overhead: overhead });
+            }
+            anyhow::bail!(
+                "cost-model file has no fittable exe/verify_t curve ({} points)",
+                points.len()
+            );
+        }
+        anyhow::bail!("cost-model json needs dispatch_overhead, cost_model, or benches")
+    }
+
+    /// Load a calibration file (see [`CostModel::from_json`]).
+    pub fn load(path: &std::path::Path) -> anyhow::Result<CostModel> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading cost model {}: {e}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing cost model: {e}"))?;
+        CostModel::from_json(&v)
+    }
 }
 
 /// One planned sub-batch: the verify width it will execute at and the
@@ -59,10 +164,25 @@ pub struct WidthGroup {
 /// `max_group` lanes per sub-batch. Guarantees:
 /// every input index appears in exactly one group, and no member's
 /// fitted width exceeds its group's width (lanes are never truncated).
+///
+/// Uses the default (uncalibrated) [`CostModel`]; the scheduler itself
+/// plans through [`plan_width_groups_with`] so `--cost-model` files take
+/// effect.
 pub fn plan_width_groups(
     hints: &[usize],
     family: &WidthFamily,
     max_group: usize,
+) -> Vec<WidthGroup> {
+    plan_width_groups_with(hints, family, max_group, &CostModel::default())
+}
+
+/// [`plan_width_groups`] under an explicit [`CostModel`] (the calibrated
+/// dispatch overhead changes where the greedy upward merge breaks even).
+pub fn plan_width_groups_with(
+    hints: &[usize],
+    family: &WidthFamily,
+    max_group: usize,
+    cost: &CostModel,
 ) -> Vec<WidthGroup> {
     let widths = family.widths();
     let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); widths.len()];
@@ -85,9 +205,9 @@ pub fn plan_width_groups(
             break;
         };
         let (ni, nj) = (buckets[i].len(), buckets[j].len());
-        let merged = chunked_cost(widths[j], ni + nj, max_group);
-        let split =
-            chunked_cost(widths[i], ni, max_group) + chunked_cost(widths[j], nj, max_group);
+        let merged = cost.chunked_cost(widths[j], ni + nj, max_group);
+        let split = cost.chunked_cost(widths[i], ni, max_group)
+            + cost.chunked_cost(widths[j], nj, max_group);
         if merged <= split {
             let moved = std::mem::take(&mut buckets[i]);
             buckets[j].extend(moved);
@@ -126,6 +246,9 @@ pub struct Scheduler {
     pub max_batch: usize,
     pub linger: Duration,
     pub policy: AdmissionPolicy,
+    /// Dispatch-cost model for width grouping (default, or calibrated
+    /// from a `--cost-model` file).
+    pub cost: CostModel,
     pub served: AtomicU64,
     pub queued_ns: AtomicU64,
     /// Sub-batches formed (equals admissions under FCFS).
@@ -138,6 +261,7 @@ impl Scheduler {
             max_batch,
             linger: Duration::from_millis(linger_ms),
             policy: AdmissionPolicy::Fcfs,
+            cost: CostModel::default(),
             served: AtomicU64::new(0),
             queued_ns: AtomicU64::new(0),
             groups_formed: AtomicU64::new(0),
@@ -147,6 +271,12 @@ impl Scheduler {
     /// Set the admission policy (builder-style).
     pub fn with_policy(mut self, policy: AdmissionPolicy) -> Scheduler {
         self.policy = policy;
+        self
+    }
+
+    /// Set the dispatch-cost model (builder-style; from `--cost-model`).
+    pub fn with_cost_model(mut self, cost: CostModel) -> Scheduler {
+        self.cost = cost;
         self
     }
 
@@ -197,7 +327,7 @@ impl Scheduler {
                     let hints: Vec<usize> =
                         class.iter().map(|r| r.admission_width(family.max())).collect();
                     let mut class: Vec<Option<Request>> = class.into_iter().map(Some).collect();
-                    for g in plan_width_groups(&hints, &family, self.max_batch) {
+                    for g in plan_width_groups_with(&hints, &family, self.max_batch, &self.cost) {
                         let requests: Vec<Request> = g
                             .members
                             .iter()
@@ -342,6 +472,59 @@ mod tests {
         for grp in &g {
             assert!(grp.members.len() <= 2);
         }
+    }
+
+    #[test]
+    fn cost_model_parses_direct_and_nested_json() {
+        let v = Json::parse(r#"{"dispatch_overhead": 13}"#).unwrap();
+        assert_eq!(CostModel::from_json(&v).unwrap().dispatch_overhead, 13);
+        let v = Json::parse(r#"{"cost_model": {"dispatch_overhead": 4}}"#).unwrap();
+        assert_eq!(CostModel::from_json(&v).unwrap().dispatch_overhead, 4);
+        let v = Json::parse(r#"{"dispatch_overhead": 0}"#).unwrap();
+        assert!(CostModel::from_json(&v).is_err(), "zero overhead rejected");
+        let v = Json::parse(r#"{"unrelated": true}"#).unwrap();
+        assert!(CostModel::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn cost_model_fits_from_bench_curve() {
+        // ms(t) = 0.5 + 0.05*t -> overhead = 0.5/0.05 = 10 node units
+        let pts = [(8usize, 0.9f64), (16, 1.3), (32, 2.1)];
+        assert_eq!(CostModel::fit_dispatch_overhead(&pts), Some(10));
+        assert_eq!(CostModel::fit_dispatch_overhead(&pts[..1]), None, "one point");
+        let flat = [(8usize, 1.0f64), (16, 1.0), (32, 1.0)];
+        assert_eq!(CostModel::fit_dispatch_overhead(&flat), None, "zero slope");
+        // the bench-dump shape repro bench --json emits
+        let v = Json::parse(
+            r#"{"benches": [
+                {"name": "exe/verify_t8 (fused commit)", "median_ms": 0.9},
+                {"name": "exe/verify_t16 (fused commit)", "median_ms": 1.3},
+                {"name": "exe/verify_t32 (fused commit)", "median_ms": 2.1},
+                {"name": "host/softmax(761)", "median_ms": 0.01}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(CostModel::from_json(&v).unwrap().dispatch_overhead, 10);
+    }
+
+    #[test]
+    fn calibrated_overhead_changes_merge_decisions() {
+        // one t8 + one t16 lane: default overhead 8 merges (widening the
+        // narrow lane costs 8 <= 8); a calibrated overhead of 2 says a
+        // second dispatch is cheap -> keep the split
+        let cheap = CostModel { dispatch_overhead: 2 };
+        let g = plan_width_groups_with(&[8, 16], &fam(), 4, &cheap);
+        assert_eq!(
+            g,
+            vec![
+                WidthGroup { width: 8, members: vec![0] },
+                WidthGroup { width: 16, members: vec![1] },
+            ]
+        );
+        let dear = CostModel { dispatch_overhead: 50 };
+        let g = plan_width_groups_with(&[8, 32, 8, 32], &fam(), 4, &dear);
+        assert_eq!(g.len(), 1, "huge overhead merges everything");
+        assert_eq!(g[0].width, 32);
     }
 
     #[test]

@@ -1,0 +1,332 @@
+//! Host-path micro-bench support (S23), shared by the
+//! `rust/benches/hot_path.rs` harness and the `repro bench --json` CLI:
+//! median timing, the arena-vs-reference round simulations behind the
+//! `host/round_scratch` / `host/round_ref` pair, and the
+//! `BENCH_host.json` emitter. The emitted file doubles as a
+//! `--cost-model` calibration input — when the exe benches ran, the
+//! `exe/verify_t{t}` curve is fit into a `cost_model` stanza
+//! (see [`crate::coordinator::CostModel`]).
+
+use anyhow::Result;
+use std::time::Instant;
+
+use crate::coordinator::CostModel;
+use crate::eval::runner::Runner;
+use crate::models::ModelBundle;
+use crate::spec::scratch::RoundScratch;
+use crate::spec::tree::{self, DraftTree, TreeSpec};
+use crate::util::json::Json;
+
+/// One measured bench point.
+pub struct BenchResult {
+    pub name: String,
+    pub median_ms: f64,
+    pub iters: usize,
+}
+
+/// Median wall-time of `f` in milliseconds over `iters` runs (after a
+/// short warm-up) — the same estimator `hot_path.rs` prints. `iters` is
+/// clamped to at least 1 (an empty sample has no median).
+pub fn median_ms<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let iters = iters.max(1);
+    for _ in 0..iters.min(3) {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// Simulation shape: feature dim, cache length, committed boundary, and
+/// the draft-step width used by the round sims.
+pub const SIM_D: usize = 64;
+pub const SIM_S: usize = 192;
+pub const SIM_M: usize = 40;
+pub const SIM_W: usize = 8;
+
+/// The paper's default 26-node draft tree (chain-ish fill, as in
+/// `hot_path.rs`) — the tree both round sims run on.
+pub fn default_bench_tree() -> DraftTree {
+    let mut tree = DraftTree::with_root(1);
+    let spec = TreeSpec::tree_default();
+    let mut parent = 0;
+    for (d, &w) in spec.level_widths.iter().enumerate() {
+        for i in 0..w {
+            let p = if d == 0 { 0 } else { parent };
+            tree.add(p, (d * 10 + i) as u32, 0.0, None);
+        }
+        parent = tree.len() - 1;
+    }
+    tree
+}
+
+/// One round of host-side bookkeeping on the ALLOCATING reference path:
+/// per-node feature `Vec`s, fresh verify-input buffers, fresh step-row
+/// staging (bias returned by value), and the acceptance-walk child
+/// scans — what the engines did before the S22 scratch subsystem.
+/// Returns a checksum equal to [`sim_round_scratch`]'s (property-tested
+/// in `rust/tests/prop_scratch.rs`).
+pub fn sim_round_ref(tree: &DraftTree) -> usize {
+    let (d, s, m, w) = (SIM_D, SIM_S, SIM_M, SIM_W);
+    let node_feat: Vec<Vec<f32>> = (0..tree.len()).map(|i| vec![i as f32; d]).collect();
+    let mut node_slot: Vec<Option<usize>> = vec![None; tree.len()];
+    let (tokens, _pos, vbias) = tree::reference::verify_inputs_ref(tree, 32, m, s);
+    let chunk: Vec<usize> = (1..tree.len().min(1 + w)).collect();
+    let mut sf = vec![0f32; w * d];
+    let mut st = vec![0i32; w];
+    let mut sp = vec![0i32; w];
+    let sbias = tree::fill_step_rows(
+        tree, &chunk, &node_feat, &mut node_slot, true, d, s, m, m, m + 2, w, &mut sf, &mut st,
+        &mut sp,
+    );
+    let mut acc = tokens.iter().map(|&t| t as usize).sum::<usize>();
+    let mut cur = 0usize;
+    loop {
+        let ch = tree.children(cur);
+        acc += ch.len();
+        match ch.first() {
+            Some(&c) => cur = c,
+            None => break,
+        }
+    }
+    acc + zeros(&vbias) + zeros(&sbias)
+}
+
+/// The same round of host-side bookkeeping on the S22 scratch path:
+/// arena repopulation, `verify_inputs_to`, `fill_step_rows_into`, and
+/// `children_into` — all on reused buffers. Zero heap allocation once
+/// `scratch` is warm.
+pub fn sim_round_scratch(tree: &DraftTree, s: &mut RoundScratch) -> usize {
+    let (d, s_tot, m, w) = (SIM_D, SIM_S, SIM_M, SIM_W);
+    s.feat.clear(d);
+    for i in 0..tree.len() {
+        s.probs.clear();
+        s.probs.resize(d, i as f32);
+        s.feat.push(&s.probs);
+    }
+    s.node_slot.clear();
+    s.node_slot.resize(tree.len(), None);
+    s.vtokens.clear();
+    s.vtokens.resize(32, 0);
+    s.vpos.clear();
+    s.vpos.resize(32, 0);
+    s.vbias.clear();
+    s.vbias.resize(32 * s_tot, 0.0);
+    tree.verify_inputs_to(32, m, s_tot, &mut s.vtokens, &mut s.vpos, &mut s.vbias, &mut s.anc);
+    s.new_nodes.clear();
+    s.new_nodes.extend(1..tree.len().min(1 + w));
+    s.sf.clear();
+    s.sf.resize(w * d, 0.0);
+    s.st.clear();
+    s.st.resize(w, 0);
+    s.sp.clear();
+    s.sp.resize(w, 0);
+    s.sbias.clear();
+    s.sbias.resize(w * s_tot, 0.0);
+    tree::fill_step_rows_into(
+        tree,
+        &s.new_nodes,
+        &s.feat,
+        &mut s.node_slot,
+        true,
+        d,
+        s_tot,
+        m,
+        m,
+        m + 2,
+        w,
+        &mut s.sf,
+        &mut s.st,
+        &mut s.sp,
+        &mut s.sbias,
+    );
+    let mut acc = s.vtokens.iter().map(|&t| t as usize).sum::<usize>();
+    let mut cur = 0usize;
+    loop {
+        tree.children_into(cur, &mut s.children);
+        acc += s.children.len();
+        match s.children.first() {
+            Some(&c) => cur = c,
+            None => break,
+        }
+    }
+    acc + zeros(&s.vbias) + zeros(&s.sbias)
+}
+
+fn zeros(xs: &[f32]) -> usize {
+    xs.iter().filter(|&&x| x == 0.0).count()
+}
+
+/// A warm scratch sized for the round sims.
+pub fn sim_scratch() -> RoundScratch {
+    let mut s = RoundScratch::new(SIM_D, 16);
+    s.reserve(SIM_D, 16, SIM_S, 64, 32, SIM_W);
+    s
+}
+
+/// The host-only suite behind `repro bench`: the verify-input pair
+/// (allocating reference vs arena `_to` path) and the full round pair
+/// (`host/round_ref` vs `host/round_scratch`).
+pub fn host_suite(iters: usize) -> Vec<BenchResult> {
+    let tree = default_bench_tree();
+    let mut s = sim_scratch();
+    let mut out = Vec::new();
+    let ms = median_ms(iters, || {
+        std::hint::black_box(tree::reference::verify_inputs_ref(&tree, 32, SIM_M, SIM_S));
+    });
+    out.push(BenchResult { name: "host/verify_inputs(32x192)".into(), median_ms: ms, iters });
+    let ms = median_ms(iters, || {
+        s.vtokens.clear();
+        s.vtokens.resize(32, 0);
+        s.vpos.clear();
+        s.vpos.resize(32, 0);
+        s.vbias.clear();
+        s.vbias.resize(32 * SIM_S, 0.0);
+        tree.verify_inputs_to(
+            32, SIM_M, SIM_S, &mut s.vtokens, &mut s.vpos, &mut s.vbias, &mut s.anc,
+        );
+        std::hint::black_box(s.vtokens.len());
+    });
+    out.push(BenchResult { name: "host/verify_inputs_into(32x192)".into(), median_ms: ms, iters });
+    let ms = median_ms(iters, || {
+        std::hint::black_box(sim_round_ref(&tree));
+    });
+    out.push(BenchResult { name: "host/round_ref".into(), median_ms: ms, iters });
+    let ms = median_ms(iters, || {
+        std::hint::black_box(sim_round_scratch(&tree, &mut s));
+    });
+    out.push(BenchResult { name: "host/round_scratch".into(), median_ms: ms, iters });
+    out
+}
+
+/// The artifact-gated exe suite: one fused-commit verify bench per
+/// lowered `verify_t{t}` width — the curve [`CostModel`] fits the
+/// dispatch overhead from.
+pub fn exe_verify_suite(runner: &Runner, bundle: &ModelBundle, iters: usize) -> Vec<BenchResult> {
+    let tgt = &bundle.target;
+    let c = &runner.man.constants;
+    let mut out = Vec::new();
+    let prompt: Vec<u32> = (1..30).collect();
+    let mut cache = tgt.new_cache(1);
+    let Ok((_, m)) = tgt.prefill(&prompt, &mut cache) else {
+        return out;
+    };
+    let zero_idx = vec![0i32; c.accept_a];
+    for &t in &c.verify_widths {
+        if !tgt.has_verify(t, 1) {
+            continue;
+        }
+        let mut wtree = DraftTree::with_root(1);
+        for i in 1..t {
+            let parent = if i <= c.accept_a - 1 { i - 1 } else { 1 + (i % (c.accept_a - 1)) };
+            wtree.add(parent, i as u32, -(i as f32), None);
+        }
+        let (tokens, pos, bias) = wtree.verify_inputs(t, m, tgt.max_len);
+        let ms = median_ms(iters, || {
+            tgt.verify(
+                t, &mut cache, &[m as i32], &zero_idx, &[0], &tokens, &pos, &bias, c.accept_a,
+            )
+            .unwrap();
+        });
+        out.push(BenchResult { name: format!("exe/verify_t{t}"), median_ms: ms, iters });
+    }
+    out
+}
+
+/// Fit the dispatch overhead from the `exe/verify_t{t}` results (None
+/// without at least two widths).
+pub fn fit_cost_model(results: &[BenchResult]) -> Option<CostModel> {
+    let points: Vec<(usize, f64)> = results
+        .iter()
+        .filter_map(|r| {
+            let rest = r.name.strip_prefix("exe/verify_t")?;
+            let digits: String = rest.chars().take_while(char::is_ascii_digit).collect();
+            Some((digits.parse().ok()?, r.median_ms))
+        })
+        .collect();
+    CostModel::fit_dispatch_overhead(&points).map(|d| CostModel { dispatch_overhead: d })
+}
+
+/// Serialize results (+ optional fitted cost model) as the
+/// `BENCH_host.json` schema — consumable by `--cost-model`.
+pub fn to_json(results: &[BenchResult], cost: Option<CostModel>) -> Json {
+    let benches: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::Str(r.name.clone())),
+                ("median_ms", Json::Num(r.median_ms)),
+                ("iters", Json::Num(r.iters as f64)),
+            ])
+        })
+        .collect();
+    let mut fields = vec![
+        ("schema", Json::Str("bench_host_v1".into())),
+        ("benches", Json::Arr(benches)),
+    ];
+    if let Some(cm) = cost {
+        fields.push((
+            "cost_model",
+            Json::obj(vec![("dispatch_overhead", Json::Num(cm.dispatch_overhead as f64))]),
+        ));
+    }
+    Json::obj(fields)
+}
+
+/// Write `BENCH_host.json` to `path`.
+pub fn write_json(
+    path: &std::path::Path,
+    results: &[BenchResult],
+    cost: Option<CostModel>,
+) -> Result<()> {
+    std::fs::write(path, to_json(results, cost).to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_sims_agree_and_scratch_is_stable() {
+        let tree = default_bench_tree();
+        let mut s = sim_scratch();
+        let reference = sim_round_ref(&tree);
+        assert_eq!(sim_round_scratch(&tree, &mut s), reference);
+        let fp = s.footprint();
+        for _ in 0..3 {
+            assert_eq!(sim_round_scratch(&tree, &mut s), reference, "dirty reuse diverged");
+        }
+        assert_eq!(s.footprint(), fp, "steady-state sim rounds must not allocate");
+    }
+
+    #[test]
+    fn bench_json_round_trips_into_cost_model() {
+        let results = vec![
+            BenchResult { name: "exe/verify_t8".into(), median_ms: 0.9, iters: 5 },
+            BenchResult { name: "exe/verify_t16".into(), median_ms: 1.3, iters: 5 },
+            BenchResult { name: "exe/verify_t32".into(), median_ms: 2.1, iters: 5 },
+            BenchResult { name: "host/round_scratch".into(), median_ms: 0.02, iters: 5 },
+        ];
+        let fitted = fit_cost_model(&results).expect("three widths fit");
+        assert_eq!(fitted.dispatch_overhead, 10);
+        // the emitted file parses back through the --cost-model loader,
+        // both via the fitted stanza and via the raw bench curve
+        let with_stanza = to_json(&results, Some(fitted));
+        assert_eq!(CostModel::from_json(&with_stanza).unwrap(), fitted);
+        let curve_only = to_json(&results, None);
+        assert_eq!(CostModel::from_json(&curve_only).unwrap(), fitted);
+    }
+
+    #[test]
+    fn fit_needs_two_widths() {
+        let one = vec![BenchResult { name: "exe/verify_t8".into(), median_ms: 0.9, iters: 5 }];
+        assert!(fit_cost_model(&one).is_none());
+        assert!(fit_cost_model(&[]).is_none());
+    }
+}

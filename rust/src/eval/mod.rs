@@ -1,6 +1,8 @@
-//! Evaluation harness (S18): workloads, the experiment runner, and the
-//! paper-table generators (DESIGN.md §4 experiment index).
+//! Evaluation harness (S18): workloads, the experiment runner, the
+//! paper-table generators (DESIGN.md §4 experiment index), and the
+//! bench support behind `repro bench --json` (S23).
 
+pub mod bench;
 pub mod runner;
 pub mod tables;
 pub mod workload;

@@ -11,7 +11,10 @@
 //!   paper's static 4/8/8/5 tree, or the dynamic planner
 //!   ([`spec::dyntree`]) that grows confidence-driven trees per round,
 //!   globally reranks them to the verify budget, and adapts speculation
-//!   depth/width per request from an online acceptance EWMA.
+//!   depth/width per request from an online acceptance EWMA. The round
+//!   loop runs on reusable flat arenas ([`spec::scratch`]) — no host
+//!   heap allocation in steady state (tracked by
+//!   `GenRecord::round_host_alloc_bytes`).
 //! * **L2** — JAX model graphs AOT-lowered to HLO text
 //!   (`python/compile/`), executed via the `xla` crate / PJRT.
 //! * **L1** — the Pallas tree-attention kernel inside those graphs.

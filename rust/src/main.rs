@@ -3,11 +3,13 @@
 //!   repro serve   [--addr 127.0.0.1:8085] [--model toy-s] [--queue 64]
 //!                 [--tree static|dynamic] [--verify-width auto|N]
 //!                 [--batch N] [--linger MS] [--width-grouping]
+//!                 [--cost-model PATH]
 //!   repro generate --prompt "..." [--model toy-s] [--method eagle]
 //!                  [--max-tokens 64] [--temperature 0] [--seed 7]
 //!                  [--tree static|dynamic] [--draft-depth N] [--frontier K]
 //!                  [--branch B] [--no-adapt] [--verify-width auto|N]
 //!   repro eval    (--all | --exp fig1) [--n 16] [--max-new 48] [--out results]
+//!   repro bench   [--json BENCH_host.json] [--iters 200]  host/exe micro-bench
 //!   repro profile [--model toy-s] [--n 4]   step-phase breakdown (§Perf)
 //!   repro selftest                            losslessness smoke check
 
@@ -29,6 +31,7 @@ fn main() {
         "serve" => serve(&args),
         "generate" => generate(&args),
         "eval" => eval(&args),
+        "bench" => bench(&args),
         "profile" => profile(&args),
         "selftest" => selftest(&args),
         _ => {
@@ -45,19 +48,25 @@ fn main() {
 fn print_help() {
     println!(
         "repro — EAGLE speculative-decoding serving framework\n\n\
-         USAGE: repro <serve|generate|eval|profile|selftest> [options]\n\n\
+         USAGE: repro <serve|generate|eval|bench|profile|selftest> [options]\n\n\
          serve     --addr HOST:PORT --model NAME --queue N --tree static|dynamic\n\
          \u{20}          --verify-width auto|N   (auto = cheapest lowered verify_t{{t}} per round)\n\
-         \u{20}          --batch N --linger MS   (admission batch size + fill deadline)\n\
+         \u{20}          --batch N --linger MS   (admission batch size + fill deadline;\n\
+         \u{20}           FCFS multi-lane eagle batches run on the batched engine, uncapped)\n\
          \u{20}          --width-grouping        (group lanes by predicted verify width:\n\
          \u{20}           requests carry a \"width_hint\" field; compatible greedy eagle lanes\n\
          \u{20}           run as per-width sub-batches so low-acceptance lanes are never\n\
          \u{20}           executed at a hot lane's width. Default: FCFS)\n\
+         \u{20}          --cost-model PATH       (calibrate the grouping dispatch overhead\n\
+         \u{20}           from a repro bench --json file; default: built-in constant)\n\
          generate  --prompt TEXT --model NAME --method eagle|eagle-chain|vanilla|medusa|lookahead|classic-spec\n\
          \u{20}          --max-tokens N --temperature F --seed N\n\
          \u{20}          --tree static|dynamic [--draft-depth N --frontier K --branch B --no-adapt]\n\
          \u{20}          --verify-width auto|N\n\
          eval      --all | --exp ID   (--n PROMPTS --max-new N --out DIR)\n\
+         bench     --json PATH --iters N   (host round-scratch vs reference pair +\n\
+         \u{20}           per-width exe/verify benches when artifacts exist; the JSON\n\
+         \u{20}           output feeds --cost-model)\n\
          profile   --model NAME --n N\n\
          selftest  quick losslessness check (eagle == vanilla at T=0)\n\n\
          Artifacts are read from $EAGLE_ARTIFACTS or ./artifacts (make artifacts)."
@@ -100,9 +109,46 @@ fn serve(args: &Args) -> Result<()> {
         max_batch: args.usize_or("batch", 1),
         linger_ms: args.u64_or("linger", 2),
         width_grouping: args.has("width-grouping"),
+        cost_model: args.get("cost-model").map(std::path::PathBuf::from),
         ..eagle_serve::server::ServeConfig::new(addr, model, &artifacts_dir())
     };
     eagle_serve::server::serve(cfg)
+}
+
+/// Host (and, with artifacts, per-width exe) micro-benches; `--json`
+/// writes `BENCH_host.json`, whose `exe/verify_t{t}` curve is fit into
+/// a `cost_model` stanza consumable by `repro serve --cost-model`.
+fn bench(args: &Args) -> Result<()> {
+    use eagle_serve::eval::bench as hb;
+    let iters = args.usize_or("iters", 200).max(1);
+    let mut results = hb::host_suite(iters);
+    if artifacts_dir().join("manifest.json").exists() {
+        let runner = Runner::new(&artifacts_dir())?;
+        let bundle = ModelBundle::load(&runner.rt, &runner.man, "toy-s", &["eagle"], false, false)?;
+        results.extend(hb::exe_verify_suite(&runner, &bundle, iters.min(30)));
+    } else {
+        eprintln!("[bench] artifacts not built; exe benches skipped (host suite only)");
+    }
+    for r in &results {
+        println!("{:32} median {:8.4} ms   ({} iters)", r.name, r.median_ms, r.iters);
+    }
+    let scratch = results.iter().find(|r| r.name == "host/round_scratch");
+    let reference = results.iter().find(|r| r.name == "host/round_ref");
+    if let (Some(s), Some(r)) = (scratch, reference) {
+        println!(
+            "round_scratch vs round_ref: {:.2}x ({} alloc-free)",
+            r.median_ms / s.median_ms.max(1e-9),
+            if s.median_ms <= r.median_ms { "arena path faster," } else { "REGRESSION:" }
+        );
+    }
+    let cost = hb::fit_cost_model(&results);
+    if let Some(cm) = cost {
+        println!("fitted cost model: dispatch_overhead = {} node units", cm.dispatch_overhead);
+    }
+    let path = std::path::PathBuf::from(args.get_or("json", "BENCH_host.json"));
+    hb::write_json(&path, &results, cost)?;
+    println!("wrote {}", path.display());
+    Ok(())
 }
 
 fn generate(args: &Args) -> Result<()> {

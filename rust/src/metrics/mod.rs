@@ -49,6 +49,15 @@ pub struct GenRecord {
     /// sharing its batch. Always 0 at bs=1 and in width-grouped batches
     /// whose members fit the group width.
     pub dragged_rounds: usize,
+    /// Per-round bytes of NEW host round-state capacity (scratch arenas,
+    /// staging buffers, tree node storage) acquired during that round.
+    /// 0 in steady state — the zero-allocation guarantee of the S22
+    /// scratch subsystem; nonzero entries mark warm-up rounds. Batched
+    /// lanes record the pool-wide delta (the pool is shared).
+    pub round_host_alloc_bytes: Vec<u64>,
+    /// Rounds that completed entirely on reused scratch (zero new host
+    /// capacity). `scratch_reuse_total == rounds` once warm.
+    pub scratch_reuse_total: u64,
     /// n-alpha: [n] -> (accepted, tried) at chain-draft position n+1.
     pub alpha: Vec<(u64, u64)>,
     /// Draft tokens proposed in total (chain mode: gamma per round).
@@ -69,6 +78,8 @@ impl GenRecord {
             round_verify_t: Vec::new(),
             round_draft_w: Vec::new(),
             dragged_rounds: 0,
+            round_host_alloc_bytes: Vec::new(),
+            scratch_reuse_total: 0,
             alpha: vec![(0, 0); 5],
             drafted: 0,
             wall_ns: 0,
@@ -112,6 +123,13 @@ impl GenRecord {
         }
         self.round_draft_w.iter().sum::<usize>() as f64 / self.round_draft_w.len() as f64
     }
+
+    /// Host round-state bytes newly allocated AFTER warm-up (everything
+    /// past the first round). 0 is the steady-state guarantee the S22
+    /// scratch subsystem is property-tested for.
+    pub fn steady_host_alloc_bytes(&self) -> u64 {
+        self.round_host_alloc_bytes.iter().skip(1).sum()
+    }
 }
 
 /// Aggregate over many generations.
@@ -131,6 +149,8 @@ pub struct Aggregate {
     pub draft_w_sum: usize,
     pub draft_w_calls: usize,
     pub dragged_rounds: usize,
+    pub host_alloc_bytes: u64,
+    pub scratch_reuse_total: u64,
     pub alpha: Vec<(u64, u64)>,
     pub wall_each: Vec<u64>,
     pub timeline: Timeline,
@@ -156,6 +176,8 @@ impl Aggregate {
         self.draft_w_sum += r.round_draft_w.iter().sum::<usize>();
         self.draft_w_calls += r.round_draft_w.len();
         self.dragged_rounds += r.dragged_rounds;
+        self.host_alloc_bytes += r.round_host_alloc_bytes.iter().sum::<u64>();
+        self.scratch_reuse_total += r.scratch_reuse_total;
         for (i, &(a, t)) in r.alpha.iter().enumerate() {
             self.alpha[i].0 += a;
             self.alpha[i].1 += t;
@@ -289,6 +311,22 @@ mod tests {
         assert_eq!(a.dragged_rounds, 6);
         assert_eq!(Aggregate::new().mean_draft_w(), 0.0);
         assert_eq!(GenRecord::new(1).mean_draft_w(), 0.0);
+    }
+
+    #[test]
+    fn host_alloc_accounting() {
+        let mut r = GenRecord::new(1);
+        r.round_host_alloc_bytes = vec![4096, 0, 0, 0];
+        r.scratch_reuse_total = 3;
+        assert_eq!(r.steady_host_alloc_bytes(), 0, "warm-up round excluded");
+        r.round_host_alloc_bytes.push(128);
+        assert_eq!(r.steady_host_alloc_bytes(), 128);
+        let mut a = Aggregate::new();
+        a.add(&r);
+        a.add(&r);
+        assert_eq!(a.host_alloc_bytes, 2 * (4096 + 128));
+        assert_eq!(a.scratch_reuse_total, 6);
+        assert_eq!(GenRecord::new(1).steady_host_alloc_bytes(), 0);
     }
 
     #[test]

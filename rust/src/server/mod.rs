@@ -14,8 +14,18 @@
 //! verify width (`"width_hint"` request field, falling back to the
 //! `"verify_width"` pin) and executed on the batched engine with the
 //! group's width cap, so a low-acceptance group never runs at a hot
-//! lane's width. Groups the batched engine cannot take (sampling, other
-//! methods, missing `_bs{b}` executables) fall back to the bs=1 path.
+//! lane's width. With `--batch N` alone (FCFS), an admitted multi-lane
+//! batch of compatible greedy EAGLE requests still executes on the
+//! batched engine — uncapped, at the max over lane fits — so the
+//! serve-time FCFS-vs-grouped A/B matches the engine-level
+//! `repro eval --exp widthsched` comparison. Groups the batched engine
+//! cannot take (sampling, other methods, mixed max_tokens/tree classes,
+//! missing `_bs{b}` executables) fall back to the bs=1 path. The worker
+//! owns one [`ScratchPool`] for its lifetime, so batched groups reuse
+//! warm per-lane round state across admissions (keyed by KV slot). The
+//! width-grouping cost model can be calibrated with `--cost-model
+//! path` (a JSON file from `repro bench --json`; see
+//! [`crate::coordinator::CostModel`]).
 
 pub mod http;
 
@@ -27,12 +37,14 @@ use std::sync::{Arc, Mutex};
 
 use crate::coordinator::request::{Method, Request, Response, TreeChoice};
 use crate::coordinator::{
-    queue::PushError, AdmissionPolicy, AdmittedGroup, BatchEagleEngine, RequestQueue, Scheduler,
+    queue::PushError, AdmissionPolicy, AdmittedGroup, BatchEagleEngine, CostModel, RequestQueue,
+    Scheduler,
 };
 use crate::eval::runner::{Runner, RunSpec};
 use crate::models::ModelBundle;
 use crate::spec::dyntree::{TreePolicy, WidthSelect};
 use crate::spec::engine::GenConfig;
+use crate::spec::scratch::ScratchPool;
 use crate::text::bpe::Bpe;
 use crate::util::json::Json;
 use http::{HttpRequest, HttpResponse};
@@ -64,6 +76,9 @@ pub struct ServeConfig {
     pub linger_ms: u64,
     /// Width-aware group admission (`--width-grouping`); FCFS otherwise.
     pub width_grouping: bool,
+    /// Optional dispatch-cost calibration file (`--cost-model`); the
+    /// default keeps `scheduler::DISPATCH_OVERHEAD`.
+    pub cost_model: Option<std::path::PathBuf>,
 }
 
 impl ServeConfig {
@@ -78,6 +93,7 @@ impl ServeConfig {
             max_batch: 1,
             linger_ms: 2,
             width_grouping: false,
+            cost_model: None,
         }
     }
 }
@@ -142,6 +158,7 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
         let default_width = cfg.default_width;
         let (max_batch, linger_ms) = (cfg.max_batch, cfg.linger_ms);
         let grouping = cfg.width_grouping;
+        let cost_model = cfg.cost_model.clone();
         std::thread::Builder::new().name("inference".into()).spawn(move || {
             let runner = Runner::new(&artifacts).expect("loading artifacts");
             let bpe = Bpe::load(runner.man.path(&runner.man.tokenizer).to_str().unwrap())
@@ -166,7 +183,29 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
             } else {
                 AdmissionPolicy::Fcfs
             };
-            let sched = Scheduler::new(max_batch, linger_ms).with_policy(policy);
+            let cost = match &cost_model {
+                Some(path) => match CostModel::load(path) {
+                    Ok(cm) => {
+                        eprintln!(
+                            "[server] cost model calibrated: dispatch overhead {} node units \
+                             (from {})",
+                            cm.dispatch_overhead,
+                            path.display()
+                        );
+                        cm
+                    }
+                    Err(e) => {
+                        eprintln!("[server] cost model load failed ({e}); using default");
+                        CostModel::default()
+                    }
+                },
+                None => CostModel::default(),
+            };
+            let sched =
+                Scheduler::new(max_batch, linger_ms).with_policy(policy).with_cost_model(cost);
+            // one warm scratch pool for the worker's lifetime: batched
+            // groups reuse per-lane round state across admissions
+            let mut pool = ScratchPool::new();
             loop {
                 let groups = sched.next_groups(&queue);
                 if groups.is_empty() {
@@ -175,7 +214,7 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
                 for group in groups {
                     run_group(
                         group, &runner, &bundle, &bpe, &c, &default_tree, default_width,
-                        &pending, &stats,
+                        &pending, &stats, &mut pool,
                     );
                 }
             }
@@ -207,8 +246,10 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
     Ok(())
 }
 
-/// Execute one admitted group: the batched engine with the group's
-/// width cap when it qualifies, the bs=1 path per request otherwise.
+/// Execute one admitted group: the batched engine when it qualifies —
+/// with the group's width cap under width-grouped admission, uncapped
+/// (max over lane fits) for a compatible FCFS batch — the bs=1 path per
+/// request otherwise.
 #[allow(clippy::too_many_arguments)]
 fn run_group(
     group: AdmittedGroup,
@@ -220,17 +261,25 @@ fn run_group(
     default_width: WidthSelect,
     pending: &PendingMap,
     stats: &ServerStats,
+    pool: &mut ScratchPool,
 ) {
     let reqs = &group.requests;
     let b = reqs.len();
-    // the batched engine can take the group iff it is a width-planned
-    // multi-lane group of batchable requests (`Request::width_batchable`,
-    // the same predicate the scheduler groups by), the server is not
-    // pinned to a fixed verify width (only the bs=1 path honors
-    // `--verify-width N`), and the bs{b} executables are lowered
-    let batchable = group.verify_cap.is_some()
-        && b >= 2
+    // the batched engine can take the group iff it is a multi-lane group
+    // of batchable requests (`Request::width_batchable`, the same
+    // predicate the scheduler groups by), the server is not pinned to a
+    // fixed verify width (only the bs=1 path honors `--verify-width N`),
+    // and the bs{b} executables are lowered. Width-planned groups arrive
+    // pre-classed by the scheduler; an FCFS admission may mix classes,
+    // so the batched FCFS baseline additionally requires one shared
+    // (max_tokens, tree) class — the lock-step engine runs every lane
+    // under one GenConfig.
+    let same_class = reqs
+        .windows(2)
+        .all(|p| p[0].max_tokens == p[1].max_tokens && p[0].tree == p[1].tree);
+    let batchable = b >= 2
         && default_width == WidthSelect::Auto
+        && same_class
         && reqs.iter().all(Request::width_batchable)
         && bundle.target.exes.has(&format!("prefill_slot_bs{b}"))
         && bundle.drafts.contains_key("eagle");
@@ -243,9 +292,12 @@ fn run_group(
         // the group's width cap only applies under the dynamic planner,
         // which shrinks each lane's node budget to fit it; a static tree
         // is a fixed shape that no narrow cap can hold, so a static
-        // group runs batched but uncapped (max over lane fits)
+        // group runs batched but uncapped (max over lane fits). FCFS
+        // groups carry no cap at all — the uncapped batched baseline.
         if policy.is_dynamic() {
-            engine = engine.with_verify_cap(group.verify_cap.expect("checked above"));
+            if let Some(cap) = group.verify_cap {
+                engine = engine.with_verify_cap(cap);
+            }
         }
         let gen = GenConfig {
             max_new: reqs[0].max_tokens,
@@ -253,7 +305,7 @@ fn run_group(
             seed: reqs[0].seed,
             eos: Some(bpe.eos()),
         };
-        match engine.generate(&prompts, &gen) {
+        match engine.generate_pooled(&prompts, &gen, pool) {
             Ok(recs) => {
                 stats.batched.fetch_add(b as u64, Ordering::Relaxed);
                 let lat_ms = t0.elapsed().as_secs_f64() * 1e3;

@@ -32,6 +32,9 @@ pub mod policy;
 pub mod widths;
 
 pub use controller::{ControllerConfig, SpecController};
-pub use planner::{expand_candidates, rerank, select_frontier, DynTreeParams};
+pub use planner::{
+    expand_candidates, expand_candidates_into, rerank, rerank_into, select_frontier,
+    select_frontier_into, DynTreeParams, RerankScratch,
+};
 pub use policy::{DynTreeConfig, TreePolicy};
 pub use widths::{plan_round_width, width_hint, WidthFamily, WidthSelect};

@@ -31,20 +31,35 @@ pub struct DynTreeParams {
 /// construction order; the result is returned in ascending node order so
 /// downstream slot assignment stays deterministic.
 pub fn select_frontier(tree: &DraftTree, candidates: &[usize], k: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    select_frontier_into(tree, candidates, k, &mut out);
+    out
+}
+
+/// [`select_frontier`] into a reused buffer (cleared first) — the
+/// hot-loop form used with [`crate::spec::scratch::RoundScratch`].
+pub fn select_frontier_into(
+    tree: &DraftTree,
+    candidates: &[usize],
+    k: usize,
+    out: &mut Vec<usize>,
+) {
+    out.clear();
+    out.extend_from_slice(candidates);
     if candidates.len() <= k {
-        return candidates.to_vec();
+        return;
     }
-    let mut ranked: Vec<usize> = candidates.to_vec();
-    ranked.sort_by(|&a, &b| {
+    // total order (score desc, index asc), so the allocation-free
+    // unstable sort is deterministic and equal to the stable one
+    out.sort_unstable_by(|&a, &b| {
         tree.nodes[b]
             .score
             .partial_cmp(&tree.nodes[a].score)
             .unwrap_or(std::cmp::Ordering::Equal)
             .then(a.cmp(&b))
     });
-    ranked.truncate(k);
-    ranked.sort_unstable();
-    ranked
+    out.truncate(k);
+    out.sort_unstable();
 }
 
 /// Score the top-`branch` children of an expanded node from its draft
@@ -56,71 +71,150 @@ pub fn expand_candidates(parent_score: f32, probs: &[f32], branch: usize) -> Vec
         .collect()
 }
 
+/// [`expand_candidates`] into reused buffers: `idx` is the vocab-sized
+/// top-k sort arena, `out` is cleared and filled with the scored pairs.
+/// Same selection and scoring as the allocating wrapper.
+pub fn expand_candidates_into(
+    parent_score: f32,
+    probs: &[f32],
+    branch: usize,
+    idx: &mut Vec<usize>,
+    out: &mut Vec<(u32, f32)>,
+) {
+    crate::spec::sampling::top_k_into(probs, branch, idx);
+    out.clear();
+    out.extend(idx.iter().map(|&i| (i as u32, parent_score + probs[i].max(1e-20).ln())));
+}
+
+/// Reusable working buffers for [`rerank_into`]: the score order, keep
+/// flags, index remap, and the kept ORIGINAL node indices (readable
+/// after the call). Lives in [`crate::spec::scratch::RoundScratch`] so
+/// the per-round rerank allocates nothing once warm.
+#[derive(Debug, Default)]
+pub struct RerankScratch {
+    order: Vec<usize>,
+    keep: Vec<bool>,
+    remap: Vec<usize>,
+    need: Vec<usize>,
+    /// Ascending original indices of the kept nodes (`kept[i]` is the
+    /// original index of pruned node `i`; `kept[0] == 0`).
+    pub kept: Vec<usize>,
+}
+
+impl RerankScratch {
+    /// Capacity-guarded pre-size (a no-op once warm — plain
+    /// `Vec::reserve` would over-allocate relative to stale lengths).
+    pub fn reserve(&mut self, nodes: usize) {
+        let want_need = nodes.min(64).max(8);
+        for v in [&mut self.order, &mut self.remap, &mut self.kept] {
+            if v.capacity() < nodes {
+                v.reserve(nodes - v.len());
+            }
+        }
+        if self.keep.capacity() < nodes {
+            self.keep.reserve(nodes - self.keep.len());
+        }
+        if self.need.capacity() < want_need {
+            self.need.reserve(want_need - self.need.len());
+        }
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        let idx = self.order.capacity()
+            + self.remap.capacity()
+            + self.need.capacity()
+            + self.kept.capacity();
+        idx * std::mem::size_of::<usize>() + self.keep.capacity()
+    }
+}
+
 /// Global rerank: keep the root plus the best `budget` nodes by
 /// cumulative score, ancestor-closed. Returns the pruned tree and the
 /// kept ORIGINAL node indices (ascending; `kept[i]` is the original
 /// index of pruned node `i`, so `kept[0] == 0`).
 ///
+/// Thin allocating wrapper over [`rerank_into`].
+pub fn rerank(tree: &DraftTree, budget: usize) -> (DraftTree, Vec<usize>) {
+    let mut out = DraftTree::default();
+    let mut rr = RerankScratch::default();
+    rerank_into(tree, budget, &mut out, &mut rr);
+    (out, rr.kept)
+}
+
+/// [`rerank`] into a reused output tree + working buffers; the engines
+/// swap `out` with the live tree when the candidate set exceeds the
+/// budget, so pruning allocates nothing in steady state. The kept
+/// original indices land in `rr.kept`.
+///
 /// With real cumulative log-probs a child never outscores its parent, so
 /// the kept set is simply the top-`budget` scores; the explicit
 /// ancestor-closure walk below also keeps the function total for
 /// arbitrary score assignments (the property tests feed it those).
-pub fn rerank(tree: &DraftTree, budget: usize) -> (DraftTree, Vec<usize>) {
+pub fn rerank_into(tree: &DraftTree, budget: usize, out: &mut DraftTree, rr: &mut RerankScratch) {
     let n = tree.len();
+    rr.kept.clear();
     if n == 0 || n - 1 <= budget {
-        return (tree.clone(), (0..n).collect());
+        out.nodes.clear();
+        out.nodes.extend(tree.nodes.iter().cloned());
+        rr.kept.extend(0..n);
+        return;
     }
-    let mut order: Vec<usize> = (1..n).collect();
-    order.sort_by(|&a, &b| {
+    rr.order.clear();
+    rr.order.extend(1..n);
+    // total order (score desc, index asc): unstable sort is exact and
+    // allocation-free (stable sort would heap-allocate a merge buffer
+    // every round, invisibly to the capacity-delta metric)
+    rr.order.sort_unstable_by(|&a, &b| {
         tree.nodes[b]
             .score
             .partial_cmp(&tree.nodes[a].score)
             .unwrap_or(std::cmp::Ordering::Equal)
             .then(a.cmp(&b))
     });
-    let mut keep = vec![false; n];
-    keep[0] = true;
+    rr.keep.clear();
+    rr.keep.resize(n, false);
+    rr.keep[0] = true;
     let mut kept = 0usize;
-    for &i in &order {
+    for oi in 0..rr.order.len() {
+        let i = rr.order[oi];
         if kept >= budget {
             break;
         }
-        if keep[i] {
+        if rr.keep[i] {
             continue;
         }
         // unkept ancestors (root excluded — always kept) plus the node itself
-        let mut need = Vec::new();
+        rr.need.clear();
         let mut cur = Some(i);
         while let Some(c) = cur {
-            if !keep[c] {
-                need.push(c);
+            if !rr.keep[c] {
+                rr.need.push(c);
             }
             cur = tree.nodes[c].parent;
         }
-        if kept + need.len() <= budget {
-            kept += need.len();
-            for &c in &need {
-                keep[c] = true;
+        if kept + rr.need.len() <= budget {
+            kept += rr.need.len();
+            for &c in &rr.need {
+                rr.keep[c] = true;
             }
         }
     }
     // Rebuild in original index order (parents always precede children).
-    let mut remap = vec![usize::MAX; n];
-    let mut kept_idx = Vec::with_capacity(kept + 1);
-    let mut out = DraftTree::with_root(tree.nodes[0].token);
-    remap[0] = 0;
-    kept_idx.push(0);
+    rr.remap.clear();
+    rr.remap.resize(n, usize::MAX);
+    out.reset(tree.nodes[0].token);
+    rr.remap[0] = 0;
+    rr.kept.push(0);
     for i in 1..n {
-        if !keep[i] {
+        if !rr.keep[i] {
             continue;
         }
         let p = tree.nodes[i].parent.expect("non-root node must have a parent");
-        let ni =
-            out.add(remap[p], tree.nodes[i].token, tree.nodes[i].score, tree.nodes[i].q.clone());
-        remap[i] = ni;
-        kept_idx.push(i);
+        let nd = &tree.nodes[i];
+        let ni = out.add(rr.remap[p], nd.token, nd.score, nd.q.clone());
+        rr.remap[i] = ni;
+        rr.kept.push(i);
     }
-    (out, kept_idx)
 }
 
 #[cfg(test)]

@@ -16,17 +16,27 @@
 //! `eagle` variant (the paper's method). Losslessness at T=0 is asserted
 //! against vanilla greedy in `rust/tests/integration.rs`; at T>0 the
 //! acceptance rules are distribution-preserving (prop tests).
+//!
+//! §Perf iteration 3 (zero-allocation round state): the round loop runs
+//! on a [`RoundScratch`] reserved once per generation — flat feature
+//! arena, logits slab, staging buffers, ancestor bitsets — so steady-
+//! state rounds perform no per-node heap allocation on the greedy path
+//! (`GenRecord::round_host_alloc_bytes` records the per-round scratch
+//! growth; 0 once warm). At T>0 the sampled-q distributions retained in
+//! tree nodes remain `Rc` allocations (the SpecInfer rule needs them to
+//! outlive the round).
 
 use anyhow::{bail, Result};
 use std::rc::Rc;
 use std::time::Instant;
 
 use super::dyntree::{
-    expand_candidates, plan_round_width, rerank, select_frontier, width_hint, DynTreeParams,
-    SpecController, TreePolicy, WidthFamily,
+    expand_candidates_into, plan_round_width, rerank_into, select_frontier_into, width_hint,
+    DynTreeParams, SpecController, TreePolicy, WidthFamily,
 };
-use super::sampling::{argmax, sample, softmax, top_k, tree_accept, TreeVerdict};
-use super::tree::{chain_extend_bias, fill_step_rows, DraftTree, TreeSpec};
+use super::sampling::{argmax, sample, softmax, softmax_into, top_k_into, tree_accept, TreeVerdict};
+use super::scratch::RoundScratch;
+use super::tree::{chain_extend_bias_to, fill_step_rows_into, DraftTree, TreeSpec};
 use crate::metrics::GenRecord;
 use crate::models::{EagleDraft, TargetModel};
 use crate::util::rng::Rng;
@@ -133,6 +143,23 @@ impl<'a> EagleEngine<'a> {
         self
     }
 
+    /// The largest draft tree any round of this engine can grow (the
+    /// scratch reservation ceiling): the static tree's node total, or
+    /// the dynamic planner's growth ceiling including the controller's
+    /// adaptation bounds.
+    fn max_tree_nodes(&self) -> usize {
+        match &self.policy {
+            TreePolicy::Static(spec) => spec.total_nodes(),
+            TreePolicy::Dynamic(dc) => {
+                let base = dc.params(self.verify_t, self.draft_w, self.accept_a);
+                let cc = dc.clamped_controller(self.draft_w, self.accept_a);
+                let depth = base.depth.max(cc.max_depth);
+                let fk = base.frontier_k.max(cc.max_frontier);
+                depth * fk * base.branch + 1
+            }
+        }
+    }
+
     /// Sample/argmax from target logits row.
     fn pick(&self, logits: &[f32], temperature: f32, rng: &mut Rng) -> u32 {
         if temperature <= 0.0 {
@@ -162,7 +189,8 @@ impl<'a> EagleEngine<'a> {
         let last_logits = tgt.row(&out.logits, p_win, 0, plen - 1, vocab);
         let root_tok = self.pick(last_logits, cfg.temperature, &mut rng);
         rec.tokens.push(root_tok);
-        let mut committed: Vec<u32> = prompt.to_vec();
+        let mut committed: Vec<u32> = Vec::with_capacity(prompt.len() + cfg.max_new + 2);
+        committed.extend_from_slice(prompt);
         committed.push(root_tok);
         let mut m = plen; // committed boundary: root at position m
 
@@ -212,21 +240,31 @@ impl<'a> EagleEngine<'a> {
             _ => None,
         };
 
-        // ---- decode rounds --------------------------------------------------
+        // ---- round state (S22): reserved once, reused every round ----------
         let t_reserve = self.verify_t.max(self.widths.max());
+        let w_reserve = self.draft_w.max(self.draft_widths.max());
+        let max_nodes = self.max_tree_nodes();
+        let mut scratch = RoundScratch::new(d, vocab);
+        scratch.reserve(d, vocab, s_tot, max_nodes, t_reserve, w_reserve);
+        let mut tree = DraftTree::default();
+        tree.nodes.reserve(max_nodes);
+
+        // ---- decode rounds --------------------------------------------------
         while rec.tokens.len() < cfg.max_new {
             if m + t_reserve + 1 >= s_tot {
                 break; // cache budget exhausted
             }
+            let fp0 = scratch.footprint() + tree.capacity_bytes();
             // 1. build the draft tree
             let th = Instant::now();
-            let mut tree = DraftTree::with_root(committed[m]);
+            tree.reset(committed[m]);
+            scratch.begin_round(&root_feat, &root_logits);
             rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
             match &self.policy {
                 TreePolicy::Static(spec) => {
                     self.grow_tree(
-                        &mut tree, spec, &root_feat, &root_logits, m, draft_len, &mut dcache,
-                        cfg, &mut rng, &mut rec,
+                        &mut tree, spec, m, draft_len, &mut dcache, cfg, &mut rng, &mut rec,
+                        &mut scratch,
                     )?;
                 }
                 TreePolicy::Dynamic(_) => {
@@ -241,13 +279,14 @@ impl<'a> EagleEngine<'a> {
                     let (_plan_t, params) =
                         plan_round_width(&self.widths, &params, width_hint(controller.as_ref()));
                     self.grow_tree_dynamic(
-                        &mut tree, &params, &root_feat, &root_logits, m, draft_len, &mut dcache,
-                        cfg, &mut rng, &mut rec,
+                        &mut tree, &params, m, draft_len, &mut dcache, cfg, &mut rng, &mut rec,
+                        &mut scratch,
                     )?;
                     let th = Instant::now();
                     if tree.len() - 1 > params.budget {
-                        let (pruned, _kept) = rerank(&tree, params.budget);
-                        tree = pruned;
+                        let s = &mut scratch;
+                        rerank_into(&tree, params.budget, &mut s.spare_tree, &mut s.rr);
+                        std::mem::swap(&mut tree, &mut s.spare_tree);
                     }
                     rec.drafted += tree.len() - 1;
                     rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
@@ -267,7 +306,21 @@ impl<'a> EagleEngine<'a> {
             }
             rec.round_verify_t.push(sel_t);
             let th = Instant::now();
-            let (tokens, pos, bias) = tree.verify_inputs(sel_t, m, s_tot);
+            scratch.vtokens.clear();
+            scratch.vtokens.resize(sel_t, 0);
+            scratch.vpos.clear();
+            scratch.vpos.resize(sel_t, 0);
+            scratch.vbias.clear();
+            scratch.vbias.resize(sel_t * s_tot, 0.0);
+            tree.verify_inputs_to(
+                sel_t,
+                m,
+                s_tot,
+                &mut scratch.vtokens,
+                &mut scratch.vpos,
+                &mut scratch.vbias,
+                &mut scratch.anc,
+            );
             rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
             let t0 = Instant::now();
             let vout = tgt.verify(
@@ -276,58 +329,70 @@ impl<'a> EagleEngine<'a> {
                 &[pending_old_m as i32],
                 &pending_idx,
                 &[pending_n],
-                &tokens,
-                &pos,
-                &bias,
+                &scratch.vtokens,
+                &scratch.vpos,
+                &scratch.vbias,
                 self.accept_a,
             )?;
             rec.timeline.verify_ns += t0.elapsed().as_nanos() as u64;
             rec.target_passes += 1;
 
             // 3. acceptance walk (snapshot alpha so the controller can
-            //    consume this round's per-depth increments)
+            //    consume this round's per-depth increments — delta
+            //    buffers reused, no per-round clone)
             let th = Instant::now();
-            let alpha_before = rec.alpha.clone();
-            let (path, bonus) = self.accept(&tree, &vout.logits, cfg, &mut rng, &mut rec);
+            scratch.alpha_before.clear();
+            scratch.alpha_before.extend_from_slice(&rec.alpha);
+            let bonus = self.accept(
+                &tree,
+                &vout.logits,
+                cfg,
+                &mut rng,
+                &mut rec,
+                &mut scratch.path,
+                &mut scratch.children,
+                &mut scratch.probs,
+            );
             if let Some(c) = controller.as_mut() {
-                let mut delta: Vec<(u64, u64)> = rec
-                    .alpha
-                    .iter()
-                    .zip(&alpha_before)
-                    .map(|(&(h, t), &(h0, t0))| (h - h0, t - t0))
-                    .collect();
+                scratch.alpha_delta.clear();
+                scratch.alpha_delta.extend(
+                    rec.alpha
+                        .iter()
+                        .zip(&scratch.alpha_before)
+                        .map(|(&(h, t), &(h0, t0))| (h - h0, t - t0)),
+                );
                 // the metrics layer buckets alpha only up to delta.len()
                 // depths; deeper positions (dynamic trees can exceed them)
                 // are synthesized from the accepted path so the controller
                 // is never blind to deep levels that never commit
                 let attempted = tree.nodes.iter().map(|n| n.depth).max().unwrap_or(0);
-                let accepted = path.len() - 1;
-                for dpt in delta.len()..attempted {
-                    delta.push((u64::from(dpt < accepted), 1));
+                let accepted = scratch.path.len() - 1;
+                for dpt in scratch.alpha_delta.len()..attempted {
+                    scratch.alpha_delta.push((u64::from(dpt < accepted), 1));
                 }
-                c.observe(&delta);
+                c.observe(&scratch.alpha_delta);
             }
             rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
 
             // 4. record acceptance; the compaction happens inside the NEXT
             //    verify call (fused commit)
-            let n_commit = path.len();
+            let n_commit = scratch.path.len();
             pending_old_m = m;
-            pending_idx = vec![0i32; self.accept_a];
-            for (j, &ni) in path.iter().enumerate() {
+            pending_idx.iter_mut().for_each(|x| *x = 0);
+            for (j, &ni) in scratch.path.iter().enumerate() {
                 pending_idx[j] = ni as i32;
             }
             pending_n = n_commit as i32;
 
             // 5. bookkeeping: emit accepted tokens + bonus
-            let round_tokens: Vec<u32> = path[1..]
-                .iter()
-                .map(|&ni| tree.nodes[ni].token)
-                .chain(std::iter::once(bonus))
-                .collect();
-            rec.round_accepts.push(round_tokens.len());
+            rec.round_accepts.push(n_commit);
             let mut hit_eos = false;
-            for &t in &round_tokens {
+            for k in 0..n_commit {
+                let t = if k + 1 < n_commit {
+                    tree.nodes[scratch.path[k + 1]].token
+                } else {
+                    bonus
+                };
                 committed.push(t);
                 rec.tokens.push(t);
                 if cfg.eos == Some(t) || rec.tokens.len() >= cfg.max_new {
@@ -337,6 +402,11 @@ impl<'a> EagleEngine<'a> {
             }
             let m_new = m + n_commit;
             if hit_eos || m_new + 2 >= s_tot {
+                let grew = (scratch.footprint() + tree.capacity_bytes()).saturating_sub(fp0);
+                rec.round_host_alloc_bytes.push(grew as u64);
+                if grew == 0 {
+                    rec.scratch_reuse_total += 1;
+                }
                 break;
             }
 
@@ -350,34 +420,54 @@ impl<'a> EagleEngine<'a> {
             // narrowest lowered step width that holds them
             let w = self.draft_widths.fit(n_pending);
             rec.round_draft_w.push(w);
-            let mut ef = vec![0f32; w * d];
-            let mut et = vec![0i32; w];
-            let mut ep = vec![0i32; w];
-            for (r, &ni) in path.iter().enumerate() {
+            scratch.sf.clear();
+            scratch.sf.resize(w * d, 0.0);
+            scratch.st.clear();
+            scratch.st.resize(w, 0);
+            scratch.sp.clear();
+            scratch.sp.resize(w, 0);
+            for (r, &ni) in scratch.path.iter().enumerate() {
                 // slot m + r holds (f_{m+r}, τ); feature = target feature at
                 // tree node `ni` (exact — computed during verification)
                 let f = tgt.row(&vout.feats, sel_t, 0, ni, d);
-                ef[r * d..(r + 1) * d].copy_from_slice(f);
+                scratch.sf[r * d..(r + 1) * d].copy_from_slice(f);
                 let slot_pos = m + r;
-                et[r] = match self.shift {
+                scratch.st[r] = match self.shift {
                     PairShift::Shifted => committed[slot_pos + 1] as i32,
                     PairShift::Unshifted => committed[slot_pos] as i32,
                 };
-                ep[r] = slot_pos as i32;
+                scratch.sp[r] = slot_pos as i32;
             }
             for r in n_pending..w {
-                ep[r] = (m + r) as i32; // padded rows (ignored)
+                scratch.sp[r] = (m + r) as i32; // padded rows (ignored)
             }
-            let bias = chain_extend_bias(w, s_tot, m, n_pending);
+            scratch.sbias.clear();
+            scratch.sbias.resize(w * s_tot, 0.0);
+            chain_extend_bias_to(w, s_tot, m, n_pending, &mut scratch.sbias);
             let t0 = Instant::now();
-            let eout = self.draft.step(w, &mut dcache, &[m as i32], &ef, &et, &ep, &bias)?;
+            let eout = self.draft.step(
+                w,
+                &mut dcache,
+                &[m as i32],
+                &scratch.sf,
+                &scratch.st,
+                &scratch.sp,
+                &scratch.sbias,
+            )?;
             rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64;
             rec.draft_passes += 1;
             let last = n_pending - 1;
-            root_feat = eout.feats[last * d..(last + 1) * d].to_vec();
-            root_logits = eout.logits[last * vocab..(last + 1) * vocab].to_vec();
+            root_feat.clear();
+            root_feat.extend_from_slice(&eout.feats[last * d..(last + 1) * d]);
+            root_logits.clear();
+            root_logits.extend_from_slice(&eout.logits[last * vocab..(last + 1) * vocab]);
             m = m_new;
             draft_len = m;
+            let grew = (scratch.footprint() + tree.capacity_bytes()).saturating_sub(fp0);
+            rec.round_host_alloc_bytes.push(grew as u64);
+            if grew == 0 {
+                rec.scratch_reuse_total += 1;
+            }
         }
 
         rec.wall_ns = t_all.elapsed().as_nanos() as u64;
@@ -385,82 +475,81 @@ impl<'a> EagleEngine<'a> {
     }
 
     /// Expand the draft tree level by level with STATIC per-level widths.
-    /// `root_feat`/`root_logits` are the extend outputs: f̂ at the root
-    /// position and dist of t_{m+1}.
+    /// The root's extend outputs (f̂ at the root position, dist of
+    /// t_{m+1}) are pre-seeded as node 0 of the scratch arena/slab by
+    /// [`RoundScratch::begin_round`].
     #[allow(clippy::too_many_arguments)]
     fn grow_tree(
         &self,
         tree: &mut DraftTree,
         spec: &TreeSpec,
-        root_feat: &[f32],
-        root_logits: &[f32],
         m: usize,
         draft_len: usize,
         dcache: &mut crate::models::target::KvCache,
         cfg: &GenConfig,
         rng: &mut Rng,
         rec: &mut GenRecord,
+        s: &mut RoundScratch,
     ) -> Result<()> {
         let d = self.target.d;
         let vocab = self.target.vocab;
         let s_tot = self.target.max_len;
-        let w = self.draft_w;
-
-        // per-node: predicted feature at the node's position - 1 pairing is
-        // handled via "the feature produced by the parent's step output".
-        // feats_at[node] = f̂ used when stepping that node.
-        let mut node_feat: Vec<Vec<f32>> = vec![root_feat.to_vec()]; // index by tree node
-        let mut node_logits: Vec<Option<Rc<Vec<f32>>>> =
-            vec![Some(Rc::new(root_logits.to_vec()))];
-        // scratch slot assigned to each stepped node (for ancestor masks)
-        let mut node_slot: Vec<Option<usize>> = vec![None]; // root pair lives in committed region
+        let w_cap = self.draft_w;
         let mut scratch_used = 0usize;
 
-        let mut frontier: Vec<usize> = vec![0]; // node indices to expand from
+        s.frontier.clear();
+        s.frontier.push(0); // node indices to expand from
         for (li, &width) in spec.level_widths.iter().enumerate() {
             // --- select candidates for this level --------------------------
             let th = Instant::now();
-            // (parent, token, score, q)
-            let mut cands: Vec<(usize, u32, f32, Option<Rc<Vec<f32>>>)> = Vec::new();
+            s.cands.clear();
             if cfg.temperature <= 0.0 {
-                for &p in &frontier {
-                    let q = node_logits[p].as_ref().unwrap();
-                    let probs = softmax(q, 1.0);
-                    for (tok, pr) in top_k(&probs, spec.branch) {
-                        cands.push((p, tok as u32, self.target_score(&tree.nodes[p], pr), None));
+                for &p in &s.frontier {
+                    let q = s.logits.get(p).expect("frontier node has logits");
+                    softmax_into(q, 1.0, &mut s.probs);
+                    top_k_into(&s.probs, spec.branch, &mut s.idx);
+                    for &ti in &s.idx {
+                        let score = self.target_score(&tree.nodes[p], s.probs[ti]);
+                        s.cands.push((p, ti as u32, score, None));
                     }
                 }
-                cands.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
-                cands.truncate(width);
+                // allocation-free unstable sort; (parent, token) tiebreak
+                // makes the order total, so exact-score ties stay
+                // deterministic across std versions
+                s.cands.sort_unstable_by(|a, b| {
+                    b.2.partial_cmp(&a.2).unwrap().then(a.0.cmp(&b.0)).then(a.1.cmp(&b.1))
+                });
+                s.cands.truncate(width);
             } else {
                 // T>0: sample children i.i.d. from q (SpecInfer rule); the
                 // tree shape is fixed by distributing `width` over frontier.
-                let per = (width / frontier.len().max(1)).max(1);
-                for &p in &frontier {
-                    let q = Rc::new(softmax(node_logits[p].as_ref().unwrap(), cfg.temperature));
+                let per = (width / s.frontier.len().max(1)).max(1);
+                for &p in &s.frontier {
+                    let logits = s.logits.get(p).expect("frontier node has logits");
+                    let q = Rc::new(softmax(logits, cfg.temperature));
                     for _ in 0..per {
-                        if cands.len() >= width {
+                        if s.cands.len() >= width {
                             break;
                         }
                         let tok = sample(&q, rng) as u32;
-                        cands.push((p, tok, 0.0, Some(q.clone())));
+                        s.cands.push((p, tok, 0.0, Some(q.clone())));
                     }
                 }
             }
             rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
-            if cands.is_empty() {
+            if s.cands.is_empty() {
                 break;
             }
             // --- create nodes ----------------------------------------------
-            let mut new_nodes = Vec::with_capacity(cands.len());
-            for (p, tok, score, q) in cands {
+            s.new_nodes.clear();
+            rec.drafted += s.cands.len();
+            for (p, tok, score, q) in s.cands.drain(..) {
                 let ni = tree.add(p, tok, score, q);
-                node_feat.push(Vec::new());
-                node_logits.push(None);
-                node_slot.push(None);
-                new_nodes.push(ni);
+                s.feat.push_empty();
+                s.logits.push_empty();
+                s.node_slot.push(None);
+                s.new_nodes.push(ni);
             }
-            rec.drafted += new_nodes.len();
 
             // last level: leaves need no draft step
             if li + 1 == spec.level_widths.len() {
@@ -469,21 +558,26 @@ impl<'a> EagleEngine<'a> {
 
             // --- draft-step the new nodes, padded to the smallest lowered
             //     width that fits the chunk (§Perf iteration 2) --------------
-            for chunk in new_nodes.chunks(w) {
+            for chunk in s.new_nodes.chunks(w_cap) {
                 let w = self.draft_widths.fit(chunk.len());
                 let th = Instant::now();
                 let write_base = draft_len + scratch_used;
                 if write_base + w >= s_tot {
                     return Ok(()); // scratch exhausted; verify what we have
                 }
-                let mut sf = vec![0f32; w * d];
-                let mut st = vec![0i32; w];
-                let mut sp = vec![0i32; w];
-                let bias = fill_step_rows(
+                s.sf.clear();
+                s.sf.resize(w * d, 0.0);
+                s.st.clear();
+                s.st.resize(w, 0);
+                s.sp.clear();
+                s.sp.resize(w, 0);
+                s.sbias.clear();
+                s.sbias.resize(w * s_tot, 0.0);
+                fill_step_rows_into(
                     tree,
                     chunk,
-                    &node_feat,
-                    &mut node_slot,
+                    &s.feat,
+                    &mut s.node_slot,
                     self.shift == PairShift::Shifted,
                     d,
                     s_tot,
@@ -491,9 +585,10 @@ impl<'a> EagleEngine<'a> {
                     draft_len,
                     write_base,
                     w,
-                    &mut sf,
-                    &mut st,
-                    &mut sp,
+                    &mut s.sf,
+                    &mut s.st,
+                    &mut s.sp,
+                    &mut s.sbias,
                 );
                 rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
                 let t0 = Instant::now();
@@ -501,22 +596,21 @@ impl<'a> EagleEngine<'a> {
                     w,
                     dcache,
                     &[write_base as i32],
-                    &sf,
-                    &st,
-                    &sp,
-                    &bias,
+                    &s.sf,
+                    &s.st,
+                    &s.sp,
+                    &s.sbias,
                 )?;
                 rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64;
                 rec.draft_passes += 1;
                 rec.round_draft_w.push(w);
                 scratch_used += w;
                 for (r, &ni) in chunk.iter().enumerate() {
-                    node_feat[ni] = sout.feats[r * d..(r + 1) * d].to_vec();
-                    node_logits[ni] =
-                        Some(Rc::new(sout.logits[r * vocab..(r + 1) * vocab].to_vec()));
+                    s.feat.set(ni, &sout.feats[r * d..(r + 1) * d]);
+                    s.logits.set(ni, &sout.logits[r * vocab..(r + 1) * vocab]);
                 }
             }
-            frontier = new_nodes;
+            std::mem::swap(&mut s.frontier, &mut s.new_nodes);
         }
         Ok(())
     }
@@ -532,24 +626,18 @@ impl<'a> EagleEngine<'a> {
         &self,
         tree: &mut DraftTree,
         params: &DynTreeParams,
-        root_feat: &[f32],
-        root_logits: &[f32],
         m: usize,
         draft_len: usize,
         dcache: &mut crate::models::target::KvCache,
         cfg: &GenConfig,
         rng: &mut Rng,
         rec: &mut GenRecord,
+        s: &mut RoundScratch,
     ) -> Result<()> {
         let d = self.target.d;
         let vocab = self.target.vocab;
         let s_tot = self.target.max_len;
         let w_cap = self.draft_w;
-
-        let mut node_feat: Vec<Vec<f32>> = vec![root_feat.to_vec()];
-        let mut node_logits: Vec<Option<Rc<Vec<f32>>>> =
-            vec![Some(Rc::new(root_logits.to_vec()))];
-        let mut node_slot: Vec<Option<usize>> = vec![None];
         let mut scratch_used = 0usize;
 
         // Losslessness at T>0: the SpecInfer acceptance rule is exact only
@@ -562,74 +650,83 @@ impl<'a> EagleEngine<'a> {
         let cap = if cfg.temperature > 0.0 { params.budget } else { usize::MAX };
 
         // nodes whose draft step has run (children logits available)
-        let mut expandable: Vec<usize> = vec![0];
+        s.expandable.clear();
+        s.expandable.push(0);
         for lvl in 0..params.depth {
             // --- choose the frontier and score its children ----------------
             let th = Instant::now();
-            let frontier = select_frontier(tree, &expandable, params.frontier_k);
-            let mut cands: Vec<(usize, u32, f32, Option<Rc<Vec<f32>>>)> = Vec::new();
+            select_frontier_into(tree, &s.expandable, params.frontier_k, &mut s.frontier);
+            s.cands.clear();
             if cfg.temperature <= 0.0 {
-                for &p in &frontier {
-                    let q = node_logits[p].as_ref().expect("frontier node has logits");
-                    let probs = softmax(q, 1.0);
-                    for (tok, score) in
-                        expand_candidates(tree.nodes[p].score, &probs, params.branch)
-                    {
-                        cands.push((p, tok, score, None));
+                for &p in &s.frontier {
+                    let q = s.logits.get(p).expect("frontier node has logits");
+                    softmax_into(q, 1.0, &mut s.probs);
+                    expand_candidates_into(
+                        tree.nodes[p].score,
+                        &s.probs,
+                        params.branch,
+                        &mut s.idx,
+                        &mut s.pairs,
+                    );
+                    for &(tok, score) in &s.pairs {
+                        s.cands.push((p, tok, score, None));
                     }
                 }
             } else {
                 // T>0: children sampled i.i.d. from q (SpecInfer rule); the
                 // cumulative ln q(tok) stands in as the confidence score.
-                for &p in &frontier {
-                    let q = Rc::new(softmax(
-                        node_logits[p].as_ref().expect("frontier node has logits"),
-                        cfg.temperature,
-                    ));
+                for &p in &s.frontier {
+                    let logits = s.logits.get(p).expect("frontier node has logits");
+                    let q = Rc::new(softmax(logits, cfg.temperature));
                     for _ in 0..params.branch {
                         let tok = sample(&q, rng);
                         let score = tree.nodes[p].score + q[tok].max(1e-20).ln();
-                        cands.push((p, tok as u32, score, Some(q.clone())));
+                        s.cands.push((p, tok as u32, score, Some(q.clone())));
                     }
                 }
             }
             // budget cap (T>0): truncation by generation order, decided
             // before looking at the dropped candidates' values
             let room = cap.saturating_sub(tree.len() - 1);
-            cands.truncate(room);
+            s.cands.truncate(room);
             rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
-            if cands.is_empty() {
+            if s.cands.is_empty() {
                 break;
             }
-            let mut new_nodes = Vec::with_capacity(cands.len());
-            for (p, tok, score, q) in cands {
+            s.new_nodes.clear();
+            for (p, tok, score, q) in s.cands.drain(..) {
                 let ni = tree.add(p, tok, score, q);
-                node_feat.push(Vec::new());
-                node_logits.push(None);
-                node_slot.push(None);
-                new_nodes.push(ni);
+                s.feat.push_empty();
+                s.logits.push_empty();
+                s.node_slot.push(None);
+                s.new_nodes.push(ni);
             }
             if lvl + 1 == params.depth {
                 break; // leaves need no draft step
             }
 
             // --- draft-step only the most confident new nodes --------------
-            let step_set = select_frontier(tree, &new_nodes, params.frontier_k);
-            for chunk in step_set.chunks(w_cap) {
+            select_frontier_into(tree, &s.new_nodes, params.frontier_k, &mut s.expandable);
+            for chunk in s.expandable.chunks(w_cap) {
                 let w = self.draft_widths.fit(chunk.len());
                 let th = Instant::now();
                 let write_base = draft_len + scratch_used;
                 if write_base + w >= s_tot {
                     return Ok(()); // scratch exhausted; rerank what we have
                 }
-                let mut sf = vec![0f32; w * d];
-                let mut st = vec![0i32; w];
-                let mut sp = vec![0i32; w];
-                let bias = fill_step_rows(
+                s.sf.clear();
+                s.sf.resize(w * d, 0.0);
+                s.st.clear();
+                s.st.resize(w, 0);
+                s.sp.clear();
+                s.sp.resize(w, 0);
+                s.sbias.clear();
+                s.sbias.resize(w * s_tot, 0.0);
+                fill_step_rows_into(
                     tree,
                     chunk,
-                    &node_feat,
-                    &mut node_slot,
+                    &s.feat,
+                    &mut s.node_slot,
                     self.shift == PairShift::Shifted,
                     d,
                     s_tot,
@@ -637,24 +734,31 @@ impl<'a> EagleEngine<'a> {
                     draft_len,
                     write_base,
                     w,
-                    &mut sf,
-                    &mut st,
-                    &mut sp,
+                    &mut s.sf,
+                    &mut s.st,
+                    &mut s.sp,
+                    &mut s.sbias,
                 );
                 rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
                 let t0 = Instant::now();
-                let sout = self.draft.step(w, dcache, &[write_base as i32], &sf, &st, &sp, &bias)?;
+                let sout = self.draft.step(
+                    w,
+                    dcache,
+                    &[write_base as i32],
+                    &s.sf,
+                    &s.st,
+                    &s.sp,
+                    &s.sbias,
+                )?;
                 rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64;
                 rec.draft_passes += 1;
                 rec.round_draft_w.push(w);
                 scratch_used += w;
                 for (r, &ni) in chunk.iter().enumerate() {
-                    node_feat[ni] = sout.feats[r * d..(r + 1) * d].to_vec();
-                    node_logits[ni] =
-                        Some(Rc::new(sout.logits[r * vocab..(r + 1) * vocab].to_vec()));
+                    s.feat.set(ni, &sout.feats[r * d..(r + 1) * d]);
+                    s.logits.set(ni, &sout.logits[r * vocab..(r + 1) * vocab]);
                 }
             }
-            expandable = step_set;
         }
         Ok(())
     }
@@ -663,8 +767,11 @@ impl<'a> EagleEngine<'a> {
         parent.score + prob.max(1e-20).ln()
     }
 
-    /// Acceptance walk over verified logits. Returns (accepted path node
-    /// indices incl. root, bonus token). Chain-position stats feed n-α.
+    /// Acceptance walk over verified logits. Fills `path` with the
+    /// accepted node indices (incl. root) and returns the bonus token;
+    /// `children`/`probs` are reused walk buffers from the round scratch.
+    /// Chain-position stats feed n-α.
+    #[allow(clippy::too_many_arguments)]
     fn accept(
         &self,
         tree: &DraftTree,
@@ -672,14 +779,18 @@ impl<'a> EagleEngine<'a> {
         cfg: &GenConfig,
         rng: &mut Rng,
         rec: &mut GenRecord,
-    ) -> (Vec<usize>, u32) {
+        path: &mut Vec<usize>,
+        children: &mut Vec<usize>,
+        probs: &mut Vec<f32>,
+    ) -> u32 {
         let vocab = self.target.vocab;
         let row = |i: usize| &vlogits[i * vocab..(i + 1) * vocab];
-        let mut path = vec![0usize];
+        path.clear();
+        path.push(0);
         let mut cur = 0usize;
         loop {
             let depth = tree.nodes[cur].depth; // n-α bucket = depth of child - 1
-            let children = tree.children(cur);
+            tree.children_into(cur, children);
             if cfg.temperature <= 0.0 {
                 let want = argmax(row(cur));
                 let next = children.iter().copied().find(|&c| tree.nodes[c].token as usize == want);
@@ -696,12 +807,12 @@ impl<'a> EagleEngine<'a> {
                         path.push(c);
                         cur = c;
                     }
-                    None => return (path, want as u32),
+                    None => return want as u32,
                 }
             } else {
-                let p = softmax(row(cur), cfg.temperature);
+                softmax_into(row(cur), cfg.temperature, probs);
                 if children.is_empty() {
-                    return (path, sample(&p, rng) as u32);
+                    return sample(probs, rng) as u32;
                 }
                 let toks: Vec<usize> =
                     children.iter().map(|&c| tree.nodes[c].token as usize).collect();
@@ -714,7 +825,7 @@ impl<'a> EagleEngine<'a> {
                 if depth < nbuckets {
                     rec.alpha[depth.min(nbuckets - 1)].1 += 1;
                 }
-                match tree_accept(&p, &qrefs, &toks, rng) {
+                match tree_accept(probs, &qrefs, &toks, rng) {
                     TreeVerdict::AcceptChild(ci) => {
                         if depth < nbuckets {
                             rec.alpha[depth.min(nbuckets - 1)].0 += 1;
@@ -722,7 +833,7 @@ impl<'a> EagleEngine<'a> {
                         path.push(children[ci]);
                         cur = children[ci];
                     }
-                    TreeVerdict::Residual(t) => return (path, t as u32),
+                    TreeVerdict::Residual(t) => return t as u32,
                 }
             }
         }

@@ -1,7 +1,9 @@
 //! The paper's contribution, coordinated: draft trees, lossless sampling
-//! rules, the EAGLE engine, and the dynamic draft-tree planner.
+//! rules, the EAGLE engine, the dynamic draft-tree planner, and the
+//! zero-allocation round-state scratch the hot loop runs on.
 
 pub mod dyntree;
 pub mod engine;
 pub mod sampling;
+pub mod scratch;
 pub mod tree;

@@ -9,16 +9,25 @@ use crate::util::rng::Rng;
 /// Numerically stable softmax with temperature. `t == 0` is handled by
 /// callers via [`argmax`]; this function requires `t > 0`.
 pub fn softmax(logits: &[f32], t: f32) -> Vec<f32> {
+    let mut out = Vec::new();
+    softmax_into(logits, t, &mut out);
+    out
+}
+
+/// [`softmax`] into a reused output buffer (cleared first) — the
+/// hot-loop form; identical float operations, so results are
+/// bit-identical to the allocating wrapper.
+pub fn softmax_into(logits: &[f32], t: f32, out: &mut Vec<f32>) {
     debug_assert!(t > 0.0);
     let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let mut out: Vec<f32> = logits.iter().map(|&l| ((l - m) / t).exp()).collect();
+    out.clear();
+    out.extend(logits.iter().map(|&l| ((l - m) / t).exp()));
     let s: f32 = out.iter().sum();
     if s > 0.0 {
-        for x in &mut out {
+        for x in out.iter_mut() {
             *x /= s;
         }
     }
-    out
 }
 
 pub fn argmax(xs: &[f32]) -> usize {
@@ -38,10 +47,20 @@ pub fn sample(probs: &[f32], rng: &mut Rng) -> usize {
 
 /// Top-k (index, prob) pairs, descending.
 pub fn top_k(probs: &[f32], k: usize) -> Vec<(usize, f32)> {
-    let mut idx: Vec<usize> = (0..probs.len()).collect();
+    let mut idx = Vec::new();
+    top_k_into(probs, k, &mut idx);
+    idx.into_iter().map(|i| (i, probs[i])).collect()
+}
+
+/// Top-k indices by probability (descending) into a reused buffer — the
+/// hot-loop form of [`top_k`]: the vocab-sized sort arena is retained
+/// across calls, and callers read the probabilities back as `probs[i]`.
+/// Same comparator as [`top_k`], so the selection is identical.
+pub fn top_k_into(probs: &[f32], k: usize, idx: &mut Vec<usize>) {
+    idx.clear();
+    idx.extend(0..probs.len());
     idx.sort_unstable_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
     idx.truncate(k);
-    idx.into_iter().map(|i| (i, probs[i])).collect()
 }
 
 /// Outcome of verifying one draft position.

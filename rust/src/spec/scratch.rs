@@ -1,0 +1,509 @@
+//! Zero-allocation round state (S22): flat arenas + reusable scratch for
+//! the draft/verify hot loop.
+//!
+//! EAGLE's speedup depends on every speculation round being cheap next to
+//! a target forward pass, but the original host loop re-allocated its
+//! bookkeeping every round: per-node feature vectors (`Vec<Vec<f32>>`),
+//! logits behind `Rc<Vec<f32>>` clones, and fresh bias/mask/staging
+//! buffers for every verify and draft-step call. This module replaces all
+//! of that with state that is allocated once and reused via
+//! `clear()`-style resets:
+//!
+//! * [`FeatArena`] — one contiguous `Vec<f32>` of per-node features,
+//!   indexed `node * d`. Replaces `node_feat: Vec<Vec<f32>>`.
+//! * [`LogitsSlab`] — one contiguous `Vec<f32>` of per-node logits rows
+//!   with a filled bitmap. Replaces `node_logits: Vec<Option<Rc<Vec<f32>>>>`
+//!   (greedy path) and `Vec<Vec<f32>>` (batched path).
+//! * [`RoundScratch`] — everything else a round touches: candidate
+//!   buffers, top-k index buffers, softmax output, step-row staging
+//!   (`sf`/`st`/`sp`/`sbias`), verify staging (`vtokens`/`vpos`/`vbias`),
+//!   ancestor bitsets as `u64` words, the acceptance-walk path/children
+//!   buffers, rerank scratch, and a spare [`DraftTree`] for in-place
+//!   rerank swaps.
+//! * [`ScratchPool`] — the batched engine's state: one [`RoundScratch`]
+//!   per lane **keyed by KV slot**, plus [`BatchScratch`] holding the
+//!   `[B, ..]` staging buffers. The pool outlives engine invocations
+//!   (the server worker owns one), so width-grouped batches reuse lane
+//!   buffers across admissions.
+//!
+//! Steady-state guarantee: after warm-up (the `reserve` call at engine
+//! start plus at most the first round), the round loop performs no
+//! per-node heap allocation — every buffer's capacity is retained across
+//! `clear()`/`resize()` resets. The engines measure this directly:
+//! [`RoundScratch::footprint`] / [`ScratchPool::footprint`] sum the
+//! capacity bytes of every buffer, and the per-round delta is recorded as
+//! `GenRecord::round_host_alloc_bytes` (0 in steady state) with
+//! `GenRecord::scratch_reuse_total` counting fully-reused rounds.
+//!
+//! Exception: at T>0 the sampled-q distributions (`TreeNode::q`) must
+//! outlive the round inside the tree for the SpecInfer acceptance rule,
+//! so they remain `Rc<Vec<f32>>` allocations; the zero-allocation claim
+//! is for the greedy (T=0) hot path — the Table-7 serving setting.
+//!
+//! Output equivalence against the allocating reference implementations
+//! (`spec::tree::reference`, `verify_inputs`, `fill_step_rows`) is
+//! property-tested in `rust/tests/prop_scratch.rs`, including dirty-reuse
+//! across consecutive rounds; `host/round_scratch` vs `host/round_ref`
+//! in `rust/benches/hot_path.rs` tracks the speedup.
+
+use std::rc::Rc;
+
+use super::dyntree::{DynTreeParams, RerankScratch};
+use super::tree::DraftTree;
+
+/// One candidate considered during tree growth:
+/// `(parent node, token, cumulative score, sampled-from q at T>0)`.
+pub type Cand = (usize, u32, f32, Option<Rc<Vec<f32>>>);
+
+fn cap_bytes<T>(v: &Vec<T>) -> usize {
+    v.capacity() * std::mem::size_of::<T>()
+}
+
+/// Grow `v`'s capacity to at least `want` elements without touching its
+/// contents. Unlike bare `Vec::reserve(want)` — which reserves RELATIVE
+/// to the current length and so over-allocates (roughly doubling) when a
+/// warm buffer still holds a previous round's contents — this is a no-op
+/// once the buffer has ever reached `want` capacity.
+pub(crate) fn ensure_cap<T>(v: &mut Vec<T>, want: usize) {
+    if v.capacity() < want {
+        v.reserve(want - v.len());
+    }
+}
+
+/// Flat per-node feature storage: row `i` is `data[i*d .. (i+1)*d]`.
+/// A row may be pushed empty (zeroed) and filled later via [`FeatArena::set`]
+/// once the node's draft step has run.
+#[derive(Debug, Default)]
+pub struct FeatArena {
+    data: Vec<f32>,
+    d: usize,
+    n: usize,
+}
+
+impl FeatArena {
+    pub fn new(d: usize) -> FeatArena {
+        FeatArena { data: Vec::new(), d, n: 0 }
+    }
+
+    /// Drop all rows, keeping capacity (and allowing a dimension change).
+    pub fn clear(&mut self, d: usize) {
+        self.data.clear();
+        self.d = d;
+        self.n = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Append one node's feature row; returns its node index.
+    pub fn push(&mut self, row: &[f32]) -> usize {
+        debug_assert_eq!(row.len(), self.d);
+        self.data.extend_from_slice(row);
+        self.n += 1;
+        self.n - 1
+    }
+
+    /// Append a zeroed placeholder row (node created, step not yet run).
+    pub fn push_empty(&mut self) -> usize {
+        self.data.resize(self.data.len() + self.d, 0.0);
+        self.n += 1;
+        self.n - 1
+    }
+
+    /// Fill node `i`'s row (after its draft step produced the feature).
+    pub fn set(&mut self, i: usize, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.d);
+        self.data[i * self.d..(i + 1) * self.d].copy_from_slice(row);
+    }
+
+    pub fn get(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn reserve_nodes(&mut self, nodes: usize) {
+        ensure_cap(&mut self.data, nodes * self.d);
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        cap_bytes(&self.data)
+    }
+}
+
+/// Flat per-node logits storage with a filled bitmap — row `i` is
+/// `data[i*vocab .. (i+1)*vocab]`, readable only once [`LogitsSlab::set`]
+/// has run for it (mirrors the `Option<Rc<Vec<f32>>>` / empty-`Vec`
+/// sentinels it replaces).
+#[derive(Debug, Default)]
+pub struct LogitsSlab {
+    data: Vec<f32>,
+    filled: Vec<bool>,
+    vocab: usize,
+}
+
+impl LogitsSlab {
+    pub fn new(vocab: usize) -> LogitsSlab {
+        LogitsSlab { data: Vec::new(), filled: Vec::new(), vocab }
+    }
+
+    pub fn clear(&mut self, vocab: usize) {
+        self.data.clear();
+        self.filled.clear();
+        self.vocab = vocab;
+    }
+
+    pub fn len(&self) -> usize {
+        self.filled.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.filled.is_empty()
+    }
+
+    /// Append one node's logits row; returns its node index.
+    pub fn push(&mut self, row: &[f32]) -> usize {
+        debug_assert_eq!(row.len(), self.vocab);
+        self.data.extend_from_slice(row);
+        self.filled.push(true);
+        self.filled.len() - 1
+    }
+
+    /// Append an unfilled placeholder row.
+    pub fn push_empty(&mut self) -> usize {
+        self.data.resize(self.data.len() + self.vocab, 0.0);
+        self.filled.push(false);
+        self.filled.len() - 1
+    }
+
+    pub fn set(&mut self, i: usize, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.vocab);
+        self.data[i * self.vocab..(i + 1) * self.vocab].copy_from_slice(row);
+        self.filled[i] = true;
+    }
+
+    /// Node `i`'s logits, `None` until its draft step has run.
+    pub fn get(&self, i: usize) -> Option<&[f32]> {
+        if *self.filled.get(i)? {
+            Some(&self.data[i * self.vocab..(i + 1) * self.vocab])
+        } else {
+            None
+        }
+    }
+
+    pub fn reserve_nodes(&mut self, nodes: usize) {
+        ensure_cap(&mut self.data, nodes * self.vocab);
+        ensure_cap(&mut self.filled, nodes);
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        cap_bytes(&self.data) + self.filled.capacity()
+    }
+}
+
+/// Per-round reusable state for ONE lane (the bs=1 engine owns exactly
+/// one; the batched engine draws one per lane from a [`ScratchPool`]).
+/// Reset per round with [`RoundScratch::begin_round`]; all capacity is
+/// retained, so steady-state rounds never touch the allocator.
+#[derive(Debug, Default)]
+pub struct RoundScratch {
+    /// Per-node predicted features (parent-step outputs).
+    pub feat: FeatArena,
+    /// Per-node draft logits (dist of the node's successor token).
+    pub logits: LogitsSlab,
+    /// Scratch KV slot assigned to each stepped node.
+    pub node_slot: Vec<Option<usize>>,
+    // -- growth working sets ------------------------------------------------
+    pub frontier: Vec<usize>,
+    pub new_nodes: Vec<usize>,
+    pub expandable: Vec<usize>,
+    pub cands: Vec<Cand>,
+    /// top-k index buffer (vocab-sized sort arena).
+    pub idx: Vec<usize>,
+    /// (token, score) pairs from candidate expansion.
+    pub pairs: Vec<(u32, f32)>,
+    /// softmax output row.
+    pub probs: Vec<f32>,
+    // -- per-call staging (bs=1 engine; the batched engine stages in
+    //    `BatchScratch` instead) -------------------------------------------
+    pub sf: Vec<f32>,
+    pub st: Vec<i32>,
+    pub sp: Vec<i32>,
+    pub sbias: Vec<f32>,
+    pub vtokens: Vec<i32>,
+    pub vpos: Vec<i32>,
+    pub vbias: Vec<f32>,
+    /// Ancestor-closure bitset (`u64` words over node indices).
+    pub anc: Vec<u64>,
+    // -- acceptance walk ----------------------------------------------------
+    pub path: Vec<usize>,
+    pub children: Vec<usize>,
+    pub alpha_before: Vec<(u64, u64)>,
+    pub alpha_delta: Vec<(u64, u64)>,
+    // -- rerank -------------------------------------------------------------
+    pub rr: RerankScratch,
+    /// Rerank output buffer, swapped with the live tree when pruning.
+    pub spare_tree: DraftTree,
+}
+
+impl RoundScratch {
+    pub fn new(d: usize, vocab: usize) -> RoundScratch {
+        RoundScratch {
+            feat: FeatArena::new(d),
+            logits: LogitsSlab::new(vocab),
+            ..Default::default()
+        }
+    }
+
+    /// Pre-size every buffer so steady-state rounds never allocate:
+    /// `max_nodes` is the growth ceiling (static tree total, or the
+    /// dynamic `depth * frontier_k * branch + 1` / controller ceiling),
+    /// `max_t` the widest verify width, `max_w` the widest draft step,
+    /// and `s` the cache length (bias rows are `s` wide).
+    pub fn reserve(
+        &mut self,
+        d: usize,
+        vocab: usize,
+        s: usize,
+        max_nodes: usize,
+        max_t: usize,
+        max_w: usize,
+    ) {
+        self.feat.clear(d);
+        self.feat.reserve_nodes(max_nodes);
+        self.logits.clear(vocab);
+        self.logits.reserve_nodes(max_nodes);
+        ensure_cap(&mut self.node_slot, max_nodes);
+        ensure_cap(&mut self.frontier, max_nodes);
+        ensure_cap(&mut self.new_nodes, max_nodes);
+        ensure_cap(&mut self.expandable, max_nodes);
+        ensure_cap(&mut self.cands, max_nodes);
+        ensure_cap(&mut self.idx, vocab);
+        ensure_cap(&mut self.pairs, vocab.min(max_nodes + 8));
+        ensure_cap(&mut self.probs, vocab);
+        ensure_cap(&mut self.sf, max_w * d);
+        ensure_cap(&mut self.st, max_w);
+        ensure_cap(&mut self.sp, max_w);
+        ensure_cap(&mut self.sbias, max_w * s);
+        ensure_cap(&mut self.vtokens, max_t);
+        ensure_cap(&mut self.vpos, max_t);
+        ensure_cap(&mut self.vbias, max_t * s);
+        ensure_cap(&mut self.anc, max_nodes.div_ceil(64).max(1));
+        ensure_cap(&mut self.path, max_nodes.min(64).max(8));
+        ensure_cap(&mut self.children, max_nodes);
+        ensure_cap(&mut self.alpha_before, 8);
+        ensure_cap(&mut self.alpha_delta, 64);
+        self.rr.reserve(max_nodes);
+        ensure_cap(&mut self.spare_tree.nodes, max_nodes);
+    }
+
+    /// Reset the node-indexed state for a fresh round, seeding node 0
+    /// (the tree root) with the extend-step outputs. Growth working sets
+    /// are cleared; staging buffers are resized by their call sites.
+    pub fn begin_round(&mut self, root_feat: &[f32], root_logits: &[f32]) {
+        self.feat.clear(root_feat.len());
+        self.logits.clear(root_logits.len());
+        self.node_slot.clear();
+        self.feat.push(root_feat);
+        self.logits.push(root_logits);
+        self.node_slot.push(None);
+        self.frontier.clear();
+        self.new_nodes.clear();
+        self.expandable.clear();
+        self.cands.clear();
+    }
+
+    /// Total capacity bytes held — the engine records the per-round delta
+    /// of this as `round_host_alloc_bytes` (0 once warm).
+    pub fn footprint(&self) -> usize {
+        self.feat.capacity_bytes()
+            + self.logits.capacity_bytes()
+            + cap_bytes(&self.node_slot)
+            + cap_bytes(&self.frontier)
+            + cap_bytes(&self.new_nodes)
+            + cap_bytes(&self.expandable)
+            + cap_bytes(&self.cands)
+            + cap_bytes(&self.idx)
+            + cap_bytes(&self.pairs)
+            + cap_bytes(&self.probs)
+            + cap_bytes(&self.sf)
+            + cap_bytes(&self.st)
+            + cap_bytes(&self.sp)
+            + cap_bytes(&self.sbias)
+            + cap_bytes(&self.vtokens)
+            + cap_bytes(&self.vpos)
+            + cap_bytes(&self.vbias)
+            + cap_bytes(&self.anc)
+            + cap_bytes(&self.path)
+            + cap_bytes(&self.children)
+            + cap_bytes(&self.alpha_before)
+            + cap_bytes(&self.alpha_delta)
+            + self.rr.capacity_bytes()
+            + self.spare_tree.capacity_bytes()
+    }
+}
+
+/// Batch-level staging buffers for the lock-step engine: the `[B, ..]`
+/// marshalling blocks for verify and draft-step/extend calls, reused
+/// across rounds and admissions (extend and step share `sf`/`st`/`sp`/
+/// `sbias` — they never overlap in time).
+#[derive(Debug, Default)]
+pub struct BatchScratch {
+    pub vtokens: Vec<i32>,
+    pub vpos: Vec<i32>,
+    pub vbias: Vec<f32>,
+    pub sf: Vec<f32>,
+    pub st: Vec<i32>,
+    pub sp: Vec<i32>,
+    pub sbias: Vec<f32>,
+    pub wb: Vec<i32>,
+    pub anc: Vec<u64>,
+    /// Per-lane draft-cache scratch slots consumed this round.
+    pub used: Vec<usize>,
+    /// Lanes live at round start (alloc-metric attribution).
+    pub live: Vec<bool>,
+    /// Per-lane pre-planned dynamic params for this round.
+    pub lane_params: Vec<DynTreeParams>,
+}
+
+impl BatchScratch {
+    /// Pre-size the `[B, ..]` staging blocks for `b` lanes at the widest
+    /// verify width `max_t` and draft-step width `max_w` the engine can
+    /// dispatch, so steady-state rounds never grow them — under the
+    /// dynamic planner the per-round widths climb with the controllers'
+    /// EWMAs, and without this the first wider round would reallocate.
+    pub fn reserve(&mut self, b: usize, d: usize, s: usize, max_t: usize, max_w: usize) {
+        ensure_cap(&mut self.vtokens, b * max_t);
+        ensure_cap(&mut self.vpos, b * max_t);
+        ensure_cap(&mut self.vbias, b * max_t * s);
+        ensure_cap(&mut self.sf, b * max_w * d);
+        ensure_cap(&mut self.st, b * max_w);
+        ensure_cap(&mut self.sp, b * max_w);
+        ensure_cap(&mut self.sbias, b * max_w * s);
+        ensure_cap(&mut self.wb, b);
+        ensure_cap(&mut self.anc, max_t.div_ceil(64).max(1));
+        ensure_cap(&mut self.used, b);
+        ensure_cap(&mut self.live, b);
+        ensure_cap(&mut self.lane_params, b);
+    }
+
+    pub fn footprint(&self) -> usize {
+        cap_bytes(&self.vtokens)
+            + cap_bytes(&self.vpos)
+            + cap_bytes(&self.vbias)
+            + cap_bytes(&self.sf)
+            + cap_bytes(&self.st)
+            + cap_bytes(&self.sp)
+            + cap_bytes(&self.sbias)
+            + cap_bytes(&self.wb)
+            + cap_bytes(&self.anc)
+            + cap_bytes(&self.used)
+            + self.live.capacity()
+            + cap_bytes(&self.lane_params)
+    }
+}
+
+/// Reusable scratch for the batched engine: one [`RoundScratch`] per
+/// lane, keyed by KV slot (lane index), plus the batch staging buffers.
+/// Owned by the caller — the server worker keeps one pool across
+/// admissions, so a width-grouped sub-batch landing on the same KV slots
+/// reuses the previous group's warm buffers.
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    pub batch: BatchScratch,
+    pub lanes: Vec<RoundScratch>,
+}
+
+impl ScratchPool {
+    pub fn new() -> ScratchPool {
+        ScratchPool::default()
+    }
+
+    /// Ensure lanes `0..b` exist (growing the pool on first use of a
+    /// larger batch; existing lanes keep their warm buffers).
+    pub fn ensure_lanes(&mut self, b: usize, d: usize, vocab: usize) {
+        while self.lanes.len() < b {
+            self.lanes.push(RoundScratch::new(d, vocab));
+        }
+    }
+
+    pub fn footprint(&self) -> usize {
+        self.batch.footprint() + self.lanes.iter().map(RoundScratch::footprint).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feat_arena_roundtrip_and_reuse() {
+        let mut a = FeatArena::new(3);
+        let i0 = a.push(&[1.0, 2.0, 3.0]);
+        let i1 = a.push_empty();
+        assert_eq!((i0, i1), (0, 1));
+        assert_eq!(a.get(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(a.get(1), &[0.0, 0.0, 0.0]);
+        a.set(1, &[4.0, 5.0, 6.0]);
+        assert_eq!(a.get(1), &[4.0, 5.0, 6.0]);
+        let cap = a.capacity_bytes();
+        a.clear(3);
+        assert_eq!(a.len(), 0);
+        assert_eq!(a.capacity_bytes(), cap, "clear keeps capacity");
+        a.push(&[7.0, 8.0, 9.0]);
+        assert_eq!(a.get(0), &[7.0, 8.0, 9.0], "no stale data after reuse");
+    }
+
+    #[test]
+    fn logits_slab_filled_semantics() {
+        let mut s = LogitsSlab::new(2);
+        s.push(&[0.5, 0.5]);
+        let i = s.push_empty();
+        assert!(s.get(0).is_some());
+        assert!(s.get(i).is_none(), "unfilled row reads as None");
+        assert!(s.get(7).is_none(), "out of range reads as None");
+        s.set(i, &[0.1, 0.9]);
+        assert_eq!(s.get(i), Some(&[0.1f32, 0.9][..]));
+        s.clear(2);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn round_scratch_footprint_stable_after_reserve() {
+        let mut s = RoundScratch::new(4, 16);
+        s.reserve(4, 16, 64, 27, 32, 8);
+        let fp = s.footprint();
+        for round in 0..5 {
+            let root_f = vec![round as f32; 4];
+            let root_l = vec![0.1f32; 16];
+            s.begin_round(&root_f, &root_l);
+            for _ in 0..26 {
+                s.feat.push_empty();
+                s.logits.push_empty();
+                s.node_slot.push(None);
+            }
+            s.vtokens.clear();
+            s.vtokens.resize(32, 0);
+            s.vbias.clear();
+            s.vbias.resize(32 * 64, 0.0);
+            assert_eq!(s.footprint(), fp, "round {round} grew the scratch");
+        }
+    }
+
+    #[test]
+    fn pool_lanes_grow_on_demand_and_persist() {
+        let mut p = ScratchPool::new();
+        p.ensure_lanes(2, 4, 8);
+        assert_eq!(p.lanes.len(), 2);
+        p.lanes[1].feat.clear(4);
+        p.lanes[1].feat.push(&[1.0; 4]);
+        p.ensure_lanes(4, 4, 8);
+        assert_eq!(p.lanes.len(), 4);
+        assert_eq!(p.lanes[1].feat.get(0), &[1.0; 4], "existing lanes keep state");
+        p.ensure_lanes(2, 4, 8);
+        assert_eq!(p.lanes.len(), 4, "pool never shrinks");
+    }
+}

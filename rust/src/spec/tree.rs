@@ -4,8 +4,17 @@
 //! closures, the additive attention biases fed to the verify and
 //! draft-step executables, and the accepted-path extraction. All
 //! invariants here are property-tested (`rust/tests/prop_tree.rs`).
+//!
+//! Hot-path construction writes into caller-provided buffers (the `_to`
+//! / `_into` variants, fed by [`crate::spec::scratch::RoundScratch`]) so
+//! the round loop stays allocation-free in steady state; the thin
+//! allocating wrappers remain the public convenience API, and the
+//! [`reference`] module keeps the original allocating implementations as
+//! the oracle the property tests compare against
+//! (`rust/tests/prop_scratch.rs`).
 
 use crate::models::NEG;
+use crate::spec::scratch::FeatArena;
 
 /// Static tree shape: how many nodes are kept per level and how many
 /// children are considered per expanded node. EAGLE's default draft tree
@@ -68,6 +77,19 @@ impl DraftTree {
         }
     }
 
+    /// Reset to a fresh root-only tree, keeping the node buffer's
+    /// capacity (the per-round reuse path — no allocation once warm).
+    pub fn reset(&mut self, token: u32) {
+        self.nodes.clear();
+        self.nodes.push(TreeNode { token, parent: None, depth: 0, score: 0.0, q: None });
+    }
+
+    /// Capacity bytes held by the node buffer (feeds the engines'
+    /// `round_host_alloc_bytes` accounting).
+    pub fn capacity_bytes(&self) -> usize {
+        self.nodes.capacity() * std::mem::size_of::<TreeNode>()
+    }
+
     pub fn add(
         &mut self,
         parent: usize,
@@ -89,9 +111,15 @@ impl DraftTree {
     }
 
     pub fn children(&self, i: usize) -> Vec<usize> {
-        (0..self.nodes.len())
-            .filter(|&j| self.nodes[j].parent == Some(i))
-            .collect()
+        let mut out = Vec::new();
+        self.children_into(i, &mut out);
+        out
+    }
+
+    /// [`DraftTree::children`] into a reused buffer (cleared first).
+    pub fn children_into(&self, i: usize, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend((0..self.nodes.len()).filter(|&j| self.nodes[j].parent == Some(i)));
     }
 
     /// Ancestor-or-self closure as a bitmask over node indices.
@@ -103,6 +131,19 @@ impl DraftTree {
             cur = self.nodes[c].parent;
         }
         mask
+    }
+
+    /// Ancestor-or-self closure as `u64` bitset words (bit `j` of word
+    /// `j / 64` set iff node `j` is in the closure). O(depth) to build,
+    /// O(n/64) to scan — the hot-path form of [`DraftTree::ancestor_mask`].
+    pub fn ancestor_bits_into(&self, i: usize, words: &mut Vec<u64>) {
+        words.clear();
+        words.resize(self.nodes.len().div_ceil(64), 0);
+        let mut cur = Some(i);
+        while let Some(c) = cur {
+            words[c / 64] |= 1u64 << (c % 64);
+            cur = self.nodes[c].parent;
+        }
     }
 
     /// Root-to-node path (inclusive).
@@ -121,75 +162,173 @@ impl DraftTree {
     /// Tree node i sits at cache slot `cache_len + i` and RoPE position
     /// `cache_len + depth(i)`; it attends the committed prefix plus its
     /// ancestor closure. Padding rows self-attend only (outputs ignored).
+    ///
+    /// Thin allocating wrapper over [`DraftTree::verify_inputs_to`]; the
+    /// original implementation survives as [`reference::verify_inputs_ref`]
+    /// for the equivalence property tests.
     pub fn verify_inputs(
         &self,
         t_pad: usize,
         cache_len: usize,
         s: usize,
     ) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+        let mut tokens = vec![0i32; t_pad];
+        let mut pos = vec![0i32; t_pad];
+        let mut bias = vec![0f32; t_pad * s];
+        let mut anc = Vec::new();
+        self.verify_inputs_to(t_pad, cache_len, s, &mut tokens, &mut pos, &mut bias, &mut anc);
+        (tokens, pos, bias)
+    }
+
+    /// [`DraftTree::verify_inputs`] into caller-provided exact-size
+    /// slices (`tokens`/`pos` of `t_pad`, `bias` of `t_pad * s`) plus a
+    /// reused ancestor-bitset buffer. Every cell of every row is written,
+    /// so stale buffer contents never leak; the batched engine points the
+    /// slices at per-lane blocks of its `[B, t, ..]` staging buffers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn verify_inputs_to(
+        &self,
+        t_pad: usize,
+        cache_len: usize,
+        s: usize,
+        tokens: &mut [i32],
+        pos: &mut [i32],
+        bias: &mut [f32],
+        anc: &mut Vec<u64>,
+    ) {
         let n = self.nodes.len();
         assert!(n <= t_pad, "tree of {n} nodes exceeds verify width {t_pad}");
         assert!(cache_len + t_pad < s, "tree region overflows cache");
-        let mut tokens = vec![0i32; t_pad];
-        let mut pos = vec![0i32; t_pad];
-        let mut bias = vec![NEG; t_pad * s];
+        assert!(tokens.len() == t_pad && pos.len() == t_pad && bias.len() == t_pad * s);
         for i in 0..t_pad {
+            let row = &mut bias[i * s..(i + 1) * s];
             if i < n {
                 tokens[i] = self.nodes[i].token as i32;
                 pos[i] = (cache_len + self.nodes[i].depth) as i32;
-                let row = &mut bias[i * s..(i + 1) * s];
-                for cell in row.iter_mut().take(cache_len) {
-                    *cell = 0.0;
-                }
-                let anc = self.ancestor_mask(i);
-                for (j, &a) in anc.iter().enumerate() {
-                    if a {
+                row[..cache_len].fill(0.0);
+                row[cache_len..].fill(NEG);
+                self.ancestor_bits_into(i, anc);
+                for (wi, &word) in anc.iter().enumerate() {
+                    let mut w = word;
+                    while w != 0 {
+                        let j = wi * 64 + w.trailing_zeros() as usize;
                         row[cache_len + j] = 0.0;
+                        w &= w - 1;
                     }
                 }
             } else {
+                tokens[i] = 0;
                 pos[i] = (cache_len + 1) as i32;
-                bias[i * s + cache_len + i] = 0.0; // self only, avoids NaN rows
+                row.fill(NEG);
+                row[cache_len + i] = 0.0; // self only, avoids NaN rows
             }
         }
-        (tokens, pos, bias)
     }
 
     /// Greedy acceptance walk: at each node take the child whose token is
     /// the target argmax; stop when none matches. Returns (path node
     /// indices incl. root, per-depth (hit, tried) chain stats).
     pub fn greedy_walk(&self, argmax_at: impl Fn(usize) -> usize) -> Vec<usize> {
-        let mut path = vec![0usize];
+        let mut path = Vec::new();
+        self.greedy_walk_into(argmax_at, &mut path);
+        path
+    }
+
+    /// [`DraftTree::greedy_walk`] into a reused path buffer (cleared
+    /// first) — no child-list or path allocation in steady state.
+    pub fn greedy_walk_into(&self, argmax_at: impl Fn(usize) -> usize, path: &mut Vec<usize>) {
+        path.clear();
+        path.push(0);
         let mut cur = 0usize;
         loop {
             let want = argmax_at(cur);
-            let next = self
-                .children(cur)
-                .into_iter()
-                .find(|&c| self.nodes[c].token as usize == want);
+            let next = (0..self.nodes.len()).find(|&c| {
+                self.nodes[c].parent == Some(cur) && self.nodes[c].token as usize == want
+            });
             match next {
                 Some(c) => {
                     path.push(c);
                     cur = c;
                 }
-                None => return path,
+                None => return,
             }
         }
     }
 }
 
 /// Fill one lane's draft-step rows for a chunk of freshly added tree
-/// nodes: feature pairing (parent's step output), token pairing
-/// (shifted: the node's own token; unshifted: the parent's), pair-slot
-/// positions, scratch-slot assignment into `node_slot`, and the
-/// ancestor-closure attention bias. Returns the lane's `w * s` bias
-/// block. Rows beyond the chunk are padded in place (position `m`,
-/// self-attending bias).
+/// nodes, writing the bias directly into a caller-provided `w * s`
+/// block: feature pairing (parent's step output from the [`FeatArena`]),
+/// token pairing (shifted: the node's own token; unshifted: the
+/// parent's), pair-slot positions, scratch-slot assignment into
+/// `node_slot`, and the ancestor-closure attention bias. Rows beyond the
+/// chunk are padded in place (position `m`, self-attending bias). Every
+/// cell of `bias` is written, so dirty reuse is safe.
 ///
 /// This is the single row-marshalling path shared by
 /// `EagleEngine::grow_tree{,_dynamic}` and
 /// `BatchEagleEngine::grow_{static,dynamic}_batch` — the batched callers
-/// pass per-lane sub-slices of their `[B, w, ..]` buffers.
+/// pass per-lane sub-slices of their `[B, w, ..]` buffers. The
+/// allocating [`fill_step_rows`] is kept as the reference implementation
+/// the property tests compare against.
+#[allow(clippy::too_many_arguments)]
+pub fn fill_step_rows_into(
+    tree: &DraftTree,
+    chunk: &[usize],
+    feat: &FeatArena,
+    node_slot: &mut [Option<usize>],
+    shifted: bool,
+    d: usize,
+    s: usize,
+    m: usize,
+    chain_len: usize,
+    write_base: usize,
+    w: usize,
+    feats: &mut [f32],
+    toks: &mut [i32],
+    pos: &mut [i32],
+    bias: &mut [f32],
+) {
+    debug_assert!(chunk.len() <= w);
+    debug_assert!(feats.len() >= w * d && toks.len() >= w && pos.len() >= w);
+    debug_assert!(bias.len() >= w * s);
+    for (r, &ni) in chunk.iter().enumerate() {
+        let parent = tree.nodes[ni].parent.expect("stepped node must have a parent");
+        // feature pairing: the parent's step output (see engine module doc)
+        feats[r * d..(r + 1) * d].copy_from_slice(feat.get(parent));
+        toks[r] =
+            if shifted { tree.nodes[ni].token as i32 } else { tree.nodes[parent].token as i32 };
+        // pair slot position: node position - 1 = m + depth - 1
+        pos[r] = (m + tree.nodes[ni].depth - 1) as i32;
+        node_slot[ni] = Some(write_base + r);
+        // bias row: committed prefix + ancestors' scratch slots + self
+        // (the root pair is in the committed region, so it has no slot)
+        let row = &mut bias[r * s..(r + 1) * s];
+        row[..chain_len].fill(0.0);
+        row[chain_len..].fill(NEG);
+        let mut cur = Some(parent);
+        while let Some(c) = cur {
+            if let Some(slot) = node_slot[c] {
+                row[slot] = 0.0;
+            }
+            cur = tree.nodes[c].parent;
+        }
+        row[write_base + r] = 0.0; // self
+    }
+    for r in chunk.len()..w {
+        feats[r * d..(r + 1) * d].fill(0.0);
+        toks[r] = 0;
+        pos[r] = m as i32;
+        let row = &mut bias[r * s..(r + 1) * s];
+        row.fill(NEG);
+        row[write_base + r] = 0.0; // self only
+    }
+}
+
+/// Reference (allocating) form of [`fill_step_rows_into`]: same row
+/// marshalling, but the bias block is freshly allocated and returned and
+/// node features arrive as `Vec<Vec<f32>>`. Retained as the oracle for
+/// the arena-path property tests (`rust/tests/prop_scratch.rs`).
 #[allow(clippy::too_many_arguments)]
 pub fn fill_step_rows(
     tree: &DraftTree,
@@ -267,16 +406,81 @@ pub fn draft_step_bias(
 
 /// Chain-extension bias: rows r=0..n over pairs written at
 /// [write_base, write_base+n); row r attends [0, write_base + r].
+/// Thin allocating wrapper over [`chain_extend_bias_to`].
 pub fn chain_extend_bias(w: usize, s: usize, write_base: usize, n: usize) -> Vec<f32> {
-    let mut bias = vec![NEG; w * s];
+    let mut bias = vec![0f32; w * s];
+    chain_extend_bias_to(w, s, write_base, n, &mut bias);
+    bias
+}
+
+/// [`chain_extend_bias`] into a caller-provided `w * s` block (every
+/// cell written, so dirty reuse is safe); the batched engine points this
+/// at per-lane sub-slices of its extend staging buffer.
+pub fn chain_extend_bias_to(w: usize, s: usize, write_base: usize, n: usize, bias: &mut [f32]) {
+    debug_assert!(bias.len() >= w * s);
     for r in 0..w {
         let row = &mut bias[r * s..(r + 1) * s];
         let upto = if r < n { write_base + r } else { write_base + r.min(n.saturating_sub(1)) };
-        for cell in row.iter_mut().take(upto + 1) {
-            *cell = 0.0;
-        }
+        let end = (upto + 1).min(s);
+        row[..end].fill(0.0);
+        row[end..].fill(NEG);
     }
-    bias
+}
+
+/// Original allocating implementations, kept verbatim as the oracle the
+/// zero-allocation paths are property-tested against
+/// (`rust/tests/prop_scratch.rs`). Not used by the engines.
+pub mod reference {
+    use super::{DraftTree, NEG};
+
+    /// Original [`DraftTree::verify_inputs`] (bool-mask ancestor walk,
+    /// fresh buffers every call).
+    pub fn verify_inputs_ref(
+        tree: &DraftTree,
+        t_pad: usize,
+        cache_len: usize,
+        s: usize,
+    ) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+        let n = tree.nodes.len();
+        assert!(n <= t_pad, "tree of {n} nodes exceeds verify width {t_pad}");
+        assert!(cache_len + t_pad < s, "tree region overflows cache");
+        let mut tokens = vec![0i32; t_pad];
+        let mut pos = vec![0i32; t_pad];
+        let mut bias = vec![NEG; t_pad * s];
+        for i in 0..t_pad {
+            if i < n {
+                tokens[i] = tree.nodes[i].token as i32;
+                pos[i] = (cache_len + tree.nodes[i].depth) as i32;
+                let row = &mut bias[i * s..(i + 1) * s];
+                for cell in row.iter_mut().take(cache_len) {
+                    *cell = 0.0;
+                }
+                let anc = tree.ancestor_mask(i);
+                for (j, &a) in anc.iter().enumerate() {
+                    if a {
+                        row[cache_len + j] = 0.0;
+                    }
+                }
+            } else {
+                pos[i] = (cache_len + 1) as i32;
+                bias[i * s + cache_len + i] = 0.0; // self only, avoids NaN rows
+            }
+        }
+        (tokens, pos, bias)
+    }
+
+    /// Original [`super::chain_extend_bias`].
+    pub fn chain_extend_bias_ref(w: usize, s: usize, write_base: usize, n: usize) -> Vec<f32> {
+        let mut bias = vec![NEG; w * s];
+        for r in 0..w {
+            let row = &mut bias[r * s..(r + 1) * s];
+            let upto = if r < n { write_base + r } else { write_base + r.min(n.saturating_sub(1)) };
+            for cell in row.iter_mut().take(upto + 1) {
+                *cell = 0.0;
+            }
+        }
+        bias
+    }
 }
 
 #[cfg(test)]

@@ -223,6 +223,87 @@ fn width_grouped_execution_is_lossless() {
 }
 
 #[test]
+fn round_state_is_allocation_free_after_warmup() {
+    require_artifacts!();
+    let (runner, bpe) = setup();
+    let bundle =
+        ModelBundle::load(&runner.rt, &runner.man, "toy-s", &["eagle"], false, false).unwrap();
+    let wl = Workload::load(&runner.man, &bpe, "mtbench", runner.man.constants.prefill_p).unwrap();
+    let cfg = GenConfig { max_new: 32, temperature: 0.0, seed: 3, eos: None };
+    let p = &wl.prompts[0];
+    // bs=1, static and dynamic trees: the scratch is reserved up front,
+    // so every round (including the first) should reuse it fully
+    for spec in [
+        RunSpec::default(),
+        RunSpec { tree: TreePolicy::Dynamic(DynTreeConfig::default()), ..Default::default() },
+    ] {
+        let rec = runner.run_one(&bundle, &p.ids, &spec, &cfg).unwrap();
+        assert!(!rec.round_host_alloc_bytes.is_empty(), "alloc metric must be recorded");
+        assert_eq!(
+            rec.steady_host_alloc_bytes(),
+            0,
+            "steady-state rounds allocated ({:?} tree): {:?}",
+            spec.tree.name(),
+            rec.round_host_alloc_bytes
+        );
+        assert!(
+            rec.scratch_reuse_total + 1 >= rec.round_host_alloc_bytes.len() as u64,
+            "at most the warm-up round may allocate"
+        );
+    }
+    // batched engine: pool-wide delta recorded per lane, 0 once warm
+    let prompts: Vec<Vec<u32>> = wl.prompts.iter().take(2).map(|p| p.ids.clone()).collect();
+    let be = eagle_serve::coordinator::BatchEagleEngine::new(
+        &bundle.target, &bundle.drafts["eagle"], &runner.man.constants,
+    );
+    for rec in be.generate(&prompts, &cfg).unwrap() {
+        assert_eq!(
+            rec.steady_host_alloc_bytes(),
+            0,
+            "batched steady-state rounds allocated: {:?}",
+            rec.round_host_alloc_bytes
+        );
+    }
+}
+
+#[test]
+fn batched_lane_scratch_pool_reuse_across_admissions_is_clean() {
+    require_artifacts!();
+    let (runner, bpe) = setup();
+    let bundle =
+        ModelBundle::load(&runner.rt, &runner.man, "toy-s", &["eagle"], false, false).unwrap();
+    let wl = Workload::load(&runner.man, &bpe, "mtbench", runner.man.constants.prefill_p).unwrap();
+    let c = &runner.man.constants;
+    let cfg = GenConfig { max_new: 20, temperature: 0.0, seed: 7, eos: None };
+    let a: Vec<Vec<u32>> = wl.prompts.iter().take(2).map(|p| p.ids.clone()).collect();
+    let b: Vec<Vec<u32>> = wl.prompts.iter().skip(2).take(2).map(|p| p.ids.clone()).collect();
+    let be = eagle_serve::coordinator::BatchEagleEngine::new(
+        &bundle.target, &bundle.drafts["eagle"], c,
+    );
+    // fresh-pool references for both admissions
+    let ref_a = be.generate(&a, &cfg).unwrap();
+    let ref_b = be.generate(&b, &cfg).unwrap();
+    // one pool across admissions A -> B -> A: lane scratch reuse must
+    // not leak state between admissions (bit-identical outputs)
+    let mut pool = eagle_serve::spec::scratch::ScratchPool::new();
+    let got_a = be.generate_pooled(&a, &cfg, &mut pool).unwrap();
+    let got_b = be.generate_pooled(&b, &cfg, &mut pool).unwrap();
+    let again_a = be.generate_pooled(&a, &cfg, &mut pool).unwrap();
+    for li in 0..2 {
+        assert_eq!(got_a[li].tokens, ref_a[li].tokens, "admission A lane {li} diverged");
+        assert_eq!(got_b[li].tokens, ref_b[li].tokens, "admission B lane {li} leaked state");
+        assert_eq!(again_a[li].tokens, ref_a[li].tokens, "admission A replay diverged");
+        // the pool is warm after admission A: later admissions must not
+        // allocate host round state at all
+        assert!(
+            got_b[li].round_host_alloc_bytes.iter().all(|&x| x == 0),
+            "warm-pool admission allocated: {:?}",
+            got_b[li].round_host_alloc_bytes
+        );
+    }
+}
+
+#[test]
 fn moe_and_quant_targets_generate() {
     require_artifacts!();
     let (runner, bpe) = setup();

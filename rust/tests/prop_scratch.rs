@@ -1,0 +1,291 @@
+//! Property tests for the zero-allocation round state (S22): the
+//! arena/scratch hot paths must be BIT-IDENTICAL to the allocating
+//! reference implementations — including under dirty reuse, where one
+//! set of buffers serves many consecutive "rounds" without ever being
+//! freed — and steady-state reuse must not grow the scratch footprint.
+
+use eagle_serve::eval::bench::{sim_round_ref, sim_round_scratch, sim_scratch};
+use eagle_serve::spec::dyntree::{
+    expand_candidates, expand_candidates_into, rerank, rerank_into, select_frontier,
+    select_frontier_into, RerankScratch,
+};
+use eagle_serve::spec::sampling::{softmax, softmax_into, top_k, top_k_into};
+use eagle_serve::spec::scratch::{FeatArena, LogitsSlab, RoundScratch};
+use eagle_serve::spec::tree::{
+    chain_extend_bias, chain_extend_bias_to, fill_step_rows, fill_step_rows_into, reference,
+    DraftTree,
+};
+use eagle_serve::util::prop::{check, random_dist};
+use eagle_serve::util::rng::Rng;
+
+fn random_tree(rng: &mut Rng, max_nodes: usize) -> DraftTree {
+    let mut t = DraftTree::with_root(rng.below(100) as u32);
+    let extra = 1 + rng.below(max_nodes.max(2) - 1);
+    for _ in 0..extra {
+        let parent = rng.below(t.len());
+        t.add(parent, rng.below(100) as u32, -rng.f32(), None);
+    }
+    t
+}
+
+#[test]
+fn prop_verify_inputs_to_matches_reference_under_dirty_reuse() {
+    // ONE buffer set across all cases: stale contents from the previous
+    // (differently-shaped) case must never leak into the next result
+    let mut tokens = Vec::new();
+    let mut pos = Vec::new();
+    let mut bias = Vec::new();
+    let mut anc = Vec::new();
+    check("verify_inputs_to == reference", 60, |rng, _| {
+        let t = random_tree(rng, 24);
+        let t_pad = t.len() + rng.below(8);
+        let cache_len = 1 + rng.below(12);
+        let s = cache_len + t_pad + 1 + rng.below(16);
+        let (rt, rp, rb) = reference::verify_inputs_ref(&t, t_pad, cache_len, s);
+        tokens.clear();
+        tokens.resize(t_pad, i32::MIN); // poison: every cell must be written
+        pos.clear();
+        pos.resize(t_pad, i32::MIN);
+        bias.clear();
+        bias.resize(t_pad * s, f32::NAN);
+        t.verify_inputs_to(t_pad, cache_len, s, &mut tokens, &mut pos, &mut bias, &mut anc);
+        assert_eq!(tokens, rt);
+        assert_eq!(pos, rp);
+        assert_eq!(bias, rb, "bias rows diverged (t_pad {t_pad}, cache {cache_len}, s {s})");
+        // the thin allocating wrapper agrees too
+        let (wt, wp, wb) = t.verify_inputs(t_pad, cache_len, s);
+        assert_eq!((wt, wp, wb), (rt, rp, rb));
+    });
+}
+
+#[test]
+fn prop_ancestor_bits_match_bool_mask() {
+    let mut words = Vec::new();
+    check("ancestor bits == mask", 60, |rng, _| {
+        let t = random_tree(rng, 80);
+        for i in 0..t.len() {
+            let mask = t.ancestor_mask(i);
+            t.ancestor_bits_into(i, &mut words);
+            assert_eq!(words.len(), t.len().div_ceil(64));
+            for (j, &m) in mask.iter().enumerate() {
+                let bit = (words[j / 64] >> (j % 64)) & 1 == 1;
+                assert_eq!(bit, m, "node {i}, bit {j}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_children_into_matches_allocating_children() {
+    let mut buf = vec![99usize; 7]; // dirty
+    check("children_into == children", 40, |rng, _| {
+        let t = random_tree(rng, 40);
+        for i in 0..t.len() {
+            t.children_into(i, &mut buf);
+            assert_eq!(buf, t.children(i));
+        }
+    });
+}
+
+#[test]
+fn prop_fill_step_rows_into_matches_reference() {
+    // reused arena + staging vs the allocating reference on identical
+    // inputs: features, tokens, positions, slot assignment, bias — all
+    // must agree exactly
+    let mut arena = FeatArena::new(1);
+    let (mut sf, mut st, mut sp, mut sb) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    check("fill_step_rows_into == reference", 60, |rng, _| {
+        let t = random_tree(rng, 20);
+        let d = 1 + rng.below(5);
+        let m = 4 + rng.below(8);
+        // chunk: random non-root nodes (freshly-added set), no repeats
+        let mut chunk: Vec<usize> = (1..t.len()).filter(|_| rng.f32() < 0.5).collect();
+        if chunk.is_empty() {
+            chunk.push(1);
+        }
+        let w = chunk.len() + rng.below(4);
+        let s = m + t.len() + w + 24 + rng.below(8);
+        let write_base = m + t.len() + rng.below(8);
+        let shifted = rng.f32() < 0.5;
+        // per-node features, mirrored into the arena
+        let node_feat: Vec<Vec<f32>> =
+            (0..t.len()).map(|_| (0..d).map(|_| rng.f32()).collect()).collect();
+        arena.clear(d);
+        for row in &node_feat {
+            arena.push(row);
+        }
+        // some ancestors already stepped: random scratch slots in [m, write_base)
+        let mut slots_ref: Vec<Option<usize>> = vec![None; t.len()];
+        for (i, slot) in slots_ref.iter_mut().enumerate().skip(1) {
+            if rng.f32() < 0.4 && !chunk.contains(&i) && write_base > m {
+                *slot = Some(m + rng.below(write_base - m));
+            }
+        }
+        let mut slots_new = slots_ref.clone();
+        // reference (allocating) path
+        let mut rf = vec![0f32; w * d];
+        let mut rt = vec![0i32; w];
+        let mut rp = vec![0i32; w];
+        let rb = fill_step_rows(
+            &t, &chunk, &node_feat, &mut slots_ref, shifted, d, s, m, m, write_base, w, &mut rf,
+            &mut rt, &mut rp,
+        );
+        // arena path on dirty reused buffers (poisoned)
+        sf.clear();
+        sf.resize(w * d, f32::NAN);
+        st.clear();
+        st.resize(w, i32::MIN);
+        sp.clear();
+        sp.resize(w, i32::MIN);
+        sb.clear();
+        sb.resize(w * s, f32::NAN);
+        fill_step_rows_into(
+            &t, &chunk, &arena, &mut slots_new, shifted, d, s, m, m, write_base, w, &mut sf,
+            &mut st, &mut sp, &mut sb,
+        );
+        assert_eq!(sf, rf, "feature rows diverged");
+        assert_eq!(st, rt, "token rows diverged");
+        assert_eq!(sp, rp, "position rows diverged");
+        assert_eq!(sb, rb, "bias block diverged");
+        assert_eq!(slots_new, slots_ref, "slot assignment diverged");
+    });
+}
+
+#[test]
+fn prop_chain_extend_bias_to_matches_reference() {
+    let mut buf = Vec::new();
+    check("chain_extend_bias_to == reference", 60, |rng, _| {
+        let w = 1 + rng.below(8);
+        let n = 1 + rng.below(w);
+        let s = 16 + rng.below(48);
+        let write_base = rng.below(s.saturating_sub(w).max(1));
+        let rb = reference::chain_extend_bias_ref(w, s, write_base, n);
+        buf.clear();
+        buf.resize(w * s, f32::NAN);
+        chain_extend_bias_to(w, s, write_base, n, &mut buf);
+        assert_eq!(buf, rb);
+        assert_eq!(chain_extend_bias(w, s, write_base, n), rb, "wrapper agrees");
+    });
+}
+
+#[test]
+fn prop_sampling_into_variants_are_bit_identical() {
+    let mut probs = Vec::new();
+    let mut idx = Vec::new();
+    let mut pairs = Vec::new();
+    check("softmax/top_k/expand into == allocating", 60, |rng, _| {
+        let n = 2 + rng.below(40);
+        let logits: Vec<f32> = (0..n).map(|_| rng.f32() * 8.0 - 4.0).collect();
+        let t = 0.25 + rng.f32() * 2.0;
+        softmax_into(&logits, t, &mut probs);
+        assert_eq!(probs, softmax(&logits, t), "softmax_into must be bit-identical");
+        let k = 1 + rng.below(n);
+        top_k_into(&probs, k, &mut idx);
+        let reference = top_k(&probs, k);
+        assert_eq!(idx.len(), reference.len());
+        for (i, &(ri, rp)) in reference.iter().enumerate() {
+            assert_eq!(idx[i], ri);
+            assert_eq!(probs[idx[i]], rp);
+        }
+        let parent_score = -rng.f32() * 3.0;
+        let branch = 1 + rng.below(6);
+        expand_candidates_into(parent_score, &probs, branch, &mut idx, &mut pairs);
+        assert_eq!(pairs, expand_candidates(parent_score, &probs, branch));
+    });
+}
+
+#[test]
+fn prop_select_frontier_and_rerank_into_match_under_reuse() {
+    let mut out = vec![7usize; 3]; // dirty
+    let mut pruned = DraftTree::default();
+    let mut rr = RerankScratch::default();
+    check("select/rerank into == allocating", 60, |rng, _| {
+        let t = random_tree(rng, 40);
+        let cands: Vec<usize> = (0..t.len()).filter(|_| rng.f32() < 0.6).collect();
+        let k = 1 + rng.below(10);
+        select_frontier_into(&t, &cands, k, &mut out);
+        assert_eq!(out, select_frontier(&t, &cands, k));
+        let budget = 1 + rng.below(t.len() + 4);
+        let (rp, rkept) = rerank(&t, budget);
+        rerank_into(&t, budget, &mut pruned, &mut rr);
+        assert_eq!(pruned.len(), rp.len());
+        assert_eq!(rr.kept, rkept);
+        for (a, b) in pruned.nodes.iter().zip(&rp.nodes) {
+            assert_eq!(a.token, b.token);
+            assert_eq!(a.parent, b.parent);
+            assert_eq!(a.depth, b.depth);
+            assert_eq!(a.score, b.score);
+        }
+    });
+}
+
+#[test]
+fn prop_round_sim_scratch_reuse_is_lossless_and_alloc_free() {
+    // consecutive rounds over RANDOM trees on one scratch: results equal
+    // the allocating reference every round, and after the first few
+    // rounds the footprint must stop growing (steady state)
+    let mut s = sim_scratch();
+    let mut fp_after_warmup = 0usize;
+    check("round sim: dirty reuse lossless", 40, |rng, case| {
+        let t = random_tree(rng, 24);
+        assert_eq!(sim_round_scratch(&t, &mut s), sim_round_ref(&t), "case {case}");
+        if case == 4 {
+            fp_after_warmup = s.footprint();
+        }
+        if case > 4 {
+            assert_eq!(
+                s.footprint(),
+                fp_after_warmup,
+                "scratch footprint grew after warm-up (case {case})"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_logits_slab_and_arena_reuse_has_no_stale_state() {
+    let mut arena = FeatArena::new(1);
+    let mut slab = LogitsSlab::new(1);
+    check("arena/slab reuse", 40, |rng, _| {
+        let d = 1 + rng.below(6);
+        let vocab = 2 + rng.below(12);
+        let n = 1 + rng.below(20);
+        arena.clear(d);
+        slab.clear(vocab);
+        let rows: Vec<Vec<f32>> = (0..n).map(|_| (0..d).map(|_| rng.f32()).collect()).collect();
+        let dists: Vec<Option<Vec<f32>>> = (0..n)
+            .map(|_| if rng.f32() < 0.3 { None } else { Some(random_dist(rng, vocab)) })
+            .collect();
+        for i in 0..n {
+            arena.push_empty();
+            arena.set(i, &rows[i]);
+            slab.push_empty();
+            if let Some(q) = &dists[i] {
+                slab.set(i, q);
+            }
+        }
+        for i in 0..n {
+            assert_eq!(arena.get(i), rows[i].as_slice());
+            match &dists[i] {
+                Some(q) => assert_eq!(slab.get(i), Some(q.as_slice())),
+                None => assert!(slab.get(i).is_none(), "unfilled row {i} must read None"),
+            }
+        }
+        assert!(slab.get(n).is_none());
+    });
+}
+
+#[test]
+fn round_scratch_begin_round_seeds_root_and_clears() {
+    let mut s = RoundScratch::new(3, 4);
+    s.begin_round(&[1.0, 2.0, 3.0], &[0.1, 0.2, 0.3, 0.4]);
+    s.feat.push_empty();
+    s.node_slot.push(Some(9));
+    s.frontier.push(5);
+    s.begin_round(&[4.0, 5.0, 6.0], &[0.4, 0.3, 0.2, 0.1]);
+    assert_eq!(s.feat.len(), 1, "only the root row survives a reset");
+    assert_eq!(s.feat.get(0), &[4.0, 5.0, 6.0]);
+    assert_eq!(s.logits.get(0), Some(&[0.4f32, 0.3, 0.2, 0.1][..]));
+    assert_eq!(s.node_slot, vec![None]);
+    assert!(s.frontier.is_empty() && s.new_nodes.is_empty() && s.expandable.is_empty());
+}
