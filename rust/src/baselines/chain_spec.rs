@@ -10,7 +10,7 @@ use std::time::Instant;
 use crate::metrics::GenRecord;
 use crate::models::TargetModel;
 use crate::spec::engine::GenConfig;
-use crate::spec::sampling::{argmax, chain_accept, sample, softmax, Verdict};
+use crate::spec::sampling::{argmax, chain_accept_into, sample, softmax, Verdict};
 use crate::spec::tree::DraftTree;
 use crate::util::rng::Rng;
 
@@ -71,6 +71,8 @@ impl<'a> ClassicSpecEngine<'a> {
             return Ok(rec);
         }
 
+        // reused rejection-residual buffer for the T>0 accept rule
+        let mut residual: Vec<f32> = Vec::new();
         while rec.tokens.len() < cfg.max_new {
             if m + self.verify_t + 1 >= s_tot || m + self.verify_t + 1 >= self.draft.max_len {
                 break;
@@ -150,7 +152,8 @@ impl<'a> ClassicSpecEngine<'a> {
                     }
                 } else {
                     let p = softmax(p_row, cfg.temperature);
-                    match chain_accept(&p, &qs[g], proposal[g] as usize, &mut rng) {
+                    let tok = proposal[g] as usize;
+                    match chain_accept_into(&p, &qs[g], tok, &mut residual, &mut rng) {
                         Verdict::Accept => {
                             n_acc += 1;
                             if g < rec.alpha.len() {

@@ -5,6 +5,22 @@
 //! synchronous-batch setting. Also provides batched *vanilla* decoding as
 //! the throughput baseline.
 //!
+//! Sampling (T>0) runs multi-lane too: every lane owns an independent
+//! RNG stream ([`BatchEagleEngine::generate_pooled_seeded`] takes one
+//! seed per lane — the server passes each request's own seed), grows its
+//! tree by i.i.d. draws from the draft distributions (retained in the
+//! lane scratch's q-slab for the SpecInfer rule), and walks acceptance
+//! through the same [`sampled_accept_walk`] the bs=1 engine uses. A
+//! lane's sampled output therefore depends only on its own (prompt,
+//! seed, per-round tree plan) — always invariant to batch composition
+//! at a fixed batch size, and distribution-preserving regardless.
+//! Bit-equality with the equal-seed bs=1 run additionally requires the
+//! same plans: a static tree (always), or a dynamic policy whose width
+//! family matches across batch sizes (`verify_t{t}` vs `_bs{b}`
+//! lowerings) with the adaptive controller off — adaptive controllers
+//! observe per-engine and may reshape trees, changing RNG draw counts
+//! without biasing the output.
+//!
 //! Tree shaping follows the engine's [`TreePolicy`]: static per-level
 //! widths, or the dynamic confidence-driven planner with one
 //! [`SpecController`] per lane — each lane's speculation depth/frontier
@@ -47,7 +63,7 @@ use crate::spec::dyntree::{
     expand_candidates_into, plan_round_width, rerank_into, select_frontier_into, width_hint,
     SpecController, TreePolicy, WidthFamily,
 };
-use crate::spec::engine::GenConfig;
+use crate::spec::engine::{sampled_accept_walk, GenConfig};
 use crate::spec::sampling::{argmax, sample, softmax, softmax_into, top_k_into};
 use crate::spec::scratch::ScratchPool;
 use crate::spec::tree::{chain_extend_bias_to, fill_step_rows_into, DraftTree, TreeSpec};
@@ -128,26 +144,51 @@ impl<'a> BatchEagleEngine<'a> {
         }
     }
 
-    /// Generate for B prompts in lock-step (greedy, T=0 — the Table-7
-    /// setting) with a throwaway scratch pool. One-shot convenience over
+    /// Generate for B prompts in lock-step with a throwaway scratch
+    /// pool. One-shot convenience over
     /// [`BatchEagleEngine::generate_pooled`].
     pub fn generate(&self, prompts: &[Vec<u32>], cfg: &GenConfig) -> Result<Vec<GenRecord>> {
         self.generate_pooled(prompts, cfg, &mut ScratchPool::new())
     }
 
     /// Generate for B prompts in lock-step, drawing per-lane round state
-    /// from `pool` (keyed by KV slot = lane index). Callers that serve
-    /// many admissions keep one pool so lane buffers stay warm across
-    /// groups. Returns one record per lane.
+    /// from `pool` (keyed by KV slot = lane index). Lane seeds default
+    /// to `cfg.seed + lane index` (each lane still gets its own stream);
+    /// callers that care which request lands in which lane — the server
+    /// worker — pass explicit per-request seeds via
+    /// [`BatchEagleEngine::generate_pooled_seeded`] so sampled output is
+    /// invariant to batch composition.
     pub fn generate_pooled(
         &self,
         prompts: &[Vec<u32>],
         cfg: &GenConfig,
         pool: &mut ScratchPool,
     ) -> Result<Vec<GenRecord>> {
-        assert!(cfg.temperature <= 0.0, "batched engine is greedy (Table 7 setting)");
+        let seeds: Vec<u64> =
+            (0..prompts.len()).map(|li| cfg.seed.wrapping_add(li as u64)).collect();
+        self.generate_pooled_seeded(prompts, &seeds, cfg, pool)
+    }
+
+    /// [`BatchEagleEngine::generate_pooled`] with one RNG seed per lane.
+    /// `seeds[li]` seeds lane `li`'s independent stream exactly as
+    /// `GenConfig::seed` seeds a bs=1 [`crate::spec::engine::EagleEngine`]
+    /// run, so a sampled request's tokens do not depend on which other
+    /// lanes share the batch (T=0 lanes ignore their stream), and — when
+    /// the per-round tree plans match (see the module doc) — equal the
+    /// equal-seed bs=1 run exactly. Callers that serve many admissions
+    /// keep one pool so lane buffers stay warm across groups. Returns
+    /// one record per lane.
+    pub fn generate_pooled_seeded(
+        &self,
+        prompts: &[Vec<u32>],
+        seeds: &[u64],
+        cfg: &GenConfig,
+        pool: &mut ScratchPool,
+    ) -> Result<Vec<GenRecord>> {
         let b = prompts.len();
         assert!(b >= 2, "use EagleEngine for bs=1");
+        assert_eq!(seeds.len(), b, "one seed per lane");
+        let mut rngs: Vec<Rng> = seeds.iter().map(|&s| Rng::new(s)).collect();
         let t_all = Instant::now();
         let tgt = self.target;
         let d = tgt.d;
@@ -162,12 +203,22 @@ impl<'a> BatchEagleEngine<'a> {
         let mut lanes: Vec<Lane> = Vec::with_capacity(b);
         for (li, prompt) in prompts.iter().enumerate() {
             let mut rec = GenRecord::new(prompt.len());
+            rec.reserve_rounds(cfg.max_new);
             let t0 = Instant::now();
             let (out, plen) = tgt.prefill_slot(b, &mut cache, li, prompt)?;
             rec.timeline.prefill_ns += t0.elapsed().as_nanos() as u64;
             rec.target_passes += 1;
-            let root_tok = argmax(tgt.row(&out.logits, p_win, 0, plen - 1, vocab)) as u32;
-            let mut committed = prompt.clone();
+            let last_logits = tgt.row(&out.logits, p_win, 0, plen - 1, vocab);
+            // root pick mirrors EagleEngine::pick on the lane's own stream
+            let root_tok = if cfg.temperature <= 0.0 {
+                argmax(last_logits) as u32
+            } else {
+                sample(&softmax(last_logits, cfg.temperature), &mut rngs[li]) as u32
+            };
+            // pre-sized so steady-state commits never grow it
+            let mut committed: Vec<u32> =
+                Vec::with_capacity(prompt.len() + cfg.max_new + self.accept_a + 2);
+            committed.extend_from_slice(prompt);
             committed.push(root_tok);
             rec.tokens.push(root_tok);
 
@@ -233,6 +284,9 @@ impl<'a> BatchEagleEngine<'a> {
         pool.ensure_lanes(b, d, vocab);
         for lane in &mut pool.lanes[..b] {
             lane.reserve(d, vocab, s_tot, max_nodes, t_reserve, w_reserve);
+            if cfg.temperature > 0.0 {
+                lane.reserve_q(vocab, max_nodes);
+            }
         }
         pool.batch.reserve(b, d, s_tot, t_reserve, w_reserve);
         let mut trees: Vec<DraftTree> = (0..b)
@@ -253,6 +307,8 @@ impl<'a> BatchEagleEngine<'a> {
         while lanes.iter().any(|l| !l.done) {
             let fp0 =
                 pool.footprint() + trees.iter().map(DraftTree::capacity_bytes).sum::<usize>();
+            #[cfg(feature = "count-alloc")]
+            let counted0 = crate::util::count_alloc::thread_allocated_bytes();
             {
                 let bs = &mut pool.batch;
                 bs.live.clear();
@@ -266,7 +322,7 @@ impl<'a> BatchEagleEngine<'a> {
             match &self.policy {
                 TreePolicy::Static(spec) => {
                     self.grow_static_batch(
-                        spec, &dfam, &mut lanes, &mut trees, &mut dcache_b, pool,
+                        spec, &dfam, &mut lanes, &mut trees, &mut dcache_b, pool, cfg, &mut rngs,
                     )?;
                 }
                 TreePolicy::Dynamic(dc) => {
@@ -285,7 +341,9 @@ impl<'a> BatchEagleEngine<'a> {
                                 .push(plan_round_width(&family, &p, width_hint(ctl.as_ref())).1);
                         }
                     }
-                    self.grow_dynamic_batch(&dfam, &mut lanes, &mut trees, &mut dcache_b, pool)?;
+                    self.grow_dynamic_batch(
+                        &dfam, &mut lanes, &mut trees, &mut dcache_b, pool, cfg, &mut rngs,
+                    )?;
                 }
             }
 
@@ -367,11 +425,26 @@ impl<'a> BatchEagleEngine<'a> {
                     pool.lanes[li].path.clear();
                     continue;
                 }
-                let path = &mut pool.lanes[li].path;
-                let walk = |i: usize| argmax(tgt.row(&vout.logits, t, li, i, vocab));
-                trees[li].greedy_walk_into(walk, path);
-                let deepest = *path.last().unwrap();
-                bonuses[li] = argmax(tgt.row(&vout.logits, t, li, deepest, vocab)) as u32;
+                if cfg.temperature <= 0.0 {
+                    let path = &mut pool.lanes[li].path;
+                    let walk = |i: usize| argmax(tgt.row(&vout.logits, t, li, i, vocab));
+                    trees[li].greedy_walk_into(walk, path);
+                    let deepest = *path.last().unwrap();
+                    bonuses[li] = argmax(tgt.row(&vout.logits, t, li, deepest, vocab)) as u32;
+                } else {
+                    // the same SpecInfer walk the bs=1 engine runs, on
+                    // this lane's scratch + RNG stream (bit-identical to
+                    // the lane's equal-seed bs=1 run)
+                    bonuses[li] = sampled_accept_walk(
+                        &trees[li],
+                        |i| tgt.row(&vout.logits, t, li, i, vocab),
+                        cfg.temperature,
+                        &mut rngs[li],
+                        &mut lanes[li].rec.alpha,
+                        &mut pool.lanes[li],
+                    );
+                }
+                let path = &pool.lanes[li].path;
                 for (j, &ni) in path.iter().enumerate() {
                     pending_idx[li * self.accept_a + j] = ni as i32;
                 }
@@ -473,12 +546,16 @@ impl<'a> BatchEagleEngine<'a> {
                 let fp = pool.footprint()
                     + trees.iter().map(DraftTree::capacity_bytes).sum::<usize>();
                 let grew = fp.saturating_sub(fp0) as u64;
+                #[cfg(feature = "count-alloc")]
+                let counted = crate::util::count_alloc::thread_allocated_bytes() - counted0;
                 for li in 0..b {
                     if pool.batch.live[li] {
                         lanes[li].rec.round_host_alloc_bytes.push(grew);
                         if grew == 0 {
                             lanes[li].rec.scratch_reuse_total += 1;
                         }
+                        #[cfg(feature = "count-alloc")]
+                        lanes[li].rec.round_alloc_counted_bytes.push(counted);
                     }
                 }
                 break;
@@ -512,12 +589,16 @@ impl<'a> BatchEagleEngine<'a> {
             let fp =
                 pool.footprint() + trees.iter().map(DraftTree::capacity_bytes).sum::<usize>();
             let grew = fp.saturating_sub(fp0) as u64;
+            #[cfg(feature = "count-alloc")]
+            let counted = crate::util::count_alloc::thread_allocated_bytes() - counted0;
             for li in 0..b {
                 if pool.batch.live[li] {
                     lanes[li].rec.round_host_alloc_bytes.push(grew);
                     if grew == 0 {
                         lanes[li].rec.scratch_reuse_total += 1;
                     }
+                    #[cfg(feature = "count-alloc")]
+                    lanes[li].rec.round_alloc_counted_bytes.push(counted);
                 }
             }
         }
@@ -532,11 +613,15 @@ impl<'a> BatchEagleEngine<'a> {
             .collect())
     }
 
-    /// STATIC lock-step growth: fixed per-level widths, greedy top-k by
-    /// cumulative score per lane (the seed behavior). Each level's step
-    /// runs at the narrowest lowered `step_w{w}_bs{b}` holding the
+    /// STATIC lock-step growth: fixed per-level widths — greedy top-k by
+    /// cumulative score per lane (the seed behavior) at T=0, i.i.d.
+    /// draws from each frontier node's q (retained in the lane's q-slab
+    /// for the SpecInfer rule) on the lane's own RNG stream at T>0,
+    /// mirroring `EagleEngine::grow_tree` draw-for-draw. Each level's
+    /// step runs at the narrowest lowered `step_w{w}_bs{b}` holding the
     /// round's widest per-lane node set. Per-lane node state lives in
     /// the pool's lane scratch (seeded by the caller's `begin_round`).
+    #[allow(clippy::too_many_arguments)]
     fn grow_static_batch(
         &self,
         spec: &TreeSpec,
@@ -545,6 +630,8 @@ impl<'a> BatchEagleEngine<'a> {
         trees: &mut [DraftTree],
         dcache_b: &mut KvCache,
         pool: &mut ScratchPool,
+        cfg: &GenConfig,
+        rngs: &mut [Rng],
     ) -> Result<()> {
         let b = lanes.len();
         let d = self.target.d;
@@ -570,23 +657,43 @@ impl<'a> BatchEagleEngine<'a> {
                     continue;
                 }
                 lane.cands.clear();
-                for &p in &lane.frontier {
-                    let q = lane.logits.get(p).expect("frontier node has logits");
-                    softmax_into(q, 1.0, &mut lane.probs);
-                    top_k_into(&lane.probs, spec.branch, &mut lane.idx);
-                    for &ti in &lane.idx {
-                        let score = trees[li].nodes[p].score + lane.probs[ti].max(1e-20).ln();
-                        lane.cands.push((p, ti as u32, score, None));
+                if cfg.temperature <= 0.0 {
+                    for &p in &lane.frontier {
+                        let q = lane.logits.get(p).expect("frontier node has logits");
+                        softmax_into(q, 1.0, &mut lane.probs);
+                        top_k_into(&lane.probs, spec.branch, &mut lane.idx);
+                        for &ti in &lane.idx {
+                            let score = trees[li].nodes[p].score + lane.probs[ti].max(1e-20).ln();
+                            lane.cands.push((p, ti as u32, score, None));
+                        }
+                    }
+                    // allocation-free unstable sort with a total (parent,
+                    // token) tiebreak — see EagleEngine::grow_tree;
+                    // total_cmp so a NaN logit degrades deterministically
+                    lane.cands.sort_unstable_by(|a, c| {
+                        c.2.total_cmp(&a.2).then(a.0.cmp(&c.0)).then(a.1.cmp(&c.1))
+                    });
+                    lane.cands.truncate(width);
+                } else {
+                    // T>0: children sampled i.i.d. from q on the lane's
+                    // own stream — exactly EagleEngine::grow_tree's
+                    // sampled branch, q rows shared via the lane q-slab
+                    let per = (width / lane.frontier.len().max(1)).max(1);
+                    for &p in &lane.frontier {
+                        let logits = lane.logits.get(p).expect("frontier node has logits");
+                        softmax_into(logits, cfg.temperature, &mut lane.probs);
+                        let qid = lane.qs.push(&lane.probs) as u32;
+                        for _ in 0..per {
+                            if lane.cands.len() >= width {
+                                break;
+                            }
+                            let tok = sample(lane.qs.get(qid as usize), &mut rngs[li]) as u32;
+                            lane.cands.push((p, tok, 0.0, Some(qid)));
+                        }
                     }
                 }
-                // allocation-free unstable sort with a total (parent,
-                // token) tiebreak — see EagleEngine::grow_tree
-                lane.cands.sort_unstable_by(|a, c| {
-                    c.2.partial_cmp(&a.2).unwrap().then(a.0.cmp(&c.0)).then(a.1.cmp(&c.1))
-                });
-                lane.cands.truncate(width);
-                for (p, tok, score, _q) in lane.cands.drain(..) {
-                    let ni = trees[li].add(p, tok, score, None);
+                for (p, tok, score, q) in lane.cands.drain(..) {
+                    let ni = trees[li].add(p, tok, score, q);
                     lane.feat.push_empty();
                     lane.logits.push_empty();
                     lane.node_slot.push(None);
@@ -675,11 +782,18 @@ impl<'a> BatchEagleEngine<'a> {
     /// Each lane expands its top-K frontier by cumulative draft log-prob
     /// and may run at a different (controller-adapted) depth; after
     /// growth every lane's candidate tree is globally reranked down to
-    /// its verify budget. Per-lane params arrive pre-planned by the
-    /// caller in `pool.batch.lane_params` (controller shape + width-plan
-    /// budget clamp, see `dyntree/widths.rs`). Drafted-token accounting
-    /// happens post-rerank. Each lane's step set lives in its scratch
-    /// `expandable` buffer (doubling as next level's expansion set).
+    /// its verify budget. At T>0 children are instead sampled i.i.d.
+    /// from each frontier node's q on the lane's own RNG stream and
+    /// growth is capped at the lane's budget UP FRONT (generation-order
+    /// truncation, value-independent — the rerank becomes an identity),
+    /// mirroring `EagleEngine::grow_tree_dynamic` draw-for-draw so the
+    /// SpecInfer rule stays lossless. Per-lane params arrive pre-planned
+    /// by the caller in `pool.batch.lane_params` (controller shape +
+    /// width-plan budget clamp, see `dyntree/widths.rs`). Drafted-token
+    /// accounting happens post-rerank. Each lane's step set lives in its
+    /// scratch `expandable` buffer (doubling as next level's expansion
+    /// set).
+    #[allow(clippy::too_many_arguments)]
     fn grow_dynamic_batch(
         &self,
         dfam: &WidthFamily,
@@ -687,6 +801,8 @@ impl<'a> BatchEagleEngine<'a> {
         trees: &mut [DraftTree],
         dcache_b: &mut KvCache,
         pool: &mut ScratchPool,
+        cfg: &GenConfig,
+        rngs: &mut [Rng],
     ) -> Result<()> {
         let b = lanes.len();
         let d = self.target.d;
@@ -723,18 +839,52 @@ impl<'a> BatchEagleEngine<'a> {
                     &mut lane.frontier,
                 );
                 lane.new_nodes.clear();
-                for &p in &lane.frontier {
-                    let Some(logits) = lane.logits.get(p) else { continue };
-                    softmax_into(logits, 1.0, &mut lane.probs);
-                    expand_candidates_into(
-                        trees[li].nodes[p].score,
-                        &lane.probs,
-                        lp.branch,
-                        &mut lane.idx,
-                        &mut lane.pairs,
-                    );
-                    for &(tok, score) in &lane.pairs {
-                        let ni = trees[li].add(p, tok, score, None);
+                if cfg.temperature <= 0.0 {
+                    for &p in &lane.frontier {
+                        let Some(logits) = lane.logits.get(p) else { continue };
+                        softmax_into(logits, 1.0, &mut lane.probs);
+                        expand_candidates_into(
+                            trees[li].nodes[p].score,
+                            &lane.probs,
+                            lp.branch,
+                            &mut lane.idx,
+                            &mut lane.pairs,
+                        );
+                        for &(tok, score) in &lane.pairs {
+                            let ni = trees[li].add(p, tok, score, None);
+                            lane.feat.push_empty();
+                            lane.logits.push_empty();
+                            lane.node_slot.push(None);
+                            lane.new_nodes.push(ni);
+                        }
+                    }
+                } else {
+                    // T>0: EagleEngine::grow_tree_dynamic's sampled
+                    // branch on the lane's own stream — candidates
+                    // collected first, then truncated to the budget by
+                    // GENERATION order (value-independent) before any
+                    // node is created
+                    lane.cands.clear();
+                    for &p in &lane.frontier {
+                        // same tolerance as the greedy arm above: a
+                        // frontier node without a stepped logits row is
+                        // skipped, never a mid-round server panic (the
+                        // expandable-set invariant makes this unreachable
+                        // in practice, as in the bs=1 engine)
+                        let Some(logits) = lane.logits.get(p) else { continue };
+                        softmax_into(logits, cfg.temperature, &mut lane.probs);
+                        let qid = lane.qs.push(&lane.probs) as u32;
+                        for _ in 0..lp.branch {
+                            let q = lane.qs.get(qid as usize);
+                            let tok = sample(q, &mut rngs[li]);
+                            let score = trees[li].nodes[p].score + q[tok].max(1e-20).ln();
+                            lane.cands.push((p, tok as u32, score, Some(qid)));
+                        }
+                    }
+                    let room = lp.budget.saturating_sub(trees[li].len() - 1);
+                    lane.cands.truncate(room);
+                    for (p, tok, score, q) in lane.cands.drain(..) {
+                        let ni = trees[li].add(p, tok, score, q);
                         lane.feat.push_empty();
                         lane.logits.push_empty();
                         lane.node_slot.push(None);
@@ -852,9 +1002,29 @@ impl<'a> BatchEagleEngine<'a> {
         Ok(())
     }
 
-    /// Batched vanilla decoding — the Table-7 throughput baseline.
+    /// Batched vanilla decoding — the Table-7 throughput baseline. Lane
+    /// seeds default to `cfg.seed + lane index` (the same derivation as
+    /// [`BatchEagleEngine::generate_pooled`]); pass explicit per-request
+    /// seeds via [`BatchEagleEngine::vanilla_batch_seeded`].
     pub fn vanilla_batch(&self, prompts: &[Vec<u32>], cfg: &GenConfig) -> Result<Vec<GenRecord>> {
+        let seeds: Vec<u64> =
+            (0..prompts.len()).map(|li| cfg.seed.wrapping_add(li as u64)).collect();
+        self.vanilla_batch_seeded(prompts, &seeds, cfg)
+    }
+
+    /// [`BatchEagleEngine::vanilla_batch`] with one RNG seed per lane:
+    /// each lane draws its T>0 samples from its own stream (seeded as a
+    /// bs=1 run would be), so a request's sampled output no longer
+    /// depends on how many other lanes share the batch or what they
+    /// sample — it A/B-matches its equal-seed bs=1 vanilla run.
+    pub fn vanilla_batch_seeded(
+        &self,
+        prompts: &[Vec<u32>],
+        seeds: &[u64],
+        cfg: &GenConfig,
+    ) -> Result<Vec<GenRecord>> {
         let b = prompts.len();
+        assert_eq!(seeds.len(), b, "one seed per lane");
         let tgt = self.target;
         let vocab = tgt.vocab;
         let t_all = Instant::now();
@@ -863,7 +1033,7 @@ impl<'a> BatchEagleEngine<'a> {
         let mut lens = vec![0i32; b];
         let mut toks = vec![0i32; b];
         let mut done = vec![false; b];
-        let mut rng = Rng::new(cfg.seed);
+        let mut rngs: Vec<Rng> = seeds.iter().map(|&s| Rng::new(s)).collect();
         for (li, p) in prompts.iter().enumerate() {
             let (out, plen) = tgt.prefill_slot(b, &mut cache, li, p)?;
             recs[li].target_passes += 1;
@@ -871,7 +1041,7 @@ impl<'a> BatchEagleEngine<'a> {
             let tok = if cfg.temperature <= 0.0 {
                 argmax(logits) as u32
             } else {
-                sample(&softmax(logits, cfg.temperature), &mut rng) as u32
+                sample(&softmax(logits, cfg.temperature), &mut rngs[li]) as u32
             };
             recs[li].tokens.push(tok);
             toks[li] = tok as i32;
@@ -890,7 +1060,7 @@ impl<'a> BatchEagleEngine<'a> {
                 let tok = if cfg.temperature <= 0.0 {
                     argmax(logits) as u32
                 } else {
-                    sample(&softmax(logits, cfg.temperature), &mut rng) as u32
+                    sample(&softmax(logits, cfg.temperature), &mut rngs[li]) as u32
                 };
                 recs[li].tokens.push(tok);
                 toks[li] = tok as i32;

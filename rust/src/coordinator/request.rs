@@ -130,15 +130,34 @@ impl Request {
         self.width_hint.or(self.verify_width).unwrap_or(max)
     }
 
-    /// Whether the batched (lock-step, greedy) engine can run this
-    /// request alongside others — the single eligibility predicate
-    /// shared by the scheduler's width grouping and the server's group
-    /// executor. Requests pinning an exact verify width are excluded:
-    /// the pin is a per-request contract the bs=1 path honors, and one
-    /// pinned lane would otherwise force its whole group back to serial
-    /// execution.
+    /// Whether the batched (lock-step) engine can run this request
+    /// alongside others — the single eligibility predicate shared by the
+    /// scheduler's width grouping and the server's group executor.
+    /// Sampled (T>0) requests qualify: each lane runs its own seeded RNG
+    /// stream and the SpecInfer acceptance walk, so batching preserves
+    /// the per-request output distribution (and the exact equal-seed
+    /// bs=1 tokens whenever the per-round tree plans match — see the
+    /// batch-engine module doc). Lanes must still share a temperature to
+    /// co-execute
+    /// (one lock-step `GenConfig`), which the scheduler's compatibility
+    /// classes enforce. Requests pinning an exact verify width are
+    /// excluded: the pin is a per-request contract the bs=1 path honors,
+    /// and one pinned lane would otherwise force its whole group back to
+    /// serial execution.
     pub fn width_batchable(&self) -> bool {
-        self.method == Method::Eagle && self.temperature <= 0.0 && self.verify_width.is_none()
+        self.method == Method::Eagle && self.verify_width.is_none()
+    }
+
+    /// Temperature key for batching compatibility: all greedy requests
+    /// (t <= 0) share one class; sampled requests class by exact
+    /// temperature bits (the lock-step engine runs a group under a
+    /// single `GenConfig`).
+    pub fn temperature_class(&self) -> u32 {
+        if self.temperature > 0.0 {
+            self.temperature.to_bits()
+        } else {
+            0
+        }
     }
 
     /// Minimal request for tests, benches, and synthetic eval workloads.

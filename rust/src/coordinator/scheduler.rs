@@ -295,9 +295,11 @@ impl Scheduler {
     /// per the configured policy. Empty Vec when the queue is closed.
     ///
     /// Only lanes the batched engine can co-execute are width-grouped:
-    /// greedy EAGLE tree requests sharing (max_tokens, tree choice).
-    /// Everything else becomes an FCFS singleton group, preserving
-    /// arrival order within each group.
+    /// EAGLE tree requests sharing (max_tokens, tree choice,
+    /// temperature class) — sampled requests batch with equal-temperature
+    /// peers (each lane keeps its own seeded RNG stream), greedy ones
+    /// with greedy. Everything else becomes an FCFS singleton group,
+    /// preserving arrival order within each group.
     pub fn next_groups(&self, q: &RequestQueue) -> Vec<AdmittedGroup> {
         let batch = self.collect(q);
         if batch.is_empty() {
@@ -311,10 +313,11 @@ impl Scheduler {
                 let family = WidthFamily::from_available(verify_widths, *max_t, |_| true);
                 let mut out: Vec<AdmittedGroup> = Vec::new();
                 // partition into batchable compatibility classes + the rest
-                let mut classes: Vec<((usize, &'static str), Vec<Request>)> = Vec::new();
+                type ClassKey = (usize, &'static str, u32);
+                let mut classes: Vec<(ClassKey, Vec<Request>)> = Vec::new();
                 for r in batch {
                     if r.width_batchable() {
-                        let key = (r.max_tokens, r.tree.name());
+                        let key = (r.max_tokens, r.tree.name(), r.temperature_class());
                         match classes.iter_mut().find(|(k, _)| *k == key) {
                             Some((_, v)) => v.push(r),
                             None => classes.push((key, vec![r])),
@@ -557,6 +560,37 @@ mod tests {
         assert_eq!(narrow.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 3]);
         let wide = groups.iter().find(|g| g.verify_cap == Some(32)).unwrap();
         assert_eq!(wide.requests[0].id, 1);
+    }
+
+    #[test]
+    fn next_groups_classes_sampled_lanes_by_temperature() {
+        let q = RequestQueue::new(16);
+        // two T=1 eagle lanes batch together; a T=0.7 lane and a greedy
+        // lane land in their own classes (one lock-step GenConfig per
+        // group); per-lane seeds keep sampled outputs composition-proof
+        for (id, temp) in [(0u64, 1.0f32), (1, 0.0), (2, 1.0), (3, 0.7)] {
+            let mut r = req(id);
+            r.method = Method::Eagle;
+            r.temperature = temp;
+            q.push(r).unwrap();
+        }
+        let s = Scheduler::new(4, 0).with_policy(AdmissionPolicy::WidthGrouped {
+            verify_widths: vec![8, 16, 32],
+            max_t: 32,
+        });
+        let groups = s.next_groups(&q);
+        assert_eq!(groups.len(), 3);
+        let ids = |g: &AdmittedGroup| g.requests.iter().map(|r| r.id).collect::<Vec<_>>();
+        assert!(groups.iter().any(|g| ids(g) == vec![0, 2]), "equal-T lanes share a group");
+        assert!(groups.iter().any(|g| ids(g) == vec![1]));
+        assert!(groups.iter().any(|g| ids(g) == vec![3]));
+        // sampled lanes are width-batchable now; a verify-width pin is not
+        let mut r = req(9);
+        r.method = Method::Eagle;
+        r.temperature = 1.0;
+        assert!(r.width_batchable(), "T>0 eagle requests join width groups");
+        r.verify_width = Some(16);
+        assert!(!r.width_batchable(), "pinned requests stay on the bs=1 path");
     }
 
     #[test]

@@ -13,9 +13,11 @@ use std::time::Instant;
 use crate::coordinator::CostModel;
 use crate::eval::runner::Runner;
 use crate::models::ModelBundle;
+use crate::spec::sampling::{sample, softmax_into};
 use crate::spec::scratch::RoundScratch;
 use crate::spec::tree::{self, DraftTree, TreeSpec};
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 /// One measured bench point.
 pub struct BenchResult {
@@ -160,6 +162,55 @@ pub fn sim_round_scratch(tree: &DraftTree, s: &mut RoundScratch) -> usize {
 
 fn zeros(xs: &[f32]) -> usize {
     xs.iter().filter(|&&x| x == 0.0).count()
+}
+
+/// One lane-round of SLAB-based sampled (T>0) growth, mirroring the
+/// engines' static T>0 branch draw-for-draw: per level, each frontier
+/// node's q goes into the scratch's q-slab (one row, shared by its
+/// sampled siblings via the stored row id) and `per` children are drawn
+/// i.i.d. from it on `rng`. All nodes share one draft logits row — the
+/// distribution under test. The single simulation shared by the T>0
+/// property tests (`rust/tests/prop_batch_t1.rs`, where it is checked
+/// bit-for-bit against the pre-slab `Rc<Vec<f32>>` reference) and the
+/// allocator-level checks (`rust/tests/count_alloc.rs`), so the test
+/// sims cannot drift from each other when the engines' draw sequence
+/// changes.
+pub fn sim_sampled_grow(
+    tree: &mut DraftTree,
+    s: &mut RoundScratch,
+    draft_logits: &[f32],
+    temp: f32,
+    levels: &[usize],
+    rng: &mut Rng,
+) {
+    tree.reset(0);
+    s.begin_round(&[0.0], draft_logits);
+    s.frontier.clear();
+    s.frontier.push(0);
+    for &width in levels {
+        s.cands.clear();
+        let per = (width / s.frontier.len().max(1)).max(1);
+        for &parent in &s.frontier {
+            softmax_into(draft_logits, temp, &mut s.probs);
+            let qid = s.qs.push(&s.probs) as u32;
+            for _ in 0..per {
+                if s.cands.len() >= width {
+                    break;
+                }
+                let tok = sample(s.qs.get(qid as usize), rng) as u32;
+                s.cands.push((parent, tok, 0.0, Some(qid)));
+            }
+        }
+        if s.cands.is_empty() {
+            break;
+        }
+        s.new_nodes.clear();
+        for (p, tok, score, q) in s.cands.drain(..) {
+            let ni = tree.add(p, tok, score, q);
+            s.new_nodes.push(ni);
+        }
+        std::mem::swap(&mut s.frontier, &mut s.new_nodes);
+    }
 }
 
 /// A warm scratch sized for the round sims.

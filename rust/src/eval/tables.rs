@@ -391,6 +391,8 @@ impl EvalCtx {
     // ---------------------------------------------------------------------
     // dyntree: tau vs verify budget — static vs dynamic, plus the
     // controller-driven verify-width selection (mean verify t column)
+    // and the sampled (T=1) tau per budget (the SpecInfer acceptance
+    // path — distribution-preserving, so tau is the cost of sampling)
     // ---------------------------------------------------------------------
     pub fn dyntree(&self) -> Result<String> {
         let wl = self.workload("mtbench")?;
@@ -399,17 +401,25 @@ impl EvalCtx {
             &self.runner.rt, &self.runner.man, "toy-s", &["eagle", "tok"], false, false,
         )?;
         let mut out = String::from(
-            "# dyntree — tau vs verify budget, static vs dynamic (toy-s, T=0)\n\n\
-             | policy | budget t | speedup | tau | tokens/s | mean tree nodes | mean verify t |\n\
-             |---|---|---|---|---|---|---|\n",
+            "# dyntree — tau vs verify budget, static vs dynamic (toy-s, T=0 + T=1)\n\n\
+             | policy | budget t | speedup | tau | tau T=1 | tokens/s | mean tree nodes \
+             | mean verify t |\n\
+             |---|---|---|---|---|---|---|---|\n",
         );
         let base = self.runner.run_with(&bundle, &prompts, &self.spec(Method::Vanilla, 0.0))?;
         writeln!(
             out,
-            "| vanilla | - | 1.00x | {:.2} | {:.1} | - | - |",
+            "| vanilla | - | 1.00x | {:.2} | - | {:.1} | - | - |",
             base.tau(),
             base.tokens_per_sec()
         )?;
+        // sampled tau for the same spec: T=1 rounds run the SpecInfer
+        // recursive-rejection walk instead of the greedy match
+        let t1_tau = |spec: &RunSpec| -> Result<f64> {
+            let mut s1 = spec.clone();
+            s1.temperature = 1.0;
+            Ok(self.runner.run_with(&bundle, &prompts, &s1)?.tau())
+        };
         // tau-vs-budget sweep: equal-budget static/dynamic pairs per tree_t
         // each level width must be reachable: <= prev level's count * branch
         let static_shapes: [(usize, Vec<usize>); 4] = [
@@ -425,10 +435,11 @@ impl EvalCtx {
             let st = self.runner.run_with(&bundle, &prompts, &spec)?;
             writeln!(
                 out,
-                "| static {} | {t} | {:.2}x | {:.2} | {:.1} | {:.1} | {:.1} |",
+                "| static {} | {t} | {:.2}x | {:.2} | {:.2} | {:.1} | {:.1} | {:.1} |",
                 label.join("/"),
                 speedup(&st, &base),
                 st.tau(),
+                t1_tau(&spec)?,
                 st.tokens_per_sec(),
                 st.mean_tree_nodes(),
                 st.mean_verify_t()
@@ -439,9 +450,10 @@ impl EvalCtx {
             let dy = self.runner.run_with(&bundle, &prompts, &spec)?;
             writeln!(
                 out,
-                "| dynamic (adaptive) | {t} | {:.2}x | {:.2} | {:.1} | {:.1} | {:.1} |",
+                "| dynamic (adaptive) | {t} | {:.2}x | {:.2} | {:.2} | {:.1} | {:.1} | {:.1} |",
                 speedup(&dy, &base),
                 dy.tau(),
+                t1_tau(&spec)?,
                 dy.tokens_per_sec(),
                 dy.mean_tree_nodes(),
                 dy.mean_verify_t()
@@ -457,9 +469,11 @@ impl EvalCtx {
             let lo = self.runner.run_with(&bundle, &prompts, &weak)?;
             writeln!(
                 out,
-                "| dynamic, weak tok draft (low alpha) | full | {:.2}x | {:.2} | {:.1} | {:.1} | {:.1} |",
+                "| dynamic, weak tok draft (low alpha) | full | {:.2}x | {:.2} | {:.2} | {:.1} \
+                 | {:.1} | {:.1} |",
                 speedup(&lo, &base),
                 lo.tau(),
+                t1_tau(&weak)?,
                 lo.tokens_per_sec(),
                 lo.mean_tree_nodes(),
                 lo.mean_verify_t()
@@ -482,14 +496,22 @@ impl EvalCtx {
                 let be = BatchEagleEngine::new(&bundle.target, &bundle.drafts["eagle"], c)
                     .with_policy(policy);
                 let recs = be.generate(&bprompts, &cfg)?;
-                let mut agg = Aggregate::new();
+                // sampled lock-step lanes: per-lane RNG streams + the
+                // SpecInfer walk — the batched T=1 column
+                let cfg1 = GenConfig { temperature: 1.0, ..cfg.clone() };
+                let recs1 = be.generate(&bprompts, &cfg1)?;
+                let (mut agg, mut agg1) = (Aggregate::new(), Aggregate::new());
                 for r in &recs {
                     agg.add(r);
                 }
+                for r in &recs1 {
+                    agg1.add(r);
+                }
                 writeln!(
                     out,
-                    "| {label} | 26 | - | {:.2} | {:.1} | {:.1} | {:.1} |",
+                    "| {label} | 26 | - | {:.2} | {:.2} | {:.1} | {:.1} | {:.1} |",
                     agg.tau(),
+                    agg1.tau(),
                     agg.tokens_per_sec(),
                     agg.mean_tree_nodes(),
                     agg.mean_verify_t()
@@ -503,7 +525,13 @@ impl EvalCtx {
              family); it falls below tree_t whenever the controller's acceptance\n\
              EWMA caps a request's budget to a cheaper executable. The weak-draft\n\
              row is the low-acceptance regime: speculation shrinks and rounds run\n\
-             on the chain-like t8 width.\n",
+             on the chain-like t8 width. 'tau T=1' re-runs the same spec at\n\
+             temperature 1: rounds sample their trees from q and accept via the\n\
+             SpecInfer recursive-rejection rule (distribution-preserving), so the\n\
+             column shows what sampling costs in accepted tokens per pass; at T>0\n\
+             dynamic growth is budget-capped BEFORE sampling, so it stays\n\
+             lossless. The bs=2 rows run the batched engine (per-lane RNG\n\
+             streams at T=1 — each lane matches its equal-seed bs=1 run).\n",
         );
         Ok(out)
     }

@@ -32,6 +32,15 @@
 //! println!("{} tokens in {:.1} ms", rec.tokens.len(), rec.wall_ns as f64 / 1e6);
 //! ```
 
+// Allocator-level verification of the zero-alloc round guarantee: under
+// the test-only `count-alloc` feature the whole crate (and every test
+// binary linking it) runs on a thread-local counting allocator, and the
+// engines record per-round allocation deltas into
+// `GenRecord::round_alloc_counted_bytes` (see `util::count_alloc`).
+#[cfg(feature = "count-alloc")]
+#[global_allocator]
+static COUNTING_ALLOC: util::count_alloc::CountingAlloc = util::count_alloc::CountingAlloc;
+
 pub mod baselines;
 pub mod coordinator;
 pub mod eval;

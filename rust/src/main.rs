@@ -54,7 +54,8 @@ fn print_help() {
          \u{20}          --batch N --linger MS   (admission batch size + fill deadline;\n\
          \u{20}           FCFS multi-lane eagle batches run on the batched engine, uncapped)\n\
          \u{20}          --width-grouping        (group lanes by predicted verify width:\n\
-         \u{20}           requests carry a \"width_hint\" field; compatible greedy eagle lanes\n\
+         \u{20}           requests carry a \"width_hint\" field; compatible eagle lanes (greedy,\n\
+         \u{20}           or sampled sharing a temperature — per-lane RNG streams)\n\
          \u{20}           run as per-width sub-batches so low-acceptance lanes are never\n\
          \u{20}           executed at a hot lane's width. Default: FCFS)\n\
          \u{20}          --cost-model PATH       (calibrate the grouping dispatch overhead\n\

@@ -58,6 +58,15 @@ pub struct GenRecord {
     /// Rounds that completed entirely on reused scratch (zero new host
     /// capacity). `scratch_reuse_total == rounds` once warm.
     pub scratch_reuse_total: u64,
+    /// Per-round bytes the process ACTUALLY allocated during the round,
+    /// measured by the thread-local counting allocator (test-only
+    /// `count-alloc` feature; always empty otherwise). Unlike
+    /// `round_host_alloc_bytes` — which tracks only the capacities the
+    /// scratch subsystem knows about — this catches allocations hiding
+    /// anywhere in the host round loop. Device-call staging (PJRT
+    /// literal uploads/downloads) is excluded via a scoped pause in the
+    /// model wrappers; see `util::count_alloc`.
+    pub round_alloc_counted_bytes: Vec<u64>,
     /// n-alpha: [n] -> (accepted, tried) at chain-draft position n+1.
     pub alpha: Vec<(u64, u64)>,
     /// Draft tokens proposed in total (chain mode: gamma per round).
@@ -80,6 +89,7 @@ impl GenRecord {
             dragged_rounds: 0,
             round_host_alloc_bytes: Vec::new(),
             scratch_reuse_total: 0,
+            round_alloc_counted_bytes: Vec::new(),
             alpha: vec![(0, 0); 5],
             drafted: 0,
             wall_ns: 0,
@@ -130,6 +140,31 @@ impl GenRecord {
     pub fn steady_host_alloc_bytes(&self) -> u64 {
         self.round_host_alloc_bytes.iter().skip(1).sum()
     }
+
+    /// Allocator-counted bytes AFTER warm-up — the allocator-level form
+    /// of [`GenRecord::steady_host_alloc_bytes`] (0 unless something
+    /// outside the tracked scratch allocated; always 0 without the
+    /// `count-alloc` feature because the vector stays empty).
+    pub fn counted_steady_alloc_bytes(&self) -> u64 {
+        self.round_alloc_counted_bytes.iter().skip(1).sum()
+    }
+
+    /// Pre-size every per-round vector for a generation of up to
+    /// `max_new` tokens so steady-state rounds never grow the record —
+    /// metrics bookkeeping is part of the zero-allocation guarantee the
+    /// counting allocator asserts. (Draft-width entries can be several
+    /// per round — one per draft level/extend call.)
+    pub fn reserve_rounds(&mut self, max_new: usize) {
+        use crate::spec::scratch::ensure_cap;
+        let rounds = max_new.max(1);
+        ensure_cap(&mut self.tokens, max_new + 16);
+        ensure_cap(&mut self.round_accepts, rounds);
+        ensure_cap(&mut self.round_tree_nodes, rounds);
+        ensure_cap(&mut self.round_verify_t, rounds);
+        ensure_cap(&mut self.round_draft_w, rounds * 12);
+        ensure_cap(&mut self.round_host_alloc_bytes, rounds);
+        ensure_cap(&mut self.round_alloc_counted_bytes, rounds);
+    }
 }
 
 /// Aggregate over many generations.
@@ -151,6 +186,8 @@ pub struct Aggregate {
     pub dragged_rounds: usize,
     pub host_alloc_bytes: u64,
     pub scratch_reuse_total: u64,
+    /// Allocator-counted bytes across all rounds (`count-alloc` only).
+    pub alloc_counted_bytes: u64,
     pub alpha: Vec<(u64, u64)>,
     pub wall_each: Vec<u64>,
     pub timeline: Timeline,
@@ -178,6 +215,7 @@ impl Aggregate {
         self.dragged_rounds += r.dragged_rounds;
         self.host_alloc_bytes += r.round_host_alloc_bytes.iter().sum::<u64>();
         self.scratch_reuse_total += r.scratch_reuse_total;
+        self.alloc_counted_bytes += r.round_alloc_counted_bytes.iter().sum::<u64>();
         for (i, &(a, t)) in r.alpha.iter().enumerate() {
             self.alpha[i].0 += a;
             self.alpha[i].1 += t;
@@ -327,6 +365,30 @@ mod tests {
         assert_eq!(a.host_alloc_bytes, 2 * (4096 + 128));
         assert_eq!(a.scratch_reuse_total, 6);
         assert_eq!(GenRecord::new(1).steady_host_alloc_bytes(), 0);
+    }
+
+    #[test]
+    fn counted_alloc_accounting_and_round_reserve() {
+        let mut r = GenRecord::new(1);
+        r.round_alloc_counted_bytes = vec![512, 0, 0];
+        assert_eq!(r.counted_steady_alloc_bytes(), 0, "warm-up round excluded");
+        r.round_alloc_counted_bytes.push(32);
+        assert_eq!(r.counted_steady_alloc_bytes(), 32);
+        let mut a = Aggregate::new();
+        a.add(&r);
+        a.add(&r);
+        assert_eq!(a.alloc_counted_bytes, 2 * (512 + 32));
+        assert_eq!(GenRecord::new(1).counted_steady_alloc_bytes(), 0, "empty without feature");
+        // reserving twice is idempotent and never shrinks
+        let mut r = GenRecord::new(1);
+        r.reserve_rounds(64);
+        let caps = (r.tokens.capacity(), r.round_accepts.capacity(), r.round_draft_w.capacity());
+        assert!(caps.0 >= 64 && caps.1 >= 64 && caps.2 >= 64);
+        r.reserve_rounds(8);
+        assert_eq!(
+            (r.tokens.capacity(), r.round_accepts.capacity(), r.round_draft_w.capacity()),
+            caps
+        );
     }
 
     #[test]

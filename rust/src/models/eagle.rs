@@ -91,6 +91,10 @@ impl EagleDraft {
         len: usize,
         cache: &mut KvCache,
     ) -> Result<DraftOut> {
+        // device-call staging is the documented exception to the
+        // zero-alloc round guarantee (see util::count_alloc)
+        #[cfg(feature = "count-alloc")]
+        let _device_pause = crate::util::count_alloc::pause();
         let p = self.prefill_p;
         assert_eq!(tokens.len(), p);
         assert_eq!(feats.len(), p * self.d);
@@ -134,6 +138,8 @@ impl EagleDraft {
         pos: &[i32],
         bias: &[f32],
     ) -> Result<DraftOut> {
+        #[cfg(feature = "count-alloc")]
+        let _device_pause = crate::util::count_alloc::pause();
         let b = write_base.len();
         let exe_name = step_exe_name(w, b);
         let rt = &self.exes.rt;

@@ -84,6 +84,10 @@ impl TargetModel {
     /// Prefill (bs=1): pad/truncate `prompt` to P; returns logits/feats for
     /// all P positions and fills `cache`. Returns the used prompt length.
     pub fn prefill(&self, prompt: &[u32], cache: &mut KvCache) -> Result<(ForwardOut, usize)> {
+        // device-call staging is the documented exception to the
+        // zero-alloc round guarantee (see util::count_alloc)
+        #[cfg(feature = "count-alloc")]
+        let _device_pause = crate::util::count_alloc::pause();
         let p = self.prefill_p;
         if prompt.is_empty() {
             bail!("empty prompt");
@@ -116,6 +120,8 @@ impl TargetModel {
         cache_lens: &[i32],
         tokens: &[i32],
     ) -> Result<ForwardOut> {
+        #[cfg(feature = "count-alloc")]
+        let _device_pause = crate::util::count_alloc::pause();
         let b = cache_lens.len();
         let exe_name = if b == 1 { "decode".to_string() } else { format!("decode_bs{b}") };
         let rt = &self.exes.rt;
@@ -160,6 +166,8 @@ impl TargetModel {
         bias: &[f32],
         accept_a: usize,
     ) -> Result<ForwardOut> {
+        #[cfg(feature = "count-alloc")]
+        let _device_pause = crate::util::count_alloc::pause();
         let b = old_lens.len();
         let exe_name = verify_exe_name(t, b);
         let rt = &self.exes.rt;
@@ -193,6 +201,8 @@ impl TargetModel {
         slot: usize,
         prompt: &[u32],
     ) -> Result<(ForwardOut, usize)> {
+        #[cfg(feature = "count-alloc")]
+        let _device_pause = crate::util::count_alloc::pause();
         let p = self.prefill_p;
         if prompt.len() > p {
             bail!("prompt too long");

@@ -10,16 +10,24 @@
 //!
 //! The worker admits requests through the [`Scheduler`]: per-request
 //! FCFS by default, or — with `--batch N --width-grouping` — width-aware
-//! sub-batches where greedy EAGLE lanes are grouped by their predicted
+//! sub-batches where EAGLE lanes are grouped by their predicted
 //! verify width (`"width_hint"` request field, falling back to the
 //! `"verify_width"` pin) and executed on the batched engine with the
 //! group's width cap, so a low-acceptance group never runs at a hot
 //! lane's width. With `--batch N` alone (FCFS), an admitted multi-lane
-//! batch of compatible greedy EAGLE requests still executes on the
-//! batched engine — uncapped, at the max over lane fits — so the
-//! serve-time FCFS-vs-grouped A/B matches the engine-level
-//! `repro eval --exp widthsched` comparison. Groups the batched engine
-//! cannot take (sampling, other methods, mixed max_tokens/tree classes,
+//! batch of compatible EAGLE requests still executes on the batched
+//! engine — uncapped, at the max over lane fits — so the serve-time
+//! FCFS-vs-grouped A/B matches the engine-level
+//! `repro eval --exp widthsched` comparison. Sampled (T>0) requests
+//! batch too: lanes sharing a temperature co-execute with per-request
+//! RNG seeds (`generate_pooled_seeded`), so a sampled response never
+//! depends on which other lanes shared its batch, and stays
+//! distribution-preserving; it is bit-identical to the equal-seed bs=1
+//! run when the per-round tree plans match (static trees, or matching
+//! width families with the adaptive controller off — see the
+//! batch-engine module doc). Groups the batched engine cannot take
+//! (other methods,
+//! mixed max_tokens/tree/temperature classes, verify-width pins,
 //! missing `_bs{b}` executables) fall back to the bs=1 path. The worker
 //! owns one [`ScratchPool`] for its lifetime, so batched groups reuse
 //! warm per-lane round state across admissions (keyed by KV slot). The
@@ -272,11 +280,13 @@ fn run_group(
     // and the bs{b} executables are lowered. Width-planned groups arrive
     // pre-classed by the scheduler; an FCFS admission may mix classes,
     // so the batched FCFS baseline additionally requires one shared
-    // (max_tokens, tree) class — the lock-step engine runs every lane
-    // under one GenConfig.
-    let same_class = reqs
-        .windows(2)
-        .all(|p| p[0].max_tokens == p[1].max_tokens && p[0].tree == p[1].tree);
+    // (max_tokens, tree, temperature) class — the lock-step engine runs
+    // every lane under one GenConfig (seeds stay per-lane).
+    let same_class = reqs.windows(2).all(|p| {
+        p[0].max_tokens == p[1].max_tokens
+            && p[0].tree == p[1].tree
+            && p[0].temperature_class() == p[1].temperature_class()
+    });
     let batchable = b >= 2
         && default_width == WidthSelect::Auto
         && same_class
@@ -301,11 +311,15 @@ fn run_group(
         }
         let gen = GenConfig {
             max_new: reqs[0].max_tokens,
-            temperature: 0.0,
+            temperature: reqs[0].temperature.max(0.0),
             seed: reqs[0].seed,
             eos: Some(bpe.eos()),
         };
-        match engine.generate_pooled(&prompts, &gen, pool) {
+        // per-request seeds: a lane's sampled stream is its own, so the
+        // response matches the request's equal-seed bs=1 run no matter
+        // which other lanes share the batch
+        let seeds: Vec<u64> = reqs.iter().map(|r| r.seed).collect();
+        match engine.generate_pooled_seeded(&prompts, &seeds, &gen, pool) {
             Ok(recs) => {
                 stats.batched.fetch_add(b as u64, Ordering::Relaxed);
                 let lat_ms = t0.elapsed().as_secs_f64() * 1e3;

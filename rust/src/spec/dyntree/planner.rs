@@ -50,13 +50,10 @@ pub fn select_frontier_into(
         return;
     }
     // total order (score desc, index asc), so the allocation-free
-    // unstable sort is deterministic and equal to the stable one
+    // unstable sort is deterministic and equal to the stable one;
+    // `total_cmp` keeps it total even for NaN scores from a bad artifact
     out.sort_unstable_by(|&a, &b| {
-        tree.nodes[b]
-            .score
-            .partial_cmp(&tree.nodes[a].score)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
+        tree.nodes[b].score.total_cmp(&tree.nodes[a].score).then(a.cmp(&b))
     });
     out.truncate(k);
     out.sort_unstable();
@@ -163,13 +160,10 @@ pub fn rerank_into(tree: &DraftTree, budget: usize, out: &mut DraftTree, rr: &mu
     rr.order.extend(1..n);
     // total order (score desc, index asc): unstable sort is exact and
     // allocation-free (stable sort would heap-allocate a merge buffer
-    // every round, invisibly to the capacity-delta metric)
+    // every round, invisibly to the capacity-delta metric); `total_cmp`
+    // keeps it total even for NaN scores from a bad artifact
     rr.order.sort_unstable_by(|&a, &b| {
-        tree.nodes[b]
-            .score
-            .partial_cmp(&tree.nodes[a].score)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
+        tree.nodes[b].score.total_cmp(&tree.nodes[a].score).then(a.cmp(&b))
     });
     rr.keep.clear();
     rr.keep.resize(n, false);
@@ -211,7 +205,7 @@ pub fn rerank_into(tree: &DraftTree, budget: usize, out: &mut DraftTree, rr: &mu
         }
         let p = tree.nodes[i].parent.expect("non-root node must have a parent");
         let nd = &tree.nodes[i];
-        let ni = out.add(rr.remap[p], nd.token, nd.score, nd.q.clone());
+        let ni = out.add(rr.remap[p], nd.token, nd.score, nd.q);
         rr.remap[i] = ni;
         rr.kept.push(i);
     }

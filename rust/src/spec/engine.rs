@@ -20,21 +20,25 @@
 //! §Perf iteration 3 (zero-allocation round state): the round loop runs
 //! on a [`RoundScratch`] reserved once per generation — flat feature
 //! arena, logits slab, staging buffers, ancestor bitsets — so steady-
-//! state rounds perform no per-node heap allocation on the greedy path
+//! state rounds perform no per-node heap allocation
 //! (`GenRecord::round_host_alloc_bytes` records the per-round scratch
-//! growth; 0 once warm). At T>0 the sampled-q distributions retained in
-//! tree nodes remain `Rc` allocations (the SpecInfer rule needs them to
-//! outlive the round).
+//! growth; 0 once warm). This covers T>0 too: the sampled-q
+//! distributions the SpecInfer rule retains live in the scratch's
+//! q-slab (`RoundScratch::qs`; nodes hold row ids, siblings share a
+//! row), and the acceptance walk runs on reused staging buffers via
+//! [`sampled_accept_walk`] — the same walk the batched engine calls per
+//! lane, so equal-seed bs=1 and batched runs are bit-identical.
 
 use anyhow::{bail, Result};
-use std::rc::Rc;
 use std::time::Instant;
 
 use super::dyntree::{
     expand_candidates_into, plan_round_width, rerank_into, select_frontier_into, width_hint,
     DynTreeParams, SpecController, TreePolicy, WidthFamily,
 };
-use super::sampling::{argmax, sample, softmax, softmax_into, top_k_into, tree_accept, TreeVerdict};
+use super::sampling::{
+    argmax, sample, softmax, softmax_into, top_k_into, tree_accept_rows, TreeVerdict,
+};
 use super::scratch::RoundScratch;
 use super::tree::{chain_extend_bias_to, fill_step_rows_into, DraftTree, TreeSpec};
 use crate::metrics::GenRecord;
@@ -173,6 +177,9 @@ impl<'a> EagleEngine<'a> {
     pub fn generate(&self, prompt: &[u32], cfg: &GenConfig) -> Result<GenRecord> {
         let t_all = Instant::now();
         let mut rec = GenRecord::new(prompt.len());
+        // pre-size the record's per-round vectors so steady-state rounds
+        // never touch the allocator through metrics bookkeeping either
+        rec.reserve_rounds(cfg.max_new);
         let mut rng = Rng::new(cfg.seed);
         let tgt = self.target;
         let d = tgt.d;
@@ -246,6 +253,9 @@ impl<'a> EagleEngine<'a> {
         let max_nodes = self.max_tree_nodes();
         let mut scratch = RoundScratch::new(d, vocab);
         scratch.reserve(d, vocab, s_tot, max_nodes, t_reserve, w_reserve);
+        if cfg.temperature > 0.0 {
+            scratch.reserve_q(vocab, max_nodes);
+        }
         let mut tree = DraftTree::default();
         tree.nodes.reserve(max_nodes);
 
@@ -255,6 +265,8 @@ impl<'a> EagleEngine<'a> {
                 break; // cache budget exhausted
             }
             let fp0 = scratch.footprint() + tree.capacity_bytes();
+            #[cfg(feature = "count-alloc")]
+            let counted0 = crate::util::count_alloc::thread_allocated_bytes();
             // 1. build the draft tree
             let th = Instant::now();
             tree.reset(committed[m]);
@@ -343,16 +355,7 @@ impl<'a> EagleEngine<'a> {
             let th = Instant::now();
             scratch.alpha_before.clear();
             scratch.alpha_before.extend_from_slice(&rec.alpha);
-            let bonus = self.accept(
-                &tree,
-                &vout.logits,
-                cfg,
-                &mut rng,
-                &mut rec,
-                &mut scratch.path,
-                &mut scratch.children,
-                &mut scratch.probs,
-            );
+            let bonus = self.accept(&tree, &vout.logits, cfg, &mut rng, &mut rec, &mut scratch);
             if let Some(c) = controller.as_mut() {
                 scratch.alpha_delta.clear();
                 scratch.alpha_delta.extend(
@@ -407,6 +410,9 @@ impl<'a> EagleEngine<'a> {
                 if grew == 0 {
                     rec.scratch_reuse_total += 1;
                 }
+                #[cfg(feature = "count-alloc")]
+                rec.round_alloc_counted_bytes
+                    .push(crate::util::count_alloc::thread_allocated_bytes() - counted0);
                 break;
             }
 
@@ -468,6 +474,9 @@ impl<'a> EagleEngine<'a> {
             if grew == 0 {
                 rec.scratch_reuse_total += 1;
             }
+            #[cfg(feature = "count-alloc")]
+            rec.round_alloc_counted_bytes
+                .push(crate::util::count_alloc::thread_allocated_bytes() - counted0);
         }
 
         rec.wall_ns = t_all.elapsed().as_nanos() as u64;
@@ -515,24 +524,29 @@ impl<'a> EagleEngine<'a> {
                 }
                 // allocation-free unstable sort; (parent, token) tiebreak
                 // makes the order total, so exact-score ties stay
-                // deterministic across std versions
+                // deterministic across std versions; `total_cmp` keeps
+                // it total even for NaN scores from a bad artifact (no
+                // mid-round comparator panic in the server worker)
                 s.cands.sort_unstable_by(|a, b| {
-                    b.2.partial_cmp(&a.2).unwrap().then(a.0.cmp(&b.0)).then(a.1.cmp(&b.1))
+                    b.2.total_cmp(&a.2).then(a.0.cmp(&b.0)).then(a.1.cmp(&b.1))
                 });
                 s.cands.truncate(width);
             } else {
                 // T>0: sample children i.i.d. from q (SpecInfer rule); the
                 // tree shape is fixed by distributing `width` over frontier.
+                // q lands in the round's slab — one row per frontier node,
+                // shared by its sampled children (no Rc allocation).
                 let per = (width / s.frontier.len().max(1)).max(1);
                 for &p in &s.frontier {
                     let logits = s.logits.get(p).expect("frontier node has logits");
-                    let q = Rc::new(softmax(logits, cfg.temperature));
+                    softmax_into(logits, cfg.temperature, &mut s.probs);
+                    let qid = s.qs.push(&s.probs) as u32;
                     for _ in 0..per {
                         if s.cands.len() >= width {
                             break;
                         }
-                        let tok = sample(&q, rng) as u32;
-                        s.cands.push((p, tok, 0.0, Some(q.clone())));
+                        let tok = sample(s.qs.get(qid as usize), rng) as u32;
+                        s.cands.push((p, tok, 0.0, Some(qid)));
                     }
                 }
             }
@@ -675,13 +689,16 @@ impl<'a> EagleEngine<'a> {
             } else {
                 // T>0: children sampled i.i.d. from q (SpecInfer rule); the
                 // cumulative ln q(tok) stands in as the confidence score.
+                // q lands in the round's slab (row shared by siblings).
                 for &p in &s.frontier {
                     let logits = s.logits.get(p).expect("frontier node has logits");
-                    let q = Rc::new(softmax(logits, cfg.temperature));
+                    softmax_into(logits, cfg.temperature, &mut s.probs);
+                    let qid = s.qs.push(&s.probs) as u32;
                     for _ in 0..params.branch {
-                        let tok = sample(&q, rng);
+                        let q = s.qs.get(qid as usize);
+                        let tok = sample(q, rng);
                         let score = tree.nodes[p].score + q[tok].max(1e-20).ln();
-                        s.cands.push((p, tok as u32, score, Some(q.clone())));
+                        s.cands.push((p, tok as u32, score, Some(qid)));
                     }
                 }
             }
@@ -767,11 +784,10 @@ impl<'a> EagleEngine<'a> {
         parent.score + prob.max(1e-20).ln()
     }
 
-    /// Acceptance walk over verified logits. Fills `path` with the
-    /// accepted node indices (incl. root) and returns the bonus token;
-    /// `children`/`probs` are reused walk buffers from the round scratch.
-    /// Chain-position stats feed n-α.
-    #[allow(clippy::too_many_arguments)]
+    /// Acceptance walk over verified logits. Fills `s.path` with the
+    /// accepted node indices (incl. root) and returns the bonus token.
+    /// All walk state (path, child lists, softmax row, T>0 staging)
+    /// comes from the round scratch. Chain-position stats feed n-α.
     fn accept(
         &self,
         tree: &DraftTree,
@@ -779,63 +795,97 @@ impl<'a> EagleEngine<'a> {
         cfg: &GenConfig,
         rng: &mut Rng,
         rec: &mut GenRecord,
-        path: &mut Vec<usize>,
-        children: &mut Vec<usize>,
-        probs: &mut Vec<f32>,
+        s: &mut RoundScratch,
     ) -> u32 {
         let vocab = self.target.vocab;
         let row = |i: usize| &vlogits[i * vocab..(i + 1) * vocab];
-        path.clear();
-        path.push(0);
+        if cfg.temperature > 0.0 {
+            return sampled_accept_walk(tree, row, cfg.temperature, rng, &mut rec.alpha, s);
+        }
+        s.path.clear();
+        s.path.push(0);
         let mut cur = 0usize;
         loop {
             let depth = tree.nodes[cur].depth; // n-α bucket = depth of child - 1
-            tree.children_into(cur, children);
-            if cfg.temperature <= 0.0 {
-                let want = argmax(row(cur));
-                let next = children.iter().copied().find(|&c| tree.nodes[c].token as usize == want);
-                let nbuckets = rec.alpha.len();
-                if depth < nbuckets && !children.is_empty() {
-                    let b = depth.min(nbuckets - 1);
-                    rec.alpha[b].1 += 1;
-                    if next.is_some() {
-                        rec.alpha[b].0 += 1;
-                    }
-                }
-                match next {
-                    Some(c) => {
-                        path.push(c);
-                        cur = c;
-                    }
-                    None => return want as u32,
-                }
-            } else {
-                softmax_into(row(cur), cfg.temperature, probs);
-                if children.is_empty() {
-                    return sample(probs, rng) as u32;
-                }
-                let toks: Vec<usize> =
-                    children.iter().map(|&c| tree.nodes[c].token as usize).collect();
-                let qs: Vec<Rc<Vec<f32>>> = children
-                    .iter()
-                    .map(|&c| tree.nodes[c].q.clone().expect("sampled node missing q"))
-                    .collect();
-                let qrefs: Vec<&[f32]> = qs.iter().map(|q| q.as_slice()).collect();
-                let nbuckets = rec.alpha.len();
-                if depth < nbuckets {
-                    rec.alpha[depth.min(nbuckets - 1)].1 += 1;
-                }
-                match tree_accept(probs, &qrefs, &toks, rng) {
-                    TreeVerdict::AcceptChild(ci) => {
-                        if depth < nbuckets {
-                            rec.alpha[depth.min(nbuckets - 1)].0 += 1;
-                        }
-                        path.push(children[ci]);
-                        cur = children[ci];
-                    }
-                    TreeVerdict::Residual(t) => return t as u32,
+            tree.children_into(cur, &mut s.children);
+            let want = argmax(row(cur));
+            let next = s.children.iter().copied().find(|&c| tree.nodes[c].token as usize == want);
+            let nbuckets = rec.alpha.len();
+            if depth < nbuckets && !s.children.is_empty() {
+                let b = depth.min(nbuckets - 1);
+                rec.alpha[b].1 += 1;
+                if next.is_some() {
+                    rec.alpha[b].0 += 1;
                 }
             }
+            match next {
+                Some(c) => {
+                    s.path.push(c);
+                    cur = c;
+                }
+                None => return want as u32,
+            }
+        }
+    }
+}
+
+/// SpecInfer acceptance walk at T>0, shared by the bs=1 and the batched
+/// engine (per lane, with the lane's own RNG stream and scratch) — one
+/// code path, so a request's sampled output is bit-identical whether it
+/// runs alone or inside a batch. At each accepted node the children are
+/// tried under the recursive-rejection rule ([`tree_accept_rows`]) with
+/// their sampled-from q rows fetched from the scratch's q-slab; the walk
+/// returns the bonus/residual token emitted after the accepted path
+/// (`s.path`, root included). `alpha` collects per-depth (hit, tried)
+/// chain stats. Allocation-free on warm scratch: child tokens / q ids /
+/// the working residual live in `s.walk_toks` / `s.walk_qids` /
+/// `s.presidual`.
+pub fn sampled_accept_walk<'a>(
+    tree: &DraftTree,
+    row_of: impl Fn(usize) -> &'a [f32],
+    temperature: f32,
+    rng: &mut Rng,
+    alpha: &mut [(u64, u64)],
+    s: &mut RoundScratch,
+) -> u32 {
+    s.path.clear();
+    s.path.push(0);
+    let mut cur = 0usize;
+    loop {
+        let depth = tree.nodes[cur].depth; // n-α bucket = depth of child - 1
+        tree.children_into(cur, &mut s.children);
+        softmax_into(row_of(cur), temperature, &mut s.probs);
+        if s.children.is_empty() {
+            return sample(&s.probs, rng) as u32;
+        }
+        s.walk_toks.clear();
+        s.walk_qids.clear();
+        for &c in &s.children {
+            s.walk_toks.push(tree.nodes[c].token as usize);
+            s.walk_qids.push(tree.nodes[c].q.expect("sampled node missing q"));
+        }
+        let nbuckets = alpha.len();
+        if depth < nbuckets {
+            alpha[depth.min(nbuckets - 1)].1 += 1;
+        }
+        let verdict = tree_accept_rows(
+            &s.probs,
+            s.children.len(),
+            |ci| s.qs.get(s.walk_qids[ci] as usize),
+            &s.walk_toks,
+            &mut s.presidual,
+            rng,
+        );
+        match verdict {
+            TreeVerdict::AcceptChild(ci) => {
+                if depth < nbuckets {
+                    alpha[depth.min(nbuckets - 1)].0 += 1;
+                }
+                let c = s.children[ci];
+                s.path.push(c);
+                cur = c;
+            }
+            TreeVerdict::Residual(t) => return t as u32,
         }
     }
 }

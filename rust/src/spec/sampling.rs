@@ -17,16 +17,34 @@ pub fn softmax(logits: &[f32], t: f32) -> Vec<f32> {
 /// [`softmax`] into a reused output buffer (cleared first) — the
 /// hot-loop form; identical float operations, so results are
 /// bit-identical to the allocating wrapper.
+///
+/// Degenerate rows degrade deterministically instead of leaking
+/// zero/NaN mass downstream (a later `sample`/`Rng::weighted` would
+/// otherwise draw from non-positive total mass):
+/// * a `+inf` logit is mathematically a point mass — the row becomes
+///   one-hot at the argmax, the correct limit (and what the greedy path
+///   picks on the same row);
+/// * every logit `-inf`, or a NaN poisoning the normalizer, has no
+///   meaningful limit — the row becomes UNIFORM.
+/// A bad artifact row thus yields a deterministic, well-formed
+/// distribution, not a panic or an undefined pick.
 pub fn softmax_into(logits: &[f32], t: f32, out: &mut Vec<f32>) {
     debug_assert!(t > 0.0);
     let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
     out.clear();
     out.extend(logits.iter().map(|&l| ((l - m) / t).exp()));
     let s: f32 = out.iter().sum();
-    if s > 0.0 {
+    if s > 0.0 && s.is_finite() {
         for x in out.iter_mut() {
             *x /= s;
         }
+    } else if m == f32::INFINITY {
+        let best = argmax(logits);
+        out.iter_mut().for_each(|x| *x = 0.0);
+        out[best] = 1.0;
+    } else {
+        let u = 1.0 / out.len().max(1) as f32;
+        out.iter_mut().for_each(|x| *x = u);
     }
 }
 
@@ -56,10 +74,14 @@ pub fn top_k(probs: &[f32], k: usize) -> Vec<(usize, f32)> {
 /// hot-loop form of [`top_k`]: the vocab-sized sort arena is retained
 /// across calls, and callers read the probabilities back as `probs[i]`.
 /// Same comparator as [`top_k`], so the selection is identical.
+///
+/// `total_cmp` (not `partial_cmp(..).unwrap()`): a single NaN from a bad
+/// artifact must degrade to a deterministic total order, not panic the
+/// server worker mid-round.
 pub fn top_k_into(probs: &[f32], k: usize, idx: &mut Vec<usize>) {
     idx.clear();
     idx.extend(0..probs.len());
-    idx.sort_unstable_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+    idx.sort_unstable_by(|&a, &b| probs[b].total_cmp(&probs[a]));
     idx.truncate(k);
 }
 
@@ -75,19 +97,36 @@ pub enum Verdict {
 /// Chain speculative sampling rule (Leviathan et al., Appendix A.1):
 /// accept draft token `tok` w.p. min(1, p/q); on rejection resample from
 /// norm(max(0, p - q)). Lossless for any draft distribution q.
+///
+/// Thin allocating wrapper over [`chain_accept_into`].
 pub fn chain_accept(p: &[f32], q: &[f32], tok: usize, rng: &mut Rng) -> Verdict {
+    let mut residual = Vec::new();
+    chain_accept_into(p, q, tok, &mut residual, rng)
+}
+
+/// [`chain_accept`] with the rejection residual built in a reused buffer
+/// (cleared first) — the hot-loop form: identical float operations and
+/// RNG draws, so verdicts are bit-identical to the allocating wrapper.
+pub fn chain_accept_into(
+    p: &[f32],
+    q: &[f32],
+    tok: usize,
+    residual: &mut Vec<f32>,
+    rng: &mut Rng,
+) -> Verdict {
     let pi = p[tok];
     let qi = q[tok].max(1e-20);
     if rng.f32() < (pi / qi).min(1.0) {
         return Verdict::Accept;
     }
-    let residual: Vec<f32> = p.iter().zip(q).map(|(&a, &b)| (a - b).max(0.0)).collect();
+    residual.clear();
+    residual.extend(p.iter().zip(q).map(|(&a, &b)| (a - b).max(0.0)));
     let s: f32 = residual.iter().sum();
     if s <= 0.0 {
         // p <= q everywhere can only happen with float slop; fall back to p
         return Verdict::Resample(sample(p, rng));
     }
-    Verdict::Resample(rng.weighted(&residual))
+    Verdict::Resample(rng.weighted(residual))
 }
 
 /// Multi-child (tree) speculative sampling — SpecInfer-style recursive
@@ -96,38 +135,73 @@ pub fn chain_accept(p: &[f32], q: &[f32], tok: usize, rng: &mut Rng) -> Verdict 
 /// the final output is distributed exactly as `p`.
 ///
 /// Returns (accepted_child_index, token) or the residual-sampled token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TreeVerdict {
     AcceptChild(usize),
     Residual(usize),
 }
 
+/// Thin allocating wrapper over [`tree_accept_into`].
 pub fn tree_accept(
     p: &[f32],
     q_per_child: &[&[f32]],
     child_tokens: &[usize],
     rng: &mut Rng,
 ) -> TreeVerdict {
-    let mut p_cur: Vec<f32> = p.to_vec();
-    for (ci, (&tok, q)) in child_tokens.iter().zip(q_per_child).enumerate() {
-        let pi = p_cur[tok];
+    let mut p_work = Vec::new();
+    tree_accept_into(p, q_per_child, child_tokens, &mut p_work, rng)
+}
+
+/// [`tree_accept`] with the working/residual distribution kept in a
+/// reused buffer (overwritten with `p` first) — identical float
+/// operations and RNG draws, so verdicts are bit-identical to the
+/// allocating wrapper.
+pub fn tree_accept_into(
+    p: &[f32],
+    q_per_child: &[&[f32]],
+    child_tokens: &[usize],
+    p_work: &mut Vec<f32>,
+    rng: &mut Rng,
+) -> TreeVerdict {
+    tree_accept_rows(p, q_per_child.len(), |ci| q_per_child[ci], child_tokens, p_work, rng)
+}
+
+/// The recursive-rejection core with the per-child q distributions
+/// fetched through an accessor instead of a slice of slices — the form
+/// the engines use so q rows can live in the round scratch's flat
+/// q-slab (`RoundScratch::qs`) with no per-call `Vec<&[f32]>` staging.
+pub fn tree_accept_rows<'a>(
+    p: &[f32],
+    n_children: usize,
+    q_of: impl Fn(usize) -> &'a [f32],
+    child_tokens: &[usize],
+    p_work: &mut Vec<f32>,
+    rng: &mut Rng,
+) -> TreeVerdict {
+    p_work.clear();
+    p_work.extend_from_slice(p);
+    for ci in 0..n_children {
+        let tok = child_tokens[ci];
+        let q = q_of(ci);
+        let pi = p_work[tok];
         let qi = q[tok].max(1e-20);
         if rng.f32() < (pi / qi).min(1.0) {
             return TreeVerdict::AcceptChild(ci);
         }
         // reject: p <- norm(max(0, p - q))
         let mut s = 0.0f32;
-        for (a, &b) in p_cur.iter_mut().zip(q.iter()) {
+        for (a, &b) in p_work.iter_mut().zip(q.iter()) {
             *a = (*a - b).max(0.0);
             s += *a;
         }
         if s <= 0.0 {
             return TreeVerdict::Residual(sample(p, rng));
         }
-        for a in &mut p_cur {
+        for a in p_work.iter_mut() {
             *a /= s;
         }
     }
-    TreeVerdict::Residual(sample(&p_cur, rng))
+    TreeVerdict::Residual(sample(p_work, rng))
 }
 
 /// Greedy variants: a draft child is accepted iff it IS the argmax.
@@ -159,6 +233,37 @@ mod tests {
         let p = softmax(&[-1e30, 0.0, -1e30], 1.0);
         assert!((p[1] - 1.0).abs() < 1e-6);
         assert!(!p.iter().any(|x| x.is_nan()));
+    }
+
+    #[test]
+    fn softmax_degenerate_rows_fall_back_to_uniform() {
+        // all -inf: the max is -inf, every exp is NaN, the sum is NaN
+        let p = softmax(&[f32::NEG_INFINITY; 4], 1.0);
+        assert!(p.iter().all(|&x| (x - 0.25).abs() < 1e-7), "all -inf -> uniform: {p:?}");
+        // a +inf logit is a point mass: one-hot at the argmax (the
+        // correct limit, matching what T=0 argmax picks on the same row)
+        let p = softmax(&[0.0, f32::INFINITY, -1.0], 1.0);
+        assert_eq!(p, vec![0.0, 1.0, 0.0], "inf row -> point mass: {p:?}");
+        // a NaN logit poisons the sum; still uniform, never NaN out
+        let p = softmax(&[0.0, f32::NAN, 1.0], 1.0);
+        assert!(p.iter().all(|&x| (x - 1.0 / 3.0).abs() < 1e-7), "NaN row -> uniform: {p:?}");
+        // and sampling from the fallback cannot panic or loop
+        let mut rng = Rng::new(5);
+        assert!(sample(&p, &mut rng) < 3);
+    }
+
+    #[test]
+    fn top_k_survives_nan_probs() {
+        // NaN sorts deterministically under total_cmp instead of
+        // panicking the comparator mid-round
+        let t = top_k(&[0.1, f32::NAN, 0.5, 0.2], 2);
+        assert_eq!(t.len(), 2);
+        let again = top_k(&[0.1, f32::NAN, 0.5, 0.2], 2);
+        assert_eq!(
+            t.iter().map(|x| x.0).collect::<Vec<_>>(),
+            again.iter().map(|x| x.0).collect::<Vec<_>>(),
+            "NaN ordering must be deterministic"
+        );
     }
 
     #[test]

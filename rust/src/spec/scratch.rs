@@ -35,10 +35,13 @@
 //! `GenRecord::round_host_alloc_bytes` (0 in steady state) with
 //! `GenRecord::scratch_reuse_total` counting fully-reused rounds.
 //!
-//! Exception: at T>0 the sampled-q distributions (`TreeNode::q`) must
-//! outlive the round inside the tree for the SpecInfer acceptance rule,
-//! so they remain `Rc<Vec<f32>>` allocations; the zero-allocation claim
-//! is for the greedy (T=0) hot path — the Table-7 serving setting.
+//! T>0 rounds are covered too: the sampled-q distributions the SpecInfer
+//! acceptance rule needs are rows of a per-lane **q-slab**
+//! ([`RoundScratch::qs`], one flat `Vec<f32>` keyed by `TreeNode::q` row
+//! ids), and the acceptance walk stages its child tokens / q ids /
+//! working residual in reused buffers (`walk_toks`/`walk_qids`/
+//! `presidual`) — no `Rc<Vec<f32>>` clones anywhere on the sampled path.
+//! Siblings sampled from the same frontier node share one slab row.
 //!
 //! Output equivalence against the allocating reference implementations
 //! (`spec::tree::reference`, `verify_inputs`, `fill_step_rows`) is
@@ -46,14 +49,12 @@
 //! across consecutive rounds; `host/round_scratch` vs `host/round_ref`
 //! in `rust/benches/hot_path.rs` tracks the speedup.
 
-use std::rc::Rc;
-
 use super::dyntree::{DynTreeParams, RerankScratch};
 use super::tree::DraftTree;
 
-/// One candidate considered during tree growth:
-/// `(parent node, token, cumulative score, sampled-from q at T>0)`.
-pub type Cand = (usize, u32, f32, Option<Rc<Vec<f32>>>);
+/// One candidate considered during tree growth: `(parent node, token,
+/// cumulative score, q-slab row id of the sampled-from q at T>0)`.
+pub type Cand = (usize, u32, f32, Option<u32>);
 
 fn cap_bytes<T>(v: &Vec<T>) -> usize {
     v.capacity() * std::mem::size_of::<T>()
@@ -214,6 +215,11 @@ pub struct RoundScratch {
     pub feat: FeatArena,
     /// Per-node draft logits (dist of the node's successor token).
     pub logits: LogitsSlab,
+    /// Q-slab: the sampled-from draft distributions retained for the
+    /// SpecInfer acceptance rule at T>0, one vocab-wide row per expanded
+    /// frontier node (`TreeNode::q` holds the row id; siblings share).
+    /// Unused (and empty) on the greedy path.
+    pub qs: FeatArena,
     /// Scratch KV slot assigned to each stepped node.
     pub node_slot: Vec<Option<usize>>,
     // -- growth working sets ------------------------------------------------
@@ -241,6 +247,12 @@ pub struct RoundScratch {
     // -- acceptance walk ----------------------------------------------------
     pub path: Vec<usize>,
     pub children: Vec<usize>,
+    /// T>0 walk staging: the current node's child tokens...
+    pub walk_toks: Vec<usize>,
+    /// ...their q-slab row ids...
+    pub walk_qids: Vec<u32>,
+    /// ...and the recursive-rejection working/residual distribution.
+    pub presidual: Vec<f32>,
     pub alpha_before: Vec<(u64, u64)>,
     pub alpha_delta: Vec<(u64, u64)>,
     // -- rerank -------------------------------------------------------------
@@ -254,6 +266,7 @@ impl RoundScratch {
         RoundScratch {
             feat: FeatArena::new(d),
             logits: LogitsSlab::new(vocab),
+            qs: FeatArena::new(vocab),
             ..Default::default()
         }
     }
@@ -276,6 +289,12 @@ impl RoundScratch {
         self.feat.reserve_nodes(max_nodes);
         self.logits.clear(vocab);
         self.logits.reserve_nodes(max_nodes);
+        // q-slab capacity is NOT reserved here: greedy (T=0) rounds never
+        // write a q row, and eagerly holding max_nodes * vocab floats per
+        // lane would roughly double the scratch's dominant allocation for
+        // the Table-7 serving setting. Sampled generations reserve it via
+        // [`RoundScratch::reserve_q`].
+        self.qs.clear(vocab);
         ensure_cap(&mut self.node_slot, max_nodes);
         ensure_cap(&mut self.frontier, max_nodes);
         ensure_cap(&mut self.new_nodes, max_nodes);
@@ -294,10 +313,23 @@ impl RoundScratch {
         ensure_cap(&mut self.anc, max_nodes.div_ceil(64).max(1));
         ensure_cap(&mut self.path, max_nodes.min(64).max(8));
         ensure_cap(&mut self.children, max_nodes);
+        ensure_cap(&mut self.walk_toks, max_nodes);
+        ensure_cap(&mut self.walk_qids, max_nodes);
+        ensure_cap(&mut self.presidual, vocab);
         ensure_cap(&mut self.alpha_before, 8);
         ensure_cap(&mut self.alpha_delta, 64);
         self.rr.reserve(max_nodes);
         ensure_cap(&mut self.spare_tree.nodes, max_nodes);
+    }
+
+    /// Pre-size the q-slab for sampled (T>0) generations: at most one q
+    /// row per expanded frontier node per round, and an expansion always
+    /// yields at least one node — bounded by `max_nodes`. The engines
+    /// call this (in addition to [`RoundScratch::reserve`]) only when
+    /// `temperature > 0`, so greedy lanes never pay the slab's memory.
+    pub fn reserve_q(&mut self, vocab: usize, max_nodes: usize) {
+        self.qs.clear(vocab);
+        self.qs.reserve_nodes(max_nodes);
     }
 
     /// Reset the node-indexed state for a fresh round, seeding node 0
@@ -306,6 +338,7 @@ impl RoundScratch {
     pub fn begin_round(&mut self, root_feat: &[f32], root_logits: &[f32]) {
         self.feat.clear(root_feat.len());
         self.logits.clear(root_logits.len());
+        self.qs.clear(root_logits.len());
         self.node_slot.clear();
         self.feat.push(root_feat);
         self.logits.push(root_logits);
@@ -321,6 +354,7 @@ impl RoundScratch {
     pub fn footprint(&self) -> usize {
         self.feat.capacity_bytes()
             + self.logits.capacity_bytes()
+            + self.qs.capacity_bytes()
             + cap_bytes(&self.node_slot)
             + cap_bytes(&self.frontier)
             + cap_bytes(&self.new_nodes)
@@ -339,6 +373,9 @@ impl RoundScratch {
             + cap_bytes(&self.anc)
             + cap_bytes(&self.path)
             + cap_bytes(&self.children)
+            + cap_bytes(&self.walk_toks)
+            + cap_bytes(&self.walk_qids)
+            + cap_bytes(&self.presidual)
             + cap_bytes(&self.alpha_before)
             + cap_bytes(&self.alpha_delta)
             + self.rr.capacity_bytes()

@@ -58,9 +58,13 @@ pub struct TreeNode {
     pub depth: usize,
     /// Cumulative draft log-prob (selection score).
     pub score: f32,
-    /// Draft distribution this token was proposed from (kept at T>0 for
-    /// the SpecInfer acceptance rule; None in greedy mode).
-    pub q: Option<std::rc::Rc<Vec<f32>>>,
+    /// Row id into the round's q-slab ([`crate::spec::scratch::RoundScratch::qs`])
+    /// holding the draft distribution this token was sampled from — kept
+    /// at T>0 for the SpecInfer acceptance rule; `None` in greedy mode.
+    /// A plain `Copy` id (not an `Rc<Vec<f32>>`), so sampled rounds stay
+    /// allocation-free: siblings sampled from the same frontier node
+    /// share one slab row.
+    pub q: Option<u32>,
 }
 
 /// The draft tree under construction / verification. Node 0 is the root:
@@ -90,13 +94,7 @@ impl DraftTree {
         self.nodes.capacity() * std::mem::size_of::<TreeNode>()
     }
 
-    pub fn add(
-        &mut self,
-        parent: usize,
-        token: u32,
-        score: f32,
-        q: Option<std::rc::Rc<Vec<f32>>>,
-    ) -> usize {
+    pub fn add(&mut self, parent: usize, token: u32, score: f32, q: Option<u32>) -> usize {
         assert!(parent < self.nodes.len(), "parent out of range");
         let depth = self.nodes[parent].depth + 1;
         self.nodes.push(TreeNode { token, parent: Some(parent), depth, score, q });

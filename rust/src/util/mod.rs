@@ -1,6 +1,9 @@
-//! Dependency-free substrates: JSON, RNG, property-test harness, CLI args.
+//! Dependency-free substrates: JSON, RNG, property-test harness, CLI args,
+//! and the test-only counting allocator (`count-alloc` feature).
 
 pub mod cli;
+#[cfg(feature = "count-alloc")]
+pub mod count_alloc;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,295 @@
+//! Property tests for the batched T>0 sampling path: the q-slab growth +
+//! [`sampled_accept_walk`] machinery both engines share must (a) be
+//! BIT-IDENTICAL to the `Rc<Vec<f32>>` reference implementation it
+//! replaced — including under dirty scratch reuse — (b) preserve the
+//! target distribution per lane when many lanes run lock-step on
+//! independent RNG streams, and (c) make a lane's sampled output
+//! invariant to batch composition (equal seed => equal tokens, alone or
+//! batched) — the guarantee behind `Request::width_batchable` admitting
+//! T>0 requests to width groups.
+
+use std::rc::Rc;
+
+use eagle_serve::eval::bench::sim_sampled_grow;
+use eagle_serve::spec::engine::sampled_accept_walk;
+use eagle_serve::spec::sampling::{sample, softmax, tree_accept, TreeVerdict};
+use eagle_serve::spec::scratch::RoundScratch;
+use eagle_serve::spec::tree::DraftTree;
+use eagle_serve::util::prop::{check, random_dist};
+use eagle_serve::util::rng::Rng;
+
+/// Logits whose softmax (t=1) reproduces `p` up to float slop.
+fn logits_of(p: &[f32]) -> Vec<f32> {
+    p.iter().map(|&x| x.max(1e-20).ln()).collect()
+}
+
+/// The Rc reference: the pre-slab implementation kept verbatim as the
+/// oracle — `Rc::new(softmax(..))` per frontier node, clones shared by
+/// siblings, per-node q retained in a side table.
+#[allow(clippy::type_complexity)]
+fn grow_sampled_rc(
+    draft_logits: &[f32],
+    temp: f32,
+    levels: &[usize],
+    rng: &mut Rng,
+) -> (DraftTree, Vec<Option<Rc<Vec<f32>>>>) {
+    let mut tree = DraftTree::with_root(0);
+    let mut qmap: Vec<Option<Rc<Vec<f32>>>> = vec![None];
+    let mut frontier = vec![0usize];
+    for &width in levels {
+        let mut cands: Vec<(usize, u32, Rc<Vec<f32>>)> = Vec::new();
+        let per = (width / frontier.len().max(1)).max(1);
+        for &parent in &frontier {
+            let q = Rc::new(softmax(draft_logits, temp));
+            for _ in 0..per {
+                if cands.len() >= width {
+                    break;
+                }
+                let tok = sample(&q, rng) as u32;
+                cands.push((parent, tok, q.clone()));
+            }
+        }
+        if cands.is_empty() {
+            break;
+        }
+        let mut new_nodes = Vec::new();
+        for (p, tok, q) in cands {
+            // the side table is keyed by node index; the in-node id is
+            // unused by this reference (the slab path is what stores ids)
+            let ni = tree.add(p, tok, 0.0, Some(0));
+            qmap.push(Some(q));
+            new_nodes.push(ni);
+        }
+        frontier = new_nodes;
+    }
+    (tree, qmap)
+}
+
+/// The Rc reference acceptance walk: fresh `toks`/`qs`/`qrefs` vectors
+/// per node and the allocating [`tree_accept`] — what the engines did
+/// before the q-slab. Same RNG draw sequence as [`sampled_accept_walk`].
+fn walk_rc(
+    tree: &DraftTree,
+    qmap: &[Option<Rc<Vec<f32>>>],
+    target_logits: &[f32],
+    temp: f32,
+    rng: &mut Rng,
+) -> (Vec<usize>, u32) {
+    let mut path = vec![0usize];
+    let mut cur = 0usize;
+    loop {
+        let children = tree.children(cur);
+        let probs = softmax(target_logits, temp);
+        if children.is_empty() {
+            return (path, sample(&probs, rng) as u32);
+        }
+        let toks: Vec<usize> = children.iter().map(|&c| tree.nodes[c].token as usize).collect();
+        let qs: Vec<Rc<Vec<f32>>> =
+            children.iter().map(|&c| qmap[c].clone().expect("sampled node has q")).collect();
+        let qrefs: Vec<&[f32]> = qs.iter().map(|q| q.as_slice()).collect();
+        match tree_accept(&probs, &qrefs, &toks, rng) {
+            TreeVerdict::AcceptChild(ci) => {
+                path.push(children[ci]);
+                cur = children[ci];
+            }
+            TreeVerdict::Residual(t) => return (path, t as u32),
+        }
+    }
+}
+
+/// First token a round commits: the first accepted child, or the bonus.
+fn first_token(tree: &DraftTree, path: &[usize], bonus: u32) -> usize {
+    if path.len() > 1 {
+        tree.nodes[path[1]].token as usize
+    } else {
+        bonus as usize
+    }
+}
+
+#[test]
+fn prop_qslab_round_is_bit_identical_to_rc_reference_under_dirty_reuse() {
+    // ONE scratch serves every case (poisoned state from the previous
+    // differently-shaped case must never leak), exactly like a warm
+    // lane in the server's pool
+    let mut s = RoundScratch::new(1, 4);
+    let mut tree = DraftTree::default();
+    check("q-slab == Rc reference", 60, |rng, case| {
+        let n = 2 + rng.below(6);
+        let draft_logits: Vec<f32> = (0..n).map(|_| rng.f32() * 6.0 - 3.0).collect();
+        let target_logits: Vec<f32> = (0..n).map(|_| rng.f32() * 6.0 - 3.0).collect();
+        let temp = 0.25 + rng.f32() * 1.5;
+        let levels: Vec<usize> = (0..1 + rng.below(3)).map(|_| 1 + rng.below(4)).collect();
+        let seed = rng.next_u64();
+        // slab path on the reused scratch
+        let mut rng_a = Rng::new(seed);
+        sim_sampled_grow(&mut tree, &mut s, &draft_logits, temp, &levels, &mut rng_a);
+        let mut alpha = [(0u64, 0u64); 5];
+        let bonus = sampled_accept_walk(
+            &tree,
+            |_i| target_logits.as_slice(),
+            temp,
+            &mut rng_a,
+            &mut alpha,
+            &mut s,
+        );
+        // Rc reference from the same seed
+        let mut rng_b = Rng::new(seed);
+        let (rtree, qmap) = grow_sampled_rc(&draft_logits, temp, &levels, &mut rng_b);
+        let (rpath, rbonus) = walk_rc(&rtree, &qmap, &target_logits, temp, &mut rng_b);
+        assert_eq!(tree.len(), rtree.len(), "case {case}: tree sizes diverged");
+        for (a, b) in tree.nodes.iter().zip(&rtree.nodes) {
+            assert_eq!(a.token, b.token, "case {case}: sampled tokens diverged");
+            assert_eq!(a.parent, b.parent);
+        }
+        assert_eq!(s.path, rpath, "case {case}: accepted paths diverged");
+        assert_eq!(bonus, rbonus, "case {case}: bonus tokens diverged");
+        // and the q rows themselves are bit-identical to the Rc copies
+        for (ni, node) in tree.nodes.iter().enumerate().skip(1) {
+            let qid = node.q.expect("sampled node has q") as usize;
+            let rq = qmap[ni].as_ref().expect("reference q");
+            assert_eq!(s.qs.get(qid), rq.as_slice(), "case {case}: q row {ni} diverged");
+        }
+        // both streams fully consumed in lock-step
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "case {case}: RNG streams diverged");
+    });
+}
+
+#[test]
+fn prop_batched_t1_walk_preserves_distribution_per_lane() {
+    // B lanes lock-step with independent streams + scratch (mirroring
+    // chain_accept_preserves_distribution through the full batched
+    // machinery): each lane's first committed token must be distributed
+    // as ITS OWN target p, untouched by what the other lanes sample.
+    check("batched T>0 law per lane", 3, |rng, _| {
+        let lanes = 2 + rng.below(2);
+        let n = 2 + rng.below(4);
+        let ps: Vec<Vec<f32>> = (0..lanes).map(|_| random_dist(rng, n)).collect();
+        let qs: Vec<Vec<f32>> = (0..lanes).map(|_| random_dist(rng, n)).collect();
+        let tlogits: Vec<Vec<f32>> = ps.iter().map(|p| logits_of(p)).collect();
+        let dlogits: Vec<Vec<f32>> = qs.iter().map(|q| logits_of(q)).collect();
+        let levels: Vec<usize> = (0..1 + rng.below(2)).map(|_| 1 + rng.below(3)).collect();
+        let mut rngs: Vec<Rng> = (0..lanes).map(|li| Rng::new(1000 + li as u64)).collect();
+        let mut scratch: Vec<RoundScratch> =
+            (0..lanes).map(|_| RoundScratch::new(1, n)).collect();
+        let mut trees: Vec<DraftTree> = (0..lanes).map(|_| DraftTree::default()).collect();
+        let trials = 20_000;
+        let mut counts = vec![vec![0usize; n]; lanes];
+        let mut alpha = [(0u64, 0u64); 5];
+        for _ in 0..trials {
+            for li in 0..lanes {
+                sim_sampled_grow(
+                    &mut trees[li],
+                    &mut scratch[li],
+                    &dlogits[li],
+                    1.0,
+                    &levels,
+                    &mut rngs[li],
+                );
+                let bonus = sampled_accept_walk(
+                    &trees[li],
+                    |_i| tlogits[li].as_slice(),
+                    1.0,
+                    &mut rngs[li],
+                    &mut alpha,
+                    &mut scratch[li],
+                );
+                counts[li][first_token(&trees[li], &scratch[li].path, bonus)] += 1;
+            }
+        }
+        for li in 0..lanes {
+            for i in 0..n {
+                let emp = counts[li][i] as f32 / trials as f32;
+                assert!(
+                    (emp - ps[li][i]).abs() < 0.025,
+                    "lane {li} token {i}: emp {emp} vs p {}",
+                    ps[li][i]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_equal_seed_lane_output_is_invariant_to_batch_composition() {
+    // a lane's (seed, prompt-distributions) fully determine its sampled
+    // rounds: running it ALONE and running it interleaved with other
+    // lanes (whose streams advance between its rounds) must produce the
+    // same trees, paths, and bonus tokens — the bs=1 vs batched
+    // equal-seed equivalence at the component level
+    check("lane invariance", 20, |rng, _| {
+        let n = 2 + rng.below(5);
+        let dlogits: Vec<f32> = (0..n).map(|_| rng.f32() * 4.0 - 2.0).collect();
+        let tlogits: Vec<f32> = (0..n).map(|_| rng.f32() * 4.0 - 2.0).collect();
+        let other_d: Vec<f32> = (0..n).map(|_| rng.f32() * 4.0 - 2.0).collect();
+        let levels = [2usize, 3];
+        let seed = rng.next_u64();
+        let rounds = 6;
+        let mut alpha = [(0u64, 0u64); 5];
+        // solo run
+        let mut solo: Vec<(Vec<u32>, Vec<usize>, u32)> = Vec::new();
+        {
+            let mut r = Rng::new(seed);
+            let mut s = RoundScratch::new(1, n);
+            let mut tree = DraftTree::default();
+            for _ in 0..rounds {
+                sim_sampled_grow(&mut tree, &mut s, &dlogits, 1.0, &levels, &mut r);
+                let bonus = sampled_accept_walk(
+                    &tree, |_| tlogits.as_slice(), 1.0, &mut r, &mut alpha, &mut s,
+                );
+                solo.push((tree.nodes.iter().map(|x| x.token).collect(), s.path.clone(), bonus));
+            }
+        }
+        // batched run: a second lane with its own stream works between
+        // this lane's rounds
+        {
+            let mut r = Rng::new(seed);
+            let mut r2 = Rng::new(seed ^ 0xDEAD_BEEF);
+            let mut s = RoundScratch::new(1, n);
+            let mut s2 = RoundScratch::new(1, n);
+            let mut tree = DraftTree::default();
+            let mut tree2 = DraftTree::default();
+            for (i, expect) in solo.iter().enumerate() {
+                sim_sampled_grow(&mut tree2, &mut s2, &other_d, 1.0, &levels, &mut r2);
+                sim_sampled_grow(&mut tree, &mut s, &dlogits, 1.0, &levels, &mut r);
+                let _b2 = sampled_accept_walk(
+                    &tree2, |_| tlogits.as_slice(), 1.0, &mut r2, &mut alpha, &mut s2,
+                );
+                let bonus = sampled_accept_walk(
+                    &tree, |_| tlogits.as_slice(), 1.0, &mut r, &mut alpha, &mut s,
+                );
+                let got: Vec<u32> = tree.nodes.iter().map(|x| x.token).collect();
+                assert_eq!(got, expect.0, "round {i}: tree diverged under batching");
+                assert_eq!(s.path, expect.1, "round {i}: path diverged under batching");
+                assert_eq!(bonus, expect.2, "round {i}: bonus diverged under batching");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_walk_scratch_stays_allocation_free_once_warm() {
+    // the T>0 footprint law: after a warm-up round, repeated sampled
+    // rounds (growth + walk) must not grow the scratch — the q-slab and
+    // walk staging reuse their capacity like every other S22 buffer
+    let n = 8;
+    let mut s = RoundScratch::new(1, n);
+    s.reserve(1, n, 64, 32, 32, 8);
+    s.reserve_q(n, 32); // the sampled-path reservation the engines add at T>0
+    let mut tree = DraftTree::default();
+    let mut rng = Rng::new(11);
+    let dlogits: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+    let tlogits: Vec<f32> = (0..n).map(|i| (i as f32 * 0.71).cos()).collect();
+    let mut alpha = [(0u64, 0u64); 5];
+    let mut fp = 0usize;
+    for round in 0..10 {
+        sim_sampled_grow(&mut tree, &mut s, &dlogits, 1.0, &[4, 8, 8, 5], &mut rng);
+        let _ = sampled_accept_walk(
+            &tree, |_| tlogits.as_slice(), 1.0, &mut rng, &mut alpha, &mut s,
+        );
+        if round == 0 {
+            fp = s.footprint();
+        } else {
+            assert_eq!(s.footprint(), fp, "sampled round {round} grew the scratch");
+        }
+    }
+}

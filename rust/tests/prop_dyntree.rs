@@ -113,7 +113,7 @@ fn prop_rerank_cumulative_scores_keep_exact_top_k() {
         // with monotone cumulative scores, selection == plain top-budget
         let mut order: Vec<usize> = (1..t.len()).collect();
         order.sort_by(|&a, &b| {
-            t.nodes[b].score.partial_cmp(&t.nodes[a].score).unwrap().then(a.cmp(&b))
+            t.nodes[b].score.total_cmp(&t.nodes[a].score).then(a.cmp(&b))
         });
         let mut expect: Vec<usize> = order[..budget].to_vec();
         expect.push(0);
@@ -267,9 +267,11 @@ fn grow_dynamic_sim(rng: &mut Rng, q: &Rc<Vec<f32>>, params: &DynTreeParams) -> 
         if cands.is_empty() {
             break;
         }
+        // the engines retain q as a slab row id; this sim keeps q outside
+        // the tree (all children share the one distribution under test)
         let mut new_nodes = Vec::new();
         for (p, tok, score) in cands {
-            new_nodes.push(tree.add(p, tok, score, Some(q.clone())));
+            new_nodes.push(tree.add(p, tok, score, Some(0)));
         }
         if lvl + 1 == params.depth {
             break;

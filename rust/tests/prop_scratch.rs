@@ -9,7 +9,10 @@ use eagle_serve::spec::dyntree::{
     expand_candidates, expand_candidates_into, rerank, rerank_into, select_frontier,
     select_frontier_into, RerankScratch,
 };
-use eagle_serve::spec::sampling::{softmax, softmax_into, top_k, top_k_into};
+use eagle_serve::spec::sampling::{
+    chain_accept, chain_accept_into, softmax, softmax_into, top_k, top_k_into, tree_accept,
+    tree_accept_into, tree_accept_rows,
+};
 use eagle_serve::spec::scratch::{FeatArena, LogitsSlab, RoundScratch};
 use eagle_serve::spec::tree::{
     chain_extend_bias, chain_extend_bias_to, fill_step_rows, fill_step_rows_into, reference,
@@ -191,6 +194,45 @@ fn prop_sampling_into_variants_are_bit_identical() {
         let branch = 1 + rng.below(6);
         expand_candidates_into(parent_score, &probs, branch, &mut idx, &mut pairs);
         assert_eq!(pairs, expand_candidates(parent_score, &probs, branch));
+    });
+}
+
+#[test]
+fn prop_accept_rule_into_variants_are_bit_identical() {
+    // one reused (dirty) residual/work buffer across every case: the
+    // _into accept rules and the slab-row accessor form must reproduce
+    // the allocating references verdict-for-verdict AND draw-for-draw
+    let mut work = vec![f32::NAN; 3];
+    let mut slab = FeatArena::new(1);
+    check("accept rules into == allocating", 80, |rng, case| {
+        let n = 2 + rng.below(6);
+        let p = random_dist(rng, n);
+        let k = 1 + rng.below(4);
+        let qs: Vec<Vec<f32>> = (0..k).map(|_| random_dist(rng, n)).collect();
+        let toks: Vec<usize> = (0..k).map(|_| rng.below(n)).collect();
+        let seed = rng.next_u64();
+        // chain rule
+        let mut ra = Rng::new(seed);
+        let mut rb = Rng::new(seed);
+        let va = chain_accept(&p, &qs[0], toks[0], &mut ra);
+        let vb = chain_accept_into(&p, &qs[0], toks[0], &mut work, &mut rb);
+        assert_eq!(va, vb, "case {case}: chain verdicts diverged");
+        assert_eq!(ra.next_u64(), rb.next_u64(), "case {case}: chain RNG diverged");
+        // tree rule: allocating vs _into vs slab-row accessor
+        let qrefs: Vec<&[f32]> = qs.iter().map(|q| q.as_slice()).collect();
+        slab.clear(n);
+        for q in &qs {
+            slab.push(q);
+        }
+        let (mut r1, mut r2, mut r3) = (Rng::new(seed), Rng::new(seed), Rng::new(seed));
+        let v1 = tree_accept(&p, &qrefs, &toks, &mut r1);
+        let v2 = tree_accept_into(&p, &qrefs, &toks, &mut work, &mut r2);
+        let v3 = tree_accept_rows(&p, k, |ci| slab.get(ci), &toks, &mut work, &mut r3);
+        assert_eq!(v1, v2, "case {case}: tree_accept_into diverged");
+        assert_eq!(v1, v3, "case {case}: tree_accept_rows (slab) diverged");
+        let tail = r1.next_u64();
+        assert_eq!(tail, r2.next_u64(), "case {case}: tree RNG diverged (into)");
+        assert_eq!(tail, r3.next_u64(), "case {case}: tree RNG diverged (rows)");
     });
 }
 
