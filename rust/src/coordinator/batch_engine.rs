@@ -56,6 +56,7 @@
 use anyhow::{bail, Result};
 use std::time::Instant;
 
+use crate::metrics::trace::{RoundEvent, RoundObserver};
 use crate::metrics::GenRecord;
 use crate::models::target::KvCache;
 use crate::models::{EagleDraft, TargetModel};
@@ -85,6 +86,11 @@ pub struct BatchEagleEngine<'a> {
     pub draft_widths: Vec<usize>,
     pub accept_a: usize,
     pub draft_w: usize,
+    /// Optional per-round hook (flight recorder / serving metrics),
+    /// invoked once per lane per completed lock-step round with the
+    /// lane index as the event's lane id. Must not allocate — it runs
+    /// inside the zero-alloc round loop.
+    pub observer: Option<&'a dyn RoundObserver>,
 }
 
 struct Lane {
@@ -111,12 +117,20 @@ impl<'a> BatchEagleEngine<'a> {
             draft_widths: c.draft_widths.clone(),
             accept_a: c.accept_a,
             draft_w: c.draft_w,
+            observer: None,
         }
     }
 
     /// Swap the tree policy (builder-style).
     pub fn with_policy(mut self, policy: TreePolicy) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// Attach a per-round observer (builder-style; the server threads
+    /// its flight recorder + metrics registry through here).
+    pub fn with_observer(mut self, observer: &'a dyn RoundObserver) -> Self {
+        self.observer = Some(observer);
         self
     }
 
@@ -221,6 +235,9 @@ impl<'a> BatchEagleEngine<'a> {
             committed.extend_from_slice(prompt);
             committed.push(root_tok);
             rec.tokens.push(root_tok);
+            // first committed token for this lane (lock-step prefill is
+            // sequential, so later lanes see earlier lanes' prefill time)
+            rec.ttft_ns = t_all.elapsed().as_nanos() as u64;
 
             // draft prefill (bs=1) then splice into the batched draft cache
             let mut dcache1 = self.draft.new_cache(1);
@@ -304,11 +321,18 @@ impl<'a> BatchEagleEngine<'a> {
         }
         let mut pending_idx = vec![0i32; b * self.accept_a];
         let mut pending_n = vec![0i32; b];
+        // per-lane timeline snapshot at round start (observer phase
+        // deltas); allocated once, before the zero-alloc round loop
+        let mut tl0: Vec<(u64, u64, u64)> = vec![(0, 0, 0); b];
         while lanes.iter().any(|l| !l.done) {
             let fp0 =
                 pool.footprint() + trees.iter().map(DraftTree::capacity_bytes).sum::<usize>();
             #[cfg(feature = "count-alloc")]
             let counted0 = crate::util::count_alloc::thread_allocated_bytes();
+            for (li, l) in lanes.iter().enumerate() {
+                tl0[li] =
+                    (l.rec.timeline.draft_ns, l.rec.timeline.verify_ns, l.rec.timeline.host_ns);
+            }
             {
                 let bs = &mut pool.batch;
                 bs.live.clear();
@@ -546,16 +570,25 @@ impl<'a> BatchEagleEngine<'a> {
                 let fp = pool.footprint()
                     + trees.iter().map(DraftTree::capacity_bytes).sum::<usize>();
                 let grew = fp.saturating_sub(fp0) as u64;
-                #[cfg(feature = "count-alloc")]
-                let counted = crate::util::count_alloc::thread_allocated_bytes() - counted0;
+                // observer runs BEFORE the counted-alloc delta is taken so
+                // the zero-alloc assertion covers it too (no extend ran:
+                // draft_w = 0)
                 for li in 0..b {
                     if pool.batch.live[li] {
                         lanes[li].rec.round_host_alloc_bytes.push(grew);
                         if grew == 0 {
                             lanes[li].rec.scratch_reuse_total += 1;
                         }
-                        #[cfg(feature = "count-alloc")]
-                        lanes[li].rec.round_alloc_counted_bytes.push(counted);
+                        self.emit_lane_event(&lanes[li], li, tl0[li], 0, grew);
+                    }
+                }
+                #[cfg(feature = "count-alloc")]
+                {
+                    let counted = crate::util::count_alloc::thread_allocated_bytes() - counted0;
+                    for li in 0..b {
+                        if pool.batch.live[li] {
+                            lanes[li].rec.round_alloc_counted_bytes.push(counted);
+                        }
                     }
                 }
                 break;
@@ -589,16 +622,26 @@ impl<'a> BatchEagleEngine<'a> {
             let fp =
                 pool.footprint() + trees.iter().map(DraftTree::capacity_bytes).sum::<usize>();
             let grew = fp.saturating_sub(fp0) as u64;
-            #[cfg(feature = "count-alloc")]
-            let counted = crate::util::count_alloc::thread_allocated_bytes() - counted0;
+            // observer runs BEFORE the counted-alloc delta is taken so the
+            // zero-alloc assertion covers it too; a lane that finished this
+            // round skipped the extend, so its draft_w is 0
             for li in 0..b {
                 if pool.batch.live[li] {
                     lanes[li].rec.round_host_alloc_bytes.push(grew);
                     if grew == 0 {
                         lanes[li].rec.scratch_reuse_total += 1;
                     }
-                    #[cfg(feature = "count-alloc")]
-                    lanes[li].rec.round_alloc_counted_bytes.push(counted);
+                    let lane_w = if lanes[li].done { 0 } else { w as u32 };
+                    self.emit_lane_event(&lanes[li], li, tl0[li], lane_w, grew);
+                }
+            }
+            #[cfg(feature = "count-alloc")]
+            {
+                let counted = crate::util::count_alloc::thread_allocated_bytes() - counted0;
+                for li in 0..b {
+                    if pool.batch.live[li] {
+                        lanes[li].rec.round_alloc_counted_bytes.push(counted);
+                    }
                 }
             }
         }
@@ -611,6 +654,30 @@ impl<'a> BatchEagleEngine<'a> {
                 l.rec
             })
             .collect())
+    }
+
+    /// Report one lane's just-finished round to the attached observer
+    /// (no-op without one). Reads the lane's stats back off its record
+    /// tails and the timeline deltas since `tl0` = (draft, verify, host)
+    /// ns at round start. Stack-only: safe inside the zero-alloc round
+    /// loop.
+    #[inline]
+    fn emit_lane_event(&self, lane: &Lane, li: usize, tl0: (u64, u64, u64), w: u32, alloc: u64) {
+        if let Some(obs) = self.observer {
+            let rec = &lane.rec;
+            obs.on_round(&RoundEvent {
+                lane: li as u32,
+                round: (rec.round_accepts.len().max(1) - 1) as u32,
+                tree_nodes: rec.round_tree_nodes.last().copied().unwrap_or(0) as u32,
+                verify_t: rec.round_verify_t.last().copied().unwrap_or(0) as u32,
+                draft_w: w,
+                accepted: rec.round_accepts.last().copied().unwrap_or(0) as u32,
+                draft_ns: rec.timeline.draft_ns - tl0.0,
+                verify_ns: rec.timeline.verify_ns - tl0.1,
+                host_ns: rec.timeline.host_ns - tl0.2,
+                alloc_bytes: alloc,
+            });
+        }
     }
 
     /// STATIC lock-step growth: fixed per-level widths — greedy top-k by

@@ -89,6 +89,21 @@ impl Runner {
         spec: &RunSpec,
         cfg: &GenConfig,
     ) -> Result<GenRecord> {
+        self.run_one_observed(bundle, prompt, spec, cfg, None)
+    }
+
+    /// [`Runner::run_one`] with an optional per-round observer attached
+    /// to the eagle-family engines (the server's bs=1 path threads its
+    /// flight recorder + metrics registry through here; baselines have
+    /// no speculation rounds to report).
+    pub fn run_one_observed(
+        &self,
+        bundle: &ModelBundle,
+        prompt: &[u32],
+        spec: &RunSpec,
+        cfg: &GenConfig,
+        observer: Option<&dyn crate::metrics::trace::RoundObserver>,
+    ) -> Result<GenRecord> {
         let c = &self.man.constants;
         match spec.method {
             Method::Vanilla => VanillaEngine::new(&bundle.target).generate(prompt, cfg),
@@ -108,6 +123,9 @@ impl Runner {
                     );
                     eng = eng.with_widths(WidthFamily::single(t));
                 }
+                if let Some(obs) = observer {
+                    eng = eng.with_observer(obs);
+                }
                 eng.generate(prompt, cfg)
             }
             Method::EagleChain => {
@@ -120,8 +138,11 @@ impl Runner {
                 } else {
                     PairShift::Unshifted
                 };
-                EagleEngine::new_chain(&bundle.target, draft, c, spec.gamma, shift)
-                    .generate(prompt, cfg)
+                let mut eng = EagleEngine::new_chain(&bundle.target, draft, c, spec.gamma, shift);
+                if let Some(obs) = observer {
+                    eng = eng.with_observer(obs);
+                }
+                eng.generate(prompt, cfg)
             }
             Method::Medusa => {
                 let heads = bundle

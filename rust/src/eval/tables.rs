@@ -537,6 +537,57 @@ impl EvalCtx {
     }
 
     // ---------------------------------------------------------------------
+    // phases: per-method phase breakdown (GenRecord.timeline) + latency
+    // percentiles from the Aggregate's sorted cache — the offline twin
+    // of the server's eagle_phase_seconds_total counters and p50/p99
+    // gauges
+    // ---------------------------------------------------------------------
+    pub fn phases(&self) -> Result<String> {
+        let wl = self.workload("mtbench")?;
+        let prompts = wl.take(self.n_prompts);
+        let bundle = ModelBundle::load(
+            &self.runner.rt, &self.runner.man, "toy-s", &["eagle"], false, false,
+        )?;
+        let mut out = String::from(
+            "# phases — per-method phase breakdown + latency percentiles (toy-s, T=0)\n\n\
+             | method | prefill % | draft % | verify % | commit % | host % | p50 ms | p90 ms \
+             | p99 ms | tok/s |\n\
+             |---|---|---|---|---|---|---|---|---|---|\n",
+        );
+        for (name, m) in [
+            ("vanilla", Method::Vanilla),
+            ("eagle", Method::Eagle),
+            ("eagle-chain", Method::EagleChain),
+        ] {
+            let agg = self.runner.run_with(&bundle, &prompts, &self.spec(m, 0.0))?;
+            let tl = &agg.timeline;
+            let tot = (tl.total_ns() as f64).max(1.0);
+            writeln!(
+                out,
+                "| {name} | {:.1} | {:.1} | {:.1} | {:.1} | {:.1} | {:.1} | {:.1} | {:.1} \
+                 | {:.1} |",
+                tl.prefill_ns as f64 / tot * 100.0,
+                tl.draft_ns as f64 / tot * 100.0,
+                tl.verify_ns as f64 / tot * 100.0,
+                tl.commit_ns as f64 / tot * 100.0,
+                tl.host_ns as f64 / tot * 100.0,
+                agg.latency_p50_ms(),
+                agg.latency_p90_ms(),
+                agg.latency_p99_ms(),
+                agg.tokens_per_sec(),
+            )?;
+        }
+        out.push_str(
+            "\nPhase columns split each method's wall time by `GenRecord.timeline`\n\
+             (prefill / draft / verify / commit / host); vanilla has no draft or\n\
+             verify phase, so its decode cost lands in commit+host. Percentiles\n\
+             come from the Aggregate's sorted latency cache — the same helpers\n\
+             behind the server's eagle_latency_p50/p99_seconds gauges.\n",
+        );
+        Ok(out)
+    }
+
+    // ---------------------------------------------------------------------
     // widthsched: width-grouped admission vs FCFS max-width batching at
     // equal offered load (half the lanes low-acceptance)
     // ---------------------------------------------------------------------
@@ -636,8 +687,9 @@ impl EvalCtx {
         let mut out = String::from(
             "# widthsched — width-grouped admission vs FCFS max-width batching (toy-s, T=0)\n\n",
         );
-        out.push_str("| mode | lanes | mean verify-t | mean draft-w | tau | tok/s |");
-        out.push_str(" queue-ms | dragged lane-rounds |\n|---|---|---|---|---|---|---|---|\n");
+        out.push_str("| mode | lanes | mean verify-t | mean draft-w | tau | tok/s | p50 ms |");
+        out.push_str(" p99 ms | queue-ms | dragged lane-rounds |\n");
+        out.push_str("|---|---|---|---|---|---|---|---|---|---|\n");
         for (mode, recs, qms) in [
             ("fcfs", &fcfs_recs, fcfs_queue_ms),
             ("grouped", &grp_recs, grp_queue_ms),
@@ -648,12 +700,15 @@ impl EvalCtx {
                 let a = agg(recs, sel);
                 writeln!(
                     out,
-                    "| {mode} | {label} ({}) | {:.1} | {:.1} | {:.2} | {:.1} | {:.3} | {} |",
+                    "| {mode} | {label} ({}) | {:.1} | {:.1} | {:.2} | {:.1} | {:.1} | {:.1} \
+                     | {:.3} | {} |",
                     a.n,
                     a.mean_verify_t(),
                     a.mean_draft_w(),
                     a.tau(),
                     a.tokens_per_sec(),
+                    a.latency_p50_ms(),
+                    a.latency_p99_ms(),
                     qms,
                     a.dragged_rounds
                 )?;
@@ -715,12 +770,13 @@ impl EvalCtx {
             "tab7" => self.tab7(),
             "dyntree" => self.dyntree(),
             "widthsched" => self.widthsched(),
+            "phases" => self.phases(),
             _ => Err(anyhow::anyhow!("unknown experiment id '{id}'")),
         }
     }
 
-    pub const ALL: [&'static str; 13] = [
+    pub const ALL: [&'static str; 14] = [
         "fig1", "fig2", "fig8", "fig9", "fig10", "tab1", "tab2", "tab3", "tab4", "tab6", "tab7",
-        "dyntree", "widthsched",
+        "dyntree", "widthsched", "phases",
     ];
 }

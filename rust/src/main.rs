@@ -11,12 +11,16 @@
 //!   repro eval    (--all | --exp fig1) [--n 16] [--max-new 48] [--out results]
 //!   repro bench   [--json BENCH_host.json] [--iters 200]  host/exe micro-bench
 //!   repro profile [--model toy-s] [--n 4]   step-phase breakdown (§Perf)
+//!   repro trace   [--addr 127.0.0.1:8085] [--last N] [--raw]
+//!                 summarize a running server's round flight recorder
+//!   repro scrape  [--addr 127.0.0.1:8085] [--require fam1,fam2]
+//!                 fetch + validate /metrics Prometheus exposition
 //!   repro selftest                            losslessness smoke check
 
 use anyhow::Result;
 use eagle_serve::coordinator::request::Method;
-use eagle_serve::eval::tables::EvalCtx;
 use eagle_serve::eval::runner::{Runner, RunSpec};
+use eagle_serve::eval::tables::EvalCtx;
 use eagle_serve::models::{artifacts_dir, ModelBundle};
 use eagle_serve::spec::dyntree::{DynTreeConfig, TreePolicy, WidthSelect};
 use eagle_serve::spec::engine::GenConfig;
@@ -24,8 +28,10 @@ use eagle_serve::text::bpe::Bpe;
 use eagle_serve::util::cli::Args;
 
 fn main() {
-    let args =
-        Args::parse(std::env::args().skip(1), &["all", "verbose", "no-adapt", "width-grouping"]);
+    let args = Args::parse(
+        std::env::args().skip(1),
+        &["all", "verbose", "no-adapt", "width-grouping", "raw"],
+    );
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "serve" => serve(&args),
@@ -33,6 +39,8 @@ fn main() {
         "eval" => eval(&args),
         "bench" => bench(&args),
         "profile" => profile(&args),
+        "trace" => trace(&args),
+        "scrape" => scrape(&args),
         "selftest" => selftest(&args),
         _ => {
             print_help();
@@ -60,6 +68,8 @@ fn print_help() {
          \u{20}           executed at a hot lane's width. Default: FCFS)\n\
          \u{20}          --cost-model PATH       (calibrate the grouping dispatch overhead\n\
          \u{20}           from a repro bench --json file; default: built-in constant)\n\
+         \u{20}          --trace-cap N --stall-ms MS  (flight-recorder ring capacity;\n\
+         \u{20}           heartbeat age past which /healthz turns 503)\n\
          generate  --prompt TEXT --model NAME --method eagle|eagle-chain|vanilla|medusa|lookahead|classic-spec\n\
          \u{20}          --max-tokens N --temperature F --seed N\n\
          \u{20}          --tree static|dynamic [--draft-depth N --frontier K --branch B --no-adapt]\n\
@@ -69,6 +79,10 @@ fn print_help() {
          \u{20}           per-width exe/verify benches when artifacts exist; the JSON\n\
          \u{20}           output feeds --cost-model)\n\
          profile   --model NAME --n N\n\
+         trace     --addr HOST:PORT [--last N] [--raw]   (per-lane round summary of a\n\
+         \u{20}           running server's GET /trace flight-recorder dump)\n\
+         scrape    --addr HOST:PORT [--require fam1,fam2]   (fetch GET /metrics and\n\
+         \u{20}           validate the Prometheus exposition parses; CI smoke check)\n\
          selftest  quick losslessness check (eagle == vanilla at T=0)\n\n\
          Artifacts are read from $EAGLE_ARTIFACTS or ./artifacts (make artifacts)."
     );
@@ -111,6 +125,8 @@ fn serve(args: &Args) -> Result<()> {
         linger_ms: args.u64_or("linger", 2),
         width_grouping: args.has("width-grouping"),
         cost_model: args.get("cost-model").map(std::path::PathBuf::from),
+        trace_cap: args.usize_or("trace-cap", 1024),
+        stall_ms: args.u64_or("stall-ms", 30_000),
         ..eagle_serve::server::ServeConfig::new(addr, model, &artifacts_dir())
     };
     eagle_serve::server::serve(cfg)
@@ -264,6 +280,55 @@ fn profile(args: &Args) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+/// Fetch `GET /trace` from a running server and print the per-lane
+/// round summary from the flight recorder (`--raw` dumps the JSON
+/// payload verbatim; `--last N` keeps only the newest N rounds).
+fn trace(args: &Args) -> Result<()> {
+    use eagle_serve::metrics::trace::{events_from_json, summarize};
+    let addr = args.get_or("addr", "127.0.0.1:8085");
+    let (code, body) = eagle_serve::server::http::get(addr, "/trace")?;
+    anyhow::ensure!(code == 200, "GET /trace returned {code}: {body}");
+    if args.has("raw") {
+        println!("{body}");
+        return Ok(());
+    }
+    let j = eagle_serve::util::json::Json::parse(&body)?;
+    let mut events = events_from_json(&j);
+    if let Some(last) = args.get("last").and_then(|s| s.parse::<usize>().ok()) {
+        let skip = events.len().saturating_sub(last);
+        events.drain(..skip);
+    }
+    print!("{}", summarize(&events));
+    Ok(())
+}
+
+/// Scrape `GET /metrics` from a running server and validate that the
+/// body parses as Prometheus text exposition (typed families,
+/// cumulative buckets, `+Inf` == `_count`, `_sum` present).
+/// `--require fam1,fam2` additionally asserts named families exist.
+/// This doubles as the CI smoke check for the serving registry.
+fn scrape(args: &Args) -> Result<()> {
+    use eagle_serve::metrics::registry::parse_exposition;
+    let addr = args.get_or("addr", "127.0.0.1:8085");
+    let (code, body) = eagle_serve::server::http::get(addr, "/metrics")?;
+    anyhow::ensure!(code == 200, "GET /metrics returned {code}");
+    let exp = parse_exposition(&body)?;
+    if let Some(req) = args.get("require") {
+        for name in req.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            anyhow::ensure!(
+                exp.family(name).is_some(),
+                "required metric family '{name}' missing from /metrics"
+            );
+        }
+    }
+    println!(
+        "scrape ok: {} families, {} samples",
+        exp.families.len(),
+        exp.families.values().map(|f| f.samples.len()).sum::<usize>()
+    );
     Ok(())
 }
 

@@ -1,6 +1,16 @@
 //! Metrics (S17): per-generation records, aggregate statistics (walltime
 //! speedup, τ, n-α), latency percentiles, and the step-phase profiler used
 //! by the §Perf pass.
+//!
+//! Serving-side observability lives in the submodules: [`registry`] is
+//! the lock-free counter/gauge/histogram registry behind `GET /metrics`
+//! (Prometheus text exposition), [`trace`] is the fixed-capacity round
+//! flight recorder behind `GET /trace` and `repro trace`. Both keep
+//! their record paths allocation-free so the engines can report every
+//! round without breaking the S22 zero-allocation guarantee.
+
+pub mod registry;
+pub mod trace;
 
 /// Phase timing breakdown for one generation (nanoseconds).
 #[derive(Debug, Default, Clone)]
@@ -72,6 +82,10 @@ pub struct GenRecord {
     /// Draft tokens proposed in total (chain mode: gamma per round).
     pub drafted: usize,
     pub wall_ns: u64,
+    /// Time from engine entry to the FIRST committed token (prefill +
+    /// root sampling) — the engine-side component of TTFT. 0 for
+    /// engines that predate the field (baselines).
+    pub ttft_ns: u64,
     pub timeline: Timeline,
 }
 
@@ -93,6 +107,7 @@ impl GenRecord {
             alpha: vec![(0, 0); 5],
             drafted: 0,
             wall_ns: 0,
+            ttft_ns: 0,
             timeline: Timeline::default(),
         }
     }
@@ -190,6 +205,10 @@ pub struct Aggregate {
     pub alloc_counted_bytes: u64,
     pub alpha: Vec<(u64, u64)>,
     pub wall_each: Vec<u64>,
+    /// `wall_each` maintained in sorted order (binary-insert on `add`),
+    /// so percentile queries are O(1) lookups instead of the old
+    /// clone-and-sort-per-call.
+    pub wall_sorted: Vec<u64>,
     pub timeline: Timeline,
 }
 
@@ -221,6 +240,8 @@ impl Aggregate {
             self.alpha[i].1 += t;
         }
         self.wall_each.push(r.wall_ns);
+        let pos = self.wall_sorted.partition_point(|&w| w <= r.wall_ns);
+        self.wall_sorted.insert(pos, r.wall_ns);
         let tl = &r.timeline;
         self.timeline.prefill_ns += tl.prefill_ns;
         self.timeline.draft_ns += tl.draft_ns;
@@ -272,14 +293,27 @@ impl Aggregate {
             .collect()
     }
 
+    /// Wall-clock latency percentile in milliseconds, answered from the
+    /// sorted cache maintained by [`Aggregate::add`] — no clone, no
+    /// re-sort per query.
     pub fn latency_percentile(&self, pct: f64) -> f64 {
-        if self.wall_each.is_empty() {
+        if self.wall_sorted.is_empty() {
             return 0.0;
         }
-        let mut v = self.wall_each.clone();
-        v.sort_unstable();
-        let idx = ((v.len() - 1) as f64 * pct / 100.0).round() as usize;
-        v[idx] as f64 / 1e6
+        let idx = ((self.wall_sorted.len() - 1) as f64 * pct / 100.0).round() as usize;
+        self.wall_sorted[idx] as f64 / 1e6
+    }
+
+    pub fn latency_p50_ms(&self) -> f64 {
+        self.latency_percentile(50.0)
+    }
+
+    pub fn latency_p90_ms(&self) -> f64 {
+        self.latency_percentile(90.0)
+    }
+
+    pub fn latency_p99_ms(&self) -> f64 {
+        self.latency_percentile(99.0)
     }
 }
 
@@ -401,5 +435,28 @@ mod tests {
         }
         assert!((a.latency_percentile(0.0) - 1.0).abs() < 1e-6);
         assert!((a.latency_percentile(100.0) - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_cache_matches_reference_sort() {
+        let mut a = Aggregate::new();
+        // deliberately unsorted arrivals, with duplicates
+        for ns in [7u64, 1, 9, 3, 3, 8, 2, 6, 5, 4] {
+            let mut r = GenRecord::new(1);
+            r.wall_ns = ns * 1_000_000;
+            a.add(&r);
+        }
+        let mut reference = a.wall_each.clone();
+        reference.sort_unstable();
+        assert_eq!(a.wall_sorted, reference, "sorted cache must track add()");
+        for pct in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            let idx = ((reference.len() - 1) as f64 * pct / 100.0).round() as usize;
+            let want = reference[idx] as f64 / 1e6;
+            assert!((a.latency_percentile(pct) - want).abs() < 1e-9, "pct {pct}");
+        }
+        assert!((a.latency_p50_ms() - 5.0).abs() < 1e-9);
+        assert!((a.latency_p90_ms() - 8.0).abs() < 1e-9);
+        assert!((a.latency_p99_ms() - 9.0).abs() < 1e-9);
+        assert_eq!(Aggregate::new().latency_p99_ms(), 0.0);
     }
 }

@@ -1,0 +1,722 @@
+//! Lock-free serving metrics registry with Prometheus text exposition.
+//!
+//! The registry is built ONCE at startup ([`RegistryBuilder`]) and never
+//! grows afterwards: every counter, gauge and histogram is a fixed slot
+//! of pre-sized atomics, so the record path ([`MetricsRegistry::inc`],
+//! [`MetricsRegistry::add`], [`MetricsRegistry::set_gauge`],
+//! [`MetricsRegistry::observe`]) is store/fetch-add only — no locks, no
+//! heap traffic — and stays inside the S22 zero-allocation guarantee
+//! even when called from the engine round loop (verified under the
+//! `count-alloc` allocator in `rust/tests/count_alloc.rs`).
+//!
+//! Rendering ([`MetricsRegistry::render`]) produces Prometheus text
+//! exposition format — `# HELP`/`# TYPE` headers, cumulative histogram
+//! buckets ending in `+Inf`, `_sum`/`_count` series, escaped label
+//! values — and is the ONLY allocating path; it runs on the HTTP route
+//! thread, never in the round loop. [`parse_exposition`] is the
+//! matching strict parser/validator used by the test suite and the
+//! `repro scrape` CI smoke step.
+//!
+//! Design notes for the two non-obvious encodings:
+//! * gauges hold `f64::to_bits` so `set_gauge` is a plain `store`;
+//! * histogram `_sum` accumulates fixed-point micro-units
+//!   (`SUM_SCALE = 1e6`) via `fetch_add`, avoiding even a CAS loop on
+//!   the record path; counters may carry a render-time `scale` so time
+//!   totals can be recorded as integer nanoseconds and exposed as
+//!   seconds.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// Fixed-point denominator for histogram `_sum` (micro-units).
+const SUM_SCALE: f64 = 1e6;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+/// Immutable description of one metric series (constant labels allowed).
+struct MetricSpec {
+    name: String,
+    help: String,
+    labels: Vec<(String, String)>,
+    kind: Kind,
+    /// Finite ascending bucket upper bounds (histogram only).
+    bounds: Vec<f64>,
+    /// Render-time multiplier for counter raw values (e.g. `1e-9` to
+    /// record nanoseconds and expose seconds).
+    scale: f64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct CounterId(usize);
+#[derive(Clone, Copy, Debug)]
+pub struct GaugeId(usize);
+#[derive(Clone, Copy, Debug)]
+pub struct HistId(usize);
+
+/// Builds the fixed metric set; consumed by [`RegistryBuilder::build`].
+#[derive(Default)]
+pub struct RegistryBuilder {
+    specs: Vec<MetricSpec>,
+}
+
+impl RegistryBuilder {
+    pub fn new() -> RegistryBuilder {
+        RegistryBuilder::default()
+    }
+
+    fn push(&mut self, spec: MetricSpec) -> usize {
+        self.specs.push(spec);
+        self.specs.len() - 1
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str) -> CounterId {
+        self.counter_with(name, help, &[])
+    }
+
+    pub fn counter_with(&mut self, name: &str, help: &str, labels: &[(&str, &str)]) -> CounterId {
+        self.counter_scaled(name, help, labels, 1.0)
+    }
+
+    pub fn counter_scaled(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        scale: f64,
+    ) -> CounterId {
+        CounterId(self.push(MetricSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            kind: Kind::Counter,
+            bounds: Vec::new(),
+            scale,
+        }))
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str) -> GaugeId {
+        GaugeId(self.push(MetricSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            labels: Vec::new(),
+            kind: Kind::Gauge,
+            bounds: Vec::new(),
+            scale: 1.0,
+        }))
+    }
+
+    pub fn histogram(&mut self, name: &str, help: &str, bounds: &[f64]) -> HistId {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        HistId(self.push(MetricSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            labels: Vec::new(),
+            kind: Kind::Histogram,
+            bounds: bounds.to_vec(),
+            scale: 1.0,
+        }))
+    }
+
+    /// Allocate every atomic slot up front; after this the registry
+    /// never allocates on the record path.
+    pub fn build(self) -> MetricsRegistry {
+        let metrics = self
+            .specs
+            .into_iter()
+            .map(|spec| {
+                let nb = spec.bounds.len();
+                Metric {
+                    spec,
+                    value: AtomicU64::new(0),
+                    buckets: (0..nb).map(|_| AtomicU64::new(0)).collect(),
+                    count: AtomicU64::new(0),
+                    sum_fp: AtomicU64::new(0),
+                }
+            })
+            .collect();
+        MetricsRegistry { metrics }
+    }
+}
+
+struct Metric {
+    spec: MetricSpec,
+    /// Counter: raw u64 count. Gauge: `f64::to_bits`.
+    value: AtomicU64,
+    /// Histogram: per-bound (non-cumulative) hit counts.
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    /// Histogram sum in fixed-point micro-units (see [`SUM_SCALE`]).
+    sum_fp: AtomicU64,
+}
+
+/// Log-scale bucket bounds: `start * factor^i` for `i in 0..n`.
+pub fn log_buckets(start: f64, factor: f64, n: usize) -> Vec<f64> {
+    assert!(start > 0.0 && factor > 1.0 && n > 0);
+    let mut v = Vec::with_capacity(n);
+    let mut b = start;
+    for _ in 0..n {
+        v.push(b);
+        b *= factor;
+    }
+    v
+}
+
+pub struct MetricsRegistry {
+    metrics: Vec<Metric>,
+}
+
+impl MetricsRegistry {
+    // ---- record path: store/fetch-add only ----
+
+    #[inline]
+    pub fn inc(&self, id: CounterId) {
+        self.add(id, 1);
+    }
+
+    #[inline]
+    pub fn add(&self, id: CounterId, n: u64) {
+        self.metrics[id.0].value.fetch_add(n, Relaxed);
+    }
+
+    #[inline]
+    pub fn set_gauge(&self, id: GaugeId, v: f64) {
+        self.metrics[id.0].value.store(v.to_bits(), Relaxed);
+    }
+
+    #[inline]
+    pub fn observe(&self, id: HistId, v: f64) {
+        let m = &self.metrics[id.0];
+        for (i, b) in m.spec.bounds.iter().enumerate() {
+            if v <= *b {
+                m.buckets[i].fetch_add(1, Relaxed);
+                break;
+            }
+        }
+        // values above the last finite bound land only in +Inf (= count)
+        m.count.fetch_add(1, Relaxed);
+        let fp = (v * SUM_SCALE).round();
+        m.sum_fp.fetch_add(if fp > 0.0 { fp as u64 } else { 0 }, Relaxed);
+    }
+
+    // ---- read-side accessors (tests, gauges derived from counters) ----
+
+    pub fn counter_value(&self, id: CounterId) -> u64 {
+        self.metrics[id.0].value.load(Relaxed)
+    }
+
+    pub fn gauge_value(&self, id: GaugeId) -> f64 {
+        f64::from_bits(self.metrics[id.0].value.load(Relaxed))
+    }
+
+    pub fn hist_count(&self, id: HistId) -> u64 {
+        self.metrics[id.0].count.load(Relaxed)
+    }
+
+    pub fn hist_sum(&self, id: HistId) -> f64 {
+        self.metrics[id.0].sum_fp.load(Relaxed) as f64 / SUM_SCALE
+    }
+
+    // ---- exposition (allocates; route thread only) ----
+
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        let mut headed: Vec<&str> = Vec::new();
+        for m in &self.metrics {
+            if !headed.contains(&m.spec.name.as_str()) {
+                headed.push(&m.spec.name);
+                out.push_str(&format!(
+                    "# HELP {} {}\n# TYPE {} {}\n",
+                    m.spec.name,
+                    escape_help(&m.spec.help),
+                    m.spec.name,
+                    m.spec.kind.as_str()
+                ));
+            }
+            match m.spec.kind {
+                Kind::Counter => {
+                    let v = m.value.load(Relaxed) as f64 * m.spec.scale;
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        m.spec.name,
+                        render_labels(&m.spec.labels, None),
+                        fmt_value(v)
+                    ));
+                }
+                Kind::Gauge => {
+                    let v = f64::from_bits(m.value.load(Relaxed));
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        m.spec.name,
+                        render_labels(&m.spec.labels, None),
+                        fmt_value(v)
+                    ));
+                }
+                Kind::Histogram => {
+                    let mut cum = 0u64;
+                    for (i, b) in m.spec.bounds.iter().enumerate() {
+                        cum += m.buckets[i].load(Relaxed);
+                        out.push_str(&format!(
+                            "{}_bucket{} {}\n",
+                            m.spec.name,
+                            render_labels(&m.spec.labels, Some(("le", &fmt_value(*b)))),
+                            cum
+                        ));
+                    }
+                    let count = m.count.load(Relaxed);
+                    out.push_str(&format!(
+                        "{}_bucket{} {}\n",
+                        m.spec.name,
+                        render_labels(&m.spec.labels, Some(("le", "+Inf"))),
+                        count
+                    ));
+                    out.push_str(&format!(
+                        "{}_sum{} {}\n",
+                        m.spec.name,
+                        render_labels(&m.spec.labels, None),
+                        fmt_value(m.sum_fp.load(Relaxed) as f64 / SUM_SCALE)
+                    ));
+                    out.push_str(&format!(
+                        "{}_count{} {}\n",
+                        m.spec.name,
+                        render_labels(&m.spec.labels, None),
+                        count
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+fn fmt_value(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn render_labels(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    if labels.is_empty() && extra.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label_value(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{}\"", escape_label_value(v)));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+/// Escape a HELP text per the exposition format: `\` and newline.
+pub fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// Escape a label value per the exposition format: `\`, `"`, newline.
+pub fn escape_label_value(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+// ---- strict exposition parser (tests + `repro scrape`) ----
+
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl Sample {
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct Family {
+    pub typ: String,
+    pub help: String,
+    pub samples: Vec<Sample>,
+}
+
+#[derive(Debug, Default)]
+pub struct Exposition {
+    pub families: BTreeMap<String, Family>,
+}
+
+impl Exposition {
+    pub fn family(&self, name: &str) -> Option<&Family> {
+        self.families.get(name)
+    }
+
+    /// Value of the first sample whose full series name matches.
+    pub fn value(&self, name: &str) -> Option<f64> {
+        self.families.values().flat_map(|f| &f.samples).find(|s| s.name == name).map(|s| s.value)
+    }
+}
+
+/// Parse and VALIDATE Prometheus text exposition: every sample must
+/// belong to a `# TYPE`d family, histogram buckets must be cumulative
+/// (monotone nondecreasing in `le` order), the `+Inf` bucket must equal
+/// `_count`, and `_sum`/`_count` must be present.
+pub fn parse_exposition(text: &str) -> Result<Exposition> {
+    let mut exp = Exposition::default();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let (name, help) = rest.split_once(' ').unwrap_or((rest, ""));
+            exp.families.entry(name.to_string()).or_default().help = help.to_string();
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, typ) = match rest.split_once(' ') {
+                Some(p) => p,
+                None => bail!("line {}: malformed TYPE line: {line}", ln + 1),
+            };
+            ensure!(
+                matches!(typ, "counter" | "gauge" | "histogram" | "summary" | "untyped"),
+                "line {}: unknown metric type {typ:?}",
+                ln + 1
+            );
+            exp.families.entry(name.to_string()).or_default().typ = typ.to_string();
+        } else if let Some(stripped) = line.strip_prefix('#') {
+            // other comments are legal and ignored
+            let _ = stripped;
+        } else {
+            let s = parse_sample(line).map_err(|e| anyhow!("line {}: {e}", ln + 1))?;
+            let fam = family_of(&exp, &s.name);
+            match fam {
+                Some(f) => exp
+                    .families
+                    .get_mut(&f)
+                    .expect("family present")
+                    .samples
+                    .push(s),
+                None => bail!("line {}: sample {} has no # TYPE'd family", ln + 1, s.name),
+            }
+        }
+    }
+    validate(&exp)?;
+    Ok(exp)
+}
+
+/// Resolve the family a sample series belongs to, honoring histogram
+/// `_bucket`/`_sum`/`_count` suffixes.
+fn family_of(exp: &Exposition, series: &str) -> Option<String> {
+    if exp.families.get(series).map(|f| !f.typ.is_empty()).unwrap_or(false) {
+        return Some(series.to_string());
+    }
+    for suf in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = series.strip_suffix(suf) {
+            if exp.families.get(base).map(|f| f.typ == "histogram").unwrap_or(false) {
+                return Some(base.to_string());
+            }
+        }
+    }
+    None
+}
+
+fn parse_sample(line: &str) -> Result<Sample> {
+    let (series, labels, rest) = match line.find('{') {
+        Some(i) => {
+            let close = match line.rfind('}') {
+                Some(c) if c > i => c,
+                _ => bail!("unclosed label braces: {line}"),
+            };
+            (&line[..i], parse_labels(&line[i + 1..close])?, line[close + 1..].trim_start())
+        }
+        None => match line.split_once(' ') {
+            Some((n, r)) => (n, Vec::new(), r.trim_start()),
+            None => bail!("sample line has no value: {line}"),
+        },
+    };
+    ensure!(!series.is_empty(), "empty metric name: {line}");
+    ensure!(
+        series.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+        "bad metric name {series:?}"
+    );
+    let value_str = rest.split_whitespace().next().unwrap_or("");
+    let value = match value_str {
+        "+Inf" => f64::INFINITY,
+        "-Inf" => f64::NEG_INFINITY,
+        "NaN" => f64::NAN,
+        v => match v.parse::<f64>() {
+            Ok(x) => x,
+            Err(_) => bail!("bad sample value {v:?} in: {line}"),
+        },
+    };
+    Ok(Sample { name: series.to_string(), labels, value })
+}
+
+fn parse_labels(body: &str) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    let mut it = body.chars().peekable();
+    loop {
+        while matches!(it.peek(), Some(',') | Some(' ')) {
+            it.next();
+        }
+        if it.peek().is_none() {
+            break;
+        }
+        let mut key = String::new();
+        for c in it.by_ref() {
+            if c == '=' {
+                break;
+            }
+            key.push(c);
+        }
+        ensure!(!key.is_empty(), "empty label key in {{{body}}}");
+        ensure!(it.next() == Some('"'), "label {key} value not quoted in {{{body}}}");
+        let mut val = String::new();
+        let mut closed = false;
+        while let Some(c) = it.next() {
+            match c {
+                '\\' => match it.next() {
+                    Some('\\') => val.push('\\'),
+                    Some('"') => val.push('"'),
+                    Some('n') => val.push('\n'),
+                    other => bail!("bad escape \\{:?} in label {key}", other),
+                },
+                '"' => {
+                    closed = true;
+                    break;
+                }
+                c => val.push(c),
+            }
+        }
+        ensure!(closed, "unterminated label value for {key} in {{{body}}}");
+        out.push((key, val));
+    }
+    Ok(out)
+}
+
+fn validate(exp: &Exposition) -> Result<()> {
+    for (name, fam) in &exp.families {
+        ensure!(!fam.typ.is_empty(), "family {name} has samples but no # TYPE");
+        if fam.typ != "histogram" {
+            continue;
+        }
+        // group buckets by their non-le label set
+        let mut groups: BTreeMap<String, Vec<&Sample>> = BTreeMap::new();
+        for s in &fam.samples {
+            if s.name == format!("{name}_bucket") {
+                let key: Vec<String> = s
+                    .labels
+                    .iter()
+                    .filter(|(k, _)| k != "le")
+                    .map(|(k, v)| format!("{k}={v}"))
+                    .collect();
+                groups.entry(key.join(",")).or_default().push(s);
+            }
+        }
+        ensure!(!groups.is_empty(), "histogram {name} exposes no buckets");
+        for (key, buckets) in &groups {
+            let mut bounded: Vec<(f64, f64)> = Vec::new();
+            let mut inf: Option<f64> = None;
+            for b in buckets {
+                let le = match b.label("le") {
+                    Some(le) => le,
+                    None => bail!("histogram {name} bucket without le label"),
+                };
+                if le == "+Inf" {
+                    inf = Some(b.value);
+                } else {
+                    let bound = match le.parse::<f64>() {
+                        Ok(x) => x,
+                        Err(_) => bail!("histogram {name}: bad le {le:?}"),
+                    };
+                    bounded.push((bound, b.value));
+                }
+            }
+            bounded.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite bounds"));
+            for w in bounded.windows(2) {
+                ensure!(
+                    w[0].1 <= w[1].1,
+                    "histogram {name}{{{key}}}: buckets not cumulative ({} > {})",
+                    w[0].1,
+                    w[1].1
+                );
+            }
+            let inf = match inf {
+                Some(v) => v,
+                None => bail!("histogram {name}{{{key}}} missing +Inf bucket"),
+            };
+            if let Some(last) = bounded.last() {
+                ensure!(
+                    last.1 <= inf,
+                    "histogram {name}{{{key}}}: last bucket {} exceeds +Inf {}",
+                    last.1,
+                    inf
+                );
+            }
+            let count = exp
+                .families
+                .get(name)
+                .and_then(|f| f.samples.iter().find(|s| s.name == format!("{name}_count")))
+                .map(|s| s.value);
+            match count {
+                Some(c) => ensure!(
+                    (c - inf).abs() < 1e-9,
+                    "histogram {name}: +Inf bucket {inf} != _count {c}"
+                ),
+                None => bail!("histogram {name} missing _count"),
+            }
+            ensure!(
+                fam.samples.iter().any(|s| s.name == format!("{name}_sum")),
+                "histogram {name} missing _sum"
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn build_one() -> (MetricsRegistry, CounterId, GaugeId, HistId) {
+        let mut b = RegistryBuilder::new();
+        let c = b.counter("test_requests_total", "Requests served.");
+        let g = b.gauge("test_queue_depth", "Queued requests.");
+        let h = b.histogram("test_latency_seconds", "Request latency.", &log_buckets(0.001, 4.0, 6));
+        (b.build(), c, g, h)
+    }
+
+    #[test]
+    fn record_and_read_back() {
+        let (r, c, g, h) = build_one();
+        r.inc(c);
+        r.add(c, 4);
+        r.set_gauge(g, 2.5);
+        r.observe(h, 0.003);
+        r.observe(h, 0.5);
+        r.observe(h, 1e9); // beyond last bound: +Inf only
+        assert_eq!(r.counter_value(c), 5);
+        assert!((r.gauge_value(g) - 2.5).abs() < 1e-12);
+        assert_eq!(r.hist_count(h), 3);
+        assert!((r.hist_sum(h) - 1e9).abs() / 1e9 < 1e-6);
+    }
+
+    #[test]
+    fn render_parses_and_buckets_are_cumulative() {
+        let (r, c, g, h) = build_one();
+        r.add(c, 7);
+        r.set_gauge(g, 3.0);
+        for v in [0.0005, 0.002, 0.002, 0.1, 2.0, 1e6] {
+            r.observe(h, v);
+        }
+        let text = r.render();
+        assert!(text.contains("# TYPE test_latency_seconds histogram"));
+        assert!(text.contains("# HELP test_requests_total Requests served."));
+        let exp = parse_exposition(&text).expect("rendered exposition must parse");
+        assert_eq!(exp.value("test_requests_total"), Some(7.0));
+        assert_eq!(exp.value("test_queue_depth"), Some(3.0));
+        assert_eq!(exp.value("test_latency_seconds_count"), Some(6.0));
+        let fam = exp.family("test_latency_seconds").unwrap();
+        let infs: Vec<&Sample> = fam
+            .samples
+            .iter()
+            .filter(|s| s.name == "test_latency_seconds_bucket" && s.label("le") == Some("+Inf"))
+            .collect();
+        assert_eq!(infs.len(), 1);
+        assert_eq!(infs[0].value, 6.0);
+        // cumulative monotonicity across finite bounds
+        let mut prev = 0.0;
+        for s in fam.samples.iter().filter(|s| s.name == "test_latency_seconds_bucket") {
+            if s.label("le") != Some("+Inf") {
+                assert!(s.value >= prev, "bucket counts must be cumulative");
+                prev = s.value;
+            }
+        }
+    }
+
+    #[test]
+    fn sum_and_count_are_consistent() {
+        let (r, _, _, h) = build_one();
+        let vals = [0.001, 0.01, 0.25, 3.0];
+        for v in vals {
+            r.observe(h, v);
+        }
+        let exp = parse_exposition(&r.render()).unwrap();
+        let sum = exp.value("test_latency_seconds_sum").unwrap();
+        let count = exp.value("test_latency_seconds_count").unwrap();
+        assert_eq!(count, vals.len() as f64);
+        assert!((sum - vals.iter().sum::<f64>()).abs() < 1e-5, "sum {sum}");
+    }
+
+    #[test]
+    fn label_escaping_roundtrips() {
+        let mut b = RegistryBuilder::new();
+        let c = b.counter_with(
+            "test_labeled_total",
+            "Help with a backslash \\ and\nnewline.",
+            &[("phase", "ver\"ify\\x\ny")],
+        );
+        let r = b.build();
+        r.add(c, 2);
+        let text = r.render();
+        assert!(text.contains("# HELP test_labeled_total Help with a backslash \\\\ and\\nnewline."));
+        assert!(text.contains("phase=\"ver\\\"ify\\\\x\\ny\""));
+        let exp = parse_exposition(&text).expect("escaped labels must parse");
+        let s = &exp.family("test_labeled_total").unwrap().samples[0];
+        assert_eq!(s.label("phase"), Some("ver\"ify\\x\ny"));
+        assert_eq!(s.value, 2.0);
+    }
+
+    #[test]
+    fn counter_scale_renders_seconds() {
+        let mut b = RegistryBuilder::new();
+        let c = b.counter_scaled("test_gen_seconds_total", "Generation time.", &[], 1e-9);
+        let r = b.build();
+        r.add(c, 2_500_000_000); // 2.5 s in ns
+        let exp = parse_exposition(&r.render()).unwrap();
+        assert!((exp.value("test_gen_seconds_total").unwrap() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parser_rejects_broken_expositions() {
+        // sample without a family
+        assert!(parse_exposition("orphan_total 3\n").is_err());
+        // non-cumulative buckets
+        let bad = "# TYPE h histogram\n\
+                   h_bucket{le=\"1\"} 5\nh_bucket{le=\"2\"} 3\nh_bucket{le=\"+Inf\"} 5\n\
+                   h_sum 1\nh_count 5\n";
+        assert!(parse_exposition(bad).is_err());
+        // +Inf != count
+        let bad2 = "# TYPE h histogram\n\
+                    h_bucket{le=\"1\"} 1\nh_bucket{le=\"+Inf\"} 2\nh_sum 1\nh_count 3\n";
+        assert!(parse_exposition(bad2).is_err());
+        // missing _sum
+        let bad3 = "# TYPE h histogram\nh_bucket{le=\"+Inf\"} 1\nh_count 1\n";
+        assert!(parse_exposition(bad3).is_err());
+    }
+
+    #[test]
+    fn log_buckets_ascend() {
+        let b = log_buckets(0.001, 2.0, 10);
+        assert_eq!(b.len(), 10);
+        assert!(b.windows(2).all(|w| w[0] < w[1]));
+        assert!((b[0] - 0.001).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,334 @@
+//! Round-level flight recorder: a fixed-capacity, lock-free ring buffer
+//! of structured [`RoundEvent`]s fed by the [`RoundObserver`] hook the
+//! engines call once per speculation round.
+//!
+//! The ring is pre-sized at startup (capacity rounded up to a power of
+//! two) and every slot field is an `AtomicU64`, so recording an event
+//! is one `fetch_add` to claim a slot plus ten relaxed stores — no
+//! locks, no heap traffic — which keeps the observer inside the S22
+//! zero-allocation round guarantee (asserted under `count-alloc` in
+//! `rust/tests/count_alloc.rs`). The HTTP route thread snapshots the
+//! ring for `GET /trace` with [`FlightRecorder::to_json`]; a reader
+//! racing the single writer can observe a torn in-flight event at the
+//! ring head, which is acceptable for a diagnostic flight recorder and
+//! documented in `docs/observability.md`.
+//!
+//! `repro trace` fetches that JSON from a running server and prints the
+//! per-lane round summary produced by [`summarize`].
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+use crate::util::json::Json;
+
+/// One speculation round as seen by the engines: identity (lane,
+/// round), tree shape (nodes, verify_t, draft_w), outcome (accepted
+/// tokens), and cost (per-phase nanoseconds, host-alloc bytes).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RoundEvent {
+    /// KV lane (batch slot); 0 for bs=1 engines.
+    pub lane: u32,
+    /// Round index within the generation, starting at 0.
+    pub round: u32,
+    /// Draft-tree nodes proposed this round (root excluded).
+    pub tree_nodes: u32,
+    /// Verify-family width the round dispatched at.
+    pub verify_t: u32,
+    /// Draft-step width of the chain-extend (0 when the round ended
+    /// the generation and no extend ran).
+    pub draft_w: u32,
+    /// Tokens committed by the acceptance walk (bonus token included).
+    pub accepted: u32,
+    /// Draft-model time attributed to this round.
+    pub draft_ns: u64,
+    /// Target verify time attributed to this round.
+    pub verify_ns: u64,
+    /// Host-side round-loop time attributed to this round.
+    pub host_ns: u64,
+    /// Scratch capacity growth this round (0 once warm).
+    pub alloc_bytes: u64,
+}
+
+const FIELDS: usize = 10;
+
+impl RoundEvent {
+    fn pack(&self) -> [u64; FIELDS] {
+        [
+            self.lane as u64,
+            self.round as u64,
+            self.tree_nodes as u64,
+            self.verify_t as u64,
+            self.draft_w as u64,
+            self.accepted as u64,
+            self.draft_ns,
+            self.verify_ns,
+            self.host_ns,
+            self.alloc_bytes,
+        ]
+    }
+
+    fn unpack(f: [u64; FIELDS]) -> RoundEvent {
+        RoundEvent {
+            lane: f[0] as u32,
+            round: f[1] as u32,
+            tree_nodes: f[2] as u32,
+            verify_t: f[3] as u32,
+            draft_w: f[4] as u32,
+            accepted: f[5] as u32,
+            draft_ns: f[6],
+            verify_ns: f[7],
+            host_ns: f[8],
+            alloc_bytes: f[9],
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lane", Json::Num(self.lane as f64)),
+            ("round", Json::Num(self.round as f64)),
+            ("tree_nodes", Json::Num(self.tree_nodes as f64)),
+            ("verify_t", Json::Num(self.verify_t as f64)),
+            ("draft_w", Json::Num(self.draft_w as f64)),
+            ("accepted", Json::Num(self.accepted as f64)),
+            ("draft_ns", Json::Num(self.draft_ns as f64)),
+            ("verify_ns", Json::Num(self.verify_ns as f64)),
+            ("host_ns", Json::Num(self.host_ns as f64)),
+            ("alloc_bytes", Json::Num(self.alloc_bytes as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<RoundEvent> {
+        let u32f = |k: &str| j.get(k).and_then(|v| v.as_f64()).map(|v| v as u32);
+        let u64f = |k: &str| j.get(k).and_then(|v| v.as_f64()).map(|v| v as u64);
+        Some(RoundEvent {
+            lane: u32f("lane")?,
+            round: u32f("round")?,
+            tree_nodes: u32f("tree_nodes")?,
+            verify_t: u32f("verify_t")?,
+            draft_w: u32f("draft_w")?,
+            accepted: u32f("accepted")?,
+            draft_ns: u64f("draft_ns")?,
+            verify_ns: u64f("verify_ns")?,
+            host_ns: u64f("host_ns")?,
+            alloc_bytes: u64f("alloc_bytes")?,
+        })
+    }
+}
+
+/// Hook the engines call once per completed speculation round. `&self`
+/// because the implementor is shared (worker thread records, route
+/// threads read); implementations MUST NOT allocate — they run inside
+/// the zero-alloc round loop.
+pub trait RoundObserver: Sync {
+    fn on_round(&self, ev: &RoundEvent);
+}
+
+struct Slot {
+    f: [AtomicU64; FIELDS],
+}
+
+impl Slot {
+    fn empty() -> Slot {
+        Slot { f: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+/// Fixed-capacity ring of the most recent [`RoundEvent`]s (see module
+/// doc for the concurrency contract).
+pub struct FlightRecorder {
+    mask: u64,
+    head: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+impl FlightRecorder {
+    /// Pre-size the ring; `capacity` is rounded up to a power of two
+    /// (minimum 8). All allocation happens here, never in `record`.
+    pub fn new(capacity: usize) -> FlightRecorder {
+        let cap = capacity.max(8).next_power_of_two();
+        FlightRecorder {
+            mask: (cap - 1) as u64,
+            head: AtomicU64::new(0),
+            slots: (0..cap).map(|_| Slot::empty()).collect(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total events ever recorded (monotonic; may exceed capacity).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Relaxed)
+    }
+
+    /// Record one event: claim a slot, store ten words. Allocation-free.
+    #[inline]
+    pub fn record(&self, ev: &RoundEvent) {
+        let slot = &self.slots[(self.head.fetch_add(1, Relaxed) & self.mask) as usize];
+        for (dst, src) in slot.f.iter().zip(ev.pack()) {
+            dst.store(src, Relaxed);
+        }
+    }
+
+    /// Snapshot the retained events, oldest first (allocates; dump path
+    /// only).
+    pub fn events(&self) -> Vec<RoundEvent> {
+        let head = self.head.load(Relaxed);
+        let cap = self.slots.len() as u64;
+        let n = head.min(cap);
+        let mut out = Vec::with_capacity(n as usize);
+        for k in (head - n)..head {
+            let slot = &self.slots[(k & self.mask) as usize];
+            out.push(RoundEvent::unpack(std::array::from_fn(|i| slot.f[i].load(Relaxed))));
+        }
+        out
+    }
+
+    /// The `GET /trace` payload: capacity, total recorded, retained
+    /// events oldest-first.
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self.events().iter().map(|e| e.to_json()).collect();
+        Json::obj(vec![
+            ("capacity", Json::Num(self.capacity() as f64)),
+            ("recorded", Json::Num(self.recorded() as f64)),
+            ("events", Json::Arr(events)),
+        ])
+    }
+}
+
+impl RoundObserver for FlightRecorder {
+    #[inline]
+    fn on_round(&self, ev: &RoundEvent) {
+        self.record(ev);
+    }
+}
+
+/// Parse a `GET /trace` payload back into events (accepts either the
+/// full object or a bare array).
+pub fn events_from_json(j: &Json) -> Vec<RoundEvent> {
+    let arr = j.get("events").and_then(|e| e.as_arr()).or_else(|| j.as_arr());
+    arr.map(|a| a.iter().filter_map(RoundEvent::from_json).collect()).unwrap_or_default()
+}
+
+/// Human-readable per-lane summary of a trace dump (used by
+/// `repro trace`).
+pub fn summarize(events: &[RoundEvent]) -> String {
+    if events.is_empty() {
+        return "trace: no rounds recorded\n".to_string();
+    }
+    let mut lanes: Vec<u32> = events.iter().map(|e| e.lane).collect();
+    lanes.sort_unstable();
+    lanes.dedup();
+    let mut out = String::new();
+    let (mut d, mut v, mut h) = (0u64, 0u64, 0u64);
+    for e in events {
+        d += e.draft_ns;
+        v += e.verify_ns;
+        h += e.host_ns;
+    }
+    let total = (d + v + h).max(1);
+    out.push_str(&format!(
+        "trace: {} rounds over {} lane(s)\n  phase split: draft {:.1} ms ({:.0}%) | verify {:.1} ms ({:.0}%) | host {:.1} ms ({:.0}%)\n",
+        events.len(),
+        lanes.len(),
+        d as f64 / 1e6,
+        100.0 * d as f64 / total as f64,
+        v as f64 / 1e6,
+        100.0 * v as f64 / total as f64,
+        h as f64 / 1e6,
+        100.0 * h as f64 / total as f64,
+    ));
+    out.push_str("  lane | rounds |    tau | nodes | ver_t | drf_w | alloc rounds\n");
+    for lane in lanes {
+        let evs: Vec<&RoundEvent> = events.iter().filter(|e| e.lane == lane).collect();
+        let n = evs.len() as f64;
+        let tau = evs.iter().map(|e| e.accepted as f64).sum::<f64>() / n;
+        let nodes = evs.iter().map(|e| e.tree_nodes as f64).sum::<f64>() / n;
+        let vt = evs.iter().map(|e| e.verify_t as f64).sum::<f64>() / n;
+        let wrows: Vec<f64> =
+            evs.iter().filter(|e| e.draft_w > 0).map(|e| e.draft_w as f64).collect();
+        let dw = if wrows.is_empty() { 0.0 } else { wrows.iter().sum::<f64>() / wrows.len() as f64 };
+        let allocs = evs.iter().filter(|e| e.alloc_bytes > 0).count();
+        out.push_str(&format!(
+            "  {lane:4} | {:6} | {tau:6.2} | {nodes:5.1} | {vt:5.1} | {dw:5.1} | {allocs:12}\n",
+            evs.len()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(lane: u32, round: u32) -> RoundEvent {
+        RoundEvent {
+            lane,
+            round,
+            tree_nodes: 25,
+            verify_t: 26,
+            draft_w: 10,
+            accepted: 4,
+            draft_ns: 1_000_000,
+            verify_ns: 3_000_000,
+            host_ns: 500_000,
+            alloc_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn ring_retains_newest_in_order() {
+        let r = FlightRecorder::new(8);
+        assert_eq!(r.capacity(), 8);
+        for i in 0..13 {
+            r.record(&ev(0, i));
+        }
+        assert_eq!(r.recorded(), 13);
+        let evs = r.events();
+        assert_eq!(evs.len(), 8);
+        let rounds: Vec<u32> = evs.iter().map(|e| e.round).collect();
+        assert_eq!(rounds, (5..13).collect::<Vec<u32>>(), "oldest-first window");
+    }
+
+    #[test]
+    fn capacity_rounds_up_to_power_of_two() {
+        assert_eq!(FlightRecorder::new(0).capacity(), 8);
+        assert_eq!(FlightRecorder::new(9).capacity(), 16);
+        assert_eq!(FlightRecorder::new(1024).capacity(), 1024);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = FlightRecorder::new(8);
+        r.record(&ev(1, 0));
+        r.record(&ev(2, 1));
+        let j = r.to_json();
+        assert_eq!(j.get("recorded").and_then(|v| v.as_usize()), Some(2));
+        let back = events_from_json(&j);
+        assert_eq!(back, vec![ev(1, 0), ev(2, 1)]);
+        // also parses from serialized text
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(events_from_json(&parsed), back);
+    }
+
+    #[test]
+    fn observer_records_through_trait() {
+        let r = FlightRecorder::new(8);
+        let obs: &dyn RoundObserver = &r;
+        obs.on_round(&ev(0, 0));
+        assert_eq!(r.recorded(), 1);
+    }
+
+    #[test]
+    fn summary_reports_lanes_and_tau() {
+        let mut events = Vec::new();
+        for round in 0..4 {
+            events.push(ev(0, round));
+            events.push(ev(1, round));
+        }
+        let s = summarize(&events);
+        assert!(s.contains("8 rounds over 2 lane(s)"), "{s}");
+        assert!(s.contains("4.00"), "tau column missing: {s}");
+        assert!(summarize(&[]).contains("no rounds"));
+    }
+}

@@ -5,8 +5,9 @@
 //!
 //! Endpoints:
 //!   POST /v1/generate   {"prompt", "max_tokens"?, "temperature"?, "method"?}
-//!   GET  /healthz
-//!   GET  /metrics       prometheus-style text
+//!   GET  /healthz       worker liveness JSON; 503 when the worker stalls
+//!   GET  /metrics       Prometheus text exposition (see [`ServerMetrics`])
+//!   GET  /trace         round flight-recorder dump (see `metrics::trace`)
 //!
 //! The worker admits requests through the [`Scheduler`]: per-request
 //! FCFS by default, or — with `--batch N --width-grouping` — width-aware
@@ -34,6 +35,14 @@
 //! width-grouping cost model can be calibrated with `--cost-model
 //! path` (a JSON file from `repro bench --json`; see
 //! [`crate::coordinator::CostModel`]).
+//!
+//! Observability: the worker threads a [`RoundObserver`] through both
+//! engines — every speculation round lands in the [`FlightRecorder`]
+//! ring and the round histograms, and beats the [`Health`] heartbeat.
+//! The whole record path is store/fetch-add only, so serving with full
+//! observability attached stays inside the S22 zero-allocation round
+//! guarantee (asserted in `rust/tests/count_alloc.rs`). The full metric
+//! catalogue lives in `docs/observability.md`.
 
 pub mod http;
 
@@ -42,6 +51,7 @@ use std::io::Write as _;
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::coordinator::request::{Method, Request, Response, TreeChoice};
 use crate::coordinator::{
@@ -49,6 +59,11 @@ use crate::coordinator::{
     Scheduler,
 };
 use crate::eval::runner::{Runner, RunSpec};
+use crate::metrics::registry::{
+    log_buckets, CounterId, GaugeId, HistId, MetricsRegistry, RegistryBuilder,
+};
+use crate::metrics::trace::{FlightRecorder, RoundEvent, RoundObserver};
+use crate::metrics::{Aggregate, GenRecord};
 use crate::models::ModelBundle;
 use crate::spec::dyntree::{TreePolicy, WidthSelect};
 use crate::spec::engine::GenConfig;
@@ -57,13 +72,311 @@ use crate::text::bpe::Bpe;
 use crate::util::json::Json;
 use http::{HttpRequest, HttpResponse};
 
-pub struct ServerStats {
-    pub requests: AtomicU64,
-    pub tokens: AtomicU64,
-    pub errors: AtomicU64,
-    pub rejected: AtomicU64,
-    pub gen_ns: AtomicU64,
-    pub batched: AtomicU64,
+/// The server's full metric surface: a pre-sized lock-free registry
+/// (request lifecycle histograms, scheduler gauges, dispatch/drag
+/// counters, per-phase time totals) plus the round flight recorder.
+/// Constructed once at startup; every record method is store/fetch-add
+/// only. Constructable without artifacts, so the exposition tests in
+/// `rust/tests/observability.rs` exercise the exact serving registry.
+pub struct ServerMetrics {
+    pub registry: MetricsRegistry,
+    pub trace: FlightRecorder,
+    // counters
+    c_requests: CounterId,
+    c_tokens: CounterId,
+    c_errors: CounterId,
+    c_rejected: CounterId,
+    c_dispatch_batched: CounterId,
+    c_dispatch_bs1: CounterId,
+    c_dragged: CounterId,
+    c_rounds: CounterId,
+    c_gen_ns: CounterId,
+    c_phase: [CounterId; 5],
+    // gauges
+    g_queue_depth: GaugeId,
+    g_inflight: GaugeId,
+    g_last_group: GaugeId,
+    g_tau: GaugeId,
+    g_mean_verify_t: GaugeId,
+    g_mean_draft_w: GaugeId,
+    g_p50: GaugeId,
+    g_p99: GaugeId,
+    // histograms
+    h_request: HistId,
+    h_ttft: HistId,
+    h_queue_wait: HistId,
+    h_token: HistId,
+    h_round_accepted: HistId,
+    h_round_verify: HistId,
+}
+
+impl ServerMetrics {
+    /// Build the serving registry and a flight recorder ring of
+    /// `trace_cap` events. All allocation happens here.
+    pub fn new(trace_cap: usize) -> ServerMetrics {
+        let mut b = RegistryBuilder::new();
+        let lat = log_buckets(0.001, 2.0, 16); // 1 ms .. ~32.8 s
+        let tok = log_buckets(0.0001, 2.0, 14); // 0.1 ms .. ~0.8 s
+        let c_requests = b.counter("eagle_requests_total", "Requests admitted to the queue.");
+        let c_tokens = b.counter("eagle_tokens_total", "Tokens generated across all requests.");
+        let c_errors = b.counter("eagle_errors_total", "Requests that failed in the engine.");
+        let c_rejected =
+            b.counter("eagle_rejected_total", "Requests rejected with 429 (queue full).");
+        let c_dispatch_batched = b.counter(
+            "eagle_dispatch_batched_total",
+            "Lanes dispatched on the batched engine.",
+        );
+        let c_dispatch_bs1 =
+            b.counter("eagle_dispatch_bs1_total", "Requests dispatched on the bs=1 path.");
+        let c_dragged = b.counter(
+            "eagle_dragged_rounds_total",
+            "Rounds where a lane verified wider than its own tree's fit.",
+        );
+        let c_rounds = b.counter("eagle_rounds_total", "Speculation rounds executed.");
+        let c_gen_ns = b.counter_scaled(
+            "eagle_gen_seconds_total",
+            "Engine generation time (batched lanes share their group's wall).",
+            &[],
+            1e-9,
+        );
+        let c_phase = ["prefill", "draft", "verify", "commit", "host"].map(|phase| {
+            b.counter_scaled(
+                "eagle_phase_seconds_total",
+                "Engine time by phase.",
+                &[("phase", phase)],
+                1e-9,
+            )
+        });
+        let g_queue_depth = b.gauge("eagle_queue_depth", "Requests waiting in the queue.");
+        let g_inflight = b.gauge("eagle_inflight_lanes", "Lanes currently generating.");
+        let g_last_group =
+            b.gauge("eagle_last_group_lanes", "Lane count of the most recent admitted group.");
+        let g_tau = b.gauge("eagle_tau", "Mean accepted tokens per target pass (served so far).");
+        let g_mean_verify_t =
+            b.gauge("eagle_mean_verify_t", "Mean dispatched verify width per round.");
+        let g_mean_draft_w =
+            b.gauge("eagle_mean_draft_w", "Mean dispatched draft-step width per call.");
+        let g_p50 =
+            b.gauge("eagle_latency_p50_seconds", "p50 engine latency over served requests.");
+        let g_p99 =
+            b.gauge("eagle_latency_p99_seconds", "p99 engine latency over served requests.");
+        let h_request = b.histogram(
+            "eagle_request_seconds",
+            "End-to-end request latency (admission to delivery).",
+            &lat,
+        );
+        let h_ttft = b.histogram(
+            "eagle_ttft_seconds",
+            "Time to first committed token (queue wait + prefill + root sample).",
+            &lat,
+        );
+        let h_queue_wait =
+            b.histogram("eagle_queue_wait_seconds", "Time spent queued before dispatch.", &lat);
+        let h_token =
+            b.histogram("eagle_token_seconds", "Mean per-token engine latency per request.", &tok);
+        let h_round_accepted = b.histogram(
+            "eagle_round_accepted_tokens",
+            "Tokens committed per speculation round (bonus included).",
+            &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 12.0],
+        );
+        let h_round_verify = b.histogram(
+            "eagle_round_verify_seconds",
+            "Target verify time per speculation round.",
+            &log_buckets(0.0001, 2.0, 12),
+        );
+        ServerMetrics {
+            registry: b.build(),
+            trace: FlightRecorder::new(trace_cap),
+            c_requests,
+            c_tokens,
+            c_errors,
+            c_rejected,
+            c_dispatch_batched,
+            c_dispatch_bs1,
+            c_dragged,
+            c_rounds,
+            c_gen_ns,
+            c_phase,
+            g_queue_depth,
+            g_inflight,
+            g_last_group,
+            g_tau,
+            g_mean_verify_t,
+            g_mean_draft_w,
+            g_p50,
+            g_p99,
+            h_request,
+            h_ttft,
+            h_queue_wait,
+            h_token,
+            h_round_accepted,
+            h_round_verify,
+        }
+    }
+
+    pub fn on_request(&self) {
+        self.registry.inc(self.c_requests);
+    }
+
+    pub fn on_rejected(&self) {
+        self.registry.inc(self.c_rejected);
+    }
+
+    pub fn on_errors(&self, n: u64) {
+        self.registry.add(self.c_errors, n);
+    }
+
+    /// A group left the queue for an engine: count the dispatch class
+    /// and remember the group size.
+    pub fn on_dispatch(&self, batched: bool, lanes: u64) {
+        let id = if batched { self.c_dispatch_batched } else { self.c_dispatch_bs1 };
+        self.registry.add(id, lanes);
+        self.registry.set_gauge(self.g_last_group, lanes as f64);
+    }
+
+    pub fn set_queue_depth(&self, n: usize) {
+        self.registry.set_gauge(self.g_queue_depth, n as f64);
+    }
+
+    pub fn set_inflight(&self, lanes: u64) {
+        self.registry.set_gauge(self.g_inflight, lanes as f64);
+    }
+
+    /// Record one finished generation: request lifecycle histograms
+    /// (e2e, queue wait, TTFT, per-token) and the per-phase/drag
+    /// counters. `lanes_sharing` is the batch width the record's wall
+    /// time was shared across (1 on the bs=1 path), so
+    /// `eagle_gen_seconds_total` never double-counts a group's wall.
+    pub fn record_gen(&self, rec: &GenRecord, queue_wait_s: f64, e2e_s: f64, lanes_sharing: u64) {
+        self.registry.observe(self.h_request, e2e_s);
+        self.registry.observe(self.h_queue_wait, queue_wait_s);
+        // engines that predate ttft_ns report 0: fall back to e2e
+        let ttft =
+            if rec.ttft_ns > 0 { queue_wait_s + rec.ttft_ns as f64 / 1e9 } else { e2e_s };
+        self.registry.observe(self.h_ttft, ttft);
+        let tokens = rec.tokens.len().max(1);
+        self.registry.observe(self.h_token, rec.wall_ns as f64 / 1e9 / tokens as f64);
+        self.registry.add(self.c_tokens, rec.tokens.len() as u64);
+        self.registry.add(self.c_gen_ns, rec.wall_ns / lanes_sharing.max(1));
+        self.registry.add(self.c_dragged, rec.dragged_rounds as u64);
+        let tl = &rec.timeline;
+        let phase_ns = [tl.prefill_ns, tl.draft_ns, tl.verify_ns, tl.commit_ns, tl.host_ns];
+        for (id, ns) in self.c_phase.iter().zip(phase_ns) {
+            self.registry.add(*id, ns);
+        }
+    }
+
+    /// Refresh the derived gauges from the worker's running aggregate
+    /// (τ, mean widths, latency percentiles from the sorted cache).
+    pub fn update_aggregate(&self, agg: &Aggregate) {
+        self.registry.set_gauge(self.g_tau, agg.tau());
+        self.registry.set_gauge(self.g_mean_verify_t, agg.mean_verify_t());
+        self.registry.set_gauge(self.g_mean_draft_w, agg.mean_draft_w());
+        self.registry.set_gauge(self.g_p50, agg.latency_p50_ms() / 1e3);
+        self.registry.set_gauge(self.g_p99, agg.latency_p99_ms() / 1e3);
+    }
+
+    pub fn render(&self) -> String {
+        self.registry.render()
+    }
+}
+
+impl RoundObserver for ServerMetrics {
+    /// Per-round hook: ring-buffer slot claim + three histogram/counter
+    /// fetch-adds. Runs inside the engine round loop — must not (and
+    /// does not) allocate.
+    #[inline]
+    fn on_round(&self, ev: &RoundEvent) {
+        self.trace.record(ev);
+        self.registry.inc(self.c_rounds);
+        self.registry.observe(self.h_round_accepted, ev.accepted as f64);
+        self.registry.observe(self.h_round_verify, ev.verify_ns as f64 / 1e9);
+    }
+}
+
+/// Worker liveness for `GET /healthz`: a heartbeat the worker stores on
+/// every busy/idle transition — and on every speculation round, via
+/// [`WorkerObserver`] — so a wedged generation is distinguishable from
+/// an idle worker blocking on the queue. Stall = busy AND heartbeat
+/// older than `stall_ms`.
+pub struct Health {
+    start: Instant,
+    stall_ms: u64,
+    busy: AtomicU64,
+    inflight: AtomicU64,
+    heartbeat_ms: AtomicU64,
+}
+
+impl Health {
+    /// Starts busy so a worker that panics while loading artifacts
+    /// (before its first idle transition) reads as stalled, not healthy.
+    pub fn new(stall_ms: u64) -> Health {
+        Health {
+            start: Instant::now(),
+            stall_ms,
+            busy: AtomicU64::new(1),
+            inflight: AtomicU64::new(0),
+            heartbeat_ms: AtomicU64::new(0),
+        }
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.start.elapsed().as_millis() as u64
+    }
+
+    /// Store a fresh heartbeat (allocation-free; called per round).
+    #[inline]
+    pub fn beat(&self) {
+        self.heartbeat_ms.store(self.now_ms(), Ordering::Relaxed);
+    }
+
+    pub fn set_busy(&self, busy: bool) {
+        self.beat();
+        self.busy.store(busy as u64, Ordering::Relaxed);
+    }
+
+    pub fn set_inflight(&self, lanes: u64) {
+        self.inflight.store(lanes, Ordering::Relaxed);
+    }
+
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    pub fn heartbeat_age_ms(&self) -> u64 {
+        self.now_ms().saturating_sub(self.heartbeat_ms.load(Ordering::Relaxed))
+    }
+
+    pub fn stalled(&self) -> bool {
+        self.busy.load(Ordering::Relaxed) == 1 && self.heartbeat_age_ms() > self.stall_ms
+    }
+
+    pub fn to_json(&self, queue_depth: usize) -> Json {
+        Json::obj(vec![
+            ("ok", Json::Bool(!self.stalled())),
+            ("busy", Json::Bool(self.busy.load(Ordering::Relaxed) == 1)),
+            ("queue_depth", Json::Num(queue_depth as f64)),
+            ("inflight_lanes", Json::Num(self.inflight() as f64)),
+            ("heartbeat_age_ms", Json::Num(self.heartbeat_age_ms() as f64)),
+            ("uptime_seconds", Json::Num(self.start.elapsed().as_secs_f64())),
+        ])
+    }
+}
+
+/// The observer the worker attaches to both engines: fans each round
+/// event into [`ServerMetrics`] (ring + histograms) and beats the
+/// [`Health`] heartbeat. Stores and fetch-adds only.
+struct WorkerObserver<'a> {
+    metrics: &'a ServerMetrics,
+    health: &'a Health,
+}
+
+impl RoundObserver for WorkerObserver<'_> {
+    #[inline]
+    fn on_round(&self, ev: &RoundEvent) {
+        self.metrics.on_round(ev);
+        self.health.beat();
+    }
 }
 
 /// Server configuration (see `repro serve --help`).
@@ -87,6 +400,13 @@ pub struct ServeConfig {
     /// Optional dispatch-cost calibration file (`--cost-model`); the
     /// default keeps `scheduler::DISPATCH_OVERHEAD`.
     pub cost_model: Option<std::path::PathBuf>,
+    /// Flight-recorder ring capacity (`--trace-cap`), in round events.
+    pub trace_cap: usize,
+    /// Heartbeat age (`--stall-ms`) past which a busy worker reads as
+    /// stalled and `/healthz` turns 503. The observer beats every
+    /// round, so this only needs to exceed one speculation round (plus
+    /// prefill and artifact loading).
+    pub stall_ms: u64,
 }
 
 impl ServeConfig {
@@ -102,6 +422,8 @@ impl ServeConfig {
             linger_ms: 2,
             width_grouping: false,
             cost_model: None,
+            trace_cap: 1024,
+            stall_ms: 30_000,
         }
     }
 }
@@ -145,21 +467,16 @@ fn resolve_tree(choice: TreeChoice, default_tree: &TreePolicy) -> TreePolicy {
 /// hand requests over through the bounded queue (backpressure -> 429).
 pub fn serve(cfg: ServeConfig) -> Result<()> {
     let queue = Arc::new(RequestQueue::new(cfg.queue_cap));
-    let stats = Arc::new(ServerStats {
-        requests: AtomicU64::new(0),
-        tokens: AtomicU64::new(0),
-        errors: AtomicU64::new(0),
-        rejected: AtomicU64::new(0),
-        gen_ns: AtomicU64::new(0),
-        batched: AtomicU64::new(0),
-    });
+    let metrics = Arc::new(ServerMetrics::new(cfg.trace_cap));
+    let health = Arc::new(Health::new(cfg.stall_ms));
     let pending: Arc<PendingMap> = Arc::new(Mutex::new(std::collections::HashMap::new()));
 
     // ---- inference worker --------------------------------------------------
     {
         let queue = queue.clone();
         let pending = pending.clone();
-        let stats = stats.clone();
+        let metrics = metrics.clone();
+        let health = health.clone();
         let artifacts = cfg.artifacts.clone();
         let model = cfg.model.clone();
         let default_tree = cfg.default_tree.clone();
@@ -214,15 +531,23 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
             // one warm scratch pool for the worker's lifetime: batched
             // groups reuse per-lane round state across admissions
             let mut pool = ScratchPool::new();
+            // running aggregate over everything served: feeds the τ /
+            // mean-width / latency-percentile gauges
+            let mut agg = Aggregate::new();
             loop {
+                // idle while blocking on the queue, so an empty server
+                // never reads as a stall
+                health.set_busy(false);
                 let groups = sched.next_groups(&queue);
+                health.set_busy(true);
                 if groups.is_empty() {
+                    health.set_busy(false);
                     break; // queue closed
                 }
                 for group in groups {
                     run_group(
                         group, &runner, &bundle, &bpe, &c, &default_tree, default_width,
-                        &pending, &stats, &mut pool,
+                        &pending, &metrics, &health, &mut pool, &mut agg,
                     );
                 }
             }
@@ -240,14 +565,15 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
         };
         let queue = queue.clone();
         let pending = pending.clone();
-        let stats = stats.clone();
+        let metrics = metrics.clone();
+        let health = health.clone();
         let next_id = next_id.clone();
         std::thread::spawn(move || {
             let req = match HttpRequest::read_from(&mut stream) {
                 Ok(r) => r,
                 Err(_) => return,
             };
-            let resp = route(&req, &queue, &pending, &stats, &next_id);
+            let resp = route(&req, &queue, &pending, &metrics, &health, &next_id);
             let _ = stream.write_all(resp.to_bytes().as_slice());
         });
     }
@@ -268,11 +594,14 @@ fn run_group(
     default_tree: &TreePolicy,
     default_width: WidthSelect,
     pending: &PendingMap,
-    stats: &ServerStats,
+    metrics: &ServerMetrics,
+    health: &Health,
     pool: &mut ScratchPool,
+    agg: &mut Aggregate,
 ) {
     let reqs = &group.requests;
     let b = reqs.len();
+    let observer = WorkerObserver { metrics, health };
     // the batched engine can take the group iff it is a multi-lane group
     // of batchable requests (`Request::width_batchable`, the same
     // predicate the scheduler groups by), the server is not pinned to a
@@ -294,11 +623,18 @@ fn run_group(
         && bundle.target.exes.has(&format!("prefill_slot_bs{b}"))
         && bundle.drafts.contains_key("eagle");
     if batchable {
-        let t0 = std::time::Instant::now();
+        metrics.on_dispatch(true, b as u64);
+        health.set_inflight(b as u64);
+        metrics.set_inflight(b as u64);
+        // queue wait ends here: dispatch is the admission-to-engine edge
+        let queue_waits: Vec<f64> =
+            reqs.iter().map(|r| r.arrival.elapsed().as_secs_f64()).collect();
+        let t0 = Instant::now();
         let prompts: Vec<Vec<u32>> = reqs.iter().map(|r| bpe.encode_prompt(&r.prompt)).collect();
         let policy = resolve_tree(reqs[0].tree, default_tree);
         let mut engine = BatchEagleEngine::new(&bundle.target, &bundle.drafts["eagle"], c)
-            .with_policy(policy.clone());
+            .with_policy(policy.clone())
+            .with_observer(&observer);
         // the group's width cap only applies under the dynamic planner,
         // which shrinks each lane's node budget to fit it; a static tree
         // is a fixed shape that no narrow cap can hold, so a static
@@ -321,11 +657,10 @@ fn run_group(
         let seeds: Vec<u64> = reqs.iter().map(|r| r.seed).collect();
         match engine.generate_pooled_seeded(&prompts, &seeds, &gen, pool) {
             Ok(recs) => {
-                stats.batched.fetch_add(b as u64, Ordering::Relaxed);
                 let lat_ms = t0.elapsed().as_secs_f64() * 1e3;
-                for (req, rec) in reqs.iter().zip(recs) {
-                    stats.tokens.fetch_add(rec.tokens.len() as u64, Ordering::Relaxed);
-                    stats.gen_ns.fetch_add(rec.wall_ns / b as u64, Ordering::Relaxed);
+                for ((req, rec), qw) in reqs.iter().zip(recs).zip(&queue_waits) {
+                    metrics.record_gen(&rec, *qw, req.arrival.elapsed().as_secs_f64(), b as u64);
+                    agg.add(&rec);
                     deliver(
                         pending,
                         req.id,
@@ -336,24 +671,31 @@ fn run_group(
                             target_passes: rec.target_passes,
                             tau: rec.tau(),
                             latency_ms: lat_ms,
-                            queue_ms: req.arrival.elapsed().as_secs_f64() * 1e3 - lat_ms,
+                            queue_ms: qw * 1e3,
                         },
                     );
                 }
+                metrics.update_aggregate(agg);
             }
             Err(e) => {
-                stats.errors.fetch_add(b as u64, Ordering::Relaxed);
+                metrics.on_errors(b as u64);
                 let e = anyhow::anyhow!("{e}");
                 for req in reqs {
                     deliver(pending, req.id, error_response(req.id, &e));
                 }
             }
         }
+        health.set_inflight(0);
+        metrics.set_inflight(0);
         return;
     }
     // bs=1 fallback: the latency path, one request at a time
     for req in reqs {
-        let t0 = std::time::Instant::now();
+        metrics.on_dispatch(false, 1);
+        health.set_inflight(1);
+        metrics.set_inflight(1);
+        let qw = req.arrival.elapsed().as_secs_f64();
+        let t0 = Instant::now();
         let ids = bpe.encode_prompt(&req.prompt);
         let spec = RunSpec {
             method: req.method,
@@ -373,10 +715,10 @@ fn run_group(
             seed: req.seed,
             eos: Some(bpe.eos()),
         };
-        let resp = match runner.run_one(bundle, &ids, &spec, &gen) {
+        let resp = match runner.run_one_observed(bundle, &ids, &spec, &gen, Some(&observer)) {
             Ok(rec) => {
-                stats.tokens.fetch_add(rec.tokens.len() as u64, Ordering::Relaxed);
-                stats.gen_ns.fetch_add(rec.wall_ns, Ordering::Relaxed);
+                metrics.record_gen(&rec, qw, req.arrival.elapsed().as_secs_f64(), 1);
+                agg.add(&rec);
                 Response {
                     id: req.id,
                     text: bpe.decode(&rec.tokens),
@@ -384,43 +726,56 @@ fn run_group(
                     target_passes: rec.target_passes,
                     tau: rec.tau(),
                     latency_ms: t0.elapsed().as_secs_f64() * 1e3,
-                    queue_ms: req.arrival.elapsed().as_secs_f64() * 1e3
-                        - t0.elapsed().as_secs_f64() * 1e3,
+                    queue_ms: qw * 1e3,
                 }
             }
             Err(e) => {
-                stats.errors.fetch_add(1, Ordering::Relaxed);
+                metrics.on_errors(1);
                 error_response(req.id, &e)
             }
         };
         deliver(pending, req.id, resp);
     }
+    metrics.update_aggregate(agg);
+    health.set_inflight(0);
+    metrics.set_inflight(0);
 }
 
 fn route(
     req: &HttpRequest,
     queue: &RequestQueue,
     pending: &PendingMap,
-    stats: &ServerStats,
+    metrics: &ServerMetrics,
+    health: &Health,
     next_id: &AtomicU64,
 ) -> HttpResponse {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => HttpResponse::ok("application/json", b"{\"ok\":true}".to_vec()),
-        ("GET", "/metrics") => {
-            let body = format!(
-                "eagle_requests_total {}\neagle_tokens_total {}\neagle_errors_total {}\neagle_rejected_total {}\neagle_batched_total {}\neagle_queue_depth {}\neagle_gen_seconds_total {:.3}\n",
-                stats.requests.load(Ordering::Relaxed),
-                stats.tokens.load(Ordering::Relaxed),
-                stats.errors.load(Ordering::Relaxed),
-                stats.rejected.load(Ordering::Relaxed),
-                stats.batched.load(Ordering::Relaxed),
-                queue.len(),
-                stats.gen_ns.load(Ordering::Relaxed) as f64 / 1e9,
-            );
-            HttpResponse::ok("text/plain", body.into_bytes())
+        ("GET", "/healthz") => {
+            let body = health.to_json(queue.len()).to_string().into_bytes();
+            if health.stalled() {
+                HttpResponse {
+                    code: 503,
+                    reason: "Service Unavailable",
+                    content_type: "application/json".into(),
+                    body,
+                }
+            } else {
+                HttpResponse::ok("application/json", body)
+            }
         }
+        ("GET", "/metrics") => {
+            // scrape-time gauges: depth is a queue property, in-flight a
+            // worker property; both refresh on read
+            metrics.set_queue_depth(queue.len());
+            metrics.set_inflight(health.inflight());
+            HttpResponse::ok("text/plain; version=0.0.4", metrics.render().into_bytes())
+        }
+        ("GET", "/trace") => HttpResponse::ok(
+            "application/json",
+            metrics.trace.to_json().to_string().into_bytes(),
+        ),
         ("POST", "/v1/generate") => {
-            stats.requests.fetch_add(1, Ordering::Relaxed);
+            metrics.on_request();
             let body = match std::str::from_utf8(&req.body).ok().and_then(|s| Json::parse(s).ok())
             {
                 Some(v) => v,
@@ -440,7 +795,7 @@ fn route(
                 Ok(()) => {}
                 Err(PushError::Full) => {
                     pending.lock().unwrap().remove(&id);
-                    stats.rejected.fetch_add(1, Ordering::Relaxed);
+                    metrics.on_rejected();
                     return HttpResponse::status(429, "queue full");
                 }
                 Err(PushError::Closed) => {

@@ -41,6 +41,7 @@ use super::sampling::{
 };
 use super::scratch::RoundScratch;
 use super::tree::{chain_extend_bias_to, fill_step_rows_into, DraftTree, TreeSpec};
+use crate::metrics::trace::{RoundEvent, RoundObserver};
 use crate::metrics::GenRecord;
 use crate::models::{EagleDraft, TargetModel};
 use crate::util::rng::Rng;
@@ -85,6 +86,10 @@ pub struct EagleEngine<'a> {
     pub draft_widths: WidthFamily,
     pub accept_a: usize,
     pub draft_w: usize,
+    /// Optional per-round hook (flight recorder / serving metrics);
+    /// called once per completed round and must not allocate — it runs
+    /// inside the zero-alloc round loop.
+    pub observer: Option<&'a dyn RoundObserver>,
 }
 
 impl<'a> EagleEngine<'a> {
@@ -107,6 +112,7 @@ impl<'a> EagleEngine<'a> {
             draft_widths,
             accept_a: c.accept_a,
             draft_w: c.draft_w,
+            observer: None,
         }
     }
 
@@ -130,6 +136,7 @@ impl<'a> EagleEngine<'a> {
             }),
             accept_a: c.accept_a,
             draft_w: c.draft_w,
+            observer: None,
         }
     }
 
@@ -137,6 +144,13 @@ impl<'a> EagleEngine<'a> {
     /// select `TreePolicy::Dynamic` per request).
     pub fn with_policy(mut self, policy: TreePolicy) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// Attach a per-round observer (builder-style; the server threads
+    /// its flight recorder + metrics registry through here).
+    pub fn with_observer(mut self, observer: &'a dyn RoundObserver) -> Self {
+        self.observer = Some(observer);
         self
     }
 
@@ -196,6 +210,8 @@ impl<'a> EagleEngine<'a> {
         let last_logits = tgt.row(&out.logits, p_win, 0, plen - 1, vocab);
         let root_tok = self.pick(last_logits, cfg.temperature, &mut rng);
         rec.tokens.push(root_tok);
+        // first committed token: the engine-side TTFT component
+        rec.ttft_ns = t_all.elapsed().as_nanos() as u64;
         let mut committed: Vec<u32> = Vec::with_capacity(prompt.len() + cfg.max_new + 2);
         committed.extend_from_slice(prompt);
         committed.push(root_tok);
@@ -267,6 +283,7 @@ impl<'a> EagleEngine<'a> {
             let fp0 = scratch.footprint() + tree.capacity_bytes();
             #[cfg(feature = "count-alloc")]
             let counted0 = crate::util::count_alloc::thread_allocated_bytes();
+            let tl0 = (rec.timeline.draft_ns, rec.timeline.verify_ns, rec.timeline.host_ns);
             // 1. build the draft tree
             let th = Instant::now();
             tree.reset(committed[m]);
@@ -410,6 +427,10 @@ impl<'a> EagleEngine<'a> {
                 if grew == 0 {
                     rec.scratch_reuse_total += 1;
                 }
+                // observer runs BEFORE the counted-alloc delta is taken so
+                // the zero-alloc assertion covers it too (no extend ran:
+                // draft_w = 0)
+                self.emit_round_event(&rec, tl0, 0, grew as u64);
                 #[cfg(feature = "count-alloc")]
                 rec.round_alloc_counted_bytes
                     .push(crate::util::count_alloc::thread_allocated_bytes() - counted0);
@@ -474,6 +495,9 @@ impl<'a> EagleEngine<'a> {
             if grew == 0 {
                 rec.scratch_reuse_total += 1;
             }
+            // observer runs BEFORE the counted-alloc delta is taken so the
+            // zero-alloc assertion covers it too
+            self.emit_round_event(&rec, tl0, w as u32, grew as u64);
             #[cfg(feature = "count-alloc")]
             rec.round_alloc_counted_bytes
                 .push(crate::util::count_alloc::thread_allocated_bytes() - counted0);
@@ -481,6 +505,28 @@ impl<'a> EagleEngine<'a> {
 
         rec.wall_ns = t_all.elapsed().as_nanos() as u64;
         Ok(rec)
+    }
+
+    /// Report the just-finished round to the attached observer (no-op
+    /// without one). Reads the round's stats back off the record tails
+    /// and the timeline deltas since `tl0` = (draft, verify, host) ns at
+    /// round start. Stack-only: safe inside the zero-alloc round loop.
+    #[inline]
+    fn emit_round_event(&self, rec: &GenRecord, tl0: (u64, u64, u64), draft_w: u32, alloc: u64) {
+        if let Some(obs) = self.observer {
+            obs.on_round(&RoundEvent {
+                lane: 0,
+                round: (rec.round_accepts.len().max(1) - 1) as u32,
+                tree_nodes: rec.round_tree_nodes.last().copied().unwrap_or(0) as u32,
+                verify_t: rec.round_verify_t.last().copied().unwrap_or(0) as u32,
+                draft_w,
+                accepted: rec.round_accepts.last().copied().unwrap_or(0) as u32,
+                draft_ns: rec.timeline.draft_ns - tl0.0,
+                verify_ns: rec.timeline.verify_ns - tl0.1,
+                host_ns: rec.timeline.host_ns - tl0.2,
+                alloc_bytes: alloc,
+            });
+        }
     }
 
     /// Expand the draft tree level by level with STATIC per-level widths.

@@ -82,6 +82,93 @@ fn count_alloc_sampled_round_sim_allocates_nothing_when_warm() {
     );
 }
 
+/// The serving observability record path — flight-recorder ring,
+/// registry counters/histograms, and the server's composite
+/// [`RoundObserver`] — must stay allocation-free when called from a
+/// warm round, for BOTH the greedy and the sampled (T>0) host round
+/// sims. This is the host-only form of the engine-level guarantee: the
+/// engines emit their round event BEFORE taking the per-round counted
+/// delta, so an allocating observer would show up there too.
+#[test]
+fn count_alloc_observer_and_histogram_record_path_allocates_nothing() {
+    use eagle_serve::metrics::registry::{log_buckets, RegistryBuilder};
+    use eagle_serve::metrics::trace::{FlightRecorder, RoundEvent, RoundObserver};
+    use eagle_serve::server::ServerMetrics;
+
+    // built once up front — after this, recording must be store/fetch-add only
+    let mut b = RegistryBuilder::new();
+    let hist = b.histogram("t_round_seconds", "round time", &log_buckets(1e-4, 2.0, 12));
+    let ctr = b.counter("t_rounds_total", "rounds");
+    let reg = b.build();
+    let ring = FlightRecorder::new(16); // smaller than the loop: exercises wrap-around
+    let server = ServerMetrics::new(16);
+    let ev0 = RoundEvent {
+        lane: 0,
+        round: 0,
+        tree_nodes: 25,
+        verify_t: 26,
+        draft_w: 10,
+        accepted: 4,
+        draft_ns: 10_000,
+        verify_ns: 40_000,
+        host_ns: 5_000,
+        alloc_bytes: 0,
+    };
+    let record_round = |i: u32| {
+        let ev = RoundEvent { round: i, accepted: (i % 5) + 1, ..ev0 };
+        ring.record(&ev);
+        reg.inc(ctr);
+        reg.observe(hist, (i as f64 + 1.0) * 1e-4);
+        server.on_round(&ev); // the server's observer: ring + round histograms
+    };
+
+    // greedy sim rounds with the full record path attached
+    let tree = default_bench_tree();
+    let mut s = sim_scratch();
+    let mut acc = sim_round_scratch(&tree, &mut s); // warm-up round
+    record_round(0);
+    let a0 = thread_allocated_bytes();
+    for i in 1..=24 {
+        acc = acc.wrapping_add(sim_round_scratch(&tree, &mut s));
+        record_round(i);
+    }
+    assert_eq!(
+        thread_allocated_bytes() - a0,
+        0,
+        "warm greedy round + observer/histogram path touched the allocator (checksum {acc})"
+    );
+
+    // sampled (T>0) sim rounds with the same record path attached
+    let n = 16;
+    let mut s = RoundScratch::new(1, n);
+    s.reserve(1, n, 64, 32, 32, 8);
+    s.reserve_q(n, 32);
+    let mut dtree = DraftTree::default();
+    let mut rng = Rng::new(5);
+    let dlogits: Vec<f32> = (0..n).map(|i| (i as f32 * 0.31).sin()).collect();
+    let tlogits: Vec<f32> = (0..n).map(|i| (i as f32 * 0.67).cos()).collect();
+    let mut alpha = [(0u64, 0u64); 5];
+    let mut acc = sampled_round(&mut dtree, &mut s, &dlogits, &tlogits, &mut rng, &mut alpha);
+    record_round(100);
+    let a0 = thread_allocated_bytes();
+    for i in 101..=124 {
+        acc = acc.wrapping_add(sampled_round(
+            &mut dtree, &mut s, &dlogits, &tlogits, &mut rng, &mut alpha,
+        ));
+        record_round(i);
+    }
+    assert_eq!(
+        thread_allocated_bytes() - a0,
+        0,
+        "warm sampled round + observer/histogram path touched the allocator (checksum {acc})"
+    );
+    // the recorders really saw every round
+    assert_eq!(ring.recorded(), 50);
+    assert_eq!(server.trace.recorded(), 50);
+    assert_eq!(reg.hist_count(hist), 50);
+    assert_eq!(reg.counter_value(ctr), 50);
+}
+
 // ---- artifact-gated: the whole engines under the counting allocator ----
 
 fn have_artifacts() -> bool {
@@ -100,6 +187,10 @@ fn count_alloc_engine_rounds_allocate_nothing_after_warmup_incl_t1() {
         ModelBundle::load(&runner.rt, &runner.man, "toy-s", &["eagle"], false, false).unwrap();
     let wl = Workload::load(&runner.man, &bpe, "mtbench", runner.man.constants.prefill_p).unwrap();
     let p = &wl.prompts[0];
+    // full serving observability attached: the engines emit each round
+    // event BEFORE taking the per-round counted delta, so the recorder
+    // + histogram cost is covered by the zero-alloc assertions below
+    let sm = eagle_serve::server::ServerMetrics::new(128);
     // bs=1: static + dynamic trees, greedy + sampled
     for temperature in [0.0f32, 1.0] {
         let cfg = GenConfig { max_new: 32, temperature, seed: 3, eos: None };
@@ -113,7 +204,7 @@ fn count_alloc_engine_rounds_allocate_nothing_after_warmup_incl_t1() {
                 tree: tree.clone(),
                 ..Default::default()
             };
-            let rec = runner.run_one(&bundle, &p.ids, &spec, &cfg).unwrap();
+            let rec = runner.run_one_observed(&bundle, &p.ids, &spec, &cfg, Some(&sm)).unwrap();
             assert!(
                 !rec.round_alloc_counted_bytes.is_empty(),
                 "allocator metric must be recorded"
@@ -127,11 +218,15 @@ fn count_alloc_engine_rounds_allocate_nothing_after_warmup_incl_t1() {
             );
         }
     }
-    // batched lock-step: greedy + sampled lanes on one engine
+    assert!(sm.trace.recorded() > 0, "observed bs=1 runs must land in the flight recorder");
+    // batched lock-step: greedy + sampled lanes on one engine, observer
+    // attached the way the server attaches it
     let prompts: Vec<Vec<u32>> = wl.prompts.iter().take(2).map(|pr| pr.ids.clone()).collect();
     let be = eagle_serve::coordinator::BatchEagleEngine::new(
         &bundle.target, &bundle.drafts["eagle"], &runner.man.constants,
-    );
+    )
+    .with_observer(&sm);
+    let before_batched = sm.trace.recorded();
     for temperature in [0.0f32, 1.0] {
         let cfg = GenConfig { max_new: 20, temperature, seed: 7, eos: None };
         for rec in be.generate(&prompts, &cfg).unwrap() {
@@ -143,4 +238,8 @@ fn count_alloc_engine_rounds_allocate_nothing_after_warmup_incl_t1() {
             );
         }
     }
+    assert!(
+        sm.trace.recorded() > before_batched,
+        "observed batched runs must land in the flight recorder"
+    );
 }

@@ -1,0 +1,208 @@
+//! Serving observability integration tests (no artifacts needed): build
+//! the EXACT registry the server scrapes (`ServerMetrics`), drive it
+//! with synthetic generations and round events, and assert the
+//! `GET /metrics` body is valid Prometheus text exposition carrying
+//! every family the acceptance criteria name. Also covers the
+//! `/healthz` stall logic and the `/trace` JSON roundtrip.
+
+use eagle_serve::metrics::registry::parse_exposition;
+use eagle_serve::metrics::trace::{events_from_json, summarize, RoundEvent, RoundObserver};
+use eagle_serve::metrics::{Aggregate, GenRecord};
+use eagle_serve::server::{Health, ServerMetrics};
+use eagle_serve::util::json::Json;
+
+/// A plausible finished generation: 24 tokens over 8 rounds, 60 ms
+/// wall, with width/drag/phase detail filled in.
+fn fake_rec(wall_ms: u64, dragged: usize) -> GenRecord {
+    let mut r = GenRecord::new(16);
+    r.tokens = (0..24).collect();
+    r.target_passes = 9;
+    r.round_accepts = vec![3; 8];
+    r.round_verify_t = vec![26, 26, 8, 8, 26, 26, 8, 8];
+    r.round_draft_w = vec![10, 10, 4, 4, 10, 10, 4, 4];
+    r.dragged_rounds = dragged;
+    r.wall_ns = wall_ms * 1_000_000;
+    r.ttft_ns = 4_000_000;
+    r.timeline.prefill_ns = 4_000_000;
+    r.timeline.draft_ns = 20_000_000;
+    r.timeline.verify_ns = 30_000_000;
+    r.timeline.commit_ns = 2_000_000;
+    r.timeline.host_ns = 4_000_000;
+    r
+}
+
+fn ev(lane: u32, round: u32, accepted: u32) -> RoundEvent {
+    RoundEvent {
+        lane,
+        round,
+        tree_nodes: 25,
+        verify_t: 26,
+        draft_w: 10,
+        accepted,
+        draft_ns: 2_500_000,
+        verify_ns: 3_750_000,
+        host_ns: 500_000,
+        alloc_bytes: 0,
+    }
+}
+
+/// Drive a ServerMetrics the way the worker does and return the parsed
+/// exposition plus the aggregate that fed the gauges.
+fn driven_metrics() -> (ServerMetrics, Aggregate) {
+    let m = ServerMetrics::new(32);
+    let mut agg = Aggregate::new();
+    for i in 0..4u64 {
+        m.on_request();
+        m.on_dispatch(i % 2 == 0, if i % 2 == 0 { 2 } else { 1 });
+        let rec = fake_rec(40 + i * 20, i as usize);
+        for round in 0..8 {
+            m.on_round(&ev(i as u32, round, 3));
+        }
+        m.record_gen(&rec, 0.005 * (i + 1) as f64, 0.1 * (i + 1) as f64, 1);
+        agg.add(&rec);
+    }
+    m.on_rejected();
+    m.on_errors(1);
+    m.update_aggregate(&agg);
+    m.set_queue_depth(3);
+    m.set_inflight(2);
+    (m, agg)
+}
+
+#[test]
+fn exposition_carries_required_families_and_parses() {
+    let (m, agg) = driven_metrics();
+    let text = m.render();
+    // the parser validates: typed families, cumulative buckets,
+    // +Inf == _count, _sum present — a parse failure IS a test failure
+    let exp = parse_exposition(&text).expect("server exposition must be valid");
+
+    // request lifecycle histograms
+    for fam in
+        ["eagle_request_seconds", "eagle_ttft_seconds", "eagle_queue_wait_seconds", "eagle_token_seconds"]
+    {
+        let f = exp.family(fam).unwrap_or_else(|| panic!("{fam} missing"));
+        assert_eq!(f.typ, "histogram", "{fam} must be a histogram");
+        assert_eq!(exp.value(&format!("{fam}_count")), Some(4.0), "{fam} count");
+    }
+    // TTFT = queue_wait + engine ttft_ns: first request 5 ms + 4 ms
+    let ttft_sum = exp.value("eagle_ttft_seconds_sum").unwrap();
+    let want_ttft: f64 = (1..=4).map(|i| 0.005 * i as f64 + 0.004).sum();
+    assert!((ttft_sum - want_ttft).abs() < 1e-4, "ttft sum {ttft_sum} want {want_ttft}");
+
+    // tau and width gauges mirror the aggregate
+    assert!((exp.value("eagle_tau").unwrap() - agg.tau()).abs() < 1e-9);
+    assert!((exp.value("eagle_mean_verify_t").unwrap() - agg.mean_verify_t()).abs() < 1e-9);
+    assert!((exp.value("eagle_mean_draft_w").unwrap() - agg.mean_draft_w()).abs() < 1e-9);
+    assert!(
+        (exp.value("eagle_latency_p50_seconds").unwrap() - agg.latency_p50_ms() / 1e3).abs()
+            < 1e-9
+    );
+    assert!(
+        (exp.value("eagle_latency_p99_seconds").unwrap() - agg.latency_p99_ms() / 1e3).abs()
+            < 1e-9
+    );
+
+    // scheduler gauges + dispatch/drag counters
+    assert_eq!(exp.value("eagle_queue_depth"), Some(3.0));
+    assert_eq!(exp.value("eagle_inflight_lanes"), Some(2.0));
+    assert_eq!(exp.value("eagle_last_group_lanes"), Some(1.0));
+    assert_eq!(exp.value("eagle_dispatch_batched_total"), Some(4.0));
+    assert_eq!(exp.value("eagle_dispatch_bs1_total"), Some(2.0));
+    assert_eq!(exp.value("eagle_dragged_rounds_total"), Some(0.0 + 1.0 + 2.0 + 3.0));
+    assert_eq!(exp.value("eagle_requests_total"), Some(4.0));
+    assert_eq!(exp.value("eagle_rejected_total"), Some(1.0));
+    assert_eq!(exp.value("eagle_errors_total"), Some(1.0));
+    assert_eq!(exp.value("eagle_tokens_total"), Some(96.0));
+
+    // per-phase time totals: one labeled series per phase, in seconds
+    let phases = exp.family("eagle_phase_seconds_total").expect("phase family");
+    assert_eq!(phases.typ, "counter");
+    for (phase, per_gen_s) in
+        [("prefill", 0.004), ("draft", 0.02), ("verify", 0.03), ("commit", 0.002), ("host", 0.004)]
+    {
+        let s = phases
+            .samples
+            .iter()
+            .find(|s| s.label("phase") == Some(phase))
+            .unwrap_or_else(|| panic!("phase={phase} series missing"));
+        assert!(
+            (s.value - 4.0 * per_gen_s).abs() < 1e-9,
+            "phase {phase}: {} want {}",
+            s.value,
+            4.0 * per_gen_s
+        );
+    }
+
+    // round-level histograms fed by the observer
+    assert_eq!(exp.value("eagle_rounds_total"), Some(32.0));
+    assert_eq!(exp.value("eagle_round_accepted_tokens_count"), Some(32.0));
+    assert_eq!(exp.value("eagle_round_verify_seconds_count"), Some(32.0));
+    // every observe was accepted=3 -> the le="3" cumulative bucket holds all 32
+    let fam = exp.family("eagle_round_accepted_tokens").unwrap();
+    let b3 = fam
+        .samples
+        .iter()
+        .find(|s| s.name == "eagle_round_accepted_tokens_bucket" && s.label("le") == Some("3"))
+        .expect("le=3 bucket");
+    assert_eq!(b3.value, 32.0);
+}
+
+#[test]
+fn gen_seconds_shares_batched_wall_across_lanes() {
+    let m = ServerMetrics::new(8);
+    let rec = fake_rec(60, 0);
+    // two lanes of one bs=2 group report the same 60 ms wall; the total
+    // must count it once, not twice
+    m.record_gen(&rec, 0.0, 0.06, 2);
+    m.record_gen(&rec, 0.0, 0.06, 2);
+    let exp = parse_exposition(&m.render()).unwrap();
+    let total = exp.value("eagle_gen_seconds_total").unwrap();
+    assert!((total - 0.06).abs() < 1e-9, "gen seconds {total} want 0.06");
+}
+
+#[test]
+fn trace_dump_roundtrips_and_summarizes() {
+    let m = ServerMetrics::new(16);
+    for lane in 0..2u32 {
+        for round in 0..4 {
+            m.on_round(&ev(lane, round, 4));
+        }
+    }
+    // the /trace payload: serialize, reparse, recover the events
+    let text = m.trace.to_json().to_string();
+    let parsed = Json::parse(&text).expect("trace payload is valid json");
+    let events = events_from_json(&parsed);
+    assert_eq!(events.len(), 8);
+    assert_eq!(events[0], ev(0, 0, 4));
+    let s = summarize(&events);
+    assert!(s.contains("8 rounds over 2 lane(s)"), "{s}");
+}
+
+#[test]
+fn health_reports_stall_only_when_busy_and_silent() {
+    let h = Health::new(50); // 50 ms stall threshold
+    // starts busy with heartbeat at 0: not yet stalled
+    assert!(!h.stalled());
+    std::thread::sleep(std::time::Duration::from_millis(80));
+    assert!(h.stalled(), "busy + heartbeat older than stall_ms must read as stalled");
+    // idle (blocking on the queue) is never a stall, however old
+    h.set_busy(false);
+    std::thread::sleep(std::time::Duration::from_millis(80));
+    assert!(!h.stalled());
+    // busy with a fresh beat is healthy; the beat is what the observer
+    // supplies every speculation round
+    h.set_busy(true);
+    assert!(!h.stalled());
+    std::thread::sleep(std::time::Duration::from_millis(80));
+    assert!(h.stalled());
+    h.beat();
+    assert!(!h.stalled());
+    // the /healthz body carries the liveness fields
+    h.set_inflight(3);
+    let j = h.to_json(5);
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(j.get("queue_depth").and_then(|v| v.as_usize()), Some(5));
+    assert_eq!(j.get("inflight_lanes").and_then(|v| v.as_usize()), Some(3));
+    assert!(j.get("heartbeat_age_ms").is_some() && j.get("uptime_seconds").is_some());
+}
