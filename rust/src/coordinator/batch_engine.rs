@@ -68,6 +68,7 @@ use crate::spec::engine::{sampled_accept_walk, GenConfig};
 use crate::spec::sampling::{argmax, sample, softmax, softmax_into, top_k_into};
 use crate::spec::scratch::ScratchPool;
 use crate::spec::tree::{chain_extend_bias_to, fill_step_rows_into, DraftTree, TreeSpec};
+use crate::util::deadline::DeadlineClock;
 use crate::util::rng::Rng;
 
 pub struct BatchEagleEngine<'a> {
@@ -91,6 +92,13 @@ pub struct BatchEagleEngine<'a> {
     /// lane index as the event's lane id. Must not allocate — it runs
     /// inside the zero-alloc round loop.
     pub observer: Option<&'a dyn RoundObserver>,
+    /// Per-lane request deadlines (empty = all unbounded), polled at the
+    /// top of every lock-step round. An expired lane is marked done with
+    /// `rec.truncated = Some("deadline")` and — like any finished lane —
+    /// contributes only harmless padding rows from then on, so the rest
+    /// of the group keeps its lock-step cadence. Allocated once at
+    /// builder time; the per-round checks are clock reads only.
+    pub deadlines: Vec<DeadlineClock>,
 }
 
 struct Lane {
@@ -118,12 +126,21 @@ impl<'a> BatchEagleEngine<'a> {
             accept_a: c.accept_a,
             draft_w: c.draft_w,
             observer: None,
+            deadlines: Vec::new(),
         }
     }
 
     /// Swap the tree policy (builder-style).
     pub fn with_policy(mut self, policy: TreePolicy) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// Attach one deadline clock per lane (builder-style; the server
+    /// passes each request's own budget). Must match the batch size at
+    /// generate time; an empty vec (the default) disables deadlines.
+    pub fn with_deadlines(mut self, deadlines: Vec<DeadlineClock>) -> Self {
+        self.deadlines = deadlines;
         self
     }
 
@@ -202,6 +219,10 @@ impl<'a> BatchEagleEngine<'a> {
         let b = prompts.len();
         assert!(b >= 2, "use EagleEngine for bs=1");
         assert_eq!(seeds.len(), b, "one seed per lane");
+        assert!(
+            self.deadlines.is_empty() || self.deadlines.len() == b,
+            "one deadline per lane (or none)"
+        );
         let mut rngs: Vec<Rng> = seeds.iter().map(|&s| Rng::new(s)).collect();
         let t_all = Instant::now();
         let tgt = self.target;
@@ -325,6 +346,22 @@ impl<'a> BatchEagleEngine<'a> {
         // deltas); allocated once, before the zero-alloc round loop
         let mut tl0: Vec<(u64, u64, u64)> = vec![(0, 0, 0); b];
         while lanes.iter().any(|l| !l.done) {
+            // deadline cancellation: an expired live lane stops drafting
+            // HERE — marked done with its partial record tagged; from now
+            // on the padding machinery below treats it exactly like a
+            // finished lane (frozen `m`, harmless self-attending rows),
+            // so the rest of the group keeps its lock-step cadence
+            if !self.deadlines.is_empty() {
+                for (li, l) in lanes.iter_mut().enumerate() {
+                    if !l.done && self.deadlines[li].expired() {
+                        l.done = true;
+                        l.rec.truncated = Some("deadline");
+                    }
+                }
+                if lanes.iter().all(|l| l.done) {
+                    break;
+                }
+            }
             let fp0 =
                 pool.footprint() + trees.iter().map(DraftTree::capacity_bytes).sum::<usize>();
             #[cfg(feature = "count-alloc")]
@@ -420,7 +457,8 @@ impl<'a> BatchEagleEngine<'a> {
                 }
             }
             let t0 = Instant::now();
-            let vout = tgt.verify(
+            let fp_degenerate_verify = crate::failpoint!("verify");
+            let mut vout = tgt.verify(
                 t,
                 &mut cache,
                 &pending_old,
@@ -431,6 +469,9 @@ impl<'a> BatchEagleEngine<'a> {
                 &pool.batch.vbias,
                 self.accept_a,
             )?;
+            if fp_degenerate_verify {
+                vout.logits.iter_mut().for_each(|x| *x = f32::NAN);
+            }
             let ver_ns = t0.elapsed().as_nanos() as u64;
             for l in lanes.iter_mut().filter(|l| !l.done) {
                 l.rec.timeline.verify_ns += ver_ns / b as u64;
@@ -594,7 +635,8 @@ impl<'a> BatchEagleEngine<'a> {
                 break;
             }
             let t0 = Instant::now();
-            let eout = self.draft.step(
+            let fp_degenerate_draft = crate::failpoint!("draft-step");
+            let mut eout = self.draft.step(
                 w,
                 &mut dcache_b,
                 &pool.batch.wb,
@@ -603,6 +645,9 @@ impl<'a> BatchEagleEngine<'a> {
                 &pool.batch.sp,
                 &pool.batch.sbias,
             )?;
+            if fp_degenerate_draft {
+                eout.logits.iter_mut().for_each(|x| *x = f32::NAN);
+            }
             let ext_ns = t0.elapsed().as_nanos() as u64;
             for li in 0..b {
                 if lanes[li].done {

@@ -85,6 +85,12 @@ pub struct Request {
     /// `None` means "assume the widest lowered width" — never truncating.
     pub width_hint: Option<usize>,
     pub seed: u64,
+    /// Per-request latency budget (`"deadline_ms"` field), measured from
+    /// arrival. `None` defers to the server's `--default-deadline-ms`
+    /// (0 = unbounded). An expired request stops drafting and returns
+    /// its partial text with `"truncated": "deadline"`; a request whose
+    /// deadline passes while still queued is dropped with 504.
+    pub deadline_ms: Option<u64>,
     pub arrival: std::time::Instant,
 }
 
@@ -119,8 +125,17 @@ impl Request {
                 .and_then(|x| x.as_usize())
                 .filter(|&t| t >= 2),
             seed: v.get("seed").and_then(|x| x.as_f64()).map(|f| f as u64).unwrap_or(7),
+            deadline_ms: v.get("deadline_ms").and_then(|x| x.as_f64()).map(|f| f as u64),
             arrival: std::time::Instant::now(),
         })
+    }
+
+    /// The request's deadline clock: the explicit `deadline_ms` budget,
+    /// else the server default (`0` = unbounded), anchored at arrival so
+    /// queue wait counts against the budget.
+    pub fn deadline(&self, default_ms: u64) -> crate::util::deadline::DeadlineClock {
+        let ms = self.deadline_ms.unwrap_or(default_ms);
+        crate::util::deadline::DeadlineClock::from_ms(Some(ms), self.arrival)
     }
 
     /// The width the admission scheduler should assume for this request:
@@ -172,6 +187,7 @@ impl Request {
             verify_width: None,
             width_hint: None,
             seed: 0,
+            deadline_ms: None,
             arrival: std::time::Instant::now(),
         }
     }
@@ -186,11 +202,19 @@ pub struct Response {
     pub tau: f64,
     pub latency_ms: f64,
     pub queue_ms: f64,
+    /// HTTP status the route thread answers with: 200 on success;
+    /// worker-side failures (panicked lane → 500, queue-expired
+    /// deadline → 504) deliver through the same pending slot.
+    pub status: u16,
+    /// Why generation stopped early, if it did (`"deadline"`). Carried
+    /// into the response JSON so clients can tell a partial answer from
+    /// a complete one.
+    pub truncated: Option<&'static str>,
 }
 
 impl Response {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("id", Json::Num(self.id as f64)),
             ("text", Json::Str(self.text.clone())),
             ("tokens", Json::Num(self.tokens as f64)),
@@ -198,7 +222,11 @@ impl Response {
             ("tau", Json::Num(self.tau)),
             ("latency_ms", Json::Num(self.latency_ms)),
             ("queue_ms", Json::Num(self.queue_ms)),
-        ])
+        ];
+        if let Some(t) = self.truncated {
+            fields.push(("truncated", Json::Str(t.into())));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -217,6 +245,22 @@ mod tests {
         assert_eq!(r.verify_width, None);
         assert_eq!(r.width_hint, None);
         assert_eq!(r.admission_width(32), 32, "no hint -> widest");
+        assert_eq!(r.deadline_ms, None);
+        assert!(r.deadline(0).is_unbounded(), "no budget anywhere -> unbounded");
+        assert!(!r.deadline(5_000).is_unbounded(), "server default applies");
+    }
+
+    #[test]
+    fn parse_request_deadline() {
+        let v = Json::parse(r#"{"prompt":"x","deadline_ms":250}"#).unwrap();
+        let r = Request::from_json(9, &v).unwrap();
+        assert_eq!(r.deadline_ms, Some(250));
+        let c = r.deadline(60_000);
+        assert!(!c.is_unbounded(), "explicit budget wins over server default");
+        assert!(c.remaining().unwrap() <= std::time::Duration::from_millis(250));
+        let v = Json::parse(r#"{"prompt":"x","deadline_ms":0}"#).unwrap();
+        let r = Request::from_json(10, &v).unwrap();
+        assert!(r.deadline(60_000).is_unbounded(), "explicit 0 disables the default");
     }
 
     #[test]

@@ -14,6 +14,7 @@ use crate::models::ModelBundle;
 use crate::runtime::{Manifest, Runtime};
 use crate::spec::dyntree::{TreePolicy, WidthFamily, WidthSelect};
 use crate::spec::engine::{EagleEngine, GenConfig, PairShift};
+use crate::util::deadline::DeadlineClock;
 
 pub struct Runner {
     pub rt: Rc<Runtime>,
@@ -36,6 +37,11 @@ pub struct RunSpec {
     /// round to the cheapest lowered `verify_t{t}` executable that holds
     /// its tree; `Fixed(t)` pins every round to one width
     pub verify_width: WidthSelect,
+    /// wall-clock deadline for eagle-family runs: an expired clock stops
+    /// the round loop and returns the partial record with
+    /// `truncated = Some("deadline")`. Unbounded by default; the serving
+    /// bs=1 path threads each request's deadline through here
+    pub deadline: DeadlineClock,
 }
 
 impl Default for RunSpec {
@@ -49,6 +55,7 @@ impl Default for RunSpec {
             seed: 7,
             tree: TreePolicy::default_tree(),
             verify_width: WidthSelect::Auto,
+            deadline: DeadlineClock::unbounded(),
         }
     }
 }
@@ -112,8 +119,9 @@ impl Runner {
                     .drafts
                     .get(&spec.variant)
                     .ok_or_else(|| anyhow::anyhow!("draft variant '{}' not loaded", spec.variant))?;
-                let mut eng =
-                    EagleEngine::new_tree(&bundle.target, draft, c).with_policy(spec.tree.clone());
+                let mut eng = EagleEngine::new_tree(&bundle.target, draft, c)
+                    .with_policy(spec.tree.clone())
+                    .with_deadline(spec.deadline);
                 if let WidthSelect::Fixed(t) = spec.verify_width {
                     anyhow::ensure!(
                         bundle.target.has_verify(t, 1),
@@ -138,7 +146,8 @@ impl Runner {
                 } else {
                     PairShift::Unshifted
                 };
-                let mut eng = EagleEngine::new_chain(&bundle.target, draft, c, spec.gamma, shift);
+                let mut eng = EagleEngine::new_chain(&bundle.target, draft, c, spec.gamma, shift)
+                    .with_deadline(spec.deadline);
                 if let Some(obs) = observer {
                     eng = eng.with_observer(obs);
                 }

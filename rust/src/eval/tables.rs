@@ -16,6 +16,7 @@ use crate::spec::dyntree::{DynTreeConfig, TreePolicy};
 use crate::spec::engine::GenConfig;
 use crate::spec::tree::TreeSpec;
 use crate::text::bpe::Bpe;
+use crate::util::deadline::DeadlineClock;
 use crate::util::rng::Rng;
 
 pub struct EvalCtx {
@@ -750,6 +751,55 @@ impl EvalCtx {
              chain-like (t8 verify, w1/w4 draft steps) while the hot group keeps its\n\
              width — outputs stay bit-identical because greedy speculative decoding is\n\
              lossless for any tree shape.\n",
+        );
+
+        // --- robustness surface: per-lane deadlines on the same batch --
+        // Low lanes carry an already-expired deadline: they stop at the
+        // first round boundary with partial output marked truncated,
+        // while their unbounded batch peers must finish bit-identically
+        // (done-lane padding is harmless). The same generations feed the
+        // serving registry's derived gauges, so the eval prints exactly
+        // what `GET /metrics` would.
+        let start = std::time::Instant::now();
+        let deadlines: Vec<DeadlineClock> = (0..n)
+            .map(|i| if is_low[i] { DeadlineClock::at(start) } else { DeadlineClock::unbounded() })
+            .collect();
+        let be = BatchEagleEngine::new(&bundle.target, &bundle.drafts["eagle"], c)
+            .with_policy(policy())
+            .with_deadlines(deadlines);
+        let dl_recs = be.generate(&prompts, &cfg)?;
+        let m = crate::server::ServerMetrics::new(8);
+        for r in &dl_recs {
+            m.on_request();
+            m.record_gen(r, 0.0, r.wall_ns as f64 / 1e9, n as u64);
+        }
+        m.refresh_derived();
+        let exp = crate::metrics::registry::parse_exposition(&m.render())?;
+        let g = |name: &str| exp.value(name).unwrap_or(0.0);
+        let truncated = dl_recs.iter().filter(|r| r.truncated.is_some()).count();
+        writeln!(
+            out,
+            "\nrobustness (expired deadline on the low lanes): {truncated}/{n} lanes \
+             truncated; deadline-miss rate {:.2}, shed rate {:.2}, worker restarts {}, \
+             est service {:.4}s",
+            g("eagle_deadline_miss_rate"),
+            g("eagle_shed_rate"),
+            g("eagle_worker_restarts"),
+            g("eagle_est_service_seconds"),
+        )?;
+        for (i, r) in dl_recs.iter().enumerate() {
+            anyhow::ensure!(
+                r.truncated.is_some() == is_low[i],
+                "lane {i}: deadline truncation must match the armed lanes"
+            );
+            anyhow::ensure!(
+                is_low[i] || r.tokens == fcfs_recs[i].tokens,
+                "lane {i}: an unbounded lane must not be perturbed by expired batch peers"
+            );
+        }
+        anyhow::ensure!(
+            (g("eagle_deadline_miss_rate") - truncated as f64 / n as f64).abs() < 1e-9,
+            "deadline-miss gauge must mirror the truncated-lane ratio"
         );
         Ok(out)
     }

@@ -70,6 +70,13 @@ fn print_help() {
          \u{20}           from a repro bench --json file; default: built-in constant)\n\
          \u{20}          --trace-cap N --stall-ms MS  (flight-recorder ring capacity;\n\
          \u{20}           heartbeat age past which /healthz turns 503)\n\
+         \u{20}          --default-deadline-ms MS (deadline for requests without their own\n\
+         \u{20}           \"deadline_ms\"; expired requests return partial text with\n\
+         \u{20}           \"truncated\":\"deadline\", queue-expired ones 504; 0 = unbounded.\n\
+         \u{20}           Overloaded queues shed with 429 + Retry-After.\n\
+         \u{20}           POST /admin/drain stops admission and exits after the queue empties)\n\
+         \u{20}          --inject SPEC           (fault-injection sites, fault-inject builds\n\
+         \u{20}           only: site=panic|degenerate|delay(MS)[@N],… — see docs/robustness.md)\n\
          generate  --prompt TEXT --model NAME --method eagle|eagle-chain|vanilla|medusa|lookahead|classic-spec\n\
          \u{20}          --max-tokens N --temperature F --seed N\n\
          \u{20}          --tree static|dynamic [--draft-depth N --frontier K --branch B --no-adapt]\n\
@@ -127,6 +134,8 @@ fn serve(args: &Args) -> Result<()> {
         cost_model: args.get("cost-model").map(std::path::PathBuf::from),
         trace_cap: args.usize_or("trace-cap", 1024),
         stall_ms: args.u64_or("stall-ms", 30_000),
+        default_deadline_ms: args.u64_or("default-deadline-ms", 0),
+        inject: args.get("inject").map(String::from),
         ..eagle_serve::server::ServeConfig::new(addr, model, &artifacts_dir())
     };
     eagle_serve::server::serve(cfg)

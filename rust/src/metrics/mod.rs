@@ -86,6 +86,12 @@ pub struct GenRecord {
     /// root sampling) — the engine-side component of TTFT. 0 for
     /// engines that predate the field (baselines).
     pub ttft_ns: u64,
+    /// Why generation stopped before `max_new` / EOS, if it did:
+    /// `Some("deadline")` when the request's `DeadlineClock` expired
+    /// mid-generation and the engine returned the partial text. `None`
+    /// for complete generations. Static strings only — setting it never
+    /// allocates.
+    pub truncated: Option<&'static str>,
     pub timeline: Timeline,
 }
 
@@ -108,6 +114,7 @@ impl GenRecord {
             drafted: 0,
             wall_ns: 0,
             ttft_ns: 0,
+            truncated: None,
             timeline: Timeline::default(),
         }
     }

@@ -54,39 +54,72 @@ pub struct HttpResponse {
     pub reason: &'static str,
     pub content_type: String,
     pub body: Vec<u8>,
+    /// Extra response headers (name, value), e.g. `Retry-After` on a
+    /// shed 429. Names/values must already be header-safe.
+    pub extra_headers: Vec<(String, String)>,
+}
+
+fn reason_for(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Error",
+    }
 }
 
 impl HttpResponse {
     pub fn ok(content_type: &str, body: Vec<u8>) -> HttpResponse {
-        HttpResponse { code: 200, reason: "OK", content_type: content_type.into(), body }
+        HttpResponse::with_code(200, content_type, body)
+    }
+
+    /// Arbitrary status with a full body (the reason phrase is derived
+    /// from the code) — used when a JSON payload rides on a non-200,
+    /// e.g. a deadline-truncated 504 or a panic-failed lane's 500.
+    pub fn with_code(code: u16, content_type: &str, body: Vec<u8>) -> HttpResponse {
+        HttpResponse {
+            code,
+            reason: reason_for(code),
+            content_type: content_type.into(),
+            body,
+            extra_headers: Vec::new(),
+        }
     }
 
     pub fn status(code: u16, msg: &str) -> HttpResponse {
-        let reason = match code {
-            400 => "Bad Request",
-            404 => "Not Found",
-            429 => "Too Many Requests",
-            503 => "Service Unavailable",
-            504 => "Gateway Timeout",
-            _ => "Error",
-        };
-        HttpResponse {
+        HttpResponse::with_code(
             code,
-            reason,
-            content_type: "application/json".into(),
-            body: format!("{{\"error\":{}}}", crate::util::json::Json::Str(msg.into())).into_bytes(),
-        }
+            "application/json",
+            format!("{{\"error\":{}}}", crate::util::json::Json::Str(msg.into())).into_bytes(),
+        )
+    }
+
+    /// Attach an extra response header (builder-style).
+    pub fn with_header(mut self, name: &str, value: &str) -> HttpResponse {
+        self.extra_headers.push((name.into(), value.into()));
+        self
     }
 
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = format!(
-            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n",
             self.code,
             self.reason,
             self.content_type,
             self.body.len()
-        )
-        .into_bytes();
+        );
+        for (name, value) in &self.extra_headers {
+            out.push_str(name);
+            out.push_str(": ");
+            out.push_str(value);
+            out.push_str("\r\n");
+        }
+        out.push_str("connection: close\r\n\r\n");
+        let mut out = out.into_bytes();
         out.extend_from_slice(&self.body);
         out
     }
@@ -143,5 +176,16 @@ mod tests {
     fn error_codes() {
         assert_eq!(HttpResponse::status(429, "x").reason, "Too Many Requests");
         assert_eq!(HttpResponse::status(400, "x").code, 400);
+        assert_eq!(HttpResponse::status(500, "x").reason, "Internal Server Error");
+        assert_eq!(HttpResponse::status(504, "x").reason, "Gateway Timeout");
+    }
+
+    #[test]
+    fn extra_headers_framed_before_terminator() {
+        let r = HttpResponse::status(429, "shed").with_header("Retry-After", "3");
+        let s = String::from_utf8(r.to_bytes()).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        let head = s.split("\r\n\r\n").next().unwrap();
+        assert!(head.contains("Retry-After: 3"), "header in the head section: {head}");
     }
 }

@@ -4,10 +4,11 @@
 //! touches the request path.
 //!
 //! Endpoints:
-//!   POST /v1/generate   {"prompt", "max_tokens"?, "temperature"?, "method"?}
-//!   GET  /healthz       worker liveness JSON; 503 when the worker stalls
+//!   POST /v1/generate   {"prompt", "max_tokens"?, "temperature"?, "deadline_ms"?, ...}
+//!   GET  /healthz       worker liveness JSON; 503 when stalled or draining
 //!   GET  /metrics       Prometheus text exposition (see [`ServerMetrics`])
 //!   GET  /trace         round flight-recorder dump (see `metrics::trace`)
+//!   POST /admin/drain   close the queue, finish in flight, exit cleanly
 //!
 //! The worker admits requests through the [`Scheduler`]: per-request
 //! FCFS by default, or — with `--batch N --width-grouping` — width-aware
@@ -43,6 +44,16 @@
 //! observability attached stays inside the S22 zero-allocation round
 //! guarantee (asserted in `rust/tests/count_alloc.rs`). The full metric
 //! catalogue lives in `docs/observability.md`.
+//!
+//! Fault tolerance (`docs/robustness.md`): [`worker_loop`] wraps every
+//! admitted group in `catch_unwind`, so a panic fails only its own
+//! lanes with a 500 and the worker rebuilds its scratch and serves the
+//! next group; repeat offenders are refused by content-fingerprint
+//! [`Quarantine`]. Per-request deadlines (`"deadline_ms"` /
+//! `--default-deadline-ms`) drop queue-expired work with 504 and
+//! truncate in-flight generations to partial text; admission sheds with
+//! 429 + Retry-After when queue depth x EWMA service time exceeds the
+//! request's budget.
 
 pub mod http;
 
@@ -86,6 +97,11 @@ pub struct ServerMetrics {
     c_tokens: CounterId,
     c_errors: CounterId,
     c_rejected: CounterId,
+    c_shed: CounterId,
+    c_worker_panics: CounterId,
+    c_lane_failures: CounterId,
+    c_deadline_queue: CounterId,
+    c_deadline_generate: CounterId,
     c_dispatch_batched: CounterId,
     c_dispatch_bs1: CounterId,
     c_dragged: CounterId,
@@ -101,6 +117,16 @@ pub struct ServerMetrics {
     g_mean_draft_w: GaugeId,
     g_p50: GaugeId,
     g_p99: GaugeId,
+    g_shed_rate: GaugeId,
+    g_deadline_miss_rate: GaugeId,
+    g_worker_restarts: GaugeId,
+    g_est_service: GaugeId,
+    /// EWMA of per-request engine service time (seconds, f64 bits;
+    /// 0.0 = no generation served yet). Single writer (the worker, via
+    /// [`ServerMetrics::record_gen`]); route threads read it for the
+    /// shed decision. Not a registry metric itself — the registry
+    /// exposes it through `eagle_est_service_seconds` at scrape time.
+    ewma_service: AtomicU64,
     // histograms
     h_request: HistId,
     h_ttft: HistId,
@@ -122,6 +148,28 @@ impl ServerMetrics {
         let c_errors = b.counter("eagle_errors_total", "Requests that failed in the engine.");
         let c_rejected =
             b.counter("eagle_rejected_total", "Requests rejected with 429 (queue full).");
+        let c_shed = b.counter(
+            "eagle_shed_total",
+            "Requests shed with 429: estimated queue wait exceeded the deadline budget.",
+        );
+        let c_worker_panics = b.counter(
+            "eagle_worker_panics_total",
+            "Panics caught by worker supervision (each rebuilds the round state).",
+        );
+        let c_lane_failures = b.counter(
+            "eagle_lane_failures_total",
+            "Lanes failed with 500: panicked group members and quarantined requests.",
+        );
+        let c_deadline_queue = b.counter_with(
+            "eagle_deadline_expired_total",
+            "Requests whose deadline expired, by stage.",
+            &[("stage", "queue")],
+        );
+        let c_deadline_generate = b.counter_with(
+            "eagle_deadline_expired_total",
+            "Requests whose deadline expired, by stage.",
+            &[("stage", "generate")],
+        );
         let c_dispatch_batched = b.counter(
             "eagle_dispatch_batched_total",
             "Lanes dispatched on the batched engine.",
@@ -160,6 +208,20 @@ impl ServerMetrics {
             b.gauge("eagle_latency_p50_seconds", "p50 engine latency over served requests.");
         let g_p99 =
             b.gauge("eagle_latency_p99_seconds", "p99 engine latency over served requests.");
+        let g_shed_rate =
+            b.gauge("eagle_shed_rate", "Shed requests over admitted requests (lifetime ratio).");
+        let g_deadline_miss_rate = b.gauge(
+            "eagle_deadline_miss_rate",
+            "Deadline-expired requests (queue + generate) over admitted requests.",
+        );
+        let g_worker_restarts = b.gauge(
+            "eagle_worker_restarts",
+            "Times the worker rebuilt its round state after a supervised panic.",
+        );
+        let g_est_service = b.gauge(
+            "eagle_est_service_seconds",
+            "EWMA per-request engine service time feeding the shed decision.",
+        );
         let h_request = b.histogram(
             "eagle_request_seconds",
             "End-to-end request latency (admission to delivery).",
@@ -191,6 +253,11 @@ impl ServerMetrics {
             c_tokens,
             c_errors,
             c_rejected,
+            c_shed,
+            c_worker_panics,
+            c_lane_failures,
+            c_deadline_queue,
+            c_deadline_generate,
             c_dispatch_batched,
             c_dispatch_bs1,
             c_dragged,
@@ -205,6 +272,11 @@ impl ServerMetrics {
             g_mean_draft_w,
             g_p50,
             g_p99,
+            g_shed_rate,
+            g_deadline_miss_rate,
+            g_worker_restarts,
+            g_est_service,
+            ewma_service: AtomicU64::new(0),
             h_request,
             h_ttft,
             h_queue_wait,
@@ -224,6 +296,28 @@ impl ServerMetrics {
 
     pub fn on_errors(&self, n: u64) {
         self.registry.add(self.c_errors, n);
+    }
+
+    /// A request was shed at admission: its deadline budget cannot
+    /// survive the estimated queue wait.
+    pub fn on_shed(&self) {
+        self.registry.inc(self.c_shed);
+    }
+
+    /// Supervision caught a panic that failed `lanes` in-flight lanes.
+    pub fn on_worker_panic(&self, lanes: u64) {
+        self.registry.inc(self.c_worker_panics);
+        self.registry.add(self.c_lane_failures, lanes);
+    }
+
+    /// Lanes failed with 500 outside a panic (e.g. quarantine refusals).
+    pub fn on_lane_failures(&self, lanes: u64) {
+        self.registry.add(self.c_lane_failures, lanes);
+    }
+
+    /// A request's deadline expired while it was still queued.
+    pub fn on_deadline_queue(&self) {
+        self.registry.inc(self.c_deadline_queue);
     }
 
     /// A group left the queue for an engine: count the dispatch class
@@ -264,6 +358,46 @@ impl ServerMetrics {
         for (id, ns) in self.c_phase.iter().zip(phase_ns) {
             self.registry.add(*id, ns);
         }
+        if rec.truncated.is_some() {
+            // the engine stopped this generation at its deadline and
+            // returned partial text (engines stay metrics-free; the
+            // record carries the marker here)
+            self.registry.inc(self.c_deadline_generate);
+        }
+        self.note_service(rec.wall_ns as f64 / 1e9 / lanes_sharing.max(1) as f64);
+    }
+
+    /// Fold one request's engine service time into the shed estimator's
+    /// EWMA (α = 0.2; the first sample seeds it). Single writer — the
+    /// worker — so a relaxed load/store pair is race-free; route threads
+    /// only read.
+    fn note_service(&self, secs: f64) {
+        let prev = f64::from_bits(self.ewma_service.load(Ordering::Relaxed));
+        let next = if prev == 0.0 { secs } else { 0.8 * prev + 0.2 * secs };
+        self.ewma_service.store(next.to_bits(), Ordering::Relaxed);
+    }
+
+    /// EWMA per-request service time in seconds (0.0 until the first
+    /// generation completes — a cold server never deadline-sheds).
+    pub fn est_service_secs(&self) -> f64 {
+        f64::from_bits(self.ewma_service.load(Ordering::Relaxed))
+    }
+
+    /// Refresh the derived robustness gauges (shed rate, deadline-miss
+    /// rate, worker restarts, service-time estimate) from the lifetime
+    /// counters. Called at scrape time, like the queue-depth gauge.
+    pub fn refresh_derived(&self) {
+        let admitted = self.registry.counter_value(self.c_requests).max(1) as f64;
+        let shed = self.registry.counter_value(self.c_shed) as f64;
+        let missed = self.registry.counter_value(self.c_deadline_queue)
+            + self.registry.counter_value(self.c_deadline_generate);
+        self.registry.set_gauge(self.g_shed_rate, shed / admitted);
+        self.registry.set_gauge(self.g_deadline_miss_rate, missed as f64 / admitted);
+        self.registry.set_gauge(
+            self.g_worker_restarts,
+            self.registry.counter_value(self.c_worker_panics) as f64,
+        );
+        self.registry.set_gauge(self.g_est_service, self.est_service_secs());
     }
 
     /// Refresh the derived gauges from the worker's running aggregate
@@ -305,6 +439,10 @@ pub struct Health {
     busy: AtomicU64,
     inflight: AtomicU64,
     heartbeat_ms: AtomicU64,
+    /// Set by `POST /admin/drain`: the queue is closed, in-flight and
+    /// already-queued work finishes, then the worker exits. `/healthz`
+    /// reports 503 so load balancers stop routing here.
+    draining: AtomicU64,
 }
 
 impl Health {
@@ -317,7 +455,16 @@ impl Health {
             busy: AtomicU64::new(1),
             inflight: AtomicU64::new(0),
             heartbeat_ms: AtomicU64::new(0),
+            draining: AtomicU64::new(0),
         }
+    }
+
+    pub fn set_draining(&self) {
+        self.draining.store(1, Ordering::Relaxed);
+    }
+
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::Relaxed) == 1
     }
 
     fn now_ms(&self) -> u64 {
@@ -353,8 +500,9 @@ impl Health {
 
     pub fn to_json(&self, queue_depth: usize) -> Json {
         Json::obj(vec![
-            ("ok", Json::Bool(!self.stalled())),
+            ("ok", Json::Bool(!self.stalled() && !self.draining())),
             ("busy", Json::Bool(self.busy.load(Ordering::Relaxed) == 1)),
+            ("draining", Json::Bool(self.draining())),
             ("queue_depth", Json::Num(queue_depth as f64)),
             ("inflight_lanes", Json::Num(self.inflight() as f64)),
             ("heartbeat_age_ms", Json::Num(self.heartbeat_age_ms() as f64)),
@@ -407,6 +555,13 @@ pub struct ServeConfig {
     /// round, so this only needs to exceed one speculation round (plus
     /// prefill and artifact loading).
     pub stall_ms: u64,
+    /// Deadline (`--default-deadline-ms`) for requests that do not set
+    /// `"deadline_ms"` themselves; 0 (the default) = unbounded.
+    pub default_deadline_ms: u64,
+    /// Fault-injection spec (`--inject site=action[@N],…`), applied at
+    /// startup. Only honored in `fault-inject` builds; ignored (with a
+    /// warning) otherwise.
+    pub inject: Option<String>,
 }
 
 impl ServeConfig {
@@ -424,17 +579,37 @@ impl ServeConfig {
             cost_model: None,
             trace_cap: 1024,
             stall_ms: 30_000,
+            default_deadline_ms: 0,
+            inject: None,
         }
     }
 }
 
-type Slot = Arc<(Mutex<Option<Response>>, std::sync::Condvar)>;
-type PendingMap = Mutex<std::collections::HashMap<u64, Slot>>;
+pub type Slot = Arc<(Mutex<Option<Response>>, std::sync::Condvar)>;
+pub type PendingMap = Mutex<std::collections::HashMap<u64, Slot>>;
 
-fn deliver(pending: &PendingMap, id: u64, resp: Response) {
-    if let Some(slot) = pending.lock().unwrap().get(&id).cloned() {
-        *slot.0.lock().unwrap() = Some(resp);
-        slot.1.notify_all();
+/// Deliver a response to a pending slot, retiring the slot from the map
+/// in the same critical section that finds it. Removal-at-delivery (not
+/// `get`) makes delivery idempotent — a supervised retry or a late
+/// worker answer after the route thread already gave up and removed its
+/// slot is a no-op — so a slot can never leak from the worker side.
+/// Lock discipline: the `pending` guard is dropped BEFORE the slot
+/// mutex is taken; route threads take the locks in the opposite order
+/// (slot first, then `pending` to clean up), so holding both here could
+/// deadlock. Returns whether a waiter was still listening.
+pub fn deliver(pending: &PendingMap, id: u64, resp: Response) -> bool {
+    // fault-inject site: a panic here (worker thread, inside the
+    // supervised group closure) checks that delivery failures fail only
+    // their own group
+    let _ = crate::failpoint!("deliver");
+    let slot = pending.lock().unwrap().remove(&id);
+    match slot {
+        Some(slot) => {
+            *slot.0.lock().unwrap() = Some(resp);
+            slot.1.notify_all();
+            true
+        }
+        None => false,
     }
 }
 
@@ -447,6 +622,217 @@ fn error_response(id: u64, e: &anyhow::Error) -> Response {
         tau: 0.0,
         latency_ms: 0.0,
         queue_ms: 0.0,
+        status: 500,
+        truncated: None,
+    }
+}
+
+/// 500 delivered to every lane of a group whose execution panicked.
+fn panic_response(id: u64) -> Response {
+    Response {
+        id,
+        text: "error: worker panic failed this request's group".into(),
+        tokens: 0,
+        target_passes: 0,
+        tau: 0.0,
+        latency_ms: 0.0,
+        queue_ms: 0.0,
+        status: 500,
+        truncated: None,
+    }
+}
+
+/// 500 delivered to a request refused because its fingerprint already
+/// failed [`QUARANTINE_AFTER`] supervised executions.
+fn quarantine_response(id: u64) -> Response {
+    Response {
+        id,
+        text: "error: request quarantined after repeated worker panics".into(),
+        tokens: 0,
+        target_passes: 0,
+        tau: 0.0,
+        latency_ms: 0.0,
+        queue_ms: 0.0,
+        status: 500,
+        truncated: None,
+    }
+}
+
+/// 504 delivered to a request whose deadline expired while queued.
+fn queue_expired_response(id: u64, queue_ms: f64) -> Response {
+    Response {
+        id,
+        text: "error: deadline expired before dispatch".into(),
+        tokens: 0,
+        target_passes: 0,
+        tau: 0.0,
+        latency_ms: 0.0,
+        queue_ms,
+        status: 504,
+        truncated: Some("deadline"),
+    }
+}
+
+/// Shed decision for an incoming request: estimated queue wait — depth ×
+/// EWMA per-request service time — against the request's remaining
+/// deadline budget. Returns the estimated wait in seconds (the client's
+/// `Retry-After` hint) when the request cannot make its deadline.
+/// Unbounded requests are never deadline-shed, and a cold server
+/// (no service history, estimate 0) sheds nothing.
+pub fn should_shed(
+    queue_depth: usize,
+    est_service_secs: f64,
+    budget_secs: Option<f64>,
+) -> Option<f64> {
+    let budget = budget_secs?;
+    let est_wait = queue_depth as f64 * est_service_secs;
+    (est_wait > budget).then_some(est_wait)
+}
+
+/// Consecutive supervised failures before a request fingerprint is
+/// refused on sight (500, no execution). Keyed by content fingerprint —
+/// server-assigned ids are unique per HTTP request, so a resubmitted
+/// poison request must be recognized by what it asks for, not its id.
+pub const QUARANTINE_AFTER: u32 = 3;
+
+/// Content fingerprint for quarantine bookkeeping (FNV-1a over the
+/// fields that determine the engine's execution path).
+pub fn fingerprint(r: &Request) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1_0000_01b3);
+        }
+    };
+    eat(r.prompt.as_bytes());
+    eat(&r.max_tokens.to_le_bytes());
+    eat(&r.temperature.to_bits().to_le_bytes());
+    eat(&r.seed.to_le_bytes());
+    eat(&[r.method as u8, r.tree as u8]);
+    h
+}
+
+/// The quarantine ledger the worker loop keeps across supervised
+/// executions: fingerprints of requests whose groups panicked, with
+/// their consecutive-failure counts. A successful execution clears its
+/// members (panics must be *consecutive* to quarantine — a request that
+/// merely shared a group with a poison peer recovers on its next run).
+pub struct Quarantine {
+    failures: std::collections::HashMap<u64, u32>,
+    after: u32,
+}
+
+impl Quarantine {
+    pub fn new(after: u32) -> Quarantine {
+        Quarantine { failures: std::collections::HashMap::new(), after: after.max(1) }
+    }
+
+    pub fn is_quarantined(&self, r: &Request) -> bool {
+        self.failures.get(&fingerprint(r)).is_some_and(|&n| n >= self.after)
+    }
+
+    pub fn note_failure(&mut self, fp: u64) {
+        *self.failures.entry(fp).or_insert(0) += 1;
+    }
+
+    pub fn note_success(&mut self, fp: u64) {
+        self.failures.remove(&fp);
+    }
+}
+
+/// The state the supervisor owns on the worker's behalf: how to run one
+/// healthy admitted group, and how to rebuild after a panicked one. The
+/// production implementation ([`EngineWorker`]) wraps the engines; chaos
+/// tests substitute synthetic executors so the supervision/deadline/
+/// drain paths are testable without artifacts.
+pub trait GroupWorker {
+    /// Run one admitted group to completion, delivering every member's
+    /// pending slot. May panic — the supervisor catches it.
+    fn run(&mut self, group: AdmittedGroup);
+
+    /// Tear down and rebuild whatever `run` may have left poisoned
+    /// after a panic (scratch pool, staged KV state). Must not panic.
+    fn rebuild(&mut self);
+}
+
+/// The supervised worker loop: drains the queue through the scheduler
+/// until it closes (drain), dropping queue-expired requests with 504,
+/// refusing quarantined fingerprints with 500, and running every
+/// surviving group under `catch_unwind` so a panicking generation fails
+/// only its own lanes — each failed lane's slot gets a 500 instead of
+/// hanging, the worker's round state is rebuilt, and the next group is
+/// served by the same thread.
+pub fn worker_loop(
+    queue: &RequestQueue,
+    sched: &Scheduler,
+    pending: &PendingMap,
+    metrics: &ServerMetrics,
+    health: &Health,
+    default_deadline_ms: u64,
+    worker: &mut dyn GroupWorker,
+) {
+    let mut quarantine = Quarantine::new(QUARANTINE_AFTER);
+    loop {
+        // idle while blocking on the queue, so an empty server never
+        // reads as a stall
+        health.set_busy(false);
+        let groups = sched.next_groups(queue);
+        health.set_busy(true);
+        if groups.is_empty() {
+            health.set_busy(false);
+            break; // queue closed and drained
+        }
+        for group in groups {
+            let AdmittedGroup { verify_cap, requests } = group;
+            let mut live = Vec::with_capacity(requests.len());
+            for r in requests {
+                if r.deadline(default_deadline_ms).expired() {
+                    // the budget is already blown: running this lane
+                    // would only slow the group it joined
+                    metrics.on_deadline_queue();
+                    let qms = r.arrival.elapsed().as_secs_f64() * 1e3;
+                    deliver(pending, r.id, queue_expired_response(r.id, qms));
+                } else if quarantine.is_quarantined(&r) {
+                    metrics.on_lane_failures(1);
+                    deliver(pending, r.id, quarantine_response(r.id));
+                } else {
+                    live.push(r);
+                }
+            }
+            if live.is_empty() {
+                continue;
+            }
+            let members: Vec<(u64, u64)> = live.iter().map(|r| (r.id, fingerprint(r))).collect();
+            let group = AdmittedGroup { verify_cap, requests: live };
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                // fault-inject site: a panic between admission and the
+                // engines exercises supervision without touching a model
+                let _ = crate::failpoint!("sched-dispatch");
+                worker.run(group);
+            }));
+            match run {
+                Ok(()) => {
+                    for &(_, fp) in &members {
+                        quarantine.note_success(fp);
+                    }
+                }
+                Err(_) => {
+                    // the panic unwound out of the engines: fail exactly
+                    // this group's lanes, rebuild the worker's round
+                    // state, and keep serving
+                    metrics.on_worker_panic(members.len() as u64);
+                    for &(id, fp) in &members {
+                        quarantine.note_failure(fp);
+                        deliver(pending, id, panic_response(id));
+                    }
+                    worker.rebuild();
+                    health.set_inflight(0);
+                    metrics.set_inflight(0);
+                    health.beat();
+                }
+            }
+        }
     }
 }
 
@@ -462,17 +848,71 @@ fn resolve_tree(choice: TreeChoice, default_tree: &TreePolicy) -> TreePolicy {
     }
 }
 
+/// The production [`GroupWorker`]: wraps the loaded engines, owns the
+/// worker's warm scratch pool and running aggregate. On a supervised
+/// panic the pool is rebuilt from scratch — a panic mid-round can leave
+/// partially-written arenas/slabs, and the engines' KV caches are
+/// per-call (dropped by the unwind), so a fresh pool is a full round-
+/// state reset.
+struct EngineWorker<'a> {
+    runner: &'a Runner,
+    bundle: &'a ModelBundle,
+    bpe: &'a Bpe,
+    c: &'a crate::runtime::manifest::Constants,
+    default_tree: &'a TreePolicy,
+    default_width: WidthSelect,
+    default_deadline_ms: u64,
+    pending: &'a PendingMap,
+    metrics: &'a ServerMetrics,
+    health: &'a Health,
+    pool: ScratchPool,
+    agg: Aggregate,
+}
+
+impl GroupWorker for EngineWorker<'_> {
+    fn run(&mut self, group: AdmittedGroup) {
+        run_group(
+            group,
+            self.runner,
+            self.bundle,
+            self.bpe,
+            self.c,
+            self.default_tree,
+            self.default_width,
+            self.default_deadline_ms,
+            self.pending,
+            self.metrics,
+            self.health,
+            &mut self.pool,
+            &mut self.agg,
+        );
+    }
+
+    fn rebuild(&mut self) {
+        self.pool = ScratchPool::new();
+    }
+}
+
 /// Run the server (blocking). The inference worker owns the PJRT client
 /// (single accelerator, single worker — CPU testbed); HTTP I/O threads
 /// hand requests over through the bounded queue (backpressure -> 429).
+/// Returns cleanly after `POST /admin/drain` finishes the queued work;
+/// if the worker dies outside supervision (artifact load), the accept
+/// loop keeps serving `/metrics` and the stalled `/healthz`.
 pub fn serve(cfg: ServeConfig) -> Result<()> {
+    if let Some(spec) = &cfg.inject {
+        #[cfg(feature = "fault-inject")]
+        crate::util::failpoint::configure(spec)?;
+        #[cfg(not(feature = "fault-inject"))]
+        eprintln!("[server] --inject '{spec}' ignored: built without the fault-inject feature");
+    }
     let queue = Arc::new(RequestQueue::new(cfg.queue_cap));
     let metrics = Arc::new(ServerMetrics::new(cfg.trace_cap));
     let health = Arc::new(Health::new(cfg.stall_ms));
     let pending: Arc<PendingMap> = Arc::new(Mutex::new(std::collections::HashMap::new()));
 
     // ---- inference worker --------------------------------------------------
-    {
+    let worker = {
         let queue = queue.clone();
         let pending = pending.clone();
         let metrics = metrics.clone();
@@ -484,6 +924,7 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
         let (max_batch, linger_ms) = (cfg.max_batch, cfg.linger_ms);
         let grouping = cfg.width_grouping;
         let cost_model = cfg.cost_model.clone();
+        let default_deadline_ms = cfg.default_deadline_ms;
         std::thread::Builder::new().name("inference".into()).spawn(move || {
             let runner = Runner::new(&artifacts).expect("loading artifacts");
             let bpe = Bpe::load(runner.man.path(&runner.man.tokenizer).to_str().unwrap())
@@ -529,55 +970,80 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
             let sched =
                 Scheduler::new(max_batch, linger_ms).with_policy(policy).with_cost_model(cost);
             // one warm scratch pool for the worker's lifetime: batched
-            // groups reuse per-lane round state across admissions
-            let mut pool = ScratchPool::new();
-            // running aggregate over everything served: feeds the τ /
-            // mean-width / latency-percentile gauges
-            let mut agg = Aggregate::new();
-            loop {
-                // idle while blocking on the queue, so an empty server
-                // never reads as a stall
-                health.set_busy(false);
-                let groups = sched.next_groups(&queue);
-                health.set_busy(true);
-                if groups.is_empty() {
-                    health.set_busy(false);
-                    break; // queue closed
-                }
-                for group in groups {
-                    run_group(
-                        group, &runner, &bundle, &bpe, &c, &default_tree, default_width,
-                        &pending, &metrics, &health, &mut pool, &mut agg,
-                    );
-                }
-            }
-        })?;
-    }
+            // groups reuse per-lane round state across admissions; the
+            // running aggregate feeds the τ / width / percentile gauges
+            let mut w = EngineWorker {
+                runner: &runner,
+                bundle: &bundle,
+                bpe: &bpe,
+                c: &c,
+                default_tree: &default_tree,
+                default_width,
+                default_deadline_ms,
+                pending: &pending,
+                metrics: &metrics,
+                health: &health,
+                pool: ScratchPool::new(),
+                agg: Aggregate::new(),
+            };
+            worker_loop(&queue, &sched, &pending, &metrics, &health, default_deadline_ms, &mut w);
+        })?
+    };
 
-    // ---- accept loop ---------------------------------------------------------
+    // ---- accept loop (own thread, so serve() can join the worker) ----------
     let listener = TcpListener::bind(&cfg.addr)?;
     eprintln!("[server] listening on http://{}", cfg.addr);
-    let next_id = Arc::new(AtomicU64::new(1));
-    for stream in listener.incoming() {
-        let mut stream = match stream {
-            Ok(s) => s,
-            Err(_) => continue,
-        };
+    let accept = {
         let queue = queue.clone();
-        let pending = pending.clone();
-        let metrics = metrics.clone();
-        let health = health.clone();
-        let next_id = next_id.clone();
-        std::thread::spawn(move || {
-            let req = match HttpRequest::read_from(&mut stream) {
-                Ok(r) => r,
-                Err(_) => return,
-            };
-            let resp = route(&req, &queue, &pending, &metrics, &health, &next_id);
-            let _ = stream.write_all(resp.to_bytes().as_slice());
-        });
+        let default_deadline_ms = cfg.default_deadline_ms;
+        std::thread::Builder::new().name("accept".into()).spawn(move || {
+            let next_id = Arc::new(AtomicU64::new(1));
+            for stream in listener.incoming() {
+                let mut stream = match stream {
+                    Ok(s) => s,
+                    Err(_) => continue,
+                };
+                let queue = queue.clone();
+                let pending = pending.clone();
+                let metrics = metrics.clone();
+                let health = health.clone();
+                let next_id = next_id.clone();
+                std::thread::spawn(move || {
+                    let req = match HttpRequest::read_from(&mut stream) {
+                        Ok(r) => r,
+                        Err(_) => return,
+                    };
+                    let resp = route(
+                        &req, &queue, &pending, &metrics, &health, &next_id,
+                        default_deadline_ms,
+                    );
+                    let _ = stream.write_all(resp.to_bytes().as_slice());
+                });
+            }
+        })?
+    };
+
+    match worker.join() {
+        Ok(()) => {
+            // clean worker exit only happens when the queue closed —
+            // i.e. a drain finished every queued and in-flight group.
+            // Returning drops the process (and the accept thread with
+            // it): the graceful-drain exit path. The brief grace lets
+            // route threads flush their last responses (the drain ack,
+            // final generation bodies) before the listener dies.
+            std::thread::sleep(std::time::Duration::from_millis(200));
+            eprintln!("[server] drained; exiting");
+            Ok(())
+        }
+        Err(_) => {
+            // the worker died OUTSIDE supervision (artifact load is the
+            // only unsupervised stretch). Keep the accept loop alive:
+            // /metrics stays scrapeable and /healthz reports the stall —
+            // the artifact-less CI smoke test relies on exactly this.
+            let _ = accept.join();
+            Ok(())
+        }
     }
-    Ok(())
 }
 
 /// Execute one admitted group: the batched engine when it qualifies —
@@ -593,6 +1059,7 @@ fn run_group(
     c: &crate::runtime::manifest::Constants,
     default_tree: &TreePolicy,
     default_width: WidthSelect,
+    default_deadline_ms: u64,
     pending: &PendingMap,
     metrics: &ServerMetrics,
     health: &Health,
@@ -634,6 +1101,7 @@ fn run_group(
         let policy = resolve_tree(reqs[0].tree, default_tree);
         let mut engine = BatchEagleEngine::new(&bundle.target, &bundle.drafts["eagle"], c)
             .with_policy(policy.clone())
+            .with_deadlines(reqs.iter().map(|r| r.deadline(default_deadline_ms)).collect())
             .with_observer(&observer);
         // the group's width cap only applies under the dynamic planner,
         // which shrinks each lane's node budget to fit it; a static tree
@@ -672,6 +1140,8 @@ fn run_group(
                             tau: rec.tau(),
                             latency_ms: lat_ms,
                             queue_ms: qw * 1e3,
+                            status: 200,
+                            truncated: rec.truncated,
                         },
                     );
                 }
@@ -707,6 +1177,7 @@ fn run_group(
                 Some(t) => WidthSelect::Fixed(t),
                 None => default_width,
             },
+            deadline: req.deadline(default_deadline_ms),
             ..Default::default()
         };
         let gen = GenConfig {
@@ -727,6 +1198,8 @@ fn run_group(
                     tau: rec.tau(),
                     latency_ms: t0.elapsed().as_secs_f64() * 1e3,
                     queue_ms: qw * 1e3,
+                    status: 200,
+                    truncated: rec.truncated,
                 }
             }
             Err(e) => {
@@ -748,34 +1221,47 @@ fn route(
     metrics: &ServerMetrics,
     health: &Health,
     next_id: &AtomicU64,
+    default_deadline_ms: u64,
 ) -> HttpResponse {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             let body = health.to_json(queue.len()).to_string().into_bytes();
-            if health.stalled() {
-                HttpResponse {
-                    code: 503,
-                    reason: "Service Unavailable",
-                    content_type: "application/json".into(),
-                    body,
-                }
+            if health.stalled() || health.draining() {
+                HttpResponse::with_code(503, "application/json", body)
             } else {
                 HttpResponse::ok("application/json", body)
             }
         }
         ("GET", "/metrics") => {
             // scrape-time gauges: depth is a queue property, in-flight a
-            // worker property; both refresh on read
+            // worker property, and the robustness rates derive from the
+            // lifetime counters; all refresh on read
             metrics.set_queue_depth(queue.len());
             metrics.set_inflight(health.inflight());
+            metrics.refresh_derived();
             HttpResponse::ok("text/plain; version=0.0.4", metrics.render().into_bytes())
         }
         ("GET", "/trace") => HttpResponse::ok(
             "application/json",
             metrics.trace.to_json().to_string().into_bytes(),
         ),
+        ("POST", "/admin/drain") => {
+            // graceful drain: stop admitting, let the worker finish the
+            // queue, then serve() exits when the worker thread joins.
+            // Idempotent — a second drain finds the queue already closed.
+            health.set_draining();
+            queue.close();
+            HttpResponse::ok(
+                "application/json",
+                Json::obj(vec![
+                    ("draining", Json::Bool(true)),
+                    ("queue_depth", Json::Num(queue.len() as f64)),
+                ])
+                .to_string()
+                .into_bytes(),
+            )
+        }
         ("POST", "/v1/generate") => {
-            metrics.on_request();
             let body = match std::str::from_utf8(&req.body).ok().and_then(|s| Json::parse(s).ok())
             {
                 Some(v) => v,
@@ -789,11 +1275,26 @@ fn route(
             if r.method == Method::Medusa && r.temperature > 0.0 {
                 return HttpResponse::status(400, "medusa is greedy-only");
             }
+            let dl = r.deadline(default_deadline_ms);
+            // overload shedding, before the request takes a slot: if the
+            // estimated queue wait already exceeds the deadline budget,
+            // a 429 now beats a guaranteed 504 later
+            if let Some(est_wait) =
+                should_shed(queue.len(), metrics.est_service_secs(), dl.budget_secs())
+            {
+                metrics.on_shed();
+                let retry = (est_wait.ceil() as u64).max(1);
+                return HttpResponse::status(429, "shed: deadline cannot survive queue wait")
+                    .with_header("Retry-After", &retry.to_string());
+            }
+            metrics.on_request();
             let slot: Slot = Arc::new((Mutex::new(None), std::sync::Condvar::new()));
             pending.lock().unwrap().insert(id, slot.clone());
             match queue.push(r) {
                 Ok(()) => {}
                 Err(PushError::Full) => {
+                    // retire the slot before answering: the request never
+                    // reached the queue, so nothing will ever deliver it
                     pending.lock().unwrap().remove(&id);
                     metrics.on_rejected();
                     return HttpResponse::status(429, "queue full");
@@ -803,22 +1304,47 @@ fn route(
                     return HttpResponse::status(503, "shutting down");
                 }
             }
-            // wait for the worker
+            // wait for the worker: until the request's deadline plus
+            // grace (the worker delivers the deadline-truncated partial
+            // result itself), or a 120 s safety net when unbounded.
+            // Spurious condvar wakeups loop back — only real elapsed
+            // time can 504 — and the slot guard is always dropped before
+            // touching `pending` (the worker takes pending→slot; taking
+            // slot→pending here would deadlock).
+            let grace = std::time::Duration::from_secs(5);
+            let wait_until = match dl.instant() {
+                Some(t) => t + grace,
+                None => Instant::now() + std::time::Duration::from_secs(120),
+            };
             let (lock, cv) = &*slot;
             let mut g = lock.lock().unwrap();
-            while g.is_none() {
-                let (ng, _t) = cv
-                    .wait_timeout(g, std::time::Duration::from_secs(120))
-                    .unwrap();
-                g = ng;
-                if g.is_none() {
+            loop {
+                if let Some(resp) = g.take() {
+                    drop(g);
+                    // the worker removed the slot at delivery; nothing
+                    // left to clean up
+                    return if resp.status == 200 {
+                        HttpResponse::ok(
+                            "application/json",
+                            resp.to_json().to_string().into_bytes(),
+                        )
+                    } else {
+                        HttpResponse::with_code(
+                            resp.status,
+                            "application/json",
+                            resp.to_json().to_string().into_bytes(),
+                        )
+                    };
+                }
+                let now = Instant::now();
+                if now >= wait_until {
+                    drop(g);
                     pending.lock().unwrap().remove(&id);
                     return HttpResponse::status(504, "generation timeout");
                 }
+                let (ng, _timed_out) = cv.wait_timeout(g, wait_until - now).unwrap();
+                g = ng;
             }
-            let resp = g.take().unwrap();
-            pending.lock().unwrap().remove(&id);
-            HttpResponse::ok("application/json", resp.to_json().to_string().into_bytes())
         }
         _ => HttpResponse::status(404, "not found"),
     }

@@ -44,6 +44,7 @@ use super::tree::{chain_extend_bias_to, fill_step_rows_into, DraftTree, TreeSpec
 use crate::metrics::trace::{RoundEvent, RoundObserver};
 use crate::metrics::GenRecord;
 use crate::models::{EagleDraft, TargetModel};
+use crate::util::deadline::DeadlineClock;
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -90,6 +91,11 @@ pub struct EagleEngine<'a> {
     /// called once per completed round and must not allocate — it runs
     /// inside the zero-alloc round loop.
     pub observer: Option<&'a dyn RoundObserver>,
+    /// Request deadline, polled at the top of every round (a single
+    /// monotonic-clock read — allocation-free). On expiry the engine
+    /// stops drafting and returns the partial record with
+    /// `rec.truncated = Some("deadline")`. Default: unbounded.
+    pub deadline: DeadlineClock,
 }
 
 impl<'a> EagleEngine<'a> {
@@ -113,6 +119,7 @@ impl<'a> EagleEngine<'a> {
             accept_a: c.accept_a,
             draft_w: c.draft_w,
             observer: None,
+            deadline: DeadlineClock::default(),
         }
     }
 
@@ -137,6 +144,7 @@ impl<'a> EagleEngine<'a> {
             accept_a: c.accept_a,
             draft_w: c.draft_w,
             observer: None,
+            deadline: DeadlineClock::default(),
         }
     }
 
@@ -144,6 +152,14 @@ impl<'a> EagleEngine<'a> {
     /// select `TreePolicy::Dynamic` per request).
     pub fn with_policy(mut self, policy: TreePolicy) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// Attach a request deadline (builder-style): generation stops at
+    /// the first round boundary past expiry and returns partial output
+    /// marked `truncated = Some("deadline")`.
+    pub fn with_deadline(mut self, deadline: DeadlineClock) -> Self {
+        self.deadline = deadline;
         self
     }
 
@@ -277,6 +293,11 @@ impl<'a> EagleEngine<'a> {
 
         // ---- decode rounds --------------------------------------------------
         while rec.tokens.len() < cfg.max_new {
+            if self.deadline.expired() {
+                // cancellation: stop drafting, hand back what we have
+                rec.truncated = Some("deadline");
+                break;
+            }
             if m + t_reserve + 1 >= s_tot {
                 break; // cache budget exhausted
             }
@@ -352,7 +373,8 @@ impl<'a> EagleEngine<'a> {
             );
             rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
             let t0 = Instant::now();
-            let vout = tgt.verify(
+            let fp_degenerate_verify = crate::failpoint!("verify");
+            let mut vout = tgt.verify(
                 sel_t,
                 &mut cache,
                 &[pending_old_m as i32],
@@ -363,6 +385,9 @@ impl<'a> EagleEngine<'a> {
                 &scratch.vbias,
                 self.accept_a,
             )?;
+            if fp_degenerate_verify {
+                vout.logits.iter_mut().for_each(|x| *x = f32::NAN);
+            }
             rec.timeline.verify_ns += t0.elapsed().as_nanos() as u64;
             rec.target_passes += 1;
 
@@ -472,7 +497,8 @@ impl<'a> EagleEngine<'a> {
             scratch.sbias.resize(w * s_tot, 0.0);
             chain_extend_bias_to(w, s_tot, m, n_pending, &mut scratch.sbias);
             let t0 = Instant::now();
-            let eout = self.draft.step(
+            let fp_degenerate_draft = crate::failpoint!("draft-step");
+            let mut eout = self.draft.step(
                 w,
                 &mut dcache,
                 &[m as i32],
@@ -481,6 +507,9 @@ impl<'a> EagleEngine<'a> {
                 &scratch.sp,
                 &scratch.sbias,
             )?;
+            if fp_degenerate_draft {
+                eout.logits.iter_mut().for_each(|x| *x = f32::NAN);
+            }
             rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64;
             rec.draft_passes += 1;
             let last = n_pending - 1;
@@ -894,6 +923,7 @@ pub fn sampled_accept_walk<'a>(
     alpha: &mut [(u64, u64)],
     s: &mut RoundScratch,
 ) -> u32 {
+    let _ = crate::failpoint!("accept-walk");
     s.path.clear();
     s.path.push(0);
     let mut cur = 0usize;

@@ -1,0 +1,106 @@
+//! Per-request deadlines as a `Copy`, allocation-free clock.
+//!
+//! A [`DeadlineClock`] wraps an optional absolute [`Instant`]; checking
+//! it is a single monotonic-clock read and a comparison — no heap, no
+//! locks — so the engines can poll it at the top of every speculation
+//! round without breaking the S22 zero-allocation guarantee. The
+//! default clock is unbounded (never expires), which keeps every
+//! existing call path (`RunSpec::default()`, eval, benches) behaviour-
+//! identical.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeadlineClock {
+    at: Option<Instant>,
+}
+
+impl DeadlineClock {
+    /// A clock that never expires (the default).
+    pub fn unbounded() -> DeadlineClock {
+        DeadlineClock { at: None }
+    }
+
+    /// Expire at an absolute instant.
+    pub fn at(t: Instant) -> DeadlineClock {
+        DeadlineClock { at: Some(t) }
+    }
+
+    /// Expire `ms` milliseconds after `start` (a request's arrival).
+    pub fn after_ms(start: Instant, ms: u64) -> DeadlineClock {
+        DeadlineClock { at: Some(start + Duration::from_millis(ms)) }
+    }
+
+    /// Build from an optional request budget: `None` or `0` means
+    /// unbounded (the serve-flag convention: `--default-deadline-ms 0`
+    /// disables deadlines).
+    pub fn from_ms(ms: Option<u64>, start: Instant) -> DeadlineClock {
+        match ms {
+            Some(m) if m > 0 => DeadlineClock::after_ms(start, m),
+            _ => DeadlineClock::unbounded(),
+        }
+    }
+
+    pub fn is_unbounded(&self) -> bool {
+        self.at.is_none()
+    }
+
+    /// The absolute expiry instant, if bounded.
+    pub fn instant(&self) -> Option<Instant> {
+        self.at
+    }
+
+    /// Has the deadline passed? Unbounded clocks never expire.
+    /// Stack-only: safe inside the zero-alloc round loop.
+    #[inline]
+    pub fn expired(&self) -> bool {
+        match self.at {
+            Some(t) => Instant::now() >= t,
+            None => false,
+        }
+    }
+
+    /// Time left before expiry; `None` when unbounded, zero once expired.
+    pub fn remaining(&self) -> Option<Duration> {
+        self.at.map(|t| t.saturating_duration_since(Instant::now()))
+    }
+
+    /// Remaining budget in seconds, or `None` when unbounded. Used by
+    /// the server's shed decision (estimated queue wait vs budget).
+    pub fn budget_secs(&self) -> Option<f64> {
+        self.remaining().map(|d| d.as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbounded_never_expires() {
+        let c = DeadlineClock::default();
+        assert!(c.is_unbounded());
+        assert!(!c.expired());
+        assert!(c.remaining().is_none());
+        assert!(DeadlineClock::from_ms(None, Instant::now()).is_unbounded());
+        assert!(DeadlineClock::from_ms(Some(0), Instant::now()).is_unbounded());
+    }
+
+    #[test]
+    fn expiry_is_monotonic() {
+        let past = Instant::now() - Duration::from_millis(5);
+        assert!(DeadlineClock::at(past).expired());
+        let c = DeadlineClock::after_ms(Instant::now(), 60_000);
+        assert!(!c.expired());
+        assert!(c.remaining().unwrap() > Duration::from_secs(1));
+        assert!(c.budget_secs().unwrap() > 1.0);
+    }
+
+    #[test]
+    fn from_ms_bounds() {
+        let start = Instant::now();
+        let c = DeadlineClock::from_ms(Some(10), start);
+        assert!(!c.is_unbounded());
+        assert!(c.instant().unwrap() <= start + Duration::from_millis(10));
+    }
+}

@@ -1,0 +1,201 @@
+//! Fault-injection harness ("failpoints") for chaos-testing the
+//! serving stack, compiled only under the `fault-inject` feature.
+//!
+//! Hot paths mark named sites with the [`failpoint!`] macro:
+//!
+//! ```ignore
+//! let degenerate = crate::failpoint!("verify");
+//! ```
+//!
+//! Without the feature the macro is the constant `false` — zero code,
+//! zero cost, so the S22 zero-allocation guarantee is untouched in
+//! production and `count-alloc` builds. With the feature, each pass
+//! through a site bumps its hit counter and, on the configured Nth hit,
+//! performs the injected action:
+//!
+//! - `panic`          — `panic!` at the site (exercises worker supervision)
+//! - `delay(MS)`      — sleep `MS` milliseconds (exercises deadlines/stall)
+//! - `degenerate`     — return `true`; the site substitutes degenerate
+//!   (all-NaN) logits (exercises the `total_cmp` NaN hardening)
+//!
+//! Actions are one-shot: they fire on the Nth hit only, so "survive the
+//! panic, serve the next request" is the natural test shape. Sites are
+//! configured programmatically ([`set`]/[`configure`]) or from the
+//! environment (`EAGLE_FAILPOINTS`, also fed by `repro serve --inject`)
+//! with the grammar `site=action[@N],site=action[@N],…`, e.g.
+//! `verify=panic@2,draft-step=delay(50)`.
+//!
+//! Site catalogue (see docs/robustness.md): `draft-step`, `verify`,
+//! `accept-walk` (both engines), `sched-dispatch` (scheduler group
+//! formation), `deliver` (server slot delivery).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Panic at the site on the Nth hit.
+    Panic,
+    /// Sleep this many milliseconds on the Nth hit.
+    Delay(u64),
+    /// Tell the site to substitute degenerate (NaN) outputs on the Nth hit.
+    Degenerate,
+}
+
+struct Site {
+    name: String,
+    action: Action,
+    /// Fire on this hit count (1-based, one-shot).
+    nth: u64,
+    hits: AtomicU64,
+}
+
+fn registry() -> &'static Mutex<Vec<Site>> {
+    static REG: OnceLock<Mutex<Vec<Site>>> = OnceLock::new();
+    REG.get_or_init(|| {
+        let reg = Mutex::new(Vec::new());
+        if let Ok(spec) = std::env::var("EAGLE_FAILPOINTS") {
+            if let Ok(sites) = parse_spec(&spec) {
+                *reg.lock().unwrap() = sites;
+            }
+        }
+        reg
+    })
+}
+
+/// Arm `site` with `action`, firing on the `nth` hit (1-based).
+/// Re-arming an existing site resets its hit counter.
+pub fn set(site: &str, action: Action, nth: u64) {
+    let mut reg = registry().lock().unwrap();
+    reg.retain(|s| s.name != site);
+    reg.push(Site { name: site.into(), action, nth: nth.max(1), hits: AtomicU64::new(0) });
+}
+
+/// Disarm every site and zero all hit counters.
+pub fn clear_all() {
+    registry().lock().unwrap().clear();
+}
+
+/// Total hits recorded at `site` since it was last armed (0 if unarmed).
+pub fn hits(site: &str) -> u64 {
+    let reg = registry().lock().unwrap();
+    reg.iter().find(|s| s.name == site).map(|s| s.hits.load(Ordering::Relaxed)).unwrap_or(0)
+}
+
+/// Parse and install a `site=action[@N],…` spec (see module docs).
+pub fn configure(spec: &str) -> anyhow::Result<()> {
+    let sites = parse_spec(spec)?;
+    let mut reg = registry().lock().unwrap();
+    for s in sites {
+        reg.retain(|e| e.name != s.name);
+        reg.push(s);
+    }
+    Ok(())
+}
+
+fn parse_spec(spec: &str) -> anyhow::Result<Vec<Site>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (name, rest) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("failpoint spec `{part}`: expected site=action"))?;
+        let (act, nth) = match rest.split_once('@') {
+            Some((a, n)) => {
+                (a, n.parse::<u64>().map_err(|_| anyhow::anyhow!("bad hit count in `{part}`"))?)
+            }
+            None => (rest, 1),
+        };
+        let action = if act == "panic" {
+            Action::Panic
+        } else if act == "degenerate" {
+            Action::Degenerate
+        } else if let Some(ms) = act.strip_prefix("delay(").and_then(|r| r.strip_suffix(')')) {
+            Action::Delay(ms.parse().map_err(|_| anyhow::anyhow!("bad delay ms in `{part}`"))?)
+        } else {
+            anyhow::bail!("failpoint spec `{part}`: unknown action `{act}`");
+        };
+        out.push(Site { name: name.trim().into(), action, nth: nth.max(1), hits: AtomicU64::new(0) });
+    }
+    Ok(out)
+}
+
+/// Record a pass through `site`; perform the armed action if this is the
+/// Nth hit. Returns `true` when the site should substitute degenerate
+/// outputs. Called only through the [`failpoint!`] macro.
+pub fn hit(site: &str) -> bool {
+    let action = {
+        let reg = registry().lock().unwrap();
+        match reg.iter().find(|s| s.name == site) {
+            Some(s) => {
+                let n = s.hits.fetch_add(1, Ordering::Relaxed) + 1;
+                if n == s.nth {
+                    Some(s.action)
+                } else {
+                    None
+                }
+            }
+            None => None,
+        }
+    };
+    // act outside the registry lock so a panic cannot poison it
+    match action {
+        Some(Action::Panic) => panic!("failpoint `{site}`: injected panic"),
+        Some(Action::Delay(ms)) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            false
+        }
+        Some(Action::Degenerate) => true,
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Sites are process-global; each test uses its own site names so
+    // parallel test threads cannot interfere.
+
+    #[test]
+    fn unarmed_site_is_inert() {
+        assert!(!hit("fp-test-inert"));
+        assert_eq!(hits("fp-test-inert"), 0, "unarmed sites do not track hits");
+    }
+
+    #[test]
+    fn fires_on_nth_hit_once() {
+        set("fp-test-nth", Action::Degenerate, 2);
+        assert!(!hit("fp-test-nth"), "first hit passes");
+        assert!(hit("fp-test-nth"), "second hit fires");
+        assert!(!hit("fp-test-nth"), "one-shot: third hit passes");
+        assert_eq!(hits("fp-test-nth"), 3);
+        set("fp-test-nth", Action::Degenerate, 1);
+        assert_eq!(hits("fp-test-nth"), 0, "re-arming resets the counter");
+        assert!(hit("fp-test-nth"));
+    }
+
+    #[test]
+    fn injected_panic_carries_site_name() {
+        set("fp-test-panic", Action::Panic, 1);
+        let err = std::panic::catch_unwind(|| hit("fp-test-panic")).unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("fp-test-panic"), "panic message names the site: {msg}");
+        assert!(!hit("fp-test-panic"), "registry survives the panic unpoisoned");
+    }
+
+    #[test]
+    fn spec_grammar_roundtrip() {
+        let sites = parse_spec("verify=panic@2, draft-step=delay(50), accept-walk=degenerate")
+            .unwrap();
+        assert_eq!(sites.len(), 3);
+        assert_eq!(sites[0].action, Action::Panic);
+        assert_eq!(sites[0].nth, 2);
+        assert_eq!(sites[1].action, Action::Delay(50));
+        assert_eq!(sites[1].nth, 1);
+        assert_eq!(sites[2].action, Action::Degenerate);
+        assert!(parse_spec("verify").is_err(), "missing action");
+        assert!(parse_spec("verify=explode").is_err(), "unknown action");
+        assert!(parse_spec("verify=panic@x").is_err(), "bad count");
+        assert!(parse_spec("verify=delay(abc)").is_err(), "bad delay");
+    }
+}

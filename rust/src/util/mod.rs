@@ -1,9 +1,31 @@
 //! Dependency-free substrates: JSON, RNG, property-test harness, CLI args,
-//! and the test-only counting allocator (`count-alloc` feature).
+//! request deadlines, the test-only counting allocator (`count-alloc`
+//! feature), and the fault-injection harness (`fault-inject` feature).
 
 pub mod cli;
 #[cfg(feature = "count-alloc")]
 pub mod count_alloc;
+pub mod deadline;
+#[cfg(feature = "fault-inject")]
+pub mod failpoint;
 pub mod json;
 pub mod prop;
 pub mod rng;
+
+/// Mark a named fault-injection site (see `util/failpoint.rs`).
+///
+/// Evaluates to a `bool`: `true` when an armed `degenerate` action fired
+/// at this site (the caller substitutes degenerate outputs); `panic` and
+/// `delay` actions are performed inside the macro. Without the
+/// `fault-inject` feature this is the constant `false` — no code is
+/// generated, so production and `count-alloc` builds are untouched.
+#[macro_export]
+macro_rules! failpoint {
+    ($site:expr) => {{
+        #[cfg(feature = "fault-inject")]
+        let __fp_degenerate = $crate::util::failpoint::hit($site);
+        #[cfg(not(feature = "fault-inject"))]
+        let __fp_degenerate = false;
+        __fp_degenerate
+    }};
+}

@@ -1,0 +1,282 @@
+//! Chaos tests for the fault-tolerant serving layer (no artifacts
+//! needed): drive the EXACT supervised worker loop the server runs
+//! (`worker_loop`) with synthetic [`GroupWorker`] executors and injected
+//! faults, and assert the resilience contract — a panic fails only its
+//! own group's lanes, deadlines drop queued work with 504 and mark
+//! partial generations, repeated poison requests quarantine, overload
+//! sheds, and drain finishes everything in flight before exit.
+//!
+//! Every test is gated on the `fault-inject` feature (this binary is
+//! empty without it): `cargo test --features fault-inject --test chaos`.
+#![cfg(feature = "fault-inject")]
+
+use eagle_serve::coordinator::request::{Request, Response};
+use eagle_serve::coordinator::{AdmittedGroup, RequestQueue, Scheduler};
+use eagle_serve::metrics::registry::parse_exposition;
+use eagle_serve::metrics::GenRecord;
+use eagle_serve::server::{
+    deliver, fingerprint, should_shed, worker_loop, GroupWorker, Health, PendingMap,
+    ServerMetrics, Slot, QUARANTINE_AFTER,
+};
+use eagle_serve::util::failpoint::{self, Action};
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+
+/// Failpoint sites are process-global, and every test here pushes the
+/// worker loop through the `sched-dispatch`/`deliver` sites — so tests
+/// that arm a site must not overlap tests that would trip it. One lock
+/// serializes the whole binary (poison from a failed test is ignored:
+/// the guard protects ordering, not data).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn req(id: u64, prompt: &str, deadline_ms: Option<u64>) -> Request {
+    let mut r = Request::synthetic(id);
+    r.prompt = prompt.into();
+    r.deadline_ms = deadline_ms;
+    r
+}
+
+/// Register a pending slot for `id`, the way the route thread does
+/// before pushing to the queue.
+fn register(pending: &PendingMap, id: u64) -> Slot {
+    let slot: Slot = std::sync::Arc::new((Mutex::new(None), Condvar::new()));
+    pending.lock().unwrap().insert(id, slot.clone());
+    slot
+}
+
+fn taken(slot: &Slot) -> Response {
+    slot.0.lock().unwrap().take().expect("slot was delivered")
+}
+
+/// Synthetic group executor: echoes each request, panics on prompts
+/// named "poison", marks prompts named "partial" deadline-truncated —
+/// the engine contract without an engine.
+struct ScriptedWorker<'a> {
+    pending: &'a PendingMap,
+    runs: usize,
+    rebuilds: usize,
+}
+
+impl GroupWorker for ScriptedWorker<'_> {
+    fn run(&mut self, group: AdmittedGroup) {
+        self.runs += 1;
+        for r in &group.requests {
+            if r.prompt == "poison" {
+                panic!("synthetic poison request");
+            }
+            let truncated = if r.prompt == "partial" { Some("deadline") } else { None };
+            deliver(
+                self.pending,
+                r.id,
+                Response {
+                    id: r.id,
+                    text: format!("echo:{}", r.prompt),
+                    tokens: 1,
+                    target_passes: 1,
+                    tau: 1.0,
+                    latency_ms: 1.0,
+                    queue_ms: 0.0,
+                    status: 200,
+                    truncated,
+                },
+            );
+        }
+    }
+
+    fn rebuild(&mut self) {
+        self.rebuilds += 1;
+    }
+}
+
+/// One closed, pre-loaded serving fixture: the scheduler drains the
+/// queue group by group and `worker_loop` returns — exactly the drain
+/// path, reused by every test.
+fn drain_with(reqs: Vec<Request>) -> (ServerMetrics, PendingMap, Vec<(u64, Slot)>, usize, usize) {
+    let queue = RequestQueue::new(64);
+    let sched = Scheduler::new(1, 0);
+    let pending: PendingMap = Mutex::new(HashMap::new());
+    let metrics = ServerMetrics::new(16);
+    let health = Health::new(60_000);
+    let slots: Vec<(u64, Slot)> = reqs.iter().map(|r| (r.id, register(&pending, r.id))).collect();
+    for r in reqs {
+        queue.push(r).unwrap();
+    }
+    queue.close(); // drain: queued work still comes out of pop
+    let mut w = ScriptedWorker { pending: &pending, runs: 0, rebuilds: 0 };
+    worker_loop(&queue, &sched, &pending, &metrics, &health, 0, &mut w);
+    let (runs, rebuilds) = (w.runs, w.rebuilds);
+    (metrics, pending, slots, runs, rebuilds)
+}
+
+#[test]
+fn injected_panic_fails_only_its_own_group() {
+    let _g = serial();
+    let (metrics, pending, slots, runs, rebuilds) =
+        drain_with(vec![req(1, "poison", None), req(2, "ok", None)]);
+    // the poisoned group's lane gets a 500 instead of a hung slot…
+    let r1 = taken(&slots[0].1);
+    assert_eq!(r1.status, 500);
+    assert!(r1.text.contains("panic"), "names the failure: {}", r1.text);
+    // …and the SAME worker serves the next request normally
+    let r2 = taken(&slots[1].1);
+    assert_eq!(r2.status, 200);
+    assert_eq!(r2.text, "echo:ok");
+    assert_eq!(runs, 2, "both groups reached the executor");
+    assert_eq!(rebuilds, 1, "round state rebuilt exactly once");
+    assert!(pending.lock().unwrap().is_empty(), "no slot leaked");
+    let exp = parse_exposition(&metrics.render()).unwrap();
+    assert_eq!(exp.value("eagle_worker_panics_total"), Some(1.0));
+    assert_eq!(exp.value("eagle_lane_failures_total"), Some(1.0));
+}
+
+#[test]
+fn repeated_poison_is_quarantined_without_execution() {
+    let _g = serial();
+    // the same poison content resubmitted under fresh ids: after
+    // QUARANTINE_AFTER consecutive panics it is refused on sight
+    let n = QUARANTINE_AFTER as u64;
+    let reqs: Vec<Request> = (1..=n + 1).map(|id| req(id, "poison", None)).collect();
+    assert!(
+        reqs.windows(2).all(|p| fingerprint(&p[0]) == fingerprint(&p[1])),
+        "quarantine keys on content, not id"
+    );
+    let (metrics, _pending, slots, runs, _) = drain_with(reqs);
+    for (_, slot) in slots.iter().take(n as usize) {
+        assert_eq!(taken(slot).status, 500);
+    }
+    let last = taken(&slots[n as usize].1);
+    assert_eq!(last.status, 500);
+    assert!(last.text.contains("quarantined"), "refusal names the cause: {}", last.text);
+    assert_eq!(runs, n as usize, "the quarantined resubmission never executed");
+    let exp = parse_exposition(&metrics.render()).unwrap();
+    assert_eq!(exp.value("eagle_worker_panics_total"), Some(n as f64));
+    assert_eq!(exp.value("eagle_lane_failures_total"), Some(n as f64 + 1.0));
+}
+
+#[test]
+fn shared_group_members_recover_after_one_success() {
+    let _g = serial();
+    // a panic then a success for the same content: the failure count
+    // resets, so quarantine requires CONSECUTIVE failures
+    let mut q = eagle_serve::server::Quarantine::new(2);
+    let r = req(1, "flaky", None);
+    q.note_failure(fingerprint(&r));
+    assert!(!q.is_quarantined(&r));
+    q.note_success(fingerprint(&r));
+    q.note_failure(fingerprint(&r));
+    assert!(!q.is_quarantined(&r), "success cleared the streak");
+    q.note_failure(fingerprint(&r));
+    assert!(q.is_quarantined(&r));
+}
+
+#[test]
+fn queue_expired_request_drops_with_504_and_frees_its_slot() {
+    let _g = serial();
+    // 1 ms budget, 20 ms queue wait: expired before dispatch
+    let r = req(7, "late", Some(1));
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    let (metrics, pending, slots, runs, _) = drain_with(vec![r]);
+    let resp = taken(&slots[0].1);
+    assert_eq!(resp.status, 504);
+    assert_eq!(resp.truncated, Some("deadline"));
+    assert!(resp.queue_ms >= 20.0, "reports the real queue wait: {}", resp.queue_ms);
+    assert_eq!(runs, 0, "expired work never reaches the engines");
+    assert!(pending.lock().unwrap().is_empty(), "slot freed");
+    let exp = parse_exposition(&metrics.render()).unwrap();
+    let fam = exp.family("eagle_deadline_expired_total").expect("deadline family");
+    let queue_stage =
+        fam.samples.iter().find(|s| s.label("stage") == Some("queue")).expect("queue stage");
+    assert_eq!(queue_stage.value, 1.0);
+}
+
+#[test]
+fn deadline_truncated_generation_reaches_the_client_and_the_counters() {
+    let _g = serial();
+    // the engine contract: an expired deadline returns partial output
+    // marked truncated; the worker forwards the marker to the client
+    let (_, pending, slots, _, _) = drain_with(vec![req(3, "partial", None)]);
+    let resp = taken(&slots[0].1);
+    assert_eq!(resp.status, 200, "partial output is still an answer");
+    assert_eq!(resp.truncated, Some("deadline"));
+    assert!(
+        resp.to_json().to_string().contains("\"truncated\":\"deadline\""),
+        "marker serialized for the client"
+    );
+    assert!(pending.lock().unwrap().is_empty());
+    // and the generate-stage expiry counter keys off the record marker
+    let m = ServerMetrics::new(8);
+    let mut rec = GenRecord::new(4);
+    rec.tokens = vec![1, 2];
+    rec.wall_ns = 50_000_000;
+    rec.truncated = Some("deadline");
+    m.record_gen(&rec, 0.0, 0.05, 1);
+    let exp = parse_exposition(&m.render()).unwrap();
+    let fam = exp.family("eagle_deadline_expired_total").unwrap();
+    let gen_stage =
+        fam.samples.iter().find(|s| s.label("stage") == Some("generate")).expect("generate stage");
+    assert_eq!(gen_stage.value, 1.0);
+}
+
+#[test]
+fn overload_sheds_when_the_queue_cannot_meet_the_deadline() {
+    let _g = serial();
+    // unbounded requests and cold servers never shed
+    assert_eq!(should_shed(100, 2.0, None), None);
+    assert_eq!(should_shed(100, 0.0, Some(1.0)), None);
+    // 10 queued × 1 s EWMA against a 2 s budget: shed, and the estimate
+    // is the client's Retry-After hint
+    assert_eq!(should_shed(10, 1.0, Some(2.0)), Some(10.0));
+    assert_eq!(should_shed(1, 1.0, Some(2.0)), None, "within budget admits");
+    // the EWMA feeding the decision comes from served generations
+    let m = ServerMetrics::new(8);
+    assert_eq!(m.est_service_secs(), 0.0);
+    let mut rec = GenRecord::new(4);
+    rec.tokens = vec![1];
+    rec.wall_ns = 100_000_000; // 100 ms
+    m.record_gen(&rec, 0.0, 0.1, 1);
+    assert!((m.est_service_secs() - 0.1).abs() < 1e-9, "first sample seeds the EWMA");
+    // derived gauges publish the robustness surface at scrape time
+    m.on_request();
+    m.on_shed();
+    m.refresh_derived();
+    let exp = parse_exposition(&m.render()).unwrap();
+    assert_eq!(exp.value("eagle_shed_total"), Some(1.0));
+    assert_eq!(exp.value("eagle_shed_rate"), Some(1.0));
+    assert!((exp.value("eagle_est_service_seconds").unwrap() - 0.1).abs() < 1e-9);
+}
+
+#[test]
+fn drain_finishes_every_queued_request_then_exits() {
+    let _g = serial();
+    // close-then-drain: all three queued requests still complete, the
+    // loop returns (serve() joins the worker and exits cleanly)
+    let reqs = vec![req(1, "a", None), req(2, "b", None), req(3, "c", None)];
+    let (_, pending, slots, runs, _) = drain_with(reqs);
+    assert_eq!(runs, 3);
+    for (id, slot) in &slots {
+        let r = taken(slot);
+        assert_eq!(r.status, 200, "request {id} finished during drain");
+    }
+    assert!(pending.lock().unwrap().is_empty());
+}
+
+#[test]
+fn armed_failpoint_panics_are_supervised_like_any_other() {
+    let _g = serial();
+    // arm the dispatch-path site: the first group panics inside the
+    // supervised closure (before the executor), the second sails through
+    failpoint::set("sched-dispatch", Action::Panic, 1);
+    let (metrics, _, slots, runs, rebuilds) =
+        drain_with(vec![req(1, "a", None), req(2, "b", None)]);
+    failpoint::clear_all();
+    assert_eq!(taken(&slots[0].1).status, 500);
+    assert_eq!(taken(&slots[1].1).status, 200);
+    assert_eq!(runs, 1, "the panicked group never reached the executor");
+    assert_eq!(rebuilds, 1);
+    let exp = parse_exposition(&metrics.render()).unwrap();
+    assert_eq!(exp.value("eagle_worker_panics_total"), Some(1.0));
+}

@@ -180,6 +180,45 @@ fn trace_dump_roundtrips_and_summarizes() {
 }
 
 #[test]
+fn robustness_families_render_and_derive() {
+    let m = ServerMetrics::new(8);
+    m.on_request();
+    m.on_shed();
+    m.on_worker_panic(2);
+    m.on_lane_failures(1);
+    m.on_deadline_queue();
+    m.refresh_derived();
+    let exp = parse_exposition(&m.render()).expect("exposition with robustness families parses");
+    assert_eq!(exp.value("eagle_shed_total"), Some(1.0));
+    assert_eq!(exp.value("eagle_worker_panics_total"), Some(1.0));
+    assert_eq!(exp.value("eagle_lane_failures_total"), Some(3.0), "panic lanes + refusals");
+    let fam = exp.family("eagle_deadline_expired_total").expect("stage-labeled family");
+    let stages: Vec<_> = fam.samples.iter().filter_map(|s| s.label("stage")).collect();
+    assert!(stages.contains(&"queue") && stages.contains(&"generate"), "stages: {stages:?}");
+    // derived gauges over 1 admitted request: 1 shed, 1 queue-expiry
+    assert_eq!(exp.value("eagle_shed_rate"), Some(1.0));
+    assert_eq!(exp.value("eagle_deadline_miss_rate"), Some(1.0));
+    assert_eq!(exp.value("eagle_worker_restarts"), Some(1.0));
+    assert_eq!(exp.value("eagle_est_service_seconds"), Some(0.0), "no generation served yet");
+}
+
+#[test]
+fn draining_health_flips_ok_and_reports_the_phase() {
+    let h = Health::new(50);
+    h.set_busy(false);
+    let j = h.to_json(0);
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(j.get("draining").and_then(|v| v.as_bool()), Some(false));
+    // POST /admin/drain: ok turns false (load balancers stop routing)
+    // while the body still distinguishes drain from a stall
+    h.set_draining();
+    assert!(h.draining());
+    let j = h.to_json(0);
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(false));
+    assert_eq!(j.get("draining").and_then(|v| v.as_bool()), Some(true));
+}
+
+#[test]
 fn health_reports_stall_only_when_busy_and_silent() {
     let h = Health::new(50); // 50 ms stall threshold
     // starts busy with heartbeat at 0: not yet stalled
