@@ -1,0 +1,249 @@
+//! Online re-fit of the scheduler's dispatch-cost model from the
+//! server's own per-round verify timings.
+//!
+//! The offline path (`repro bench --json` + `--cost-model`) fits
+//! `ms(t) = a + b*t` from a bench dump once, at boot. In production the
+//! curve drifts — thermal state, co-tenancy, backend changes — so the
+//! serving worker feeds every round's `(verify_t, verify_ns)`
+//! observation into EWMA-weighted least-squares moments here, and the
+//! dispatch overhead (`a / b`, in node units) is re-fit every
+//! [`DEFAULT_REFIT_EVERY`] observations. [`Scheduler::effective_cost`]
+//! consumes the live fit for width grouping, and the shed path's
+//! cold-start seed consumes [`OnlineCostModel::predicted_service_secs`].
+//!
+//! Concurrency contract mirrors the rest of the serving metrics: ONE
+//! writer (the worker thread, through the round observer) and any number
+//! of readers. All state is f64-bits-in-`AtomicU64` / plain atomics, so
+//! the record path allocates nothing and readers never block.
+//!
+//! The fit math: EWMA moments `m_x = (1-α)·m_x + α·x` are weighted means
+//! with identical weights across `m_t, m_y, m_tt, m_ty`, so the weighted
+//! least-squares slope `(m_ty − m_t·m_y) / (m_tt − m_t²)` needs no
+//! separate weight bookkeeping — the weights cancel.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use super::scheduler::CostModel;
+
+/// Observations between overhead re-fits.
+pub const DEFAULT_REFIT_EVERY: u64 = 64;
+
+/// EWMA weight for the fit moments and the round/τ estimates: ~1/α
+/// rounds of memory, slow enough to ride out acceptance noise, fast
+/// enough to track thermal/backend drift within a few hundred rounds.
+const ALPHA: f64 = 0.1;
+
+/// Cold-start per-round wall time (seconds) before any observation:
+/// a deliberately conservative host-sim round, so a cold server predicts
+/// non-zero service time and [`should_shed`] can act on an instant
+/// burst right after restart.
+pub const COLD_ROUND_SECS: f64 = 0.010;
+
+/// Cold-start accepted-tokens-per-round (τ) before any observation.
+pub const COLD_TAU: f64 = 3.0;
+
+fn load_f64(a: &AtomicU64) -> f64 {
+    f64::from_bits(a.load(Ordering::Relaxed))
+}
+
+fn store_f64(a: &AtomicU64, v: f64) {
+    a.store(v.to_bits(), Ordering::Relaxed);
+}
+
+fn ewma(a: &AtomicU64, x: f64, first: bool) {
+    let v = if first { x } else { (1.0 - ALPHA) * load_f64(a) + ALPHA * x };
+    store_f64(a, v);
+}
+
+/// Live dispatch-cost model: EWMA least-squares over `(verify_t,
+/// verify_ms)` round observations plus round-time/τ EWMAs for service
+/// prediction. Single-writer (the worker's round observer); lock-free
+/// readers.
+pub struct OnlineCostModel {
+    /// EWMA moments of the (t, ms) stream (f64 bits).
+    m_t: AtomicU64,
+    m_y: AtomicU64,
+    m_tt: AtomicU64,
+    m_ty: AtomicU64,
+    /// Total observations fed in.
+    n_obs: AtomicU64,
+    /// Current fitted dispatch overhead in node units (starts at the
+    /// seed model's; replaced by each successful re-fit).
+    overhead: AtomicUsize,
+    /// Successful re-fits (mirrored to `eagle_cost_refits_total`).
+    refits: AtomicU64,
+    /// How often to re-fit (observations between fits).
+    refit_every: u64,
+    /// EWMA whole-round wall seconds (seeded [`COLD_ROUND_SECS`]).
+    round_secs: AtomicU64,
+    /// EWMA accepted tokens per round (seeded [`COLD_TAU`]).
+    tau: AtomicU64,
+}
+
+impl OnlineCostModel {
+    pub fn new(seed: CostModel) -> OnlineCostModel {
+        OnlineCostModel {
+            m_t: AtomicU64::new(0f64.to_bits()),
+            m_y: AtomicU64::new(0f64.to_bits()),
+            m_tt: AtomicU64::new(0f64.to_bits()),
+            m_ty: AtomicU64::new(0f64.to_bits()),
+            n_obs: AtomicU64::new(0),
+            overhead: AtomicUsize::new(seed.dispatch_overhead),
+            refits: AtomicU64::new(0),
+            refit_every: DEFAULT_REFIT_EVERY,
+            round_secs: AtomicU64::new(COLD_ROUND_SECS.to_bits()),
+            tau: AtomicU64::new(COLD_TAU.to_bits()),
+        }
+    }
+
+    /// Prime the moments from an offline `(t, median_ms)` bench curve
+    /// (see `verify_curve_points`) so the first live fit starts from the
+    /// calibrated line instead of a cold window. Also seeds the
+    /// round-time EWMA from the curve's mean latency.
+    pub fn seed_curve(&self, points: &[(usize, f64)]) {
+        if points.is_empty() {
+            return;
+        }
+        let n = points.len() as f64;
+        store_f64(&self.m_t, points.iter().map(|p| p.0 as f64).sum::<f64>() / n);
+        store_f64(&self.m_y, points.iter().map(|p| p.1).sum::<f64>() / n);
+        store_f64(&self.m_tt, points.iter().map(|p| (p.0 * p.0) as f64).sum::<f64>() / n);
+        store_f64(&self.m_ty, points.iter().map(|p| p.0 as f64 * p.1).sum::<f64>() / n);
+        self.n_obs.store(points.len() as u64, Ordering::Relaxed);
+        store_f64(&self.round_secs, load_f64(&self.m_y) / 1e3);
+        self.refit();
+    }
+
+    /// Feed one round observation. Called from the worker's round
+    /// observer — single writer, atomics only, no allocation.
+    pub fn observe(&self, verify_t: u32, verify_secs: f64, round_secs: f64, accepted: u32) {
+        if verify_t == 0 || !verify_secs.is_finite() || verify_secs <= 0.0 {
+            return;
+        }
+        let n = self.n_obs.fetch_add(1, Ordering::Relaxed);
+        let first = n == 0;
+        let t = verify_t as f64;
+        let y = verify_secs * 1e3; // fit in ms, matching the offline curve
+        ewma(&self.m_t, t, first);
+        ewma(&self.m_y, y, first);
+        ewma(&self.m_tt, t * t, first);
+        ewma(&self.m_ty, t * y, first);
+        if round_secs.is_finite() && round_secs > 0.0 {
+            ewma(&self.round_secs, round_secs, false);
+        }
+        ewma(&self.tau, f64::from(accepted.max(1)), false);
+        if (n + 1) % self.refit_every == 0 {
+            self.refit();
+        }
+    }
+
+    /// Re-fit the dispatch overhead from the current moments. Skipped
+    /// (keeping the previous value) when the observed width spread is
+    /// degenerate or the slope is non-positive — a single-width workload
+    /// cannot identify the intercept.
+    fn refit(&self) {
+        let (m_t, m_y) = (load_f64(&self.m_t), load_f64(&self.m_y));
+        let var = load_f64(&self.m_tt) - m_t * m_t;
+        if var <= 1e-9 {
+            return;
+        }
+        let slope = (load_f64(&self.m_ty) - m_t * m_y) / var;
+        if slope <= 0.0 {
+            return;
+        }
+        let intercept = m_y - slope * m_t;
+        let overhead = (intercept / slope).round().clamp(1.0, 10_000.0) as usize;
+        self.overhead.store(overhead, Ordering::Relaxed);
+        self.refits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The current fit as a [`CostModel`] for the width planner.
+    pub fn current(&self) -> CostModel {
+        CostModel { dispatch_overhead: self.overhead.load(Ordering::Relaxed) }
+    }
+
+    /// Predicted wall seconds to serve one request of `max_tokens`
+    /// output: EWMA round time × predicted rounds (`ceil(tokens / τ)`).
+    /// Non-zero even on a cold server (cold-start constants), which is
+    /// what seeds the shed estimate after drain/restart.
+    pub fn predicted_service_secs(&self, max_tokens: usize) -> f64 {
+        let tau = load_f64(&self.tau).max(1.0);
+        let rounds = (max_tokens.max(1) as f64 / tau).ceil();
+        load_f64(&self.round_secs).max(1e-6) * rounds
+    }
+
+    pub fn dispatch_overhead(&self) -> usize {
+        self.overhead.load(Ordering::Relaxed)
+    }
+
+    pub fn refits(&self) -> u64 {
+        self.refits.load(Ordering::Relaxed)
+    }
+
+    pub fn observations(&self) -> u64 {
+        self.n_obs.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_model_reports_seed_and_predicts_nonzero() {
+        let m = OnlineCostModel::new(CostModel { dispatch_overhead: 7 });
+        assert_eq!(m.current().dispatch_overhead, 7);
+        assert_eq!(m.refits(), 0);
+        let p = m.predicted_service_secs(64);
+        // 64 tokens / τ=3 -> 22 rounds at 10ms
+        assert!((p - 0.22).abs() < 1e-9, "cold prediction {p}");
+    }
+
+    #[test]
+    fn refit_recovers_overhead_from_linear_curve() {
+        // ms(t) = 0.5 + 0.05*t -> overhead 10, same line the offline
+        // fit test uses
+        let m = OnlineCostModel::new(CostModel::default());
+        let widths = [8u32, 16, 32];
+        for i in 0..DEFAULT_REFIT_EVERY * 2 {
+            let t = widths[(i % 3) as usize];
+            let ms = 0.5 + 0.05 * t as f64;
+            m.observe(t, ms / 1e3, 2e-3, 3);
+        }
+        assert!(m.refits() >= 1);
+        assert_eq!(m.current().dispatch_overhead, 10);
+        // round EWMA converged to the 2ms observations
+        let p = m.predicted_service_secs(3);
+        assert!(p > 1e-3 && p < 3e-3, "one-round prediction {p}");
+    }
+
+    #[test]
+    fn single_width_stream_keeps_previous_fit() {
+        let m = OnlineCostModel::new(CostModel { dispatch_overhead: 9 });
+        for _ in 0..DEFAULT_REFIT_EVERY * 2 {
+            m.observe(16, 1.3e-3, 2e-3, 3);
+        }
+        // zero width variance: unidentifiable intercept, fit unchanged
+        assert_eq!(m.current().dispatch_overhead, 9);
+        assert_eq!(m.refits(), 0);
+    }
+
+    #[test]
+    fn seed_curve_primes_fit_before_any_observation() {
+        let m = OnlineCostModel::new(CostModel::default());
+        m.seed_curve(&[(8, 0.9), (16, 1.3), (32, 2.1)]);
+        assert_eq!(m.current().dispatch_overhead, 10);
+        assert_eq!(m.refits(), 1);
+        assert!(m.predicted_service_secs(3) > 0.0);
+    }
+
+    #[test]
+    fn degenerate_observations_ignored() {
+        let m = OnlineCostModel::new(CostModel { dispatch_overhead: 5 });
+        m.observe(0, 1.0, 1.0, 1);
+        m.observe(8, 0.0, 1.0, 1);
+        m.observe(8, f64::NAN, 1.0, 1);
+        assert_eq!(m.observations(), 0);
+        assert_eq!(m.current().dispatch_overhead, 5);
+    }
+}

@@ -9,16 +9,18 @@
 //! and the per-group fits in [`BatchEagleEngine`]).
 
 pub mod batch_engine;
+pub mod costfit;
 pub mod kvslots;
 pub mod queue;
 pub mod request;
 pub mod scheduler;
 
 pub use batch_engine::BatchEagleEngine;
+pub use costfit::OnlineCostModel;
 pub use kvslots::SlotAllocator;
 pub use queue::RequestQueue;
 pub use request::{Method, Request, Response, TreeChoice};
 pub use scheduler::{
-    group_cost, plan_width_groups, plan_width_groups_with, AdmissionPolicy, AdmittedGroup,
-    CostModel, Scheduler, WidthGroup,
+    group_cost, plan_width_groups, plan_width_groups_with, verify_curve_points, AdmissionPolicy,
+    AdmittedGroup, CostModel, Scheduler, WidthGroup,
 };

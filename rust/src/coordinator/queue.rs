@@ -1,20 +1,64 @@
 //! Thread-safe bounded request queue with condvar wakeups and
 //! backpressure (reject-on-full), feeding the scheduler.
+//!
+//! Admission order is switchable at runtime (`POST /admin/sched`):
+//! **FCFS** (arrival order, the default) or **EDF** — earliest effective
+//! deadline first, where a request's effective deadline is
+//! `min(deadline expiry, arrival + aging bound)`. The aging bound makes
+//! starvation impossible: an unbounded- or loose-deadline request
+//! behaves like one due `aging` after arrival, so a stream of tight
+//! fresh arrivals can outrank it for at most the aging window.
+//! Ties break by arrival sequence, so EDF degrades to exactly FCFS when
+//! deadlines are equal or absent (a constant aging bound preserves
+//! arrival order among unbounded requests).
+//!
+//! The EDF view is a lazily-deleted binary-heap index over the same
+//! arrival-ordered entry map the FCFS path pops from — both orders read
+//! one ground-truth set, so flipping the order mid-stream never loses or
+//! duplicates a request. Heap entries whose sequence number is gone from
+//! the map (popped by the FCFS path) are skipped on sight and compacted
+//! away when they outnumber the live set.
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use super::request::Request;
 
-pub struct RequestQueue {
-    inner: Mutex<Inner>,
-    notify: Condvar,
-    pub capacity: usize,
+/// Default EDF aging bound in milliseconds: the longest an unbounded- or
+/// loose-deadline request can be outranked by tighter arrivals before it
+/// reaches the front of the deadline order.
+pub const DEFAULT_AGING_MS: u64 = 5_000;
+
+struct Entry {
+    r: Request,
+    /// Effective EDF key: `min(deadline expiry, arrival + aging)`.
+    key: Instant,
+    /// Real deadline expiry under the queue's default budget (`None` =
+    /// unbounded) — what the scheduler's linger cap looks at.
+    deadline: Option<Instant>,
+    /// Whether the aging bound (not a real deadline) set `key`.
+    aged: bool,
 }
 
 struct Inner {
-    q: VecDeque<Request>,
+    /// Arrival-ordered entries keyed by admission sequence: the FCFS
+    /// view (`pop_first`) and the ground truth the heap indexes.
+    entries: BTreeMap<u64, Entry>,
+    /// EDF index: min-heap of (effective deadline, arrival seq), lazily
+    /// deleted — a popped seq missing from `entries` is stale.
+    heap: BinaryHeap<Reverse<(Instant, u64)>>,
+    next_seq: u64,
     closed: bool,
+}
+
+impl Inner {
+    fn rebuild_heap(&mut self) {
+        self.heap.clear();
+        self.heap.extend(self.entries.iter().map(|(&seq, e)| Reverse((e.key, seq))));
+    }
 }
 
 #[derive(Debug, PartialEq)]
@@ -23,13 +67,81 @@ pub enum PushError {
     Closed,
 }
 
+pub struct RequestQueue {
+    inner: Mutex<Inner>,
+    notify: Condvar,
+    pub capacity: usize,
+    /// Admission order: EDF when set, FCFS otherwise. Runtime-togglable
+    /// (`set_edf_enabled`) so a live A/B never needs a restart.
+    edf_enabled: AtomicBool,
+    /// EDF aging bound (starvation ceiling for unbounded requests).
+    aging: Duration,
+    /// Server default deadline applied when a request carries none
+    /// (mirrors `--default-deadline-ms`; 0 = unbounded).
+    default_deadline_ms: u64,
+    /// Pops whose EDF key came from the aging bound, not a real
+    /// deadline (mirrored to `eagle_edf_aged_pops_total`).
+    aged_pops: AtomicU64,
+    /// EDF pops that deviated from arrival order (mirrored to
+    /// `eagle_edf_reordered_pops_total`). 0 under pure FCFS traffic.
+    reordered_pops: AtomicU64,
+}
+
 impl RequestQueue {
     pub fn new(capacity: usize) -> RequestQueue {
         RequestQueue {
-            inner: Mutex::new(Inner { q: VecDeque::new(), closed: false }),
+            inner: Mutex::new(Inner {
+                entries: BTreeMap::new(),
+                heap: BinaryHeap::new(),
+                next_seq: 0,
+                closed: false,
+            }),
             notify: Condvar::new(),
             capacity,
+            edf_enabled: AtomicBool::new(false),
+            aging: Duration::from_millis(DEFAULT_AGING_MS),
+            default_deadline_ms: 0,
+            aged_pops: AtomicU64::new(0),
+            reordered_pops: AtomicU64::new(0),
         }
+    }
+
+    /// Start in EDF (builder-style; `repro serve --edf`).
+    pub fn with_edf(self, edf: bool) -> RequestQueue {
+        self.edf_enabled.store(edf, Ordering::Relaxed);
+        self
+    }
+
+    /// Set the EDF aging bound (builder-style).
+    pub fn with_aging_ms(mut self, ms: u64) -> RequestQueue {
+        self.aging = Duration::from_millis(ms.max(1));
+        self
+    }
+
+    /// Set the default deadline the EDF key derives from when a request
+    /// carries no explicit budget (builder-style).
+    pub fn with_deadline_default(mut self, ms: u64) -> RequestQueue {
+        self.default_deadline_ms = ms;
+        self
+    }
+
+    /// Flip the admission order at runtime (`POST /admin/sched`).
+    pub fn set_edf_enabled(&self, edf: bool) {
+        self.edf_enabled.store(edf, Ordering::Relaxed);
+    }
+
+    pub fn edf_enabled(&self) -> bool {
+        self.edf_enabled.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime count of pops ordered by the aging bound (EDF only).
+    pub fn aged_pops(&self) -> u64 {
+        self.aged_pops.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime count of pops that deviated from arrival order.
+    pub fn reordered_pops(&self) -> u64 {
+        self.reordered_pops.load(Ordering::Relaxed)
     }
 
     /// Non-blocking push; `Full` signals backpressure to the server (429).
@@ -38,19 +150,58 @@ impl RequestQueue {
         if g.closed {
             return Err(PushError::Closed);
         }
-        if g.q.len() >= self.capacity {
+        if g.entries.len() >= self.capacity {
             return Err(PushError::Full);
         }
-        g.q.push_back(r);
+        let deadline = r.deadline(self.default_deadline_ms).instant();
+        let aging_bound = r.arrival + self.aging;
+        let (key, aged) = match deadline {
+            Some(at) if at <= aging_bound => (at, false),
+            _ => (aging_bound, true),
+        };
+        let seq = g.next_seq;
+        g.next_seq += 1;
+        g.heap.push(Reverse((key, seq)));
+        g.entries.insert(seq, Entry { r, key, deadline, aged });
+        // compact stale heap entries left by FCFS pops before they can
+        // dominate the index (bounded: heap size stays O(live set))
+        if g.heap.len() > g.entries.len() * 2 + 64 {
+            g.rebuild_heap();
+        }
         self.notify.notify_one();
         Ok(())
+    }
+
+    /// Remove and return the next request in the configured order.
+    /// Caller holds the lock.
+    fn take_locked(&self, g: &mut Inner) -> Option<Request> {
+        if self.edf_enabled.load(Ordering::Relaxed) {
+            while let Some(Reverse((_, seq))) = g.heap.pop() {
+                let min_seq = *g.entries.keys().next()?;
+                if let Some(e) = g.entries.remove(&seq) {
+                    if e.aged {
+                        self.aged_pops.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if seq != min_seq {
+                        self.reordered_pops.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Some(e.r);
+                }
+                // stale heap entry (FCFS already popped it): skip
+            }
+        }
+        let (_, e) = g.entries.pop_first()?;
+        if g.entries.is_empty() {
+            g.heap.clear();
+        }
+        Some(e.r)
     }
 
     /// Blocking pop; returns None once closed and drained.
     pub fn pop(&self) -> Option<Request> {
         let mut g = self.inner.lock().unwrap();
         loop {
-            if let Some(r) = g.q.pop_front() {
+            if let Some(r) = self.take_locked(&mut g) {
                 return Some(r);
             }
             if g.closed {
@@ -60,11 +211,18 @@ impl RequestQueue {
         }
     }
 
-    /// Pop up to `n` requests without blocking (batch formation).
+    /// Pop up to `n` requests without blocking (batch formation),
+    /// in the configured admission order.
     pub fn pop_up_to(&self, n: usize) -> Vec<Request> {
         let mut g = self.inner.lock().unwrap();
-        let take = n.min(g.q.len());
-        g.q.drain(..take).collect()
+        let mut out = Vec::with_capacity(n.min(g.entries.len()));
+        while out.len() < n {
+            match self.take_locked(&mut g) {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        out
     }
 
     /// Block until the queue is non-empty, `deadline` passes, or the
@@ -74,7 +232,7 @@ impl RequestQueue {
     pub fn wait_nonempty_until(&self, deadline: std::time::Instant) -> bool {
         let mut g = self.inner.lock().unwrap();
         loop {
-            if !g.q.is_empty() {
+            if !g.entries.is_empty() {
                 return true;
             }
             if g.closed {
@@ -88,8 +246,16 @@ impl RequestQueue {
         }
     }
 
+    /// Expiry of the tightest REAL deadline still queued (aging bounds
+    /// excluded), for the scheduler's deadline-aware linger cap. O(n)
+    /// over the live set — admission-path only, never inside a round.
+    pub fn earliest_deadline(&self) -> Option<Instant> {
+        let g = self.inner.lock().unwrap();
+        g.entries.values().filter_map(|e| e.deadline).min()
+    }
+
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().q.len()
+        self.inner.lock().unwrap().entries.len()
     }
     pub fn is_empty(&self) -> bool {
         self.len() == 0
@@ -108,6 +274,14 @@ mod tests {
 
     fn req(id: u64) -> Request {
         Request::synthetic(id)
+    }
+
+    /// A request with an explicit deadline, back-dated so deadlines can
+    /// be made tight without sleeping.
+    fn req_dl(id: u64, deadline_ms: u64) -> Request {
+        let mut r = req(id);
+        r.deadline_ms = Some(deadline_ms);
+        r
     }
 
     #[test]
@@ -171,5 +345,101 @@ mod tests {
         let b = q.pop_up_to(3);
         assert_eq!(b.len(), 3);
         assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn edf_orders_by_deadline() {
+        let q = RequestQueue::new(10).with_edf(true);
+        q.push(req_dl(1, 5_000)).unwrap(); // loose
+        q.push(req_dl(2, 100)).unwrap(); // tight
+        q.push(req_dl(3, 1_000)).unwrap(); // medium
+        assert_eq!(q.pop().unwrap().id, 2, "tightest deadline first");
+        assert_eq!(q.pop().unwrap().id, 3);
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert!(q.reordered_pops() >= 1, "EDF deviated from arrival order");
+    }
+
+    #[test]
+    fn edf_degrades_to_fcfs_without_deadlines() {
+        let q = RequestQueue::new(10).with_edf(true);
+        for i in 0..5 {
+            q.push(req(i)).unwrap();
+        }
+        let ids: Vec<u64> = q.pop_up_to(5).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4], "all-unbounded EDF = arrival order");
+        assert_eq!(q.reordered_pops(), 0);
+        assert_eq!(q.aged_pops(), 5, "unbounded keys come from the aging bound");
+    }
+
+    #[test]
+    fn edf_fcfs_tiebreak_on_equal_deadlines() {
+        let q = RequestQueue::new(10).with_edf(true);
+        // same explicit budget anchored at (nearly) the same arrival:
+        // arrival-sequence tiebreak keeps FCFS order
+        let base = Instant::now();
+        for i in 0..4 {
+            let mut r = req_dl(i, 60_000);
+            r.arrival = base;
+            q.push(r).unwrap();
+        }
+        let ids: Vec<u64> = q.pop_up_to(4).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn edf_aging_bounds_unbounded_wait() {
+        // an unbounded request whose age exceeds the aging bound
+        // outranks a fresh tight-deadline arrival
+        let q = RequestQueue::new(10).with_edf(true).with_aging_ms(50);
+        let mut old = req(1); // unbounded
+        old.arrival = Instant::now() - Duration::from_millis(200);
+        q.push(old).unwrap();
+        q.push(req_dl(2, 100)).unwrap(); // fresh + tight
+        assert_eq!(q.pop().unwrap().id, 1, "aged request served first");
+        assert!(q.aged_pops() >= 1);
+    }
+
+    #[test]
+    fn runtime_toggle_and_default_deadline() {
+        let q = RequestQueue::new(10).with_deadline_default(60_000);
+        assert!(!q.edf_enabled());
+        q.set_edf_enabled(true);
+        assert!(q.edf_enabled());
+        // default deadline is a real deadline for EDF/linger purposes
+        q.push(req(1)).unwrap();
+        assert!(q.earliest_deadline().is_some(), "server default counts as a deadline");
+        q.pop();
+        // explicit 0 opts out of the default -> unbounded
+        let mut r = req(2);
+        r.deadline_ms = Some(0);
+        q.push(r).unwrap();
+        assert!(q.earliest_deadline().is_none());
+    }
+
+    #[test]
+    fn earliest_deadline_reports_tightest() {
+        let q = RequestQueue::new(10);
+        assert!(q.earliest_deadline().is_none());
+        q.push(req(1)).unwrap(); // unbounded: no deadline contribution
+        assert!(q.earliest_deadline().is_none());
+        q.push(req_dl(2, 5_000)).unwrap();
+        q.push(req_dl(3, 500)).unwrap();
+        let tight = q.earliest_deadline().unwrap();
+        assert!(tight <= Instant::now() + Duration::from_millis(500));
+    }
+
+    #[test]
+    fn order_flip_midstream_loses_nothing() {
+        let q = RequestQueue::new(16);
+        for i in 0..6 {
+            q.push(req_dl(i, 1_000 + i * 100)).unwrap();
+        }
+        // two FCFS pops leave stale heap entries behind
+        assert_eq!(q.pop().unwrap().id, 0);
+        assert_eq!(q.pop().unwrap().id, 1);
+        q.set_edf_enabled(true);
+        let mut ids: Vec<u64> = q.pop_up_to(10).iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![2, 3, 4, 5], "stale heap entries skipped, none lost");
     }
 }

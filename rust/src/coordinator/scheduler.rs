@@ -18,8 +18,10 @@
 //! fits.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use super::costfit::OnlineCostModel;
 use super::queue::RequestQueue;
 use super::request::Request;
 use crate::spec::dyntree::WidthFamily;
@@ -116,18 +118,8 @@ impl CostModel {
         if let Some(cm) = v.get("cost_model") {
             return CostModel::from_json(cm);
         }
-        if let Some(benches) = v.get("benches").and_then(Json::as_arr) {
-            let mut points: Vec<(usize, f64)> = Vec::new();
-            for b in benches {
-                let Some(name) = b.get("name").and_then(Json::as_str) else { continue };
-                let Some(ms) = b.get("median_ms").and_then(Json::as_f64) else { continue };
-                // "exe/verify_t{t}" (optionally with a trailing " (..)" label)
-                let Some(rest) = name.strip_prefix("exe/verify_t") else { continue };
-                let digits: String = rest.chars().take_while(char::is_ascii_digit).collect();
-                if let Ok(t) = digits.parse::<usize>() {
-                    points.push((t, ms));
-                }
-            }
+        if v.get("benches").and_then(Json::as_arr).is_some() {
+            let points = verify_curve_points(v);
             if let Some(overhead) = CostModel::fit_dispatch_overhead(&points) {
                 return Ok(CostModel { dispatch_overhead: overhead });
             }
@@ -146,6 +138,27 @@ impl CostModel {
         let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing cost model: {e}"))?;
         CostModel::from_json(&v)
     }
+}
+
+/// Extract the `(t, median_ms)` verify-latency curve from a bench-dump
+/// JSON value (`{"benches": [{"name": "exe/verify_t{t}", ..}, ..]}`) —
+/// shared by the offline fit above and [`OnlineCostModel`] curve seeding.
+pub fn verify_curve_points(v: &Json) -> Vec<(usize, f64)> {
+    let mut points: Vec<(usize, f64)> = Vec::new();
+    let Some(benches) = v.get("benches").and_then(Json::as_arr) else {
+        return points;
+    };
+    for b in benches {
+        let Some(name) = b.get("name").and_then(Json::as_str) else { continue };
+        let Some(ms) = b.get("median_ms").and_then(Json::as_f64) else { continue };
+        // "exe/verify_t{t}" (optionally with a trailing " (..)" label)
+        let Some(rest) = name.strip_prefix("exe/verify_t") else { continue };
+        let digits: String = rest.chars().take_while(char::is_ascii_digit).collect();
+        if let Ok(t) = digits.parse::<usize>() {
+            points.push((t, ms));
+        }
+    }
+    points
 }
 
 /// One planned sub-batch: the verify width it will execute at and the
@@ -246,13 +259,28 @@ pub struct Scheduler {
     pub max_batch: usize,
     pub linger: Duration,
     pub policy: AdmissionPolicy,
-    /// Dispatch-cost model for width grouping (default, or calibrated
-    /// from a `--cost-model` file).
+    /// Dispatch-cost model for width grouping: the static fallback
+    /// (default, or calibrated from a `--cost-model` file). When
+    /// `live_cost` is set, [`Scheduler::effective_cost`] supersedes it.
     pub cost: CostModel,
+    /// Online re-fit of the dispatch cost from the server's own verify
+    /// timings; when present its current fit drives width grouping.
+    pub live_cost: Option<Arc<OnlineCostModel>>,
+    /// Server default deadline budget (ms, 0 = unbounded) — applied to
+    /// requests without an explicit `deadline_ms` when computing the
+    /// deadline-aware linger cap.
+    pub default_deadline_ms: u64,
+    /// Latest EWMA per-request service-time estimate in seconds (f64
+    /// bits), refreshed by the serving worker; bounds how much of a
+    /// queued request's remaining budget linger may consume.
+    est_service: AtomicU64,
     pub served: AtomicU64,
     pub queued_ns: AtomicU64,
     /// Sub-batches formed (equals admissions under FCFS).
     pub groups_formed: AtomicU64,
+    /// Admissions whose linger window was shortened by a queued or
+    /// admitted deadline (mirrored to `eagle_linger_capped_total`).
+    pub linger_capped: AtomicU64,
 }
 
 impl Scheduler {
@@ -262,9 +290,13 @@ impl Scheduler {
             linger: Duration::from_millis(linger_ms),
             policy: AdmissionPolicy::Fcfs,
             cost: CostModel::default(),
+            live_cost: None,
+            default_deadline_ms: 0,
+            est_service: AtomicU64::new(0f64.to_bits()),
             served: AtomicU64::new(0),
             queued_ns: AtomicU64::new(0),
             groups_formed: AtomicU64::new(0),
+            linger_capped: AtomicU64::new(0),
         }
     }
 
@@ -278,6 +310,36 @@ impl Scheduler {
     pub fn with_cost_model(mut self, cost: CostModel) -> Scheduler {
         self.cost = cost;
         self
+    }
+
+    /// Attach a live cost model (builder-style); its rolling re-fit
+    /// replaces the static `cost` for width-grouping decisions.
+    pub fn with_live_cost(mut self, live: Arc<OnlineCostModel>) -> Scheduler {
+        self.live_cost = Some(live);
+        self
+    }
+
+    /// Set the server default deadline budget (builder-style).
+    pub fn with_deadline_default(mut self, ms: u64) -> Scheduler {
+        self.default_deadline_ms = ms;
+        self
+    }
+
+    /// Publish the latest EWMA service-time estimate (seconds). Called
+    /// by the serving worker between groups; single writer.
+    pub fn note_service_estimate(&self, secs: f64) {
+        self.est_service.store(secs.max(0.0).to_bits(), Ordering::Relaxed);
+    }
+
+    /// Latest published service-time estimate in seconds (0 = unknown).
+    pub fn est_service_secs(&self) -> f64 {
+        f64::from_bits(self.est_service.load(Ordering::Relaxed))
+    }
+
+    /// The cost model width grouping actually plans under: the live
+    /// re-fit when attached, else the static (offline/default) one.
+    pub fn effective_cost(&self) -> CostModel {
+        self.live_cost.as_ref().map(|l| l.current()).unwrap_or(self.cost)
     }
 
     /// Block for the next FCFS batch (waiting on the queue condvar up to
@@ -326,11 +388,12 @@ impl Scheduler {
                         out.push(AdmittedGroup { verify_cap: None, requests: vec![r] });
                     }
                 }
+                let cost = self.effective_cost();
                 for (_, class) in classes {
                     let hints: Vec<usize> =
                         class.iter().map(|r| r.admission_width(family.max())).collect();
                     let mut class: Vec<Option<Request>> = class.into_iter().map(Some).collect();
-                    for g in plan_width_groups_with(&hints, &family, self.max_batch, &self.cost) {
+                    for g in plan_width_groups_with(&hints, &family, self.max_batch, &cost) {
                         let requests: Vec<Request> = g
                             .members
                             .iter()
@@ -346,6 +409,21 @@ impl Scheduler {
         groups
     }
 
+    /// Tightest deadline among the requests already admitted to `batch`
+    /// and those still queued, minus the estimated service time: the
+    /// instant past which lingering for a fuller batch would turn into a
+    /// deadline miss batching could have avoided. `None` = no cap.
+    fn linger_cap(&self, batch: &[Request], q: &RequestQueue) -> Option<Instant> {
+        let mut tight: Option<Instant> = q.earliest_deadline();
+        for r in batch {
+            if let Some(at) = r.deadline(self.default_deadline_ms).instant() {
+                tight = Some(tight.map_or(at, |t| t.min(at)));
+            }
+        }
+        let est = Duration::from_secs_f64(self.est_service_secs().clamp(0.0, 3600.0));
+        tight.map(|t| t.checked_sub(est).unwrap_or_else(Instant::now))
+    }
+
     fn collect(&self, q: &RequestQueue) -> Vec<Request> {
         let first = match q.pop() {
             Some(r) => r,
@@ -353,12 +431,29 @@ impl Scheduler {
         };
         let mut batch = vec![first];
         if self.max_batch > 1 {
-            let deadline = Instant::now() + self.linger;
+            let full = Instant::now() + self.linger;
+            let mut capped = false;
             while batch.len() < self.max_batch {
                 let more = q.pop_up_to(self.max_batch - batch.len());
                 if !more.is_empty() {
                     batch.extend(more);
                     continue;
+                }
+                // deadline-aware linger: never wait past the point where
+                // the tightest queued/admitted deadline could still be
+                // met after the estimated service time
+                let mut deadline = full;
+                if let Some(cap) = self.linger_cap(&batch, q) {
+                    if cap < deadline {
+                        deadline = cap;
+                        if !capped {
+                            capped = true;
+                            self.linger_capped.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                if Instant::now() >= deadline {
+                    break;
                 }
                 // condvar wait (not a sleep-poll tick): woken the moment
                 // a request arrives or the queue closes
@@ -591,6 +686,62 @@ mod tests {
         assert!(r.width_batchable(), "T>0 eagle requests join width groups");
         r.verify_width = Some(16);
         assert!(!r.width_batchable(), "pinned requests stay on the bs=1 path");
+    }
+
+    #[test]
+    fn linger_capped_by_tight_deadline() {
+        // one request with a 20ms budget, linger of 5s: the deadline cap
+        // must cut the wait to ~the budget, not the full linger window
+        let q = RequestQueue::new(16);
+        let mut r = req(1);
+        r.deadline_ms = Some(20);
+        q.push(r).unwrap();
+        let s = Scheduler::new(4, 5_000);
+        let t0 = Instant::now();
+        let b = s.next_batch(&q);
+        assert_eq!(b.len(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(2), "linger not capped by deadline");
+        assert_eq!(s.linger_capped.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn linger_cap_subtracts_service_estimate() {
+        // loose 60s deadline but a 60s service estimate: the cap lands at
+        // ~now, so collect returns immediately instead of lingering
+        let q = RequestQueue::new(16);
+        let mut r = req(1);
+        r.deadline_ms = Some(60_000);
+        q.push(r).unwrap();
+        let s = Scheduler::new(4, 5_000);
+        s.note_service_estimate(60.0);
+        assert!((s.est_service_secs() - 60.0).abs() < 1e-9);
+        let t0 = Instant::now();
+        let b = s.next_batch(&q);
+        assert_eq!(b.len(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(2));
+    }
+
+    #[test]
+    fn unbounded_requests_keep_full_linger_path() {
+        // no deadlines anywhere: linger_cap is None and the batch fills
+        // normally without touching the capped counter
+        let q = RequestQueue::new(16);
+        for i in 0..3 {
+            q.push(req(i)).unwrap();
+        }
+        let s = Scheduler::new(3, 0);
+        let b = s.next_batch(&q);
+        assert_eq!(b.len(), 3);
+        assert_eq!(s.linger_capped.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn effective_cost_prefers_live_fit() {
+        let s = Scheduler::new(1, 0).with_cost_model(CostModel { dispatch_overhead: 3 });
+        assert_eq!(s.effective_cost().dispatch_overhead, 3);
+        let live = Arc::new(OnlineCostModel::new(CostModel { dispatch_overhead: 17 }));
+        let s = s.with_live_cost(live);
+        assert_eq!(s.effective_cost().dispatch_overhead, 17, "live seed wins once attached");
     }
 
     #[test]

@@ -1,0 +1,1003 @@
+//! Closed-loop load harness for a live `repro serve` instance
+//! (`repro loadgen`): arrival processes, a shed-aware retrying client,
+//! offered-vs-goodput level sweeps, an EDF-vs-FCFS comparison with a
+//! losslessness check, and a chaos soak that asserts the server neither
+//! stalls, nor leaks queue depth, nor allocates on the round path while
+//! being driven hard.
+//!
+//! Everything here talks HTTP to a real server process — the harness
+//! exercises the same admission/shedding/deadline/drain code paths a
+//! production client would, not in-process shortcuts. Results are
+//! written as `BENCH_serve.json` (`schema: bench_serve_v1`): one stanza
+//! per offered-load level plus optional `edf_vs_fcfs` and `soak`
+//! stanzas.
+//!
+//! Determinism: all randomness (arrival gaps, request mix, retry
+//! jitter) flows from one seeded xorshift PRNG, so a sweep is
+//! reproducible and — critically — the EDF and FCFS legs of the
+//! comparison replay the *same* pre-generated workload. Combined with
+//! the synthetic worker's content-deterministic output, that turns
+//! "EDF reorders but never changes results" into an assertable
+//! property over live HTTP.
+
+use anyhow::{anyhow, ensure, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::metrics::registry::{parse_exposition, Exposition};
+use crate::server::http::{get, post_json_full};
+use crate::util::json::Json;
+
+// ---- deterministic PRNG ------------------------------------------------
+
+/// xorshift64* — tiny, seedable, good enough for arrival sampling and
+/// retry jitter (the offline crate set has no `rand`).
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng(seed | 1)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Exponential with the given rate (inter-arrival gap for a Poisson
+    /// process at `rate` events/sec).
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        let u = 1.0 - self.next_f64(); // (0, 1]
+        -u.ln() / rate.max(1e-9)
+    }
+}
+
+// ---- arrival processes -------------------------------------------------
+
+/// How request start times are generated.
+#[derive(Debug, Clone)]
+pub enum Arrival {
+    /// `clients` workers each issue the next request the moment the
+    /// previous one completes — offered load tracks capacity.
+    Closed { clients: usize },
+    /// Open-loop Poisson at `rps` requests/sec.
+    Poisson { rps: f64 },
+    /// Markov-modulated on/off: exponentially-distributed phases
+    /// alternating a hot rate and a trickle — the bursty profile the
+    /// shedding EWMA and EDF queue are sized against.
+    Bursty { rps_hi: f64, rps_lo: f64, mean_on_secs: f64, mean_off_secs: f64 },
+    /// Replay recorded inter-arrival gaps (milliseconds, one per line).
+    Replay { gaps_ms: Vec<u64> },
+}
+
+impl Arrival {
+    /// Parse `--arrivals closed|poisson|bursty|replay` with its
+    /// supporting options.
+    pub fn parse(kind: &str, rps: f64, clients: usize, trace: Option<&str>) -> Result<Arrival> {
+        match kind {
+            "closed" => Ok(Arrival::Closed { clients: clients.max(1) }),
+            "poisson" => Ok(Arrival::Poisson { rps }),
+            "bursty" => Ok(Arrival::Bursty {
+                rps_hi: rps * 3.0,
+                rps_lo: rps * 0.2,
+                mean_on_secs: 2.0,
+                mean_off_secs: 3.0,
+            }),
+            "replay" => {
+                let path = trace.ok_or_else(|| anyhow!("--arrivals replay needs --trace PATH"))?;
+                let text = std::fs::read_to_string(path)?;
+                let gaps_ms: Vec<u64> =
+                    text.lines().filter_map(|l| l.trim().parse().ok()).collect();
+                ensure!(!gaps_ms.is_empty(), "trace {path} has no parseable gaps");
+                Ok(Arrival::Replay { gaps_ms })
+            }
+            other => Err(anyhow!("unknown --arrivals '{other}' (closed|poisson|bursty|replay)")),
+        }
+    }
+
+    /// Pre-generate arrival offsets (seconds from start) covering
+    /// `duration_secs`. `None` for closed-loop (no schedule — pacing is
+    /// completion-driven).
+    pub fn schedule(&self, duration_secs: f64, rng: &mut Rng) -> Option<Vec<f64>> {
+        match self {
+            Arrival::Closed { .. } => None,
+            Arrival::Poisson { rps } => {
+                let mut t = 0.0;
+                let mut out = Vec::new();
+                while t < duration_secs {
+                    t += rng.exp(*rps);
+                    if t < duration_secs {
+                        out.push(t);
+                    }
+                }
+                Some(out)
+            }
+            Arrival::Bursty { rps_hi, rps_lo, mean_on_secs, mean_off_secs } => {
+                let mut out = Vec::new();
+                let mut t = 0.0;
+                let mut on = true;
+                while t < duration_secs {
+                    let phase = if on { rng.exp(1.0 / mean_on_secs) } else { rng.exp(1.0 / mean_off_secs) };
+                    let rate = if on { *rps_hi } else { *rps_lo };
+                    let end = (t + phase).min(duration_secs);
+                    let mut at = t;
+                    loop {
+                        at += rng.exp(rate);
+                        if at >= end {
+                            break;
+                        }
+                        out.push(at);
+                    }
+                    t = end;
+                    on = !on;
+                }
+                Some(out)
+            }
+            Arrival::Replay { gaps_ms } => {
+                let mut t = 0.0;
+                let mut out = Vec::new();
+                for gap in gaps_ms.iter().cycle() {
+                    t += *gap as f64 / 1e3;
+                    if t >= duration_secs {
+                        break;
+                    }
+                    out.push(t);
+                }
+                Some(out)
+            }
+        }
+    }
+}
+
+// ---- request mix -------------------------------------------------------
+
+/// The request mix one run draws from: a scenario blend of tight- and
+/// loose-deadline requests at mixed temperatures.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    pub max_tokens: usize,
+    /// Deadline for the tight class (ms from arrival).
+    pub tight_deadline_ms: u64,
+    /// Fraction of requests in the tight class.
+    pub tight_frac: f64,
+    /// Fraction of requests sampled at T=0.8 (the rest greedy).
+    pub sampled_frac: f64,
+}
+
+impl Default for Profile {
+    fn default() -> Profile {
+        Profile { max_tokens: 48, tight_deadline_ms: 300, tight_frac: 0.3, sampled_frac: 0.25 }
+    }
+}
+
+/// One pre-generated request: its arrival offset, serialized body, and
+/// the class bookkeeping the reports slice by. `key` is unique per item
+/// and embedded in the prompt, so responses can be matched across an
+/// EDF-vs-FCFS replay by content.
+#[derive(Debug, Clone)]
+pub struct WorkItem {
+    pub at_secs: f64,
+    pub body: String,
+    pub tight: bool,
+    pub deadline_ms: Option<u64>,
+    pub key: usize,
+}
+
+/// Materialize the workload: one item per scheduled arrival (or
+/// `count` items for closed-loop runs, paced by completion).
+pub fn build_workload(arrivals: &[f64], profile: &Profile, rng: &mut Rng) -> Vec<WorkItem> {
+    arrivals
+        .iter()
+        .enumerate()
+        .map(|(key, &at_secs)| {
+            let tight = rng.next_f64() < profile.tight_frac;
+            let deadline_ms = tight.then_some(profile.tight_deadline_ms);
+            let temperature = if rng.next_f64() < profile.sampled_frac { 0.8 } else { 0.0 };
+            let mut body = format!(
+                "{{\"prompt\":\"load-{key:06}\",\"max_tokens\":{},\"temperature\":{temperature},\"seed\":{}",
+                profile.max_tokens,
+                7 + key as u64,
+            );
+            if let Some(d) = deadline_ms {
+                body.push_str(&format!(",\"deadline_ms\":{d}"));
+            } else {
+                // explicit opt-out so a server-side default deadline
+                // never reclassifies the loose cohort
+                body.push_str(",\"deadline_ms\":0");
+            }
+            body.push('}');
+            WorkItem { at_secs, body, tight, deadline_ms, key }
+        })
+        .collect()
+}
+
+// ---- shed-aware retrying client ----------------------------------------
+
+/// What one request observed end to end, including shed retries.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub key: usize,
+    pub status: u16,
+    pub retries: u32,
+    /// Client-observed wall time across all attempts (ms).
+    pub e2e_ms: f64,
+    pub queue_ms: f64,
+    pub gen_ms: f64,
+    pub tokens: usize,
+    pub tight: bool,
+    pub truncated: bool,
+    pub text: String,
+}
+
+/// Base backoff before the first retry when the server's `Retry-After`
+/// is absent (it never is on our 429s, but transport errors retry too).
+const BACKOFF_BASE_MS: u64 = 50;
+/// Hard cap on any single retry sleep, so a pathological estimate
+/// cannot park a client for the whole run.
+const BACKOFF_CAP_MS: u64 = 2_000;
+/// Transport-level retry budget (connection refused during boot, etc.).
+const MAX_TRANSPORT_RETRIES: u32 = 3;
+
+/// Sleep for a shed retry: honor the server's `Retry-After` estimate,
+/// floor it with exponential backoff on repeated sheds, cap it, and
+/// jitter the result by ×[0.5, 1.5) so synchronized clients decorrelate
+/// instead of re-arriving as the same thundering herd the shed was
+/// protecting against.
+pub fn retry_sleep_ms(retry_after_secs: Option<u64>, attempt: u32, rng: &mut Rng) -> u64 {
+    let backoff = BACKOFF_BASE_MS.saturating_mul(1u64 << attempt.min(10));
+    let base = retry_after_secs.map(|s| s * 1_000).unwrap_or(0).max(backoff).min(BACKOFF_CAP_MS);
+    let jitter = 0.5 + rng.next_f64();
+    (base as f64 * jitter) as u64
+}
+
+/// Issue one request with shed-aware retries. Returns the terminal
+/// sample: the first non-429 response, or the last 429 once the retry
+/// budget (`max_retries`) or the run's stop time is exhausted.
+pub fn send_with_retries(
+    addr: &str,
+    item: &WorkItem,
+    max_retries: u32,
+    stop_at: Instant,
+    rng: &mut Rng,
+) -> Sample {
+    let t0 = Instant::now();
+    let mut attempt = 0u32;
+    let mut transport_errors = 0u32;
+    loop {
+        match post_json_full(addr, "/v1/generate", &item.body) {
+            Ok((429, headers, _)) => {
+                let ra = headers
+                    .iter()
+                    .find(|(k, _)| k == "retry-after")
+                    .and_then(|(_, v)| v.parse().ok());
+                let sleep_ms = retry_sleep_ms(ra, attempt, rng);
+                attempt += 1;
+                let give_up = attempt > max_retries
+                    || Instant::now() + Duration::from_millis(sleep_ms) >= stop_at;
+                if give_up {
+                    return Sample {
+                        key: item.key,
+                        status: 429,
+                        retries: attempt - 1,
+                        e2e_ms: t0.elapsed().as_secs_f64() * 1e3,
+                        queue_ms: 0.0,
+                        gen_ms: 0.0,
+                        tokens: 0,
+                        tight: item.tight,
+                        truncated: false,
+                        text: String::new(),
+                    };
+                }
+                std::thread::sleep(Duration::from_millis(sleep_ms));
+            }
+            Ok((status, _, body)) => {
+                let v = Json::parse(&body).unwrap_or(Json::Null);
+                let f = |k: &str| v.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
+                return Sample {
+                    key: item.key,
+                    status,
+                    retries: attempt,
+                    e2e_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    queue_ms: f("queue_ms"),
+                    gen_ms: f("latency_ms"),
+                    tokens: f("tokens") as usize,
+                    tight: item.tight,
+                    truncated: v.get("truncated").is_some(),
+                    text: v.get("text").and_then(|t| t.as_str()).unwrap_or("").to_string(),
+                };
+            }
+            Err(_) if transport_errors < MAX_TRANSPORT_RETRIES && Instant::now() < stop_at => {
+                transport_errors += 1;
+                std::thread::sleep(Duration::from_millis(
+                    BACKOFF_BASE_MS << transport_errors.min(6),
+                ));
+            }
+            Err(_) => {
+                return Sample {
+                    key: item.key,
+                    status: 0,
+                    retries: attempt,
+                    e2e_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    queue_ms: 0.0,
+                    gen_ms: 0.0,
+                    tokens: 0,
+                    tight: item.tight,
+                    truncated: false,
+                    text: String::new(),
+                };
+            }
+        }
+    }
+}
+
+// ---- workload execution ------------------------------------------------
+
+/// Drive one workload against the server. Open-loop items are paced by
+/// their `at_secs` offsets (one thread per in-flight request);
+/// closed-loop runs `clients` workers that each take the next item as
+/// soon as their previous request resolves. Returns every sample.
+pub fn run_workload(
+    addr: &str,
+    items: &[WorkItem],
+    closed_clients: Option<usize>,
+    max_retries: u32,
+    stop_after: Duration,
+    seed: u64,
+) -> Vec<Sample> {
+    let stop_at = Instant::now() + stop_after;
+    let samples: Mutex<Vec<Sample>> = Mutex::new(Vec::with_capacity(items.len()));
+    std::thread::scope(|scope| {
+        match closed_clients {
+            Some(clients) => {
+                let next = AtomicUsize::new(0);
+                for c in 0..clients {
+                    let (samples, next) = (&samples, &next);
+                    scope.spawn(move || {
+                        let mut rng = Rng::new(seed ^ (0x9e37_79b9_7f4a_7c15u64).wrapping_mul(c as u64 + 1));
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= items.len() || Instant::now() >= stop_at {
+                                break;
+                            }
+                            let s = send_with_retries(addr, &items[i], max_retries, stop_at, &mut rng);
+                            samples.lock().unwrap().push(s);
+                        }
+                    });
+                }
+            }
+            None => {
+                let t0 = Instant::now();
+                for item in items {
+                    let due = t0 + Duration::from_secs_f64(item.at_secs);
+                    let now = Instant::now();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                    if Instant::now() >= stop_at {
+                        break;
+                    }
+                    let samples = &samples;
+                    scope.spawn(move || {
+                        let mut rng = Rng::new(seed ^ (item.key as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+                        let s = send_with_retries(addr, item, max_retries, stop_at, &mut rng);
+                        samples.lock().unwrap().push(s);
+                    });
+                }
+            }
+        }
+    });
+    samples.into_inner().unwrap()
+}
+
+// ---- metrics scraping --------------------------------------------------
+
+/// A parsed `/metrics` snapshot with the accessors the reports need.
+pub struct Snapshot(pub Exposition);
+
+pub fn snapshot(addr: &str) -> Result<Snapshot> {
+    let (code, body) = get(addr, "/metrics")?;
+    ensure!(code == 200, "GET /metrics returned {code}");
+    Ok(Snapshot(parse_exposition(&body)?))
+}
+
+impl Snapshot {
+    /// Sum of all samples of a counter/gauge family (labels summed).
+    pub fn total(&self, family: &str) -> f64 {
+        self.0
+            .family(family)
+            .map(|f| f.samples.iter().map(|s| s.value).sum())
+            .unwrap_or(0.0)
+    }
+
+    /// Cumulative `(le, count)` buckets of a histogram family.
+    pub fn buckets(&self, family: &str) -> Vec<(f64, f64)> {
+        let name = format!("{family}_bucket");
+        self.0
+            .family(family)
+            .map(|f| {
+                f.samples
+                    .iter()
+                    .filter(|s| s.name == name)
+                    .filter_map(|s| {
+                        let le = s.label("le")?;
+                        let le = if le == "+Inf" { f64::INFINITY } else { le.parse().ok()? };
+                        Some((le, s.value))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+/// Estimate a quantile of the observations a histogram family gained
+/// between two snapshots, by linear interpolation inside the first
+/// bucket whose delta-cumulative count crosses the target rank. `None`
+/// when the window saw no observations.
+pub fn hist_delta_quantile(before: &Snapshot, after: &Snapshot, family: &str, q: f64) -> Option<f64> {
+    let b = before.buckets(family);
+    let a = after.buckets(family);
+    if a.is_empty() || a.len() != b.len() {
+        return None;
+    }
+    let delta: Vec<(f64, f64)> =
+        a.iter().zip(&b).map(|(&(le, ac), &(_, bc))| (le, (ac - bc).max(0.0))).collect();
+    let total = delta.last()?.1;
+    if total <= 0.0 {
+        return None;
+    }
+    let rank = q.clamp(0.0, 1.0) * total;
+    let mut lo_le = 0.0;
+    let mut lo_count = 0.0;
+    for &(le, count) in &delta {
+        if count >= rank {
+            if le.is_infinite() {
+                // open-ended top bucket: report its lower edge
+                return Some(lo_le);
+            }
+            let span = (count - lo_count).max(1e-12);
+            return Some(lo_le + (le - lo_le) * ((rank - lo_count) / span).clamp(0.0, 1.0));
+        }
+        lo_le = le;
+        lo_count = count;
+    }
+    delta.last().map(|&(le, _)| if le.is_infinite() { lo_le } else { le })
+}
+
+// ---- percentiles over client samples -----------------------------------
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn sorted_by<F: Fn(&Sample) -> Option<f64>>(samples: &[Sample], f: F) -> Vec<f64> {
+    let mut v: Vec<f64> = samples.iter().filter_map(&f).collect();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v
+}
+
+// ---- level reports -----------------------------------------------------
+
+/// Aggregated result of one offered-load level.
+#[derive(Debug)]
+pub struct LevelReport {
+    pub offered_rps: f64,
+    pub sent: usize,
+    pub ok: usize,
+    pub shed: usize,
+    pub missed: usize,
+    pub errors: usize,
+    pub retries: u64,
+    pub goodput_rps: f64,
+    pub p50_e2e_ms: f64,
+    pub p99_e2e_ms: f64,
+    pub p99_tight_e2e_ms: f64,
+    pub p50_ttft_ms: f64,
+    pub p99_ttft_ms: f64,
+    pub p50_tok_ms: f64,
+    pub p99_tok_ms: f64,
+    pub shed_rate: f64,
+    pub miss_rate: f64,
+}
+
+impl LevelReport {
+    /// Fold client samples + the server's histogram deltas into one
+    /// report. "Good" means 200 and not deadline-truncated; a miss is a
+    /// truncation or a queue-expired 504.
+    pub fn from_samples(
+        offered_rps: f64,
+        wall_secs: f64,
+        samples: &[Sample],
+        before: &Snapshot,
+        after: &Snapshot,
+    ) -> LevelReport {
+        let sent = samples.len();
+        let ok = samples.iter().filter(|s| s.status == 200 && !s.truncated).count();
+        let shed = samples.iter().filter(|s| s.status == 429).count();
+        let missed =
+            samples.iter().filter(|s| s.truncated || s.status == 504).count();
+        let errors =
+            samples.iter().filter(|s| !matches!(s.status, 200 | 429 | 504)).count();
+        let retries = samples.iter().map(|s| s.retries as u64).sum();
+        let e2e = sorted_by(samples, |s| (s.status == 200).then_some(s.e2e_ms));
+        let tight_e2e =
+            sorted_by(samples, |s| (s.status == 200 && s.tight).then_some(s.e2e_ms));
+        let tok = sorted_by(samples, |s| {
+            (s.status == 200 && s.tokens > 0).then(|| s.gen_ms / s.tokens as f64)
+        });
+        let ttft = |q| hist_delta_quantile(before, after, "eagle_ttft_seconds", q)
+            .map(|s| s * 1e3)
+            .unwrap_or(0.0);
+        LevelReport {
+            offered_rps,
+            sent,
+            ok,
+            shed,
+            missed,
+            errors,
+            retries,
+            goodput_rps: ok as f64 / wall_secs.max(1e-9),
+            p50_e2e_ms: percentile(&e2e, 0.50),
+            p99_e2e_ms: percentile(&e2e, 0.99),
+            p99_tight_e2e_ms: percentile(&tight_e2e, 0.99),
+            p50_ttft_ms: ttft(0.50),
+            p99_ttft_ms: ttft(0.99),
+            p50_tok_ms: percentile(&tok, 0.50),
+            p99_tok_ms: percentile(&tok, 0.99),
+            shed_rate: shed as f64 / sent.max(1) as f64,
+            miss_rate: missed as f64 / sent.max(1) as f64,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("offered_rps", Json::Num(self.offered_rps)),
+            ("sent", Json::Num(self.sent as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("missed", Json::Num(self.missed as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("goodput_rps", Json::Num(self.goodput_rps)),
+            ("p50_e2e_ms", Json::Num(self.p50_e2e_ms)),
+            ("p99_e2e_ms", Json::Num(self.p99_e2e_ms)),
+            ("p99_tight_e2e_ms", Json::Num(self.p99_tight_e2e_ms)),
+            ("p50_ttft_ms", Json::Num(self.p50_ttft_ms)),
+            ("p99_ttft_ms", Json::Num(self.p99_ttft_ms)),
+            ("p50_token_ms", Json::Num(self.p50_tok_ms)),
+            ("p99_token_ms", Json::Num(self.p99_tok_ms)),
+            ("shed_rate", Json::Num(self.shed_rate)),
+            ("miss_rate", Json::Num(self.miss_rate)),
+        ])
+    }
+}
+
+// ---- drain / quiescence helper -----------------------------------------
+
+/// Wait until the server's queue is empty and nothing is in flight, so
+/// back-to-back runs (level sweep, EDF/FCFS legs) don't bleed load into
+/// each other. Errors out rather than hanging forever.
+pub fn wait_quiescent(addr: &str, timeout: Duration) -> Result<()> {
+    let give_up = Instant::now() + timeout;
+    loop {
+        let s = snapshot(addr)?;
+        if s.total("eagle_queue_depth") == 0.0 && s.total("eagle_inflight_lanes") == 0.0 {
+            return Ok(());
+        }
+        ensure!(Instant::now() < give_up, "server did not quiesce within {timeout:?}");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+// ---- top-level runs ----------------------------------------------------
+
+/// Configuration for one `repro loadgen` invocation.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    pub addr: String,
+    pub arrivals: Arrival,
+    pub duration_secs: f64,
+    /// Offered-rate multipliers for the sweep (each level runs the
+    /// arrival process at `rps * level`).
+    pub levels: Vec<f64>,
+    pub rps: f64,
+    pub profile: Profile,
+    pub max_retries: u32,
+    pub seed: u64,
+    pub soak: bool,
+    pub compare_edf: bool,
+    pub out: std::path::PathBuf,
+}
+
+/// One offered-load level: generate the workload, bracket it with
+/// metric snapshots, run it, and wait for the server to quiesce.
+pub fn run_level(cfg: &LoadgenConfig, level: f64) -> Result<LevelReport> {
+    let rps = cfg.rps * level;
+    let mut rng = Rng::new(cfg.seed.wrapping_add((level * 1e3) as u64));
+    let arrivals = match &cfg.arrivals {
+        Arrival::Closed { .. } => Arrival::Closed { clients: (level.ceil() as usize).max(1) },
+        Arrival::Poisson { .. } => Arrival::Poisson { rps },
+        Arrival::Bursty { mean_on_secs, mean_off_secs, .. } => Arrival::Bursty {
+            rps_hi: rps * 3.0,
+            rps_lo: rps * 0.2,
+            mean_on_secs: *mean_on_secs,
+            mean_off_secs: *mean_off_secs,
+        },
+        replay @ Arrival::Replay { .. } => replay.clone(),
+    };
+    let (items, closed) = match &arrivals {
+        Arrival::Closed { clients } => {
+            // enough items that the clients are never starved
+            let n = (rps.max(1.0) * cfg.duration_secs * 4.0) as usize + *clients;
+            let offsets: Vec<f64> = (0..n).map(|_| 0.0).collect();
+            (build_workload(&offsets, &cfg.profile, &mut rng), Some(*clients))
+        }
+        _ => {
+            let offsets = arrivals.schedule(cfg.duration_secs, &mut rng).unwrap_or_default();
+            (build_workload(&offsets, &cfg.profile, &mut rng), None)
+        }
+    };
+    let offered = items.len() as f64 / cfg.duration_secs.max(1e-9);
+    let before = snapshot(&cfg.addr)?;
+    let t0 = Instant::now();
+    let samples = run_workload(
+        &cfg.addr,
+        &items,
+        closed,
+        cfg.max_retries,
+        Duration::from_secs_f64(cfg.duration_secs + 30.0),
+        cfg.seed,
+    );
+    let wall = t0.elapsed().as_secs_f64();
+    wait_quiescent(&cfg.addr, Duration::from_secs(30))?;
+    let after = snapshot(&cfg.addr)?;
+    Ok(LevelReport::from_samples(offered, wall, &samples, &before, &after))
+}
+
+/// EDF-vs-FCFS comparison: replay ONE pre-generated workload under each
+/// admission order and check (a) losslessness — every request completed
+/// untruncated in both legs produced byte-identical text — and (b) the
+/// tight-deadline p99 under EDF against FCFS.
+pub fn compare_edf(cfg: &LoadgenConfig) -> Result<Json> {
+    let mut rng = Rng::new(cfg.seed ^ 0xedf0_edf0);
+    let offsets = Arrival::Poisson { rps: cfg.rps }
+        .schedule(cfg.duration_secs, &mut rng)
+        .unwrap_or_default();
+    let items = build_workload(&offsets, &cfg.profile, &mut rng);
+    let mut legs: Vec<(&str, Vec<Sample>)> = Vec::new();
+    for order in ["fcfs", "edf"] {
+        let (code, _, _) = post_json_full(
+            &cfg.addr,
+            "/admin/sched",
+            &format!("{{\"order\":\"{order}\"}}"),
+        )?;
+        ensure!(code == 200, "POST /admin/sched {order} returned {code}");
+        let samples = run_workload(
+            &cfg.addr,
+            &items,
+            None,
+            cfg.max_retries,
+            Duration::from_secs_f64(cfg.duration_secs + 30.0),
+            cfg.seed,
+        );
+        wait_quiescent(&cfg.addr, Duration::from_secs(30))?;
+        legs.push((order, samples));
+    }
+    let (_, fcfs) = &legs[0];
+    let (_, edf) = &legs[1];
+    // losslessness over the intersection of clean completions
+    let mut mismatches = 0usize;
+    let mut compared = 0usize;
+    for f in fcfs.iter().filter(|s| s.status == 200 && !s.truncated) {
+        if let Some(e) = edf.iter().find(|s| s.key == f.key && s.status == 200 && !s.truncated) {
+            compared += 1;
+            if e.text != f.text {
+                mismatches += 1;
+            }
+        }
+    }
+    ensure!(
+        mismatches == 0,
+        "EDF reordering changed output text on {mismatches}/{compared} requests"
+    );
+    let p99 = |samples: &[Sample], tight: bool| {
+        percentile(
+            &sorted_by(samples, |s| (s.status == 200 && s.tight == tight).then_some(s.e2e_ms)),
+            0.99,
+        )
+    };
+    let fcfs_tight = p99(fcfs, true);
+    let edf_tight = p99(edf, true);
+    eprintln!(
+        "[loadgen] edf-vs-fcfs: tight p99 {edf_tight:.1} ms (edf) vs {fcfs_tight:.1} ms (fcfs); \
+         {compared} outputs compared, 0 mismatches"
+    );
+    Ok(Json::obj(vec![
+        ("compared_outputs", Json::Num(compared as f64)),
+        ("output_mismatches", Json::Num(mismatches as f64)),
+        ("fcfs_p99_tight_e2e_ms", Json::Num(fcfs_tight)),
+        ("edf_p99_tight_e2e_ms", Json::Num(edf_tight)),
+        ("fcfs_p99_loose_e2e_ms", Json::Num(p99(fcfs, false))),
+        ("edf_p99_loose_e2e_ms", Json::Num(p99(edf, false))),
+        ("edf_improved_tight_p99", Json::Bool(edf_tight < fcfs_tight)),
+    ]))
+}
+
+/// Chaos soak: drive the bursty profile for the whole duration while a
+/// monitor thread polls `/healthz` and the queue-depth gauge. Asserts
+/// the server never reports a stall, the queue drains back to empty
+/// after the load stops (no hung slots, no monotonic growth), and the
+/// round path allocated zero bytes across the entire soak.
+pub fn soak(cfg: &LoadgenConfig) -> Result<Json> {
+    let mut rng = Rng::new(cfg.seed ^ 0x50a6_50a6);
+    let offsets = cfg.arrivals.schedule(cfg.duration_secs, &mut rng).unwrap_or_default();
+    let items = build_workload(&offsets, &cfg.profile, &mut rng);
+    let before = snapshot(&cfg.addr)?;
+    let health_failures = AtomicUsize::new(0);
+    let max_depth = Mutex::new(0.0f64);
+    let load_done = std::sync::atomic::AtomicBool::new(false);
+    let samples = std::thread::scope(|scope| {
+        scope.spawn(|| {
+            while !load_done.load(Ordering::Relaxed) {
+                match get(&cfg.addr, "/healthz") {
+                    Ok((200, _)) => {}
+                    _ => {
+                        health_failures.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                if let Ok(s) = snapshot(&cfg.addr) {
+                    let d = s.total("eagle_queue_depth");
+                    let mut m = max_depth.lock().unwrap();
+                    if d > *m {
+                        *m = d;
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(500));
+            }
+        });
+        let samples = run_workload(
+            &cfg.addr,
+            &items,
+            None,
+            cfg.max_retries,
+            Duration::from_secs_f64(cfg.duration_secs + 25.0),
+            cfg.seed,
+        );
+        load_done.store(true, Ordering::Relaxed);
+        samples
+    });
+    wait_quiescent(&cfg.addr, Duration::from_secs(30))?;
+    let after = snapshot(&cfg.addr)?;
+    let alloc_delta =
+        after.total("eagle_round_alloc_bytes_total") - before.total("eagle_round_alloc_bytes_total");
+    let panics =
+        after.total("eagle_worker_panics_total") - before.total("eagle_worker_panics_total");
+    let answered = samples.iter().filter(|s| s.status != 0).count();
+    let hung = samples.len() - answered;
+    let failures = health_failures.load(Ordering::Relaxed);
+    ensure!(failures == 0, "soak: /healthz failed {failures} times (stall or crash)");
+    ensure!(hung == 0, "soak: {hung} requests got no response (hung slots)");
+    ensure!(alloc_delta == 0.0, "soak: round path allocated {alloc_delta} bytes");
+    let miss_rate = samples.iter().filter(|s| s.truncated || s.status == 504).count() as f64
+        / samples.len().max(1) as f64;
+    eprintln!(
+        "[loadgen] soak ok: {} requests, {panics} supervised panics, queue drained, \
+         0 alloc bytes, miss rate {miss_rate:.3}",
+        samples.len()
+    );
+    Ok(Json::obj(vec![
+        ("requests", Json::Num(samples.len() as f64)),
+        ("healthz_failures", Json::Num(failures as f64)),
+        ("hung", Json::Num(hung as f64)),
+        ("supervised_panics", Json::Num(panics)),
+        ("max_queue_depth", Json::Num(*max_depth.lock().unwrap())),
+        ("round_alloc_bytes_delta", Json::Num(alloc_delta)),
+        ("miss_rate", Json::Num(miss_rate)),
+        ("drained", Json::Bool(true)),
+    ]))
+}
+
+/// Entry point behind `repro loadgen`: level sweep, then the optional
+/// comparison/soak stanzas, then `BENCH_serve.json`.
+pub fn run(cfg: &LoadgenConfig) -> Result<()> {
+    let mut stanzas: Vec<(&str, Json)> = vec![
+        ("schema", Json::Str("bench_serve_v1".into())),
+        (
+            "config",
+            Json::obj(vec![
+                ("addr", Json::Str(cfg.addr.clone())),
+                ("arrivals", Json::Str(format!("{:?}", cfg.arrivals))),
+                ("duration_secs", Json::Num(cfg.duration_secs)),
+                ("base_rps", Json::Num(cfg.rps)),
+                ("max_tokens", Json::Num(cfg.profile.max_tokens as f64)),
+                ("tight_deadline_ms", Json::Num(cfg.profile.tight_deadline_ms as f64)),
+                ("tight_frac", Json::Num(cfg.profile.tight_frac)),
+                ("seed", Json::Num(cfg.seed as f64)),
+            ]),
+        ),
+    ];
+    if cfg.soak {
+        stanzas.push(("soak", soak(cfg)?));
+    } else {
+        let mut levels = Vec::new();
+        for &level in &cfg.levels {
+            eprintln!("[loadgen] level x{level} ({} rps offered) ...", cfg.rps * level);
+            let rep = run_level(cfg, level)?;
+            eprintln!(
+                "[loadgen]   offered {:.1} rps -> goodput {:.1} rps, p99 e2e {:.0} ms, \
+                 shed {:.1}%, miss {:.1}%",
+                rep.offered_rps,
+                rep.goodput_rps,
+                rep.p99_e2e_ms,
+                rep.shed_rate * 1e2,
+                rep.miss_rate * 1e2,
+            );
+            levels.push(rep.to_json());
+        }
+        stanzas.push(("levels", Json::Arr(levels)));
+        if cfg.compare_edf {
+            stanzas.push(("edf_vs_fcfs", compare_edf(cfg)?));
+        }
+    }
+    let out = Json::obj(stanzas);
+    std::fs::write(&cfg.out, out.to_string())?;
+    println!("wrote {}", cfg.out.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic_and_uniformish() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_eq!(xs, ys);
+        let mean: f64 = (0..10_000).map(|_| a.next_f64()).sum::<f64>() / 1e4;
+        assert!((mean - 0.5).abs() < 0.02, "uniform mean {mean}");
+    }
+
+    #[test]
+    fn poisson_schedule_matches_rate() {
+        let mut rng = Rng::new(7);
+        let sched = Arrival::Poisson { rps: 50.0 }.schedule(20.0, &mut rng).unwrap();
+        // 1000 expected arrivals; 10% tolerance at this sample size
+        assert!((sched.len() as f64 - 1000.0).abs() < 100.0, "n = {}", sched.len());
+        assert!(sched.windows(2).all(|w| w[0] <= w[1]), "sorted offsets");
+        assert!(*sched.last().unwrap() < 20.0);
+    }
+
+    #[test]
+    fn bursty_schedule_alternates_phases() {
+        let mut rng = Rng::new(11);
+        let a = Arrival::Bursty { rps_hi: 100.0, rps_lo: 1.0, mean_on_secs: 1.0, mean_off_secs: 1.0 };
+        let sched = a.schedule(30.0, &mut rng).unwrap();
+        // far fewer than 30s of pure rps_hi, far more than pure rps_lo
+        assert!(sched.len() > 100 && sched.len() < 2_900, "n = {}", sched.len());
+    }
+
+    #[test]
+    fn replay_schedule_wraps_trace() {
+        let mut rng = Rng::new(1);
+        let a = Arrival::Replay { gaps_ms: vec![100, 400] };
+        let sched = a.schedule(2.0, &mut rng).unwrap();
+        // gaps cycle 0.1, 0.4, 0.1, 0.4 -> 0.1, 0.5, 0.6, 1.0, 1.1, 1.5, 1.6
+        assert_eq!(sched.len(), 7);
+        assert!((sched[1] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn workload_mix_and_keys_are_deterministic() {
+        let profile = Profile { tight_frac: 0.5, ..Profile::default() };
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let offsets: Vec<f64> = (0..200).map(|i| i as f64 * 0.01).collect();
+        let w1 = build_workload(&offsets, &profile, &mut r1);
+        let w2 = build_workload(&offsets, &profile, &mut r2);
+        assert_eq!(w1.len(), 200);
+        for (a, b) in w1.iter().zip(&w2) {
+            assert_eq!(a.body, b.body);
+        }
+        let tight = w1.iter().filter(|i| i.tight).count();
+        assert!(tight > 60 && tight < 140, "tight mix {tight}/200");
+        // tight items carry the deadline; loose items explicitly opt out
+        assert!(w1.iter().all(|i| i.body.contains("deadline_ms")));
+        // keys unique (losslessness matching relies on it)
+        let mut keys: Vec<usize> = w1.iter().map(|i| i.key).collect();
+        keys.dedup();
+        assert_eq!(keys.len(), 200);
+    }
+
+    #[test]
+    fn retry_sleep_honors_server_estimate_with_jitter() {
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            // server said 1s: jittered into [500, 1500)
+            let ms = retry_sleep_ms(Some(1), 0, &mut rng);
+            assert!((500..1500).contains(&ms), "jittered sleep {ms}");
+        }
+        // no header: exponential backoff floor
+        let ms = retry_sleep_ms(None, 3, &mut rng);
+        assert!(ms >= 200, "backoff floor {ms}");
+        // cap: a huge estimate cannot park the client
+        let ms = retry_sleep_ms(Some(3_600), 0, &mut rng);
+        assert!(ms < 3_000, "capped sleep {ms}");
+    }
+
+    fn snap(text: &str) -> Snapshot {
+        Snapshot(parse_exposition(text).unwrap())
+    }
+
+    #[test]
+    fn hist_delta_quantile_interpolates_new_observations() {
+        let before = snap(
+            "# TYPE t histogram\n\
+             t_bucket{le=\"0.1\"} 10\nt_bucket{le=\"1\"} 10\nt_bucket{le=\"+Inf\"} 10\n\
+             t_sum 1\nt_count 10\n",
+        );
+        let after = snap(
+            "# TYPE t histogram\n\
+             t_bucket{le=\"0.1\"} 10\nt_bucket{le=\"1\"} 110\nt_bucket{le=\"+Inf\"} 110\n\
+             t_sum 51\nt_count 110\n",
+        );
+        // all 100 new observations landed in (0.1, 1]
+        let p50 = hist_delta_quantile(&before, &after, "t", 0.5).unwrap();
+        assert!(p50 > 0.1 && p50 <= 1.0, "p50 {p50}");
+        // the old 10 observations don't drag the estimate down
+        let p01 = hist_delta_quantile(&before, &after, "t", 0.01).unwrap();
+        assert!(p01 > 0.1, "p01 {p01} polluted by pre-window counts");
+        // empty window: no estimate rather than a stale one
+        assert!(hist_delta_quantile(&before, &before, "t", 0.5).is_none());
+    }
+
+    #[test]
+    fn level_report_classifies_outcomes() {
+        let mk = |status, truncated, tight| Sample {
+            key: 0,
+            status,
+            retries: 1,
+            e2e_ms: 100.0,
+            queue_ms: 10.0,
+            gen_ms: 80.0,
+            tokens: 40,
+            tight,
+            truncated,
+            text: String::new(),
+        };
+        let samples = vec![
+            mk(200, false, true),
+            mk(200, false, false),
+            mk(200, true, false), // deadline-truncated partial
+            mk(429, false, false),
+            mk(504, false, true),
+        ];
+        let empty = snap("# TYPE t histogram\nt_bucket{le=\"+Inf\"} 0\nt_sum 0\nt_count 0\n");
+        let rep = LevelReport::from_samples(5.0, 1.0, &samples, &empty, &empty);
+        assert_eq!(rep.sent, 5);
+        assert_eq!(rep.ok, 2);
+        assert_eq!(rep.shed, 1);
+        assert_eq!(rep.missed, 2); // truncation + 504
+        assert_eq!(rep.retries, 5);
+        assert!((rep.shed_rate - 0.2).abs() < 1e-9);
+        assert!((rep.miss_rate - 0.4).abs() < 1e-9);
+        assert!((rep.goodput_rps - 2.0).abs() < 1e-9);
+        let j = rep.to_json().to_string();
+        assert!(j.contains("\"goodput_rps\""));
+    }
+}

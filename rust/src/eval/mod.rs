@@ -3,6 +3,7 @@
 //! bench support behind `repro bench --json` (S23).
 
 pub mod bench;
+pub mod loadgen;
 pub mod runner;
 pub mod tables;
 pub mod workload;

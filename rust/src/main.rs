@@ -3,7 +3,11 @@
 //!   repro serve   [--addr 127.0.0.1:8085] [--model toy-s] [--queue 64]
 //!                 [--tree static|dynamic] [--verify-width auto|N]
 //!                 [--batch N] [--linger MS] [--width-grouping]
-//!                 [--cost-model PATH]
+//!                 [--cost-model PATH] [--edf] [--aging-ms MS]
+//!                 [--synthetic [--round-us US]]
+//!   repro loadgen [--addr 127.0.0.1:8085] [--arrivals poisson|bursty|closed|replay]
+//!                 [--rps F] [--levels 0.5,1,2] [--duration SECS]
+//!                 [--soak SECS] [--compare-edf] [--out BENCH_serve.json]
 //!   repro generate --prompt "..." [--model toy-s] [--method eagle]
 //!                  [--max-tokens 64] [--temperature 0] [--seed 7]
 //!                  [--tree static|dynamic] [--draft-depth N] [--frontier K]
@@ -30,11 +34,12 @@ use eagle_serve::util::cli::Args;
 fn main() {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["all", "verbose", "no-adapt", "width-grouping", "raw"],
+        &["all", "verbose", "no-adapt", "width-grouping", "raw", "synthetic", "edf", "compare-edf"],
     );
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
         "serve" => serve(&args),
+        "loadgen" => loadgen(&args),
         "generate" => generate(&args),
         "eval" => eval(&args),
         "bench" => bench(&args),
@@ -56,7 +61,7 @@ fn main() {
 fn print_help() {
     println!(
         "repro — EAGLE speculative-decoding serving framework\n\n\
-         USAGE: repro <serve|generate|eval|bench|profile|selftest> [options]\n\n\
+         USAGE: repro <serve|loadgen|generate|eval|bench|profile|selftest> [options]\n\n\
          serve     --addr HOST:PORT --model NAME --queue N --tree static|dynamic\n\
          \u{20}          --verify-width auto|N   (auto = cheapest lowered verify_t{{t}} per round)\n\
          \u{20}          --batch N --linger MS   (admission batch size + fill deadline;\n\
@@ -77,6 +82,18 @@ fn print_help() {
          \u{20}           POST /admin/drain stops admission and exits after the queue empties)\n\
          \u{20}          --inject SPEC           (fault-injection sites, fault-inject builds\n\
          \u{20}           only: site=panic|degenerate|delay(MS)[@N],… — see docs/robustness.md)\n\
+         \u{20}          --edf [--aging-ms MS]   (earliest-deadline-first admission with a\n\
+         \u{20}           starvation aging bound; POST /admin/sched flips at runtime)\n\
+         \u{20}          --synthetic [--round-us US]  (no-artifact simulated engine: timed\n\
+         \u{20}           rounds, deterministic output — the loadgen/CI target)\n\
+         loadgen   --addr HOST:PORT --arrivals poisson|bursty|closed|replay --rps F\n\
+         \u{20}          --levels 0.5,1,2 --duration SECS   (offered-load sweep ->\n\
+         \u{20}           BENCH_serve.json: goodput, p50/p99 TTFT + per-token, shed/miss rates)\n\
+         \u{20}          --compare-edf           (replay one workload under FCFS then EDF;\n\
+         \u{20}           asserts identical outputs + reports tight-deadline p99)\n\
+         \u{20}          --soak SECS             (chaos soak: bursty load, /healthz watchdog,\n\
+         \u{20}           asserts drain, zero hung slots, zero round-path alloc)\n\
+         \u{20}          --tight-deadline-ms MS --tight-frac F --max-retries N --seed N\n\
          generate  --prompt TEXT --model NAME --method eagle|eagle-chain|vanilla|medusa|lookahead|classic-spec\n\
          \u{20}          --max-tokens N --temperature F --seed N\n\
          \u{20}          --tree static|dynamic [--draft-depth N --frontier K --branch B --no-adapt]\n\
@@ -136,9 +153,56 @@ fn serve(args: &Args) -> Result<()> {
         stall_ms: args.u64_or("stall-ms", 30_000),
         default_deadline_ms: args.u64_or("default-deadline-ms", 0),
         inject: args.get("inject").map(String::from),
+        synthetic: args.has("synthetic"),
+        synthetic_round_us: args.u64_or("round-us", 2_000),
+        edf: args.has("edf"),
+        aging_ms: args.u64_or("aging-ms", eagle_serve::coordinator::queue::DEFAULT_AGING_MS),
         ..eagle_serve::server::ServeConfig::new(addr, model, &artifacts_dir())
     };
     eagle_serve::server::serve(cfg)
+}
+
+/// Closed/open-loop load harness against a live server; writes
+/// `BENCH_serve.json`. `--soak SECS` switches to the chaos-soak
+/// assertions instead of the level sweep.
+fn loadgen(args: &Args) -> Result<()> {
+    use eagle_serve::eval::loadgen as lg;
+    let soak_secs = args.get("soak").and_then(|s| s.parse::<f64>().ok());
+    let soak = soak_secs.is_some() || args.has("soak");
+    let duration = soak_secs.unwrap_or_else(|| args.f64_or("duration", 10.0));
+    let rps = args.f64_or("rps", 20.0);
+    let arrivals = lg::Arrival::parse(
+        args.get_or("arrivals", "poisson"),
+        rps,
+        args.usize_or("clients", 4),
+        args.get("trace"),
+    )?;
+    let levels: Vec<f64> = args
+        .get_or("levels", "0.5,1,2")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    anyhow::ensure!(!levels.is_empty(), "--levels parsed to nothing");
+    let profile = lg::Profile {
+        max_tokens: args.usize_or("max-tokens", 48),
+        tight_deadline_ms: args.u64_or("tight-deadline-ms", 300),
+        tight_frac: args.f64_or("tight-frac", 0.3),
+        sampled_frac: args.f64_or("sampled-frac", 0.25),
+    };
+    let cfg = lg::LoadgenConfig {
+        addr: args.get_or("addr", "127.0.0.1:8085").to_string(),
+        arrivals,
+        duration_secs: duration,
+        levels,
+        rps,
+        profile,
+        max_retries: args.u64_or("max-retries", 4) as u32,
+        seed: args.u64_or("seed", 7),
+        soak,
+        compare_edf: args.has("compare-edf"),
+        out: std::path::PathBuf::from(args.get_or("out", "BENCH_serve.json")),
+    };
+    lg::run(&cfg)
 }
 
 /// Host (and, with artifacts, per-width exe) micro-benches; `--json`

@@ -4,19 +4,29 @@
 //!
 //! The ring is pre-sized at startup (capacity rounded up to a power of
 //! two) and every slot field is an `AtomicU64`, so recording an event
-//! is one `fetch_add` to claim a slot plus ten relaxed stores — no
-//! locks, no heap traffic — which keeps the observer inside the S22
+//! is one `fetch_add` to claim a slot plus eleven relaxed/release stores
+//! — no locks, no heap traffic — which keeps the observer inside the S22
 //! zero-allocation round guarantee (asserted under `count-alloc` in
 //! `rust/tests/count_alloc.rs`). The HTTP route thread snapshots the
-//! ring for `GET /trace` with [`FlightRecorder::to_json`]; a reader
-//! racing the single writer can observe a torn in-flight event at the
-//! ring head, which is acceptable for a diagnostic flight recorder and
-//! documented in `docs/observability.md`.
+//! ring for `GET /trace` with [`FlightRecorder::to_json`].
+//!
+//! Each slot carries a seqlock-style generation word so a reader racing
+//! the single writer never surfaces a half-written event: the writer
+//! bumps the generation to odd before its data stores and to even after
+//! (release-fenced), and the reader accepts a slot only when it sees the
+//! same even generation on both sides of its data loads (acquire-
+//! fenced). A slot that stays torn across a few retries — the writer is
+//! mid-store right now — is skipped and counted
+//! ([`FlightRecorder::torn_skipped`]) rather than served. Generation 0
+//! means never written, so pre-warm slots are invisible too.
 //!
 //! `repro trace` fetches that JSON from a running server and prints the
 //! per-lane round summary produced by [`summarize`].
 
-use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::atomic::{
+    fence, AtomicU64,
+    Ordering::{Acquire, Relaxed, Release},
+};
 
 use crate::util::json::Json;
 
@@ -123,12 +133,38 @@ pub trait RoundObserver: Sync {
 }
 
 struct Slot {
+    /// Seqlock generation: 0 = never written, odd = write in progress,
+    /// even = stable. Single writer, so plain loads/stores suffice on
+    /// the writer side.
+    seq: AtomicU64,
     f: [AtomicU64; FIELDS],
 }
 
 impl Slot {
     fn empty() -> Slot {
-        Slot { f: std::array::from_fn(|_| AtomicU64::new(0)) }
+        Slot { seq: AtomicU64::new(0), f: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    /// Seqlock read: accept only a stable generation observed unchanged
+    /// across the data loads. `None` = never written, or still torn
+    /// after a few retries (writer mid-store).
+    fn read(&self) -> Option<RoundEvent> {
+        for _ in 0..4 {
+            let s1 = self.seq.load(Acquire);
+            if s1 == 0 {
+                return None;
+            }
+            if s1 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let f: [u64; FIELDS] = std::array::from_fn(|i| self.f[i].load(Relaxed));
+            fence(Acquire);
+            if self.seq.load(Relaxed) == s1 {
+                return Some(RoundEvent::unpack(f));
+            }
+        }
+        None
     }
 }
 
@@ -138,6 +174,8 @@ pub struct FlightRecorder {
     mask: u64,
     head: AtomicU64,
     slots: Box<[Slot]>,
+    /// Snapshot reads that skipped a slot still torn after retries.
+    torn: AtomicU64,
 }
 
 impl FlightRecorder {
@@ -149,6 +187,7 @@ impl FlightRecorder {
             mask: (cap - 1) as u64,
             head: AtomicU64::new(0),
             slots: (0..cap).map(|_| Slot::empty()).collect(),
+            torn: AtomicU64::new(0),
         }
     }
 
@@ -161,36 +200,51 @@ impl FlightRecorder {
         self.head.load(Relaxed)
     }
 
-    /// Record one event: claim a slot, store ten words. Allocation-free.
+    /// Record one event: claim a slot, bump its seqlock generation to
+    /// odd, store ten words, close the generation. Allocation-free.
     #[inline]
     pub fn record(&self, ev: &RoundEvent) {
         let slot = &self.slots[(self.head.fetch_add(1, Relaxed) & self.mask) as usize];
+        let s = slot.seq.load(Relaxed); // single writer: plain read-modify
+        slot.seq.store(s.wrapping_add(1), Relaxed);
+        fence(Release);
         for (dst, src) in slot.f.iter().zip(ev.pack()) {
             dst.store(src, Relaxed);
         }
+        slot.seq.store(s.wrapping_add(2), Release);
     }
 
-    /// Snapshot the retained events, oldest first (allocates; dump path
-    /// only).
+    /// Snapshot reads that skipped a torn slot (monotonic).
+    pub fn torn_skipped(&self) -> u64 {
+        self.torn.load(Relaxed)
+    }
+
+    /// Snapshot the retained events, oldest first, skipping any slot the
+    /// writer holds torn at read time (allocates; dump path only).
     pub fn events(&self) -> Vec<RoundEvent> {
         let head = self.head.load(Relaxed);
         let cap = self.slots.len() as u64;
         let n = head.min(cap);
         let mut out = Vec::with_capacity(n as usize);
         for k in (head - n)..head {
-            let slot = &self.slots[(k & self.mask) as usize];
-            out.push(RoundEvent::unpack(std::array::from_fn(|i| slot.f[i].load(Relaxed))));
+            match self.slots[(k & self.mask) as usize].read() {
+                Some(ev) => out.push(ev),
+                None => {
+                    self.torn.fetch_add(1, Relaxed);
+                }
+            }
         }
         out
     }
 
-    /// The `GET /trace` payload: capacity, total recorded, retained
-    /// events oldest-first.
+    /// The `GET /trace` payload: capacity, total recorded, torn-skip
+    /// count, retained events oldest-first.
     pub fn to_json(&self) -> Json {
         let events: Vec<Json> = self.events().iter().map(|e| e.to_json()).collect();
         Json::obj(vec![
             ("capacity", Json::Num(self.capacity() as f64)),
             ("recorded", Json::Num(self.recorded() as f64)),
+            ("torn_skipped", Json::Num(self.torn_skipped() as f64)),
             ("events", Json::Arr(events)),
         ])
     }
@@ -309,6 +363,67 @@ mod tests {
         // also parses from serialized text
         let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
         assert_eq!(events_from_json(&parsed), back);
+    }
+
+    #[test]
+    fn torn_slot_is_skipped_not_served() {
+        let r = FlightRecorder::new(8);
+        for i in 0..3 {
+            r.record(&ev(0, i));
+        }
+        // simulate the writer parked mid-store in slot 1: odd generation
+        let s = r.slots[1].seq.load(Relaxed);
+        r.slots[1].seq.store(s | 1, Relaxed);
+        let evs = r.events();
+        assert_eq!(evs.len(), 2, "torn slot must not be served");
+        assert_eq!(evs.iter().map(|e| e.round).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(r.torn_skipped(), 1);
+        // restore: an even generation is served again
+        r.slots[1].seq.store(s, Relaxed);
+        assert_eq!(r.events().len(), 3);
+    }
+
+    #[test]
+    fn concurrent_snapshots_see_only_whole_events() {
+        // hammer the ring from a writer while snapshotting: every event
+        // served must be internally consistent (all fields derived from
+        // the same round), proving no torn read escapes
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Arc;
+        let r = Arc::new(FlightRecorder::new(8));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (r2, stop2) = (r.clone(), stop.clone());
+        let writer = std::thread::spawn(move || {
+            let mut i: u32 = 0;
+            while !stop2.load(Relaxed) {
+                r2.record(&RoundEvent {
+                    lane: i,
+                    round: i,
+                    tree_nodes: i,
+                    verify_t: i,
+                    draft_w: i,
+                    accepted: i,
+                    draft_ns: i as u64,
+                    verify_ns: i as u64,
+                    host_ns: i as u64,
+                    alloc_bytes: i as u64,
+                });
+                i = i.wrapping_add(1);
+            }
+        });
+        for _ in 0..200 {
+            for e in r.events() {
+                assert!(
+                    e.round == e.lane
+                        && e.round == e.tree_nodes
+                        && e.round as u64 == e.verify_ns
+                        && e.round as u64 == e.alloc_bytes,
+                    "torn event escaped the seqlock: {e:?}"
+                );
+            }
+        }
+        stop.store(true, Relaxed);
+        writer.join().unwrap();
     }
 
     #[test]

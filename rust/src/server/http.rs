@@ -127,6 +127,18 @@ impl HttpResponse {
 
 /// Minimal blocking HTTP client for examples/tests (talks to our server).
 pub fn post_json(addr: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    let (code, _, body) = post_json_full(addr, path, body)?;
+    Ok((code, body))
+}
+
+/// [`post_json`] variant that also returns the response headers
+/// (lowercased names) — the loadgen retry client reads `retry-after`
+/// off shed 429s.
+pub fn post_json_full(
+    addr: &str,
+    path: &str,
+    body: &str,
+) -> Result<(u16, Vec<(String, String)>, String)> {
     use std::io::Write;
     let mut s = TcpStream::connect(addr)?;
     s.set_read_timeout(Some(std::time::Duration::from_secs(300)))?;
@@ -135,7 +147,7 @@ pub fn post_json(addr: &str, path: &str, body: &str) -> Result<(u16, String)> {
         "POST {path} HTTP/1.1\r\nhost: {addr}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
         body.len()
     )?;
-    read_response(&mut s)
+    read_response_full(&mut s)
 }
 
 pub fn get(addr: &str, path: &str) -> Result<(u16, String)> {
@@ -147,6 +159,11 @@ pub fn get(addr: &str, path: &str) -> Result<(u16, String)> {
 }
 
 fn read_response(s: &mut TcpStream) -> Result<(u16, String)> {
+    let (code, _, body) = read_response_full(s)?;
+    Ok((code, body))
+}
+
+fn read_response_full(s: &mut TcpStream) -> Result<(u16, Vec<(String, String)>, String)> {
     let mut buf = Vec::new();
     s.read_to_end(&mut buf)?;
     let text = String::from_utf8_lossy(&buf);
@@ -155,8 +172,18 @@ fn read_response(s: &mut TcpStream) -> Result<(u16, String)> {
         .nth(1)
         .and_then(|c| c.parse().ok())
         .ok_or_else(|| anyhow!("bad response"))?;
-    let body = text.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
-    Ok((code, body))
+    let mut split = text.splitn(2, "\r\n\r\n");
+    let head = split.next().unwrap_or("");
+    let body = split.next().unwrap_or("").to_string();
+    let headers = head
+        .lines()
+        .skip(1) // status line
+        .filter_map(|h| {
+            h.split_once(':')
+                .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+        })
+        .collect();
+    Ok((code, headers, body))
 }
 
 #[cfg(test)]
@@ -178,6 +205,26 @@ mod tests {
         assert_eq!(HttpResponse::status(400, "x").code, 400);
         assert_eq!(HttpResponse::status(500, "x").reason, "Internal Server Error");
         assert_eq!(HttpResponse::status(504, "x").reason, "Gateway Timeout");
+    }
+
+    #[test]
+    fn post_json_full_returns_headers() {
+        // loopback server that answers every request with a shed 429
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            let (mut c, _) = listener.accept().unwrap();
+            let _ = HttpRequest::read_from(&mut c).unwrap();
+            let resp = HttpResponse::status(429, "shed").with_header("Retry-After", "7");
+            use std::io::Write;
+            c.write_all(&resp.to_bytes()).unwrap();
+        });
+        let (code, headers, body) = post_json_full(&addr, "/v1/generate", "{}").unwrap();
+        h.join().unwrap();
+        assert_eq!(code, 429);
+        assert!(body.contains("shed"));
+        let ra = headers.iter().find(|(k, _)| k == "retry-after").map(|(_, v)| v.as_str());
+        assert_eq!(ra, Some("7"), "headers: {headers:?}");
     }
 
     #[test]

@@ -53,7 +53,19 @@
 //! `--default-deadline-ms`) drop queue-expired work with 504 and
 //! truncate in-flight generations to partial text; admission sheds with
 //! 429 + Retry-After when queue depth x EWMA service time exceeds the
-//! request's budget.
+//! request's budget (seeded from the live cost model's prediction on a
+//! cold server, so a burst right after restart still sheds).
+//!
+//! SLA-aware scheduling (`docs/load.md`, `docs/robustness.md`): the
+//! queue's admission order is runtime-switchable between FCFS and EDF
+//! (`--edf` / `POST /admin/sched`), the scheduler's linger is capped by
+//! the tightest queued deadline minus the estimated service time, and
+//! the dispatch cost model is re-fit online from the server's own
+//! per-round verify timings ([`OnlineCostModel`]). `--synthetic` swaps
+//! the engine worker for a deterministic simulated one so the whole
+//! stack — queue, scheduler, shedding, drain, metrics, failpoints — runs
+//! end to end without artifacts (the `repro loadgen` harness and the CI
+//! smoke drive exactly this mode).
 
 pub mod http;
 
@@ -61,13 +73,13 @@ use anyhow::Result;
 use std::io::Write as _;
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 use crate::coordinator::request::{Method, Request, Response, TreeChoice};
 use crate::coordinator::{
-    queue::PushError, AdmissionPolicy, AdmittedGroup, BatchEagleEngine, CostModel, RequestQueue,
-    Scheduler,
+    queue::PushError, verify_curve_points, AdmissionPolicy, AdmittedGroup, BatchEagleEngine,
+    CostModel, OnlineCostModel, RequestQueue, Scheduler,
 };
 use crate::eval::runner::{Runner, RunSpec};
 use crate::metrics::registry::{
@@ -108,6 +120,13 @@ pub struct ServerMetrics {
     c_rounds: CounterId,
     c_gen_ns: CounterId,
     c_phase: [CounterId; 5],
+    c_round_alloc: CounterId,
+    // scheduler counters mirrored at scrape time (the queue/scheduler
+    // own the live atomics; see `refresh_sched`)
+    c_edf_aged: CounterId,
+    c_edf_reordered: CounterId,
+    c_linger_capped: CounterId,
+    c_cost_refits: CounterId,
     // gauges
     g_queue_depth: GaugeId,
     g_inflight: GaugeId,
@@ -121,6 +140,9 @@ pub struct ServerMetrics {
     g_deadline_miss_rate: GaugeId,
     g_worker_restarts: GaugeId,
     g_est_service: GaugeId,
+    g_edf_enabled: GaugeId,
+    g_cost_overhead: GaugeId,
+    g_predicted_service: GaugeId,
     /// EWMA of per-request engine service time (seconds, f64 bits;
     /// 0.0 = no generation served yet). Single writer (the worker, via
     /// [`ServerMetrics::record_gen`]); route threads read it for the
@@ -195,6 +217,27 @@ impl ServerMetrics {
                 1e-9,
             )
         });
+        let c_round_alloc = b.counter(
+            "eagle_round_alloc_bytes_total",
+            "Host round-state capacity growth across all rounds (0-drift once warm — the \
+             soak harness asserts it).",
+        );
+        let c_edf_aged = b.counter(
+            "eagle_edf_aged_pops_total",
+            "EDF pops ordered by the aging bound rather than a real deadline.",
+        );
+        let c_edf_reordered = b.counter(
+            "eagle_edf_reordered_pops_total",
+            "EDF pops that deviated from arrival (FCFS) order.",
+        );
+        let c_linger_capped = b.counter(
+            "eagle_linger_capped_total",
+            "Admissions whose linger window was shortened by a queued deadline.",
+        );
+        let c_cost_refits = b.counter(
+            "eagle_cost_refits_total",
+            "Successful online re-fits of the dispatch cost model.",
+        );
         let g_queue_depth = b.gauge("eagle_queue_depth", "Requests waiting in the queue.");
         let g_inflight = b.gauge("eagle_inflight_lanes", "Lanes currently generating.");
         let g_last_group =
@@ -221,6 +264,18 @@ impl ServerMetrics {
         let g_est_service = b.gauge(
             "eagle_est_service_seconds",
             "EWMA per-request engine service time feeding the shed decision.",
+        );
+        let g_edf_enabled = b.gauge(
+            "eagle_edf_enabled",
+            "1 when admission order is EDF, 0 for FCFS (runtime-togglable).",
+        );
+        let g_cost_overhead = b.gauge(
+            "eagle_cost_dispatch_overhead",
+            "Current dispatch overhead (node units) of the live cost model.",
+        );
+        let g_predicted_service = b.gauge(
+            "eagle_predicted_service_seconds",
+            "Live cost model's predicted service time for a default (64-token) request.",
         );
         let h_request = b.histogram(
             "eagle_request_seconds",
@@ -264,6 +319,11 @@ impl ServerMetrics {
             c_rounds,
             c_gen_ns,
             c_phase,
+            c_round_alloc,
+            c_edf_aged,
+            c_edf_reordered,
+            c_linger_capped,
+            c_cost_refits,
             g_queue_depth,
             g_inflight,
             g_last_group,
@@ -276,6 +336,9 @@ impl ServerMetrics {
             g_deadline_miss_rate,
             g_worker_restarts,
             g_est_service,
+            g_edf_enabled,
+            g_cost_overhead,
+            g_predicted_service,
             ewma_service: AtomicU64::new(0),
             h_request,
             h_ttft,
@@ -400,6 +463,39 @@ impl ServerMetrics {
         self.registry.set_gauge(self.g_est_service, self.est_service_secs());
     }
 
+    /// Raise a mirrored counter to `target` (the live atomic owned by
+    /// the queue/scheduler/cost model). Counters are monotonic, so the
+    /// mirror only ever adds the delta; concurrent scrapes can split the
+    /// delta between them but never double-count past the target.
+    fn mirror_counter(&self, id: CounterId, target: u64) {
+        let cur = self.registry.counter_value(id);
+        if target > cur {
+            self.registry.add(id, target - cur);
+        }
+    }
+
+    /// Refresh the scheduling metric families from the live atomics at
+    /// scrape time: EDF order/counters from the queue, the linger cap
+    /// counter from the scheduler, and the online cost-model fit.
+    pub fn refresh_sched(
+        &self,
+        queue: &RequestQueue,
+        sched: Option<&Scheduler>,
+        live: Option<&OnlineCostModel>,
+    ) {
+        self.registry.set_gauge(self.g_edf_enabled, queue.edf_enabled() as u64 as f64);
+        self.mirror_counter(self.c_edf_aged, queue.aged_pops());
+        self.mirror_counter(self.c_edf_reordered, queue.reordered_pops());
+        if let Some(s) = sched {
+            self.mirror_counter(self.c_linger_capped, s.linger_capped.load(Ordering::Relaxed));
+        }
+        if let Some(l) = live {
+            self.mirror_counter(self.c_cost_refits, l.refits());
+            self.registry.set_gauge(self.g_cost_overhead, l.dispatch_overhead() as f64);
+            self.registry.set_gauge(self.g_predicted_service, l.predicted_service_secs(64));
+        }
+    }
+
     /// Refresh the derived gauges from the worker's running aggregate
     /// (τ, mean widths, latency percentiles from the sorted cache).
     pub fn update_aggregate(&self, agg: &Aggregate) {
@@ -423,6 +519,7 @@ impl RoundObserver for ServerMetrics {
     fn on_round(&self, ev: &RoundEvent) {
         self.trace.record(ev);
         self.registry.inc(self.c_rounds);
+        self.registry.add(self.c_round_alloc, ev.alloc_bytes);
         self.registry.observe(self.h_round_accepted, ev.accepted as f64);
         self.registry.observe(self.h_round_verify, ev.verify_ns as f64 / 1e9);
     }
@@ -512,17 +609,29 @@ impl Health {
 }
 
 /// The observer the worker attaches to both engines: fans each round
-/// event into [`ServerMetrics`] (ring + histograms) and beats the
-/// [`Health`] heartbeat. Stores and fetch-adds only.
+/// event into [`ServerMetrics`] (ring + histograms), feeds the online
+/// cost model's moments, and beats the [`Health`] heartbeat. Stores and
+/// fetch-adds only.
 struct WorkerObserver<'a> {
     metrics: &'a ServerMetrics,
     health: &'a Health,
+    /// Live dispatch-cost re-fit; every round's `(verify_t, verify_ns)`
+    /// lands in its EWMA moments (atomics only).
+    live: Option<&'a OnlineCostModel>,
 }
 
 impl RoundObserver for WorkerObserver<'_> {
     #[inline]
     fn on_round(&self, ev: &RoundEvent) {
         self.metrics.on_round(ev);
+        if let Some(live) = self.live {
+            live.observe(
+                ev.verify_t,
+                ev.verify_ns as f64 / 1e9,
+                (ev.draft_ns + ev.verify_ns + ev.host_ns) as f64 / 1e9,
+                ev.accepted,
+            );
+        }
         self.health.beat();
     }
 }
@@ -562,6 +671,20 @@ pub struct ServeConfig {
     /// startup. Only honored in `fault-inject` builds; ignored (with a
     /// warning) otherwise.
     pub inject: Option<String>,
+    /// Serve with the synthetic worker (`--synthetic`): no artifacts,
+    /// deterministic simulated rounds through the real scheduling/
+    /// shedding/drain/metrics stack. The load harness and CI smoke
+    /// drive this mode.
+    pub synthetic: bool,
+    /// Simulated round wall time in microseconds (`--round-us`),
+    /// synthetic mode only.
+    pub synthetic_round_us: u64,
+    /// Start with EDF admission ordering (`--edf`); runtime-togglable
+    /// via `POST /admin/sched` either way.
+    pub edf: bool,
+    /// EDF aging bound in milliseconds (`--aging-ms`): the longest an
+    /// unbounded-deadline request can be outranked by tighter arrivals.
+    pub aging_ms: u64,
 }
 
 impl ServeConfig {
@@ -581,6 +704,10 @@ impl ServeConfig {
             stall_ms: 30_000,
             default_deadline_ms: 0,
             inject: None,
+            synthetic: false,
+            synthetic_round_us: 2_000,
+            edf: false,
+            aging_ms: crate::coordinator::queue::DEFAULT_AGING_MS,
         }
     }
 }
@@ -674,11 +801,13 @@ fn queue_expired_response(id: u64, queue_ms: f64) -> Response {
 }
 
 /// Shed decision for an incoming request: estimated queue wait — depth ×
-/// EWMA per-request service time — against the request's remaining
-/// deadline budget. Returns the estimated wait in seconds (the client's
-/// `Retry-After` hint) when the request cannot make its deadline.
-/// Unbounded requests are never deadline-shed, and a cold server
-/// (no service history, estimate 0) sheds nothing.
+/// per-request service time — against the request's remaining deadline
+/// budget. Returns the estimated wait in seconds when the request cannot
+/// make its deadline. Unbounded requests are never deadline-shed. The
+/// caller supplies a non-zero estimate even on a cold server (the EWMA
+/// seeded from the live cost model's prediction — see the shed block in
+/// `route`), so a burst right after drain/restart sheds instead of
+/// queueing doomed work.
 pub fn should_shed(
     queue_depth: usize,
     est_service_secs: f64,
@@ -687,6 +816,15 @@ pub fn should_shed(
     let budget = budget_secs?;
     let est_wait = queue_depth as f64 * est_service_secs;
     (est_wait > budget).then_some(est_wait)
+}
+
+/// `Retry-After` seconds for a shed 429: how long until the predicted
+/// queue wait decays back under the request's budget, assuming the
+/// queue drains in real time (one second of wall clock retires one
+/// second of estimated work). Never less than 1 s — the header is an
+/// integer and "retry immediately" would re-shed.
+pub fn retry_after_secs(est_wait_secs: f64, budget_secs: f64) -> u64 {
+    ((est_wait_secs - budget_secs.max(0.0)).ceil() as u64).max(1)
 }
 
 /// Consecutive supervised failures before a request fingerprint is
@@ -777,6 +915,9 @@ pub fn worker_loop(
         // idle while blocking on the queue, so an empty server never
         // reads as a stall
         health.set_busy(false);
+        // publish the EWMA service estimate so the next collect()'s
+        // deadline-aware linger cap reflects the latest service times
+        sched.note_service_estimate(metrics.est_service_secs());
         let groups = sched.next_groups(queue);
         health.set_busy(true);
         if groups.is_empty() {
@@ -865,6 +1006,7 @@ struct EngineWorker<'a> {
     pending: &'a PendingMap,
     metrics: &'a ServerMetrics,
     health: &'a Health,
+    live: Option<&'a OnlineCostModel>,
     pool: ScratchPool,
     agg: Aggregate,
 }
@@ -883,6 +1025,7 @@ impl GroupWorker for EngineWorker<'_> {
             self.pending,
             self.metrics,
             self.health,
+            self.live,
             &mut self.pool,
             &mut self.agg,
         );
@@ -906,24 +1049,102 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
         #[cfg(not(feature = "fault-inject"))]
         eprintln!("[server] --inject '{spec}' ignored: built without the fault-inject feature");
     }
-    let queue = Arc::new(RequestQueue::new(cfg.queue_cap));
+    let queue = Arc::new(
+        RequestQueue::new(cfg.queue_cap)
+            .with_edf(cfg.edf)
+            .with_aging_ms(cfg.aging_ms)
+            .with_deadline_default(cfg.default_deadline_ms),
+    );
     let metrics = Arc::new(ServerMetrics::new(cfg.trace_cap));
     let health = Arc::new(Health::new(cfg.stall_ms));
     let pending: Arc<PendingMap> = Arc::new(Mutex::new(std::collections::HashMap::new()));
 
+    // static cost model (offline calibration file, or the default) —
+    // the seed and fallback for the online re-fit
+    let static_cost = match &cfg.cost_model {
+        Some(path) => match CostModel::load(path) {
+            Ok(cm) => {
+                eprintln!(
+                    "[server] cost model calibrated: dispatch overhead {} node units (from {})",
+                    cm.dispatch_overhead,
+                    path.display()
+                );
+                cm
+            }
+            Err(e) => {
+                eprintln!("[server] cost model load failed ({e}); using default");
+                CostModel::default()
+            }
+        },
+        None => CostModel::default(),
+    };
+    // the live re-fit: primed from the calibration file's verify curve
+    // when one is present, then updated from the server's own rounds
+    let live = Arc::new(OnlineCostModel::new(static_cost));
+    if let Some(path) = &cfg.cost_model {
+        if let Some(v) = std::fs::read_to_string(path).ok().and_then(|t| Json::parse(&t).ok()) {
+            let points = verify_curve_points(&v);
+            if !points.is_empty() {
+                live.seed_curve(&points);
+            }
+        }
+    }
+    // the worker constructs the Scheduler (the real one needs manifest
+    // constants from the artifact load); route threads get it through
+    // this slot for scrape-time counter mirroring
+    let sched_slot: Arc<OnceLock<Arc<Scheduler>>> = Arc::new(OnceLock::new());
+
     // ---- inference worker --------------------------------------------------
-    let worker = {
+    let worker = if cfg.synthetic {
+        let sched = Arc::new(
+            Scheduler::new(cfg.max_batch, cfg.linger_ms)
+                .with_policy(if cfg.width_grouping {
+                    AdmissionPolicy::WidthGrouped { verify_widths: vec![8, 16, 32], max_t: 32 }
+                } else {
+                    AdmissionPolicy::Fcfs
+                })
+                .with_cost_model(static_cost)
+                .with_live_cost(live.clone())
+                .with_deadline_default(cfg.default_deadline_ms),
+        );
+        let _ = sched_slot.set(sched.clone());
         let queue = queue.clone();
         let pending = pending.clone();
         let metrics = metrics.clone();
         let health = health.clone();
+        let live = live.clone();
+        let round_us = cfg.synthetic_round_us;
+        let default_deadline_ms = cfg.default_deadline_ms;
+        std::thread::Builder::new().name("inference".into()).spawn(move || {
+            eprintln!(
+                "[server] synthetic worker: {round_us} us rounds, tau {SYNTH_TAU} \
+                 (no artifacts; admission: {})",
+                if queue.edf_enabled() { "edf" } else { "fcfs" }
+            );
+            let mut w = SyntheticWorker {
+                round_us,
+                default_deadline_ms,
+                pending: &pending,
+                metrics: &metrics,
+                health: &health,
+                live: Some(&live),
+                agg: Aggregate::new(),
+            };
+            worker_loop(&queue, &sched, &pending, &metrics, &health, default_deadline_ms, &mut w);
+        })?
+    } else {
+        let queue = queue.clone();
+        let pending = pending.clone();
+        let metrics = metrics.clone();
+        let health = health.clone();
+        let live = live.clone();
+        let sched_slot = sched_slot.clone();
         let artifacts = cfg.artifacts.clone();
         let model = cfg.model.clone();
         let default_tree = cfg.default_tree.clone();
         let default_width = cfg.default_width;
         let (max_batch, linger_ms) = (cfg.max_batch, cfg.linger_ms);
         let grouping = cfg.width_grouping;
-        let cost_model = cfg.cost_model.clone();
         let default_deadline_ms = cfg.default_deadline_ms;
         std::thread::Builder::new().name("inference".into()).spawn(move || {
             let runner = Runner::new(&artifacts).expect("loading artifacts");
@@ -949,26 +1170,14 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
             } else {
                 AdmissionPolicy::Fcfs
             };
-            let cost = match &cost_model {
-                Some(path) => match CostModel::load(path) {
-                    Ok(cm) => {
-                        eprintln!(
-                            "[server] cost model calibrated: dispatch overhead {} node units \
-                             (from {})",
-                            cm.dispatch_overhead,
-                            path.display()
-                        );
-                        cm
-                    }
-                    Err(e) => {
-                        eprintln!("[server] cost model load failed ({e}); using default");
-                        CostModel::default()
-                    }
-                },
-                None => CostModel::default(),
-            };
-            let sched =
-                Scheduler::new(max_batch, linger_ms).with_policy(policy).with_cost_model(cost);
+            let sched = Arc::new(
+                Scheduler::new(max_batch, linger_ms)
+                    .with_policy(policy)
+                    .with_cost_model(static_cost)
+                    .with_live_cost(live.clone())
+                    .with_deadline_default(default_deadline_ms),
+            );
+            let _ = sched_slot.set(sched.clone());
             // one warm scratch pool for the worker's lifetime: batched
             // groups reuse per-lane round state across admissions; the
             // running aggregate feeds the τ / width / percentile gauges
@@ -983,6 +1192,7 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
                 pending: &pending,
                 metrics: &metrics,
                 health: &health,
+                live: Some(&live),
                 pool: ScratchPool::new(),
                 agg: Aggregate::new(),
             };
@@ -1008,15 +1218,24 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
                 let metrics = metrics.clone();
                 let health = health.clone();
                 let next_id = next_id.clone();
+                let sched_slot = sched_slot.clone();
+                let live = live.clone();
                 std::thread::spawn(move || {
                     let req = match HttpRequest::read_from(&mut stream) {
                         Ok(r) => r,
                         Err(_) => return,
                     };
-                    let resp = route(
-                        &req, &queue, &pending, &metrics, &health, &next_id,
+                    let ctx = RouteCtx {
+                        queue: &queue,
+                        pending: &pending,
+                        metrics: &metrics,
+                        health: &health,
+                        next_id: &next_id,
                         default_deadline_ms,
-                    );
+                        sched: &sched_slot,
+                        live: &live,
+                    };
+                    let resp = route(&req, &ctx);
                     let _ = stream.write_all(resp.to_bytes().as_slice());
                 });
             }
@@ -1063,12 +1282,13 @@ fn run_group(
     pending: &PendingMap,
     metrics: &ServerMetrics,
     health: &Health,
+    live: Option<&OnlineCostModel>,
     pool: &mut ScratchPool,
     agg: &mut Aggregate,
 ) {
     let reqs = &group.requests;
     let b = reqs.len();
-    let observer = WorkerObserver { metrics, health };
+    let observer = WorkerObserver { metrics, health, live };
     // the batched engine can take the group iff it is a multi-lane group
     // of batchable requests (`Request::width_batchable`, the same
     // predicate the scheduler groups by), the server is not pinned to a
@@ -1214,15 +1434,174 @@ fn run_group(
     metrics.set_inflight(0);
 }
 
-fn route(
-    req: &HttpRequest,
-    queue: &RequestQueue,
-    pending: &PendingMap,
-    metrics: &ServerMetrics,
-    health: &Health,
-    next_id: &AtomicU64,
+/// Accepted tokens per simulated round in synthetic mode.
+const SYNTH_TAU: usize = 3;
+/// Verify widths the synthetic worker cycles through, so the online
+/// cost-model re-fit sees a spread of `(t, verify_ns)` observations.
+const SYNTH_WIDTHS: [u32; 3] = [8, 16, 32];
+
+/// A [`GroupWorker`] that simulates the engine's round loop without
+/// artifacts: timed rounds through the real `verify` failpoint site,
+/// full metrics/trace/deadline behavior, and deterministic output — a
+/// pure function of request content (fingerprint-seeded token stream),
+/// independent of batch composition and admission order. That purity is
+/// what lets the load harness assert losslessness across an EDF-vs-FCFS
+/// reordering. `repro serve --synthetic` runs the whole admission/
+/// scheduling/shedding/drain stack on it, on any machine.
+///
+/// Simulated verify time is linear in the dispatched width with an
+/// intercept/slope ratio equal to the default dispatch overhead (8 node
+/// units), so the online re-fit converges to a known ground truth.
+struct SyntheticWorker<'a> {
+    round_us: u64,
     default_deadline_ms: u64,
-) -> HttpResponse {
+    pending: &'a PendingMap,
+    metrics: &'a ServerMetrics,
+    health: &'a Health,
+    live: Option<&'a OnlineCostModel>,
+    agg: Aggregate,
+}
+
+impl GroupWorker for SyntheticWorker<'_> {
+    fn run(&mut self, group: AdmittedGroup) {
+        let reqs = &group.requests;
+        let b = reqs.len();
+        self.metrics.on_dispatch(b >= 2, b as u64);
+        self.health.set_inflight(b as u64);
+        self.metrics.set_inflight(b as u64);
+        let observer =
+            WorkerObserver { metrics: self.metrics, health: self.health, live: self.live };
+        let t0 = Instant::now();
+        let queue_waits: Vec<f64> =
+            reqs.iter().map(|r| r.arrival.elapsed().as_secs_f64()).collect();
+        let mut recs: Vec<GenRecord> =
+            reqs.iter().map(|r| GenRecord::new(r.prompt.len())).collect();
+        let mut done = vec![false; b];
+        let mut ttft = vec![0u64; b];
+        let rounds_max =
+            reqs.iter().map(|r| r.max_tokens.max(1).div_ceil(SYNTH_TAU)).max().unwrap_or(1);
+        for round in 0..rounds_max {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            // fault-inject site: the same `verify` site the real engines
+            // mark, so `--inject verify=panic@N` exercises supervision
+            // under synthetic load (the chaos soak's injected fault)
+            let _ = crate::failpoint!("verify");
+            let t = SYNTH_WIDTHS[round % SYNTH_WIDTHS.len()];
+            let round_ns = self.round_us.max(1) * 1_000;
+            // verify_ns = k * (overhead + t) with overhead = 8: the
+            // ground truth the online re-fit should recover
+            let verify_ns = round_ns * (8 + t as u64) / 24;
+            let draft_ns = round_ns / 4;
+            let host_ns = round_ns / 8;
+            std::thread::sleep(std::time::Duration::from_nanos(round_ns));
+            for (i, r) in reqs.iter().enumerate() {
+                if done[i] {
+                    continue;
+                }
+                let rec = &mut recs[i];
+                let take = (r.max_tokens - rec.tokens.len()).min(SYNTH_TAU);
+                let base = fingerprint(r);
+                for _ in 0..take {
+                    // deterministic token stream derived from the content
+                    // fingerprint: equal requests produce equal tokens in
+                    // any batch, under any admission order
+                    let idx = rec.tokens.len() as u64;
+                    rec.tokens.push(((base.wrapping_mul(idx + 1)) >> 17) as u32 & 0x7fff);
+                }
+                rec.target_passes += 1;
+                rec.round_accepts.push(take);
+                rec.round_tree_nodes.push(t as usize);
+                rec.round_verify_t.push(t as usize);
+                rec.round_draft_w.push(4);
+                rec.round_host_alloc_bytes.push(0);
+                rec.scratch_reuse_total += 1;
+                rec.drafted += t as usize;
+                rec.timeline.draft_ns += draft_ns;
+                rec.timeline.verify_ns += verify_ns;
+                rec.timeline.host_ns += host_ns;
+                observer.on_round(&RoundEvent {
+                    lane: i as u32,
+                    round: round as u32,
+                    tree_nodes: t,
+                    verify_t: t,
+                    draft_w: 4,
+                    accepted: take as u32,
+                    draft_ns,
+                    verify_ns,
+                    host_ns,
+                    alloc_bytes: 0,
+                });
+                if ttft[i] == 0 {
+                    ttft[i] = t0.elapsed().as_nanos() as u64;
+                }
+                if rec.tokens.len() >= r.max_tokens {
+                    done[i] = true;
+                } else if r.deadline(self.default_deadline_ms).expired() {
+                    // mirror the real engines: deadline expiry truncates
+                    // to partial text, marked on the record
+                    rec.truncated = Some("deadline");
+                    done[i] = true;
+                }
+            }
+        }
+        let wall = t0.elapsed().as_nanos() as u64;
+        for (i, r) in reqs.iter().enumerate() {
+            let rec = &mut recs[i];
+            rec.wall_ns = wall;
+            rec.ttft_ns = ttft[i].max(1);
+            self.metrics.record_gen(
+                rec,
+                queue_waits[i],
+                r.arrival.elapsed().as_secs_f64(),
+                b as u64,
+            );
+            self.agg.add(rec);
+            deliver(
+                self.pending,
+                r.id,
+                Response {
+                    id: r.id,
+                    text: format!("synthetic:{:016x}:{}", fingerprint(r), rec.tokens.len()),
+                    tokens: rec.tokens.len(),
+                    target_passes: rec.target_passes,
+                    tau: rec.tau(),
+                    latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    queue_ms: queue_waits[i] * 1e3,
+                    status: 200,
+                    truncated: rec.truncated,
+                },
+            );
+        }
+        self.metrics.update_aggregate(&self.agg);
+        self.health.set_inflight(0);
+        self.metrics.set_inflight(0);
+    }
+
+    /// Nothing to rebuild: the simulated rounds hold no cross-group
+    /// state (the per-group vectors unwound with the panic).
+    fn rebuild(&mut self) {}
+}
+
+/// Everything a route thread needs, bundled so the accept loop hands
+/// one reference around instead of a parameter list.
+struct RouteCtx<'a> {
+    queue: &'a RequestQueue,
+    pending: &'a PendingMap,
+    metrics: &'a ServerMetrics,
+    health: &'a Health,
+    next_id: &'a AtomicU64,
+    default_deadline_ms: u64,
+    /// The worker-constructed scheduler, shared for scrape-time counter
+    /// mirroring. Unset until the worker finishes loading artifacts
+    /// (always set in synthetic mode).
+    sched: &'a OnceLock<Arc<Scheduler>>,
+    live: &'a OnlineCostModel,
+}
+
+fn route(req: &HttpRequest, ctx: &RouteCtx) -> HttpResponse {
+    let RouteCtx { queue, pending, metrics, health, next_id, default_deadline_ms, .. } = *ctx;
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             let body = health.to_json(queue.len()).to_string().into_bytes();
@@ -1235,10 +1614,12 @@ fn route(
         ("GET", "/metrics") => {
             // scrape-time gauges: depth is a queue property, in-flight a
             // worker property, and the robustness rates derive from the
-            // lifetime counters; all refresh on read
+            // lifetime counters; all refresh on read. The scheduling
+            // families mirror the queue/scheduler/cost-model atomics.
             metrics.set_queue_depth(queue.len());
             metrics.set_inflight(health.inflight());
             metrics.refresh_derived();
+            metrics.refresh_sched(queue, ctx.sched.get().map(|s| s.as_ref()), Some(ctx.live));
             HttpResponse::ok("text/plain; version=0.0.4", metrics.render().into_bytes())
         }
         ("GET", "/trace") => HttpResponse::ok(
@@ -1261,6 +1642,30 @@ fn route(
                 .into_bytes(),
             )
         }
+        ("POST", "/admin/sched") => {
+            // flip the admission order at runtime: {"order":"edf"|"fcfs"}.
+            // The queue's two views read one ground-truth entry set, so
+            // the flip is safe mid-stream (nothing lost or duplicated).
+            let order = std::str::from_utf8(&req.body)
+                .ok()
+                .and_then(|s| Json::parse(s).ok())
+                .and_then(|v| v.get("order").and_then(Json::as_str).map(str::to_string));
+            match order.as_deref() {
+                Some("edf") => queue.set_edf_enabled(true),
+                Some("fcfs") => queue.set_edf_enabled(false),
+                _ => return HttpResponse::status(400, "order must be \"edf\" or \"fcfs\""),
+            }
+            HttpResponse::ok(
+                "application/json",
+                Json::obj(vec![
+                    ("order", Json::from(if queue.edf_enabled() { "edf" } else { "fcfs" })),
+                    ("aged_pops", Json::Num(queue.aged_pops() as f64)),
+                    ("reordered_pops", Json::Num(queue.reordered_pops() as f64)),
+                ])
+                .to_string()
+                .into_bytes(),
+            )
+        }
         ("POST", "/v1/generate") => {
             let body = match std::str::from_utf8(&req.body).ok().and_then(|s| Json::parse(s).ok())
             {
@@ -1278,12 +1683,20 @@ fn route(
             let dl = r.deadline(default_deadline_ms);
             // overload shedding, before the request takes a slot: if the
             // estimated queue wait already exceeds the deadline budget,
-            // a 429 now beats a guaranteed 504 later
-            if let Some(est_wait) =
-                should_shed(queue.len(), metrics.est_service_secs(), dl.budget_secs())
-            {
+            // a 429 now beats a guaranteed 504 later. Cold start (no
+            // service history yet — fresh boot or post-drain restart):
+            // seed the estimate from the live cost model's prediction so
+            // an instant burst still sheds.
+            let mut est = metrics.est_service_secs();
+            if est == 0.0 {
+                est = ctx.live.predicted_service_secs(r.max_tokens);
+            }
+            if let Some(est_wait) = should_shed(queue.len(), est, dl.budget_secs()) {
                 metrics.on_shed();
-                let retry = (est_wait.ceil() as u64).max(1);
+                // seconds until the predicted wait decays back under the
+                // budget, not the raw wait: the earliest retry that can
+                // actually be admitted
+                let retry = retry_after_secs(est_wait, dl.budget_secs().unwrap_or(0.0));
                 return HttpResponse::status(429, "shed: deadline cannot survive queue wait")
                     .with_header("Retry-After", &retry.to_string());
             }
@@ -1347,5 +1760,113 @@ fn route(
             }
         }
         _ => HttpResponse::status(404, "not found"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Condvar;
+
+    #[test]
+    fn retry_after_subtracts_budget_and_clamps() {
+        // 10s of queued work against a 3s budget: come back in 7
+        assert_eq!(retry_after_secs(10.0, 3.0), 7);
+        // wait already under budget (a race with the worker draining):
+        // still at least 1 — "retry immediately" would re-shed
+        assert_eq!(retry_after_secs(2.0, 5.0), 1);
+        // no budget supplied: the whole wait must drain
+        assert_eq!(retry_after_secs(2.5, 0.0), 3);
+        // negative budgets (already-expired clocks) clamp to zero
+        assert_eq!(retry_after_secs(4.0, -2.0), 4);
+    }
+
+    #[test]
+    fn cold_shed_seeded_from_predicted_service() {
+        // a cold server has no EWMA service estimate (0.0), which used
+        // to make should_shed admit everything; the live model's
+        // cold-start prediction is non-zero, so an instant burst sheds
+        let live = OnlineCostModel::new(CostModel::default());
+        let est = live.predicted_service_secs(64);
+        assert!(est > 0.0, "cold prediction must be positive");
+        // 10 queued requests at ~0.22s each against a 1s budget
+        let shed = should_shed(10, est, Some(1.0));
+        assert!(shed.is_some(), "cold burst should shed");
+        // the degenerate zero estimate would have admitted it
+        assert_eq!(should_shed(10, 0.0, Some(1.0)), None);
+        // unbounded requests are never shed regardless of estimate
+        assert_eq!(should_shed(10, est, None), None);
+    }
+
+    fn synth_req(id: u64, prompt: &str, max_tokens: usize) -> Request {
+        let mut r = Request::synthetic(id);
+        r.prompt = prompt.into();
+        r.max_tokens = max_tokens;
+        r
+    }
+
+    /// Run one synthetic group to completion and return each member's
+    /// delivered response, in request order.
+    fn run_synth(requests: Vec<Request>) -> Vec<Response> {
+        let pending: PendingMap = Mutex::new(std::collections::HashMap::new());
+        let metrics = ServerMetrics::new(16);
+        let health = Health::new(30_000);
+        let slots: Vec<Slot> = requests
+            .iter()
+            .map(|r| {
+                let slot: Slot = Arc::new((Mutex::new(None), Condvar::new()));
+                pending.lock().unwrap().insert(r.id, slot.clone());
+                slot
+            })
+            .collect();
+        let mut w = SyntheticWorker {
+            round_us: 50,
+            default_deadline_ms: 0,
+            pending: &pending,
+            metrics: &metrics,
+            health: &health,
+            live: None,
+            agg: Aggregate::new(),
+        };
+        w.run(AdmittedGroup { verify_cap: 32, requests });
+        slots.iter().map(|s| s.0.lock().unwrap().take().expect("delivered")).collect()
+    }
+
+    #[test]
+    fn synthetic_output_is_pure_function_of_request() {
+        // the same request served solo, batched with a stranger, and in
+        // a different admission position must produce the same text —
+        // the losslessness invariant the EDF-vs-FCFS comparison rests on
+        let solo = run_synth(vec![synth_req(1, "alpha", 12)]);
+        let batched = run_synth(vec![synth_req(2, "beta", 9), synth_req(3, "alpha", 12)]);
+        assert_eq!(solo[0].text, batched[1].text, "batch composition changed output");
+        assert_eq!(solo[0].tokens, 12);
+        assert_eq!(batched[1].tokens, 12);
+        assert_ne!(batched[0].text, batched[1].text, "distinct prompts, distinct streams");
+        assert_eq!(solo[0].status, 200);
+        assert!(solo[0].truncated.is_none());
+    }
+
+    #[test]
+    fn synthetic_rounds_feed_live_cost_model() {
+        let pending: PendingMap = Mutex::new(std::collections::HashMap::new());
+        let metrics = ServerMetrics::new(16);
+        let health = Health::new(30_000);
+        let live = OnlineCostModel::new(CostModel::default());
+        let r = synth_req(9, "gamma", 30);
+        let slot: Slot = Arc::new((Mutex::new(None), Condvar::new()));
+        pending.lock().unwrap().insert(r.id, slot.clone());
+        let mut w = SyntheticWorker {
+            round_us: 50,
+            default_deadline_ms: 0,
+            pending: &pending,
+            metrics: &metrics,
+            health: &health,
+            live: Some(&live),
+            agg: Aggregate::new(),
+        };
+        w.run(AdmittedGroup { verify_cap: 32, requests: vec![r] });
+        // 30 tokens at tau=3 -> 10 rounds observed
+        assert_eq!(live.observations(), 10);
     }
 }

@@ -54,6 +54,10 @@ impl Args {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
     pub fn has(&self, flag: &str) -> bool {
         self.flags.iter().any(|f| f == flag)
     }

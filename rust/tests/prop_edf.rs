@@ -1,0 +1,206 @@
+//! EDF admission-order properties (randomized, seeded, artifact-free):
+//!
+//! 1. deadline ordering with FCFS tiebreak — pops come out sorted by
+//!    effective deadline, arrival order breaking ties;
+//! 2. FCFS degradation — with no deadlines anywhere, EDF is exactly
+//!    the FCFS order (the constant aging bound preserves arrival order);
+//! 3. aging no-starvation — an unbounded request is served once its
+//!    aging bound passes, no matter how many tight deadlines keep
+//!    arriving behind it;
+//! 4. compat-partition preservation — width-grouped admission over an
+//!    EDF queue forms the same *kind* of groups (internally compatible,
+//!    lossless, duplicate-free) as over FCFS; only the order changes.
+
+use std::time::{Duration, Instant};
+
+use eagle_serve::coordinator::queue::RequestQueue;
+use eagle_serve::coordinator::request::{Method, Request};
+use eagle_serve::coordinator::{AdmissionPolicy, Scheduler};
+
+/// Tiny deterministic PRNG so every property runs over many seeds
+/// without a rand dependency.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n.max(1)
+    }
+}
+
+fn req(id: u64, deadline_ms: Option<u64>) -> Request {
+    let mut r = Request::synthetic(id);
+    r.deadline_ms = deadline_ms;
+    r
+}
+
+/// The key EDF sorts by, recomputed independently of the queue: the
+/// real deadline when it is tighter than the aging bound, else the
+/// aging bound (arrival + aging). Ties break by push order (id, here).
+fn effective_key(r: &Request, aging_ms: u64) -> Instant {
+    let aged = r.arrival + Duration::from_millis(aging_ms);
+    match r.deadline_ms {
+        Some(ms) if ms > 0 => (r.arrival + Duration::from_millis(ms)).min(aged),
+        _ => aged,
+    }
+}
+
+#[test]
+fn pops_are_sorted_by_effective_deadline_with_fcfs_tiebreak() {
+    for seed in 0..50u64 {
+        let mut rng = Lcg(seed * 2 + 1);
+        let aging_ms = 60_000;
+        let q = RequestQueue::new(256).with_edf(true).with_aging_ms(aging_ms);
+        let n = 20 + rng.below(40);
+        let mut pushed = Vec::new();
+        for id in 0..n {
+            // deadlines in a small set so ties are common
+            let deadline_ms = match rng.below(4) {
+                0 => None,
+                k => Some(k * 500),
+            };
+            let r = req(id, deadline_ms);
+            pushed.push((id, effective_key(&r, aging_ms)));
+            q.push(r).unwrap();
+        }
+        let mut popped = Vec::new();
+        while let Some(r) = q.pop_up_to(1).pop() {
+            popped.push(r);
+        }
+        assert_eq!(popped.len(), pushed.len(), "seed {seed}: lossless");
+        for w in popped.windows(2) {
+            let ka = effective_key(&w[0], aging_ms);
+            let kb = effective_key(&w[1], aging_ms);
+            assert!(
+                ka < kb || (ka == kb && w[0].id < w[1].id),
+                "seed {seed}: out of EDF order: {} (key {ka:?}) before {} (key {kb:?})",
+                w[0].id,
+                w[1].id
+            );
+        }
+    }
+}
+
+#[test]
+fn no_deadlines_degrades_to_exact_fcfs() {
+    for seed in 0..50u64 {
+        let mut rng = Lcg(seed ^ 0xfcf5);
+        let q = RequestQueue::new(256).with_edf(true);
+        let n = 5 + rng.below(60);
+        for id in 0..n {
+            q.push(req(id, None)).unwrap();
+        }
+        let mut expect = 0u64;
+        while let Some(r) = q.pop_up_to(1).pop() {
+            assert_eq!(r.id, expect, "seed {seed}: EDF without deadlines must be FCFS");
+            expect += 1;
+        }
+        assert_eq!(expect, n, "seed {seed}: drained everything");
+    }
+}
+
+#[test]
+fn aging_bound_prevents_starvation() {
+    // an unbounded request whose aging bound has already passed must be
+    // served before fresh tight-deadline arrivals, no matter how many
+    // of them are queued behind it
+    let aging_ms = 50;
+    let q = RequestQueue::new(256).with_edf(true).with_aging_ms(aging_ms);
+    let mut old = req(0, None);
+    // back-date the arrival past the aging bound, the way a request
+    // looks after starving through real wall time
+    old.arrival = Instant::now() - Duration::from_millis(10 * aging_ms);
+    q.push(old).unwrap();
+    for id in 1..40 {
+        q.push(req(id, Some(5_000))).unwrap();
+    }
+    let first = q.pop_up_to(1).pop().expect("nonempty");
+    assert_eq!(first.id, 0, "aged request starved behind tight deadlines");
+    assert!(q.aged_pops() >= 1, "aged pop not counted");
+}
+
+#[test]
+fn runtime_flip_loses_nothing_and_restores_fcfs() {
+    for seed in 0..20u64 {
+        let mut rng = Lcg(seed ^ 0x0f11);
+        let q = RequestQueue::new(256).with_edf(false);
+        let n = 30 + rng.below(30);
+        for id in 0..n {
+            let deadline_ms = (rng.below(2) == 0).then(|| 100 + rng.below(2_000));
+            q.push(req(id, deadline_ms)).unwrap();
+        }
+        // drain a prefix FCFS, flip to EDF mid-stream, drain the rest
+        let cut = rng.below(n / 2) + 1;
+        let mut seen = Vec::new();
+        for _ in 0..cut {
+            seen.push(q.pop_up_to(1).pop().unwrap().id);
+        }
+        q.set_edf_enabled(true);
+        while let Some(r) = q.pop_up_to(1).pop() {
+            seen.push(r.id);
+        }
+        seen.sort_unstable();
+        let all: Vec<u64> = (0..n).collect();
+        assert_eq!(seen, all, "seed {seed}: flip dropped or duplicated requests");
+    }
+}
+
+#[test]
+fn width_grouped_admission_over_edf_preserves_compat_partitions() {
+    for seed in 0..30u64 {
+        let mut rng = Lcg(seed ^ 0x9d0f);
+        let q = RequestQueue::new(256).with_edf(true);
+        let n = 8 + rng.below(24);
+        let mut ids = Vec::new();
+        for id in 0..n {
+            let mut r = req(id, (rng.below(3) == 0).then(|| 200 + rng.below(1_000)));
+            r.method = Method::Eagle;
+            r.max_tokens = if rng.below(2) == 0 { 32 } else { 64 };
+            r.temperature = if rng.below(4) == 0 { 0.8 } else { 0.0 };
+            r.width_hint = Some([8usize, 16, 32][rng.below(3) as usize]);
+            ids.push(id);
+            q.push(r).unwrap();
+        }
+        q.close();
+        let sched = Scheduler::new(usize::MAX, 0).with_policy(AdmissionPolicy::WidthGrouped {
+            verify_widths: vec![8, 16, 32],
+            max_t: 32,
+        });
+        let mut admitted = Vec::new();
+        loop {
+            let groups = sched.next_groups(&q);
+            if groups.is_empty() {
+                break;
+            }
+            for g in groups {
+                // every multi-lane group is internally compatible: one
+                // (max_tokens, tree, temperature-class) key, and every
+                // lane's hint fits under the group's planned cap
+                if g.requests.len() > 1 {
+                    let key = |r: &Request| (r.max_tokens, r.tree.name(), r.temperature_class());
+                    let k0 = key(&g.requests[0]);
+                    for r in &g.requests {
+                        assert!(r.width_batchable(), "seed {seed}: unbatchable lane in a group");
+                        assert_eq!(key(r), k0, "seed {seed}: mixed compat class in one group");
+                    }
+                }
+                if let Some(cap) = g.verify_cap {
+                    for r in &g.requests {
+                        assert!(
+                            r.admission_width(32) <= cap,
+                            "seed {seed}: lane hint {} above group cap {cap}",
+                            r.admission_width(32)
+                        );
+                    }
+                }
+                admitted.extend(g.requests.into_iter().map(|r| r.id));
+            }
+        }
+        admitted.sort_unstable();
+        assert_eq!(admitted, ids, "seed {seed}: grouping lost or duplicated requests");
+    }
+}
