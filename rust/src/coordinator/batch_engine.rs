@@ -52,10 +52,29 @@
 //! Per-lane prefill reuses the bs=1 draft prefill and splices the lane's
 //! rows into the batched draft cache host-side (caches are host vectors
 //! between calls, so the splice is a memcpy — no extra executable).
+//!
+//! **Checkpointable lanes (S24):** with a [`PreemptSignal`] attached
+//! ([`BatchEagleEngine::with_preempt`]), any lane can be suspended at a
+//! round boundary: [`BatchEagleEngine::generate_pooled_entries`]
+//! captures the lane's full state — committed prefix, both KV-cache row
+//! slices, the draft root feature/logits, the RNG stream position, the
+//! controller's EWMA/width-hysteresis state, and the fused-commit
+//! pending triple the next verify would have consumed — into a
+//! [`LaneCheckpoint`], and the batch runs on without the lane (it
+//! becomes padding, like a finished lane). The checkpoint re-enters a
+//! later call as [`LaneInput::Resume`] and continues **bit-identically**
+//! to the uninterrupted run: resident KV is spliced back by the same
+//! strided memcpy the prefill uses; evicted KV is rebuilt by prefix
+//! re-prefill (`GenRecord::resume_refill_rounds` counts the extra
+//! passes). Bit-identity additionally requires the resumed group to
+//! lower the same verify/draft width families — the serving default,
+//! where every group filters the one declared `verify_widths` list.
 
 use anyhow::{bail, Result};
+use std::sync::Arc;
 use std::time::Instant;
 
+use super::checkpoint::{copy_lane_kv_in, copy_lane_kv_out, LaneCheckpoint, PreemptSignal};
 use crate::metrics::trace::{RoundEvent, RoundObserver};
 use crate::metrics::GenRecord;
 use crate::models::target::KvCache;
@@ -99,6 +118,26 @@ pub struct BatchEagleEngine<'a> {
     /// of the group keeps its lock-step cadence. Allocated once at
     /// builder time; the per-round checks are clock reads only.
     pub deadlines: Vec<DeadlineClock>,
+    /// Suspension requests, polled at round boundaries: a requested lane
+    /// is captured into a [`LaneCheckpoint`] at its next boundary and
+    /// the batch runs on without it. `None` (the default) disables
+    /// preemption entirely.
+    pub preempt: Option<Arc<PreemptSignal>>,
+}
+
+/// One lane's input to [`BatchEagleEngine::generate_pooled_entries`]:
+/// a fresh prompt, or a suspended lane's checkpoint to resume.
+pub enum LaneInput<'p> {
+    Fresh { prompt: &'p [u32], seed: u64 },
+    Resume { ckpt: Box<LaneCheckpoint> },
+}
+
+/// One lane's outcome: a finished generation record, or the checkpoint
+/// of a lane suspended at a round boundary (re-enqueue it as a
+/// [`LaneInput::Resume`] to continue).
+pub enum LaneOutcome {
+    Done(GenRecord),
+    Suspended(Box<LaneCheckpoint>),
 }
 
 struct Lane {
@@ -107,6 +146,15 @@ struct Lane {
     root_feat: Vec<f32>,
     root_logits: Vec<f32>,
     done: bool,
+    /// Suspended at a round boundary this call: done for the lock-step
+    /// loop but NOT complete — the checkpoint is parked in `ckpt`.
+    suspended: bool,
+    /// RNG stream identity: the ORIGINAL seed, surviving re-suspension
+    /// (`Rng::draws` counts from it cumulatively).
+    seed: u64,
+    /// The lane's reusable checkpoint box: present for resumed lanes so
+    /// a warm re-capture allocates nothing, and after suspension.
+    ckpt: Option<Box<LaneCheckpoint>>,
     rec: GenRecord,
 }
 
@@ -127,6 +175,7 @@ impl<'a> BatchEagleEngine<'a> {
             draft_w: c.draft_w,
             observer: None,
             deadlines: Vec::new(),
+            preempt: None,
         }
     }
 
@@ -148,6 +197,15 @@ impl<'a> BatchEagleEngine<'a> {
     /// its flight recorder + metrics registry through here).
     pub fn with_observer(mut self, observer: &'a dyn RoundObserver) -> Self {
         self.observer = Some(observer);
+        self
+    }
+
+    /// Attach a preemption signal (builder-style). The serving worker
+    /// requests lanes (deadline / memory-pressure / drain preemption);
+    /// [`BatchEagleEngine::generate_pooled_entries`] honors each request
+    /// at the lane's next round boundary.
+    pub fn with_preempt(mut self, sig: Arc<PreemptSignal>) -> Self {
+        self.preempt = Some(sig);
         self
     }
 
@@ -216,14 +274,47 @@ impl<'a> BatchEagleEngine<'a> {
         cfg: &GenConfig,
         pool: &mut ScratchPool,
     ) -> Result<Vec<GenRecord>> {
-        let b = prompts.len();
+        assert_eq!(seeds.len(), prompts.len(), "one seed per lane");
+        let inputs: Vec<LaneInput<'_>> = prompts
+            .iter()
+            .zip(seeds)
+            .map(|(p, &seed)| LaneInput::Fresh { prompt: p.as_slice(), seed })
+            .collect();
+        Ok(self
+            .generate_pooled_entries(inputs, cfg, pool)?
+            .into_iter()
+            .map(|o| match o {
+                LaneOutcome::Done(rec) => rec,
+                LaneOutcome::Suspended(_) => {
+                    unreachable!("record-only callers run without a preempt signal")
+                }
+            })
+            .collect())
+    }
+
+    /// The lock-step workhorse: each lane is either a fresh prompt or a
+    /// suspended lane's checkpoint ([`LaneInput`]), and each outcome is
+    /// either a finished record or a new checkpoint ([`LaneOutcome`]) —
+    /// lanes whose [`PreemptSignal`] bit was raised are captured at
+    /// their next round boundary while their peers run on unchanged.
+    /// Resume is bit-identical to the uninterrupted run (see the module
+    /// doc); a resumed lane whose KV was evicted first rebuilds it by
+    /// re-prefilling its committed prefix, which requires the prefix to
+    /// fit the prefill window (`TargetModel::prefill_p`) — longer
+    /// contexts must keep their KV resident (raise `--kv-budget`).
+    pub fn generate_pooled_entries(
+        &self,
+        inputs: Vec<LaneInput<'_>>,
+        cfg: &GenConfig,
+        pool: &mut ScratchPool,
+    ) -> Result<Vec<LaneOutcome>> {
+        let b = inputs.len();
         assert!(b >= 2, "use EagleEngine for bs=1");
-        assert_eq!(seeds.len(), b, "one seed per lane");
         assert!(
             self.deadlines.is_empty() || self.deadlines.len() == b,
             "one deadline per lane (or none)"
         );
-        let mut rngs: Vec<Rng> = seeds.iter().map(|&s| Rng::new(s)).collect();
+        let mut rngs: Vec<Rng> = Vec::with_capacity(b);
         let t_all = Instant::now();
         let tgt = self.target;
         let d = tgt.d;
@@ -232,61 +323,155 @@ impl<'a> BatchEagleEngine<'a> {
         let p_win = tgt.prefill_p;
         let w = self.draft_w;
 
-        // ---- per-lane prefill into the batched caches -----------------------
+        // fused-commit pending state, seeded during lane setup: a fresh
+        // prefill (and an evicted-KV resume, which re-creates the fresh
+        // initial condition) contributes `(m, -, 0)`; a resident resume
+        // restores the suspended round's triple verbatim
+        let mut pending_old = vec![0i32; b];
+        let mut pending_idx = vec![0i32; b * self.accept_a];
+        let mut pending_n = vec![0i32; b];
+
+        // ---- per-lane prefill / checkpoint restore into the batched caches --
         let mut cache = tgt.new_cache(b);
         let mut dcache_b = self.draft.new_cache(b);
+        // draft cache layout [2, B, S, H, dh]: one lane's rows per kv half
+        let lane_sz = s_tot * self.draft.n_heads * self.draft.head_dim;
         let mut lanes: Vec<Lane> = Vec::with_capacity(b);
-        for (li, prompt) in prompts.iter().enumerate() {
-            let mut rec = GenRecord::new(prompt.len());
-            rec.reserve_rounds(cfg.max_new);
-            let t0 = Instant::now();
-            let (out, plen) = tgt.prefill_slot(b, &mut cache, li, prompt)?;
-            rec.timeline.prefill_ns += t0.elapsed().as_nanos() as u64;
-            rec.target_passes += 1;
-            let last_logits = tgt.row(&out.logits, p_win, 0, plen - 1, vocab);
-            // root pick mirrors EagleEngine::pick on the lane's own stream
-            let root_tok = if cfg.temperature <= 0.0 {
-                argmax(last_logits) as u32
-            } else {
-                sample(&softmax(last_logits, cfg.temperature), &mut rngs[li]) as u32
-            };
-            // pre-sized so steady-state commits never grow it
-            let mut committed: Vec<u32> =
-                Vec::with_capacity(prompt.len() + cfg.max_new + self.accept_a + 2);
-            committed.extend_from_slice(prompt);
-            committed.push(root_tok);
-            rec.tokens.push(root_tok);
-            // first committed token for this lane (lock-step prefill is
-            // sequential, so later lanes see earlier lanes' prefill time)
-            rec.ttft_ns = t_all.elapsed().as_nanos() as u64;
+        for (li, input) in inputs.into_iter().enumerate() {
+            match input {
+                LaneInput::Fresh { prompt, seed } => {
+                    rngs.push(Rng::new(seed));
+                    let mut rec = GenRecord::new(prompt.len());
+                    rec.reserve_rounds(cfg.max_new);
+                    let t0 = Instant::now();
+                    let (out, plen) = tgt.prefill_slot(b, &mut cache, li, prompt)?;
+                    rec.timeline.prefill_ns += t0.elapsed().as_nanos() as u64;
+                    rec.target_passes += 1;
+                    let last_logits = tgt.row(&out.logits, p_win, 0, plen - 1, vocab);
+                    // root pick mirrors EagleEngine::pick on the lane's own
+                    // stream
+                    let root_tok = if cfg.temperature <= 0.0 {
+                        argmax(last_logits) as u32
+                    } else {
+                        sample(&softmax(last_logits, cfg.temperature), &mut rngs[li]) as u32
+                    };
+                    // pre-sized so steady-state commits never grow it
+                    let mut committed: Vec<u32> =
+                        Vec::with_capacity(prompt.len() + cfg.max_new + self.accept_a + 2);
+                    committed.extend_from_slice(prompt);
+                    committed.push(root_tok);
+                    rec.tokens.push(root_tok);
+                    // first committed token for this lane (lock-step prefill
+                    // is sequential, so later lanes see earlier lanes'
+                    // prefill time)
+                    rec.ttft_ns = t_all.elapsed().as_nanos() as u64;
 
-            // draft prefill (bs=1) then splice into the batched draft cache
-            let mut dcache1 = self.draft.new_cache(1);
-            let mut dtoks = vec![0i32; p_win];
-            for i in 0..plen {
-                dtoks[i] = committed[i + 1] as i32;
+                    // draft prefill (bs=1) then splice into the batched
+                    // draft cache
+                    let mut dcache1 = self.draft.new_cache(1);
+                    let mut dtoks = vec![0i32; p_win];
+                    for i in 0..plen {
+                        dtoks[i] = committed[i + 1] as i32;
+                    }
+                    let mut dfeats = vec![0f32; p_win * d];
+                    dfeats[..plen * d].copy_from_slice(&out.feats[..plen * d]);
+                    let t0 = Instant::now();
+                    let dout = self.draft.prefill(&dfeats, &dtoks, plen, &mut dcache1)?;
+                    rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64;
+                    rec.draft_passes += 1;
+                    for kv in 0..2 {
+                        let src = &dcache1.data[kv * lane_sz..(kv + 1) * lane_sz];
+                        let dst_off = (kv * b + li) * lane_sz;
+                        dcache_b.data[dst_off..dst_off + lane_sz].copy_from_slice(src);
+                    }
+                    pending_old[li] = plen as i32;
+                    lanes.push(Lane {
+                        committed,
+                        m: plen,
+                        root_feat: dout.feats,
+                        root_logits: dout.logits,
+                        done: false,
+                        suspended: false,
+                        seed,
+                        ckpt: None,
+                        rec,
+                    });
+                }
+                LaneInput::Resume { mut ckpt } => {
+                    // the stream continues at its exact draw position —
+                    // every future draw equals the uninterrupted run's
+                    rngs.push(Rng::resume(ckpt.rng_seed, ckpt.rng_draws));
+                    let committed = std::mem::take(&mut ckpt.committed);
+                    let m = ckpt.m;
+                    let root_feat = std::mem::take(&mut ckpt.root_feat);
+                    let root_logits = std::mem::take(&mut ckpt.root_logits);
+                    let mut rec = std::mem::replace(&mut ckpt.rec, GenRecord::new(0));
+                    rec.reserve_rounds(cfg.max_new);
+                    if crate::failpoint!("resume") {
+                        // degenerate resume: drop the resident KV so the
+                        // lane exercises the slow re-prefill path
+                        ckpt.evict_kv();
+                    }
+                    if ckpt.kv_resident {
+                        copy_lane_kv_in(&mut cache, li, &ckpt.kv_target);
+                        copy_lane_kv_in(&mut dcache_b, li, &ckpt.kv_draft);
+                        pending_old[li] = ckpt.pending_old;
+                        let pr = li * self.accept_a..(li + 1) * self.accept_a;
+                        pending_idx[pr].copy_from_slice(&ckpt.pending_idx);
+                        pending_n[li] = ckpt.pending_n;
+                    } else {
+                        // evicted KV: rebuild the lane's rows by prefix
+                        // re-prefill — deterministic kernels reproduce the
+                        // exact cache state, and the root feature/logits
+                        // travelled in the checkpoint, so only latency
+                        // degrades. The suspended round's pending commit is
+                        // already part of `committed[..m]` here (eviction
+                        // clears the scratch region), so pending resets to
+                        // the fresh-prefill initial condition.
+                        if m > p_win {
+                            bail!(
+                                "evicted lane of {m} committed tokens exceeds the prefill \
+                                 window {p_win}; keep its KV resident (raise --kv-budget)"
+                            );
+                        }
+                        let t0 = Instant::now();
+                        let (out, plen) = tgt.prefill_slot(b, &mut cache, li, &committed[..m])?;
+                        rec.timeline.prefill_ns += t0.elapsed().as_nanos() as u64;
+                        rec.target_passes += 1;
+                        debug_assert_eq!(plen, m);
+                        let mut dcache1 = self.draft.new_cache(1);
+                        let mut dtoks = vec![0i32; p_win];
+                        for i in 0..m {
+                            dtoks[i] = committed[i + 1] as i32;
+                        }
+                        let mut dfeats = vec![0f32; p_win * d];
+                        dfeats[..m * d].copy_from_slice(&out.feats[..m * d]);
+                        let t0 = Instant::now();
+                        self.draft.prefill(&dfeats, &dtoks, m, &mut dcache1)?;
+                        rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64;
+                        rec.draft_passes += 1;
+                        for kv in 0..2 {
+                            let src = &dcache1.data[kv * lane_sz..(kv + 1) * lane_sz];
+                            let dst_off = (kv * b + li) * lane_sz;
+                            dcache_b.data[dst_off..dst_off + lane_sz].copy_from_slice(src);
+                        }
+                        pending_old[li] = m as i32;
+                        ckpt.refill_rounds += 1;
+                        rec.resume_refill_rounds += 1;
+                    }
+                    lanes.push(Lane {
+                        committed,
+                        m,
+                        root_feat,
+                        root_logits,
+                        done: false,
+                        suspended: false,
+                        seed: ckpt.rng_seed,
+                        ckpt: Some(ckpt),
+                        rec,
+                    });
+                }
             }
-            let mut dfeats = vec![0f32; p_win * d];
-            dfeats[..plen * d].copy_from_slice(&out.feats[..plen * d]);
-            let t0 = Instant::now();
-            let dout = self.draft.prefill(&dfeats, &dtoks, plen, &mut dcache1)?;
-            rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64;
-            rec.draft_passes += 1;
-            // splice lane rows: draft cache layout [2, B, S, H, dh]
-            let lane_sz = s_tot * self.draft.n_heads * self.draft.head_dim;
-            for kv in 0..2 {
-                let src = &dcache1.data[kv * lane_sz..(kv + 1) * lane_sz];
-                let dst_off = (kv * b + li) * lane_sz;
-                dcache_b.data[dst_off..dst_off + lane_sz].copy_from_slice(src);
-            }
-            lanes.push(Lane {
-                committed,
-                m: plen,
-                root_feat: dout.feats,
-                root_logits: dout.logits,
-                done: false,
-                rec,
-            });
         }
 
         // ---- lock-step rounds ------------------------------------------------
@@ -314,6 +499,15 @@ impl<'a> BatchEagleEngine<'a> {
                 _ => None,
             })
             .collect();
+        // resumed lanes restore their controller's EWMA / hysteresis
+        // state, so adaptation continues exactly where it left off
+        for (li, l) in lanes.iter().enumerate() {
+            if let (Some(ctl), Some(snap)) =
+                (controllers[li].as_mut(), l.ckpt.as_ref().and_then(|c| c.controller.as_ref()))
+            {
+                ctl.restore(snap);
+            }
+        }
 
         // ---- round state (S22): lane scratch keyed by KV slot ---------------
         let max_nodes = self.max_tree_nodes();
@@ -336,12 +530,6 @@ impl<'a> BatchEagleEngine<'a> {
             .collect();
         let mut bonuses = vec![0u32; b];
 
-        let mut pending_old = vec![0i32; b];
-        for (li, l) in lanes.iter().enumerate() {
-            pending_old[li] = l.m as i32;
-        }
-        let mut pending_idx = vec![0i32; b * self.accept_a];
-        let mut pending_n = vec![0i32; b];
         // per-lane timeline snapshot at round start (observer phase
         // deltas); allocated once, before the zero-alloc round loop
         let mut tl0: Vec<(u64, u64, u64)> = vec![(0, 0, 0); b];
@@ -360,6 +548,42 @@ impl<'a> BatchEagleEngine<'a> {
                 }
                 if lanes.iter().all(|l| l.done) {
                     break;
+                }
+            }
+            // round-boundary preemption: a requested lane is captured
+            // into its checkpoint HERE — after the previous round's
+            // controller observation, before the next round's growth —
+            // and becomes padding; peers keep the lock-step cadence. A
+            // resumed lane re-captures into its own box (warm: zero
+            // allocation); a fresh lane's first suspension sizes its
+            // buffers once.
+            if let Some(sig) = self.preempt.as_deref() {
+                if sig.any() {
+                    for li in 0..b {
+                        if lanes[li].done || !sig.take(li) {
+                            continue;
+                        }
+                        if crate::failpoint!("checkpoint") {
+                            // degenerate capture: the request is dropped
+                            // and the lane simply keeps running
+                            continue;
+                        }
+                        self.suspend_lane(
+                            li,
+                            &mut lanes[li],
+                            &cache,
+                            &dcache_b,
+                            &controllers[li],
+                            &family,
+                            &rngs[li],
+                            &pending_old,
+                            &pending_idx,
+                            &pending_n,
+                        );
+                    }
+                    if lanes.iter().all(|l| l.done) {
+                        break;
+                    }
                 }
             }
             let fp0 =
@@ -695,10 +919,72 @@ impl<'a> BatchEagleEngine<'a> {
         Ok(lanes
             .into_iter()
             .map(|mut l| {
-                l.rec.wall_ns = wall;
-                l.rec
+                if l.suspended {
+                    let ck = l.ckpt.take().expect("suspended lane parked its checkpoint");
+                    LaneOutcome::Suspended(ck)
+                } else {
+                    l.rec.wall_ns = wall;
+                    LaneOutcome::Done(l.rec)
+                }
             })
             .collect())
+    }
+
+    /// Capture one live lane into its checkpoint at a round boundary and
+    /// retire it from the batch (it becomes padding, like a finished
+    /// lane). All captures are `clear` + `extend` into the checkpoint's
+    /// existing buffers — warm boxes grow nothing.
+    #[allow(clippy::too_many_arguments)]
+    fn suspend_lane(
+        &self,
+        li: usize,
+        lane: &mut Lane,
+        cache: &KvCache,
+        dcache: &KvCache,
+        controller: &Option<SpecController>,
+        family: &WidthFamily,
+        rng: &Rng,
+        pending_old: &[i32],
+        pending_idx: &[i32],
+        pending_n: &[i32],
+    ) {
+        let mut ck = lane.ckpt.take().unwrap_or_default();
+        ck.capture_tokens(&lane.committed, lane.m);
+        ck.capture_root(&lane.root_feat, &lane.root_logits);
+        let a = self.accept_a;
+        ck.capture_pending(pending_old[li], &pending_idx[li * a..(li + 1) * a], pending_n[li]);
+        ck.rng_seed = lane.seed;
+        ck.rng_draws = rng.draws();
+        match controller {
+            Some(c) => {
+                let snap = ck.controller.get_or_insert_with(Default::default);
+                c.snapshot_into(snap);
+                // the width this lane would verify at next round per its
+                // controller's CURRENT EWMA — the re-enqueued entry
+                // carries it so the lane migrates width groups
+                let hint = width_hint(Some(c));
+                ck.width_hint = Some(plan_round_width(family, &c.params(), hint).0);
+            }
+            None => {
+                ck.controller = None;
+                ck.width_hint = None;
+            }
+        }
+        ck.deadline = if self.deadlines.is_empty() {
+            DeadlineClock::unbounded()
+        } else {
+            self.deadlines[li]
+        };
+        // full-S lane rows of BOTH caches, scratch region included, so
+        // the pending fused commit survives the round trip
+        copy_lane_kv_out(cache, li, &mut ck.kv_target);
+        copy_lane_kv_out(dcache, li, &mut ck.kv_draft);
+        ck.kv_resident = true;
+        ck.kv_slot = None;
+        ck.rec = std::mem::replace(&mut lane.rec, GenRecord::new(0));
+        lane.ckpt = Some(ck);
+        lane.suspended = true;
+        lane.done = true;
     }
 
     /// Report one lane's just-finished round to the attached observer

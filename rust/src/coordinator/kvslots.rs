@@ -1,17 +1,44 @@
 //! KV-slot allocator (S15): fixed-capacity sequence slots over the batched
 //! cache, with allocation/free invariants property-tested in
 //! `rust/tests/prop_coordinator.rs` (the vLLM "block manager" scaled to
-//! this testbed's whole-sequence slots).
+//! this testbed's whole-sequence slots). Since the checkpointing PR the
+//! allocator also carries a memory-pressure watermark: once free slots
+//! fall below it, holders of evictable slots (suspended lanes with
+//! resident KV — see `coordinator/checkpoint.rs`) are expected to give
+//! theirs back, and the serving layer preempts running groups
+//! (`eagle_preempt_total{reason="pressure"}`) instead of admitting more.
 
 #[derive(Debug)]
 pub struct SlotAllocator {
     free: Vec<usize>,
     in_use: Vec<bool>,
+    watermark: usize,
 }
 
 impl SlotAllocator {
     pub fn new(capacity: usize) -> SlotAllocator {
-        SlotAllocator { free: (0..capacity).rev().collect(), in_use: vec![false; capacity] }
+        SlotAllocator {
+            free: (0..capacity).rev().collect(),
+            in_use: vec![false; capacity],
+            watermark: 0,
+        }
+    }
+
+    /// Set the low-free-slots watermark: the allocator reports pressure
+    /// while fewer than `watermark` slots remain free. A watermark of 0
+    /// (the default) never reports pressure.
+    pub fn with_watermark(mut self, watermark: usize) -> SlotAllocator {
+        self.watermark = watermark.min(self.capacity());
+        self
+    }
+
+    pub fn watermark(&self) -> usize {
+        self.watermark
+    }
+
+    /// Memory pressure: free slots have dropped below the watermark.
+    pub fn under_pressure(&self) -> bool {
+        self.watermark > 0 && self.free.len() < self.watermark
     }
 
     pub fn capacity(&self) -> usize {
@@ -55,6 +82,25 @@ mod tests {
         assert_eq!(sorted, vec![0, 1, 2]);
         a.release(s[1]);
         assert_eq!(a.alloc(), Some(s[1]));
+    }
+
+    #[test]
+    fn watermark_reports_pressure_below_threshold() {
+        let mut a = SlotAllocator::new(4).with_watermark(2);
+        assert!(!a.under_pressure(), "4 free >= watermark 2");
+        let s0 = a.alloc().unwrap();
+        let _s1 = a.alloc().unwrap();
+        assert!(!a.under_pressure(), "2 free == watermark 2 is not yet pressure");
+        let _s2 = a.alloc().unwrap();
+        assert!(a.under_pressure(), "1 free < watermark 2");
+        a.release(s0);
+        assert!(!a.under_pressure(), "release clears pressure");
+        // watermark 0 (default) never reports pressure, even exhausted
+        let mut b = SlotAllocator::new(1);
+        b.alloc().unwrap();
+        assert!(!b.under_pressure());
+        // watermark clamps to capacity
+        assert_eq!(SlotAllocator::new(2).with_watermark(9).watermark(), 2);
     }
 
     #[test]

@@ -9,13 +9,15 @@
 //! and the per-group fits in [`BatchEagleEngine`]).
 
 pub mod batch_engine;
+pub mod checkpoint;
 pub mod costfit;
 pub mod kvslots;
 pub mod queue;
 pub mod request;
 pub mod scheduler;
 
-pub use batch_engine::BatchEagleEngine;
+pub use batch_engine::{BatchEagleEngine, LaneInput, LaneOutcome};
+pub use checkpoint::{CheckpointStore, LaneCheckpoint, PreemptSignal};
 pub use costfit::OnlineCostModel;
 pub use kvslots::SlotAllocator;
 pub use queue::RequestQueue;

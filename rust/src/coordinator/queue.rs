@@ -153,6 +153,27 @@ impl RequestQueue {
         if g.entries.len() >= self.capacity {
             return Err(PushError::Full);
         }
+        self.push_locked(&mut g, r);
+        Ok(())
+    }
+
+    /// Re-admit a suspended lane as a resumable entry. Unlike [`push`],
+    /// this bypasses both the capacity bound and `closed`: a resume is
+    /// not new work — its admission was already paid for, and rejecting
+    /// it (queue momentarily full, or a drain racing the suspension)
+    /// would strand a half-served lane. The entry keeps the request's
+    /// original arrival and deadline, so under EDF it re-sorts by its
+    /// real urgency and under FCFS the aging bound keeps it from
+    /// starving behind fresh arrivals.
+    ///
+    /// [`push`]: RequestQueue::push
+    pub fn push_resume(&self, mut r: Request) {
+        r.resume = true;
+        let mut g = self.inner.lock().unwrap();
+        self.push_locked(&mut g, r);
+    }
+
+    fn push_locked(&self, g: &mut Inner, r: Request) {
         let deadline = r.deadline(self.default_deadline_ms).instant();
         let aging_bound = r.arrival + self.aging;
         let (key, aged) = match deadline {
@@ -169,7 +190,6 @@ impl RequestQueue {
             g.rebuild_heap();
         }
         self.notify.notify_one();
-        Ok(())
     }
 
     /// Remove and return the next request in the configured order.
@@ -426,6 +446,39 @@ mod tests {
         q.push(req_dl(3, 500)).unwrap();
         let tight = q.earliest_deadline().unwrap();
         assert!(tight <= Instant::now() + Duration::from_millis(500));
+    }
+
+    #[test]
+    fn push_resume_bypasses_capacity_and_closed() {
+        let q = RequestQueue::new(1);
+        q.push(req(1)).unwrap();
+        assert_eq!(q.push(req(2)), Err(PushError::Full));
+        // a suspended lane's re-admission is not subject to backpressure
+        q.push_resume(req(3));
+        assert_eq!(q.len(), 2);
+        q.close();
+        assert_eq!(q.push(req(4)), Err(PushError::Closed));
+        // ... nor to drain: rejecting it would strand a half-served lane
+        q.push_resume(req(5));
+        assert_eq!(q.pop().unwrap().id, 1);
+        let r3 = q.pop().unwrap();
+        assert_eq!(r3.id, 3);
+        assert!(r3.resume, "requeue path marks the entry resumable");
+        assert_eq!(q.pop().unwrap().id, 5);
+        assert!(q.pop().is_none(), "closed and drained");
+    }
+
+    #[test]
+    fn resume_entries_sort_by_original_deadline_under_edf() {
+        let q = RequestQueue::new(10).with_edf(true);
+        q.push(req_dl(1, 5_000)).unwrap();
+        // a resumed lane whose original deadline is tight outranks the
+        // loose fresh arrival even though it re-entered the queue later
+        let mut r = req_dl(2, 100);
+        r.arrival = Instant::now() - Duration::from_millis(50);
+        q.push_resume(r);
+        assert_eq!(q.pop().unwrap().id, 2, "resume re-sorts by real urgency");
+        assert_eq!(q.pop().unwrap().id, 1);
     }
 
     #[test]

@@ -92,6 +92,13 @@ pub struct Request {
     /// deadline passes while still queued is dropped with 504.
     pub deadline_ms: Option<u64>,
     pub arrival: std::time::Instant,
+    /// Set by the worker's requeue path when this entry resumes a
+    /// suspended lane (a checkpoint is parked under `id` in the
+    /// `CheckpointStore`). Resume entries bypass queue capacity and
+    /// `closed` (they are not new work — rejecting them would strand a
+    /// half-served lane) and cap the scheduler's linger (the lane
+    /// already waited once). Never client-settable.
+    pub resume: bool,
 }
 
 impl Request {
@@ -127,6 +134,7 @@ impl Request {
             seed: v.get("seed").and_then(|x| x.as_f64()).map(|f| f as u64).unwrap_or(7),
             deadline_ms: v.get("deadline_ms").and_then(|x| x.as_f64()).map(|f| f as u64),
             arrival: std::time::Instant::now(),
+            resume: false,
         })
     }
 
@@ -189,6 +197,7 @@ impl Request {
             seed: 0,
             deadline_ms: None,
             arrival: std::time::Instant::now(),
+            resume: false,
         }
     }
 }

@@ -439,6 +439,12 @@ impl Scheduler {
                     batch.extend(more);
                     continue;
                 }
+                // a resumed lane already waited once (it was preempted
+                // mid-generation): admit immediately rather than
+                // lingering for a fuller batch a second time
+                if batch.iter().any(|r| r.resume) {
+                    break;
+                }
                 // deadline-aware linger: never wait past the point where
                 // the tightest queued/admitted deadline could still be
                 // met after the estimated service time
@@ -719,6 +725,20 @@ mod tests {
         let b = s.next_batch(&q);
         assert_eq!(b.len(), 1);
         assert!(t0.elapsed() < Duration::from_secs(2));
+    }
+
+    #[test]
+    fn resume_entries_skip_linger() {
+        // a resumed lane already waited once: with a resume entry in the
+        // batch, collect must not sit out the 5s linger window again
+        let q = RequestQueue::new(16);
+        q.push_resume(req(1));
+        let s = Scheduler::new(4, 5_000);
+        let t0 = Instant::now();
+        let b = s.next_batch(&q);
+        assert_eq!(b.len(), 1);
+        assert!(b[0].resume, "push_resume marks the entry");
+        assert!(t0.elapsed() < Duration::from_secs(2), "resume entry lingered");
     }
 
     #[test]

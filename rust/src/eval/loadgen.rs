@@ -9,8 +9,8 @@
 //! exercises the same admission/shedding/deadline/drain code paths a
 //! production client would, not in-process shortcuts. Results are
 //! written as `BENCH_serve.json` (`schema: bench_serve_v1`): one stanza
-//! per offered-load level plus optional `edf_vs_fcfs` and `soak`
-//! stanzas.
+//! per offered-load level plus optional `edf_vs_fcfs`,
+//! `preempt_vs_run_to_completion`, `p99_search`, and `soak` stanzas.
 //!
 //! Determinism: all randomness (arrival gaps, request mix, retry
 //! jitter) flows from one seeded xorshift PRNG, so a sweep is
@@ -619,6 +619,13 @@ pub struct LoadgenConfig {
     pub seed: u64,
     pub soak: bool,
     pub compare_edf: bool,
+    /// Replay one workload with preemption off then on and assert the
+    /// outputs are byte-identical (`--compare-preempt`).
+    pub compare_preempt: bool,
+    /// Closed-loop search (`--target-p99-ttft-ms N`): bisect the
+    /// offered-load multiplier for the highest level whose p99 TTFT
+    /// stays under the target.
+    pub target_p99_ttft_ms: Option<f64>,
     pub out: std::path::PathBuf,
 }
 
@@ -736,6 +743,156 @@ pub fn compare_edf(cfg: &LoadgenConfig) -> Result<Json> {
     ]))
 }
 
+/// Preemption-on-vs-off comparison: replay ONE pre-generated workload
+/// with lane preemption disabled, then enabled, and check (a)
+/// losslessness — every request completed untruncated in both legs
+/// produced byte-identical text, which holds only if suspend/resume is
+/// bit-identical end to end — and (b) the tight-deadline p99 both ways
+/// (the deadline governor suspends long-running lanes so tight arrivals
+/// dispatch sooner). Reports the on-leg's suspension/resume counts from
+/// the server's own counters so "nothing was preempted" is visible.
+pub fn compare_preempt(cfg: &LoadgenConfig) -> Result<Json> {
+    let mut rng = Rng::new(cfg.seed ^ 0x9ee3_9ee3);
+    let offsets = Arrival::Poisson { rps: cfg.rps }
+        .schedule(cfg.duration_secs, &mut rng)
+        .unwrap_or_default();
+    let items = build_workload(&offsets, &cfg.profile, &mut rng);
+    let mut legs: Vec<(&str, Vec<Sample>, f64, f64)> = Vec::new();
+    for enabled in [false, true] {
+        let (code, _, _) = post_json_full(
+            &cfg.addr,
+            "/admin/preempt",
+            &format!("{{\"enabled\":{enabled}}}"),
+        )?;
+        ensure!(code == 200, "POST /admin/preempt {enabled} returned {code}");
+        let before = snapshot(&cfg.addr)?;
+        let samples = run_workload(
+            &cfg.addr,
+            &items,
+            None,
+            cfg.max_retries,
+            Duration::from_secs_f64(cfg.duration_secs + 30.0),
+            cfg.seed,
+        );
+        wait_quiescent(&cfg.addr, Duration::from_secs(30))?;
+        let after = snapshot(&cfg.addr)?;
+        let preempts = after.total("eagle_preempt_total") - before.total("eagle_preempt_total");
+        let resumes = after.total("eagle_resumes_total") - before.total("eagle_resumes_total");
+        legs.push((if enabled { "on" } else { "off" }, samples, preempts, resumes));
+    }
+    let (_, off, _, _) = &legs[0];
+    let (_, on, preempts, resumes) = &legs[1];
+    let mut mismatches = 0usize;
+    let mut compared = 0usize;
+    for o in off.iter().filter(|s| s.status == 200 && !s.truncated) {
+        if let Some(p) = on.iter().find(|s| s.key == o.key && s.status == 200 && !s.truncated) {
+            compared += 1;
+            if p.text != o.text {
+                mismatches += 1;
+            }
+        }
+    }
+    ensure!(
+        mismatches == 0,
+        "preemption changed output text on {mismatches}/{compared} requests"
+    );
+    let p99 = |samples: &[Sample], tight: bool| {
+        percentile(
+            &sorted_by(samples, |s| (s.status == 200 && s.tight == tight).then_some(s.e2e_ms)),
+            0.99,
+        )
+    };
+    let off_tight = p99(off, true);
+    let on_tight = p99(on, true);
+    eprintln!(
+        "[loadgen] preempt-vs-off: tight p99 {on_tight:.1} ms (on) vs {off_tight:.1} ms (off); \
+         {preempts:.0} preempts, {resumes:.0} resumes, {compared} outputs compared, 0 mismatches"
+    );
+    Ok(Json::obj(vec![
+        ("compared_outputs", Json::Num(compared as f64)),
+        ("output_mismatches", Json::Num(mismatches as f64)),
+        ("off_p99_tight_e2e_ms", Json::Num(off_tight)),
+        ("on_p99_tight_e2e_ms", Json::Num(on_tight)),
+        ("off_p99_loose_e2e_ms", Json::Num(p99(off, false))),
+        ("on_p99_loose_e2e_ms", Json::Num(p99(on, false))),
+        ("on_preempts", Json::Num(*preempts)),
+        ("on_resumes", Json::Num(*resumes)),
+        ("preempt_improved_tight_p99", Json::Bool(on_tight < off_tight)),
+    ]))
+}
+
+/// Closed-loop capacity search: bisect the offered-load multiplier for
+/// the highest level whose p99 TTFT stays at or under `target_ms`.
+/// Bounds come from the sweep's `--levels` (min/max); when even the
+/// lowest level misses the target the stanza says so instead of
+/// reporting a fake capacity. Monotonicity of p99-TTFT-vs-load is the
+/// search invariant — true of an admission-queue server under a fixed
+/// mix.
+pub fn p99_search(cfg: &LoadgenConfig, target_ms: f64) -> Result<Json> {
+    let mut lo = cfg.levels.iter().cloned().fold(f64::INFINITY, f64::min).max(0.05);
+    let mut hi = cfg.levels.iter().cloned().fold(0.0f64, f64::max).max(lo);
+    let probe = |level: f64| -> Result<(f64, f64)> {
+        let rep = run_level(cfg, level)?;
+        eprintln!(
+            "[loadgen] search x{level:.3}: {:.1} rps offered, p99 ttft {:.1} ms \
+             (target {target_ms} ms)",
+            rep.offered_rps, rep.p99_ttft_ms
+        );
+        Ok((rep.offered_rps, rep.p99_ttft_ms))
+    };
+    let mut iterations: Vec<Json> = Vec::new();
+    let note = |level: f64, rps: f64, p99: f64| {
+        Json::obj(vec![
+            ("level", Json::Num(level)),
+            ("offered_rps", Json::Num(rps)),
+            ("p99_ttft_ms", Json::Num(p99)),
+        ])
+    };
+    // feasibility at the floor, capacity short-circuit at the ceiling
+    let (lo_rps, lo_p99) = probe(lo)?;
+    iterations.push(note(lo, lo_rps, lo_p99));
+    if lo_p99 > target_ms {
+        eprintln!("[loadgen] search: even x{lo} misses the target; no feasible level");
+        return Ok(Json::obj(vec![
+            ("target_p99_ttft_ms", Json::Num(target_ms)),
+            ("feasible", Json::Bool(false)),
+            ("iterations", Json::Arr(iterations)),
+        ]));
+    }
+    let mut best = (lo, lo_rps, lo_p99);
+    let (hi_rps, hi_p99) = probe(hi)?;
+    iterations.push(note(hi, hi_rps, hi_p99));
+    if hi_p99 <= target_ms {
+        best = (hi, hi_rps, hi_p99);
+        lo = hi; // the whole range fits: nothing to bisect
+    }
+    let mut iters = 0;
+    while hi - lo > 0.05 && iters < 6 {
+        let mid = (lo + hi) / 2.0;
+        let (rps, p99) = probe(mid)?;
+        iterations.push(note(mid, rps, p99));
+        if p99 <= target_ms {
+            best = (mid, rps, p99);
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        iters += 1;
+    }
+    eprintln!(
+        "[loadgen] search: highest level under target x{:.3} ({:.1} rps, p99 ttft {:.1} ms)",
+        best.0, best.1, best.2
+    );
+    Ok(Json::obj(vec![
+        ("target_p99_ttft_ms", Json::Num(target_ms)),
+        ("feasible", Json::Bool(true)),
+        ("best_level", Json::Num(best.0)),
+        ("best_offered_rps", Json::Num(best.1)),
+        ("best_p99_ttft_ms", Json::Num(best.2)),
+        ("iterations", Json::Arr(iterations)),
+    ]))
+}
+
 /// Chaos soak: drive the bursty profile for the whole duration while a
 /// monitor thread polls `/healthz` and the queue-depth gauge. Asserts
 /// the server never reports a stall, the queue drains back to empty
@@ -850,6 +1007,12 @@ pub fn run(cfg: &LoadgenConfig) -> Result<()> {
         stanzas.push(("levels", Json::Arr(levels)));
         if cfg.compare_edf {
             stanzas.push(("edf_vs_fcfs", compare_edf(cfg)?));
+        }
+        if cfg.compare_preempt {
+            stanzas.push(("preempt_vs_run_to_completion", compare_preempt(cfg)?));
+        }
+        if let Some(target) = cfg.target_p99_ttft_ms {
+            stanzas.push(("p99_search", p99_search(cfg, target)?));
         }
     }
     let out = Json::obj(stanzas);

@@ -4,10 +4,12 @@
 //!                 [--tree static|dynamic] [--verify-width auto|N]
 //!                 [--batch N] [--linger MS] [--width-grouping]
 //!                 [--cost-model PATH] [--edf] [--aging-ms MS]
+//!                 [--preempt] [--kv-budget MIB]
 //!                 [--synthetic [--round-us US]]
 //!   repro loadgen [--addr 127.0.0.1:8085] [--arrivals poisson|bursty|closed|replay]
 //!                 [--rps F] [--levels 0.5,1,2] [--duration SECS]
-//!                 [--soak SECS] [--compare-edf] [--out BENCH_serve.json]
+//!                 [--soak SECS] [--compare-edf] [--compare-preempt]
+//!                 [--target-p99-ttft-ms MS] [--out BENCH_serve.json]
 //!   repro generate --prompt "..." [--model toy-s] [--method eagle]
 //!                  [--max-tokens 64] [--temperature 0] [--seed 7]
 //!                  [--tree static|dynamic] [--draft-depth N] [--frontier K]
@@ -34,7 +36,18 @@ use eagle_serve::util::cli::Args;
 fn main() {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["all", "verbose", "no-adapt", "width-grouping", "raw", "synthetic", "edf", "compare-edf"],
+        &[
+            "all",
+            "verbose",
+            "no-adapt",
+            "width-grouping",
+            "raw",
+            "synthetic",
+            "edf",
+            "compare-edf",
+            "preempt",
+            "compare-preempt",
+        ],
     );
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let result = match cmd {
@@ -84,6 +97,11 @@ fn print_help() {
          \u{20}           only: site=panic|degenerate|delay(MS)[@N],… — see docs/robustness.md)\n\
          \u{20}          --edf [--aging-ms MS]   (earliest-deadline-first admission with a\n\
          \u{20}           starvation aging bound; POST /admin/sched flips at runtime)\n\
+         \u{20}          --preempt [--kv-budget MIB]  (round-boundary lane preemption:\n\
+         \u{20}           deadline/pressure/drain governors suspend lanes into checkpoints\n\
+         \u{20}           that resume bit-identically; --kv-budget bounds suspended KV bytes,\n\
+         \u{20}           past it lanes re-prefill on resume. POST /admin/preempt flips at\n\
+         \u{20}           runtime — see docs/robustness.md)\n\
          \u{20}          --synthetic [--round-us US]  (no-artifact simulated engine: timed\n\
          \u{20}           rounds, deterministic output — the loadgen/CI target)\n\
          loadgen   --addr HOST:PORT --arrivals poisson|bursty|closed|replay --rps F\n\
@@ -91,6 +109,10 @@ fn print_help() {
          \u{20}           BENCH_serve.json: goodput, p50/p99 TTFT + per-token, shed/miss rates)\n\
          \u{20}          --compare-edf           (replay one workload under FCFS then EDF;\n\
          \u{20}           asserts identical outputs + reports tight-deadline p99)\n\
+         \u{20}          --compare-preempt       (replay one workload with preemption off\n\
+         \u{20}           then on; asserts identical outputs + tight-cohort p99 both ways)\n\
+         \u{20}          --target-p99-ttft-ms MS (closed-loop search: highest offered load\n\
+         \u{20}           whose p99 TTFT stays under MS, emitted as a p99_search stanza)\n\
          \u{20}          --soak SECS             (chaos soak: bursty load, /healthz watchdog,\n\
          \u{20}           asserts drain, zero hung slots, zero round-path alloc)\n\
          \u{20}          --tight-deadline-ms MS --tight-frac F --max-retries N --seed N\n\
@@ -157,6 +179,8 @@ fn serve(args: &Args) -> Result<()> {
         synthetic_round_us: args.u64_or("round-us", 2_000),
         edf: args.has("edf"),
         aging_ms: args.u64_or("aging-ms", eagle_serve::coordinator::queue::DEFAULT_AGING_MS),
+        preempt: args.has("preempt"),
+        kv_budget_mib: args.usize_or("kv-budget", 0),
         ..eagle_serve::server::ServeConfig::new(addr, model, &artifacts_dir())
     };
     eagle_serve::server::serve(cfg)
@@ -200,6 +224,8 @@ fn loadgen(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 7),
         soak,
         compare_edf: args.has("compare-edf"),
+        compare_preempt: args.has("compare-preempt"),
+        target_p99_ttft_ms: args.get("target-p99-ttft-ms").and_then(|s| s.parse().ok()),
         out: std::path::PathBuf::from(args.get_or("out", "BENCH_serve.json")),
     };
     lg::run(&cfg)

@@ -86,6 +86,11 @@ pub struct GenRecord {
     /// root sampling) — the engine-side component of TTFT. 0 for
     /// engines that predate the field (baselines).
     pub ttft_ns: u64,
+    /// Prefill passes spent reconstructing evicted KV on resume (prefix
+    /// re-prefill after a memory-pressure eviction — see
+    /// `coordinator/checkpoint.rs`). 0 for fresh and resident-resume
+    /// generations; feeds `eagle_resume_refill_rounds_total`.
+    pub resume_refill_rounds: u64,
     /// Why generation stopped before `max_new` / EOS, if it did:
     /// `Some("deadline")` when the request's `DeadlineClock` expired
     /// mid-generation and the engine returned the partial text. `None`
@@ -114,6 +119,7 @@ impl GenRecord {
             drafted: 0,
             wall_ns: 0,
             ttft_ns: 0,
+            resume_refill_rounds: 0,
             truncated: None,
             timeline: Timeline::default(),
         }

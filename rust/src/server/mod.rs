@@ -9,6 +9,7 @@
 //!   GET  /metrics       Prometheus text exposition (see [`ServerMetrics`])
 //!   GET  /trace         round flight-recorder dump (see `metrics::trace`)
 //!   POST /admin/drain   close the queue, finish in flight, exit cleanly
+//!   POST /admin/preempt {"enabled": bool} — flip lane preemption at runtime
 //!
 //! The worker admits requests through the [`Scheduler`]: per-request
 //! FCFS by default, or — with `--batch N --width-grouping` — width-aware
@@ -66,20 +67,39 @@
 //! stack — queue, scheduler, shedding, drain, metrics, failpoints — runs
 //! end to end without artifacts (the `repro loadgen` harness and the CI
 //! smoke drive exactly this mode).
+//!
+//! Checkpointable lanes (`--preempt`, `docs/robustness.md`): every lane
+//! is suspendable at round boundaries and resumes **bit-identically**.
+//! A [`PreemptCtl`] bundles the lane [`PreemptSignal`], the
+//! [`CheckpointStore`] (with a `--kv-budget` eviction watermark), and a
+//! runtime enable switch (`POST /admin/preempt`). Suspension requests
+//! come from three governors — the EDF head's deadline beating the
+//! running group's slack (per-round, via [`WorkerObserver`]), store
+//! memory pressure, and drain — counted by
+//! `eagle_preempt_total{reason}`. A suspended lane's checkpoint parks in
+//! the store while its request re-enters the queue via `push_resume`
+//! (original arrival/deadline, width hint refreshed from the
+//! controller's current EWMA); the next dispatch resumes it, re-
+//! prefilling first if its KV was evicted (`eagle_kv_evictions_total`,
+//! `eagle_resume_refill_rounds_total`). Preemption never touches the
+//! quarantine ledger, a deadline expiring while suspended delivers the
+//! partial text with `"truncated":"deadline"`, and drain resumes and
+//! completes every suspended lane before the worker exits.
 
 pub mod http;
 
 use anyhow::Result;
 use std::io::Write as _;
 use std::net::TcpListener;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 use crate::coordinator::request::{Method, Request, Response, TreeChoice};
 use crate::coordinator::{
     queue::PushError, verify_curve_points, AdmissionPolicy, AdmittedGroup, BatchEagleEngine,
-    CostModel, OnlineCostModel, RequestQueue, Scheduler,
+    CheckpointStore, CostModel, LaneCheckpoint, LaneInput, LaneOutcome, OnlineCostModel,
+    PreemptSignal, RequestQueue, Scheduler,
 };
 use crate::eval::runner::{Runner, RunSpec};
 use crate::metrics::registry::{
@@ -89,7 +109,7 @@ use crate::metrics::trace::{FlightRecorder, RoundEvent, RoundObserver};
 use crate::metrics::{Aggregate, GenRecord};
 use crate::models::ModelBundle;
 use crate::spec::dyntree::{TreePolicy, WidthSelect};
-use crate::spec::engine::GenConfig;
+use crate::spec::engine::{EagleEngine, GenConfig};
 use crate::spec::scratch::ScratchPool;
 use crate::text::bpe::Bpe;
 use crate::util::json::Json;
@@ -127,6 +147,11 @@ pub struct ServerMetrics {
     c_edf_reordered: CounterId,
     c_linger_capped: CounterId,
     c_cost_refits: CounterId,
+    /// Preemption requests by reason, indexed by [`PreemptReason`].
+    c_preempt: [CounterId; 3],
+    c_kv_evictions: CounterId,
+    c_resumes: CounterId,
+    c_resume_refill: CounterId,
     // gauges
     g_queue_depth: GaugeId,
     g_inflight: GaugeId,
@@ -143,6 +168,7 @@ pub struct ServerMetrics {
     g_edf_enabled: GaugeId,
     g_cost_overhead: GaugeId,
     g_predicted_service: GaugeId,
+    g_suspended: GaugeId,
     /// EWMA of per-request engine service time (seconds, f64 bits;
     /// 0.0 = no generation served yet). Single writer (the worker, via
     /// [`ServerMetrics::record_gen`]); route threads read it for the
@@ -238,6 +264,24 @@ impl ServerMetrics {
             "eagle_cost_refits_total",
             "Successful online re-fits of the dispatch cost model.",
         );
+        let c_preempt = ["deadline", "pressure", "drain"].map(|reason| {
+            b.counter_with(
+                "eagle_preempt_total",
+                "Lane suspension requests at round boundaries, by reason.",
+                &[("reason", reason)],
+            )
+        });
+        let c_kv_evictions = b.counter(
+            "eagle_kv_evictions_total",
+            "Suspended-lane KV payloads evicted under the checkpoint store's budget/pressure \
+             watermark (reconstructed by prefix re-prefill on resume).",
+        );
+        let c_resumes =
+            b.counter("eagle_resumes_total", "Suspended lanes re-dispatched from a checkpoint.");
+        let c_resume_refill = b.counter(
+            "eagle_resume_refill_rounds_total",
+            "Prefill passes spent reconstructing evicted KV on resume.",
+        );
         let g_queue_depth = b.gauge("eagle_queue_depth", "Requests waiting in the queue.");
         let g_inflight = b.gauge("eagle_inflight_lanes", "Lanes currently generating.");
         let g_last_group =
@@ -277,6 +321,8 @@ impl ServerMetrics {
             "eagle_predicted_service_seconds",
             "Live cost model's predicted service time for a default (64-token) request.",
         );
+        let g_suspended =
+            b.gauge("eagle_suspended_lanes", "Lanes currently parked in the checkpoint store.");
         let h_request = b.histogram(
             "eagle_request_seconds",
             "End-to-end request latency (admission to delivery).",
@@ -324,6 +370,10 @@ impl ServerMetrics {
             c_edf_reordered,
             c_linger_capped,
             c_cost_refits,
+            c_preempt,
+            c_kv_evictions,
+            c_resumes,
+            c_resume_refill,
             g_queue_depth,
             g_inflight,
             g_last_group,
@@ -339,6 +389,7 @@ impl ServerMetrics {
             g_edf_enabled,
             g_cost_overhead,
             g_predicted_service,
+            g_suspended,
             ewma_service: AtomicU64::new(0),
             h_request,
             h_ttft,
@@ -381,6 +432,25 @@ impl ServerMetrics {
     /// A request's deadline expired while it was still queued.
     pub fn on_deadline_queue(&self) {
         self.registry.inc(self.c_deadline_queue);
+    }
+
+    /// A governor requested suspension of `lanes` running lanes.
+    pub fn on_preempt(&self, reason: PreemptReason, lanes: u64) {
+        self.registry.add(self.c_preempt[reason as usize], lanes);
+    }
+
+    /// A suspended lane was re-dispatched from its checkpoint.
+    pub fn on_resumes(&self, lanes: u64) {
+        self.registry.add(self.c_resumes, lanes);
+    }
+
+    /// The checkpoint store evicted `n` suspended lanes' KV payloads.
+    pub fn on_kv_evictions(&self, n: u64) {
+        self.registry.add(self.c_kv_evictions, n);
+    }
+
+    pub fn set_suspended(&self, lanes: usize) {
+        self.registry.set_gauge(self.g_suspended, lanes as f64);
     }
 
     /// A group left the queue for an engine: count the dispatch class
@@ -427,6 +497,7 @@ impl ServerMetrics {
             // record carries the marker here)
             self.registry.inc(self.c_deadline_generate);
         }
+        self.registry.add(self.c_resume_refill, rec.resume_refill_rounds);
         self.note_service(rec.wall_ns as f64 / 1e9 / lanes_sharing.max(1) as f64);
     }
 
@@ -618,6 +689,10 @@ struct WorkerObserver<'a> {
     /// Live dispatch-cost re-fit; every round's `(verify_t, verify_ns)`
     /// lands in its EWMA moments (atomics only).
     live: Option<&'a OnlineCostModel>,
+    /// Preemption governors, polled once per round (`None` on paths
+    /// without the preempt stack — bs=1 fresh runs, unit fixtures).
+    preempt: Option<&'a PreemptCtl>,
+    queue: Option<&'a RequestQueue>,
 }
 
 impl RoundObserver for WorkerObserver<'_> {
@@ -631,6 +706,19 @@ impl RoundObserver for WorkerObserver<'_> {
                 (ev.draft_ns + ev.verify_ns + ev.host_ns) as f64 / 1e9,
                 ev.accepted,
             );
+        }
+        // governor poll: atomics + one mutex lock, no allocation, so
+        // the round loop's zero-alloc guarantee holds with it attached
+        if let (Some(p), Some(q)) = (self.preempt, self.queue) {
+            let lanes = self.health.inflight().max(1);
+            if let Some(live) = self.live {
+                if p.poll_deadline(q, live) {
+                    self.metrics.on_preempt(PreemptReason::Deadline, lanes);
+                }
+            }
+            if p.poll_pressure(!q.is_empty()) {
+                self.metrics.on_preempt(PreemptReason::Pressure, lanes);
+            }
         }
         self.health.beat();
     }
@@ -685,6 +773,13 @@ pub struct ServeConfig {
     /// EDF aging bound in milliseconds (`--aging-ms`): the longest an
     /// unbounded-deadline request can be outranked by tighter arrivals.
     pub aging_ms: u64,
+    /// Start with lane preemption enabled (`--preempt`); runtime-
+    /// togglable via `POST /admin/preempt` either way.
+    pub preempt: bool,
+    /// Checkpoint-store KV budget in MiB (`--kv-budget`); suspended
+    /// lanes past it lose their KV payload and re-prefill on resume.
+    /// 0 (the default) = unbounded.
+    pub kv_budget_mib: usize,
 }
 
 impl ServeConfig {
@@ -708,6 +803,8 @@ impl ServeConfig {
             synthetic_round_us: 2_000,
             edf: false,
             aging_ms: crate::coordinator::queue::DEFAULT_AGING_MS,
+            preempt: false,
+            kv_budget_mib: 0,
         }
     }
 }
@@ -783,6 +880,60 @@ fn quarantine_response(id: u64) -> Response {
         status: 500,
         truncated: None,
     }
+}
+
+/// Partial delivery for a suspended lane that will not be resumed:
+/// its deadline expired while it was parked (`reason = "deadline"`), or
+/// a drain found its checkpoint orphaned after the queue emptied
+/// (`reason = "drain"`, the safety net behind `push_resume`). The
+/// tokens generated before suspension were already paid for, so they
+/// ship as a 200 with a truncation marker instead of a bare 504.
+fn suspended_partial_response(
+    id: u64,
+    ck: &LaneCheckpoint,
+    queue_ms: f64,
+    reason: &'static str,
+) -> Response {
+    Response {
+        id,
+        text: format!("partial: {} tokens generated before suspension", ck.rec.tokens.len()),
+        tokens: ck.rec.tokens.len(),
+        target_passes: ck.rec.target_passes,
+        tau: ck.rec.tau(),
+        latency_ms: ck.rec.wall_ns as f64 / 1e6,
+        queue_ms,
+        status: 200,
+        truncated: Some(reason),
+    }
+}
+
+/// Park a suspended lane's checkpoint in the store and re-enqueue its
+/// request as a resumable entry. The requeued request carries the
+/// controller's width hint captured at suspension, so width-grouped
+/// admission migrates the lane into a group matching its adapted width
+/// rather than its cold-start class. Insertions that push the store
+/// past its byte budget evict the coldest resident KV payloads
+/// (`eagle_kv_evictions_total`); those lanes resume via prefix
+/// re-prefill instead of a KV copy-in.
+fn suspend_to_store(
+    mut ck: Box<LaneCheckpoint>,
+    req: &Request,
+    preempt: Option<&PreemptCtl>,
+    queue: &RequestQueue,
+    metrics: &ServerMetrics,
+) {
+    let p = preempt.expect("suspended lane without a preempt controller");
+    ck.id = req.id;
+    let mut rq = req.clone();
+    if let Some(h) = ck.width_hint {
+        rq.width_hint = Some(h);
+    }
+    let evicted = p.store.insert(ck);
+    if evicted > 0 {
+        metrics.on_kv_evictions(evicted as u64);
+    }
+    metrics.set_suspended(p.store.len());
+    queue.push_resume(rq);
 }
 
 /// 504 delivered to a request whose deadline expired while queued.
@@ -879,6 +1030,125 @@ impl Quarantine {
     }
 }
 
+/// Why a governor asked the running group to suspend (the `reason`
+/// label on `eagle_preempt_total`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptReason {
+    /// The EDF head's deadline cannot survive the running group's
+    /// predicted remaining service.
+    Deadline = 0,
+    /// The checkpoint store crossed its memory watermark while work was
+    /// still queued.
+    Pressure = 1,
+    /// `POST /admin/drain` suspending in-flight lanes so the drain
+    /// completes within one round boundary.
+    Drain = 2,
+}
+
+/// The preemption control surface shared by the worker, the per-round
+/// deadline governor ([`WorkerObserver`]), and the admin routes: the
+/// lane [`PreemptSignal`], the [`CheckpointStore`] parking suspended
+/// lanes, and the runtime enable switch (`--preempt` at boot,
+/// `POST /admin/preempt` live). The governors fire at most once per
+/// running group — `begin_group`/`end_group` bracket every dispatch, and
+/// `end_group` clears any unconsumed signal bits so a request aimed at a
+/// finished group can never suspend its successor.
+pub struct PreemptCtl {
+    pub signal: Arc<PreemptSignal>,
+    pub store: CheckpointStore,
+    enabled: AtomicBool,
+    /// Whether a governor already fired for the current group.
+    fired: AtomicBool,
+    /// Tightest real deadline among the running group's lanes, as
+    /// nanoseconds of remaining budget at dispatch plus the dispatch
+    /// `Instant` — kept as a Mutex'd pair (lock-only, no allocation, so
+    /// the per-round governor stays inside the zero-alloc guarantee).
+    group_deadline: Mutex<Option<Instant>>,
+    /// Largest `max_tokens` in the running group (service predictor
+    /// input); 0 = no group running.
+    group_max_tokens: AtomicU64,
+}
+
+impl PreemptCtl {
+    pub fn new(enabled: bool, store: CheckpointStore) -> PreemptCtl {
+        PreemptCtl {
+            signal: Arc::new(PreemptSignal::new()),
+            store,
+            enabled: AtomicBool::new(enabled),
+            fired: AtomicBool::new(false),
+            group_deadline: Mutex::new(None),
+            group_max_tokens: AtomicU64::new(0),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// A group is entering the engines: arm the governors with its
+    /// tightest lane deadline and its service-prediction input.
+    pub fn begin_group(&self, tightest: Option<Instant>, max_tokens: usize) {
+        *self.group_deadline.lock().unwrap() = tightest;
+        self.group_max_tokens.store(max_tokens as u64, Ordering::Relaxed);
+        self.fired.store(false, Ordering::Relaxed);
+    }
+
+    /// The group left the engines (finished, panicked, or suspended):
+    /// disarm the governors and drop any unconsumed suspension bits.
+    pub fn end_group(&self) {
+        *self.group_deadline.lock().unwrap() = None;
+        self.group_max_tokens.store(0, Ordering::Relaxed);
+        self.signal.clear();
+    }
+
+    /// Deadline governor, polled once per speculation round: when the
+    /// tightest queued deadline is tighter than every running lane's AND
+    /// its remaining budget is smaller than the predicted service left
+    /// in the running group, request suspension of the whole group at
+    /// its next round boundary. Returns whether it fired (the caller
+    /// counts `eagle_preempt_total{reason="deadline"}`).
+    pub fn poll_deadline(&self, queue: &RequestQueue, live: &OnlineCostModel) -> bool {
+        if !self.enabled() || self.fired.load(Ordering::Relaxed) {
+            return false;
+        }
+        let Some(head) = queue.earliest_deadline() else { return false };
+        let running = *self.group_deadline.lock().unwrap();
+        let head_tighter = running.is_none_or(|g| head < g);
+        if !head_tighter {
+            return false;
+        }
+        let max_tok = self.group_max_tokens.load(Ordering::Relaxed).max(1) as usize;
+        let remaining = head.saturating_duration_since(Instant::now()).as_secs_f64();
+        let predicted = live.predicted_service_secs(max_tok);
+        if remaining < predicted && !self.fired.swap(true, Ordering::Relaxed) {
+            self.signal.request_all();
+            return true;
+        }
+        false
+    }
+
+    /// Memory-pressure governor: the checkpoint store is past its
+    /// watermark while work is still queued — suspending the running
+    /// group frees its lanes for the backlog and lets the store evict
+    /// cold KV payloads. Same once-per-group latch as the deadline
+    /// governor.
+    pub fn poll_pressure(&self, queue_nonempty: bool) -> bool {
+        if !self.enabled()
+            || !queue_nonempty
+            || !self.store.under_pressure()
+            || self.fired.swap(true, Ordering::Relaxed)
+        {
+            return false;
+        }
+        self.signal.request_all();
+        true
+    }
+}
+
 /// The state the supervisor owns on the worker's behalf: how to run one
 /// healthy admitted group, and how to rebuild after a panicked one. The
 /// production implementation ([`EngineWorker`]) wraps the engines; chaos
@@ -901,6 +1171,16 @@ pub trait GroupWorker {
 /// only its own lanes — each failed lane's slot gets a 500 instead of
 /// hanging, the worker's round state is rebuilt, and the next group is
 /// served by the same thread.
+///
+/// With a [`PreemptCtl`] attached, every dispatch is bracketed by
+/// `begin_group`/`end_group` (arming the deadline governor, clearing
+/// stale suspension bits), a resumed request whose deadline expired
+/// while suspended gets its partial text delivered instead of a bare
+/// 504, and — after the queue closes and empties — any checkpoints
+/// still parked (a suspension whose requeue was lost to fault
+/// injection) are delivered as partials so a drain never strands a
+/// lane. Preempted groups return through the `Ok` arm: suspension is
+/// not a failure, and never advances a fingerprint's quarantine streak.
 pub fn worker_loop(
     queue: &RequestQueue,
     sched: &Scheduler,
@@ -908,6 +1188,7 @@ pub fn worker_loop(
     metrics: &ServerMetrics,
     health: &Health,
     default_deadline_ms: u64,
+    preempt: Option<&PreemptCtl>,
     worker: &mut dyn GroupWorker,
 ) {
     let mut quarantine = Quarantine::new(QUARANTINE_AFTER);
@@ -933,7 +1214,21 @@ pub fn worker_loop(
                     // would only slow the group it joined
                     metrics.on_deadline_queue();
                     let qms = r.arrival.elapsed().as_secs_f64() * 1e3;
-                    deliver(pending, r.id, queue_expired_response(r.id, qms));
+                    let parked = match preempt {
+                        Some(p) if r.resume => p.store.take(r.id),
+                        _ => None,
+                    };
+                    let resp = match &parked {
+                        // a deadline expiring while suspended delivers
+                        // the tokens generated before suspension, not a
+                        // bare 504
+                        Some(ck) => suspended_partial_response(r.id, ck, qms, "deadline"),
+                        None => queue_expired_response(r.id, qms),
+                    };
+                    if let Some(p) = preempt {
+                        metrics.set_suspended(p.store.len());
+                    }
+                    deliver(pending, r.id, resp);
                 } else if quarantine.is_quarantined(&r) {
                     metrics.on_lane_failures(1);
                     deliver(pending, r.id, quarantine_response(r.id));
@@ -945,6 +1240,14 @@ pub fn worker_loop(
                 continue;
             }
             let members: Vec<(u64, u64)> = live.iter().map(|r| (r.id, fingerprint(r))).collect();
+            if let Some(p) = preempt {
+                let tightest = live
+                    .iter()
+                    .filter_map(|r| r.deadline(default_deadline_ms).instant())
+                    .min();
+                let max_tok = live.iter().map(|r| r.max_tokens).max().unwrap_or(1);
+                p.begin_group(tightest, max_tok);
+            }
             let group = AdmittedGroup { verify_cap, requests: live };
             let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 // fault-inject site: a panic between admission and the
@@ -952,8 +1255,13 @@ pub fn worker_loop(
                 let _ = crate::failpoint!("sched-dispatch");
                 worker.run(group);
             }));
+            if let Some(p) = preempt {
+                p.end_group();
+            }
             match run {
                 Ok(()) => {
+                    // suspended members pass through here too: preemption
+                    // is not a failure and must not advance a streak
                     for &(_, fp) in &members {
                         quarantine.note_success(fp);
                     }
@@ -974,6 +1282,15 @@ pub fn worker_loop(
                 }
             }
         }
+    }
+    // drain safety net: the queue closed and emptied, but a checkpoint
+    // can still be parked if fault injection ate its requeue. Deliver
+    // the partial rather than strand the lane's waiter.
+    if let Some(p) = preempt {
+        for ck in p.store.drain_all() {
+            deliver(pending, ck.id, suspended_partial_response(ck.id, &ck, 0.0, "drain"));
+        }
+        metrics.set_suspended(0);
     }
 }
 
@@ -1007,6 +1324,8 @@ struct EngineWorker<'a> {
     metrics: &'a ServerMetrics,
     health: &'a Health,
     live: Option<&'a OnlineCostModel>,
+    queue: &'a RequestQueue,
+    preempt: Option<&'a PreemptCtl>,
     pool: ScratchPool,
     agg: Aggregate,
 }
@@ -1026,6 +1345,8 @@ impl GroupWorker for EngineWorker<'_> {
             self.metrics,
             self.health,
             self.live,
+            self.queue,
+            self.preempt,
             &mut self.pool,
             &mut self.agg,
         );
@@ -1058,6 +1379,19 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
     let metrics = Arc::new(ServerMetrics::new(cfg.trace_cap));
     let health = Arc::new(Health::new(cfg.stall_ms));
     let pending: Arc<PendingMap> = Arc::new(Mutex::new(std::collections::HashMap::new()));
+    // preemption controller, shared by the worker (round-boundary
+    // governors) and the routes (runtime toggle, drain preempt). The
+    // checkpoint store's slot allocator holds 16 suspended lanes per
+    // batch lane with pressure below one free batch's worth; --kv-budget
+    // bounds resident checkpoint KV bytes (0 = unbounded).
+    let preempt_ctl = Arc::new(PreemptCtl::new(
+        cfg.preempt,
+        CheckpointStore::new(
+            cfg.max_batch.max(1) * 16,
+            cfg.max_batch.max(1),
+            (cfg.kv_budget_mib as u64) << 20,
+        ),
+    ));
 
     // static cost model (offline calibration file, or the default) —
     // the seed and fallback for the online re-fit
@@ -1113,6 +1447,7 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
         let metrics = metrics.clone();
         let health = health.clone();
         let live = live.clone();
+        let preempt_ctl = preempt_ctl.clone();
         let round_us = cfg.synthetic_round_us;
         let default_deadline_ms = cfg.default_deadline_ms;
         std::thread::Builder::new().name("inference".into()).spawn(move || {
@@ -1128,9 +1463,20 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
                 metrics: &metrics,
                 health: &health,
                 live: Some(&live),
+                queue: Some(&queue),
+                preempt: Some(&preempt_ctl),
                 agg: Aggregate::new(),
             };
-            worker_loop(&queue, &sched, &pending, &metrics, &health, default_deadline_ms, &mut w);
+            worker_loop(
+                &queue,
+                &sched,
+                &pending,
+                &metrics,
+                &health,
+                default_deadline_ms,
+                Some(&preempt_ctl),
+                &mut w,
+            );
         })?
     } else {
         let queue = queue.clone();
@@ -1138,6 +1484,7 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
         let metrics = metrics.clone();
         let health = health.clone();
         let live = live.clone();
+        let preempt_ctl = preempt_ctl.clone();
         let sched_slot = sched_slot.clone();
         let artifacts = cfg.artifacts.clone();
         let model = cfg.model.clone();
@@ -1193,10 +1540,21 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
                 metrics: &metrics,
                 health: &health,
                 live: Some(&live),
+                queue: &queue,
+                preempt: Some(&preempt_ctl),
                 pool: ScratchPool::new(),
                 agg: Aggregate::new(),
             };
-            worker_loop(&queue, &sched, &pending, &metrics, &health, default_deadline_ms, &mut w);
+            worker_loop(
+                &queue,
+                &sched,
+                &pending,
+                &metrics,
+                &health,
+                default_deadline_ms,
+                Some(&preempt_ctl),
+                &mut w,
+            );
         })?
     };
 
@@ -1220,6 +1578,7 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
                 let next_id = next_id.clone();
                 let sched_slot = sched_slot.clone();
                 let live = live.clone();
+                let preempt_ctl = preempt_ctl.clone();
                 std::thread::spawn(move || {
                     let req = match HttpRequest::read_from(&mut stream) {
                         Ok(r) => r,
@@ -1234,6 +1593,7 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
                         default_deadline_ms,
                         sched: &sched_slot,
                         live: &live,
+                        preempt: &preempt_ctl,
                     };
                     let resp = route(&req, &ctx);
                     let _ = stream.write_all(resp.to_bytes().as_slice());
@@ -1283,12 +1643,14 @@ fn run_group(
     metrics: &ServerMetrics,
     health: &Health,
     live: Option<&OnlineCostModel>,
+    queue: &RequestQueue,
+    preempt: Option<&PreemptCtl>,
     pool: &mut ScratchPool,
     agg: &mut Aggregate,
 ) {
     let reqs = &group.requests;
     let b = reqs.len();
-    let observer = WorkerObserver { metrics, health, live };
+    let observer = WorkerObserver { metrics, health, live, preempt, queue: Some(queue) };
     // the batched engine can take the group iff it is a multi-lane group
     // of batchable requests (`Request::width_batchable`, the same
     // predicate the scheduler groups by), the server is not pinned to a
@@ -1323,6 +1685,11 @@ fn run_group(
             .with_policy(policy.clone())
             .with_deadlines(reqs.iter().map(|r| r.deadline(default_deadline_ms)).collect())
             .with_observer(&observer);
+        if let Some(p) = preempt {
+            if p.enabled() {
+                engine = engine.with_preempt(p.signal.clone());
+            }
+        }
         // the group's width cap only applies under the dynamic planner,
         // which shrinks each lane's node budget to fit it; a static tree
         // is a fixed shape that no narrow cap can hold, so a static
@@ -1339,31 +1706,58 @@ fn run_group(
             seed: reqs[0].seed,
             eos: Some(bpe.eos()),
         };
-        // per-request seeds: a lane's sampled stream is its own, so the
-        // response matches the request's equal-seed bs=1 run no matter
-        // which other lanes share the batch
-        let seeds: Vec<u64> = reqs.iter().map(|r| r.seed).collect();
-        match engine.generate_pooled_seeded(&prompts, &seeds, &gen, pool) {
-            Ok(recs) => {
+        // per-lane inputs: a fresh prompt, or — for a request the
+        // worker re-admitted after suspension — its parked checkpoint
+        // (seeds stay per-lane either way, so a lane's sampled stream
+        // is its own no matter which other lanes share the batch)
+        let mut resumes = 0u64;
+        let inputs: Vec<LaneInput<'_>> = reqs
+            .iter()
+            .zip(&prompts)
+            .map(|(r, prompt)| {
+                if r.resume {
+                    if let Some(ckpt) = preempt.and_then(|p| p.store.take(r.id)) {
+                        resumes += 1;
+                        return LaneInput::Resume { ckpt };
+                    }
+                    // checkpoint gone (drain safety net beat us to it):
+                    // fall through and regenerate from the prompt
+                }
+                LaneInput::Fresh { prompt: prompt.as_slice(), seed: r.seed }
+            })
+            .collect();
+        if resumes > 0 {
+            metrics.on_resumes(resumes);
+        }
+        match engine.generate_pooled_entries(inputs, &gen, pool) {
+            Ok(outcomes) => {
                 let lat_ms = t0.elapsed().as_secs_f64() * 1e3;
-                for ((req, rec), qw) in reqs.iter().zip(recs).zip(&queue_waits) {
-                    metrics.record_gen(&rec, *qw, req.arrival.elapsed().as_secs_f64(), b as u64);
-                    agg.add(&rec);
-                    deliver(
-                        pending,
-                        req.id,
-                        Response {
-                            id: req.id,
-                            text: bpe.decode(&rec.tokens),
-                            tokens: rec.tokens.len(),
-                            target_passes: rec.target_passes,
-                            tau: rec.tau(),
-                            latency_ms: lat_ms,
-                            queue_ms: qw * 1e3,
-                            status: 200,
-                            truncated: rec.truncated,
-                        },
-                    );
+                for ((req, outcome), qw) in reqs.iter().zip(outcomes).zip(&queue_waits) {
+                    match outcome {
+                        LaneOutcome::Done(rec) => {
+                            let e2e = req.arrival.elapsed().as_secs_f64();
+                            metrics.record_gen(&rec, *qw, e2e, b as u64);
+                            agg.add(&rec);
+                            deliver(
+                                pending,
+                                req.id,
+                                Response {
+                                    id: req.id,
+                                    text: bpe.decode(&rec.tokens),
+                                    tokens: rec.tokens.len(),
+                                    target_passes: rec.target_passes,
+                                    tau: rec.tau(),
+                                    latency_ms: lat_ms,
+                                    queue_ms: qw * 1e3,
+                                    status: 200,
+                                    truncated: rec.truncated,
+                                },
+                            );
+                        }
+                        LaneOutcome::Suspended(ck) => {
+                            suspend_to_store(ck, req, preempt, queue, metrics);
+                        }
+                    }
                 }
                 metrics.update_aggregate(agg);
             }
@@ -1386,6 +1780,61 @@ fn run_group(
         metrics.set_inflight(1);
         let qw = req.arrival.elapsed().as_secs_f64();
         let t0 = Instant::now();
+        let gen = GenConfig {
+            max_new: req.max_tokens,
+            temperature: req.temperature,
+            seed: req.seed,
+            eos: Some(bpe.eos()),
+        };
+        // a suspended tree lane re-enters the engine straight from its
+        // checkpoint — the runner only knows fresh prompts. Chain and
+        // vanilla lanes never suspend; a stray resume flag with no
+        // parked checkpoint falls through and regenerates.
+        if req.resume && req.method == Method::Eagle {
+            if let (Some(p), Some(draft)) = (preempt, bundle.drafts.get("eagle")) {
+                if let Some(ckpt) = p.store.take(req.id) {
+                    metrics.set_suspended(p.store.len());
+                    metrics.on_resumes(1);
+                    let mut engine = EagleEngine::new_tree(&bundle.target, draft, c)
+                        .with_policy(resolve_tree(req.tree, default_tree))
+                        .with_deadline(req.deadline(default_deadline_ms))
+                        .with_observer(&observer);
+                    if p.enabled() {
+                        engine = engine.with_preempt(p.signal.clone());
+                    }
+                    match engine.generate_resumable(LaneInput::Resume { ckpt }, &gen) {
+                        Ok(LaneOutcome::Done(rec)) => {
+                            metrics.record_gen(&rec, qw, req.arrival.elapsed().as_secs_f64(), 1);
+                            agg.add(&rec);
+                            deliver(
+                                pending,
+                                req.id,
+                                Response {
+                                    id: req.id,
+                                    text: bpe.decode(&rec.tokens),
+                                    tokens: rec.tokens.len(),
+                                    target_passes: rec.target_passes,
+                                    tau: rec.tau(),
+                                    latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                                    queue_ms: qw * 1e3,
+                                    status: 200,
+                                    truncated: rec.truncated,
+                                },
+                            );
+                        }
+                        Ok(LaneOutcome::Suspended(ck)) => {
+                            // parked again; no delivery until it completes
+                            suspend_to_store(ck, req, preempt, queue, metrics);
+                        }
+                        Err(e) => {
+                            metrics.on_errors(1);
+                            deliver(pending, req.id, error_response(req.id, &e));
+                        }
+                    }
+                    continue;
+                }
+            }
+        }
         let ids = bpe.encode_prompt(&req.prompt);
         let spec = RunSpec {
             method: req.method,
@@ -1399,12 +1848,6 @@ fn run_group(
             },
             deadline: req.deadline(default_deadline_ms),
             ..Default::default()
-        };
-        let gen = GenConfig {
-            max_new: req.max_tokens,
-            temperature: req.temperature,
-            seed: req.seed,
-            eos: Some(bpe.eos()),
         };
         let resp = match runner.run_one_observed(bundle, &ids, &spec, &gen, Some(&observer)) {
             Ok(rec) => {
@@ -1459,6 +1902,10 @@ struct SyntheticWorker<'a> {
     metrics: &'a ServerMetrics,
     health: &'a Health,
     live: Option<&'a OnlineCostModel>,
+    /// Queue handle for requeueing suspended lanes (`None` in unit
+    /// tests that drive `run` directly without preemption).
+    queue: Option<&'a RequestQueue>,
+    preempt: Option<&'a PreemptCtl>,
     agg: Aggregate,
 }
 
@@ -1469,20 +1916,80 @@ impl GroupWorker for SyntheticWorker<'_> {
         self.metrics.on_dispatch(b >= 2, b as u64);
         self.health.set_inflight(b as u64);
         self.metrics.set_inflight(b as u64);
-        let observer =
-            WorkerObserver { metrics: self.metrics, health: self.health, live: self.live };
+        let observer = WorkerObserver {
+            metrics: self.metrics,
+            health: self.health,
+            live: self.live,
+            preempt: self.preempt,
+            queue: self.queue,
+        };
         let t0 = Instant::now();
         let queue_waits: Vec<f64> =
             reqs.iter().map(|r| r.arrival.elapsed().as_secs_f64()).collect();
-        let mut recs: Vec<GenRecord> =
-            reqs.iter().map(|r| GenRecord::new(r.prompt.len())).collect();
+        // a resumed lane continues from its checkpointed record: the
+        // token stream is a pure function of (fingerprint, index), so
+        // the continuation is byte-identical to an uninterrupted run.
+        // Evicted KV costs one simulated re-prefill round, mirroring
+        // the real engines' refill path.
+        let mut recs: Vec<GenRecord> = Vec::with_capacity(b);
+        let mut resumes = 0u64;
+        for r in reqs.iter() {
+            let parked = if r.resume {
+                self.preempt.and_then(|p| p.store.take(r.id))
+            } else {
+                None
+            };
+            match parked {
+                Some(mut ck) => {
+                    resumes += 1;
+                    let mut rec = std::mem::replace(&mut ck.rec, GenRecord::new(0));
+                    if crate::failpoint!("resume") {
+                        ck.evict_kv();
+                    }
+                    if !ck.kv_resident {
+                        let refill_ns = self.round_us.max(1) * 1_000;
+                        std::thread::sleep(std::time::Duration::from_nanos(refill_ns));
+                        rec.resume_refill_rounds += 1;
+                    }
+                    recs.push(rec);
+                }
+                None => recs.push(GenRecord::new(r.prompt.len())),
+            }
+        }
+        if resumes > 0 {
+            self.metrics.on_resumes(resumes);
+            if let Some(p) = self.preempt {
+                self.metrics.set_suspended(p.store.len());
+            }
+        }
         let mut done = vec![false; b];
+        let mut suspended = vec![false; b];
         let mut ttft = vec![0u64; b];
         let rounds_max =
             reqs.iter().map(|r| r.max_tokens.max(1).div_ceil(SYNTH_TAU)).max().unwrap_or(1);
         for round in 0..rounds_max {
             if done.iter().all(|&d| d) {
                 break;
+            }
+            // round boundary: retire lanes marked for suspension while
+            // the rest of the group keeps running (the same per-lane
+            // checkpoint failpoint the real engines consult)
+            if let Some(p) = self.preempt {
+                if p.signal.any() {
+                    for i in 0..b {
+                        if done[i] || !p.signal.take(i) {
+                            continue;
+                        }
+                        if crate::failpoint!("checkpoint") {
+                            continue; // degenerate: drop the request, run on
+                        }
+                        suspended[i] = true;
+                        done[i] = true;
+                    }
+                    if done.iter().all(|&d| d) {
+                        break;
+                    }
+                }
             }
             // fault-inject site: the same `verify` site the real engines
             // mark, so `--inject verify=panic@N` exercises supervision
@@ -1549,8 +2056,29 @@ impl GroupWorker for SyntheticWorker<'_> {
         let wall = t0.elapsed().as_nanos() as u64;
         for (i, r) in reqs.iter().enumerate() {
             let rec = &mut recs[i];
-            rec.wall_ns = wall;
-            rec.ttft_ns = ttft[i].max(1);
+            rec.wall_ns = rec.wall_ns.saturating_add(wall);
+            if rec.ttft_ns == 0 && ttft[i] > 0 {
+                // first token this group — or carried over on resume
+                rec.ttft_ns = ttft[i];
+            }
+            if suspended[i] {
+                // park the lane: a stand-in KV payload sized to the
+                // generated context keeps the store's slot and byte
+                // accounting (and its eviction policy) honest
+                if let (Some(p), Some(q)) = (self.preempt, self.queue) {
+                    let mut ck = Box::new(LaneCheckpoint::new());
+                    ck.m = rec.tokens.len();
+                    ck.kv_target.resize(ck.m.max(1) * 16, 0.0);
+                    ck.kv_resident = true;
+                    ck.deadline = r.deadline(self.default_deadline_ms);
+                    ck.rec = std::mem::replace(rec, GenRecord::new(0));
+                    suspend_to_store(ck, r, Some(p), q, self.metrics);
+                }
+                continue;
+            }
+            if rec.ttft_ns == 0 {
+                rec.ttft_ns = 1;
+            }
             self.metrics.record_gen(
                 rec,
                 queue_waits[i],
@@ -1598,6 +2126,7 @@ struct RouteCtx<'a> {
     /// (always set in synthetic mode).
     sched: &'a OnceLock<Arc<Scheduler>>,
     live: &'a OnlineCostModel,
+    preempt: &'a PreemptCtl,
 }
 
 fn route(req: &HttpRequest, ctx: &RouteCtx) -> HttpResponse {
@@ -1630,6 +2159,16 @@ fn route(req: &HttpRequest, ctx: &RouteCtx) -> HttpResponse {
             // graceful drain: stop admitting, let the worker finish the
             // queue, then serve() exits when the worker thread joins.
             // Idempotent — a second drain finds the queue already closed.
+            // With preemption enabled, in-flight lanes are asked to
+            // suspend at their next round boundary; `push_resume`
+            // bypasses the closed queue, so suspended lanes re-admit
+            // and run to completion before the worker exits — drain
+            // latency is bounded by one round, not one full generation.
+            let lanes = health.inflight();
+            if ctx.preempt.enabled() && lanes > 0 {
+                metrics.on_preempt(PreemptReason::Drain, lanes);
+                ctx.preempt.signal.request_all();
+            }
             health.set_draining();
             queue.close();
             HttpResponse::ok(
@@ -1637,6 +2176,32 @@ fn route(req: &HttpRequest, ctx: &RouteCtx) -> HttpResponse {
                 Json::obj(vec![
                     ("draining", Json::Bool(true)),
                     ("queue_depth", Json::Num(queue.len() as f64)),
+                    ("suspended", Json::Num(ctx.preempt.store.len() as f64)),
+                ])
+                .to_string()
+                .into_bytes(),
+            )
+        }
+        ("POST", "/admin/preempt") => {
+            // flip lane preemption at runtime: {"enabled": true|false}.
+            // Off stops the governors and round-boundary polling; lanes
+            // already suspended still resume normally (the store and
+            // `push_resume` path stay live).
+            let enabled = std::str::from_utf8(&req.body)
+                .ok()
+                .and_then(|s| Json::parse(s).ok())
+                .and_then(|v| v.get("enabled").and_then(Json::as_bool));
+            let Some(on) = enabled else {
+                return HttpResponse::status(400, "enabled must be true or false");
+            };
+            ctx.preempt.set_enabled(on);
+            HttpResponse::ok(
+                "application/json",
+                Json::obj(vec![
+                    ("enabled", Json::Bool(on)),
+                    ("suspended", Json::Num(ctx.preempt.store.len() as f64)),
+                    ("kv_evictions", Json::Num(ctx.preempt.store.evictions() as f64)),
+                    ("resident_bytes", Json::Num(ctx.preempt.store.resident_bytes() as f64)),
                 ])
                 .to_string()
                 .into_bytes(),
@@ -1826,9 +2391,11 @@ mod tests {
             metrics: &metrics,
             health: &health,
             live: None,
+            queue: None,
+            preempt: None,
             agg: Aggregate::new(),
         };
-        w.run(AdmittedGroup { verify_cap: 32, requests });
+        w.run(AdmittedGroup { verify_cap: Some(32), requests });
         slots.iter().map(|s| s.0.lock().unwrap().take().expect("delivered")).collect()
     }
 
@@ -1863,10 +2430,121 @@ mod tests {
             metrics: &metrics,
             health: &health,
             live: Some(&live),
+            queue: None,
+            preempt: None,
             agg: Aggregate::new(),
         };
-        w.run(AdmittedGroup { verify_cap: 32, requests: vec![r] });
+        w.run(AdmittedGroup { verify_cap: Some(32), requests: vec![r] });
         // 30 tokens at tau=3 -> 10 rounds observed
         assert_eq!(live.observations(), 10);
+    }
+
+    /// A PreemptCtl with a tight store: one resident slot, watermark 1,
+    /// so a single parked resident checkpoint puts it under pressure.
+    fn tight_ctl() -> PreemptCtl {
+        PreemptCtl::new(true, CheckpointStore::new(1, 1, 0))
+    }
+
+    #[test]
+    fn preempt_governors_fire_once_per_group() {
+        let ctl = tight_ctl();
+        let mut dummy = Box::new(LaneCheckpoint::new());
+        dummy.id = 999;
+        dummy.kv_target.resize(64, 0.0);
+        dummy.kv_resident = true;
+        ctl.store.insert(dummy);
+        assert!(ctl.store.under_pressure());
+        ctl.begin_group(None, 10);
+        assert!(ctl.poll_pressure(true), "pressure + waiters fires");
+        assert!(ctl.signal.any());
+        assert!(!ctl.poll_pressure(true), "latched for the rest of the group");
+        ctl.end_group();
+        assert!(!ctl.signal.any(), "end_group clears unconsumed bits");
+        ctl.begin_group(None, 10);
+        assert!(ctl.poll_pressure(true), "new group re-arms the latch");
+        ctl.end_group();
+        // disabled: never fires
+        ctl.set_enabled(false);
+        ctl.begin_group(None, 10);
+        assert!(!ctl.poll_pressure(true));
+        ctl.end_group();
+    }
+
+    #[test]
+    fn synthetic_suspend_resume_is_byte_identical() {
+        // a lane suspended mid-run by the pressure governor, requeued,
+        // and resumed must deliver exactly the text an uninterrupted
+        // run produces — the serving-level half of the bit-identical
+        // resume guarantee (the engine-level half lives in
+        // tests/prop_checkpoint.rs)
+        let uninterrupted = run_synth(vec![synth_req(1, "delta", 24)]);
+        assert_eq!(uninterrupted[0].tokens, 24);
+
+        let queue = RequestQueue::new(8);
+        let ctl = tight_ctl();
+        // park a dummy resident so the store is under pressure, and
+        // leave a stranger queued so the governor sees waiting work
+        let mut dummy = Box::new(LaneCheckpoint::new());
+        dummy.id = 999;
+        dummy.kv_target.resize(64, 0.0);
+        dummy.kv_resident = true;
+        ctl.store.insert(dummy);
+        queue.push(synth_req(50, "stranger", 3)).unwrap();
+
+        let pending: PendingMap = Mutex::new(std::collections::HashMap::new());
+        let metrics = ServerMetrics::new(16);
+        let health = Health::new(30_000);
+        let slot: Slot = Arc::new((Mutex::new(None), Condvar::new()));
+        pending.lock().unwrap().insert(2, slot.clone());
+        let mut w = SyntheticWorker {
+            round_us: 50,
+            default_deadline_ms: 0,
+            pending: &pending,
+            metrics: &metrics,
+            health: &health,
+            live: None,
+            queue: Some(&queue),
+            preempt: Some(&ctl),
+            agg: Aggregate::new(),
+        };
+        ctl.begin_group(None, 24);
+        w.run(AdmittedGroup { verify_cap: Some(32), requests: vec![synth_req(2, "delta", 24)] });
+        ctl.end_group();
+        assert!(slot.0.lock().unwrap().is_none(), "suspended lane must not deliver");
+        assert!(ctl.store.contains(2), "checkpoint parked under the request id");
+
+        // the worker requeued the lane as a resumable entry
+        let resumed = queue
+            .pop_up_to(8)
+            .into_iter()
+            .find(|r| r.resume)
+            .expect("suspended lane requeued");
+        assert_eq!(resumed.id, 2);
+
+        ctl.begin_group(None, 24);
+        w.run(AdmittedGroup { verify_cap: Some(32), requests: vec![resumed] });
+        ctl.end_group();
+        let out = slot.0.lock().unwrap().take().expect("resumed lane delivers");
+        assert_eq!(out.status, 200);
+        assert_eq!(out.tokens, 24);
+        assert_eq!(out.text, uninterrupted[0].text, "resume diverged from uninterrupted run");
+        assert!(!ctl.store.contains(2), "checkpoint consumed by resume");
+    }
+
+    #[test]
+    fn suspended_deadline_expiry_delivers_partial() {
+        // worker_loop's admission-time expiry check: a resumed request
+        // whose checkpoint is parked gets its partial tokens as a 200
+        // with the deadline marker, not a bare 504
+        let mut ck = Box::new(LaneCheckpoint::new());
+        ck.id = 7;
+        ck.rec.tokens.extend([1, 2, 3]);
+        ck.rec.target_passes = 1;
+        let resp = suspended_partial_response(7, &ck, 12.0, "deadline");
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.tokens, 3);
+        assert_eq!(resp.truncated, Some("deadline"));
+        let drained = suspended_partial_response(7, &ck, 0.0, "drain");
+        assert_eq!(drained.truncated, Some("drain"));
     }
 }

@@ -179,6 +179,80 @@ impl SpecController {
             self.params.frontier_k = self.params.frontier_k.saturating_sub(1).max(c.min_frontier);
         }
     }
+
+    /// Capture the full adaptive state (shape params, per-depth EWMAs,
+    /// rate EWMA, width-hysteresis latch, round count) into a pre-sized
+    /// snapshot. `clear` + `extend_from_slice` into the snapshot's
+    /// existing capacity, so a warm capture allocates nothing (the lane-
+    /// checkpoint zero-alloc guarantee; see `coordinator/checkpoint.rs`).
+    pub fn snapshot_into(&self, s: &mut ControllerSnapshot) {
+        s.params = self.params;
+        s.alpha_ewma.clear();
+        s.alpha_ewma.extend_from_slice(&self.alpha_ewma);
+        s.alpha_seen.clear();
+        s.alpha_seen.extend_from_slice(&self.alpha_seen);
+        s.rate_ewma = self.rate_ewma;
+        s.rate_seen = self.rate_seen;
+        s.width_down = self.width_down;
+        s.rounds = self.rounds;
+    }
+
+    /// Restore adaptive state from a snapshot (inverse of
+    /// [`SpecController::snapshot_into`]); `cfg` is kept from `self`,
+    /// matching checkpoint resume where the engine rebuilds the
+    /// controller from its own config and splices the learned state in.
+    pub fn restore(&mut self, s: &ControllerSnapshot) {
+        self.params = s.params;
+        self.alpha_ewma.clear();
+        self.alpha_ewma.extend_from_slice(&s.alpha_ewma);
+        self.alpha_seen.clear();
+        self.alpha_seen.extend_from_slice(&s.alpha_seen);
+        self.rate_ewma = s.rate_ewma;
+        self.rate_seen = s.rate_seen;
+        self.width_down = s.width_down;
+        self.rounds = s.rounds;
+    }
+}
+
+/// Plain-data image of a [`SpecController`]'s adaptive state, carried by
+/// lane checkpoints across suspend/resume. Buffers are pre-sized once
+/// (`reserve`) so warm round-boundary captures stay allocation-free.
+#[derive(Debug, Clone)]
+pub struct ControllerSnapshot {
+    pub params: DynTreeParams,
+    pub alpha_ewma: Vec<f32>,
+    pub alpha_seen: Vec<bool>,
+    pub rate_ewma: f32,
+    pub rate_seen: bool,
+    pub width_down: bool,
+    pub rounds: u64,
+}
+
+impl Default for ControllerSnapshot {
+    fn default() -> Self {
+        ControllerSnapshot {
+            params: DynTreeParams { depth: 1, frontier_k: 1, branch: 1, budget: 1 },
+            alpha_ewma: Vec::new(),
+            alpha_seen: Vec::new(),
+            rate_ewma: 0.0,
+            rate_seen: false,
+            width_down: false,
+            rounds: 0,
+        }
+    }
+}
+
+impl ControllerSnapshot {
+    /// Pre-size for controllers tracking up to `max_depth` per-depth
+    /// EWMAs (the capture path never grows past the controller's vecs).
+    pub fn reserve(&mut self, max_depth: usize) {
+        crate::spec::scratch::ensure_cap(&mut self.alpha_ewma, max_depth);
+        crate::spec::scratch::ensure_cap(&mut self.alpha_seen, max_depth);
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.alpha_ewma.capacity() * std::mem::size_of::<f32>() + self.alpha_seen.capacity()
+    }
 }
 
 #[cfg(test)]
@@ -282,6 +356,39 @@ mod tests {
             c.observe_round(0, 5);
         }
         assert!(c.is_width_down(), "a genuine collapse must still cross `low`");
+    }
+
+    #[test]
+    fn snapshot_restore_is_bit_identical() {
+        let cfg = ControllerConfig::default();
+        let mut a = SpecController::new(cfg.clone(), init());
+        // drive through warmup, adaptation, and a width downshift so
+        // every piece of private state is non-trivial at the cut point
+        for i in 0..9 {
+            a.observe_round(if i < 5 { 5 } else { 0 }, 5);
+        }
+        let mut snap = ControllerSnapshot::default();
+        snap.reserve(cfg.max_depth);
+        a.snapshot_into(&mut snap);
+        let mut b = SpecController::new(cfg, init());
+        b.restore(&snap);
+        assert_eq!(a.params(), b.params());
+        assert_eq!(a.rounds, b.rounds);
+        assert!(a.rate_ewma.to_bits() == b.rate_ewma.to_bits());
+        assert_eq!(a.is_width_down(), b.is_width_down());
+        // continue both controllers: every subsequent decision matches
+        for i in 0..20 {
+            let acc = [0usize, 2, 5, 3, 1][i % 5];
+            a.observe_round(acc, 5);
+            b.observe_round(acc, 5);
+            assert_eq!(a.params(), b.params(), "round {i}");
+            assert!(a.rate_ewma.to_bits() == b.rate_ewma.to_bits(), "round {i}");
+            assert_eq!(a.effective_low().to_bits(), b.effective_low().to_bits());
+        }
+        // warm re-capture into the same snapshot must not grow it
+        let cap0 = snap.capacity_bytes();
+        a.snapshot_into(&mut snap);
+        assert_eq!(snap.capacity_bytes(), cap0, "warm capture grew the snapshot");
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub mod planner;
 pub mod policy;
 pub mod widths;
 
-pub use controller::{ControllerConfig, SpecController};
+pub use controller::{ControllerConfig, ControllerSnapshot, SpecController};
 pub use planner::{
     expand_candidates, expand_candidates_into, rerank, rerank_into, select_frontier,
     select_frontier_into, DynTreeParams, RerankScratch,

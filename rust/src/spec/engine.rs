@@ -30,6 +30,7 @@
 //! lane, so equal-seed bs=1 and batched runs are bit-identical.
 
 use anyhow::{bail, Result};
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::dyntree::{
@@ -41,6 +42,10 @@ use super::sampling::{
 };
 use super::scratch::RoundScratch;
 use super::tree::{chain_extend_bias_to, fill_step_rows_into, DraftTree, TreeSpec};
+use crate::coordinator::batch_engine::{LaneInput, LaneOutcome};
+use crate::coordinator::checkpoint::{
+    copy_lane_kv_in, copy_lane_kv_out, LaneCheckpoint, PreemptSignal,
+};
 use crate::metrics::trace::{RoundEvent, RoundObserver};
 use crate::metrics::GenRecord;
 use crate::models::{EagleDraft, TargetModel};
@@ -96,6 +101,10 @@ pub struct EagleEngine<'a> {
     /// stops drafting and returns the partial record with
     /// `rec.truncated = Some("deadline")`. Default: unbounded.
     pub deadline: DeadlineClock,
+    /// Suspension requests (this engine is lane 0), polled at round
+    /// boundaries by [`EagleEngine::generate_resumable`]. `None` (the
+    /// default) disables preemption entirely.
+    pub preempt: Option<Arc<PreemptSignal>>,
 }
 
 impl<'a> EagleEngine<'a> {
@@ -120,6 +129,7 @@ impl<'a> EagleEngine<'a> {
             draft_w: c.draft_w,
             observer: None,
             deadline: DeadlineClock::default(),
+            preempt: None,
         }
     }
 
@@ -145,7 +155,16 @@ impl<'a> EagleEngine<'a> {
             draft_w: c.draft_w,
             observer: None,
             deadline: DeadlineClock::default(),
+            preempt: None,
         }
+    }
+
+    /// Attach a preemption signal (builder-style): a request for lane 0
+    /// suspends the run at its next round boundary and
+    /// [`EagleEngine::generate_resumable`] returns the checkpoint.
+    pub fn with_preempt(mut self, sig: Arc<PreemptSignal>) -> Self {
+        self.preempt = Some(sig);
+        self
     }
 
     /// Swap the tree policy (builder-style; used by the runner/server to
@@ -205,65 +224,150 @@ impl<'a> EagleEngine<'a> {
     }
 
     pub fn generate(&self, prompt: &[u32], cfg: &GenConfig) -> Result<GenRecord> {
+        let input = LaneInput::Fresh { prompt, seed: cfg.seed };
+        match self.generate_resumable(input, cfg)? {
+            LaneOutcome::Done(rec) => Ok(rec),
+            LaneOutcome::Suspended(_) => {
+                unreachable!("record-only callers run without a preempt signal")
+            }
+        }
+    }
+
+    /// [`EagleEngine::generate`] with checkpoint support: the input is a
+    /// fresh prompt or a suspended lane's [`LaneCheckpoint`], and the
+    /// outcome is a finished record or a new checkpoint, captured when
+    /// the attached [`PreemptSignal`] requested lane 0 at a round
+    /// boundary. Resume is bit-identical to the uninterrupted run; an
+    /// evicted checkpoint first rebuilds its KV by re-prefilling the
+    /// committed prefix (which must fit the prefill window). Semantics
+    /// mirror the batched engine's `generate_pooled_entries`.
+    pub fn generate_resumable(&self, input: LaneInput<'_>, cfg: &GenConfig) -> Result<LaneOutcome> {
         let t_all = Instant::now();
-        let mut rec = GenRecord::new(prompt.len());
-        // pre-size the record's per-round vectors so steady-state rounds
-        // never touch the allocator through metrics bookkeeping either
-        rec.reserve_rounds(cfg.max_new);
-        let mut rng = Rng::new(cfg.seed);
         let tgt = self.target;
         let d = tgt.d;
         let vocab = tgt.vocab;
         let s_tot = tgt.max_len;
         let p_win = tgt.prefill_p;
 
-        // ---- target prefill ------------------------------------------------
         let mut cache = tgt.new_cache(1);
-        let t0 = Instant::now();
-        let (out, plen) = tgt.prefill(prompt, &mut cache)?;
-        rec.timeline.prefill_ns += t0.elapsed().as_nanos() as u64;
-        rec.target_passes += 1;
-        let last_logits = tgt.row(&out.logits, p_win, 0, plen - 1, vocab);
-        let root_tok = self.pick(last_logits, cfg.temperature, &mut rng);
-        rec.tokens.push(root_tok);
-        // first committed token: the engine-side TTFT component
-        rec.ttft_ns = t_all.elapsed().as_nanos() as u64;
-        let mut committed: Vec<u32> = Vec::with_capacity(prompt.len() + cfg.max_new + 2);
-        committed.extend_from_slice(prompt);
-        committed.push(root_tok);
-        let mut m = plen; // committed boundary: root at position m
-
-        // ---- draft prefill (pair slots 0..m-1) -----------------------------
         let mut dcache = self.draft.new_cache(1);
-        let mut dtoks = vec![0i32; p_win];
-        for i in 0..m {
-            let tok = match self.shift {
-                PairShift::Shifted => committed[i + 1],
-                PairShift::Unshifted => committed[i],
-            };
-            dtoks[i] = tok as i32;
-        }
-        // features f_0..f_{m-1} from the target prefill
-        let mut dfeats = vec![0f32; p_win * d];
-        dfeats[..m * d].copy_from_slice(&out.feats[..m * d]);
-        let t0 = Instant::now();
-        let dout = self.draft.prefill(&dfeats, &dtoks, m, &mut dcache)?;
-        rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64;
-        rec.draft_passes += 1;
-        let mut root_feat: Vec<f32> = dout.feats; // f̂ at root position m
-        let mut root_logits: Vec<f32> = dout.logits; // dist of t_{m+1}
-        let mut draft_len = m;
-
-        if cfg.eos == Some(root_tok) {
-            rec.wall_ns = t_all.elapsed().as_nanos() as u64;
-            return Ok(rec);
-        }
-
-        // pending acceptance from the previous round, committed inside the
-        // NEXT verify call (fused commit — §Perf iteration 1)
-        let mut pending_old_m = m;
+        // lane state, assigned by the input arm below: fresh prefill, or
+        // checkpoint restore (resident KV splice vs evicted re-prefill)
+        let mut rec: GenRecord;
+        let mut rng: Rng;
+        let lane_seed: u64;
+        let mut committed: Vec<u32>;
+        let mut m: usize;
+        let mut root_feat: Vec<f32>;
+        let mut root_logits: Vec<f32>;
+        // parked checkpoint box, reused on re-suspension (warm capture
+        // allocates nothing — the buffers are already sized)
+        let mut ckpt_box: Option<Box<LaneCheckpoint>> = None;
+        // pending acceptance from the previous round, committed inside
+        // the NEXT verify call (fused commit — §Perf iteration 1)
+        let mut pending_old_m: usize;
         let mut pending_idx = vec![0i32; self.accept_a];
         let mut pending_n = 0i32;
+        match input {
+            LaneInput::Fresh { prompt, seed } => {
+                rec = GenRecord::new(prompt.len());
+                // pre-size the record's per-round vectors so steady-state
+                // rounds never touch the allocator through metrics either
+                rec.reserve_rounds(cfg.max_new);
+                rng = Rng::new(seed);
+                lane_seed = seed;
+
+                // ---- target prefill ----------------------------------------
+                let t0 = Instant::now();
+                let (out, plen) = tgt.prefill(prompt, &mut cache)?;
+                rec.timeline.prefill_ns += t0.elapsed().as_nanos() as u64;
+                rec.target_passes += 1;
+                let last_logits = tgt.row(&out.logits, p_win, 0, plen - 1, vocab);
+                let root_tok = self.pick(last_logits, cfg.temperature, &mut rng);
+                rec.tokens.push(root_tok);
+                // first committed token: the engine-side TTFT component
+                rec.ttft_ns = t_all.elapsed().as_nanos() as u64;
+                committed = Vec::with_capacity(prompt.len() + cfg.max_new + 2);
+                committed.extend_from_slice(prompt);
+                committed.push(root_tok);
+                m = plen; // committed boundary: root at position m
+
+                // ---- draft prefill (pair slots 0..m-1) ---------------------
+                let mut dtoks = vec![0i32; p_win];
+                for (i, slot) in dtoks.iter_mut().enumerate().take(m) {
+                    *slot = match self.shift {
+                        PairShift::Shifted => committed[i + 1] as i32,
+                        PairShift::Unshifted => committed[i] as i32,
+                    };
+                }
+                // features f_0..f_{m-1} from the target prefill
+                let mut dfeats = vec![0f32; p_win * d];
+                dfeats[..m * d].copy_from_slice(&out.feats[..m * d]);
+                let t0 = Instant::now();
+                let dout = self.draft.prefill(&dfeats, &dtoks, m, &mut dcache)?;
+                rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64;
+                rec.draft_passes += 1;
+                root_feat = dout.feats; // f̂ at root position m
+                root_logits = dout.logits; // dist of t_{m+1}
+                pending_old_m = m;
+
+                if cfg.eos == Some(root_tok) {
+                    rec.wall_ns = t_all.elapsed().as_nanos() as u64;
+                    return Ok(LaneOutcome::Done(rec));
+                }
+            }
+            LaneInput::Resume { mut ckpt } => {
+                // the RNG stream continues at its exact draw position, so
+                // sampled acceptance replays bit-identically
+                rng = Rng::resume(ckpt.rng_seed, ckpt.rng_draws);
+                lane_seed = ckpt.rng_seed;
+                committed = std::mem::take(&mut ckpt.committed);
+                m = ckpt.m;
+                root_feat = std::mem::take(&mut ckpt.root_feat);
+                root_logits = std::mem::take(&mut ckpt.root_logits);
+                rec = std::mem::replace(&mut ckpt.rec, GenRecord::new(0));
+                rec.reserve_rounds(cfg.max_new);
+                if crate::failpoint!("resume") {
+                    // degenerate resume: force the slow re-prefill path
+                    ckpt.evict_kv();
+                }
+                if ckpt.kv_resident {
+                    copy_lane_kv_in(&mut cache, 0, &ckpt.kv_target);
+                    copy_lane_kv_in(&mut dcache, 0, &ckpt.kv_draft);
+                    pending_old_m = ckpt.pending_old as usize;
+                    pending_idx.copy_from_slice(&ckpt.pending_idx);
+                    pending_n = ckpt.pending_n;
+                } else {
+                    // evicted KV: rebuild by prefix re-prefill; the pending
+                    // triple resets to the fresh-prefill initial condition
+                    // (the suspended round's acceptance is already folded
+                    // into `committed`, so outputs are unchanged)
+                    let t0 = Instant::now();
+                    let (out, plen) = tgt.prefill(&committed[..m], &mut cache)?;
+                    rec.timeline.prefill_ns += t0.elapsed().as_nanos() as u64;
+                    rec.target_passes += 1;
+                    debug_assert_eq!(plen, m);
+                    let mut dtoks = vec![0i32; p_win];
+                    for (i, slot) in dtoks.iter_mut().enumerate().take(m) {
+                        *slot = match self.shift {
+                            PairShift::Shifted => committed[i + 1] as i32,
+                            PairShift::Unshifted => committed[i] as i32,
+                        };
+                    }
+                    let mut dfeats = vec![0f32; p_win * d];
+                    dfeats[..m * d].copy_from_slice(&out.feats[..m * d]);
+                    let t0 = Instant::now();
+                    self.draft.prefill(&dfeats, &dtoks, m, &mut dcache)?;
+                    rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64;
+                    rec.draft_passes += 1;
+                    pending_old_m = m;
+                    ckpt.refill_rounds += 1;
+                    rec.resume_refill_rounds += 1;
+                }
+                ckpt_box = Some(ckpt);
+            }
+        }
+        let mut draft_len = m;
 
         // dynamic policy: resolved shape limits + optional per-request
         // controller (EWMA acceptance tracker adapting depth/frontier)
@@ -278,6 +382,13 @@ impl<'a> EagleEngine<'a> {
             )),
             _ => None,
         };
+        // a resumed lane continues from its captured adaptation state
+        // (EWMA + width hysteresis), not a cold restart
+        if let (Some(c), Some(snap)) =
+            (controller.as_mut(), ckpt_box.as_ref().and_then(|k| k.controller.as_ref()))
+        {
+            c.restore(snap);
+        }
 
         // ---- round state (S22): reserved once, reused every round ----------
         let t_reserve = self.verify_t.max(self.widths.max());
@@ -297,6 +408,43 @@ impl<'a> EagleEngine<'a> {
                 // cancellation: stop drafting, hand back what we have
                 rec.truncated = Some("deadline");
                 break;
+            }
+            // round-boundary preemption (this engine is lane 0): capture
+            // into the parked checkpoint and hand it back instead of a
+            // finished record; a degenerate `checkpoint` failpoint drops
+            // the request and the lane runs on
+            if let Some(sig) = self.preempt.as_deref() {
+                if sig.take(0) && !crate::failpoint!("checkpoint") {
+                    let mut ck = ckpt_box.take().unwrap_or_default();
+                    ck.capture_tokens(&committed, m);
+                    ck.capture_root(&root_feat, &root_logits);
+                    ck.capture_pending(pending_old_m as i32, &pending_idx, pending_n);
+                    ck.rng_seed = lane_seed;
+                    ck.rng_draws = rng.draws();
+                    match controller.as_ref() {
+                        Some(c) => {
+                            let snap = ck.controller.get_or_insert_with(Default::default);
+                            c.snapshot_into(snap);
+                            let hint = width_hint(Some(c));
+                            ck.width_hint =
+                                Some(plan_round_width(&self.widths, &c.params(), hint).0);
+                        }
+                        None => {
+                            ck.controller = None;
+                            ck.width_hint = None;
+                        }
+                    }
+                    ck.deadline = self.deadline;
+                    // full-S lane copy: the fused-commit scratch rows must
+                    // survive so a resident resume replays the pending
+                    // acceptance exactly
+                    copy_lane_kv_out(&cache, 0, &mut ck.kv_target);
+                    copy_lane_kv_out(&dcache, 0, &mut ck.kv_draft);
+                    ck.kv_resident = true;
+                    ck.kv_slot = None;
+                    ck.rec = rec;
+                    return Ok(LaneOutcome::Suspended(ck));
+                }
             }
             if m + t_reserve + 1 >= s_tot {
                 break; // cache budget exhausted
@@ -533,7 +681,7 @@ impl<'a> EagleEngine<'a> {
         }
 
         rec.wall_ns = t_all.elapsed().as_nanos() as u64;
-        Ok(rec)
+        Ok(LaneOutcome::Done(rec))
     }
 
     /// Report the just-finished round to the attached observer (no-op

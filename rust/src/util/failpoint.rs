@@ -27,7 +27,10 @@
 //!
 //! Site catalogue (see docs/robustness.md): `draft-step`, `verify`,
 //! `accept-walk` (both engines), `sched-dispatch` (scheduler group
-//! formation), `deliver` (server slot delivery).
+//! formation), `deliver` (server slot delivery), `checkpoint` (lane
+//! suspension — degenerate drops the suspension request, the lane runs
+//! on), `resume` (checkpoint re-entry — degenerate evicts the parked KV
+//! so the lane takes the slow prefix re-prefill path).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};

@@ -11,11 +11,13 @@
 #![cfg(feature = "fault-inject")]
 
 use eagle_serve::coordinator::request::{Request, Response};
-use eagle_serve::coordinator::{AdmittedGroup, RequestQueue, Scheduler};
+use eagle_serve::coordinator::{
+    AdmittedGroup, CheckpointStore, LaneCheckpoint, RequestQueue, Scheduler,
+};
 use eagle_serve::metrics::registry::parse_exposition;
 use eagle_serve::metrics::GenRecord;
 use eagle_serve::server::{
-    deliver, fingerprint, should_shed, worker_loop, GroupWorker, Health, PendingMap,
+    deliver, fingerprint, should_shed, worker_loop, GroupWorker, Health, PendingMap, PreemptCtl,
     ServerMetrics, Slot, QUARANTINE_AFTER,
 };
 use eagle_serve::util::failpoint::{self, Action};
@@ -107,7 +109,7 @@ fn drain_with(reqs: Vec<Request>) -> (ServerMetrics, PendingMap, Vec<(u64, Slot)
     }
     queue.close(); // drain: queued work still comes out of pop
     let mut w = ScriptedWorker { pending: &pending, runs: 0, rebuilds: 0 };
-    worker_loop(&queue, &sched, &pending, &metrics, &health, 0, &mut w);
+    worker_loop(&queue, &sched, &pending, &metrics, &health, 0, None, &mut w);
     let (runs, rebuilds) = (w.runs, w.rebuilds);
     (metrics, pending, slots, runs, rebuilds)
 }
@@ -262,6 +264,166 @@ fn drain_finishes_every_queued_request_then_exits() {
         assert_eq!(r.status, 200, "request {id} finished during drain");
     }
     assert!(pending.lock().unwrap().is_empty());
+}
+
+/// Synthetic executor for preemption chaos: a first-pass "suspend"
+/// prompt is parked in the checkpoint store and re-enqueued as a resume
+/// entry (unless the `checkpoint` failpoint eats the park, in which
+/// case the lane simply runs to completion); a resumed entry picks its
+/// partial back up and finishes, reporting how many tokens it carried.
+struct PreemptingWorker<'a> {
+    pending: &'a PendingMap,
+    queue: &'a RequestQueue,
+    ctl: &'a PreemptCtl,
+    runs: usize,
+}
+
+impl GroupWorker for PreemptingWorker<'_> {
+    fn run(&mut self, group: AdmittedGroup) {
+        self.runs += 1;
+        for r in &group.requests {
+            if r.prompt == "suspend" && !r.resume && !failpoint::hit("checkpoint") {
+                let mut ck = Box::new(LaneCheckpoint::new());
+                ck.id = r.id;
+                ck.rec.tokens = vec![7, 8, 9]; // partial progress so far
+                ck.kv_target = vec![0.0; 512];
+                ck.kv_resident = true;
+                self.ctl.store.insert(ck);
+                self.queue.push_resume(r.clone());
+                continue;
+            }
+            let carried = match self.ctl.store.take(r.id) {
+                Some(ck) if r.resume => ck.rec.tokens.len(),
+                _ => 0,
+            };
+            deliver(
+                self.pending,
+                r.id,
+                Response {
+                    id: r.id,
+                    text: format!("done:{}:{carried}", r.prompt),
+                    tokens: carried + 1,
+                    target_passes: 1,
+                    tau: 1.0,
+                    latency_ms: 1.0,
+                    queue_ms: 0.0,
+                    status: 200,
+                    truncated: None,
+                },
+            );
+        }
+    }
+
+    fn rebuild(&mut self) {}
+}
+
+#[test]
+fn preempt_storm_completes_every_lane_without_quarantine() {
+    let _g = serial();
+    let queue = RequestQueue::new(64);
+    let sched = Scheduler::new(1, 0);
+    let pending: PendingMap = Mutex::new(HashMap::new());
+    let metrics = ServerMetrics::new(16);
+    let health = Health::new(60_000);
+    // 2 KV slots with a watermark of 1: the storm of parked residents
+    // keeps the store under pressure, so eviction runs during the storm
+    let ctl = PreemptCtl::new(true, CheckpointStore::new(2, 1, 0));
+    // six identical "suspend" lanes (same fingerprint — a quarantine
+    // counter that treated suspension as failure would trip here) plus
+    // two plain lanes; the 3rd park attempt is eaten by the failpoint
+    // and that lane must run to completion instead
+    failpoint::set("checkpoint", Action::Degenerate, 3);
+    let reqs: Vec<Request> =
+        (1..=8).map(|id| req(id, if id <= 6 { "suspend" } else { "plain" }, None)).collect();
+    let slots: Vec<(u64, Slot)> = reqs.iter().map(|r| (r.id, register(&pending, r.id))).collect();
+    for r in reqs {
+        queue.push(r).unwrap();
+    }
+    queue.close();
+    let mut w = PreemptingWorker { pending: &pending, queue: &queue, ctl: &ctl, runs: 0 };
+    worker_loop(&queue, &sched, &pending, &metrics, &health, 0, Some(&ctl), &mut w);
+    failpoint::clear_all();
+    let mut carried3 = 0;
+    for (id, slot) in &slots {
+        let resp = taken(slot);
+        assert_eq!(resp.status, 200, "lane {id} must complete, not hang or 500: {}", resp.text);
+        if resp.text.ends_with(":3") {
+            carried3 += 1;
+        }
+    }
+    assert_eq!(carried3, 5, "5 of 6 suspensions parked and resumed with their partial");
+    assert!(ctl.store.evictions() >= 1, "the storm must cross the KV watermark");
+    assert!(ctl.store.is_empty(), "every checkpoint was consumed by a resume");
+    assert!(pending.lock().unwrap().is_empty(), "no slot leaked");
+    let exp = parse_exposition(&metrics.render()).unwrap();
+    assert_eq!(
+        exp.value("eagle_worker_panics_total").unwrap_or(0.0),
+        0.0,
+        "suspension is not a failure"
+    );
+}
+
+#[test]
+fn drain_delivers_parked_checkpoints_instead_of_stranding() {
+    let _g = serial();
+    // a suspension whose requeue was lost (fault injection): only the
+    // parked checkpoint knows the lane exists. Drain must deliver its
+    // partial, not strand the waiter.
+    let queue = RequestQueue::new(8);
+    let sched = Scheduler::new(1, 0);
+    let pending: PendingMap = Mutex::new(HashMap::new());
+    let metrics = ServerMetrics::new(16);
+    let health = Health::new(60_000);
+    let ctl = PreemptCtl::new(true, CheckpointStore::new(4, 0, 0));
+    let slot = register(&pending, 9);
+    let mut ck = Box::new(LaneCheckpoint::new());
+    ck.id = 9;
+    ck.rec.tokens = vec![1, 2, 3, 4];
+    ctl.store.insert(ck);
+    queue.close();
+    let mut w = ScriptedWorker { pending: &pending, runs: 0, rebuilds: 0 };
+    worker_loop(&queue, &sched, &pending, &metrics, &health, 0, Some(&ctl), &mut w);
+    let resp = taken(&slot);
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.truncated, Some("drain"));
+    assert_eq!(resp.tokens, 4, "the partial carries the pre-suspension tokens");
+    assert_eq!(w.runs, 0, "nothing was queued — only the safety net ran");
+    assert!(ctl.store.is_empty());
+    assert!(pending.lock().unwrap().is_empty());
+}
+
+#[test]
+fn deadline_expired_while_suspended_delivers_partial_not_504() {
+    let _g = serial();
+    let queue = RequestQueue::new(8);
+    let sched = Scheduler::new(1, 0);
+    let pending: PendingMap = Mutex::new(HashMap::new());
+    let metrics = ServerMetrics::new(16);
+    let health = Health::new(60_000);
+    let ctl = PreemptCtl::new(true, CheckpointStore::new(4, 0, 0));
+    let slot = register(&pending, 4);
+    let mut ck = Box::new(LaneCheckpoint::new());
+    ck.id = 4;
+    ck.rec.tokens = vec![5, 6];
+    ctl.store.insert(ck);
+    // the resume entry waits out its whole 1 ms budget in the queue
+    queue.push_resume(req(4, "late", Some(1)));
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    queue.close();
+    let mut w = ScriptedWorker { pending: &pending, runs: 0, rebuilds: 0 };
+    worker_loop(&queue, &sched, &pending, &metrics, &health, 0, Some(&ctl), &mut w);
+    let resp = taken(&slot);
+    assert_eq!(resp.status, 200, "partial output is still an answer");
+    assert_eq!(resp.truncated, Some("deadline"));
+    assert_eq!(resp.tokens, 2);
+    assert!(resp.queue_ms >= 20.0, "reports the real queue wait: {}", resp.queue_ms);
+    assert_eq!(w.runs, 0, "the expired lane never re-entered the engines");
+    assert!(ctl.store.is_empty(), "expiry consumed the checkpoint");
+    let exp = parse_exposition(&metrics.render()).unwrap();
+    let fam = exp.family("eagle_deadline_expired_total").expect("deadline family");
+    let queue_stage =
+        fam.samples.iter().find(|s| s.label("stage") == Some("queue")).expect("queue stage");
+    assert_eq!(queue_stage.value, 1.0);
 }
 
 #[test]

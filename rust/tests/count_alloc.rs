@@ -169,6 +169,72 @@ fn count_alloc_observer_and_histogram_record_path_allocates_nothing() {
     assert_eq!(reg.counter_value(ctr), 50);
 }
 
+/// The lane-checkpoint capture/restore cycle (S24 suspend/resume) must
+/// be allocation-free once the checkpoint's buffers are reserved: token
+/// / root / pending capture, controller snapshot + restore, the lane-KV
+/// copy-out shape, and the O(1) `Rng::resume` stream rebuild. This is
+/// the allocator-level form of the footprint-invariance property in
+/// tests/prop_checkpoint.rs.
+#[test]
+fn count_alloc_warm_checkpoint_capture_and_restore_allocates_nothing() {
+    use eagle_serve::coordinator::LaneCheckpoint;
+    use eagle_serve::spec::dyntree::{
+        ControllerConfig, ControllerSnapshot, DynTreeParams, SpecController,
+    };
+
+    let (max_ctx, d, vocab, accept_a) = (256usize, 64usize, 512usize, 16usize);
+    let cfg = ControllerConfig::default();
+    let mut ck = LaneCheckpoint::new();
+    ck.reserve(max_ctx, d, vocab, accept_a);
+    ck.reserve_kv(max_ctx * d, max_ctx * d / 2);
+    let mut snap = ControllerSnapshot::default();
+    snap.reserve(cfg.max_depth);
+    ck.controller = Some(snap);
+    let init = DynTreeParams { depth: 3, frontier_k: 4, branch: 4, budget: 31 };
+    let mut ctrl = SpecController::new(cfg.clone(), init);
+    let mut restored = SpecController::new(cfg, init);
+
+    // lane state staged once up front; the cycle only copies from it
+    let committed: Vec<u32> = (0..max_ctx).map(|i| (i % vocab) as u32).collect();
+    let feat: Vec<f32> = (0..d).map(|i| i as f32 * 0.5).collect();
+    let logits: Vec<f32> = (0..vocab).map(|i| (i as f32 * 0.13).sin()).collect();
+    let idx: Vec<i32> = (0..accept_a as i32).collect();
+    let kv: Vec<f32> = (0..max_ctx * d).map(|i| i as f32 * 0.25).collect();
+    let alpha = [(1u64, 1u64), (1, 1), (0, 1)];
+    let mut rng = Rng::new(11);
+
+    let mut cycle = |m: usize| {
+        rng.f32(); // the lane consumed draws since the last boundary
+        ctrl.observe(&alpha);
+        ck.capture_tokens(&committed[..m], m);
+        ck.capture_root(&feat, &logits);
+        ck.capture_pending(-1, &idx, idx.len() as i32);
+        ck.rng_seed = 11;
+        ck.rng_draws = rng.draws();
+        ctrl.snapshot_into(ck.controller.as_mut().unwrap());
+        ck.kv_target.clear();
+        ck.kv_target.extend_from_slice(&kv[..m * d]); // lane-KV copy-out shape
+        // resume side: splice the state back into a peer controller and
+        // rebuild the RNG stream position in O(1)
+        restored.restore(ck.controller.as_ref().unwrap());
+        let r = Rng::resume(ck.rng_seed, ck.rng_draws);
+        assert_eq!(r.draws(), rng.draws());
+    };
+
+    cycle(max_ctx); // warm-up: first capture fills the reserved buffers
+    let a0 = thread_allocated_bytes();
+    for i in 0..8usize {
+        cycle(128 + (i * 29) % 128);
+    }
+    assert_eq!(
+        thread_allocated_bytes() - a0,
+        0,
+        "warm checkpoint capture/restore cycle touched the allocator"
+    );
+    assert_eq!(restored.params(), ctrl.params(), "restored controller diverged");
+    assert_eq!(restored.rounds, ctrl.rounds);
+}
+
 // ---- artifact-gated: the whole engines under the counting allocator ----
 
 fn have_artifacts() -> bool {

@@ -1,0 +1,277 @@
+//! Property tests for checkpointable lanes (S24): RNG draw-counter
+//! replay, bit-identical suspend/resume of a simulated lane at T=0 and
+//! T>0, warm-capture allocation stability, and checkpoint-store
+//! eviction round-trips. See docs/robustness.md "Preemption &
+//! checkpointing".
+//!
+//! The real engines need lowered executables, so these properties drive
+//! the checkpoint *primitives* end to end instead — the SplitMix64 draw
+//! counter, the controller snapshot, and a simulated lane loop that
+//! composes them exactly the way `EagleEngine::generate_resumable`
+//! does: capture at a round boundary, rebuild the RNG with
+//! `Rng::resume`, splice the controller state back in, and continue.
+
+use eagle_serve::coordinator::{CheckpointStore, LaneCheckpoint, PreemptSignal};
+use eagle_serve::spec::dyntree::{
+    ControllerConfig, ControllerSnapshot, DynTreeParams, SpecController,
+};
+use eagle_serve::util::prop::{check, random_dist};
+use eagle_serve::util::rng::Rng;
+
+const VOCAB: usize = 257;
+
+/// Mixed stream of derived draws: whatever combination of draw kinds a
+/// lane consumes, `Rng::resume(seed, draws)` must continue the exact
+/// stream from any cut point.
+#[test]
+fn rng_resume_replays_mixed_draw_streams() {
+    check("rng-resume", 200, |rng, _| {
+        let seed = rng.next_u64();
+        let n = 8 + rng.below(120);
+        let kinds: Vec<usize> = (0..n).map(|_| rng.below(5)).collect();
+        let weights = random_dist(rng, 1 + rng.below(16));
+        let draw = |r: &mut Rng, k: usize| -> u64 {
+            match k {
+                0 => r.next_u64(),
+                1 => r.f64().to_bits(),
+                2 => u64::from(r.f32().to_bits()),
+                3 => r.below(977) as u64,
+                _ => r.weighted(&weights) as u64,
+            }
+        };
+        let mut full = Rng::new(seed);
+        let reference: Vec<u64> = kinds.iter().map(|&k| draw(&mut full, k)).collect();
+
+        let cut = rng.below(n + 1);
+        let mut head = Rng::new(seed);
+        for &k in &kinds[..cut] {
+            draw(&mut head, k);
+        }
+        let mut tail = Rng::resume(seed, head.draws());
+        assert_eq!(tail.draws(), head.draws(), "resume restores the draw counter");
+        for (i, &k) in kinds[cut..].iter().enumerate() {
+            assert_eq!(draw(&mut tail, k), reference[cut + i], "draw {} after cut {cut}", cut + i);
+        }
+        assert_eq!(tail.draws(), full.draws(), "draw counters agree at stream end");
+    });
+}
+
+fn greedy_tok(prefix_len: usize, d: usize) -> u32 {
+    let h = (prefix_len as u64).wrapping_mul(0x9E37_79B9).wrapping_add(d as u64);
+    (h % VOCAB as u64) as u32
+}
+
+/// One simulated speculative round: draft `depth` positions, accept a
+/// prefix, commit accepted + bonus tokens, feed the controller. At T=0
+/// the lane draws nothing (greedy acceptance is a pure function of the
+/// committed prefix); at T>0 both the acceptance tests and the token
+/// picks consume lane RNG draws, so resume must restart the stream at
+/// the exact draw counter.
+fn lane_round(
+    rng: &mut Rng,
+    ctrl: &mut SpecController,
+    committed: &mut Vec<u32>,
+    sampled: bool,
+    dist: &[f32],
+) {
+    let attempted = ctrl.params().depth.max(1);
+    let mut accepted = 0;
+    for d in 0..attempted {
+        let take = if sampled { rng.f32() < 0.6 } else { (committed.len() + d) % 5 != 0 };
+        if !take {
+            break;
+        }
+        let tok = if sampled { rng.weighted(dist) as u32 } else { greedy_tok(committed.len(), d) };
+        committed.push(tok);
+        accepted += 1;
+    }
+    let bonus = if sampled { rng.weighted(dist) as u32 } else { greedy_tok(committed.len(), 0) };
+    committed.push(bonus);
+    ctrl.observe_round(accepted, attempted);
+}
+
+/// The tentpole property: suspending a lane at any round boundary and
+/// resuming from the checkpoint yields the same committed tokens, the
+/// same RNG draw counter, and the same controller decisions as the
+/// uninterrupted run — greedy (even cases) and sampled (odd cases),
+/// including cut=0 (suspended before the first round).
+#[test]
+fn simulated_lane_resumes_bit_identically_at_t0_and_t_gt0() {
+    check("lane-resume", 120, |rng, case| {
+        let sampled = case % 2 == 1;
+        let seed = rng.next_u64();
+        let dist = random_dist(rng, 2 + rng.below(31));
+        let rounds = 2 + rng.below(14);
+        let cut = rng.below(rounds + 1);
+        let cfg = ControllerConfig::default();
+        let init = DynTreeParams { depth: 3, frontier_k: 4, branch: 4, budget: 31 };
+
+        // uninterrupted reference lane
+        let mut r_ref = Rng::new(seed);
+        let mut c_ref = SpecController::new(cfg.clone(), init);
+        let mut toks_ref = Vec::new();
+        for _ in 0..rounds {
+            lane_round(&mut r_ref, &mut c_ref, &mut toks_ref, sampled, &dist);
+        }
+
+        // suspended lane: run `cut` rounds, capture, resume, finish
+        let mut r_a = Rng::new(seed);
+        let mut c_a = SpecController::new(cfg.clone(), init);
+        let mut toks_a = Vec::new();
+        for _ in 0..cut {
+            lane_round(&mut r_a, &mut c_a, &mut toks_a, sampled, &dist);
+        }
+        let mut ck = LaneCheckpoint::new();
+        ck.reserve(1024, 8, VOCAB, 8);
+        ck.capture_tokens(&toks_a, toks_a.len());
+        ck.rng_seed = seed;
+        ck.rng_draws = r_a.draws();
+        let mut snap = ControllerSnapshot::default();
+        snap.reserve(cfg.max_depth);
+        c_a.snapshot_into(&mut snap);
+        ck.controller = Some(snap);
+
+        let mut r_b = Rng::resume(ck.rng_seed, ck.rng_draws);
+        let mut c_b = SpecController::new(cfg, init);
+        c_b.restore(ck.controller.as_ref().unwrap());
+        let mut toks_b = ck.committed.clone();
+        for _ in cut..rounds {
+            lane_round(&mut r_b, &mut c_b, &mut toks_b, sampled, &dist);
+        }
+
+        assert_eq!(toks_b, toks_ref, "committed tokens diverge (cut {cut}/{rounds})");
+        assert_eq!(r_b.draws(), r_ref.draws(), "draw counters diverge");
+        assert_eq!(c_b.params(), c_ref.params(), "controller shape diverges");
+        assert_eq!(c_b.rate_ewma.to_bits(), c_ref.rate_ewma.to_bits(), "rate EWMA diverges");
+        assert_eq!(c_b.is_width_down(), c_ref.is_width_down(), "hysteresis latch diverges");
+    });
+}
+
+/// After `reserve`, repeated captures of arbitrary in-bounds lane state
+/// must never grow any checkpoint buffer (the footprint — total pinned
+/// capacity — is capture-invariant). The byte-exact allocator check
+/// lives in tests/count_alloc.rs; this property covers the full input
+/// space.
+#[test]
+fn warm_checkpoint_capture_keeps_footprint_fixed() {
+    check("warm-capture", 60, |rng, _| {
+        let max_ctx = 64 + rng.below(192);
+        let d = 8 + rng.below(56);
+        let vocab = 128 + rng.below(512);
+        let accept_a = 4 + rng.below(12);
+        let cfg = ControllerConfig::default();
+
+        let mut ck = LaneCheckpoint::new();
+        ck.reserve(max_ctx, d, vocab, accept_a);
+        ck.reserve_kv(max_ctx * 4, max_ctx * 2);
+        let mut snap = ControllerSnapshot::default();
+        snap.reserve(cfg.max_depth);
+        ck.controller = Some(snap);
+        let init = DynTreeParams { depth: 3, frontier_k: 4, branch: 4, budget: 31 };
+        let mut ctrl = SpecController::new(cfg, init);
+        let base = ck.footprint();
+
+        for round in 0..8 {
+            let m = 1 + rng.below(max_ctx);
+            let toks: Vec<u32> = (0..m).map(|_| rng.below(vocab) as u32).collect();
+            let feat: Vec<f32> = (0..d).map(|_| rng.f32()).collect();
+            let logits: Vec<f32> = (0..vocab).map(|_| rng.f32()).collect();
+            let idx: Vec<i32> = (0..accept_a).map(|i| i as i32).collect();
+            ctrl.observe_round(rng.below(4), 3);
+            ck.capture_tokens(&toks, m);
+            ck.capture_root(&feat, &logits);
+            ck.capture_pending(-1, &idx, accept_a as i32);
+            ctrl.snapshot_into(ck.controller.as_mut().unwrap());
+            assert_eq!(ck.footprint(), base, "capture {round} grew a checkpoint buffer");
+        }
+        // eviction drops the KV capacity from the footprint and zeroes
+        // the resident-byte accounting
+        ck.kv_resident = true;
+        let freed = ck.evict_kv();
+        // reserve_kv may round capacities up; eviction frees at least the
+        // requested KV floats
+        assert!(freed >= (max_ctx * 4 + max_ctx * 2) as u64 * 4, "freed {freed} bytes too few");
+        assert_eq!(ck.kv_bytes(), 0, "evicted checkpoint still pins KV bytes");
+        assert!(ck.footprint() < base, "eviction must shrink the footprint");
+    });
+}
+
+/// Store round-trips under random capacity / watermark / byte-budget
+/// pressure: checkpoints are never lost (eviction drops KV, not state),
+/// resident bytes respect the budget, take() returns the exact parked
+/// state, and drain_all() comes back id-sorted.
+#[test]
+fn store_roundtrips_under_pressure_without_losing_lanes() {
+    check("store-pressure", 100, |rng, _| {
+        let slots = 1 + rng.below(6);
+        let watermark = rng.below(slots + 1);
+        let budget = if rng.below(2) == 0 { 0 } else { (1 + rng.below(64)) as u64 * 1024 };
+        let store = CheckpointStore::new(slots, watermark, budget);
+        assert_eq!(store.budget_bytes(), budget);
+
+        let n = 1 + rng.below(12);
+        let mut expected: Vec<(u64, Vec<u32>)> = Vec::new();
+        let mut reported = 0u64;
+        for i in 0..n {
+            let id = 100 + i as u64;
+            let mut ck = Box::new(LaneCheckpoint::new());
+            ck.id = id;
+            let toks: Vec<u32> = (0..1 + rng.below(16)).map(|_| rng.below(1000) as u32).collect();
+            ck.capture_tokens(&toks, toks.len());
+            ck.kv_target = vec![0.0; 256 * (1 + rng.below(8))];
+            ck.kv_resident = true;
+            reported += store.insert(ck) as u64;
+            expected.push((id, toks));
+            assert_eq!(store.len(), i + 1, "insert must never drop a checkpoint");
+            if budget > 0 {
+                assert!(
+                    store.resident_bytes() <= budget,
+                    "resident {} exceeds budget {budget}",
+                    store.resident_bytes()
+                );
+            }
+        }
+        assert_eq!(store.evictions(), reported, "eviction counter disagrees with insert totals");
+        assert!(expected.iter().all(|(id, _)| store.contains(*id)));
+
+        // take one at random: exact state back, slot released, gone
+        let pick = rng.below(expected.len());
+        let (id, toks) = expected.remove(pick);
+        let got = store.take(id).expect("parked checkpoint must be takeable");
+        assert_eq!(got.committed, toks, "take returned a different lane's tokens");
+        assert_eq!(got.kv_slot, None, "take must release the KV slot");
+        if !got.kv_resident {
+            assert_eq!(got.kv_bytes(), 0, "evicted checkpoint reports resident bytes");
+        }
+        assert!(!store.contains(id));
+        assert!(store.take(id).is_none(), "double-take must miss");
+
+        // drain: everything left, id-sorted, store empty afterwards
+        let drained = store.drain_all();
+        let ids: Vec<u64> = drained.iter().map(|c| c.id).collect();
+        let mut want: Vec<u64> = expected.iter().map(|(id, _)| *id).collect();
+        want.sort_unstable();
+        assert_eq!(ids, want, "drain_all must return every parked lane in id order");
+        assert!(store.is_empty());
+        assert_eq!(store.resident_bytes(), 0, "drained store still accounts resident bytes");
+    });
+}
+
+/// Preemption-signal bits are take-once: a governor's `request_all`
+/// suspends each live lane exactly once, and `clear` (group teardown)
+/// leaves nothing armed for the next group.
+#[test]
+fn preempt_signal_bits_are_take_once() {
+    let s = PreemptSignal::new();
+    assert!(!s.any());
+    s.request(3);
+    assert!(s.requested(3) && s.any());
+    assert!(s.take(3), "armed bit must be takeable");
+    assert!(!s.take(3), "take is one-shot");
+    assert!(!s.any());
+    s.request_all();
+    assert!((0..64).all(|i| s.requested(i)));
+    assert!(s.take(0) && s.take(63));
+    s.clear();
+    assert!(!s.any(), "clear must disarm every remaining bit");
+}
