@@ -3,16 +3,20 @@
 //! verifies the chain in one pass; accept/resample preserves the target
 //! distribution. The draft LM replays committed tokens it missed — the
 //! overhead the paper cites for small-model drafting.
+//!
+//! Since PR 10 the drafting logic lives in
+//! [`crate::spec::source::ChainLmSource`] behind the `DraftSource` trait
+//! and this engine is a thin facade over the generic
+//! [`crate::spec::source::SourceEngine`] round loop — same proposals,
+//! same SpecInfer chain acceptance (a chain is a single-child tree), now
+//! servable next to the other sources.
 
 use anyhow::Result;
-use std::time::Instant;
 
 use crate::metrics::GenRecord;
 use crate::models::TargetModel;
 use crate::spec::engine::GenConfig;
-use crate::spec::sampling::{argmax, chain_accept_into, sample, softmax, Verdict};
-use crate::spec::tree::DraftTree;
-use crate::util::rng::Rng;
+use crate::spec::source::{ChainLmSource, SourceEngine};
 
 pub struct ClassicSpecEngine<'a> {
     pub target: &'a TargetModel,
@@ -35,186 +39,8 @@ impl<'a> ClassicSpecEngine<'a> {
     }
 
     pub fn generate(&self, prompt: &[u32], cfg: &GenConfig) -> Result<GenRecord> {
-        let t_all = Instant::now();
-        let mut rec = GenRecord::new(prompt.len());
-        let mut rng = Rng::new(cfg.seed);
-        let tgt = self.target;
-        let vocab = tgt.vocab;
-        let s_tot = tgt.max_len;
-
-        // target prefill
-        let mut cache = tgt.new_cache(1);
-        let t0 = Instant::now();
-        let (out, plen) = tgt.prefill(prompt, &mut cache)?;
-        rec.timeline.prefill_ns += t0.elapsed().as_nanos() as u64;
-        rec.target_passes += 1;
-        let root_logits = tgt.row(&out.logits, tgt.prefill_p, 0, plen - 1, vocab);
-        let root = self.pick(root_logits, cfg, &mut rng);
-        let mut committed: Vec<u32> = prompt.to_vec();
-        committed.push(root);
-        rec.tokens.push(root);
-        let mut m = plen;
-        let mut pending_old_m = m;
-        let mut pending_idx = vec![0i32; self.accept_a];
-        let mut pending_n = 0i32;
-
-        // draft LM prefill
-        let mut dcache = self.draft.new_cache(1);
-        let t0 = Instant::now();
-        let (_, _) = self.draft.prefill(prompt, &mut dcache)?;
-        rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64;
-        rec.draft_passes += 1;
-        let mut draft_pos = plen; // committed rows in the draft LM cache
-
-        if cfg.eos == Some(root) {
-            rec.wall_ns = t_all.elapsed().as_nanos() as u64;
-            return Ok(rec);
-        }
-
-        // reused rejection-residual buffer for the T>0 accept rule
-        let mut residual: Vec<f32> = Vec::new();
-        while rec.tokens.len() < cfg.max_new {
-            if m + self.verify_t + 1 >= s_tot || m + self.verify_t + 1 >= self.draft.max_len {
-                break;
-            }
-            // --- draft γ tokens, replaying any missed committed tokens -----
-            // (the draft LM consumes committed[draft_pos..=m] one at a time)
-            let mut dlogits: Vec<f32> = Vec::new();
-            let t0 = Instant::now();
-            while draft_pos <= m {
-                let out = self.draft.decode(
-                    &mut dcache,
-                    &[draft_pos as i32],
-                    &[committed[draft_pos] as i32],
-                )?;
-                rec.draft_passes += 1;
-                dlogits = out.logits;
-                draft_pos += 1;
-            }
-            let mut qs: Vec<Vec<f32>> = Vec::with_capacity(self.gamma);
-            let mut proposal: Vec<u32> = Vec::with_capacity(self.gamma);
-            for g in 0..self.gamma {
-                let temp = if cfg.temperature > 0.0 { cfg.temperature } else { 1.0 };
-                let q = softmax(&dlogits, temp);
-                let tok = if cfg.temperature <= 0.0 {
-                    argmax(&dlogits) as u32
-                } else {
-                    sample(&q, &mut rng) as u32
-                };
-                qs.push(q);
-                proposal.push(tok);
-                rec.drafted += 1;
-                if g + 1 < self.gamma {
-                    let out = self.draft.decode(
-                        &mut dcache,
-                        &[draft_pos as i32],
-                        &[tok as i32],
-                    )?;
-                    rec.draft_passes += 1;
-                    dlogits = out.logits;
-                    draft_pos += 1;
-                }
-            }
-            rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64;
-
-            // --- verify chain [root, proposal...] ---------------------------
-            let mut tree = DraftTree::with_root(committed[m]);
-            let mut parent = 0usize;
-            for &tok in &proposal {
-                parent = tree.add(parent, tok, 0.0, None);
-            }
-            let (tokens, pos, bias) = tree.verify_inputs(self.verify_t, m, s_tot);
-            let t0 = Instant::now();
-            let vout = tgt.verify(
-                self.verify_t, &mut cache, &[pending_old_m as i32], &pending_idx,
-                &[pending_n], &tokens, &pos, &bias, self.accept_a,
-            )?;
-            rec.timeline.verify_ns += t0.elapsed().as_nanos() as u64;
-            rec.target_passes += 1;
-
-            // --- accept/resample --------------------------------------------
-            let mut n_acc = 0usize; // accepted proposal tokens
-            let mut bonus: Option<u32> = None;
-            for g in 0..self.gamma {
-                let p_row = tgt.row(&vout.logits, self.verify_t, 0, g, vocab);
-                if g < rec.alpha.len() {
-                    rec.alpha[g].1 += 1;
-                }
-                if cfg.temperature <= 0.0 {
-                    if argmax(p_row) == proposal[g] as usize {
-                        n_acc += 1;
-                        if g < rec.alpha.len() {
-                            rec.alpha[g].0 += 1;
-                        }
-                    } else {
-                        bonus = Some(argmax(p_row) as u32);
-                        break;
-                    }
-                } else {
-                    let p = softmax(p_row, cfg.temperature);
-                    let tok = proposal[g] as usize;
-                    match chain_accept_into(&p, &qs[g], tok, &mut residual, &mut rng) {
-                        Verdict::Accept => {
-                            n_acc += 1;
-                            if g < rec.alpha.len() {
-                                rec.alpha[g].0 += 1;
-                            }
-                        }
-                        Verdict::Resample(t) => {
-                            bonus = Some(t as u32);
-                            break;
-                        }
-                    }
-                }
-            }
-            let bonus = match bonus {
-                Some(b) => b,
-                None => {
-                    // all γ accepted: bonus from the target dist at the leaf
-                    let p_row = tgt.row(&vout.logits, self.verify_t, 0, self.gamma, vocab);
-                    self.pick(p_row, cfg, &mut rng)
-                }
-            };
-
-            // --- record acceptance (fused commit on next verify) -------------
-            let n_commit = 1 + n_acc;
-            pending_old_m = m;
-            pending_idx = vec![0i32; self.accept_a];
-            for j in 0..n_commit {
-                pending_idx[j] = j as i32;
-            }
-            pending_n = n_commit as i32;
-
-            let round: Vec<u32> =
-                proposal[..n_acc].iter().copied().chain(std::iter::once(bonus)).collect();
-            rec.round_accepts.push(round.len());
-            let mut stop = false;
-            for &t in &round {
-                committed.push(t);
-                rec.tokens.push(t);
-                if cfg.eos == Some(t) || rec.tokens.len() >= cfg.max_new {
-                    stop = true;
-                    break;
-                }
-            }
-            m += n_commit;
-            // rewind the draft LM onto the committed stream: its cache holds
-            // [0, draft_pos) rows of a now partially-discarded branch; roll
-            // back to the last row that is still on the committed prefix.
-            draft_pos = draft_pos.min(m);
-            if stop {
-                break;
-            }
-        }
-        rec.wall_ns = t_all.elapsed().as_nanos() as u64;
-        Ok(rec)
-    }
-
-    fn pick(&self, logits: &[f32], cfg: &GenConfig, rng: &mut Rng) -> u32 {
-        if cfg.temperature <= 0.0 {
-            argmax(logits) as u32
-        } else {
-            sample(&softmax(logits, cfg.temperature), rng) as u32
-        }
+        let mut src = ChainLmSource::new(self.draft, self.gamma, self.verify_t);
+        let eng = SourceEngine::new(self.target, self.accept_a);
+        eng.generate(&mut src, prompt, cfg)
     }
 }

@@ -3,16 +3,21 @@
 //! (the retrieval formulation of lookahead's verification branch — see
 //! DESIGN.md §Substitutions). When the pool has no continuation the round
 //! degenerates to a single-token verify (vanilla step + pool update).
+//!
+//! Since PR 10 the pool + retrieval live in
+//! [`crate::spec::source::NgramSource`] (fixed-capacity, allocation-free
+//! table instead of a growing `HashMap`) behind the `DraftSource` trait,
+//! and this engine is a thin facade over the generic
+//! [`crate::spec::source::SourceEngine`] round loop. The source itself is
+//! lossless at any temperature (one-hot q rows); this facade keeps the
+//! paper's greedy-only setting.
 
 use anyhow::Result;
-use std::collections::HashMap;
-use std::time::Instant;
 
 use crate::metrics::GenRecord;
 use crate::models::TargetModel;
 use crate::spec::engine::GenConfig;
-use crate::spec::sampling::argmax;
-use crate::spec::tree::DraftTree;
+use crate::spec::source::{NgramSource, SourceEngine};
 
 pub struct LookaheadEngine<'a> {
     pub target: &'a TargetModel,
@@ -29,115 +34,9 @@ impl<'a> LookaheadEngine<'a> {
 
     pub fn generate(&self, prompt: &[u32], cfg: &GenConfig) -> Result<GenRecord> {
         assert!(cfg.temperature <= 0.0, "lookahead baseline is greedy-only (paper setting)");
-        let t_all = Instant::now();
-        let mut rec = GenRecord::new(prompt.len());
-        let tgt = self.target;
-        let vocab = tgt.vocab;
-        let s_tot = tgt.max_len;
-
-        // n-gram pool: [t_{i-n+1..i}] -> most recent following token
-        let mut pool: HashMap<Vec<u32>, u32> = HashMap::new();
-        let index = |pool: &mut HashMap<Vec<u32>, u32>, seq: &[u32], n: usize| {
-            if seq.len() > n {
-                for i in 0..seq.len() - n {
-                    pool.insert(seq[i..i + n].to_vec(), seq[i + n]);
-                }
-            }
-        };
-        index(&mut pool, prompt, self.n);
-
-        let mut cache = tgt.new_cache(1);
-        let t0 = Instant::now();
-        let (out, plen) = tgt.prefill(prompt, &mut cache)?;
-        rec.timeline.prefill_ns += t0.elapsed().as_nanos() as u64;
-        rec.target_passes += 1;
-        let root = argmax(tgt.row(&out.logits, tgt.prefill_p, 0, plen - 1, vocab)) as u32;
-        let mut committed: Vec<u32> = prompt.to_vec();
-        committed.push(root);
-        rec.tokens.push(root);
-        let mut m = plen;
-        let mut pending_old_m = m;
-        let mut pending_idx = vec![0i32; self.accept_a];
-        let mut pending_n = 0i32;
-
-        if cfg.eos == Some(root) {
-            rec.wall_ns = t_all.elapsed().as_nanos() as u64;
-            return Ok(rec);
-        }
-
-        while rec.tokens.len() < cfg.max_new {
-            if m + self.verify_t + 1 >= s_tot {
-                break;
-            }
-            // --- retrieve a draft continuation from the pool ----------------
-            let th = Instant::now();
-            let mut draft: Vec<u32> = Vec::new();
-            let mut ctx: Vec<u32> = committed[committed.len().saturating_sub(self.n)..].to_vec();
-            for _ in 0..self.gamma {
-                match pool.get(&ctx) {
-                    Some(&nxt) => {
-                        draft.push(nxt);
-                        ctx.push(nxt);
-                        ctx.remove(0);
-                    }
-                    None => break,
-                }
-            }
-            rec.drafted += draft.len();
-            rec.timeline.host_ns += th.elapsed().as_nanos() as u64;
-
-            // --- verify [root, draft...] ------------------------------------
-            let mut tree = DraftTree::with_root(committed[m]);
-            let mut parent = 0usize;
-            for &tok in &draft {
-                parent = tree.add(parent, tok, 0.0, None);
-            }
-            let (tokens, pos, bias) = tree.verify_inputs(self.verify_t, m, s_tot);
-            let t0 = Instant::now();
-            let vout = tgt.verify(
-                self.verify_t, &mut cache, &[pending_old_m as i32], &pending_idx,
-                &[pending_n], &tokens, &pos, &bias, self.accept_a,
-            )?;
-            rec.timeline.verify_ns += t0.elapsed().as_nanos() as u64;
-            rec.target_passes += 1;
-
-            let path =
-                tree.greedy_walk(|i| argmax(tgt.row(&vout.logits, self.verify_t, 0, i, vocab)));
-            let deepest = *path.last().unwrap();
-            let bonus = argmax(tgt.row(&vout.logits, self.verify_t, 0, deepest, vocab)) as u32;
-
-            let n_commit = path.len();
-            pending_old_m = m;
-            pending_idx = vec![0i32; self.accept_a];
-            for (j, &ni) in path.iter().enumerate() {
-                pending_idx[j] = ni as i32;
-            }
-            pending_n = n_commit as i32;
-
-            let round: Vec<u32> = path[1..]
-                .iter()
-                .map(|&ni| tree.nodes[ni].token)
-                .chain(std::iter::once(bonus))
-                .collect();
-            rec.round_accepts.push(round.len());
-            let mut stop = false;
-            for &t in &round {
-                committed.push(t);
-                rec.tokens.push(t);
-                if cfg.eos == Some(t) || rec.tokens.len() >= cfg.max_new {
-                    stop = true;
-                    break;
-                }
-            }
-            m += n_commit;
-            // refresh the pool with the newly committed suffix
-            let tail_start = committed.len().saturating_sub(n_commit + self.n);
-            index(&mut pool, &committed[tail_start..], self.n);
-            if stop {
-                break;
-            }
-        }
-        rec.wall_ns = t_all.elapsed().as_nanos() as u64;
-        Ok(rec)
+        assert_eq!(self.n, NgramSource::N, "the n-gram source is fixed at 2-gram contexts");
+        let mut src = NgramSource::new(self.gamma, self.verify_t, self.target.vocab);
+        let eng = SourceEngine::new(self.target, self.accept_a);
+        eng.generate(&mut src, prompt, cfg)
     }
 }

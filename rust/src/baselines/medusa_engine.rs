@@ -3,15 +3,20 @@
 //! from the last verified feature; the chain [root, h_0..h_{K-1}] is
 //! verified in one target pass. No sampled-token feedback — exactly the
 //! uncertainty limitation EAGLE's shifted token removes (paper §3.2).
+//!
+//! Since PR 10 the head proposals + feature recycling live in
+//! [`crate::spec::source::MedusaSource`] behind the `DraftSource` trait
+//! and this engine is a thin facade over the generic
+//! [`crate::spec::source::SourceEngine`] round loop. The source itself is
+//! lossless at any temperature (one-hot q rows); this facade keeps the
+//! paper's greedy-only setting.
 
 use anyhow::Result;
-use std::time::Instant;
 
 use crate::metrics::GenRecord;
 use crate::models::{MedusaHeads, TargetModel};
 use crate::spec::engine::GenConfig;
-use crate::spec::sampling::argmax;
-use crate::spec::tree::DraftTree;
+use crate::spec::source::{MedusaSource, SourceEngine};
 
 pub struct MedusaEngine<'a> {
     pub target: &'a TargetModel,
@@ -32,107 +37,14 @@ impl<'a> MedusaEngine<'a> {
 
     pub fn generate(&self, prompt: &[u32], cfg: &GenConfig) -> Result<GenRecord> {
         assert!(cfg.temperature <= 0.0, "medusa baseline is greedy-only (paper setting)");
-        let t_all = Instant::now();
-        let mut rec = GenRecord::new(prompt.len());
-        let tgt = self.target;
-        let vocab = tgt.vocab;
-        let d = tgt.d;
-        let s_tot = tgt.max_len;
-
-        let mut cache = tgt.new_cache(1);
-        let t0 = Instant::now();
-        let (out, plen) = tgt.prefill(prompt, &mut cache)?;
-        rec.timeline.prefill_ns += t0.elapsed().as_nanos() as u64;
-        rec.target_passes += 1;
-        let root = argmax(tgt.row(&out.logits, tgt.prefill_p, 0, plen - 1, vocab)) as u32;
-        let mut committed: Vec<u32> = prompt.to_vec();
-        committed.push(root);
-        rec.tokens.push(root);
-        let mut m = plen;
-        let mut pending_old_m = m;
-        let mut pending_idx = vec![0i32; self.accept_a];
-        let mut pending_n = 0i32;
-        // feature at the position whose LM-head dist produced `root`
-        let mut feat: Vec<f32> = tgt.row(&out.feats, tgt.prefill_p, 0, plen - 1, d).to_vec();
-
-        if cfg.eos == Some(root) {
-            rec.wall_ns = t_all.elapsed().as_nanos() as u64;
-            return Ok(rec);
-        }
-
-        while rec.tokens.len() < cfg.max_new {
-            if m + self.verify_t + 1 >= s_tot {
-                break;
-            }
-            // --- heads propose offsets +2..+K+1 from `feat` (position m-1):
-            //     candidates for absolute positions m+1 .. m+K
-            let t0 = Instant::now();
-            let hl = self.heads.heads(&feat)?; // [K, V]
-            rec.timeline.draft_ns += t0.elapsed().as_nanos() as u64;
-            rec.draft_passes += 1;
-            let mut tree = DraftTree::with_root(committed[m]);
-            let mut parent = 0usize;
-            for kk in 0..self.k {
-                let tok = argmax(&hl[kk * vocab..(kk + 1) * vocab]) as u32;
-                parent = tree.add(parent, tok, 0.0, None);
-                rec.drafted += 1;
-            }
-
-            // --- verify -----------------------------------------------------
-            let (tokens, pos, bias) = tree.verify_inputs(self.verify_t, m, s_tot);
-            let t0 = Instant::now();
-            let vout = tgt.verify(
-                self.verify_t, &mut cache, &[pending_old_m as i32], &pending_idx,
-                &[pending_n], &tokens, &pos, &bias, self.accept_a,
-            )?;
-            rec.timeline.verify_ns += t0.elapsed().as_nanos() as u64;
-            rec.target_passes += 1;
-
-            let path =
-                tree.greedy_walk(|i| argmax(tgt.row(&vout.logits, self.verify_t, 0, i, vocab)));
-            for (gidx, _) in path[1..].iter().enumerate() {
-                if gidx < rec.alpha.len() {
-                    rec.alpha[gidx].0 += 1;
-                    rec.alpha[gidx].1 += 1;
-                }
-            }
-            if path.len() - 1 < self.k && path.len() - 1 < rec.alpha.len() {
-                rec.alpha[path.len() - 1].1 += 1;
-            }
-            let deepest = *path.last().unwrap();
-            let bonus = argmax(tgt.row(&vout.logits, self.verify_t, 0, deepest, vocab)) as u32;
-            // next round's feature: at the deepest accepted position
-            feat = tgt.row(&vout.feats, self.verify_t, 0, deepest, d).to_vec();
-
-            let n_commit = path.len();
-            pending_old_m = m;
-            pending_idx = vec![0i32; self.accept_a];
-            for (j, &ni) in path.iter().enumerate() {
-                pending_idx[j] = ni as i32;
-            }
-            pending_n = n_commit as i32;
-
-            let round: Vec<u32> = path[1..]
-                .iter()
-                .map(|&ni| tree.nodes[ni].token)
-                .chain(std::iter::once(bonus))
-                .collect();
-            rec.round_accepts.push(round.len());
-            let mut stop = false;
-            for &t in &round {
-                committed.push(t);
-                rec.tokens.push(t);
-                if cfg.eos == Some(t) || rec.tokens.len() >= cfg.max_new {
-                    stop = true;
-                    break;
-                }
-            }
-            m += n_commit;
-            if stop {
-                break;
-            }
-        }
-        rec.wall_ns = t_all.elapsed().as_nanos() as u64;
-        Ok(rec)
+        let mut src = MedusaSource::new(
+            self.heads,
+            self.k,
+            self.target.d,
+            self.target.vocab,
+            self.verify_t,
+        );
+        let eng = SourceEngine::new(self.target, self.accept_a);
+        eng.generate(&mut src, prompt, cfg)
     }
 }

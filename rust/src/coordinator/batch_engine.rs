@@ -69,6 +69,15 @@
 //! passes). Bit-identity additionally requires the resumed group to
 //! lower the same verify/draft width families — the serving default,
 //! where every group filters the one declared `verify_widths` list.
+//!
+//! **Draft-source homogeneity (PR 10):** this engine batches the EAGLE
+//! source only. Heterogeneous sources (chain / n-gram / Medusa, see
+//! `spec/source.rs` and `docs/drafting.md`) run on the bs=1
+//! [`crate::spec::source::SourceEngine`] path; the scheduler's
+//! compatibility key includes the resolved source, so a width group
+//! never mixes sources and anything non-eagle simply forms bs=1 groups.
+//! A generic batched loop over `DraftSource` lanes is the ROADMAP
+//! follow-on.
 
 use anyhow::{bail, Result};
 use std::sync::Arc;

@@ -24,6 +24,7 @@
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use super::scheduler::CostModel;
+use crate::util::json::Json;
 
 /// Observations between overhead re-fits.
 pub const DEFAULT_REFIT_EVERY: u64 = 64;
@@ -41,6 +42,25 @@ pub const COLD_ROUND_SECS: f64 = 0.010;
 
 /// Cold-start accepted-tokens-per-round (τ) before any observation.
 pub const COLD_TAU: f64 = 3.0;
+
+/// Committed per-request service time (seconds) from a loadgen result
+/// file (`BENCH_serve.json`, `schema: bench_serve_v1`): the reciprocal
+/// of the `p99_search` stanza's best feasible offered rate. This is the
+/// capacity an operator actually signed off on — the shed estimator
+/// prefers it over the cost model's cold-start prediction when the file
+/// is present (see the shed block in `server::route`). Returns `None`
+/// when the file is absent, unparseable, has no `p99_search` stanza, or
+/// the search found no feasible level.
+pub fn load_committed_capacity(path: &std::path::Path) -> Option<f64> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let v = Json::parse(&text).ok()?;
+    let search = v.get("p99_search")?;
+    if !search.get("feasible")?.as_bool()? {
+        return None;
+    }
+    let rps = search.get("best_offered_rps")?.as_f64()?;
+    (rps.is_finite() && rps > 0.0).then(|| 1.0 / rps)
+}
 
 fn load_f64(a: &AtomicU64) -> f64 {
     f64::from_bits(a.load(Ordering::Relaxed))
@@ -235,6 +255,27 @@ mod tests {
         assert_eq!(m.current().dispatch_overhead, 10);
         assert_eq!(m.refits(), 1);
         assert!(m.predicted_service_secs(3) > 0.0);
+    }
+
+    #[test]
+    fn committed_capacity_reads_feasible_p99_search() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("costfit_capacity_test.json");
+        std::fs::write(
+            &path,
+            r#"{"schema":"bench_serve_v1","p99_search":{"feasible":true,"best_offered_rps":50.0}}"#,
+        )
+        .unwrap();
+        let s = load_committed_capacity(&path).expect("feasible stanza");
+        assert!((s - 0.02).abs() < 1e-12, "50 rps -> 20 ms/request, got {s}");
+
+        // infeasible searches and missing stanzas yield no capacity
+        std::fs::write(&path, r#"{"p99_search":{"feasible":false}}"#).unwrap();
+        assert_eq!(load_committed_capacity(&path), None);
+        std::fs::write(&path, r#"{"schema":"bench_serve_v1"}"#).unwrap();
+        assert_eq!(load_committed_capacity(&path), None);
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(load_committed_capacity(&path), None, "absent file");
     }
 
     #[test]

@@ -18,7 +18,7 @@ pub mod scheduler;
 
 pub use batch_engine::{BatchEagleEngine, LaneInput, LaneOutcome};
 pub use checkpoint::{CheckpointStore, LaneCheckpoint, PreemptSignal};
-pub use costfit::OnlineCostModel;
+pub use costfit::{load_committed_capacity, OnlineCostModel};
 pub use kvslots::SlotAllocator;
 pub use queue::RequestQueue;
 pub use request::{Method, Request, Response, TreeChoice};

@@ -1,5 +1,6 @@
 //! Request/response types for the serving API.
 
+use crate::spec::source::{DraftChoice, SourceKind};
 use crate::util::json::Json;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -73,6 +74,16 @@ pub struct Request {
     pub temperature: f32,
     pub method: Method,
     pub tree: TreeChoice,
+    /// Draft-source choice (`"draft"` field / `--draft` flag):
+    /// `eagle|chain|ngram|medusa` pins a strategy, `auto` asks the
+    /// online [`crate::spec::dyntree::SourceSelector`] policy, `Default`
+    /// defers to the server's configured default.
+    pub draft: DraftChoice,
+    /// The draft source this request actually runs with, resolved at
+    /// admission (route thread) from `draft` + the server config + the
+    /// online policy. Part of the scheduler compatibility class and the
+    /// quarantine fingerprint. Never client-settable directly.
+    pub source: SourceKind,
     /// Per-request verify-width pin (`"verify_width"` field): `Some(t)`
     /// forces every round onto the `verify_t{t}` executable; `None`
     /// defers to the server's configured width policy (auto by default).
@@ -123,6 +134,12 @@ impl Request {
                 .and_then(|t| t.as_str())
                 .and_then(TreeChoice::parse)
                 .unwrap_or(TreeChoice::Default),
+            draft: v
+                .get("draft")
+                .and_then(|t| t.as_str())
+                .and_then(DraftChoice::parse)
+                .unwrap_or(DraftChoice::Default),
+            source: SourceKind::Eagle,
             verify_width: v
                 .get("verify_width")
                 .and_then(|x| x.as_usize())
@@ -168,7 +185,25 @@ impl Request {
     /// and one pinned lane would otherwise force its whole group back to
     /// serial execution.
     pub fn width_batchable(&self) -> bool {
-        self.method == Method::Eagle && self.verify_width.is_none()
+        self.method == Method::Eagle
+            && self.source == SourceKind::Eagle
+            && self.verify_width.is_none()
+    }
+
+    /// The engine `Method` this request dispatches to once its draft
+    /// source is resolved: a non-eagle source re-routes an `eagle`
+    /// request onto the matching bs=1 source engine; explicit baseline
+    /// methods are honored as-is.
+    pub fn source_method(&self) -> Method {
+        if self.method != Method::Eagle {
+            return self.method;
+        }
+        match self.source {
+            SourceKind::Eagle => Method::Eagle,
+            SourceKind::Chain => Method::ClassicSpec,
+            SourceKind::Ngram => Method::Lookahead,
+            SourceKind::Medusa => Method::Medusa,
+        }
     }
 
     /// Temperature key for batching compatibility: all greedy requests
@@ -192,6 +227,8 @@ impl Request {
             temperature: 0.0,
             method: Method::Vanilla,
             tree: TreeChoice::Default,
+            draft: DraftChoice::Default,
+            source: SourceKind::Eagle,
             verify_width: None,
             width_hint: None,
             seed: 0,
@@ -251,6 +288,9 @@ mod tests {
         assert_eq!(r.method, Method::Eagle);
         assert_eq!(r.temperature, 0.0);
         assert_eq!(r.tree, TreeChoice::Default);
+        assert_eq!(r.draft, DraftChoice::Default);
+        assert_eq!(r.source, SourceKind::Eagle);
+        assert!(r.width_batchable());
         assert_eq!(r.verify_width, None);
         assert_eq!(r.width_hint, None);
         assert_eq!(r.admission_width(32), 32, "no hint -> widest");
@@ -292,6 +332,28 @@ mod tests {
         let v = Json::parse(r#"{"prompt":"x","verify_width":16}"#).unwrap();
         let r = Request::from_json(4, &v).unwrap();
         assert_eq!(r.admission_width(32), 16, "pin stands in for a missing hint");
+    }
+
+    #[test]
+    fn parse_request_draft_source() {
+        let v = Json::parse(r#"{"prompt":"x","draft":"ngram"}"#).unwrap();
+        let mut r = Request::from_json(5, &v).unwrap();
+        assert_eq!(r.draft, DraftChoice::Fixed(SourceKind::Ngram));
+        // admission resolves the source; a non-eagle source leaves the
+        // width-batched fast path and dispatches to the matching engine
+        r.source = SourceKind::Ngram;
+        assert!(!r.width_batchable());
+        assert_eq!(r.source_method(), Method::Lookahead);
+        let v = Json::parse(r#"{"prompt":"x","draft":"auto"}"#).unwrap();
+        let r = Request::from_json(6, &v).unwrap();
+        assert_eq!(r.draft, DraftChoice::Auto);
+        let v = Json::parse(r#"{"prompt":"x","draft":"bogus"}"#).unwrap();
+        let r = Request::from_json(7, &v).unwrap();
+        assert_eq!(r.draft, DraftChoice::Default, "unknown draft falls back to default");
+        // an explicit baseline method is honored regardless of source
+        let v = Json::parse(r#"{"prompt":"x","method":"classic"}"#).unwrap();
+        let r = Request::from_json(8, &v).unwrap();
+        assert_eq!(r.source_method(), Method::ClassicSpec);
     }
 
     #[test]

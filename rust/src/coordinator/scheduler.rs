@@ -374,12 +374,18 @@ impl Scheduler {
             AdmissionPolicy::WidthGrouped { verify_widths, max_t } => {
                 let family = WidthFamily::from_available(verify_widths, *max_t, |_| true);
                 let mut out: Vec<AdmittedGroup> = Vec::new();
-                // partition into batchable compatibility classes + the rest
-                type ClassKey = (usize, &'static str, u32);
+                // partition into batchable compatibility classes + the rest.
+                // The resolved draft source is part of the key so a width
+                // group never mixes sources (`width_batchable` already
+                // restricts grouping to the eagle source today; keying on
+                // it keeps that invariant explicit if more sources become
+                // batchable).
+                type ClassKey = (usize, &'static str, u32, &'static str);
                 let mut classes: Vec<(ClassKey, Vec<Request>)> = Vec::new();
                 for r in batch {
                     if r.width_batchable() {
-                        let key = (r.max_tokens, r.tree.name(), r.temperature_class());
+                        let key =
+                            (r.max_tokens, r.tree.name(), r.temperature_class(), r.source.as_str());
                         match classes.iter_mut().find(|(k, _)| *k == key) {
                             Some((_, v)) => v.push(r),
                             None => classes.push((key, vec![r])),
@@ -692,6 +698,32 @@ mod tests {
         assert!(r.width_batchable(), "T>0 eagle requests join width groups");
         r.verify_width = Some(16);
         assert!(!r.width_batchable(), "pinned requests stay on the bs=1 path");
+    }
+
+    #[test]
+    fn next_groups_never_mix_draft_sources() {
+        use crate::spec::source::SourceKind;
+        let q = RequestQueue::new(16);
+        // two eagle-source lanes batch; a resolved n-gram-source request
+        // (same method/tree/temperature) must run as its own singleton
+        for (id, source) in
+            [(0u64, SourceKind::Eagle), (1, SourceKind::Ngram), (2, SourceKind::Eagle)]
+        {
+            let mut r = req(id);
+            r.method = Method::Eagle;
+            r.source = source;
+            q.push(r).unwrap();
+        }
+        let s = Scheduler::new(4, 0).with_policy(AdmissionPolicy::WidthGrouped {
+            verify_widths: vec![8, 16, 32],
+            max_t: 32,
+        });
+        let groups = s.next_groups(&q);
+        assert_eq!(groups.len(), 2);
+        let ids = |g: &AdmittedGroup| g.requests.iter().map(|r| r.id).collect::<Vec<_>>();
+        assert!(groups.iter().any(|g| ids(g) == vec![0, 2]), "eagle-source lanes share a group");
+        let single = groups.iter().find(|g| ids(g) == vec![1]).unwrap();
+        assert!(single.verify_cap.is_none(), "non-eagle source runs outside width groups");
     }
 
     #[test]

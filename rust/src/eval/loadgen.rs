@@ -172,11 +172,26 @@ pub struct Profile {
     pub tight_frac: f64,
     /// Fraction of requests sampled at T=0.8 (the rest greedy).
     pub sampled_frac: f64,
+    /// Stamp every request's `"draft"` field (`--draft`); `None` omits
+    /// the field so the server's `--draft` default applies.
+    pub draft: Option<String>,
+    /// `--profile mixed`: half the prompts are chat-like, half carry a
+    /// repetitive JSON-ish payload, so a `--draft auto` run gives the
+    /// online source policy two distinguishable workloads (the
+    /// synthetic worker prices acceptance off prompt repetitiveness).
+    pub mixed: bool,
 }
 
 impl Default for Profile {
     fn default() -> Profile {
-        Profile { max_tokens: 48, tight_deadline_ms: 300, tight_frac: 0.3, sampled_frac: 0.25 }
+        Profile {
+            max_tokens: 48,
+            tight_deadline_ms: 300,
+            tight_frac: 0.3,
+            sampled_frac: 0.25,
+            draft: None,
+            mixed: false,
+        }
     }
 }
 
@@ -203,11 +218,25 @@ pub fn build_workload(arrivals: &[f64], profile: &Profile, rng: &mut Rng) -> Vec
             let tight = rng.next_f64() < profile.tight_frac;
             let deadline_ms = tight.then_some(profile.tight_deadline_ms);
             let temperature = if rng.next_f64() < profile.sampled_frac { 0.8 } else { 0.0 };
+            // prompts keep the unique load-{key} prefix (replay matching
+            // is by content); the mixed profile appends either a chat
+            // phrase or a highly repetitive JSON-ish payload — no JSON
+            // string escapes needed, so the body stays hand-serialized
+            let prompt = if profile.mixed && key % 2 == 1 {
+                format!("load-{key:06} {}", "{id:1,ok:true},".repeat(8))
+            } else if profile.mixed {
+                format!("load-{key:06} summarize the discussion and list open questions")
+            } else {
+                format!("load-{key:06}")
+            };
             let mut body = format!(
-                "{{\"prompt\":\"load-{key:06}\",\"max_tokens\":{},\"temperature\":{temperature},\"seed\":{}",
+                "{{\"prompt\":\"{prompt}\",\"max_tokens\":{},\"temperature\":{temperature},\"seed\":{}",
                 profile.max_tokens,
                 7 + key as u64,
             );
+            if let Some(d) = &profile.draft {
+                body.push_str(&format!(",\"draft\":\"{d}\""));
+            }
             if let Some(d) = deadline_ms {
                 body.push_str(&format!(",\"deadline_ms\":{d}"));
             } else {
@@ -982,6 +1011,11 @@ pub fn run(cfg: &LoadgenConfig) -> Result<()> {
                 ("max_tokens", Json::Num(cfg.profile.max_tokens as f64)),
                 ("tight_deadline_ms", Json::Num(cfg.profile.tight_deadline_ms as f64)),
                 ("tight_frac", Json::Num(cfg.profile.tight_frac)),
+                ("profile", Json::from(if cfg.profile.mixed { "mixed" } else { "chat" })),
+                (
+                    "draft",
+                    Json::Str(cfg.profile.draft.clone().unwrap_or_else(|| "default".into())),
+                ),
                 ("seed", Json::Num(cfg.seed as f64)),
             ]),
         ),

@@ -7,12 +7,13 @@ use anyhow::Result;
 use std::fmt::Write as _;
 
 use super::runner::{speedup, RunSpec, Runner};
-use super::workload::Workload;
+use super::workload::{synthetic_scenarios, Workload};
 use crate::coordinator::request::{Method, Request};
 use crate::coordinator::{AdmissionPolicy, BatchEagleEngine, RequestQueue, Scheduler};
 use crate::metrics::{Aggregate, GenRecord};
 use crate::models::ModelBundle;
-use crate::spec::dyntree::{DynTreeConfig, TreePolicy};
+use crate::spec::dyntree::{DynTreeConfig, SourceSelector, TreePolicy};
+use crate::spec::source::{prompt_repetitiveness, sim_accepted_per_round, SourceKind};
 use crate::spec::engine::GenConfig;
 use crate::spec::tree::TreeSpec;
 use crate::text::bpe::Bpe;
@@ -429,6 +430,10 @@ impl EvalCtx {
             (26, TreeSpec::tree_default().level_widths),
             (32, vec![4, 10, 10, 7]),
         ];
+        // all dyntree rows run the eagle feature-extrapolation source;
+        // dyntree_row_label keeps their historical labels byte-stable
+        // (regression-guarded) while non-eagle sources would be tagged
+        let src = SourceKind::Eagle;
         for (t, widths) in static_shapes {
             let label: Vec<String> = widths.iter().map(|w| w.to_string()).collect();
             let mut spec = self.spec(Method::Eagle, 0.0);
@@ -436,8 +441,8 @@ impl EvalCtx {
             let st = self.runner.run_with(&bundle, &prompts, &spec)?;
             writeln!(
                 out,
-                "| static {} | {t} | {:.2}x | {:.2} | {:.2} | {:.1} | {:.1} | {:.1} |",
-                label.join("/"),
+                "| {} | {t} | {:.2}x | {:.2} | {:.2} | {:.1} | {:.1} | {:.1} |",
+                dyntree_row_label(&format!("static {}", label.join("/")), src),
                 speedup(&st, &base),
                 st.tau(),
                 t1_tau(&spec)?,
@@ -451,7 +456,8 @@ impl EvalCtx {
             let dy = self.runner.run_with(&bundle, &prompts, &spec)?;
             writeln!(
                 out,
-                "| dynamic (adaptive) | {t} | {:.2}x | {:.2} | {:.2} | {:.1} | {:.1} | {:.1} |",
+                "| {} | {t} | {:.2}x | {:.2} | {:.2} | {:.1} | {:.1} | {:.1} |",
+                dyntree_row_label("dynamic (adaptive)", src),
                 speedup(&dy, &base),
                 dy.tau(),
                 t1_tau(&spec)?,
@@ -470,8 +476,9 @@ impl EvalCtx {
             let lo = self.runner.run_with(&bundle, &prompts, &weak)?;
             writeln!(
                 out,
-                "| dynamic, weak tok draft (low alpha) | full | {:.2}x | {:.2} | {:.2} | {:.1} \
+                "| {} | full | {:.2}x | {:.2} | {:.2} | {:.1} \
                  | {:.1} | {:.1} |",
+                dyntree_row_label("dynamic, weak tok draft (low alpha)", src),
                 speedup(&lo, &base),
                 lo.tau(),
                 t1_tau(&weak)?,
@@ -510,7 +517,8 @@ impl EvalCtx {
                 }
                 writeln!(
                     out,
-                    "| {label} | 26 | - | {:.2} | {:.2} | {:.1} | {:.1} | {:.1} |",
+                    "| {} | 26 | - | {:.2} | {:.2} | {:.1} | {:.1} | {:.1} |",
+                    dyntree_row_label(label, src),
                     agg.tau(),
                     agg1.tau(),
                     agg.tokens_per_sec(),
@@ -821,12 +829,122 @@ impl EvalCtx {
             "dyntree" => self.dyntree(),
             "widthsched" => self.widthsched(),
             "phases" => self.phases(),
+            "draftsrc" => draftsrc(),
             _ => Err(anyhow::anyhow!("unknown experiment id '{id}'")),
         }
     }
 
-    pub const ALL: [&'static str; 14] = [
+    pub const ALL: [&'static str; 15] = [
         "fig1", "fig2", "fig8", "fig9", "fig10", "tab1", "tab2", "tab3", "tab4", "tab6", "tab7",
-        "dyntree", "widthsched", "phases",
+        "dyntree", "widthsched", "phases", "draftsrc",
     ];
+}
+
+/// Label a dyntree row with its draft source. The default eagle source
+/// returns the historical label unchanged — byte-for-byte, so existing
+/// `results/dyntree.md` diffs stay clean (regression-guarded below) —
+/// while any other source appends a `[source]` tag.
+pub fn dyntree_row_label(base: &str, source: SourceKind) -> String {
+    match source {
+        SourceKind::Eagle => base.to_string(),
+        other => format!("{base} [{}]", other.as_str()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// draftsrc: online draft-source policy convergence per workload scenario
+// ---------------------------------------------------------------------------
+
+/// `draftsrc` — artifact-free convergence table for the `--draft auto`
+/// policy. Per scenario a fresh [`SourceSelector`] runs the same
+/// pick/observe loop the server runs (observations come from the shared
+/// acceptance simulation keyed on the scenario prompt's duplicate-3-gram
+/// ratio), and the row reports the converged winner, its cost-normalized
+/// score, the policy's depth hint, per-source pick counts, and switch
+/// count. Convergence is asserted: repetitive JSON must settle on the
+/// n-gram source and varied dialogue on eagle.
+pub fn draftsrc() -> Result<String> {
+    let mut out = String::from(
+        "# draftsrc — online draft-source policy convergence per scenario (T=0)\n\n\
+         | scenario | repetitiveness | winner | score | depth hint | picks e/c/n/m | switches |\n\
+         |---|---|---|---|---|---|---|\n",
+    );
+    for sc in synthetic_scenarios() {
+        let r = prompt_repetitiveness(sc.prompt);
+        let sel = SourceSelector::new();
+        for _ in 0..200 {
+            let k = sel.pick(0.0);
+            sel.observe(k, sim_accepted_per_round(k, r));
+        }
+        let w = sel.best(0.0);
+        writeln!(
+            out,
+            "| {} | {r:.2} | {} | {:.2} | {} | {}/{}/{}/{} | {} |",
+            sc.name,
+            w.as_str(),
+            sel.score(w),
+            sel.depth_hint(w),
+            sel.picks(SourceKind::Eagle),
+            sel.picks(SourceKind::Chain),
+            sel.picks(SourceKind::Ngram),
+            sel.picks(SourceKind::Medusa),
+            sel.switches(),
+        )?;
+        match sc.name {
+            "dialogue" => anyhow::ensure!(
+                w == SourceKind::Eagle,
+                "dialogue must converge to eagle, got {w:?}"
+            ),
+            "repetitive-json" => anyhow::ensure!(
+                w == SourceKind::Ngram,
+                "repetitive JSON must converge to ngram, got {w:?}"
+            ),
+            _ => {}
+        }
+    }
+    out.push_str(
+        "\nEach row runs a fresh selector through 200 requests of one scenario:\n\
+         deterministic round-robin probing until every source has 4\n\
+         observations, then the best cost-normalized acceptance EWMA\n\
+         (accepted tokens per round / relative drafting cost). `score` is the\n\
+         winner's converged EWMA over its cost hint; `picks e/c/n/m` counts\n\
+         requests routed to eagle/chain/ngram/medusa — the winner dominates\n\
+         after the probe phase, so switches stay small. The same selector and\n\
+         simulation drive `--draft auto` in the synthetic server, so this\n\
+         table is the offline twin of eagle_policy_switches_total and the\n\
+         eagle_draft_source_rounds_total family.\n",
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dyntree_labels_byte_stable_for_eagle() {
+        // regression guard: the default source must not perturb the
+        // historical dyntree row labels
+        for base in ["static 4/8/8/5", "dynamic (adaptive)", "bs=2 static"] {
+            assert_eq!(dyntree_row_label(base, SourceKind::Eagle), base);
+        }
+        assert_eq!(
+            dyntree_row_label("dynamic (adaptive)", SourceKind::Ngram),
+            "dynamic (adaptive) [ngram]"
+        );
+        assert_eq!(dyntree_row_label("bs=2 static", SourceKind::Medusa), "bs=2 static [medusa]");
+    }
+
+    #[test]
+    fn draftsrc_converges_per_scenario() {
+        let table = draftsrc().expect("draftsrc must converge");
+        assert!(table.contains("| dialogue |"));
+        assert!(table.contains("| repetitive-json |"));
+        // winners per the ensure! asserts inside draftsrc(); spot-check
+        // the rendered rows as well
+        let dialogue_row = table.lines().find(|l| l.starts_with("| dialogue |")).unwrap();
+        assert!(dialogue_row.contains("| eagle |"), "{dialogue_row}");
+        let json_row = table.lines().find(|l| l.starts_with("| repetitive-json |")).unwrap();
+        assert!(json_row.contains("| ngram |"), "{json_row}");
+    }
 }

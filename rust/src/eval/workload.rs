@@ -66,3 +66,53 @@ impl Workload {
         self.prompts.iter().take(n).collect()
     }
 }
+
+/// A named artifact-free scenario for the `draftsrc` eval: a workload
+/// class plus a representative prompt whose duplicate-3-gram ratio
+/// (`spec::source::prompt_repetitiveness`) places it on the right side
+/// of the n-gram/eagle crossover. No tokenizer or manifest needed —
+/// the draft-source policy only consumes the repetitiveness signal.
+#[derive(Debug, Clone, Copy)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub prompt: &'static str,
+}
+
+/// The three `draftsrc` scenarios: varied dialogue (eagle territory),
+/// code (mildly repetitive), and repeated-unit JSON (n-gram territory).
+pub fn synthetic_scenarios() -> [Scenario; 3] {
+    [
+        Scenario {
+            name: "dialogue",
+            prompt: "please compare the tradeoffs between optimistic and pessimistic \
+                     locking for a busy checkout service, then recommend one with reasons",
+        },
+        Scenario {
+            name: "code",
+            prompt: "fn main() { for i in 0..10 { println!(\"{i}\"); } }\n\
+                     fn main() { for j in 0..20 { println!(\"{j}\"); } }\n\
+                     refactor these two entry points into one parameterized helper",
+        },
+        Scenario {
+            name: "repetitive-json",
+            prompt: "{\"id\":1,\"ok\":true},{\"id\":1,\"ok\":true},{\"id\":1,\"ok\":true},\
+                     {\"id\":1,\"ok\":true},{\"id\":1,\"ok\":true},{\"id\":1,\"ok\":true}",
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::source::prompt_repetitiveness;
+
+    #[test]
+    fn scenarios_span_the_repetitiveness_axis() {
+        let [dialogue, code, json] = synthetic_scenarios();
+        let rd = prompt_repetitiveness(dialogue.prompt);
+        let rj = prompt_repetitiveness(json.prompt);
+        assert!(rd < 0.4, "dialogue scored {rd}");
+        assert!(rj > 0.6, "repetitive json scored {rj}");
+        assert!(rd < prompt_repetitiveness(code.prompt) || rd < rj);
+    }
+}

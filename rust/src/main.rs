@@ -2,6 +2,7 @@
 //!
 //!   repro serve   [--addr 127.0.0.1:8085] [--model toy-s] [--queue 64]
 //!                 [--tree static|dynamic] [--verify-width auto|N]
+//!                 [--draft eagle|chain|ngram|medusa|auto] [--capacity-file PATH]
 //!                 [--batch N] [--linger MS] [--width-grouping]
 //!                 [--cost-model PATH] [--edf] [--aging-ms MS]
 //!                 [--preempt] [--kv-budget MIB]
@@ -9,6 +10,7 @@
 //!   repro loadgen [--addr 127.0.0.1:8085] [--arrivals poisson|bursty|closed|replay]
 //!                 [--rps F] [--levels 0.5,1,2] [--duration SECS]
 //!                 [--soak SECS] [--compare-edf] [--compare-preempt]
+//!                 [--profile chat|mixed] [--draft eagle|...|auto]
 //!                 [--target-p99-ttft-ms MS] [--out BENCH_serve.json]
 //!   repro generate --prompt "..." [--model toy-s] [--method eagle]
 //!                  [--max-tokens 64] [--temperature 0] [--seed 7]
@@ -102,6 +104,11 @@ fn print_help() {
          \u{20}           that resume bit-identically; --kv-budget bounds suspended KV bytes,\n\
          \u{20}           past it lanes re-prefill on resume. POST /admin/preempt flips at\n\
          \u{20}           runtime — see docs/robustness.md)\n\
+         \u{20}          --draft eagle|chain|ngram|medusa|auto  (default draft source for\n\
+         \u{20}           requests without a \"draft\" field; auto picks per request from the\n\
+         \u{20}           online acceptance policy — see docs/drafting.md)\n\
+         \u{20}          --capacity-file PATH    (committed-capacity shed seed from a loadgen\n\
+         \u{20}           p99_search stanza; default: probe ./BENCH_serve.json)\n\
          \u{20}          --synthetic [--round-us US]  (no-artifact simulated engine: timed\n\
          \u{20}           rounds, deterministic output — the loadgen/CI target)\n\
          loadgen   --addr HOST:PORT --arrivals poisson|bursty|closed|replay --rps F\n\
@@ -116,6 +123,10 @@ fn print_help() {
          \u{20}          --soak SECS             (chaos soak: bursty load, /healthz watchdog,\n\
          \u{20}           asserts drain, zero hung slots, zero round-path alloc)\n\
          \u{20}          --tight-deadline-ms MS --tight-frac F --max-retries N --seed N\n\
+         \u{20}          --profile chat|mixed    (request mix: chat prompts, or chat +\n\
+         \u{20}           repetitive-JSON so --draft auto has something to tell apart)\n\
+         \u{20}          --draft eagle|chain|ngram|medusa|auto  (stamp every request's\n\
+         \u{20}           \"draft\" field; auto exercises the online source policy)\n\
          generate  --prompt TEXT --model NAME --method eagle|eagle-chain|vanilla|medusa|lookahead|classic-spec\n\
          \u{20}          --max-tokens N --temperature F --seed N\n\
          \u{20}          --tree static|dynamic [--draft-depth N --frontier K --branch B --no-adapt]\n\
@@ -160,6 +171,14 @@ fn verify_width(args: &Args) -> Result<WidthSelect> {
         .ok_or_else(|| anyhow::anyhow!("bad --verify-width '{s}' (auto or an integer >= 2)"))
 }
 
+/// Parse `--draft eagle|chain|ngram|medusa|auto` into the server's
+/// default draft-source policy.
+fn draft_choice(args: &Args) -> Result<eagle_serve::spec::source::DraftChoice> {
+    let s = args.get_or("draft", "eagle");
+    eagle_serve::spec::source::DraftChoice::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("bad --draft '{s}' (eagle|chain|ngram|medusa|auto)"))
+}
+
 fn serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:8085");
     let model = args.get_or("model", "toy-s");
@@ -167,6 +186,8 @@ fn serve(args: &Args) -> Result<()> {
         queue_cap: args.usize_or("queue", 64),
         default_tree: tree_policy(args)?,
         default_width: verify_width(args)?,
+        default_draft: draft_choice(args)?,
+        capacity_file: args.get("capacity-file").map(std::path::PathBuf::from),
         max_batch: args.usize_or("batch", 1),
         linger_ms: args.u64_or("linger", 2),
         width_grouping: args.has("width-grouping"),
@@ -207,11 +228,18 @@ fn loadgen(args: &Args) -> Result<()> {
         .filter_map(|s| s.trim().parse().ok())
         .collect();
     anyhow::ensure!(!levels.is_empty(), "--levels parsed to nothing");
+    let mixed = match args.get_or("profile", "chat") {
+        "chat" => false,
+        "mixed" => true,
+        other => anyhow::bail!("unknown --profile '{other}' (chat|mixed)"),
+    };
     let profile = lg::Profile {
         max_tokens: args.usize_or("max-tokens", 48),
         tight_deadline_ms: args.u64_or("tight-deadline-ms", 300),
         tight_frac: args.f64_or("tight-frac", 0.3),
         sampled_frac: args.f64_or("sampled-frac", 0.25),
+        draft: args.get("draft").map(String::from),
+        mixed,
     };
     let cfg = lg::LoadgenConfig {
         addr: args.get_or("addr", "127.0.0.1:8085").to_string(),
@@ -322,12 +350,22 @@ fn eval(args: &Args) -> Result<()> {
     let max_new = args.usize_or("max-new", 48);
     let out_dir = std::path::PathBuf::from(args.get_or("out", "results"));
     std::fs::create_dir_all(&out_dir)?;
-    let ctx = EvalCtx::new(&artifacts_dir(), n, max_new)?;
     let ids: Vec<&str> = if args.has("all") {
         EvalCtx::ALL.to_vec()
     } else {
         vec![args.get("exp").ok_or_else(|| anyhow::anyhow!("--exp ID or --all"))?]
     };
+    // draftsrc is artifact-free (a pure policy simulation over the
+    // synthetic workload scenarios), so `--exp draftsrc` runs before
+    // `make artifacts` — the CI smoke invokes it exactly that way
+    if ids == ["draftsrc"] {
+        let table = eagle_serve::eval::tables::draftsrc()?;
+        let path = out_dir.join("draftsrc.md");
+        std::fs::write(&path, &table)?;
+        println!("{table}");
+        return Ok(());
+    }
+    let ctx = EvalCtx::new(&artifacts_dir(), n, max_new)?;
     for id in ids {
         eprintln!("[eval] running {id} ...");
         let t0 = std::time::Instant::now();

@@ -68,6 +68,19 @@
 //! end to end without artifacts (the `repro loadgen` harness and the CI
 //! smoke drive exactly this mode).
 //!
+//! Heterogeneous draft sources (`docs/drafting.md`): a request pins a
+//! drafting strategy with its `"draft"` field (`eagle | chain | ngram |
+//! medusa`), or asks for the online policy with `"draft": "auto"`; the
+//! server default is `--draft`. The source is resolved at admission —
+//! auto picks from a per-source acceptance [`SourceSelector`] fed by
+//! every finished generation (simulated acceptance curves in synthetic
+//! mode, so `--draft auto` converges without artifacts) — and becomes
+//! part of the scheduler's compat class (groups never mix sources), the
+//! quarantine [`fingerprint`], and the dispatch decision (non-eagle
+//! sources run their engine facades on the bs=1 path). Rounds are
+//! counted per source in `eagle_draft_source_rounds_total{source}`;
+//! auto-policy source changes in `eagle_policy_switches_total`.
+//!
 //! Checkpointable lanes (`--preempt`, `docs/robustness.md`): every lane
 //! is suspendable at round boundaries and resumes **bit-identically**.
 //! A [`PreemptCtl`] bundles the lane [`PreemptSignal`], the
@@ -95,6 +108,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
+use crate::coordinator::costfit::load_committed_capacity;
 use crate::coordinator::request::{Method, Request, Response, TreeChoice};
 use crate::coordinator::{
     queue::PushError, verify_curve_points, AdmissionPolicy, AdmittedGroup, BatchEagleEngine,
@@ -108,9 +122,10 @@ use crate::metrics::registry::{
 use crate::metrics::trace::{FlightRecorder, RoundEvent, RoundObserver};
 use crate::metrics::{Aggregate, GenRecord};
 use crate::models::ModelBundle;
-use crate::spec::dyntree::{TreePolicy, WidthSelect};
+use crate::spec::dyntree::{SourceSelector, TreePolicy, WidthSelect};
 use crate::spec::engine::{EagleEngine, GenConfig};
 use crate::spec::scratch::ScratchPool;
+use crate::spec::source::{prompt_repetitiveness, sim_accepted_per_round, DraftChoice, SourceKind};
 use crate::text::bpe::Bpe;
 use crate::util::json::Json;
 use http::{HttpRequest, HttpResponse};
@@ -152,6 +167,9 @@ pub struct ServerMetrics {
     c_kv_evictions: CounterId,
     c_resumes: CounterId,
     c_resume_refill: CounterId,
+    /// Speculation rounds by draft source, indexed by [`SourceKind::idx`].
+    c_draft_source: [CounterId; 4],
+    c_policy_switches: CounterId,
     // gauges
     g_queue_depth: GaugeId,
     g_inflight: GaugeId,
@@ -282,6 +300,17 @@ impl ServerMetrics {
             "eagle_resume_refill_rounds_total",
             "Prefill passes spent reconstructing evicted KV on resume.",
         );
+        let c_draft_source = SourceKind::ALL.map(|k| {
+            b.counter_with(
+                "eagle_draft_source_rounds_total",
+                "Speculation rounds executed, by draft source.",
+                &[("source", k.as_str())],
+            )
+        });
+        let c_policy_switches = b.counter(
+            "eagle_policy_switches_total",
+            "Auto draft-policy picks that changed source relative to the previous pick.",
+        );
         let g_queue_depth = b.gauge("eagle_queue_depth", "Requests waiting in the queue.");
         let g_inflight = b.gauge("eagle_inflight_lanes", "Lanes currently generating.");
         let g_last_group =
@@ -374,6 +403,8 @@ impl ServerMetrics {
             c_kv_evictions,
             c_resumes,
             c_resume_refill,
+            c_draft_source,
+            c_policy_switches,
             g_queue_depth,
             g_inflight,
             g_last_group,
@@ -422,6 +453,17 @@ impl ServerMetrics {
     pub fn on_worker_panic(&self, lanes: u64) {
         self.registry.inc(self.c_worker_panics);
         self.registry.add(self.c_lane_failures, lanes);
+    }
+
+    /// `rounds` speculation rounds ran under draft source `kind`.
+    pub fn on_draft_source_rounds(&self, kind: SourceKind, rounds: u64) {
+        self.registry.add(self.c_draft_source[kind.idx()], rounds);
+    }
+
+    /// The auto draft policy picked a different source than its
+    /// previous pick.
+    pub fn on_policy_switch(&self) {
+        self.registry.inc(self.c_policy_switches);
     }
 
     /// Lanes failed with 500 outside a panic (e.g. quarantine refusals).
@@ -736,6 +778,16 @@ pub struct ServeConfig {
     /// Verify-width policy (`--verify-width auto|N`) applied when a
     /// request does not pin one via its `"verify_width"` field.
     pub default_width: WidthSelect,
+    /// Draft-source policy (`--draft eagle|chain|ngram|medusa|auto`)
+    /// applied when a request does not pick one via its `"draft"` field.
+    pub default_draft: DraftChoice,
+    /// Committed-capacity file for the shed estimator
+    /// (`--capacity-file`; defaults to probing `BENCH_serve.json` in the
+    /// working directory). A feasible `p99_search` stanza pins the
+    /// cold-start per-request service estimate to the committed
+    /// operating point; absent or infeasible, the estimate falls back to
+    /// the live cost model's prediction. The warm EWMA always wins.
+    pub capacity_file: Option<std::path::PathBuf>,
     /// Admission batch size (`--batch`); 1 = per-request serving.
     pub max_batch: usize,
     /// Linger for batch fill (`--linger`), in milliseconds.
@@ -791,6 +843,8 @@ impl ServeConfig {
             queue_cap: 64,
             default_tree: TreePolicy::default_tree(),
             default_width: WidthSelect::Auto,
+            default_draft: DraftChoice::Fixed(SourceKind::Eagle),
+            capacity_file: None,
             max_batch: 1,
             linger_ms: 2,
             width_grouping: false,
@@ -998,7 +1052,7 @@ pub fn fingerprint(r: &Request) -> u64 {
     eat(&r.max_tokens.to_le_bytes());
     eat(&r.temperature.to_bits().to_le_bytes());
     eat(&r.seed.to_le_bytes());
-    eat(&[r.method as u8, r.tree as u8]);
+    eat(&[r.method as u8, r.tree as u8, r.source as u8]);
     h
 }
 
@@ -1326,6 +1380,7 @@ struct EngineWorker<'a> {
     live: Option<&'a OnlineCostModel>,
     queue: &'a RequestQueue,
     preempt: Option<&'a PreemptCtl>,
+    selector: Option<&'a SourceSelector>,
     pool: ScratchPool,
     agg: Aggregate,
 }
@@ -1347,6 +1402,7 @@ impl GroupWorker for EngineWorker<'_> {
             self.live,
             self.queue,
             self.preempt,
+            self.selector,
             &mut self.pool,
             &mut self.agg,
         );
@@ -1378,6 +1434,23 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
     );
     let metrics = Arc::new(ServerMetrics::new(cfg.trace_cap));
     let health = Arc::new(Health::new(cfg.stall_ms));
+    // per-source acceptance tracker behind `--draft auto`: route threads
+    // pick from it, the worker feeds it per-request acceptance
+    let selector = Arc::new(SourceSelector::new());
+    // committed-capacity shed seed (explicit --capacity-file, or a
+    // BENCH_serve.json left by a prior loadgen run in the working dir)
+    let capacity_path = cfg
+        .capacity_file
+        .clone()
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_serve.json"));
+    let committed_service = load_committed_capacity(&capacity_path);
+    if let Some(s) = committed_service {
+        eprintln!(
+            "[server] shed estimator seeded from committed capacity: {:.1} ms/request (from {})",
+            s * 1e3,
+            capacity_path.display()
+        );
+    }
     let pending: Arc<PendingMap> = Arc::new(Mutex::new(std::collections::HashMap::new()));
     // preemption controller, shared by the worker (round-boundary
     // governors) and the routes (runtime toggle, drain preempt). The
@@ -1448,6 +1521,7 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
         let health = health.clone();
         let live = live.clone();
         let preempt_ctl = preempt_ctl.clone();
+        let selector = selector.clone();
         let round_us = cfg.synthetic_round_us;
         let default_deadline_ms = cfg.default_deadline_ms;
         std::thread::Builder::new().name("inference".into()).spawn(move || {
@@ -1465,6 +1539,7 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
                 live: Some(&live),
                 queue: Some(&queue),
                 preempt: Some(&preempt_ctl),
+                selector: Some(&selector),
                 agg: Aggregate::new(),
             };
             worker_loop(
@@ -1485,6 +1560,7 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
         let health = health.clone();
         let live = live.clone();
         let preempt_ctl = preempt_ctl.clone();
+        let selector = selector.clone();
         let sched_slot = sched_slot.clone();
         let artifacts = cfg.artifacts.clone();
         let model = cfg.model.clone();
@@ -1542,6 +1618,7 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
                 live: Some(&live),
                 queue: &queue,
                 preempt: Some(&preempt_ctl),
+                selector: Some(&selector),
                 pool: ScratchPool::new(),
                 agg: Aggregate::new(),
             };
@@ -1564,6 +1641,7 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
     let accept = {
         let queue = queue.clone();
         let default_deadline_ms = cfg.default_deadline_ms;
+        let default_draft = cfg.default_draft;
         std::thread::Builder::new().name("accept".into()).spawn(move || {
             let next_id = Arc::new(AtomicU64::new(1));
             for stream in listener.incoming() {
@@ -1579,6 +1657,7 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
                 let sched_slot = sched_slot.clone();
                 let live = live.clone();
                 let preempt_ctl = preempt_ctl.clone();
+                let selector = selector.clone();
                 std::thread::spawn(move || {
                     let req = match HttpRequest::read_from(&mut stream) {
                         Ok(r) => r,
@@ -1594,6 +1673,9 @@ pub fn serve(cfg: ServeConfig) -> Result<()> {
                         sched: &sched_slot,
                         live: &live,
                         preempt: &preempt_ctl,
+                        selector: &selector,
+                        default_draft,
+                        committed_service,
                     };
                     let resp = route(&req, &ctx);
                     let _ = stream.write_all(resp.to_bytes().as_slice());
@@ -1645,9 +1727,19 @@ fn run_group(
     live: Option<&OnlineCostModel>,
     queue: &RequestQueue,
     preempt: Option<&PreemptCtl>,
+    selector: Option<&SourceSelector>,
     pool: &mut ScratchPool,
     agg: &mut Aggregate,
 ) {
+    // per-request policy feedback: the selector's EWMA eats each
+    // finished record's accepted-per-round (τ), and the per-source
+    // round counter follows the record's verify passes
+    let observe_done = |req: &Request, rec: &GenRecord| {
+        metrics.on_draft_source_rounds(req.source, rec.target_passes as u64);
+        if let Some(sel) = selector {
+            sel.observe(req.source, rec.tau());
+        }
+    };
     let reqs = &group.requests;
     let b = reqs.len();
     let observer = WorkerObserver { metrics, health, live, preempt, queue: Some(queue) };
@@ -1737,6 +1829,7 @@ fn run_group(
                         LaneOutcome::Done(rec) => {
                             let e2e = req.arrival.elapsed().as_secs_f64();
                             metrics.record_gen(&rec, *qw, e2e, b as u64);
+                            observe_done(req, &rec);
                             agg.add(&rec);
                             deliver(
                                 pending,
@@ -1805,6 +1898,7 @@ fn run_group(
                     match engine.generate_resumable(LaneInput::Resume { ckpt }, &gen) {
                         Ok(LaneOutcome::Done(rec)) => {
                             metrics.record_gen(&rec, qw, req.arrival.elapsed().as_secs_f64(), 1);
+                            observe_done(req, &rec);
                             agg.add(&rec);
                             deliver(
                                 pending,
@@ -1836,8 +1930,12 @@ fn run_group(
             }
         }
         let ids = bpe.encode_prompt(&req.prompt);
+        // the resolved draft source picks the engine on the bs=1 path:
+        // an explicit non-eagle method wins, otherwise the source maps
+        // to its engine facade (chain -> classic spec, ngram ->
+        // lookahead, medusa -> medusa heads)
         let spec = RunSpec {
-            method: req.method,
+            method: req.source_method(),
             temperature: req.temperature,
             max_new: req.max_tokens,
             seed: req.seed,
@@ -1852,6 +1950,7 @@ fn run_group(
         let resp = match runner.run_one_observed(bundle, &ids, &spec, &gen, Some(&observer)) {
             Ok(rec) => {
                 metrics.record_gen(&rec, qw, req.arrival.elapsed().as_secs_f64(), 1);
+                observe_done(req, &rec);
                 agg.add(&rec);
                 Response {
                     id: req.id,
@@ -1906,6 +2005,12 @@ struct SyntheticWorker<'a> {
     /// tests that drive `run` directly without preemption).
     queue: Option<&'a RequestQueue>,
     preempt: Option<&'a PreemptCtl>,
+    /// Auto-draft policy feedback: each simulated round feeds the
+    /// selector a repetitiveness-dependent acceptance for the lane's
+    /// source, so `--draft auto` converges the same way it would on
+    /// real engines (repetitive prompts reward ngram, chat rewards
+    /// eagle) — without touching the fingerprint-pure token stream.
+    selector: Option<&'a SourceSelector>,
     agg: Aggregate,
 }
 
@@ -1926,6 +2031,11 @@ impl GroupWorker for SyntheticWorker<'_> {
         let t0 = Instant::now();
         let queue_waits: Vec<f64> =
             reqs.iter().map(|r| r.arrival.elapsed().as_secs_f64()).collect();
+        // per-lane prompt repetitiveness, priced once per group: the
+        // simulated acceptance curves are a pure function of (source,
+        // repetitiveness), so the selector sees the same signal a real
+        // engine's τ would carry
+        let reps: Vec<f64> = reqs.iter().map(|r| prompt_repetitiveness(&r.prompt)).collect();
         // a resumed lane continues from its checkpointed record: the
         // token stream is a pure function of (fingerprint, index), so
         // the continuation is byte-identical to an uninterrupted run.
@@ -2018,6 +2128,10 @@ impl GroupWorker for SyntheticWorker<'_> {
                     rec.tokens.push(((base.wrapping_mul(idx + 1)) >> 17) as u32 & 0x7fff);
                 }
                 rec.target_passes += 1;
+                self.metrics.on_draft_source_rounds(r.source, 1);
+                if let Some(sel) = self.selector {
+                    sel.observe(r.source, sim_accepted_per_round(r.source, reps[i]));
+                }
                 rec.round_accepts.push(take);
                 rec.round_tree_nodes.push(t as usize);
                 rec.round_verify_t.push(t as usize);
@@ -2127,6 +2241,13 @@ struct RouteCtx<'a> {
     sched: &'a OnceLock<Arc<Scheduler>>,
     live: &'a OnlineCostModel,
     preempt: &'a PreemptCtl,
+    /// Per-source acceptance tracker behind `--draft auto`.
+    selector: &'a SourceSelector,
+    /// Server draft policy for requests whose `"draft"` field is unset.
+    default_draft: DraftChoice,
+    /// Per-request service seconds at the committed operating point
+    /// (`BENCH_serve.json` `p99_search`), when one was loaded at boot.
+    committed_service: Option<f64>,
 }
 
 fn route(req: &HttpRequest, ctx: &RouteCtx) -> HttpResponse {
@@ -2238,23 +2359,53 @@ fn route(req: &HttpRequest, ctx: &RouteCtx) -> HttpResponse {
                 None => return HttpResponse::status(400, "bad json"),
             };
             let id = next_id.fetch_add(1, Ordering::Relaxed);
-            let r = match Request::from_json(id, &body) {
+            let mut r = match Request::from_json(id, &body) {
                 Ok(r) => r,
                 Err(e) => return HttpResponse::status(400, &format!("{e}")),
             };
             if r.method == Method::Medusa && r.temperature > 0.0 {
                 return HttpResponse::status(400, "medusa is greedy-only");
             }
+            // resolve the draft source at admission: the scheduler's
+            // compat classes and the quarantine fingerprint both key on
+            // it, so it must be pinned before the request is queued
+            let choice = match r.draft {
+                DraftChoice::Default => ctx.default_draft,
+                c => c,
+            };
+            r.source = match choice {
+                DraftChoice::Auto => {
+                    let before = ctx.selector.switches();
+                    let kind = ctx.selector.pick(r.temperature);
+                    if ctx.selector.switches() > before {
+                        metrics.on_policy_switch();
+                    }
+                    kind
+                }
+                DraftChoice::Fixed(k) => k,
+                DraftChoice::Default => SourceKind::Eagle,
+            };
+            // a pinned greedy-only source (the serving facades for
+            // ngram/medusa run T=0 only; auto never picks one at T>0)
+            if r.temperature > 0.0
+                && matches!(r.source, SourceKind::Ngram | SourceKind::Medusa)
+            {
+                return HttpResponse::status(400, "draft source is greedy-only");
+            }
             let dl = r.deadline(default_deadline_ms);
             // overload shedding, before the request takes a slot: if the
             // estimated queue wait already exceeds the deadline budget,
             // a 429 now beats a guaranteed 504 later. Cold start (no
             // service history yet — fresh boot or post-drain restart):
-            // seed the estimate from the live cost model's prediction so
-            // an instant burst still sheds.
+            // prefer the committed per-request capacity from a prior
+            // loadgen `p99_search` (the budget the operator actually
+            // signed off on), falling back to the live cost model's
+            // prediction. A warm EWMA always wins over both.
             let mut est = metrics.est_service_secs();
             if est == 0.0 {
-                est = ctx.live.predicted_service_secs(r.max_tokens);
+                est = ctx
+                    .committed_service
+                    .unwrap_or_else(|| ctx.live.predicted_service_secs(r.max_tokens));
             }
             if let Some(est_wait) = should_shed(queue.len(), est, dl.budget_secs()) {
                 metrics.on_shed();
@@ -2363,6 +2514,22 @@ mod tests {
         assert_eq!(should_shed(10, est, None), None);
     }
 
+    #[test]
+    fn fingerprint_distinguishes_draft_sources() {
+        // satellite of the DraftSource refactor: a poison request that
+        // panics under one source must not quarantine the same prompt
+        // running under another — the content fingerprint keys on the
+        // resolved source
+        let a = Request::synthetic(1);
+        let mut b = Request::synthetic(1);
+        b.source = SourceKind::Ngram;
+        let mut c = Request::synthetic(1);
+        c.source = SourceKind::Medusa;
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+        assert_ne!(fingerprint(&b), fingerprint(&c));
+        assert_eq!(fingerprint(&a), fingerprint(&Request::synthetic(2)), "id-independent");
+    }
+
     fn synth_req(id: u64, prompt: &str, max_tokens: usize) -> Request {
         let mut r = Request::synthetic(id);
         r.prompt = prompt.into();
@@ -2393,6 +2560,7 @@ mod tests {
             live: None,
             queue: None,
             preempt: None,
+            selector: None,
             agg: Aggregate::new(),
         };
         w.run(AdmittedGroup { verify_cap: Some(32), requests });
@@ -2432,6 +2600,7 @@ mod tests {
             live: Some(&live),
             queue: None,
             preempt: None,
+            selector: None,
             agg: Aggregate::new(),
         };
         w.run(AdmittedGroup { verify_cap: Some(32), requests: vec![r] });
@@ -2505,6 +2674,7 @@ mod tests {
             live: None,
             queue: Some(&queue),
             preempt: Some(&ctl),
+            selector: None,
             agg: Aggregate::new(),
         };
         ctl.begin_group(None, 24);

@@ -36,5 +36,5 @@ pub use planner::{
     expand_candidates, expand_candidates_into, rerank, rerank_into, select_frontier,
     select_frontier_into, DynTreeParams, RerankScratch,
 };
-pub use policy::{DynTreeConfig, TreePolicy};
+pub use policy::{DynTreeConfig, SourceSelector, TreePolicy};
 pub use widths::{plan_round_width, width_hint, WidthFamily, WidthSelect};

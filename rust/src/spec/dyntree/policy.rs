@@ -1,9 +1,14 @@
 //! Tree-policy configuration: the switch between the paper's static
 //! draft tree and the dynamic planner, threaded through the engines, the
-//! server/CLI config, and the eval harness.
+//! server/CLI config, and the eval harness. Since PR 10 this module also
+//! hosts [`SourceSelector`], the online per-request draft-source policy
+//! behind `--draft auto`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::controller::ControllerConfig;
 use super::planner::DynTreeParams;
+use crate::spec::source::SourceKind;
 use crate::spec::tree::TreeSpec;
 
 /// User-facing dynamic-tree configuration. Executable-shape limits
@@ -112,6 +117,136 @@ impl TreePolicy {
     }
 }
 
+// ---------------------------------------------------------------------------
+// SourceSelector — the `--draft auto` online policy
+
+/// EWMA smoothing for per-source accepted-tokens-per-round observations
+/// (same idiom as the cost model's online re-fit).
+const SEL_ALPHA: f64 = 0.2;
+/// Observations before a source's EWMA is trusted; until every valid
+/// source has this many, `pick` probes them round-robin (deterministic).
+const SEL_MIN_OBS: u64 = 4;
+
+#[inline]
+fn load_f64(a: &AtomicU64) -> f64 {
+    f64::from_bits(a.load(Ordering::Relaxed))
+}
+
+#[inline]
+fn store_f64(a: &AtomicU64, v: f64) {
+    a.store(v.to_bits(), Ordering::Relaxed);
+}
+
+/// Online per-source acceptance tracker driving `--draft auto`: one EWMA
+/// of accepted tokens per round per [`SourceKind`], scored against the
+/// source's relative drafting cost ([`SourceKind::cost_hint`]). Shared
+/// across the server (an `Arc` threaded from the route to the workers);
+/// all state is relaxed atomics — observations are advisory, a torn
+/// ordering only delays convergence by a round.
+#[derive(Debug, Default)]
+pub struct SourceSelector {
+    ewma: [AtomicU64; 4],
+    obs: [AtomicU64; 4],
+    picks: [AtomicU64; 4],
+    switches: AtomicU64,
+    /// last picked kind + 1 (0 = never picked)
+    last: AtomicU64,
+}
+
+impl SourceSelector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Sources `--draft auto` may pick at this temperature: the n-gram
+    /// and Medusa serving paths are greedy-only facades, so sampled
+    /// requests are restricted to eagle / chain (both exact at T>0).
+    pub fn valid(kind: SourceKind, temperature: f32) -> bool {
+        temperature <= 0.0 || matches!(kind, SourceKind::Eagle | SourceKind::Chain)
+    }
+
+    /// Fold one finished request's mean accepted tokens per round into
+    /// the source's EWMA.
+    pub fn observe(&self, kind: SourceKind, accepted_per_round: f64) {
+        if !accepted_per_round.is_finite() {
+            return;
+        }
+        let i = kind.idx();
+        let n = self.obs[i].fetch_add(1, Ordering::Relaxed);
+        let prev = load_f64(&self.ewma[i]);
+        let next = if n == 0 {
+            accepted_per_round
+        } else {
+            SEL_ALPHA * accepted_per_round + (1.0 - SEL_ALPHA) * prev
+        };
+        store_f64(&self.ewma[i], next);
+    }
+
+    /// Cost-normalized policy score for a source (0 until observed).
+    pub fn score(&self, kind: SourceKind) -> f64 {
+        load_f64(&self.ewma[kind.idx()]) / kind.cost_hint()
+    }
+
+    pub fn observations(&self, kind: SourceKind) -> u64 {
+        self.obs[kind.idx()].load(Ordering::Relaxed)
+    }
+
+    pub fn picks(&self, kind: SourceKind) -> u64 {
+        self.picks[kind.idx()].load(Ordering::Relaxed)
+    }
+
+    pub fn switches(&self) -> u64 {
+        self.switches.load(Ordering::Relaxed)
+    }
+
+    /// The current best source without recording a pick (used by the
+    /// `draftsrc` eval to read the converged winner).
+    pub fn best(&self, temperature: f32) -> SourceKind {
+        let mut best = SourceKind::Eagle;
+        let mut best_score = f64::NEG_INFINITY;
+        for k in SourceKind::ALL {
+            if !Self::valid(k, temperature) {
+                continue;
+            }
+            let s = self.score(k);
+            // cost-ascending tiebreak: ALL is not cost-ordered, so compare
+            if s > best_score || (s == best_score && k.cost_hint() < best.cost_hint()) {
+                best = k;
+                best_score = s;
+            }
+        }
+        best
+    }
+
+    /// Pick the source for a new request: deterministic round-robin
+    /// probing until every valid source has [`SEL_MIN_OBS`]
+    /// observations, then the best cost-normalized EWMA. Records the
+    /// pick and counts a policy switch when it differs from the
+    /// previous one.
+    pub fn pick(&self, temperature: f32) -> SourceKind {
+        let under = SourceKind::ALL
+            .into_iter()
+            .filter(|&k| Self::valid(k, temperature))
+            .find(|&k| self.observations(k) < SEL_MIN_OBS);
+        let kind = under.unwrap_or_else(|| self.best(temperature));
+        self.picks[kind.idx()].fetch_add(1, Ordering::Relaxed);
+        let tag = kind.idx() as u64 + 1;
+        let prev = self.last.swap(tag, Ordering::Relaxed);
+        if prev != 0 && prev != tag {
+            self.switches.fetch_add(1, Ordering::Relaxed);
+        }
+        kind
+    }
+
+    /// Speculation-depth hint for the picked source: roughly one past
+    /// the tokens a round is expected to accept, clamped to sane draft
+    /// lengths.
+    pub fn depth_hint(&self, kind: SourceKind) -> usize {
+        let e = load_f64(&self.ewma[kind.idx()]);
+        ((e.ceil() as usize) + 1).clamp(2, 8)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,5 +283,61 @@ mod tests {
         assert_eq!(TreePolicy::dynamic_default().name(), "dynamic");
         assert!(TreePolicy::dynamic_default().is_dynamic());
         assert!(!TreePolicy::chain(5).is_dynamic());
+    }
+
+    #[test]
+    fn selector_probes_then_converges() {
+        use crate::spec::source::sim_accepted_per_round;
+        let sel = SourceSelector::new();
+        // repetitive workload: after the probe phase the policy must
+        // settle on the n-gram source
+        for _ in 0..64 {
+            let k = sel.pick(0.0);
+            sel.observe(k, sim_accepted_per_round(k, 0.9));
+        }
+        assert_eq!(sel.best(0.0), SourceKind::Ngram);
+        assert!(sel.picks(SourceKind::Ngram) > sel.picks(SourceKind::Eagle));
+        // every source got its probe observations
+        for k in SourceKind::ALL {
+            assert!(sel.observations(k) >= 4, "{k:?} never probed");
+        }
+        assert!(sel.switches() > 0);
+    }
+
+    #[test]
+    fn selector_converges_to_eagle_on_chat() {
+        use crate::spec::source::sim_accepted_per_round;
+        let sel = SourceSelector::new();
+        for _ in 0..64 {
+            let k = sel.pick(0.0);
+            sel.observe(k, sim_accepted_per_round(k, 0.15));
+        }
+        assert_eq!(sel.best(0.0), SourceKind::Eagle);
+    }
+
+    #[test]
+    fn selector_sampled_requests_avoid_greedy_only_sources() {
+        let sel = SourceSelector::new();
+        for _ in 0..32 {
+            let k = sel.pick(0.8);
+            assert!(matches!(k, SourceKind::Eagle | SourceKind::Chain), "picked {k:?} at T>0");
+            sel.observe(k, 5.0);
+        }
+        assert!(SourceSelector::valid(SourceKind::Ngram, 0.0));
+        assert!(!SourceSelector::valid(SourceKind::Ngram, 0.5));
+    }
+
+    #[test]
+    fn selector_depth_hint_tracks_acceptance() {
+        let sel = SourceSelector::new();
+        assert_eq!(sel.depth_hint(SourceKind::Eagle), 2); // cold: minimum
+        for _ in 0..16 {
+            sel.observe(SourceKind::Eagle, 4.0);
+        }
+        assert_eq!(sel.depth_hint(SourceKind::Eagle), 5);
+        for _ in 0..64 {
+            sel.observe(SourceKind::Ngram, 40.0);
+        }
+        assert_eq!(sel.depth_hint(SourceKind::Ngram), 8); // clamped
     }
 }

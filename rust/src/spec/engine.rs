@@ -199,8 +199,9 @@ impl<'a> EagleEngine<'a> {
     /// The largest draft tree any round of this engine can grow (the
     /// scratch reservation ceiling): the static tree's node total, or
     /// the dynamic planner's growth ceiling including the controller's
-    /// adaptation bounds.
-    fn max_tree_nodes(&self) -> usize {
+    /// adaptation bounds. `pub(crate)` so [`crate::spec::source::EagleSource`]
+    /// can declare the same ceiling through the `DraftSource` trait.
+    pub(crate) fn max_tree_nodes(&self) -> usize {
         match &self.policy {
             TreePolicy::Static(spec) => spec.total_nodes(),
             TreePolicy::Dynamic(dc) => {
@@ -709,9 +710,11 @@ impl<'a> EagleEngine<'a> {
     /// Expand the draft tree level by level with STATIC per-level widths.
     /// The root's extend outputs (f̂ at the root position, dist of
     /// t_{m+1}) are pre-seeded as node 0 of the scratch arena/slab by
-    /// [`RoundScratch::begin_round`].
+    /// [`RoundScratch::begin_round`]. `pub(crate)`: the trait-dispatch
+    /// eagle source (`spec::source::EagleSource`) delegates its growth
+    /// here, so the fused and generic paths can never drift.
     #[allow(clippy::too_many_arguments)]
-    fn grow_tree(
+    pub(crate) fn grow_tree(
         &self,
         tree: &mut DraftTree,
         spec: &TreeSpec,
@@ -858,8 +861,9 @@ impl<'a> EagleEngine<'a> {
     /// `frontier_k` of the new candidates are draft-stepped (those may
     /// expand further). The caller reranks the finished candidate tree
     /// down to the verify budget; drafted-token accounting happens there.
+    /// `pub(crate)` for the same reason as [`EagleEngine::grow_tree`].
     #[allow(clippy::too_many_arguments)]
-    fn grow_tree_dynamic(
+    pub(crate) fn grow_tree_dynamic(
         &self,
         tree: &mut DraftTree,
         params: &DynTreeParams,

@@ -6,4 +6,5 @@ pub mod dyntree;
 pub mod engine;
 pub mod sampling;
 pub mod scratch;
+pub mod source;
 pub mod tree;

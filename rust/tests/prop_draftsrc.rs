@@ -1,0 +1,297 @@
+//! Property tests for the PR-10 draft-source layer: every
+//! [`DraftSource`] proposal shape must be lossless under the shared
+//! acceptance walks — at T=0 the greedy walk commits exactly the
+//! target's argmax chain, and at T>0 the SpecInfer recursive-rejection
+//! walk preserves the target distribution whether the q rows are
+//! sampled (eagle trees, chain-LM chains) or one-hot (the deterministic
+//! n-gram / Medusa proposals) — and the `--draft auto` policy must
+//! converge to the score-argmax source. The `count-alloc` module
+//! re-asserts the warm-round zero-allocation guarantee through
+//! `&mut dyn DraftSource` trait dispatch.
+
+use eagle_serve::eval::bench::sim_sampled_grow;
+use eagle_serve::spec::dyntree::SourceSelector;
+use eagle_serve::spec::engine::sampled_accept_walk;
+use eagle_serve::spec::sampling::argmax;
+use eagle_serve::spec::scratch::RoundScratch;
+use eagle_serve::spec::source::{
+    greedy_accept_walk, push_one_hot_q, sim_accepted_per_round, SourceKind,
+};
+use eagle_serve::spec::tree::DraftTree;
+use eagle_serve::util::prop::{check, random_dist};
+use eagle_serve::util::rng::Rng;
+
+/// Logits whose softmax (t=1) reproduces `p` up to float slop.
+fn logits_of(p: &[f32]) -> Vec<f32> {
+    p.iter().map(|&x| x.max(1e-20).ln()).collect()
+}
+
+/// First token a round commits: the first accepted child, or the bonus.
+fn first_token(tree: &DraftTree, path: &[usize], bonus: u32) -> usize {
+    if path.len() > 1 {
+        tree.nodes[path[1]].token as usize
+    } else {
+        bonus as usize
+    }
+}
+
+/// Empirical first-committed-token distribution over `trials` rounds,
+/// each produced by `build` writing a fresh proposal into the reused
+/// tree + scratch (the walk consumes q rows from the scratch slab).
+fn first_token_dist(
+    n: usize,
+    trials: usize,
+    tlogits: &[f32],
+    rng: &mut Rng,
+    mut build: impl FnMut(&mut DraftTree, &mut RoundScratch, &mut Rng),
+) -> Vec<f32> {
+    let mut s = RoundScratch::new(1, n);
+    s.reserve(1, n, 64, 32, 32, 8);
+    s.reserve_q(n, 32);
+    let mut tree = DraftTree::default();
+    let mut counts = vec![0usize; n];
+    let mut alpha = [(0u64, 0u64); 5];
+    for _ in 0..trials {
+        tree.reset(0);
+        s.qs.clear(n);
+        build(&mut tree, &mut s, rng);
+        let bonus = sampled_accept_walk(&tree, |_| tlogits, 1.0, rng, &mut alpha, &mut s);
+        counts[first_token(&tree, &s.path, bonus)] += 1;
+    }
+    counts.iter().map(|&c| c as f32 / trials as f32).collect()
+}
+
+fn assert_close(emp: &[f32], p: &[f32], tol: f32, what: &str) {
+    for (i, (&e, &t)) in emp.iter().zip(p).enumerate() {
+        assert!((e - t).abs() < tol, "{what}: token {i} emp {e} vs p {t}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// T>0 losslessness per proposal shape
+
+#[test]
+fn prop_one_hot_q_chain_preserves_target_distribution() {
+    // the n-gram / Medusa shape: a deterministic token chain whose
+    // nodes carry one-hot q rows. SpecInfer with a one-hot q degenerates
+    // to "accept w.p. p(token), else resample from the residual", so the
+    // first committed token must be distributed exactly as the target p
+    // NO MATTER which tokens the chain proposes.
+    check("one-hot q chain is lossless", 3, |rng, case| {
+        let n = 3 + rng.below(3);
+        let p = random_dist(rng, n);
+        let tlogits = logits_of(&p);
+        let gamma = 1 + rng.below(4);
+        // fixed adversarial chain for the whole case (e.g. a stale
+        // n-gram continuation the target disagrees with)
+        let chain: Vec<u32> = (0..gamma).map(|_| rng.below(n) as u32).collect();
+        let trials = 30_000;
+        let emp = first_token_dist(n, trials, &tlogits, rng, |tree, s, _| {
+            let mut parent = 0usize;
+            for &tok in &chain {
+                let qid = push_one_hot_q(s, n, tok);
+                parent = tree.add(parent, tok, 0.0, Some(qid));
+            }
+        });
+        assert_close(&emp, &p, 0.025, &format!("case {case} (one-hot chain)"));
+    });
+}
+
+#[test]
+fn prop_sampled_q_chain_preserves_target_distribution() {
+    // the chain-LM shape: each node sampled from the draft distribution
+    // q, with q kept for the walk — classic speculative sampling's
+    // guarantee, through the same code path ChainLmSource uses.
+    check("sampled q chain is lossless", 3, |rng, case| {
+        let n = 3 + rng.below(3);
+        let p = random_dist(rng, n);
+        let q = random_dist(rng, n);
+        let tlogits = logits_of(&p);
+        let gamma = 1 + rng.below(4);
+        let trials = 30_000;
+        let emp = first_token_dist(n, trials, &tlogits, rng, |tree, s, rng| {
+            let mut parent = 0usize;
+            for _ in 0..gamma {
+                let qid = s.qs.push(&q) as u32;
+                let tok = {
+                    // inverse-CDF sample from q on the walk's RNG stream
+                    let u = rng.f32();
+                    let mut acc = 0.0f32;
+                    let mut t = n - 1;
+                    for (i, &qi) in q.iter().enumerate() {
+                        acc += qi;
+                        if u < acc {
+                            t = i;
+                            break;
+                        }
+                    }
+                    t as u32
+                };
+                parent = tree.add(parent, tok, 0.0, Some(qid));
+            }
+        });
+        assert_close(&emp, &p, 0.025, &format!("case {case} (sampled chain)"));
+    });
+}
+
+#[test]
+fn prop_eagle_shape_tree_preserves_target_distribution() {
+    // the eagle shape: multi-level sampled trees grown by the shared
+    // growth sim (per-level i.i.d. draws from q, siblings sharing q
+    // rows) — the tree-structured SpecInfer guarantee.
+    check("eagle-shape sampled tree is lossless", 2, |rng, case| {
+        let n = 3 + rng.below(3);
+        let p = random_dist(rng, n);
+        let q = random_dist(rng, n);
+        let tlogits = logits_of(&p);
+        let dlogits = logits_of(&q);
+        let levels: Vec<usize> = (0..1 + rng.below(2)).map(|_| 1 + rng.below(3)).collect();
+        let trials = 30_000;
+        let emp = first_token_dist(n, trials, &tlogits, rng, |tree, s, rng| {
+            sim_sampled_grow(tree, s, &dlogits, 1.0, &levels, rng);
+        });
+        assert_close(&emp, &p, 0.025, &format!("case {case} (eagle tree)"));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// T=0: the greedy walk commits exactly the target's argmax chain
+
+#[test]
+fn prop_greedy_walk_commits_exactly_the_argmax_chain() {
+    // For ANY proposed tree: every accepted edge's token is the argmax
+    // of its parent's verified row, the bonus is the argmax of the
+    // deepest accepted node's row, and the walk is maximal (it never
+    // stops while an argmax child exists). Together these make greedy
+    // speculative decoding bit-identical to vanilla argmax decoding for
+    // every source, which is why `--draft` can never change T=0 output.
+    check("greedy walk == argmax chain", 40, |rng, case| {
+        let n = 4 + rng.below(5);
+        let nodes = 2 + rng.below(10);
+        let mut tree = DraftTree::with_root(rng.below(n) as u32);
+        for _ in 0..nodes {
+            let parent = rng.below(tree.len());
+            tree.add(parent, rng.below(n) as u32, 0.0, None);
+        }
+        let rows: Vec<Vec<f32>> = (0..tree.len())
+            .map(|_| (0..n).map(|_| rng.f32() * 6.0 - 3.0).collect())
+            .collect();
+        let mut s = RoundScratch::new(1, n);
+        s.reserve(1, n, 64, 32, 32, 8);
+        let mut alpha = [(0u64, 0u64); 5];
+        let bonus = greedy_accept_walk(&tree, |i| rows[i].as_slice(), &mut alpha, &mut s);
+        assert_eq!(s.path[0], 0, "case {case}: walk must start at the root");
+        for w in s.path.windows(2) {
+            let (parent, child) = (w[0], w[1]);
+            assert_eq!(tree.nodes[child].parent, Some(parent), "case {case}: path not a chain");
+            assert_eq!(
+                tree.nodes[child].token as usize,
+                argmax(&rows[parent]),
+                "case {case}: accepted a non-argmax token"
+            );
+        }
+        let last = *s.path.last().unwrap();
+        let want = argmax(&rows[last]);
+        assert_eq!(bonus as usize, want, "case {case}: bonus must be the last argmax");
+        let stopped_early = tree
+            .children(last)
+            .iter()
+            .any(|&c| tree.nodes[c].token as usize == want);
+        assert!(!stopped_early, "case {case}: walk stopped despite an argmax child");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// policy: auto converges to the score-argmax source
+
+#[test]
+fn prop_selector_converges_to_score_argmax() {
+    // constant observations make the EWMA exact, so after the probe
+    // phase the selector's winner must equal the argmax of
+    // sim_accepted_per_round / cost_hint at every repetitiveness
+    check("selector winner == score argmax", 25, |rng, case| {
+        let r = rng.f32() as f64;
+        let sel = SourceSelector::new();
+        for _ in 0..100 {
+            let k = sel.pick(0.0);
+            sel.observe(k, sim_accepted_per_round(k, r));
+        }
+        let expect = SourceKind::ALL
+            .into_iter()
+            .max_by(|a, b| {
+                let sa = sim_accepted_per_round(*a, r) / a.cost_hint();
+                let sb = sim_accepted_per_round(*b, r) / b.cost_hint();
+                sa.partial_cmp(&sb).unwrap()
+            })
+            .unwrap();
+        assert_eq!(sel.best(0.0), expect, "case {case}: r={r}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// count-alloc: trait dispatch adds zero warm-round bytes
+
+#[cfg(feature = "count-alloc")]
+mod alloc_props {
+    use eagle_serve::metrics::GenRecord;
+    use eagle_serve::spec::engine::GenConfig;
+    use eagle_serve::spec::scratch::RoundScratch;
+    use eagle_serve::spec::source::{AdvanceCtx, DraftSource, NgramSource};
+    use eagle_serve::spec::tree::DraftTree;
+    use eagle_serve::util::count_alloc::thread_allocated_bytes;
+    use eagle_serve::util::rng::Rng;
+
+    /// A warm propose/advance round through `&mut dyn DraftSource` must
+    /// not touch the allocator: the vtable indirection, the one-hot q
+    /// pushes (T>0), and the n-gram re-indexing all run on reserved
+    /// buffers — the trait layer inherits the S22 zero-alloc guarantee.
+    #[test]
+    fn count_alloc_trait_dispatch_round_allocates_nothing_when_warm() {
+        let vocab = 64usize;
+        let gamma = 5usize;
+        let mut ngram = NgramSource::new(gamma, 8, vocab);
+        let src: &mut dyn DraftSource = &mut ngram;
+        let cfg = GenConfig { max_new: 64, temperature: 1.0, seed: 9, eos: None };
+        let mut rec = GenRecord::new(4);
+        // repetitive stream: every round retrieves a full gamma chain
+        let mut committed: Vec<u32> = Vec::with_capacity(256);
+        for i in 0..32u32 {
+            committed.push(i % 3 + 1);
+        }
+        src.begin(&[], 0, 0, &committed, &cfg, &mut rec).unwrap();
+        let mut s = RoundScratch::new(1, vocab);
+        s.reserve(1, vocab, 64, src.max_nodes(), src.verify_t(), src.max_step_w().max(1));
+        s.reserve_q(vocab, src.max_nodes());
+        let mut tree = DraftTree::default();
+        tree.nodes.reserve(src.max_nodes());
+        let mut rng = Rng::new(7);
+        let path = [0usize];
+        let mut a0 = 0;
+        for round in 0..17 {
+            if round == 1 {
+                a0 = thread_allocated_bytes(); // round 0 was the warm-up
+            }
+            let m = committed.len() - 1;
+            tree.reset(committed[m]);
+            src.begin_round(&mut s, vocab);
+            src.propose(&mut tree, &mut s, &committed, m, &cfg, &mut rng, &mut rec).unwrap();
+            assert_eq!(tree.len(), gamma + 1, "round {round}: retrieval must fill the chain");
+            committed.push(committed.len() as u32 % 3 + 1); // the round's commit
+            let ctx = AdvanceCtx {
+                committed: &committed,
+                m_old: m,
+                m_new: m + 1,
+                path: &path,
+                tree: &tree,
+                verify_feats: &[],
+                verify_t: 8,
+            };
+            src.advance(&ctx, &mut s, &mut rec).unwrap();
+        }
+        assert_eq!(
+            thread_allocated_bytes() - a0,
+            0,
+            "warm trait-dispatch rounds touched the allocator"
+        );
+    }
+}
